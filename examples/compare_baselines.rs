@@ -1,0 +1,100 @@
+//! Baseline shoot-out on one workload: dense flow, VSCNN, the two ideal
+//! machines, and the SCNN-like fine-grained comparator — the §IV
+//! comparison as one table, plus area-normalized efficiency.
+//!
+//! ```bash
+//! cargo run --release --example compare_baselines
+//! ```
+
+use vscnn::baselines::scnn_like::{vscnn_speedup_per_area, ScnnModel};
+use vscnn::coordinator::RunOptions;
+use vscnn::experiments::{workload, ExpContext};
+use vscnn::sim::config::SimConfig;
+
+fn main() -> anyhow::Result<()> {
+    let res: usize = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(64);
+    let ctx = ExpContext {
+        res,
+        ..Default::default()
+    };
+    let (coord, images, _) = workload::prepare(&ctx);
+
+    println!("VGG-16 @ {res} | vector-pruned 23.5% | one synthetic image\n");
+    println!(
+        "{:<26} | {:>9} | {:>12} | {:>14}",
+        "design", "speedup", "vs ideal", "speedup/area"
+    );
+    println!("{}", "-".repeat(72));
+
+    for sim in [SimConfig::paper_4_14_3(), SimConfig::paper_8_7_3()] {
+        let report = coord.run(&images[0], &RunOptions::new(sim))?;
+        let series = report.overall_series();
+
+        if sim.pe.arrays == 4 {
+            println!("{:<26} | {:>8.3}x | {:>12} | {:>14}", "dense (same array)", 1.0, "-", "1.000x");
+        }
+        println!(
+            "{:<26} | {:>8.3}x | {:>11.1}% | {:>13.3}x",
+            format!("VSCNN {}", sim.pe.label()),
+            series.ours,
+            100.0 * series.vector_skip_efficiency(),
+            vscnn_speedup_per_area(series.ours),
+        );
+        if sim.pe.arrays == 8 {
+            // Ideal machines and SCNN on the same aggregate work profile.
+            let mut macs_t = 0u64;
+            let mut macs_nz = 0u64;
+            let mut pairs_t = 0u64;
+            let mut pairs_nz = 0u64;
+            for l in &report.layers {
+                macs_t += l.density.macs_total;
+                macs_nz += l.density.macs_nonzero;
+                pairs_t += l.density.pairs_total;
+                pairs_nz += l.density.pairs_nonzero;
+            }
+            let agg = vscnn::sparse::encode::DensityReport {
+                input_elem: 0.0,
+                weight_elem: 0.0,
+                work_elem: macs_nz as f64 / macs_t as f64,
+                input_vec: 0.0,
+                weight_vec: 0.0,
+                work_vec: pairs_nz as f64 / pairs_t as f64,
+                macs_total: macs_t,
+                macs_nonzero: macs_nz,
+                pairs_total: pairs_t,
+                pairs_nonzero: pairs_nz,
+            };
+            let scnn = ScnnModel::default();
+            println!(
+                "{:<26} | {:>8.3}x | {:>11.1}% | {:>13.3}x",
+                "SCNN-like [16] (66% eff)",
+                scnn.speedup(&agg),
+                100.0 * scnn.skip_efficiency,
+                scnn.speedup_per_area(&agg),
+            );
+            println!(
+                "{:<26} | {:>8.3}x | {:>12} | {:>14}",
+                "ideal vector-sparse",
+                pairs_t as f64 / pairs_nz.max(1) as f64,
+                "100.0%",
+                "-"
+            );
+            println!(
+                "{:<26} | {:>8.3}x | {:>12} | {:>14}",
+                "ideal fine-grained",
+                macs_t as f64 / macs_nz.max(1) as f64,
+                "100.0%",
+                "-"
+            );
+        }
+    }
+    println!(
+        "\npaper §IV: VSCNN 1.93x with ~5% index-area overhead vs SCNN ~3x with\n\
+         ~30% index/crossbar overhead — \"more hardware efficient than the\n\
+         previous design\" on speedup-per-area."
+    );
+    Ok(())
+}

@@ -1,0 +1,111 @@
+//! End-to-end driver (EXPERIMENTS.md §E2E): the full three-layer stack on
+//! the paper's workload.
+//!
+//! Runs vector-pruned, activation-calibrated VGG-16 inference over a batch
+//! of synthetic images through BOTH paper PE configurations, with the
+//! functional forward executed by the **PJRT runtime** (JAX/Pallas-lowered
+//! HLO artifacts — L2/L1) when artifacts matching the resolution exist,
+//! falling back to the rust conv otherwise; the cycle-level model (L3)
+//! produces every per-layer figure series plus the headline speedups, and
+//! cross-checks PJRT numerics against the rust golden conv on layer 1.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example vgg16_e2e -- [res] [images]
+//! # res must be a multiple of 32; artifacts ship ref buckets for 64 & 224
+//! ```
+
+use std::sync::Arc;
+use vscnn::coordinator::{FunctionalBackend, RunOptions};
+use vscnn::experiments::{workload, ExpContext};
+use vscnn::runtime::Runtime;
+use vscnn::sim::config::SimConfig;
+use vscnn::util::stats::mean;
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().collect();
+    let res: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(64);
+    let images: usize = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(2);
+    let ctx = ExpContext {
+        res,
+        images,
+        ..Default::default()
+    };
+
+    println!("== VSCNN end-to-end: VGG-16 @ {res}x{res}, {images} image(s) ==");
+    let t_setup = std::time::Instant::now();
+    let (coord, batch, weight_density) = workload::prepare(&ctx);
+    println!(
+        "workload: 13 conv layers, {:.1} GMAC dense, weight density {:.3} (paper 0.235), setup {:?}",
+        coord.net.total_conv_macs() as f64 / 1e9,
+        weight_density,
+        t_setup.elapsed()
+    );
+
+    // Prefer the PJRT/HLO functional path (the real three-layer stack).
+    let pjrt = match Runtime::new("artifacts") {
+        Ok(rt) if rt.manifest().find("ref", 3, 64, res, res).is_some() => {
+            println!("functional path: PJRT ({} artifacts, platform {})",
+                rt.manifest().artifacts.len(), rt.platform());
+            Some(Arc::new(rt))
+        }
+        Ok(_) => {
+            println!("functional path: rust im2col (no ref buckets at res {res}; re-run `make artifacts`)");
+            None
+        }
+        Err(e) => {
+            println!("functional path: rust im2col (PJRT unavailable: {e})");
+            None
+        }
+    };
+
+    for sim in [SimConfig::paper_4_14_3(), SimConfig::paper_8_7_3()] {
+        let mut opts = RunOptions::new(sim);
+        if let Some(rt) = &pjrt {
+            opts.backend = FunctionalBackend::Pjrt(rt.clone(), "ref".to_string());
+        }
+        let t0 = std::time::Instant::now();
+        let reports = coord.run_batch(&batch, &opts)?;
+        let wall = t0.elapsed();
+
+        let speedups: Vec<f64> = reports.iter().map(|r| r.overall_speedup()).collect();
+        let series = reports[0].overall_series();
+        println!("\n-- config {} --", sim.pe.label());
+        println!("per-layer (image 0):");
+        println!(
+            "{}",
+            vscnn::coordinator::report::ascii_table(
+                &reports[0]
+                    .layers
+                    .iter()
+                    .map(|l| (
+                        l.name.clone(),
+                        vec![
+                            ("speedup".to_string(), l.speedups.ours),
+                            ("ideal_vec".to_string(), l.speedups.ideal_vector),
+                            ("ideal_fine".to_string(), l.speedups.ideal_fine),
+                            ("util".to_string(), l.sparse.utilization()),
+                        ],
+                    ))
+                    .collect::<Vec<_>>()
+            )
+        );
+        println!(
+            "overall speedup {:.3}x (batch mean {:.3}x) | ideal vec {:.3}x | vector-skip eff {:.1}% | dram {:.1} MB | wall {:?}",
+            series.ours,
+            mean(&speedups),
+            series.ideal_vector,
+            100.0 * series.vector_skip_efficiency(),
+            reports[0].totals.dram.total() as f64 / 1e6,
+            wall,
+        );
+
+        // Persist the e2e record.
+        std::fs::create_dir_all("reports")?;
+        let path = format!("reports/e2e_{}_res{res}.json", sim.pe.label().replace(['[', ']', ','], "_"));
+        std::fs::write(&path, reports[0].to_json().pretty())?;
+        println!("wrote {path}");
+    }
+
+    println!("\npaper reference: 1.871x [4,14,3], 1.93x [8,7,3] on ImageNet-trained VGG-16");
+    Ok(())
+}

@@ -1,0 +1,140 @@
+"""AOT bridge: lower the L2/L1 functions to HLO *text* artifacts.
+
+Run once at build time (`make artifacts`); rust loads the text via
+`HloModuleProto::from_text_file` and executes on the PJRT CPU client.
+
+HLO text — NOT `lowered.compiler_ir("hlo").as_serialized_hlo_module_proto()`
+— is the interchange format: jax >= 0.5 emits protos with 64-bit instruction
+ids which xla_extension 0.5.1 (the version the published `xla` crate binds)
+rejects; the text parser reassigns ids and round-trips cleanly. See
+/opt/xla-example/README.md.
+
+Artifacts (per conv shape bucket of the requested network/resolution):
+  vscnn_cC_hH_wW_kK.hlo.txt  — the Pallas column-dataflow kernel + bias
+  ref_cC_hH_wW_kK.hlo.txt    — the lax.conv reference (fast functional path)
+plus manifest.json describing every artifact's shapes for the rust loader.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .model import conv_layer, conv_layer_ref, layer_shapes
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_conv(fn, c_in, c_out, h, w):
+    """Lower a conv-layer function for one shape bucket."""
+    x = jax.ShapeDtypeStruct((c_in, h, w), jnp.float32)
+    wt = jax.ShapeDtypeStruct((c_out, c_in, 3, 3), jnp.float32)
+    b = jax.ShapeDtypeStruct((c_out,), jnp.float32)
+    return jax.jit(lambda x, wt, b: (fn(x, wt, b),)).lower(x, wt, b)
+
+
+def bucket_name(kind, c_in, c_out, h, w):
+    return f"{kind}_c{c_in}_h{h}_w{w}_k{c_out}"
+
+
+def build(outdir, specs, quiet=False):
+    """Emit artifacts for every distinct conv bucket of VGG-16.
+
+    `specs` is a list of `(res, kinds, max_pallas_hw)` tuples; buckets are
+    deduplicated across resolutions (the same `[C,H,W,K]` bucket serves any
+    layer with that geometry).
+    """
+    os.makedirs(outdir, exist_ok=True)
+    manifest = {"network": "vgg16", "artifacts": []}
+    emitted = set()
+    for res, kinds, max_hw in specs:
+        buckets = []
+        seen = set()
+        for _name, c_in, c_out, h, w in layer_shapes(res):
+            key = (c_in, c_out, h, w)
+            if key not in seen:
+                seen.add(key)
+                buckets.append(key)
+
+        for c_in, c_out, h, w in buckets:
+            for kind in kinds:
+                if max_hw is not None and kind == "vscnn" and h > max_hw:
+                    # Pallas-interpret HLO for very large planes is slow to
+                    # run; the functional path uses `ref` there. The kernel
+                    # itself is still validated at these shapes by pytest
+                    # (in-process, no HLO detour).
+                    continue
+                name = bucket_name(kind, c_in, c_out, h, w)
+                if name in emitted:
+                    continue
+                emitted.add(name)
+                fn = conv_layer_ref if kind == "ref" else conv_layer
+                path = os.path.join(outdir, f"{name}.hlo.txt")
+                lowered = lower_conv(fn, c_in, c_out, h, w)
+                text = to_hlo_text(lowered)
+                with open(path, "w") as f:
+                    f.write(text)
+                manifest["artifacts"].append(
+                    {
+                        "name": name,
+                        "kind": kind,
+                        "file": f"{name}.hlo.txt",
+                        "c_in": c_in,
+                        "c_out": c_out,
+                        "h": h,
+                        "w": w,
+                        "pad": 1,
+                        "stride": 1,
+                    }
+                )
+                if not quiet:
+                    print(f"wrote {path} ({len(text)} chars)")
+
+    with open(os.path.join(outdir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    if not quiet:
+        print(f"wrote {outdir}/manifest.json ({len(manifest['artifacts'])} artifacts)")
+    return manifest
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--outdir", default="../artifacts")
+    ap.add_argument(
+        "--res",
+        type=int,
+        default=64,
+        help="resolution for the ref+pallas validation buckets (multiple of 32)",
+    )
+    ap.add_argument(
+        "--full-res",
+        type=int,
+        default=224,
+        help="resolution for the ref-only full-network buckets (0 disables)",
+    )
+    ap.add_argument(
+        "--max-pallas-hw",
+        type=int,
+        default=64,
+        help="emit the pallas-kernel artifact only for planes up to this size",
+    )
+    ap.add_argument("--quiet", action="store_true")
+    args = ap.parse_args()
+    specs = [(args.res, ("ref", "vscnn"), args.max_pallas_hw)]
+    if args.full_res:
+        specs.append((args.full_res, ("ref",), None))
+    build(args.outdir, specs, quiet=args.quiet)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,4 @@
+# L1: Pallas kernels for the VSCNN column dataflow (build-time only; the
+# lowered HLO is executed from rust via PJRT, never this package).
+from .ref import conv2d_ref, maxpool2x2_ref, relu_ref  # noqa: F401
+from .vscnn_conv import vscnn_conv  # noqa: F401

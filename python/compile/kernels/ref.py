@@ -1,0 +1,40 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+Everything here is the "obviously correct" formulation via lax primitives;
+the VSCNN column-dataflow kernel in vscnn_conv.py must match these to float
+tolerance on every shape (pytest + hypothesis sweep in
+python/tests/test_kernel.py). The rust golden conv (rust/src/tensor/conv.rs)
+is the third corner of the cross-check triangle.
+"""
+
+import jax.numpy as jnp
+from jax import lax
+
+
+def conv2d_ref(x, w, b=None, *, pad=1, stride=1):
+    """Reference conv: x [C,H,W], w [K,C,KH,KW], b [K] -> [K,H',W'].
+
+    Cross-correlation (CNN convention), symmetric zero padding.
+    """
+    out = lax.conv_general_dilated(
+        x[None],  # [1,C,H,W]
+        w,
+        window_strides=(stride, stride),
+        padding=((pad, pad), (pad, pad)),
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    )[0]
+    if b is not None:
+        out = out + b[:, None, None]
+    return out
+
+
+def relu_ref(x):
+    """ReLU oracle."""
+    return jnp.maximum(x, 0.0)
+
+
+def maxpool2x2_ref(x):
+    """2x2 stride-2 max pooling oracle: x [C,H,W] -> [C,H//2,W//2]."""
+    c, h, w = x.shape
+    x = x[:, : h - h % 2, : w - w % 2]
+    return x.reshape(c, h // 2, 2, w // 2, 2).max(axis=(2, 4))

@@ -1,0 +1,117 @@
+"""L1 Pallas kernel: the VSCNN column dataflow.
+
+The paper's PE array consumes one 1-D input *column* vector and one 1-D
+weight *column* vector per cycle and reduces their products diagonally into
+one partial output column (Fig 4/5). On TPU we keep that column-centric
+schedule but batch it MXU-shaped (DESIGN.md §Hardware-Adaptation):
+
+* grid = (output-channel tiles, output columns) — one grid step produces
+  one full output column for one tile of filters, mirroring "one output
+  column per cycle per array";
+* the three input columns feeding output column ``o`` are staged in VMEM
+  (the ASIC's input SRAM) and unfolded into an ``[H, C*KH*KW]`` patch
+  matrix — the 1-D broadcast + diagonal accumulation becomes one rank-2
+  matmul against the ``[KT, C*KH*KW]`` weight tile, which is exactly the
+  systolic-array-friendly form of the same reduction;
+* zero-vector skipping is a *compile-time* property here: vector-pruned
+  weight tiles multiply by zero columns, and XLA's sparsity comes from the
+  rust coordinator scheduling (L3) — the kernel computes the dense tile the
+  arrays would see after the index system has already dropped zero vectors.
+
+``interpret=True`` always: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; interpret mode lowers to plain HLO the rust runtime can run.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, w_ref, o_ref, *, c_in, h, kh, kw, k_tile, col_tile):
+    """One grid step: `col_tile` output columns for one tile of filters.
+
+    x_ref: [C, H+kh-1, W+kw-1] padded input (whole plane staged; the TPU
+           version would DMA only the halo window per step).
+    w_ref: [KT, C, KH, KW] weight tile.
+    o_ref: [KT, H, col_tile] output column block.
+
+    col_tile > 1 is the MXU row-fill optimization (EXPERIMENTS.md §Perf):
+    batching CT output columns grows the matmul's row dimension from H to
+    CT*H, filling the 128-row systolic tile on deep layers where H < 128.
+    """
+    o = pl.program_id(1)
+    # The col_tile+kw-1 input columns feeding this block of output columns.
+    cols = x_ref[:, :, pl.dslice(o * col_tile, col_tile + kw - 1)]
+    # Unfold row shifts and column offsets:
+    # patches[t, hh, c, i, j] = cols[c, hh+i, t+j].
+    shifts = [
+        cols[:, i : i + h, t : t + kw]  # [C, H, kw]
+        for t in range(col_tile)
+        for i in range(kh)
+    ]
+    patches = jnp.stack(shifts, axis=0).reshape(col_tile, kh, c_in, h, kw)
+    patches = patches.transpose(0, 3, 2, 1, 4).reshape(col_tile * h, c_in * kh * kw)
+    wmat = w_ref[...].reshape(k_tile, c_in * kh * kw)
+    # The diagonal reduction of the PE array, batched: one MXU matmul with
+    # col_tile*H rows.
+    out = jnp.dot(patches, wmat.T, preferred_element_type=jnp.float32)
+    # [CT*H, KT] -> [KT, H, CT]
+    o_ref[...] = out.reshape(col_tile, h, k_tile).transpose(2, 1, 0)
+
+
+def vscnn_conv(x, w, *, pad=1, k_tile=None, col_tile=1, interpret=True):
+    """VSCNN column-dataflow convolution via Pallas.
+
+    x: [C, H, W] float32, w: [K, C, KH, KW] float32; stride 1 (the paper's
+    optimized case). Returns [K, H_out, W_out].
+
+    col_tile batches output columns per grid step (1 mirrors the paper's
+    one-column-per-cycle dataflow; 4-8 fills the MXU rows on deep layers).
+    """
+    c_in, height, width = x.shape
+    k_out, wc, kh, kw = w.shape
+    assert wc == c_in, f"channel mismatch {wc} vs {c_in}"
+    h_out = height + 2 * pad - kh + 1
+    w_out = width + 2 * pad - kw + 1
+    assert h_out > 0 and w_out > 0, "kernel larger than padded input"
+
+    if k_tile is None:
+        k_tile = min(k_out, 128)
+    assert col_tile >= 1
+    # Pad K up to a multiple of k_tile with zero filters, dropped at the end.
+    k_pad = (-k_out) % k_tile
+    if k_pad:
+        w = jnp.concatenate([w, jnp.zeros((k_pad, c_in, kh, kw), w.dtype)], axis=0)
+    k_total = k_out + k_pad
+    # Pad W_out up to a multiple of col_tile; extra columns read zero
+    # padding and are cropped at the end.
+    w_pad = (-w_out) % col_tile
+    w_total = w_out + w_pad
+
+    # Stage the zero padding once so every grid step slices statically-sized
+    # windows (the ASIC's boundary columns OB0/OB6 fall out of the padding).
+    xp = jnp.pad(x, ((0, 0), (pad, pad), (pad, pad + w_pad)))
+    # The padded plane must cover h_out + kh - 1 rows and w_total + kw - 1 cols.
+    xp = xp[:, : h_out + kh - 1, : w_total + kw - 1]
+
+    kernel = functools.partial(
+        _kernel, c_in=c_in, h=h_out, kh=kh, kw=kw, k_tile=k_tile, col_tile=col_tile
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=(k_total // k_tile, w_total // col_tile),
+        in_specs=[
+            # Whole padded input resident per step (VMEM budget documented
+            # in DESIGN.md; a real-TPU variant would use a halo window).
+            pl.BlockSpec(
+                (c_in, h_out + kh - 1, w_total + kw - 1), lambda kt, o: (0, 0, 0)
+            ),
+            pl.BlockSpec((k_tile, c_in, kh, kw), lambda kt, o: (kt, 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((k_tile, h_out, col_tile), lambda kt, o: (kt, 0, o)),
+        out_shape=jax.ShapeDtypeStruct((k_total, h_out, w_total), jnp.float32),
+        interpret=interpret,
+    )(xp, w)
+    return out[:k_out, :, :w_out]

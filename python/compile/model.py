@@ -1,0 +1,94 @@
+"""L2: the VGG-16 compute graph in JAX, calling the L1 Pallas kernel.
+
+Build-time only. `conv_layer` (Pallas path) and `conv_layer_ref` (lax path)
+are the two per-layer functions AOT-lowered by aot.py; `vgg16_forward` runs
+the whole trunk for end-to-end validation against the rust pipeline.
+
+The layer geometry mirrors rust/src/model/vgg16.rs exactly — the rust side
+is the source of truth for the network the experiments run.
+"""
+
+import jax.numpy as jnp
+
+from .kernels.ref import conv2d_ref, maxpool2x2_ref, relu_ref
+from .kernels.vscnn_conv import vscnn_conv
+
+# (name, c_in, c_out) for the 13 VGG-16 convs; pools follow the block ends.
+VGG16_CONVS = [
+    ("conv1_1", 3, 64),
+    ("conv1_2", 64, 64),
+    ("conv2_1", 64, 128),
+    ("conv2_2", 128, 128),
+    ("conv3_1", 128, 256),
+    ("conv3_2", 256, 256),
+    ("conv3_3", 256, 256),
+    ("conv4_1", 256, 512),
+    ("conv4_2", 512, 512),
+    ("conv4_3", 512, 512),
+    ("conv5_1", 512, 512),
+    ("conv5_2", 512, 512),
+    ("conv5_3", 512, 512),
+]
+POOL_AFTER = {"conv1_2", "conv2_2", "conv3_3", "conv4_3", "conv5_3"}
+
+
+def conv_layer(x, w, b):
+    """One accelerator layer via the VSCNN Pallas kernel: conv + bias.
+
+    Pre-ReLU, matching the hardware split: the PE array + accumulator
+    produce this; ReLU/zero-detection live in the post-processing unit
+    (rust/src/sim/postproc.rs).
+    """
+    return vscnn_conv(x, w) + b[:, None, None]
+
+
+def conv_layer_ref(x, w, b):
+    """Same layer via lax.conv — the fast functional path and the oracle."""
+    return conv2d_ref(x, w, b)
+
+
+def layer_shapes(res):
+    """(name, c_in, c_out, h, w) for each conv at input resolution `res`."""
+    assert res % 32 == 0, "resolution must be a multiple of 32"
+    shapes = []
+    h = w = res
+    for name, c_in, c_out in VGG16_CONVS:
+        shapes.append((name, c_in, c_out, h, w))
+        if name in POOL_AFTER:
+            h //= 2
+            w //= 2
+    return shapes
+
+
+def vgg16_forward(x, params, *, use_kernel=False):
+    """Full VGG-16 trunk forward pass.
+
+    params: {name: (w, b)}. Returns the list of post-ReLU activations per
+    conv layer (what the rust coordinator's sparsity propagation sees) and
+    the final feature map.
+    """
+    acts = []
+    layer = conv_layer if use_kernel else conv_layer_ref
+    for name, _c_in, _c_out in VGG16_CONVS:
+        w, b = params[name]
+        x = relu_ref(layer(x, w, b))
+        acts.append(x)
+        if name in POOL_AFTER:
+            x = maxpool2x2_ref(x)
+    return acts, x
+
+
+def init_params(res, seed=0):
+    """He-initialized synthetic parameters (mirrors rust model/init.rs in
+    spirit; exact values need not match — cross-checks exchange tensors)."""
+    import numpy as np
+
+    rng = np.random.default_rng(seed)
+    params = {}
+    for name, c_in, c_out in VGG16_CONVS:
+        fan_in = c_in * 9
+        w = rng.normal(0.0, (2.0 / fan_in) ** 0.5, size=(c_out, c_in, 3, 3))
+        b = rng.normal(0.0, 0.01, size=(c_out,))
+        params[name] = (jnp.asarray(w, jnp.float32), jnp.asarray(b, jnp.float32))
+    del res
+    return params

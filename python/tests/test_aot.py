@@ -1,0 +1,68 @@
+"""AOT pipeline tests: artifacts are valid HLO text with the right
+signatures, the manifest is consistent, and bucket dedup works."""
+
+import json
+import os
+
+import pytest
+
+from compile.aot import bucket_name, build, lower_conv, to_hlo_text
+from compile.model import conv_layer_ref
+
+
+def test_bucket_name_format():
+    assert bucket_name("ref", 3, 64, 224, 224) == "ref_c3_h224_w224_k64"
+
+
+def test_hlo_text_structure():
+    lowered = lower_conv(conv_layer_ref, 2, 4, 8, 8)
+    text = to_hlo_text(lowered)
+    assert "HloModule" in text
+    assert "ENTRY" in text
+    # Signature: x [2,8,8], w [4,2,3,3], b [4], tuple result [4,8,8].
+    assert "f32[2,8,8]" in text
+    assert "f32[4,2,3,3]" in text
+    assert "->(f32[4,8,8]" in text  # tuple result (with layout annotation)
+
+
+def test_build_manifest_roundtrip(tmp_path):
+    outdir = str(tmp_path / "artifacts")
+    manifest = build(outdir, [(32, ("ref",), None)], quiet=True)
+    with open(os.path.join(outdir, "manifest.json")) as f:
+        on_disk = json.load(f)
+    assert on_disk["artifacts"] == manifest["artifacts"]
+    # Every artifact file exists and is parseable-looking HLO.
+    for art in on_disk["artifacts"]:
+        path = os.path.join(outdir, art["file"])
+        assert os.path.exists(path)
+        with open(path) as f:
+            assert "HloModule" in f.read(200)
+    # VGG-16 at one resolution has <= 13 distinct buckets.
+    assert 0 < len(on_disk["artifacts"]) <= 13
+
+
+def test_build_dedups_across_resolutions(tmp_path):
+    outdir = str(tmp_path / "artifacts")
+    manifest = build(outdir, [(32, ("ref",), None), (32, ("ref",), None)], quiet=True)
+    names = [a["name"] for a in manifest["artifacts"]]
+    assert len(names) == len(set(names))
+
+
+def test_max_pallas_hw_filters(tmp_path):
+    outdir = str(tmp_path / "artifacts")
+    manifest = build(outdir, [(32, ("ref", "vscnn"), 16)], quiet=True)
+    for art in manifest["artifacts"]:
+        if art["kind"] == "vscnn":
+            assert art["h"] <= 16
+
+
+@pytest.mark.parametrize("c_in,c_out,h", [(3, 8, 16), (8, 4, 8)])
+def test_pallas_artifact_lowers(c_in, c_out, h):
+    """The Pallas path lowers to HLO text without Mosaic custom-calls
+    (interpret=True ⇒ plain HLO the CPU PJRT client can run)."""
+    from compile.model import conv_layer
+
+    lowered = lower_conv(conv_layer, c_in, c_out, h, h)
+    text = to_hlo_text(lowered)
+    assert "HloModule" in text
+    assert "mosaic" not in text.lower()

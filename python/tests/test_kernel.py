@@ -1,0 +1,240 @@
+"""L1 correctness: the VSCNN Pallas kernel vs the pure-jnp oracle.
+
+This is the core correctness signal for the compute hot-spot: hypothesis
+sweeps shapes/paddings/sparsity patterns and asserts allclose against
+lax.conv. Failures here mean the column dataflow (and therefore the HLO the
+rust runtime executes) is wrong.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.ref import conv2d_ref, maxpool2x2_ref, relu_ref
+from compile.kernels.vscnn_conv import vscnn_conv
+
+RTOL = 2e-4
+ATOL = 2e-4
+
+
+def rand(rng, shape, density=1.0):
+    x = rng.normal(size=shape).astype(np.float32)
+    if density < 1.0:
+        x = x * (rng.random(size=shape) < density)
+    return jnp.asarray(x)
+
+
+def assert_matches_ref(x, w, pad=1, **kw):
+    got = vscnn_conv(x, w, pad=pad, **kw)
+    want = conv2d_ref(x, w, pad=pad)
+    np.testing.assert_allclose(got, want, rtol=RTOL, atol=ATOL)
+
+
+class TestBasicShapes:
+    def test_paper_example_5x5(self):
+        """Fig 6: 5x5 input, pad 1, 3x3 kernel -> 5x5 output."""
+        rng = np.random.default_rng(0)
+        x = rand(rng, (1, 5, 5))
+        w = rand(rng, (1, 1, 3, 3))
+        out = vscnn_conv(x, w)
+        assert out.shape == (1, 5, 5)
+        assert_matches_ref(x, w)
+
+    def test_vgg_first_layer_geometry(self):
+        rng = np.random.default_rng(1)
+        x = rand(rng, (3, 32, 32))
+        w = rand(rng, (64, 3, 3, 3))
+        assert_matches_ref(x, w)
+
+    def test_many_channels(self):
+        rng = np.random.default_rng(2)
+        x = rand(rng, (32, 14, 14))
+        w = rand(rng, (16, 32, 3, 3))
+        assert_matches_ref(x, w)
+
+    def test_pad_zero_valid_conv(self):
+        rng = np.random.default_rng(3)
+        x = rand(rng, (2, 9, 9))
+        w = rand(rng, (4, 2, 3, 3))
+        got = vscnn_conv(x, w, pad=0)
+        want = conv2d_ref(x, w, pad=0)
+        assert got.shape == (4, 7, 7)
+        np.testing.assert_allclose(got, want, rtol=RTOL, atol=ATOL)
+
+    def test_pad_two(self):
+        rng = np.random.default_rng(4)
+        x = rand(rng, (2, 6, 6))
+        w = rand(rng, (3, 2, 3, 3))
+        assert_matches_ref(x, w, pad=2)
+
+    def test_5x5_kernel(self):
+        rng = np.random.default_rng(5)
+        x = rand(rng, (2, 10, 10))
+        w = rand(rng, (3, 2, 5, 5))
+        assert_matches_ref(x, w, pad=2)
+
+    def test_1x1_kernel(self):
+        rng = np.random.default_rng(6)
+        x = rand(rng, (4, 7, 7))
+        w = rand(rng, (5, 4, 1, 1))
+        assert_matches_ref(x, w, pad=0)
+
+    def test_non_square_input(self):
+        rng = np.random.default_rng(7)
+        x = rand(rng, (2, 11, 5))
+        w = rand(rng, (3, 2, 3, 3))
+        assert_matches_ref(x, w)
+
+
+class TestKTiling:
+    def test_k_not_multiple_of_tile(self):
+        rng = np.random.default_rng(8)
+        x = rand(rng, (2, 8, 8))
+        w = rand(rng, (5, 2, 3, 3))
+        assert_matches_ref(x, w, k_tile=2)
+
+    def test_k_tile_one(self):
+        rng = np.random.default_rng(9)
+        x = rand(rng, (1, 6, 6))
+        w = rand(rng, (3, 1, 3, 3))
+        assert_matches_ref(x, w, k_tile=1)
+
+    def test_k_tile_exceeds_k(self):
+        rng = np.random.default_rng(10)
+        x = rand(rng, (1, 6, 6))
+        w = rand(rng, (2, 1, 3, 3))
+        got = vscnn_conv(x, w, k_tile=8)
+        want = conv2d_ref(x, w)
+        np.testing.assert_allclose(got, want, rtol=RTOL, atol=ATOL)
+
+
+class TestColTiling:
+    """The MXU row-fill variant (EXPERIMENTS.md §Perf): batching col_tile
+    output columns per grid step must be numerically identical."""
+
+    def test_col_tile_4(self):
+        rng = np.random.default_rng(20)
+        x = rand(rng, (4, 12, 10))
+        w = rand(rng, (6, 4, 3, 3))
+        assert_matches_ref(x, w, col_tile=4)
+
+    def test_col_tile_not_dividing_w(self):
+        rng = np.random.default_rng(21)
+        x = rand(rng, (2, 8, 7))  # w_out=7, col_tile=3 -> padding path
+        w = rand(rng, (3, 2, 3, 3))
+        assert_matches_ref(x, w, col_tile=3)
+
+    def test_col_tile_exceeds_w(self):
+        rng = np.random.default_rng(22)
+        x = rand(rng, (2, 6, 4))
+        w = rand(rng, (3, 2, 3, 3))
+        assert_matches_ref(x, w, col_tile=8)
+
+    @settings(max_examples=15, deadline=None)
+    @given(
+        col_tile=st.integers(1, 6),
+        h=st.integers(3, 12),
+        w=st.integers(3, 12),
+        pad=st.integers(0, 2),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_hypothesis_col_tile_sweep(self, col_tile, h, w, pad, seed):
+        rng = np.random.default_rng(seed)
+        x = rand(rng, (2, h, w), density=0.5)
+        wt = rand(rng, (3, 2, 3, 3), density=0.5)
+        got = vscnn_conv(x, wt, pad=pad, col_tile=col_tile)
+        want = conv2d_ref(x, wt, pad=pad)
+        np.testing.assert_allclose(got, want, rtol=RTOL, atol=ATOL)
+
+
+class TestSparsity:
+    """Vector-pruned weights / ReLU-sparse inputs (the paper's workload)."""
+
+    def test_vector_pruned_weights(self):
+        rng = np.random.default_rng(11)
+        x = rand(rng, (4, 14, 14))
+        w = np.asarray(rand(rng, (8, 4, 3, 3)))
+        # Zero whole kernel columns (vector granularity).
+        mask = rng.random(size=(8, 4, 1, 3)) < 0.7
+        w = jnp.asarray(w * ~mask)
+        assert_matches_ref(jnp.asarray(x), w)
+
+    def test_sparse_input_activations(self):
+        rng = np.random.default_rng(12)
+        x = rand(rng, (4, 14, 14), density=0.3)
+        w = rand(rng, (8, 4, 3, 3))
+        assert_matches_ref(x, w)
+
+    def test_all_zero_input(self):
+        x = jnp.zeros((2, 8, 8), jnp.float32)
+        rng = np.random.default_rng(13)
+        w = rand(rng, (3, 2, 3, 3))
+        out = vscnn_conv(x, w)
+        assert float(jnp.abs(out).max()) == 0.0
+
+    def test_all_zero_weights(self):
+        rng = np.random.default_rng(14)
+        x = rand(rng, (2, 8, 8))
+        w = jnp.zeros((3, 2, 3, 3), jnp.float32)
+        out = vscnn_conv(x, w)
+        assert float(jnp.abs(out).max()) == 0.0
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    c_in=st.integers(1, 6),
+    k_out=st.integers(1, 8),
+    h=st.integers(3, 16),
+    w=st.integers(3, 16),
+    pad=st.integers(0, 2),
+    density=st.sampled_from([1.0, 0.5, 0.15]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_hypothesis_sweep_matches_ref(c_in, k_out, h, w, pad, density, seed):
+    """Property: kernel == oracle over random shapes/pads/sparsity."""
+    rng = np.random.default_rng(seed)
+    x = rand(rng, (c_in, h, w), density=density)
+    wt = rand(rng, (k_out, c_in, 3, 3), density=density)
+    got = vscnn_conv(x, wt, pad=pad)
+    want = conv2d_ref(x, wt, pad=pad)
+    np.testing.assert_allclose(got, want, rtol=RTOL, atol=ATOL)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    h=st.integers(2, 12),
+    w=st.integers(2, 12),
+    c=st.integers(1, 4),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_pool_and_relu_oracles(h, w, c, seed):
+    """The helper oracles agree with numpy formulations."""
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(c, h, w)).astype(np.float32)
+    np.testing.assert_allclose(relu_ref(jnp.asarray(x)), np.maximum(x, 0.0))
+    got = maxpool2x2_ref(jnp.asarray(x))
+    hh, ww = h // 2, w // 2
+    want = np.full((c, hh, ww), -np.inf, np.float32)
+    for i in range(hh):
+        for j in range(ww):
+            want[:, i, j] = x[:, 2 * i : 2 * i + 2, 2 * j : 2 * j + 2].max(axis=(1, 2))
+    if hh and ww:
+        np.testing.assert_allclose(got, want)
+    else:
+        assert got.shape == (c, hh, ww)
+
+
+def test_dtype_is_float32():
+    rng = np.random.default_rng(15)
+    x = rand(rng, (1, 4, 4))
+    w = rand(rng, (1, 1, 3, 3))
+    assert vscnn_conv(x, w).dtype == jnp.float32
+
+
+def test_rejects_channel_mismatch():
+    rng = np.random.default_rng(16)
+    x = rand(rng, (2, 4, 4))
+    w = rand(rng, (1, 3, 3, 3))
+    with pytest.raises(AssertionError):
+        vscnn_conv(x, w)

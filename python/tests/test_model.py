@@ -1,0 +1,70 @@
+"""L2 correctness: VGG-16 graph shapes, kernel-vs-ref layer equivalence,
+and the AOT bucket enumeration."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.model import (
+    POOL_AFTER,
+    VGG16_CONVS,
+    conv_layer,
+    conv_layer_ref,
+    init_params,
+    layer_shapes,
+    vgg16_forward,
+)
+
+
+def test_thirteen_convs_five_pools():
+    assert len(VGG16_CONVS) == 13
+    assert len(POOL_AFTER) == 5
+
+
+def test_layer_shapes_at_224():
+    shapes = layer_shapes(224)
+    assert shapes[0] == ("conv1_1", 3, 64, 224, 224)
+    assert shapes[-1] == ("conv5_3", 512, 512, 14, 14)
+    # Heights divide both paper vector sizes.
+    for _n, _ci, _co, h, _w in shapes:
+        assert h % 14 == 0 and h % 7 == 0
+
+
+def test_layer_shapes_reject_bad_res():
+    with pytest.raises(AssertionError):
+        layer_shapes(100)
+
+
+def test_conv_layer_kernel_matches_ref():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(8, 16, 16)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(4, 8, 3, 3)).astype(np.float32))
+    b = jnp.asarray(rng.normal(size=(4,)).astype(np.float32))
+    np.testing.assert_allclose(
+        conv_layer(x, w, b), conv_layer_ref(x, w, b), rtol=2e-4, atol=2e-4
+    )
+
+
+def test_forward_shapes_and_activation_sparsity():
+    params = init_params(32, seed=1)
+    x = jnp.asarray(np.random.default_rng(2).normal(size=(3, 32, 32)).astype(np.float32))
+    acts, final = vgg16_forward(x, params)
+    assert len(acts) == 13
+    assert final.shape == (512, 1, 1)
+    # Post-ReLU activations are nonnegative and ReLU-sparse.
+    for a in acts:
+        arr = np.asarray(a)
+        assert arr.min() >= 0.0
+        density = (arr != 0).mean()
+        assert 0.05 < density < 0.95, f"density {density}"
+
+
+def test_forward_kernel_path_matches_ref_path():
+    """The full trunk through the Pallas kernel equals the lax path."""
+    params = init_params(32, seed=3)
+    x = jnp.asarray(np.random.default_rng(4).normal(size=(3, 32, 32)).astype(np.float32))
+    acts_ref, final_ref = vgg16_forward(x, params, use_kernel=False)
+    acts_k, final_k = vgg16_forward(x, params, use_kernel=True)
+    np.testing.assert_allclose(final_k, final_ref, rtol=5e-3, atol=5e-3)
+    for a, b in zip(acts_k, acts_ref):
+        np.testing.assert_allclose(a, b, rtol=5e-3, atol=5e-3)

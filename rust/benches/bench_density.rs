@@ -1,0 +1,40 @@
+//! Bench F9/F10/F11: regenerates the density figures at full resolution
+//! and times the density-analysis path.
+//! Run: `cargo bench --bench bench_density` (env `VSCNN_BENCH_RES` to
+//! override the resolution; default 224 = paper).
+
+use vscnn::experiments::{density, ExpContext};
+use vscnn::util::bench::bench;
+
+fn main() {
+    let res: usize = std::env::var("VSCNN_BENCH_RES")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(224);
+    let ctx = ExpContext {
+        res,
+        ..Default::default()
+    };
+
+    type ExpFn = fn(&ExpContext) -> anyhow::Result<vscnn::experiments::ExpOutput>;
+    for (fi, (id, f)) in [
+        ("fig9", density::run_fig9 as ExpFn),
+        ("fig10", density::run_fig10 as ExpFn),
+        ("fig11", density::run_fig11 as ExpFn),
+    ]
+    .into_iter()
+    .enumerate()
+    {
+        let out = f(&ctx).expect(id);
+        println!("{}", out.text);
+        // Vary the seed per figure AND iteration so the workload memoizer
+        // doesn't short-circuit the timing (fig9/fig10 share a config).
+        let mut seed = ctx.seed + 1000 * (fi as u64 + 1);
+        let r = bench(&format!("{id}@res{res}"), 0, 3, || {
+            seed += 1;
+            let c = ExpContext { seed, ..ctx.clone() };
+            let _ = f(&c).expect(id);
+        });
+        println!("{}\n", r.line());
+    }
+}

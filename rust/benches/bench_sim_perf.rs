@@ -1,0 +1,84 @@
+//! §Perf bench: simulator and functional-path throughput on representative
+//! VGG-16 layers — the numbers tracked in EXPERIMENTS.md §Perf.
+//! Run: `cargo bench --bench bench_sim_perf`.
+
+use vscnn::model::init::synthetic_image;
+use vscnn::pruning::{prune_vectors, VectorGranularity};
+use vscnn::sim::config::SimConfig;
+use vscnn::sim::scheduler::{simulate_layer, Mode};
+use vscnn::sim::trace::Trace;
+use vscnn::sparse::encode::layer_report;
+use vscnn::tensor::conv::ConvSpec;
+use vscnn::tensor::ops::conv2d_im2col_mt;
+use vscnn::tensor::Tensor;
+use vscnn::util::bench::{bench, black_box};
+use vscnn::util::rng::Pcg32;
+
+fn sparse_tensor(rng: &mut Pcg32, shape: &[usize], density: f32) -> Tensor {
+    let n: usize = shape.iter().product();
+    Tensor::from_vec(
+        shape,
+        (0..n)
+            .map(|_| if rng.bernoulli(density) { rng.normal() } else { 0.0 })
+            .collect(),
+    )
+}
+
+fn main() {
+    let mut rng = Pcg32::seeded(1234);
+    let cfg = SimConfig::paper_8_7_3();
+    let spec = ConvSpec::default();
+    let threads = std::thread::available_parallelism().map_or(4, |n| n.get());
+
+    // Representative layers: early (large plane, few channels) and late
+    // (small plane, many channels).
+    let cases = [
+        ("conv2_1-like [64->128 @112]", 64usize, 128usize, 112usize),
+        ("conv4_2-like [512->512 @28]", 512, 512, 28),
+    ];
+
+    for (name, c_in, k_out, hw) in cases {
+        let mut input = synthetic_image([c_in, hw, hw], 7);
+        // ReLU-like sparsity.
+        for x in input.data_mut() {
+            if *x < 0.2 {
+                *x = 0.0;
+            }
+        }
+        let mut weight = sparse_tensor(&mut rng, &[k_out, c_in, 3, 3], 1.0);
+        prune_vectors(&mut weight, 0.235, VectorGranularity::KernelRow);
+
+        // 1) timing-only simulation throughput (modelled dense pairs/s).
+        let dense_pairs = (k_out * c_in * hw.div_ceil(cfg.pe.rows) * hw * 3) as f64;
+        let r = bench(&format!("sim/{name}"), 1, 5, || {
+            let mut tr = Trace::disabled();
+            let res = simulate_layer(
+                &input,
+                &weight,
+                None,
+                &cfg,
+                spec,
+                Mode::VectorSparse,
+                false,
+                &mut tr,
+            );
+            black_box(res.stats.cycles);
+        });
+        println!("{}", r.line());
+        println!("{}", r.throughput(dense_pairs, "modelled-pairs"));
+
+        // 2) density analysis (fig 9-11 inner loop).
+        let r = bench(&format!("density/{name}"), 1, 5, || {
+            black_box(layer_report(&input, &weight, spec, cfg.pe.rows));
+        });
+        println!("{}", r.line());
+
+        // 3) functional forward (im2col MT) in GMAC/s.
+        let macs = (k_out * c_in * 9 * hw * hw) as f64;
+        let r = bench(&format!("conv-mt{threads}/{name}"), 1, 5, || {
+            black_box(conv2d_im2col_mt(&input, &weight, None, spec, threads));
+        });
+        println!("{}", r.line());
+        println!("{}\n", r.throughput(macs, "MAC"));
+    }
+}

@@ -1,0 +1,44 @@
+//! Bench F12/F13/H1/H2: regenerates the speedup figures, the headline
+//! numbers, and the SCNN comparison at full resolution, printing the same
+//! series the paper plots next to the paper's own values.
+//! Run: `cargo bench --bench bench_speedup` (env `VSCNN_BENCH_RES`
+//! overrides resolution, `VSCNN_BENCH_IMAGES` the batch size).
+
+use vscnn::experiments::{speedup, ExpContext};
+use vscnn::util::bench::bench;
+
+fn main() {
+    let res: usize = std::env::var("VSCNN_BENCH_RES")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(224);
+    let images: usize = std::env::var("VSCNN_BENCH_IMAGES")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(1);
+    let ctx = ExpContext {
+        res,
+        images,
+        ..Default::default()
+    };
+
+    let f12 = speedup::run_fig(&ctx, true).expect("fig12");
+    println!("{}", f12.text);
+    let f13 = speedup::run_fig(&ctx, false).expect("fig13");
+    println!("{}", f13.text);
+    let h = speedup::run_headline(&ctx).expect("headline");
+    println!("{}", h.text);
+    let s = speedup::run_scnn(&ctx).expect("scnn");
+    println!("{}", s.text);
+
+    // Vary the seed per iteration so the workload memoizer doesn't
+    // short-circuit the timing.
+    let mut seed = ctx.seed;
+    let r = bench(&format!("fig12+fig13@res{res}"), 0, 3, || {
+        seed += 1;
+        let c = ExpContext { seed, ..ctx.clone() };
+        let _ = speedup::run_fig(&c, true).unwrap();
+        let _ = speedup::run_fig(&c, false).unwrap();
+    });
+    println!("{}", r.line());
+}

@@ -1,0 +1,43 @@
+//! Bench T1: regenerates the paper's Table I (5x5 worked example) and
+//! times the simulator on it. Run: `cargo bench --bench bench_table1`.
+
+use vscnn::experiments::{table1, ExpContext};
+use vscnn::sim::config::SimConfig;
+use vscnn::sim::scheduler::{simulate_layer, Mode};
+use vscnn::sim::trace::Trace;
+use vscnn::tensor::conv::ConvSpec;
+use vscnn::util::bench::{bench, black_box};
+
+fn main() {
+    let ctx = ExpContext::default();
+    let out = table1::run(&ctx).expect("table1");
+    println!("{}", out.text);
+    assert_eq!(out.json.get("dense_cycles").unwrap().as_usize(), Some(15));
+    assert_eq!(out.json.get("sparse_cycles").unwrap().as_usize(), Some(8));
+
+    // Micro-bench: the worked example, timing-only and functional.
+    let (input, weight) = table1::example_tensors(ctx.seed);
+    let mut cfg = SimConfig::paper_4_14_3();
+    cfg.pe.arrays = 1;
+    cfg.pe.rows = 5;
+    cfg.context_switch_cycles = 0;
+    let spec = ConvSpec { stride: 1, pad: 1 };
+
+    for (name, functional) in [("table1/timing-only", false), ("table1/functional", true)] {
+        let r = bench(name, 10, 100, || {
+            let mut tr = Trace::disabled();
+            let res = simulate_layer(
+                &input,
+                &weight,
+                None,
+                &cfg,
+                spec,
+                Mode::VectorSparse,
+                functional,
+                &mut tr,
+            );
+            black_box(res.stats.cycles);
+        });
+        println!("{}", r.line());
+    }
+}

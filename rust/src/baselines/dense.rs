@@ -1,0 +1,96 @@
+//! The dense-CNN baseline: the same `[B, R, C]` array running the dense
+//! flow (every vector issued). This is the denominator of every speedup in
+//! Figs 12/13. Closed-form — no per-element work.
+
+use crate::sim::config::SimConfig;
+use crate::tensor::conv::ConvSpec;
+
+/// Dense cycle count for a conv layer on `cfg`:
+/// `ceil(K/B) · C · strips · W · KW` plus context-switch overhead per
+/// `(group, channel, strip)` block.
+pub fn dense_cycles(
+    cfg: &SimConfig,
+    c_in: usize,
+    k_out: usize,
+    h: usize,
+    w: usize,
+    kw: usize,
+    _spec: ConvSpec,
+) -> u64 {
+    let strips = h.div_ceil(cfg.pe.rows) as u64;
+    let groups = k_out.div_ceil(cfg.pe.arrays) as u64;
+    let blocks = groups * c_in as u64 * strips;
+    blocks * (w as u64) * (kw as u64) + blocks * cfg.context_switch_cycles
+}
+
+/// Dense MAC issue slots (pairs × per-array PEs) — the utilization
+/// denominator for the reports.
+pub fn dense_mac_slots(cfg: &SimConfig, c_in: usize, k_out: usize, h: usize, w: usize, kw: usize) -> u64 {
+    let strips = h.div_ceil(cfg.pe.rows) as u64;
+    k_out as u64
+        * c_in as u64
+        * strips
+        * (w as u64)
+        * (kw as u64)
+        * (cfg.pe.rows as u64)
+        * (cfg.pe.cols as u64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::config::SimConfig;
+    use crate::sim::scheduler::{simulate_layer, Mode};
+    use crate::sim::trace::Trace;
+    use crate::tensor::Tensor;
+    use crate::util::rng::Pcg32;
+
+    /// The closed form must equal the simulator's dense run exactly.
+    #[test]
+    fn closed_form_matches_simulator() {
+        let mut rng = Pcg32::seeded(3);
+        for _ in 0..8 {
+            let mut cfg = SimConfig::paper_4_14_3();
+            cfg.pe.arrays = rng.range(1, 5);
+            cfg.pe.rows = rng.range(2, 8);
+            cfg.context_switch_cycles = rng.range(0, 3) as u64;
+            let c_in = rng.range(1, 4);
+            let k_out = rng.range(1, 9);
+            let h = rng.range(3, 16);
+            let w = rng.range(3, 16);
+            let n: usize = c_in * h * w;
+            let input = Tensor::from_vec(&[c_in, h, w], (0..n).map(|i| i as f32 + 1.0).collect());
+            let wn = k_out * c_in * 9;
+            let weight =
+                Tensor::from_vec(&[k_out, c_in, 3, 3], (0..wn).map(|i| i as f32 + 1.0).collect());
+            let spec = crate::tensor::conv::ConvSpec::default();
+            let mut tr = Trace::disabled();
+            let res = simulate_layer(&input, &weight, None, &cfg, spec, Mode::Dense, false, &mut tr);
+            assert_eq!(
+                res.stats.cycles,
+                dense_cycles(&cfg, c_in, k_out, h, w, 3, spec),
+                "cfg {:?}",
+                cfg.pe
+            );
+        }
+    }
+
+    #[test]
+    fn paper_example_is_15_cycles() {
+        let mut cfg = SimConfig::paper_4_14_3();
+        cfg.pe.arrays = 1;
+        cfg.pe.rows = 5;
+        cfg.context_switch_cycles = 0;
+        assert_eq!(
+            dense_cycles(&cfg, 1, 1, 5, 5, 3, crate::tensor::conv::ConvSpec::default()),
+            15
+        );
+    }
+
+    #[test]
+    fn mac_slots_scale_with_pes() {
+        let cfg = SimConfig::paper_4_14_3();
+        let slots = dense_mac_slots(&cfg, 2, 4, 14, 10, 3);
+        assert_eq!(slots, 4 * 2 * 1 * 10 * 3 * 14 * 3);
+    }
+}

@@ -1,0 +1,76 @@
+//! Ideal fine-grained machine: skips every MAC whose input *or* weight
+//! element is zero, with no indexing overhead — the theoretical ceiling of
+//! designs like Cambricon-X [15] and SCNN [16] ("ideal fine grained" in
+//! Figs 12/13).
+
+use crate::sparse::encode::DensityReport;
+
+/// Speedup over dense: total MACs / surviving MACs.
+pub fn speedup(report: &DensityReport) -> f64 {
+    if report.macs_nonzero == 0 {
+        return report.macs_total.max(1) as f64;
+    }
+    report.macs_total as f64 / report.macs_nonzero as f64
+}
+
+/// Ideal cycle count on a machine with `pes` multipliers (perfect balance).
+pub fn cycles(report: &DensityReport, pes: usize) -> u64 {
+    report.macs_nonzero.div_ceil(pes as u64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::encode::layer_report;
+    use crate::tensor::conv::ConvSpec;
+    use crate::tensor::Tensor;
+    use crate::util::rng::Pcg32;
+
+    #[test]
+    fn fine_grained_beats_vector_granularity() {
+        // Finer skipping can only help: ideal_fine >= ideal_vector on any
+        // data (vector granularity merges zeros into nonzero vectors, and
+        // additionally pays boundary pairs).
+        let mut rng = Pcg32::seeded(23);
+        for _ in 0..10 {
+            let c_in = rng.range(1, 4);
+            let k_out = rng.range(1, 6);
+            let h = rng.range(4, 12);
+            let w = rng.range(4, 12);
+            let n = c_in * h * w;
+            let input = Tensor::from_vec(
+                &[c_in, h, w],
+                (0..n)
+                    .map(|_| if rng.bernoulli(0.4) { rng.normal() } else { 0.0 })
+                    .collect(),
+            );
+            let wn = k_out * c_in * 9;
+            let weight = Tensor::from_vec(
+                &[k_out, c_in, 3, 3],
+                (0..wn)
+                    .map(|_| if rng.bernoulli(0.35) { rng.normal() } else { 0.0 })
+                    .collect(),
+            );
+            let rep = layer_report(&input, &weight, ConvSpec::default(), 4);
+            assert!(
+                speedup(&rep) >= crate::baselines::ideal_vector::speedup(&rep) - 1e-9,
+                "fine {} < vector {}",
+                speedup(&rep),
+                crate::baselines::ideal_vector::speedup(&rep)
+            );
+        }
+    }
+
+    #[test]
+    fn speedup_is_inverse_work_density() {
+        let input = Tensor::from_vec(&[1, 6, 6], vec![1.0; 36]);
+        let mut weight = Tensor::zeros(&[1, 1, 3, 3]);
+        *weight.at4_mut(0, 0, 1, 1) = 1.0; // 1 of 9 taps
+        let rep = layer_report(&input, &weight, ConvSpec::default(), 3);
+        // Only the center tap works: work = 1/9 of interior (boundary makes
+        // it slightly different); speedup ≈ 9 within boundary tolerance.
+        let s = speedup(&rep);
+        assert!(s > 8.0 && s < 10.5, "speedup {s}");
+        assert_eq!(cycles(&rep, 1), rep.macs_nonzero);
+    }
+}

@@ -1,0 +1,102 @@
+//! Ideal vector-sparse machine: skips **every** zero-vector pair with
+//! perfect load balance across arrays, no sync stalls, no boundary (X)
+//! slots and no context-switch overhead. Upper-bounds what any real
+//! vector-granularity design can achieve — the "ideal vector sparse"
+//! series of Figs 12/13.
+
+use crate::sparse::encode::DensityReport;
+
+/// Speedup over dense: total pairs / surviving pairs (granularity cancels
+/// the array count).
+pub fn speedup(report: &DensityReport) -> f64 {
+    if report.pairs_nonzero == 0 {
+        // Fully skippable layer: cap at the dense pair count (one cycle of
+        // work minimum in any real machine).
+        return report.pairs_total.max(1) as f64;
+    }
+    report.pairs_total as f64 / report.pairs_nonzero as f64
+}
+
+/// Ideal cycle count on a `B`-array machine (perfect balance).
+pub fn cycles(report: &DensityReport, arrays: usize) -> u64 {
+    report.pairs_nonzero.div_ceil(arrays as u64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::encode::layer_report;
+    use crate::tensor::conv::ConvSpec;
+    use crate::tensor::Tensor;
+    use crate::util::rng::Pcg32;
+
+    fn sparse_tensor(rng: &mut Pcg32, shape: &[usize], density: f32) -> Tensor {
+        let n: usize = shape.iter().product();
+        Tensor::from_vec(
+            shape,
+            (0..n)
+                .map(|_| if rng.bernoulli(density) { rng.normal() } else { 0.0 })
+                .collect(),
+        )
+    }
+
+    #[test]
+    fn dense_data_gives_speedup_one() {
+        let input = Tensor::from_vec(&[1, 6, 6], vec![1.0; 36]);
+        let weight = Tensor::from_vec(&[2, 1, 3, 3], vec![1.0; 18]);
+        let rep = layer_report(&input, &weight, ConvSpec::default(), 3);
+        assert!((speedup(&rep) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ideal_upper_bounds_simulator() {
+        // The simulator (with its sync/boundary losses) can never beat the
+        // ideal machine.
+        use crate::sim::config::SimConfig;
+        use crate::sim::scheduler::{simulate_layer, Mode};
+        use crate::sim::trace::Trace;
+        let mut rng = Pcg32::seeded(19);
+        for _ in 0..10 {
+            let mut cfg = SimConfig::paper_4_14_3();
+            cfg.pe.arrays = rng.range(1, 5);
+            cfg.pe.rows = rng.range(2, 8);
+            cfg.context_switch_cycles = 0;
+            let c_in = rng.range(1, 4);
+            let k_out = rng.range(1, 8);
+            let h = rng.range(4, 14);
+            let w = rng.range(4, 14);
+            let input = sparse_tensor(&mut rng, &[c_in, h, w], 0.4);
+            let weight = sparse_tensor(&mut rng, &[k_out, c_in, 3, 3], 0.35);
+            let spec = ConvSpec::default();
+            let rep = layer_report(&input, &weight, spec, cfg.pe.rows);
+            let mut tr = Trace::disabled();
+            let res = simulate_layer(
+                &input,
+                &weight,
+                None,
+                &cfg,
+                spec,
+                Mode::VectorSparse,
+                false,
+                &mut tr,
+            );
+            let ours = res.dense_cycles as f64 / res.stats.cycles.max(1) as f64;
+            let ideal = speedup(&rep);
+            assert!(
+                ours <= ideal + 1e-9,
+                "ours {ours} beats ideal {ideal} (arrays={} rows={})",
+                cfg.pe.arrays,
+                cfg.pe.rows
+            );
+        }
+    }
+
+    #[test]
+    fn cycles_divide_across_arrays() {
+        let input = Tensor::from_vec(&[1, 4, 4], vec![1.0; 16]);
+        let weight = Tensor::from_vec(&[4, 1, 3, 3], vec![1.0; 36]);
+        let rep = layer_report(&input, &weight, ConvSpec::default(), 4);
+        assert_eq!(cycles(&rep, 1), rep.pairs_nonzero);
+        assert_eq!(cycles(&rep, 4), rep.pairs_nonzero.div_ceil(4));
+    }
+}

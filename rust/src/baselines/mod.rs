@@ -1,0 +1,80 @@
+//! Comparison baselines for the paper's Figs 12/13 and §IV discussion:
+//! the dense flow, the two *ideal* (zero-overhead) sparse machines, and a
+//! simplified model of the fine-grained SCNN comparator [16].
+
+pub mod dense;
+pub mod ideal_fine;
+pub mod ideal_vector;
+pub mod scnn_like;
+
+use crate::sparse::encode::DensityReport;
+
+/// The per-layer speedup series plotted in Figs 12/13 (dense = 1.0).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SpeedupSeries {
+    /// VSCNN (simulated, with sync/boundary/overhead losses).
+    pub ours: f64,
+    /// Ideal vector-sparse machine (skips every zero-vector pair, perfect
+    /// load balance, no overhead).
+    pub ideal_vector: f64,
+    /// Ideal fine-grained machine (skips every zero-element MAC).
+    pub ideal_fine: f64,
+}
+
+impl SpeedupSeries {
+    /// Fraction of the ideal vector-sparse *skipped computation* that the
+    /// real design captures — the paper's 92% / 85% metric:
+    /// `(dense - ours) / (dense - ideal)` in cycle terms.
+    pub fn vector_skip_efficiency(&self) -> f64 {
+        skip_efficiency(self.ours, self.ideal_vector)
+    }
+
+    /// Same relative to the ideal fine-grained machine (46.6% / 47.1%).
+    pub fn fine_skip_efficiency(&self) -> f64 {
+        skip_efficiency(self.ours, self.ideal_fine)
+    }
+}
+
+/// `(1 - 1/ours) / (1 - 1/ideal)`: share of ideal's skipped cycles that a
+/// real design skips. 1.0 when the design matches ideal; 0 when it matches
+/// dense; undefined (returns 1) when ideal itself has nothing to skip.
+pub fn skip_efficiency(ours: f64, ideal: f64) -> f64 {
+    let ideal_skip = 1.0 - 1.0 / ideal;
+    if ideal_skip <= 0.0 {
+        return 1.0;
+    }
+    (1.0 - 1.0 / ours) / ideal_skip
+}
+
+/// Build the ideal members of the series from a layer's density report
+/// (`ours` must come from the simulator).
+pub fn ideal_speedups(report: &DensityReport) -> (f64, f64) {
+    (ideal_vector::speedup(report), ideal_fine::speedup(report))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn skip_efficiency_endpoints() {
+        // Matching ideal → 1.0; no speedup at all → 0.0.
+        assert!((skip_efficiency(2.0, 2.0) - 1.0).abs() < 1e-12);
+        assert!((skip_efficiency(1.0, 2.0) - 0.0).abs() < 1e-12);
+        // Half the skipped cycles: ideal 2x skips 50%, ours 4/3 skips 25%.
+        assert!((skip_efficiency(4.0 / 3.0, 2.0) - 0.5).abs() < 1e-12);
+        // Degenerate ideal (nothing to skip).
+        assert_eq!(skip_efficiency(1.0, 1.0), 1.0);
+    }
+
+    #[test]
+    fn series_methods_delegate() {
+        let s = SpeedupSeries {
+            ours: 1.8,
+            ideal_vector: 2.0,
+            ideal_fine: 4.0,
+        };
+        assert!(s.vector_skip_efficiency() > s.fine_skip_efficiency());
+        assert!(s.vector_skip_efficiency() <= 1.0);
+    }
+}

@@ -1,0 +1,121 @@
+//! Simplified model of SCNN [16] — the fine-grained comparator of §IV.
+//!
+//! SCNN multiplies compressed nonzero input and weight elements in a 2-D
+//! Cartesian-product multiplier array and scatters products to accumulator
+//! banks through a crossbar; its losses come from accumulator-bank
+//! contention, ragged tail fragmentation of the compressed streams, and
+//! halo handling at tile edges. The paper summarizes the net effect:
+//! *"The speedup over the dense CNN in [16] is about 3X, which roughly
+//! exploits 66% of ideal fine grained zero computation."*
+//!
+//! We model SCNN at that published operating point: a fine-grained machine
+//! capturing a configurable fraction (default 66%) of the ideal
+//! fine-grained skip opportunity, plus an area-overhead proxy for the
+//! §IV hardware-efficiency comparison.
+
+use crate::sparse::encode::DensityReport;
+
+/// SCNN-like model parameters.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ScnnModel {
+    /// Fraction of the ideal fine-grained skipped computation the design
+    /// realizes (0.66 per the paper's reading of [16]).
+    pub skip_efficiency: f64,
+    /// Index/accumulator/crossbar area overhead relative to the MAC array
+    /// (dimensionless proxy; SCNN's indexing+crossbar dominate its area —
+    /// reported ~30% of the PE in [16] vs ~5% for VSCNN's vector index).
+    pub index_area_overhead: f64,
+}
+
+impl Default for ScnnModel {
+    fn default() -> Self {
+        ScnnModel {
+            skip_efficiency: 0.66,
+            index_area_overhead: 0.30,
+        }
+    }
+}
+
+/// VSCNN's corresponding overhead proxy (one index entry per whole vector;
+/// §IV "our design overhead is very small").
+pub const VSCNN_INDEX_AREA_OVERHEAD: f64 = 0.05;
+
+impl ScnnModel {
+    /// Speedup over dense at this layer: dense work shrunk by
+    /// `skip_efficiency` of what ideal fine-grained would skip.
+    pub fn speedup(&self, report: &DensityReport) -> f64 {
+        let ideal = crate::baselines::ideal_fine::speedup(report);
+        let ideal_skip = 1.0 - 1.0 / ideal; // fraction of cycles skipped
+        let our_skip = self.skip_efficiency * ideal_skip;
+        1.0 / (1.0 - our_skip)
+    }
+
+    /// Speedup per unit area relative to a dense design — the §IV
+    /// "hardware efficient" comparison between VSCNN and SCNN.
+    pub fn speedup_per_area(&self, report: &DensityReport) -> f64 {
+        self.speedup(report) / (1.0 + self.index_area_overhead)
+    }
+}
+
+/// VSCNN speedup per unit area for the same comparison.
+pub fn vscnn_speedup_per_area(speedup: f64) -> f64 {
+    speedup / (1.0 + VSCNN_INDEX_AREA_OVERHEAD)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::encode::DensityReport;
+
+    fn report_with(macs_total: u64, macs_nonzero: u64) -> DensityReport {
+        DensityReport {
+            input_elem: 0.0,
+            weight_elem: 0.0,
+            work_elem: macs_nonzero as f64 / macs_total as f64,
+            input_vec: 0.0,
+            weight_vec: 0.0,
+            work_vec: 0.0,
+            macs_total,
+            macs_nonzero,
+            pairs_total: 0,
+            pairs_nonzero: 0,
+        }
+    }
+
+    #[test]
+    fn paper_operating_point() {
+        // The paper's two SCNN numbers are coupled: 3x speedup = skipping
+        // 66.7% of dense cycles, i.e. "exploits 66% of ideal fine grained
+        // zero computation" treats ideal skip as ≈ all of it. At SCNN's
+        // very sparse workloads (work ≈ 5-10%) the model approaches its
+        // 1/(1-0.66) ≈ 2.94x asymptote — "about 3X".
+        let rep = report_with(1000, 60);
+        let s = ScnnModel::default().speedup(&rep);
+        assert!((2.6..3.1).contains(&s), "speedup {s}");
+    }
+
+    #[test]
+    fn dense_data_no_speedup() {
+        let rep = report_with(1000, 1000);
+        assert!((ScnnModel::default().speedup(&rep) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn efficiency_one_recovers_ideal() {
+        let rep = report_with(1000, 250);
+        let m = ScnnModel {
+            skip_efficiency: 1.0,
+            index_area_overhead: 0.0,
+        };
+        assert!((m.speedup(&rep) - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn area_normalized_comparison_favors_vscnn_at_equal_speedup() {
+        let rep = report_with(1000, 300);
+        let scnn = ScnnModel::default();
+        let s = scnn.speedup(&rep);
+        // If VSCNN reached the same raw speedup, per-area it wins.
+        assert!(vscnn_speedup_per_area(s) > scnn.speedup_per_area(&rep));
+    }
+}

@@ -1,0 +1,119 @@
+//! Hand-rolled CLI argument parsing (clap is unavailable offline —
+//! DESIGN.md §9). Subcommand + `--key value` flags, with typed accessors.
+
+use anyhow::{anyhow, bail, Result};
+use std::collections::BTreeMap;
+
+/// Parsed command line: `vscnn <command> [args...] [--flag value]...`.
+#[derive(Debug, Clone, Default)]
+pub struct Cli {
+    pub command: String,
+    /// Positional arguments after the command.
+    pub positional: Vec<String>,
+    /// `--key value` and boolean `--key` flags.
+    flags: BTreeMap<String, String>,
+}
+
+impl Cli {
+    /// Parse from an argument iterator (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(args: I) -> Result<Cli> {
+        let mut cli = Cli::default();
+        let mut it = args.into_iter().peekable();
+        while let Some(arg) = it.next() {
+            if let Some(name) = arg.strip_prefix("--") {
+                if name.is_empty() {
+                    bail!("empty flag '--'");
+                }
+                if let Some((k, v)) = name.split_once('=') {
+                    cli.flags.insert(k.to_string(), v.to_string());
+                } else if it.peek().is_some_and(|n| !n.starts_with("--")) {
+                    let v = it.next().unwrap();
+                    cli.flags.insert(name.to_string(), v);
+                } else {
+                    // Boolean flag.
+                    cli.flags.insert(name.to_string(), "true".to_string());
+                }
+            } else if cli.command.is_empty() {
+                cli.command = arg;
+            } else {
+                cli.positional.push(arg);
+            }
+        }
+        Ok(cli)
+    }
+
+    /// String flag.
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    /// Boolean flag (present, or `--key true/false`).
+    pub fn get_bool(&self, key: &str) -> bool {
+        matches!(self.get(key), Some("true") | Some("1") | Some("yes"))
+    }
+
+    /// Typed numeric flag with default.
+    pub fn get_num<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow!("flag --{key}: cannot parse '{v}'")),
+        }
+    }
+
+    /// Error on unknown flags (catches typos).
+    pub fn check_known(&self, known: &[&str]) -> Result<()> {
+        for k in self.flags.keys() {
+            if !known.contains(&k.as_str()) {
+                bail!("unknown flag --{k}; known flags: {known:?}");
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(args: &[&str]) -> Cli {
+        Cli::parse(args.iter().map(|s| s.to_string())).unwrap()
+    }
+
+    #[test]
+    fn parses_command_positional_and_flags() {
+        let cli = parse(&["exp", "fig12", "--res", "64", "--trace"]);
+        assert_eq!(cli.command, "exp");
+        assert_eq!(cli.positional, vec!["fig12"]);
+        assert_eq!(cli.get("res"), Some("64"));
+        assert!(cli.get_bool("trace"));
+        assert!(!cli.get_bool("missing"));
+    }
+
+    #[test]
+    fn equals_syntax() {
+        let cli = parse(&["run", "--seed=42"]);
+        assert_eq!(cli.get_num::<u64>("seed", 0).unwrap(), 42);
+    }
+
+    #[test]
+    fn numeric_defaults_and_errors() {
+        let cli = parse(&["run", "--res", "abc"]);
+        assert_eq!(cli.get_num::<usize>("images", 5).unwrap(), 5);
+        assert!(cli.get_num::<usize>("res", 1).is_err());
+    }
+
+    #[test]
+    fn unknown_flags_caught() {
+        let cli = parse(&["run", "--tyop", "1"]);
+        assert!(cli.check_known(&["res"]).is_err());
+        assert!(cli.check_known(&["tyop"]).is_ok());
+    }
+
+    #[test]
+    fn boolean_flag_at_end() {
+        let cli = parse(&["run", "--verbose"]);
+        assert!(cli.get_bool("verbose"));
+    }
+}

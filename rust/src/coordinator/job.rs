@@ -1,0 +1,75 @@
+//! Per-layer job descriptors: which conv layer, which tensors, which PE
+//! configuration — the unit of work the pipeline hands to the simulator.
+
+use crate::model::init::LayerParams;
+use crate::model::LayerKind;
+use crate::tensor::conv::ConvSpec;
+use crate::tensor::Tensor;
+
+/// One conv layer ready to simulate.
+#[derive(Debug)]
+pub struct ConvJob<'a> {
+    pub name: &'a str,
+    pub input: &'a Tensor,
+    pub params: &'a LayerParams,
+    pub spec: ConvSpec,
+}
+
+impl<'a> ConvJob<'a> {
+    /// Build a job from a layer descriptor, checking geometry.
+    pub fn new(
+        name: &'a str,
+        kind: &LayerKind,
+        input: &'a Tensor,
+        params: &'a LayerParams,
+    ) -> ConvJob<'a> {
+        let LayerKind::Conv { c_in, c_out, k, spec } = kind else {
+            panic!("ConvJob on non-conv layer {name}");
+        };
+        assert_eq!(input.shape()[0], *c_in, "{name}: input channels");
+        assert_eq!(params.weight.shape(), &[*c_out, *c_in, *k, *k], "{name}: weight shape");
+        assert_eq!(params.bias.len(), *c_out, "{name}: bias length");
+        ConvJob {
+            name,
+            input,
+            params,
+            spec: *spec,
+        }
+    }
+
+    /// Dense MACs of this job.
+    pub fn macs(&self) -> u64 {
+        let [_, h, w] = [self.input.shape()[0], self.input.shape()[1], self.input.shape()[2]];
+        let ws = self.params.weight.shape();
+        let ho = crate::tensor::conv::out_dim(h, ws[2], self.spec) as u64;
+        let wo = crate::tensor::conv::out_dim(w, ws[3], self.spec) as u64;
+        ws[0] as u64 * ws[1] as u64 * ws[2] as u64 * ws[3] as u64 * ho * wo
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::init::synthetic_params;
+    use crate::model::vgg16::tiny_vgg;
+
+    #[test]
+    fn job_checks_geometry() {
+        let net = tiny_vgg(8);
+        let params = synthetic_params(&net, 1, 0.0);
+        let input = Tensor::zeros(&[3, 8, 8]);
+        let layer = &net.layers[0];
+        let job = ConvJob::new(&layer.name, &layer.kind, &input, &params["c1_1"]);
+        assert_eq!(job.macs(), 8 * 3 * 9 * 64);
+    }
+
+    #[test]
+    #[should_panic(expected = "input channels")]
+    fn job_rejects_wrong_channels() {
+        let net = tiny_vgg(8);
+        let params = synthetic_params(&net, 1, 0.0);
+        let input = Tensor::zeros(&[4, 8, 8]);
+        let layer = &net.layers[0];
+        let _ = ConvJob::new(&layer.name, &layer.kind, &input, &params["c1_1"]);
+    }
+}

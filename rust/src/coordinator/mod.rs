@@ -1,0 +1,16 @@
+//! The run coordinator: drives whole networks through the accelerator
+//! model, propagating *real* activations layer to layer (conv → ReLU/zero
+//! detection → pool → next layer) exactly as the paper's system does, and
+//! collecting the per-layer records every experiment consumes.
+//!
+//! The functional forward pass runs on one of three interchangeable
+//! backends (cross-checked in tests): the golden scalar conv, the
+//! multithreaded im2col conv, or the PJRT runtime executing the
+//! JAX-lowered artifacts.
+
+pub mod job;
+pub mod pipeline;
+pub mod report;
+
+pub use pipeline::{Coordinator, FunctionalBackend, NetworkReport, RunOptions};
+pub use report::LayerRecord;

@@ -1,0 +1,112 @@
+//! Per-layer and per-network records — the data behind every figure.
+
+use crate::baselines::SpeedupSeries;
+use crate::sim::stats::SimStats;
+use crate::sparse::encode::DensityReport;
+use crate::util::json::Json;
+
+/// Everything measured for one conv layer in one run.
+#[derive(Debug, Clone)]
+pub struct LayerRecord {
+    pub name: String,
+    /// Input/weight/work densities at both granularities.
+    pub density: DensityReport,
+    /// Vector-sparse flow stats (the design under test).
+    pub sparse: SimStats,
+    /// Dense-flow cycle count (speedup denominator).
+    pub dense_cycles: u64,
+    /// Speedups: ours vs the ideal machines.
+    pub speedups: SpeedupSeries,
+    /// Post-ReLU output density (what the next layer sees).
+    pub output_density_elem: f64,
+}
+
+impl LayerRecord {
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("name", self.name.as_str())
+            .set("input_density_elem", self.density.input_elem)
+            .set("weight_density_elem", self.density.weight_elem)
+            .set("work_density_elem", self.density.work_elem)
+            .set("input_density_vec", self.density.input_vec)
+            .set("weight_density_vec", self.density.weight_vec)
+            .set("work_density_vec", self.density.work_vec)
+            .set("cycles", self.sparse.cycles)
+            .set("dense_cycles", self.dense_cycles)
+            .set("speedup", self.speedups.ours)
+            .set("speedup_ideal_vector", self.speedups.ideal_vector)
+            .set("speedup_ideal_fine", self.speedups.ideal_fine)
+            .set("utilization", self.sparse.utilization())
+            .set("output_density_elem", self.output_density_elem)
+            .set("stats", self.sparse.to_json());
+        o
+    }
+}
+
+/// Render an ASCII table of layer records with selected columns.
+pub fn ascii_table(rows: &[(String, Vec<(String, f64)>)]) -> String {
+    if rows.is_empty() {
+        return String::new();
+    }
+    let headers: Vec<&str> = std::iter::once("layer")
+        .chain(rows[0].1.iter().map(|(h, _)| h.as_str()))
+        .collect();
+    let mut widths: Vec<usize> = headers.iter().map(|h| h.len()).collect();
+    let mut body: Vec<Vec<String>> = Vec::new();
+    for (name, cols) in rows {
+        let mut line = vec![name.clone()];
+        for (_, v) in cols {
+            line.push(format!("{v:.3}"));
+        }
+        for (i, cell) in line.iter().enumerate() {
+            widths[i] = widths[i].max(cell.len());
+        }
+        body.push(line);
+    }
+    let render_row = |cells: &[String]| {
+        cells
+            .iter()
+            .enumerate()
+            .map(|(i, c)| format!("{c:>w$}", w = widths[i]))
+            .collect::<Vec<_>>()
+            .join(" | ")
+    };
+    let header_line = render_row(&headers.iter().map(|s| s.to_string()).collect::<Vec<_>>());
+    let sep = widths
+        .iter()
+        .map(|w| "-".repeat(*w))
+        .collect::<Vec<_>>()
+        .join("-+-");
+    let mut out = format!("{header_line}\n{sep}\n");
+    for line in body {
+        out.push_str(&render_row(&line));
+        out.push('\n');
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ascii_table_alignment() {
+        let rows = vec![
+            ("conv1_1".to_string(), vec![("speedup".to_string(), 1.871)]),
+            ("c2".to_string(), vec![("speedup".to_string(), 12.0)]),
+        ];
+        let t = ascii_table(&rows);
+        assert!(t.contains("layer"));
+        assert!(t.contains("speedup"));
+        assert!(t.contains("1.871"));
+        assert!(t.contains("12.000"));
+        // All lines equal width.
+        let lens: Vec<usize> = t.lines().map(|l| l.len()).collect();
+        assert!(lens.windows(2).all(|w| w[0] == w[1]), "{lens:?}");
+    }
+
+    #[test]
+    fn empty_table_is_empty() {
+        assert_eq!(ascii_table(&[]), "");
+    }
+}

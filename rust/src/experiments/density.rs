@@ -1,0 +1,202 @@
+//! `fig9` / `fig10` / `fig11`: per-layer nonzero density of input
+//! activations, weights, and surviving work — at element granularity
+//! (Fig 9) and vector granularity for R=14 (Fig 10) and R=7 (Fig 11).
+
+use super::workload::{avg_layer_metric, run_config};
+use super::{ExpContext, ExpOutput};
+use crate::coordinator::report::ascii_table;
+use crate::coordinator::LayerRecord;
+use crate::sim::config::SimConfig;
+use crate::util::json::Json;
+use anyhow::Result;
+
+fn density_output(
+    id: &str,
+    title: &str,
+    ctx: &ExpContext,
+    cfg: SimConfig,
+    input_f: impl Fn(&LayerRecord) -> f64,
+    weight_f: impl Fn(&LayerRecord) -> f64,
+    work_f: impl Fn(&LayerRecord) -> f64,
+) -> Result<ExpOutput> {
+    let reports = run_config(ctx, cfg)?;
+    let input = avg_layer_metric(&reports, input_f);
+    let weight = avg_layer_metric(&reports, weight_f);
+    let work = avg_layer_metric(&reports, work_f);
+
+    let rows: Vec<(String, Vec<(String, f64)>)> = input
+        .iter()
+        .zip(&weight)
+        .zip(&work)
+        .map(|((i, w), k)| {
+            (
+                i.0.clone(),
+                vec![
+                    ("input".to_string(), i.1),
+                    ("weight".to_string(), w.1),
+                    ("work".to_string(), k.1),
+                ],
+            )
+        })
+        .collect();
+
+    let mut json = Json::obj();
+    json.set("config", cfg.pe.label())
+        .set("title", title)
+        .set(
+            "layers",
+            Json::Arr(
+                rows.iter()
+                    .map(|(name, cols)| {
+                        let mut o = Json::obj();
+                        o.set("name", name.as_str());
+                        for (k, v) in cols {
+                            o.set(k, *v);
+                        }
+                        o
+                    })
+                    .collect(),
+            ),
+        );
+    let text = format!("{title}\n{}", ascii_table(&rows));
+    Ok(ExpOutput {
+        id: id.to_string(),
+        json,
+        text,
+    })
+}
+
+/// Fig 9: element-granularity densities (the "fine grained" view).
+pub fn run_fig9(ctx: &ExpContext) -> Result<ExpOutput> {
+    density_output(
+        "fig9",
+        "Fig 9 — density ratio, fine-grained granularity",
+        ctx,
+        SimConfig::paper_4_14_3(),
+        |l| l.density.input_elem,
+        |l| l.density.weight_elem,
+        |l| l.density.work_elem,
+    )
+}
+
+/// Fig 10: vector-granularity densities at R=14 (`[4,14,3]`).
+pub fn run_fig10(ctx: &ExpContext) -> Result<ExpOutput> {
+    density_output(
+        "fig10",
+        "Fig 10 — density ratio, vector granularity, [4,14,3] (R=14)",
+        ctx,
+        SimConfig::paper_4_14_3(),
+        |l| l.density.input_vec,
+        |l| l.density.weight_vec,
+        |l| l.density.work_vec,
+    )
+}
+
+/// Fig 11: vector-granularity densities at R=7 (`[8,7,3]`).
+pub fn run_fig11(ctx: &ExpContext) -> Result<ExpOutput> {
+    density_output(
+        "fig11",
+        "Fig 11 — density ratio, vector granularity, [8,7,3] (R=7)",
+        ctx,
+        SimConfig::paper_8_7_3(),
+        |l| l.density.input_vec,
+        |l| l.density.weight_vec,
+        |l| l.density.work_vec,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_ctx() -> ExpContext {
+        ExpContext {
+            res: 32,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn fig9_vs_fig10_granularity_ordering() {
+        // "As expected, the fine grained sparsity has lower density than
+        // that in the vector sparsity case" (§IV): per layer,
+        // elem densities <= vec densities.
+        let ctx = tiny_ctx();
+        let f9 = run_fig9(&ctx).unwrap();
+        let f10 = run_fig10(&ctx).unwrap();
+        let l9 = f9.json.get("layers").unwrap().as_arr().unwrap();
+        let l10 = f10.json.get("layers").unwrap().as_arr().unwrap();
+        assert_eq!(l9.len(), 13);
+        for (a, b) in l9.iter().zip(l10) {
+            let (ia, ib) = (
+                a.get("input").unwrap().as_f64().unwrap(),
+                b.get("input").unwrap().as_f64().unwrap(),
+            );
+            let (wa, wb) = (
+                a.get("weight").unwrap().as_f64().unwrap(),
+                b.get("weight").unwrap().as_f64().unwrap(),
+            );
+            assert!(ia <= ib + 1e-9, "input {ia} > {ib}");
+            assert!(wa <= wb + 1e-9, "weight {wa} > {wb}");
+        }
+    }
+
+    #[test]
+    fn smaller_vectors_never_increase_work_on_aligned_heights() {
+        // R=7 fragments less than R=14 → more skippable zero vectors →
+        // lower surviving *work* fraction ("Small zero vector enables more
+        // zero skipping"). This monotonicity requires aligned strips (H a
+        // multiple of 14 — true for every real VGG layer at 224, which is
+        // exactly why the paper picked R ∈ {14, 7}); at the tiny test
+        // resolution VGG heights are ragged, so we check the invariant on
+        // aligned synthetic layers directly.
+        use crate::sparse::encode::layer_report;
+        use crate::tensor::conv::ConvSpec;
+        use crate::tensor::Tensor;
+        use crate::util::rng::Pcg32;
+        let mut rng = Pcg32::seeded(42);
+        for _ in 0..10 {
+            let c = rng.range(1, 5);
+            let k = rng.range(1, 5);
+            let h = 28;
+            let w = rng.range(4, 20);
+            let n = c * h * w;
+            let input = Tensor::from_vec(
+                &[c, h, w],
+                (0..n)
+                    .map(|_| if rng.bernoulli(0.35) { rng.normal() } else { 0.0 })
+                    .collect(),
+            );
+            let wn = k * c * 9;
+            let weight = Tensor::from_vec(
+                &[k, c, 3, 3],
+                (0..wn)
+                    .map(|_| if rng.bernoulli(0.3) { rng.normal() } else { 0.0 })
+                    .collect(),
+            );
+            let r14 = layer_report(&input, &weight, ConvSpec::default(), 14);
+            let r7 = layer_report(&input, &weight, ConvSpec::default(), 7);
+            assert!(
+                r7.work_vec <= r14.work_vec + 1e-12,
+                "R=7 work {} > R=14 work {}",
+                r7.work_vec,
+                r14.work_vec
+            );
+        }
+    }
+
+    #[test]
+    fn fig10_fig11_structure() {
+        let ctx = tiny_ctx();
+        for out in [run_fig10(&ctx).unwrap(), run_fig11(&ctx).unwrap()] {
+            let layers = out.json.get("layers").unwrap().as_arr().unwrap();
+            assert_eq!(layers.len(), 13);
+            for l in layers {
+                for key in ["input", "weight", "work"] {
+                    let v = l.get(key).unwrap().as_f64().unwrap();
+                    assert!((0.0..=1.0).contains(&v), "{key} = {v}");
+                }
+            }
+        }
+    }
+}

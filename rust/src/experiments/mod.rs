@@ -1,0 +1,107 @@
+//! Experiment registry: one entry per table/figure of the paper's
+//! evaluation (DESIGN.md §4 maps each to its modules).
+//!
+//! | id        | paper artifact                                     |
+//! |-----------|----------------------------------------------------|
+//! | `table1`  | Table I timing diagram + Fig 8 dataflow (5x5 example) |
+//! | `fig9`    | per-layer density, element granularity             |
+//! | `fig10`   | per-layer density, vector granularity, R=14        |
+//! | `fig11`   | per-layer density, vector granularity, R=7         |
+//! | `fig12`   | per-layer + overall speedup, `[4,14,3]`            |
+//! | `fig13`   | per-layer + overall speedup, `[8,7,3]`             |
+//! | `headline`| 1.871x/1.93x + 92%/85% + 46.6%/47.1% summary       |
+//! | `scnn`    | §IV comparison against the SCNN-like model         |
+//!
+//! Every experiment returns a [`Json`] document and a human-readable text
+//! block; the CLI writes both under `reports/`.
+
+pub mod density;
+pub mod speedup;
+pub mod table1;
+pub mod workload;
+
+use crate::util::json::Json;
+use anyhow::{bail, Result};
+
+/// One rendered experiment.
+#[derive(Debug)]
+pub struct ExpOutput {
+    pub id: String,
+    pub json: Json,
+    pub text: String,
+}
+
+/// Experiment-wide knobs (see CLI `--help`).
+#[derive(Debug, Clone)]
+pub struct ExpContext {
+    /// VGG input resolution (224 = paper; smaller = faster smoke runs).
+    pub res: usize,
+    /// PRNG seed for synthetic weights/images.
+    pub seed: u64,
+    /// Number of synthetic images to average densities/speedups over.
+    pub images: usize,
+    /// Activation-density knob: the calibrated per-layer density profile
+    /// is scaled by `1 + bias_shift` (0.0 = paper-like; DESIGN.md §6).
+    pub bias_shift: f32,
+    /// Threads for the functional forward pass.
+    pub threads: usize,
+    /// Artifacts directory for PJRT-backed runs (`None` = rust conv).
+    pub artifacts_dir: Option<String>,
+}
+
+impl Default for ExpContext {
+    fn default() -> Self {
+        ExpContext {
+            res: 224,
+            seed: 20190526, // ISCAS 2019 opening day
+            images: 1,
+            bias_shift: 0.0,
+            threads: std::thread::available_parallelism().map_or(4, |n| n.get()),
+            artifacts_dir: None,
+        }
+    }
+}
+
+/// All experiment ids, in paper order.
+pub fn list() -> &'static [&'static str] {
+    &[
+        "table1", "fig9", "fig10", "fig11", "fig12", "fig13", "headline", "scnn",
+    ]
+}
+
+/// Run one experiment by id.
+pub fn run(id: &str, ctx: &ExpContext) -> Result<ExpOutput> {
+    match id {
+        "table1" => table1::run(ctx),
+        "fig9" => density::run_fig9(ctx),
+        "fig10" => density::run_fig10(ctx),
+        "fig11" => density::run_fig11(ctx),
+        "fig12" => speedup::run_fig(ctx, true),
+        "fig13" => speedup::run_fig(ctx, false),
+        "headline" => speedup::run_headline(ctx),
+        "scnn" => speedup::run_scnn(ctx),
+        _ => bail!("unknown experiment '{id}'; known: {:?}", list()),
+    }
+}
+
+/// Run every experiment, returning them in order.
+pub fn run_all(ctx: &ExpContext) -> Result<Vec<ExpOutput>> {
+    list().iter().map(|id| run(id, ctx)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unknown_id_is_error() {
+        let err = run("fig99", &ExpContext::default()).unwrap_err();
+        assert!(err.to_string().contains("unknown experiment"));
+    }
+
+    #[test]
+    fn list_covers_every_paper_artifact() {
+        // 1 table + 5 figures + 2 derived comparisons.
+        assert_eq!(list().len(), 8);
+    }
+}

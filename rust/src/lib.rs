@@ -1,0 +1,35 @@
+//! # vscnn — VSCNN: CNN Accelerator With Vector Sparsity (ISCAS 2019)
+//!
+//! A full-system reproduction of Chang & Chang, "VSCNN: Convolution Neural
+//! Network Accelerator with Vector Sparsity" (DOI 10.1109/ISCAS.2019.8702471)
+//! as a three-layer Rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — the paper's system: a cycle-level simulator of the
+//!   VSCNN PE array (1-D broadcast input/weight vectors, diagonal partial-sum
+//!   accumulation, zero-vector skipping with an index system), SRAM/DRAM
+//!   models, the dense/sparse schedulers, pruning, baselines, and the
+//!   coordinator that runs whole networks and regenerates every table and
+//!   figure of the paper's evaluation.
+//! * **L2 (python/compile/model.py)** — the VGG-16 compute graph in JAX,
+//!   AOT-lowered to HLO text artifacts loaded by [`runtime`].
+//! * **L1 (python/compile/kernels/)** — the VSCNN column dataflow as a Pallas
+//!   kernel, validated against a pure-jnp oracle.
+//!
+//! Entry points: [`coordinator::Coordinator`] to simulate a network,
+//! [`experiments`] for the paper's tables/figures, the `vscnn` binary for the
+//! CLI, and `examples/` for runnable scenarios.
+
+pub mod baselines;
+pub mod cli;
+pub mod coordinator;
+pub mod experiments;
+pub mod model;
+pub mod pruning;
+pub mod runtime;
+pub mod sim;
+pub mod sparse;
+pub mod tensor;
+pub mod util;
+
+/// Crate version (mirrors Cargo.toml).
+pub const VERSION: &str = env!("CARGO_PKG_VERSION");

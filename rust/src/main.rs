@@ -1,0 +1,178 @@
+//! `vscnn` — leader binary: runs the paper's experiments, one-off
+//! simulations, and diagnostics from the command line.
+//!
+//! ```text
+//! vscnn exp <id|all> [--res N] [--images N] [--seed S] [--pjrt DIR]
+//!                    [--out DIR] [--bias-shift X] [--threads N]
+//! vscnn simulate     [--config 4,14,3|8,7,3] [--res N] [--density D] ...
+//! vscnn runtime-info [--artifacts DIR]
+//! vscnn list
+//! ```
+
+use anyhow::{bail, Context, Result};
+use vscnn::cli::Cli;
+use vscnn::experiments::{self, ExpContext};
+use vscnn::log_info;
+
+fn main() {
+    vscnn::util::logging::init_from_env();
+    let cli = match Cli::parse(std::env::args().skip(1)) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = dispatch(&cli) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn dispatch(cli: &Cli) -> Result<()> {
+    match cli.command.as_str() {
+        "" | "help" | "--help" => {
+            print_help();
+            Ok(())
+        }
+        "list" => {
+            for id in experiments::list() {
+                println!("{id}");
+            }
+            Ok(())
+        }
+        "exp" => cmd_exp(cli),
+        "simulate" => cmd_simulate(cli),
+        "runtime-info" => cmd_runtime_info(cli),
+        other => bail!("unknown command '{other}' (try `vscnn help`)"),
+    }
+}
+
+fn print_help() {
+    println!(
+        "vscnn {} — VSCNN accelerator reproduction (ISCAS 2019)\n\n\
+         commands:\n\
+         \x20 exp <id|all>    run a paper experiment ({})\n\
+         \x20 simulate        one-off simulation of a pruned VGG-16\n\
+         \x20 runtime-info    check the PJRT runtime + artifacts\n\
+         \x20 list            list experiment ids\n\n\
+         common flags: --res N (default 224) --images N --seed S\n\
+         \x20 --bias-shift X --threads N --pjrt DIR --out DIR",
+        vscnn::VERSION,
+        experiments::list().join(", ")
+    );
+}
+
+fn ctx_from(cli: &Cli) -> Result<ExpContext> {
+    let default = ExpContext::default();
+    Ok(ExpContext {
+        res: cli.get_num("res", default.res)?,
+        seed: cli.get_num("seed", default.seed)?,
+        images: cli.get_num("images", default.images)?,
+        bias_shift: cli.get_num("bias-shift", default.bias_shift)?,
+        threads: cli.get_num("threads", default.threads)?,
+        artifacts_dir: cli.get("pjrt").map(|s| s.to_string()),
+    })
+}
+
+fn cmd_exp(cli: &Cli) -> Result<()> {
+    cli.check_known(&[
+        "res", "seed", "images", "bias-shift", "threads", "pjrt", "out",
+    ])?;
+    let Some(id) = cli.positional.first() else {
+        bail!("usage: vscnn exp <id|all>; ids: {:?}", experiments::list());
+    };
+    let ctx = ctx_from(cli)?;
+    let out_dir = cli.get("out").unwrap_or("reports");
+    std::fs::create_dir_all(out_dir).with_context(|| format!("creating {out_dir}"))?;
+
+    let outputs = if id == "all" {
+        experiments::run_all(&ctx)?
+    } else {
+        vec![experiments::run(id, &ctx)?]
+    };
+    for out in outputs {
+        let json_path = format!("{out_dir}/{}.json", out.id);
+        let text_path = format!("{out_dir}/{}.txt", out.id);
+        std::fs::write(&json_path, out.json.pretty())?;
+        std::fs::write(&text_path, &out.text)?;
+        println!("== {} ==\n{}", out.id, out.text);
+        log_info!("wrote {json_path} and {text_path}");
+    }
+    Ok(())
+}
+
+fn cmd_simulate(cli: &Cli) -> Result<()> {
+    cli.check_known(&[
+        "res", "seed", "images", "bias-shift", "threads", "pjrt", "config", "density",
+    ])?;
+    let ctx = ctx_from(cli)?;
+    let cfg = match cli.get("config").unwrap_or("8,7,3") {
+        "4,14,3" => vscnn::sim::config::SimConfig::paper_4_14_3(),
+        "8,7,3" => vscnn::sim::config::SimConfig::paper_8_7_3(),
+        other => {
+            let parts: Vec<usize> = other
+                .split(',')
+                .map(|p| p.parse().context("config must be B,R,C"))
+                .collect::<Result<_>>()?;
+            anyhow::ensure!(parts.len() == 3, "config must be B,R,C");
+            let mut c = vscnn::sim::config::SimConfig::paper_4_14_3();
+            c.pe.arrays = parts[0];
+            c.pe.rows = parts[1];
+            c.pe.cols = parts[2];
+            c
+        }
+    };
+
+    let (coord, images, achieved) = if let Some(d) = cli.get("density") {
+        let density: f64 = d.parse().context("--density")?;
+        let net = vscnn::model::vgg16::vgg16_at(ctx.res);
+        let mut params =
+            vscnn::model::init::synthetic_params(&net, ctx.seed, ctx.bias_shift);
+        let sched = vscnn::pruning::sensitivity::flat_schedule(&net, density);
+        let achieved = vscnn::pruning::prune_network_vectors(&mut params, &sched);
+        let images =
+            vscnn::model::init::synthetic_batch(net.input_shape, ctx.images, ctx.seed ^ 0xDEAD);
+        (
+            vscnn::coordinator::Coordinator::new(net, params),
+            images,
+            achieved,
+        )
+    } else {
+        vscnn::experiments::workload::prepare(&ctx)
+    };
+    log_info!("weight density after pruning: {achieved:.3}");
+
+    let opts = vscnn::experiments::workload::options(&ctx, cfg)?;
+    for (i, img) in images.iter().enumerate() {
+        let t0 = std::time::Instant::now();
+        let report = coord.run(img, &opts)?;
+        let series = report.overall_series();
+        println!(
+            "image {i}: {} cycles {} dense {} speedup {:.3}x (ideal vec {:.3}x fine {:.3}x) wall {:?}",
+            cfg.pe.label(),
+            report.totals.cycles,
+            report.total_dense_cycles,
+            series.ours,
+            series.ideal_vector,
+            series.ideal_fine,
+            t0.elapsed()
+        );
+    }
+    Ok(())
+}
+
+fn cmd_runtime_info(cli: &Cli) -> Result<()> {
+    cli.check_known(&["artifacts"])?;
+    let dir = cli.get("artifacts").unwrap_or("artifacts");
+    let rt = vscnn::runtime::Runtime::new(dir)?;
+    println!("platform: {}", rt.platform());
+    println!("artifacts ({}):", rt.manifest().artifacts.len());
+    for a in &rt.manifest().artifacts {
+        println!(
+            "  {:30} [C={},H={},W={}] -> K={}",
+            a.name, a.c_in, a.h, a.w, a.c_out
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,181 @@
+//! Synthetic parameter and input generation.
+//!
+//! The paper evaluates on a VGG-16 checkpoint pretrained on ImageNet —
+//! unavailable here (DESIGN.md §2). The speedup/density results depend only
+//! on the *sparsity statistics*, so we substitute weights drawn from
+//! per-layer Gaussians (He-style fan-in scaling, like the real training
+//! would produce) and inputs that mimic natural-image statistics; pruning
+//! (see [`crate::pruning`]) then imposes the paper's density profile.
+
+use super::Network;
+use crate::tensor::Tensor;
+use crate::util::rng::Pcg32;
+use std::collections::BTreeMap;
+
+/// Learned parameters of one conv/linear layer.
+#[derive(Debug, Clone)]
+pub struct LayerParams {
+    /// `[K, C, KH, KW]` for conv, `[D_out, D_in]` for linear.
+    pub weight: Tensor,
+    /// `[K]` / `[D_out]`.
+    pub bias: Vec<f32>,
+}
+
+/// All parameters of a network, keyed by layer name (BTreeMap: stable
+/// iteration order for deterministic reports).
+pub type Params = BTreeMap<String, LayerParams>;
+
+/// Generate He-initialized synthetic parameters for every parametric layer.
+///
+/// `bias_shift` moves every bias by a constant; negative values make the
+/// post-ReLU activations sparser (the calibration knob of DESIGN.md §6).
+pub fn synthetic_params(net: &Network, seed: u64, bias_shift: f32) -> Params {
+    let mut params = Params::new();
+    for (li, layer) in net.layers.iter().enumerate() {
+        let Some(wshape) = super::shapes::weight_shape(&layer.kind) else {
+            continue;
+        };
+        // Stream = layer index so adding layers never reshuffles others.
+        let mut rng = Pcg32::new(seed, li as u64 + 1);
+        let fan_in: usize = wshape[1..].iter().product();
+        let std = (2.0 / fan_in as f32).sqrt();
+        let n: usize = wshape.iter().product();
+        let data: Vec<f32> = (0..n).map(|_| rng.normal() * std).collect();
+        let k_out = wshape[0];
+        let bias = (0..k_out)
+            .map(|_| rng.normal() * 0.01 + bias_shift)
+            .collect();
+        params.insert(
+            layer.name.clone(),
+            LayerParams {
+                weight: Tensor::from_vec(&wshape, data),
+                bias,
+            },
+        );
+    }
+    params
+}
+
+/// Synthetic "natural image": a mixture of smooth 2-D gradients and
+/// band-limited noise, normalized to ImageNet-like statistics. Produces the
+/// spatially-correlated structure that makes post-ReLU activation sparsity
+/// spatially clustered (which is what vector sparsity exploits).
+pub fn synthetic_image(shape: [usize; 3], seed: u64) -> Tensor {
+    let [c, h, w] = shape;
+    let mut rng = Pcg32::new(seed, 99);
+    let mut t = Tensor::zeros(&[c, h, w]);
+    for ci in 0..c {
+        // Low- and mid-frequency components: random sinusoids across a
+        // spread of spatial frequencies. The mid-frequency band matters:
+        // all-smooth images make post-ReLU feature maps zero out in large
+        // blobs, which over-states vector sparsity relative to real
+        // ImageNet activations (EXPERIMENTS.md §Calibration).
+        let n_waves = 8;
+        let waves: Vec<(f32, f32, f32, f32)> = (0..n_waves)
+            .map(|k| {
+                let fmax = if k < 4 { 3.0 } else { 12.0 };
+                (
+                    rng.f32_range(0.5, fmax),             // fx (cycles over image)
+                    rng.f32_range(0.5, fmax),             // fy
+                    rng.f32_range(0.0, std::f32::consts::TAU), // phase
+                    rng.f32_range(0.2, if k < 4 { 1.0 } else { 0.5 }), // amplitude
+                )
+            })
+            .collect();
+        for i in 0..h {
+            for j in 0..w {
+                let (x, y) = (j as f32 / w as f32, i as f32 / h as f32);
+                let mut v = 0.0;
+                for &(fx, fy, ph, amp) in &waves {
+                    v += amp * (std::f32::consts::TAU * (fx * x + fy * y) + ph).sin();
+                }
+                // High-frequency texture.
+                v += 0.6 * rng.normal();
+                *t.at3_mut(ci, i, j) = v;
+            }
+        }
+    }
+    // Normalize to zero mean, unit std per image (ImageNet preprocessing).
+    let n = t.len() as f32;
+    let mean = t.data().iter().sum::<f32>() / n;
+    let var = t.data().iter().map(|x| (x - mean) * (x - mean)).sum::<f32>() / n;
+    let std = var.sqrt().max(1e-6);
+    for x in t.data_mut() {
+        *x = (*x - mean) / std;
+    }
+    t
+}
+
+/// A batch of distinct synthetic images.
+pub fn synthetic_batch(shape: [usize; 3], count: usize, seed: u64) -> Vec<Tensor> {
+    (0..count)
+        .map(|i| synthetic_image(shape, seed.wrapping_add(i as u64 * 7919)))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::vgg16::tiny_vgg;
+
+    #[test]
+    fn params_cover_all_conv_layers() {
+        let net = tiny_vgg(8);
+        let params = synthetic_params(&net, 1, 0.0);
+        assert_eq!(params.len(), 4);
+        let p = &params["c1_1"];
+        assert_eq!(p.weight.shape(), &[8, 3, 3, 3]);
+        assert_eq!(p.bias.len(), 8);
+    }
+
+    #[test]
+    fn params_deterministic_and_seed_sensitive() {
+        let net = tiny_vgg(8);
+        let a = synthetic_params(&net, 5, 0.0);
+        let b = synthetic_params(&net, 5, 0.0);
+        let c = synthetic_params(&net, 6, 0.0);
+        assert_eq!(a["c1_1"].weight.data(), b["c1_1"].weight.data());
+        assert_ne!(a["c1_1"].weight.data(), c["c1_1"].weight.data());
+    }
+
+    #[test]
+    fn he_scaling_shrinks_with_fan_in() {
+        let net = tiny_vgg(8);
+        let params = synthetic_params(&net, 2, 0.0);
+        let std = |t: &Tensor| {
+            let m = t.data().iter().sum::<f32>() / t.len() as f32;
+            (t.data().iter().map(|x| (x - m) * (x - m)).sum::<f32>() / t.len() as f32).sqrt()
+        };
+        // fan_in c1_1 = 27, c2_2 = 144 → bigger fan-in, smaller std.
+        assert!(std(&params["c1_1"].weight) > std(&params["c2_2"].weight));
+    }
+
+    #[test]
+    fn bias_shift_moves_biases() {
+        let net = tiny_vgg(8);
+        let p = synthetic_params(&net, 3, -0.5);
+        let mean_bias: f32 =
+            p["c1_1"].bias.iter().sum::<f32>() / p["c1_1"].bias.len() as f32;
+        assert!((mean_bias + 0.5).abs() < 0.05, "mean bias {mean_bias}");
+    }
+
+    #[test]
+    fn synthetic_image_normalized() {
+        let img = synthetic_image([3, 16, 16], 42);
+        let n = img.len() as f32;
+        let mean = img.data().iter().sum::<f32>() / n;
+        let var = img.data().iter().map(|x| (x - mean) * (x - mean)).sum::<f32>() / n;
+        assert!(mean.abs() < 1e-3);
+        assert!((var - 1.0).abs() < 1e-2);
+        // Natural images are dense.
+        assert!(img.density() > 0.99);
+    }
+
+    #[test]
+    fn batch_images_differ() {
+        let batch = synthetic_batch([1, 8, 8], 3, 7);
+        assert_eq!(batch.len(), 3);
+        assert_ne!(batch[0].data(), batch[1].data());
+        assert_ne!(batch[1].data(), batch[2].data());
+    }
+}

@@ -1,0 +1,125 @@
+//! Network model substrate: layer descriptors, the VGG-16 graph the paper
+//! evaluates, shape arithmetic, and synthetic parameter generation
+//! (substituting the unavailable ImageNet-pretrained checkpoint — see
+//! DESIGN.md §2).
+
+pub mod calibrate;
+pub mod init;
+pub mod shapes;
+pub mod vgg16;
+pub mod zoo;
+
+use crate::tensor::conv::ConvSpec;
+
+/// One layer of a feed-forward CNN. Only the layer kinds VGG-16 uses are
+/// modelled; the simulator accelerates [`LayerKind::Conv`] layers and the
+/// post-processing unit handles ReLU/pooling.
+#[derive(Debug, Clone, PartialEq)]
+pub enum LayerKind {
+    /// 2-D convolution with square `k x k` kernels.
+    Conv {
+        c_in: usize,
+        c_out: usize,
+        k: usize,
+        spec: ConvSpec,
+    },
+    /// In-place ReLU (fused into the conv's post-processing on hardware).
+    Relu,
+    /// 2x2 stride-2 max pooling.
+    MaxPool2,
+    /// Fully connected (`in -> out`); runs as a 1x1 conv on the array.
+    Linear { d_in: usize, d_out: usize },
+}
+
+/// A named layer with its position in the network.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Layer {
+    pub name: String,
+    pub kind: LayerKind,
+}
+
+/// A sequential network plus its input geometry.
+#[derive(Debug, Clone)]
+pub struct Network {
+    pub name: String,
+    /// Input shape `[C, H, W]`.
+    pub input_shape: [usize; 3],
+    pub layers: Vec<Layer>,
+}
+
+impl Network {
+    /// Names of all conv layers in order (the layers the figures index).
+    pub fn conv_layer_names(&self) -> Vec<&str> {
+        self.layers
+            .iter()
+            .filter(|l| matches!(l.kind, LayerKind::Conv { .. }))
+            .map(|l| l.name.as_str())
+            .collect()
+    }
+
+    /// Activation shape `[C, H, W]` entering each layer, by index.
+    pub fn activation_shapes(&self) -> Vec<[usize; 3]> {
+        let mut shapes = Vec::with_capacity(self.layers.len() + 1);
+        let mut cur = self.input_shape;
+        shapes.push(cur);
+        for layer in &self.layers {
+            cur = shapes::layer_output_shape(cur, &layer.kind);
+            shapes.push(cur);
+        }
+        shapes
+    }
+
+    /// Total dense MACs over all conv layers (for roofline numbers).
+    pub fn total_conv_macs(&self) -> u64 {
+        let shapes = self.activation_shapes();
+        self.layers
+            .iter()
+            .enumerate()
+            .map(|(i, l)| match l.kind {
+                LayerKind::Conv { c_in, c_out, k, spec } => {
+                    let [_, h, w] = shapes[i];
+                    let ho = crate::tensor::conv::out_dim(h, k, spec) as u64;
+                    let wo = crate::tensor::conv::out_dim(w, k, spec) as u64;
+                    c_in as u64 * c_out as u64 * (k * k) as u64 * ho * wo
+                }
+                _ => 0,
+            })
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes_propagate_through_stack() {
+        let net = Network {
+            name: "tiny".into(),
+            input_shape: [3, 8, 8],
+            layers: vec![
+                Layer {
+                    name: "conv1".into(),
+                    kind: LayerKind::Conv {
+                        c_in: 3,
+                        c_out: 4,
+                        k: 3,
+                        spec: ConvSpec::default(),
+                    },
+                },
+                Layer {
+                    name: "relu1".into(),
+                    kind: LayerKind::Relu,
+                },
+                Layer {
+                    name: "pool1".into(),
+                    kind: LayerKind::MaxPool2,
+                },
+            ],
+        };
+        let shapes = net.activation_shapes();
+        assert_eq!(shapes, vec![[3, 8, 8], [4, 8, 8], [4, 8, 8], [4, 4, 4]]);
+        assert_eq!(net.conv_layer_names(), vec!["conv1"]);
+        assert_eq!(net.total_conv_macs(), 3 * 4 * 9 * 64);
+    }
+}

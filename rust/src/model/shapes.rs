@@ -1,0 +1,82 @@
+//! Shape arithmetic for the layer kinds in [`super::LayerKind`].
+
+use super::LayerKind;
+use crate::tensor::conv::out_dim;
+
+/// Output `[C,H,W]` of a layer applied to input `[C,H,W]`.
+pub fn layer_output_shape(input: [usize; 3], kind: &LayerKind) -> [usize; 3] {
+    let [c, h, w] = input;
+    match kind {
+        LayerKind::Conv { c_in, c_out, k, spec } => {
+            assert_eq!(c, *c_in, "conv expects {c_in} channels, got {c}");
+            [*c_out, out_dim(h, *k, *spec), out_dim(w, *k, *spec)]
+        }
+        LayerKind::Relu => input,
+        LayerKind::MaxPool2 => [c, h / 2, w / 2],
+        LayerKind::Linear { d_in, d_out } => {
+            assert_eq!(c * h * w, *d_in, "linear expects {d_in} inputs, got {}", c * h * w);
+            [*d_out, 1, 1]
+        }
+    }
+}
+
+/// Weight tensor shape for a layer, if it has one.
+pub fn weight_shape(kind: &LayerKind) -> Option<Vec<usize>> {
+    match kind {
+        LayerKind::Conv { c_in, c_out, k, .. } => Some(vec![*c_out, *c_in, *k, *k]),
+        LayerKind::Linear { d_in, d_out } => Some(vec![*d_out, *d_in]),
+        _ => None,
+    }
+}
+
+/// Parameter count for a layer (weights + bias).
+pub fn param_count(kind: &LayerKind) -> usize {
+    match kind {
+        LayerKind::Conv { c_in, c_out, k, .. } => c_out * c_in * k * k + c_out,
+        LayerKind::Linear { d_in, d_out } => d_out * d_in + d_out,
+        _ => 0,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::conv::ConvSpec;
+
+    #[test]
+    fn conv_same_padding_keeps_hw() {
+        let kind = LayerKind::Conv {
+            c_in: 3,
+            c_out: 64,
+            k: 3,
+            spec: ConvSpec { stride: 1, pad: 1 },
+        };
+        assert_eq!(layer_output_shape([3, 224, 224], &kind), [64, 224, 224]);
+        assert_eq!(weight_shape(&kind), Some(vec![64, 3, 3, 3]));
+        assert_eq!(param_count(&kind), 64 * 3 * 9 + 64);
+    }
+
+    #[test]
+    fn pool_halves() {
+        assert_eq!(layer_output_shape([64, 224, 224], &LayerKind::MaxPool2), [64, 112, 112]);
+    }
+
+    #[test]
+    fn linear_flattens() {
+        let kind = LayerKind::Linear { d_in: 25088, d_out: 4096 };
+        assert_eq!(layer_output_shape([512, 7, 7], &kind), [4096, 1, 1]);
+        assert_eq!(param_count(&kind), 4096 * 25088 + 4096);
+    }
+
+    #[test]
+    #[should_panic(expected = "conv expects")]
+    fn conv_channel_mismatch_panics() {
+        let kind = LayerKind::Conv {
+            c_in: 3,
+            c_out: 8,
+            k: 3,
+            spec: ConvSpec::default(),
+        };
+        let _ = layer_output_shape([4, 8, 8], &kind);
+    }
+}

@@ -1,0 +1,170 @@
+//! VGG-16 network builder — the workload of the paper's evaluation
+//! (Simonyan & Zisserman 2014, configuration D): 13 conv layers in 5 blocks
+//! with 2x2 max-pool between blocks, all 3x3 kernels with unit stride and
+//! pad 1 — exactly the geometry the VSCNN array is optimized for.
+
+use super::{Layer, LayerKind, Network};
+use crate::tensor::conv::ConvSpec;
+
+/// The 13 conv layers of VGG-16: `(name, c_in, c_out)`, grouped in blocks.
+pub const VGG16_CONVS: [(&str, usize, usize); 13] = [
+    ("conv1_1", 3, 64),
+    ("conv1_2", 64, 64),
+    ("conv2_1", 64, 128),
+    ("conv2_2", 128, 128),
+    ("conv3_1", 128, 256),
+    ("conv3_2", 256, 256),
+    ("conv3_3", 256, 256),
+    ("conv4_1", 256, 512),
+    ("conv4_2", 512, 512),
+    ("conv4_3", 512, 512),
+    ("conv5_1", 512, 512),
+    ("conv5_2", 512, 512),
+    ("conv5_3", 512, 512),
+];
+
+/// Indices after which a 2x2 max-pool follows (end of each block).
+const POOL_AFTER: [&str; 5] = ["conv1_2", "conv2_2", "conv3_3", "conv4_3", "conv5_3"];
+
+/// Build VGG-16's convolutional trunk at full 224x224 resolution.
+///
+/// The FC head is omitted: the paper's accelerator evaluation (Figs 9–13)
+/// covers the 13 conv layers only, which hold >99% of VGG-16's MACs.
+pub fn vgg16() -> Network {
+    vgg16_at(224)
+}
+
+/// VGG-16 trunk at a reduced input resolution (for fast tests/benches).
+/// `res` must be divisible by 32 so all five pools stay even.
+pub fn vgg16_at(res: usize) -> Network {
+    assert!(res >= 32 && res % 32 == 0, "resolution must be a multiple of 32");
+    let mut layers = Vec::new();
+    for (name, c_in, c_out) in VGG16_CONVS {
+        layers.push(Layer {
+            name: name.to_string(),
+            kind: LayerKind::Conv {
+                c_in,
+                c_out,
+                k: 3,
+                spec: ConvSpec { stride: 1, pad: 1 },
+            },
+        });
+        layers.push(Layer {
+            name: format!("{name}_relu"),
+            kind: LayerKind::Relu,
+        });
+        if POOL_AFTER.contains(&name) {
+            layers.push(Layer {
+                name: format!("pool_{}", &name[4..5]),
+                kind: LayerKind::MaxPool2,
+            });
+        }
+    }
+    Network {
+        name: format!("vgg16-{res}"),
+        input_shape: [3, res, res],
+        layers,
+    }
+}
+
+/// A small VGG-style network for unit tests: 4 conv layers, 2 blocks.
+pub fn tiny_vgg(res: usize) -> Network {
+    assert!(res % 4 == 0, "resolution must be a multiple of 4");
+    let convs = [("c1_1", 3, 8), ("c1_2", 8, 8), ("c2_1", 8, 16), ("c2_2", 16, 16)];
+    let mut layers = Vec::new();
+    for (i, (name, c_in, c_out)) in convs.into_iter().enumerate() {
+        layers.push(Layer {
+            name: name.to_string(),
+            kind: LayerKind::Conv {
+                c_in,
+                c_out,
+                k: 3,
+                spec: ConvSpec { stride: 1, pad: 1 },
+            },
+        });
+        layers.push(Layer {
+            name: format!("{name}_relu"),
+            kind: LayerKind::Relu,
+        });
+        if i == 1 || i == 3 {
+            layers.push(Layer {
+                name: format!("pool{}", i / 2 + 1),
+                kind: LayerKind::MaxPool2,
+            });
+        }
+    }
+    Network {
+        name: format!("tiny-vgg-{res}"),
+        input_shape: [3, res, res],
+        layers,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vgg16_has_13_convs_and_5_pools() {
+        let net = vgg16();
+        assert_eq!(net.conv_layer_names().len(), 13);
+        let pools = net
+            .layers
+            .iter()
+            .filter(|l| matches!(l.kind, LayerKind::MaxPool2))
+            .count();
+        assert_eq!(pools, 5);
+    }
+
+    #[test]
+    fn vgg16_mac_count_matches_literature() {
+        // VGG-16 conv trunk ≈ 15.35 GMACs at 224x224.
+        let macs = vgg16().total_conv_macs();
+        assert!(
+            (15.0e9..15.7e9).contains(&(macs as f64)),
+            "got {macs} MACs"
+        );
+    }
+
+    #[test]
+    fn vgg16_final_shape_is_512x7x7() {
+        let net = vgg16();
+        let last = *net.activation_shapes().last().unwrap();
+        assert_eq!(last, [512, 7, 7]);
+    }
+
+    #[test]
+    fn vgg16_heights_divisible_by_paper_vector_sizes() {
+        // The paper chose R=14 and R=7 because every VGG activation height
+        // (224,112,56,28,14) divides evenly — verify that invariant.
+        let net = vgg16();
+        let shapes = net.activation_shapes();
+        for (layer, shape) in net.layers.iter().zip(&shapes) {
+            if matches!(layer.kind, LayerKind::Conv { .. }) {
+                assert_eq!(shape[1] % 14, 0, "{}: H={} not /14", layer.name, shape[1]);
+                assert_eq!(shape[1] % 7, 0, "{}: H={} not /7", layer.name, shape[1]);
+            }
+        }
+    }
+
+    #[test]
+    fn reduced_resolution_scales() {
+        let net = vgg16_at(64);
+        assert_eq!(net.input_shape, [3, 64, 64]);
+        let last = *net.activation_shapes().last().unwrap();
+        assert_eq!(last, [512, 2, 2]);
+    }
+
+    #[test]
+    fn tiny_vgg_shapes() {
+        let net = tiny_vgg(8);
+        let last = *net.activation_shapes().last().unwrap();
+        assert_eq!(last, [16, 2, 2]);
+    }
+
+    #[test]
+    #[should_panic(expected = "multiple of 32")]
+    fn vgg16_bad_resolution_panics() {
+        let _ = vgg16_at(100);
+    }
+}

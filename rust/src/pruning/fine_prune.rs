@@ -1,0 +1,96 @@
+//! Fine-grained magnitude pruning (Han et al., "Deep Compression" — the
+//! paper's [17]): individual elements below a magnitude threshold are
+//! zeroed. Produces the irregular Fig 1 structure the fine-grained
+//! comparison designs (Cambricon-X, SCNN) index.
+
+use crate::tensor::Tensor;
+
+/// Prune individual elements of `weight` in place to ≈`target_density`,
+/// keeping the largest magnitudes. Returns the number of elements zeroed.
+pub fn prune_fine_grained(weight: &mut Tensor, target_density: f64) -> usize {
+    assert!(
+        (0.0..=1.0).contains(&target_density),
+        "density must be in [0,1]"
+    );
+    let n = weight.len();
+    let keep = ((n as f64) * target_density).round() as usize;
+    if keep >= n {
+        return 0;
+    }
+    // Threshold = magnitude of the keep-th largest element.
+    let mut mags: Vec<f32> = weight.data().iter().map(|x| x.abs()).collect();
+    mags.sort_by(|a, b| b.partial_cmp(a).unwrap());
+    let threshold = if keep == 0 { f32::INFINITY } else { mags[keep - 1] };
+
+    // Zero strictly-below threshold, then resolve ties at the threshold so
+    // exactly `keep` survive (deterministic: later elements pruned first).
+    let mut surviving = weight.data().iter().filter(|x| x.abs() >= threshold && **x != 0.0).count();
+    let mut zeroed = 0;
+    for x in weight.data_mut().iter_mut() {
+        if *x != 0.0 && x.abs() < threshold {
+            *x = 0.0;
+            zeroed += 1;
+        }
+    }
+    if surviving > keep {
+        for x in weight.data_mut().iter_mut().rev() {
+            if surviving == keep {
+                break;
+            }
+            if *x != 0.0 && x.abs() == threshold {
+                *x = 0.0;
+                zeroed += 1;
+                surviving -= 1;
+            }
+        }
+    }
+    zeroed
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    #[test]
+    fn achieves_exact_density() {
+        let mut rng = Pcg32::seeded(4);
+        let data: Vec<f32> = (0..1000).map(|_| rng.normal()).collect();
+        let mut w = Tensor::from_vec(&[10, 100], data);
+        prune_fine_grained(&mut w, 0.3);
+        assert_eq!(w.count_nonzero(), 300);
+    }
+
+    #[test]
+    fn keeps_largest_magnitudes() {
+        let mut w = Tensor::from_vec(&[5], vec![0.1, -5.0, 0.2, 3.0, -0.05]);
+        prune_fine_grained(&mut w, 0.4);
+        assert_eq!(w.data(), &[0.0, -5.0, 0.0, 3.0, 0.0]);
+    }
+
+    #[test]
+    fn handles_ties_deterministically() {
+        let mut w = Tensor::from_vec(&[4], vec![1.0, 1.0, 1.0, 1.0]);
+        prune_fine_grained(&mut w, 0.5);
+        assert_eq!(w.count_nonzero(), 2);
+        // Later elements pruned first on ties.
+        assert_eq!(w.data(), &[1.0, 1.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn extreme_densities() {
+        let mut w = Tensor::from_vec(&[3], vec![1.0, 2.0, 3.0]);
+        let mut w2 = w.clone();
+        assert_eq!(prune_fine_grained(&mut w, 1.0), 0);
+        prune_fine_grained(&mut w2, 0.0);
+        assert_eq!(w2.count_nonzero(), 0);
+    }
+
+    #[test]
+    fn already_sparse_input_counts_existing_zeros() {
+        // Tensor already 50% zero; target 0.5 should prune nothing more.
+        let mut w = Tensor::from_vec(&[4], vec![0.0, 2.0, 0.0, 3.0]);
+        prune_fine_grained(&mut w, 0.5);
+        assert_eq!(w.count_nonzero(), 2);
+    }
+}

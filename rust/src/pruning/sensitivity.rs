@@ -1,0 +1,132 @@
+//! Per-layer pruning-density schedules.
+//!
+//! The paper reports a single number — 23.5% overall weight density on
+//! VGG-16 after vector pruning — without per-layer targets. We reconstruct
+//! a plausible schedule from the well-known per-layer sensitivity profile of
+//! VGG-16 magnitude pruning (Han et al. [17]: early layers are sensitive
+//! and stay denser; middle/late layers prune hard), then scale it so the
+//! parameter-weighted overall density hits the paper's 23.5%.
+
+use crate::model::{LayerKind, Network};
+use std::collections::BTreeMap;
+
+/// Relative per-layer density profile for VGG-16 (Han et al., Table 4 —
+/// fraction of weights kept per conv layer).
+pub const VGG16_PROFILE: [(&str, f64); 13] = [
+    ("conv1_1", 0.58),
+    ("conv1_2", 0.22),
+    ("conv2_1", 0.34),
+    ("conv2_2", 0.36),
+    ("conv3_1", 0.53),
+    ("conv3_2", 0.24),
+    ("conv3_3", 0.42),
+    ("conv4_1", 0.32),
+    ("conv4_2", 0.27),
+    ("conv4_3", 0.34),
+    ("conv5_1", 0.35),
+    ("conv5_2", 0.29),
+    ("conv5_3", 0.36),
+];
+
+/// The paper's overall VGG-16 weight density after vector pruning (§IV).
+pub const PAPER_OVERALL_DENSITY: f64 = 0.235;
+
+/// Build a per-layer schedule for `net` by scaling `profile` so the
+/// parameter-weighted overall density equals `overall`. Layers missing from
+/// the profile get the overall target directly.
+pub fn schedule_for(
+    net: &Network,
+    profile: &[(&str, f64)],
+    overall: f64,
+) -> BTreeMap<String, f64> {
+    let prof: BTreeMap<&str, f64> = profile.iter().copied().collect();
+
+    // Parameter counts per conv layer.
+    let mut weights: Vec<(String, usize, f64)> = Vec::new(); // (name, params, profile density)
+    for layer in &net.layers {
+        if let LayerKind::Conv { c_in, c_out, k, .. } = layer.kind {
+            let n = c_in * c_out * k * k;
+            let d = prof.get(layer.name.as_str()).copied().unwrap_or(overall);
+            weights.push((layer.name.clone(), n, d));
+        }
+    }
+    let total: f64 = weights.iter().map(|(_, n, _)| *n as f64).sum();
+    let achieved: f64 =
+        weights.iter().map(|(_, n, d)| *n as f64 * d).sum::<f64>() / total.max(1.0);
+
+    // Scale all layer targets by a common factor, clamped to [0.01, 1].
+    let scale = if achieved > 0.0 { overall / achieved } else { 1.0 };
+    weights
+        .into_iter()
+        .map(|(name, _, d)| (name, (d * scale).clamp(0.01, 1.0)))
+        .collect()
+}
+
+/// The default schedule the experiments use: VGG-16 profile scaled to the
+/// paper's 23.5%.
+pub fn paper_schedule(net: &Network) -> BTreeMap<String, f64> {
+    schedule_for(net, &VGG16_PROFILE, PAPER_OVERALL_DENSITY)
+}
+
+/// A flat schedule (same density everywhere) for ablations.
+pub fn flat_schedule(net: &Network, density: f64) -> BTreeMap<String, f64> {
+    net.conv_layer_names()
+        .into_iter()
+        .map(|n| (n.to_string(), density))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::vgg16::{tiny_vgg, vgg16};
+
+    #[test]
+    fn paper_schedule_weighted_density_matches() {
+        let net = vgg16();
+        let sched = paper_schedule(&net);
+        assert_eq!(sched.len(), 13);
+        // Recompute the parameter-weighted density of the schedule.
+        let mut num = 0.0;
+        let mut den = 0.0;
+        for layer in &net.layers {
+            if let LayerKind::Conv { c_in, c_out, k, .. } = layer.kind {
+                let n = (c_in * c_out * k * k) as f64;
+                num += n * sched[&layer.name];
+                den += n;
+            }
+        }
+        let overall = num / den;
+        assert!(
+            (overall - PAPER_OVERALL_DENSITY).abs() < 0.01,
+            "overall {overall}"
+        );
+    }
+
+    #[test]
+    fn early_layers_stay_denser() {
+        let net = vgg16();
+        let sched = paper_schedule(&net);
+        assert!(sched["conv1_1"] > sched["conv4_2"]);
+        assert!(sched["conv3_1"] > sched["conv3_2"]);
+    }
+
+    #[test]
+    fn unknown_layers_get_overall() {
+        let net = tiny_vgg(8);
+        let sched = schedule_for(&net, &VGG16_PROFILE, 0.4);
+        // tiny_vgg layer names don't appear in the profile → all equal 0.4
+        // after self-normalizing scaling.
+        for (_, d) in &sched {
+            assert!((d - 0.4).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn flat_schedule_is_flat() {
+        let net = tiny_vgg(8);
+        let sched = flat_schedule(&net, 0.3);
+        assert_eq!(sched.len(), 4);
+        assert!(sched.values().all(|&d| d == 0.3));
+    }
+}

@@ -1,0 +1,127 @@
+//! Artifact manifest: what `make artifacts` produced and where.
+
+use crate::util::json::Json;
+use anyhow::{anyhow, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// One AOT-compiled conv bucket.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ArtifactInfo {
+    pub name: String,
+    /// `"ref"` (lax.conv) or `"vscnn"` (Pallas column-dataflow kernel).
+    pub kind: String,
+    pub file: String,
+    pub c_in: usize,
+    pub c_out: usize,
+    pub h: usize,
+    pub w: usize,
+    pub pad: usize,
+    pub stride: usize,
+}
+
+/// Parsed `artifacts/manifest.json`.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub artifacts: Vec<ArtifactInfo>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?}; run `make artifacts` first"))?;
+        let json = Json::parse(&text).map_err(|e| anyhow!("parsing {path:?}: {e}"))?;
+        let arts = json
+            .get("artifacts")
+            .and_then(|a| a.as_arr())
+            .ok_or_else(|| anyhow!("manifest missing 'artifacts' array"))?;
+        let mut artifacts = Vec::with_capacity(arts.len());
+        for a in arts {
+            let field = |k: &str| -> Result<&Json> {
+                a.get(k).ok_or_else(|| anyhow!("artifact missing '{k}'"))
+            };
+            let s = |k: &str| -> Result<String> {
+                Ok(field(k)?
+                    .as_str()
+                    .ok_or_else(|| anyhow!("'{k}' not a string"))?
+                    .to_string())
+            };
+            let n = |k: &str| -> Result<usize> {
+                field(k)?.as_usize().ok_or_else(|| anyhow!("'{k}' not a number"))
+            };
+            artifacts.push(ArtifactInfo {
+                name: s("name")?,
+                kind: s("kind")?,
+                file: s("file")?,
+                c_in: n("c_in")?,
+                c_out: n("c_out")?,
+                h: n("h")?,
+                w: n("w")?,
+                pad: n("pad")?,
+                stride: n("stride")?,
+            });
+        }
+        Ok(Manifest { dir, artifacts })
+    }
+
+    /// Find the artifact of `kind` matching a conv layer's geometry.
+    pub fn find(&self, kind: &str, c_in: usize, c_out: usize, h: usize, w: usize) -> Option<&ArtifactInfo> {
+        self.artifacts
+            .iter()
+            .find(|a| a.kind == kind && a.c_in == c_in && a.c_out == c_out && a.h == h && a.w == w)
+    }
+
+    /// Absolute path of an artifact's HLO text.
+    pub fn path_of(&self, art: &ArtifactInfo) -> PathBuf {
+        self.dir.join(&art.file)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_manifest(dir: &Path, body: &str) {
+        std::fs::create_dir_all(dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), body).unwrap();
+    }
+
+    #[test]
+    fn parse_and_find() {
+        let dir = std::env::temp_dir().join(format!("vscnn_manifest_{}", std::process::id()));
+        write_manifest(
+            &dir,
+            r#"{"network":"vgg16","artifacts":[
+                {"name":"ref_c3_h8_w8_k4","kind":"ref","file":"ref_c3_h8_w8_k4.hlo.txt",
+                 "c_in":3,"c_out":4,"h":8,"w":8,"pad":1,"stride":1}
+            ]}"#,
+        );
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.artifacts.len(), 1);
+        assert!(m.find("ref", 3, 4, 8, 8).is_some());
+        assert!(m.find("vscnn", 3, 4, 8, 8).is_none());
+        assert!(m.find("ref", 3, 4, 8, 9).is_none());
+        let p = m.path_of(&m.artifacts[0]);
+        assert!(p.ends_with("ref_c3_h8_w8_k4.hlo.txt"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn missing_manifest_is_informative() {
+        let err = Manifest::load("/nonexistent/dir").unwrap_err();
+        assert!(format!("{err:#}").contains("make artifacts"));
+    }
+
+    #[test]
+    fn malformed_manifest_rejected() {
+        let dir = std::env::temp_dir().join(format!("vscnn_badmanifest_{}", std::process::id()));
+        write_manifest(&dir, r#"{"artifacts": [{"name": "x"}]}"#);
+        assert!(Manifest::load(&dir).is_err());
+        write_manifest(&dir, "not json");
+        assert!(Manifest::load(&dir).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

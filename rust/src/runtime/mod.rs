@@ -1,0 +1,14 @@
+//! PJRT runtime: loads the HLO-text artifacts produced by
+//! `python/compile/aot.py` and executes them from the L3 hot path.
+//!
+//! Python never runs here — the artifacts are self-contained XLA programs
+//! compiled once per process by the PJRT CPU client (see
+//! /opt/xla-example/load_hlo for the reference wiring). The runtime gives
+//! the coordinator a fast functional conv (`ref_*` artifacts, XLA's native
+//! conv) and the Pallas-kernel path (`vscnn_*`) for cross-validation.
+
+pub mod artifacts;
+pub mod executable;
+
+pub use artifacts::{ArtifactInfo, Manifest};
+pub use executable::Runtime;

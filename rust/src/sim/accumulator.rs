@@ -1,0 +1,182 @@
+//! Partial-sum accumulation (Fig 3's accumulator + partial-sum SRAM).
+//!
+//! Partial output columns leave the PE array tagged with their output
+//! column (from the index unit) and diagonal offset; the accumulator adds
+//! them into the layer's output plane. Because dense and sparse flows tag
+//! partials identically, this block is shared — the paper's "same
+//! accumulator flow" contribution.
+
+use super::index_unit;
+use crate::tensor::Tensor;
+
+/// Accumulates partial output columns into a `[K, H_out, W_out]` plane.
+#[derive(Debug)]
+pub struct Accumulator {
+    out: Tensor,
+    /// Number of partial-column accumulations performed.
+    pub accumulations: u64,
+    /// Partials discarded for falling outside the output plane (boundary
+    /// rows OB0/OB6 and X columns).
+    pub discarded: u64,
+}
+
+impl Accumulator {
+    /// Fresh accumulator for a `[K, H_out, W_out]` output.
+    pub fn new(k: usize, h_out: usize, w_out: usize) -> Accumulator {
+        Accumulator {
+            out: Tensor::zeros(&[k, h_out, w_out]),
+            accumulations: 0,
+            discarded: 0,
+        }
+    }
+
+    /// Add one cycle's diagonal partial column for filter `k`.
+    ///
+    /// * `diag` — the `R+C-1` diagonal sums from the PE array;
+    /// * `strip_base` — first input row of the strip being processed;
+    /// * `out_col` — destination column (`None` = X slot, all discarded);
+    /// * `cols`/`pad` — array columns (= kernel height) and padding.
+    pub fn add_partial(
+        &mut self,
+        k: usize,
+        diag: &[f32],
+        strip_base: usize,
+        out_col: Option<usize>,
+        cols: usize,
+        pad: usize,
+    ) {
+        let h_out = self.out.shape()[1];
+        let Some(col) = out_col else {
+            self.discarded += diag.len() as u64;
+            return;
+        };
+        for (d, &v) in diag.iter().enumerate() {
+            match index_unit::output_row(strip_base, d, cols, pad, h_out) {
+                Some(row) => {
+                    *self.out.at3_mut(k, row, col) += v;
+                    self.accumulations += 1;
+                }
+                None => self.discarded += 1,
+            }
+        }
+    }
+
+    /// Finish and take the accumulated output plane.
+    pub fn into_output(self) -> Tensor {
+        self.out
+    }
+
+    /// Peek at the current partial state (tests).
+    pub fn output(&self) -> &Tensor {
+        &self.out
+    }
+
+    /// Mutable access to the partial plane (bias pre-load by the scheduler).
+    pub fn output_mut(&mut self) -> &mut Tensor {
+        &mut self.out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::pe_array::diagonal_product;
+
+    /// Accumulating the diagonal products of every (input col, weight col)
+    /// pair must reproduce the golden 2-D convolution — the core functional
+    /// invariant of the whole dataflow (single channel, single filter).
+    #[test]
+    fn full_accumulation_equals_conv2d() {
+        use crate::tensor::conv::{conv2d, ConvSpec};
+        use crate::util::rng::Pcg32;
+        let mut rng = Pcg32::seeded(71);
+        for _ in 0..10 {
+            let h = rng.range(3, 9);
+            let w = rng.range(3, 9);
+            let (kh, kw, pad) = (3usize, 3usize, 1usize);
+            let input_data: Vec<f32> = (0..h * w).map(|_| rng.normal()).collect();
+            let weight_data: Vec<f32> = (0..kh * kw).map(|_| rng.normal()).collect();
+            let input = Tensor::from_vec(&[1, h, w], input_data);
+            let weight = Tensor::from_vec(&[1, 1, kh, kw], weight_data.clone());
+            let spec = ConvSpec { stride: 1, pad };
+            let golden = conv2d(&input, &weight, None, spec);
+
+            // Dataflow: single strip covering all rows (R = h).
+            let mut acc = Accumulator::new(1, h, w);
+            for i in 0..w {
+                // input column vector
+                let col: Vec<f32> = (0..h).map(|r| input.at3(0, r, i)).collect();
+                for j in 0..kw {
+                    // weight column = kernel column j (kh taps)
+                    let wcol: Vec<f32> = (0..kh).map(|r| weight.at4(0, 0, r, j)).collect();
+                    let diag = diagonal_product(&col, &wcol);
+                    let out_col = crate::sim::index_unit::output_col(i, j, pad, w);
+                    acc.add_partial(0, &diag, 0, out_col, kh, pad);
+                }
+            }
+            let got = acc.into_output();
+            assert!(
+                golden.allclose(&got, 1e-4, 1e-4),
+                "mismatch {} (h={h} w={w})",
+                golden.max_abs_diff(&got)
+            );
+        }
+    }
+
+    /// Same invariant with the plane split into strips: boundary diagonals
+    /// (OB0/OB6) from adjacent strips must combine to the exact result.
+    #[test]
+    fn strip_tiling_accumulates_across_boundaries() {
+        use crate::tensor::conv::{conv2d, ConvSpec};
+        use crate::util::rng::Pcg32;
+        let mut rng = Pcg32::seeded(72);
+        let (h, w, r) = (8usize, 6usize, 4usize);
+        let (kh, kw, pad) = (3usize, 3usize, 1usize);
+        let input = Tensor::from_vec(&[1, h, w], (0..h * w).map(|_| rng.normal()).collect());
+        let weight =
+            Tensor::from_vec(&[1, 1, kh, kw], (0..kh * kw).map(|_| rng.normal()).collect());
+        let spec = ConvSpec { stride: 1, pad };
+        let golden = conv2d(&input, &weight, None, spec);
+
+        let mut acc = Accumulator::new(1, h, w);
+        for s in 0..h / r {
+            let base = s * r;
+            for i in 0..w {
+                let col: Vec<f32> = (0..r).map(|rr| input.at3(0, base + rr, i)).collect();
+                for j in 0..kw {
+                    let wcol: Vec<f32> = (0..kh).map(|rr| weight.at4(0, 0, rr, j)).collect();
+                    let diag = diagonal_product(&col, &wcol);
+                    let out_col = crate::sim::index_unit::output_col(i, j, pad, w);
+                    acc.add_partial(0, &diag, base, out_col, kh, pad);
+                }
+            }
+        }
+        let got = acc.into_output();
+        assert!(
+            golden.allclose(&got, 1e-4, 1e-4),
+            "mismatch {}",
+            golden.max_abs_diff(&got)
+        );
+    }
+
+    #[test]
+    fn x_slots_are_fully_discarded() {
+        let mut acc = Accumulator::new(1, 4, 4);
+        acc.add_partial(0, &[1.0, 2.0, 3.0], 0, None, 3, 1);
+        assert_eq!(acc.discarded, 3);
+        assert_eq!(acc.accumulations, 0);
+        assert_eq!(acc.output().count_nonzero(), 0);
+    }
+
+    #[test]
+    fn boundary_rows_discarded_interior_kept() {
+        // Strip base 0, R=2, C=3, pad=1, H_out=4: diagonals map to rows
+        // d-2+1 = d-1 → d=0 → row -1 (discard), d=1..3 → rows 0..2.
+        let mut acc = Accumulator::new(1, 4, 4);
+        acc.add_partial(0, &[5.0, 6.0, 7.0, 8.0], 0, Some(2), 3, 1);
+        assert_eq!(acc.discarded, 1);
+        assert_eq!(acc.accumulations, 3);
+        assert_eq!(acc.output().at3(0, 0, 2), 6.0);
+        assert_eq!(acc.output().at3(0, 2, 2), 8.0);
+    }
+}

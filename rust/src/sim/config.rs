@@ -1,0 +1,133 @@
+//! Accelerator configuration: PE-array geometry, SRAM capacities, clock and
+//! DRAM bandwidth. The two paper configurations are provided as constants.
+
+/// PE-array geometry `[B, R, C]`: `B` independent arrays, each `R` rows ×
+/// `C` columns. `R` is the input-activation vector length; `C` must equal
+/// the kernel height (3 for VGG) for full utilization.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PeConfig {
+    /// Number of PE arrays (filters processed in parallel).
+    pub arrays: usize,
+    /// Rows per array = input vector length (14 or 7 in the paper).
+    pub rows: usize,
+    /// Columns per array = weight vector length (kernel height, 3).
+    pub cols: usize,
+}
+
+impl PeConfig {
+    /// The paper's `[4, 14, 3]` configuration (168 PEs).
+    pub const PAPER_4_14_3: PeConfig = PeConfig {
+        arrays: 4,
+        rows: 14,
+        cols: 3,
+    };
+
+    /// The paper's `[8, 7, 3]` configuration (168 PEs).
+    pub const PAPER_8_7_3: PeConfig = PeConfig {
+        arrays: 8,
+        rows: 7,
+        cols: 3,
+    };
+
+    /// Total PEs (`B * R * C`); both paper configs give 168.
+    pub fn total_pes(&self) -> usize {
+        self.arrays * self.rows * self.cols
+    }
+
+    /// Label used in reports, e.g. `[4,14,3]`.
+    pub fn label(&self) -> String {
+        format!("[{},{},{}]", self.arrays, self.rows, self.cols)
+    }
+}
+
+/// SRAM buffer capacities in bytes (Fig 3's input/weight/partial-sum/output
+/// buffers). Defaults are sized for VGG-16 working sets at 16-bit words,
+/// comparable to the on-chip storage of contemporaneous designs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SramConfig {
+    pub input_bytes: usize,
+    pub weight_bytes: usize,
+    pub psum_bytes: usize,
+    pub output_bytes: usize,
+    /// Bytes per stored element (16-bit fixed point, as typical for
+    /// inference accelerators of this generation).
+    pub bytes_per_elem: usize,
+}
+
+impl Default for SramConfig {
+    fn default() -> Self {
+        SramConfig {
+            input_bytes: 64 * 1024,
+            weight_bytes: 128 * 1024,
+            psum_bytes: 32 * 1024,
+            output_bytes: 64 * 1024,
+            bytes_per_elem: 2,
+        }
+    }
+}
+
+/// Full simulator configuration.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SimConfig {
+    pub pe: PeConfig,
+    pub sram: SramConfig,
+    /// Clock frequency in MHz (for latency-in-seconds reporting only;
+    /// speedups are clock-independent).
+    pub freq_mhz: f64,
+    /// DRAM bandwidth in bytes/cycle (traffic accounting).
+    pub dram_bytes_per_cycle: f64,
+    /// Extra cycles charged when the accumulator drains a strip's partial
+    /// sums and the array switches (c, strip, filter-group) context.
+    /// The PE pipeline depth is small; default 2 (multiply + accumulate).
+    pub context_switch_cycles: u64,
+}
+
+impl SimConfig {
+    /// Paper configuration `[4, 14, 3]` with default memories.
+    pub fn paper_4_14_3() -> SimConfig {
+        SimConfig {
+            pe: PeConfig::PAPER_4_14_3,
+            sram: SramConfig::default(),
+            freq_mhz: 500.0,
+            dram_bytes_per_cycle: 8.0,
+            context_switch_cycles: 2,
+        }
+    }
+
+    /// Paper configuration `[8, 7, 3]` with default memories.
+    pub fn paper_8_7_3() -> SimConfig {
+        SimConfig {
+            pe: PeConfig::PAPER_8_7_3,
+            ..Self::paper_4_14_3()
+        }
+    }
+
+    /// Both paper configurations, labelled.
+    pub fn paper_configs() -> Vec<SimConfig> {
+        vec![Self::paper_4_14_3(), Self::paper_8_7_3()]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_configs_have_168_pes() {
+        assert_eq!(PeConfig::PAPER_4_14_3.total_pes(), 168);
+        assert_eq!(PeConfig::PAPER_8_7_3.total_pes(), 168);
+    }
+
+    #[test]
+    fn labels_match_paper_notation() {
+        assert_eq!(PeConfig::PAPER_4_14_3.label(), "[4,14,3]");
+        assert_eq!(PeConfig::PAPER_8_7_3.label(), "[8,7,3]");
+    }
+
+    #[test]
+    fn default_srams_positive() {
+        let s = SramConfig::default();
+        assert!(s.input_bytes > 0 && s.weight_bytes > 0);
+        assert_eq!(s.bytes_per_elem, 2);
+    }
+}

@@ -1,0 +1,71 @@
+//! External (DRAM) traffic accounting.
+//!
+//! The paper's Fig 3 flow: inputs and weights are fetched from external
+//! memory into SRAM once per reuse round; partial sums stay on chip; only
+//! final nonzero output vectors go back out. This model counts the bytes
+//! each side moves so the reports can show the traffic advantage of
+//! keeping zero vectors out of DRAM entirely.
+
+/// Byte counters for one simulated layer (or an accumulated run).
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct DramTraffic {
+    /// Input activation bytes read (compressed: nonzero vectors only).
+    pub input_read: u64,
+    /// Weight bytes read (compressed).
+    pub weight_read: u64,
+    /// Output bytes written (compressed, post zero-detection).
+    pub output_write: u64,
+    /// Per-vector index bytes moved alongside the data.
+    pub index_bytes: u64,
+}
+
+impl DramTraffic {
+    pub fn total(&self) -> u64 {
+        self.input_read + self.weight_read + self.output_write + self.index_bytes
+    }
+
+    /// Merge counters (accumulating a whole network run).
+    pub fn merge(&mut self, other: &DramTraffic) {
+        self.input_read += other.input_read;
+        self.weight_read += other.weight_read;
+        self.output_write += other.output_write;
+        self.index_bytes += other.index_bytes;
+    }
+
+    /// Cycles needed to move this traffic at `bytes_per_cycle` (the memory-
+    /// bound lower latency bound; reported next to compute cycles).
+    pub fn transfer_cycles(&self, bytes_per_cycle: f64) -> u64 {
+        assert!(bytes_per_cycle > 0.0);
+        (self.total() as f64 / bytes_per_cycle).ceil() as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn totals_and_merge() {
+        let a = DramTraffic {
+            input_read: 100,
+            weight_read: 50,
+            output_write: 25,
+            index_bytes: 5,
+        };
+        assert_eq!(a.total(), 180);
+        let mut b = DramTraffic::default();
+        b.merge(&a);
+        b.merge(&a);
+        assert_eq!(b.total(), 360);
+    }
+
+    #[test]
+    fn transfer_cycles_round_up() {
+        let t = DramTraffic {
+            input_read: 10,
+            ..Default::default()
+        };
+        assert_eq!(t.transfer_cycles(4.0), 3);
+        assert_eq!(t.transfer_cycles(10.0), 1);
+    }
+}

@@ -1,0 +1,100 @@
+//! The vector index system — the paper's low-overhead answer to the
+//! fine-grained designs' indexing/routing cost.
+//!
+//! Each nonzero vector carries its original position: an input vector its
+//! spatial column `i`, a weight vector its kernel column `j`. When the pair
+//! `(i, j)` is issued, the partial output column lands at output column
+//! `o = i - j + pad`. Pairs whose `o` falls outside `[0, W_out)` still
+//! occupy an issue slot (Table I marks them `X`) but their result is
+//! discarded — the hardware does not look ahead past them.
+
+/// Output-column index for an issued pair; `None` when the pair is a
+/// boundary `X` slot.
+#[inline]
+pub fn output_col(input_col: usize, weight_col: usize, pad: usize, w_out: usize) -> Option<usize> {
+    let o = input_col as isize - weight_col as isize + pad as isize;
+    if o >= 0 && (o as usize) < w_out {
+        Some(o as usize)
+    } else {
+        None
+    }
+}
+
+/// Output-row index for one diagonal element; `None` when outside the
+/// output plane. `d` indexes the `R+C-1` diagonal outputs of a cycle.
+#[inline]
+pub fn output_row(
+    strip_base: usize,
+    d: usize,
+    cols: usize,
+    pad: usize,
+    h_out: usize,
+) -> Option<usize> {
+    // PE row r and weight row c satisfy d = r + (C-1) - c, so the output
+    // row is strip_base + r - c + pad = strip_base + d - (C-1) + pad.
+    let row = strip_base as isize + d as isize - (cols as isize - 1) + pad as isize;
+    if row >= 0 && (row as usize) < h_out {
+        Some(row as usize)
+    } else {
+        None
+    }
+}
+
+/// An issued vector pair, as recorded by the trace (Table I rows).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct IssuedPair {
+    /// Spatial column of the input vector.
+    pub input_col: usize,
+    /// Kernel column of the weight vector.
+    pub weight_col: usize,
+    /// Destination output column, `None` for boundary `X` slots.
+    pub output_col: Option<usize>,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Table I ground truth for the 5x5/pad-1/3x3 example: input col A(=0)
+    /// with weight col WA(=0) lands on output col B(=1); with WB(=1) on
+    /// A(=0); with WC(=2) out of range (X).
+    #[test]
+    fn table1_output_columns() {
+        let (pad, w_out) = (1, 5);
+        assert_eq!(output_col(0, 0, pad, w_out), Some(1)); // A × WA → OB
+        assert_eq!(output_col(0, 1, pad, w_out), Some(0)); // A × WB → OA
+        assert_eq!(output_col(0, 2, pad, w_out), None); // A × WC → X
+        assert_eq!(output_col(4, 0, pad, w_out), None); // E × WA → X (sparse t=7)
+        assert_eq!(output_col(4, 1, pad, w_out), Some(4)); // E × WB → OE
+    }
+
+    #[test]
+    fn output_rows_cover_strip_with_halo() {
+        // R=5, C=3, pad=1, strip at base 0, H_out=5: diagonals d=0..6 map
+        // to rows -2..4 shifted: d - 2 + 1 = d - 1 → rows -1..5; valid 0..4.
+        let (cols, pad, h_out) = (3, 1, 5);
+        assert_eq!(output_row(0, 0, cols, pad, h_out), None); // OB0 boundary
+        assert_eq!(output_row(0, 1, cols, pad, h_out), Some(0)); // OB1
+        assert_eq!(output_row(0, 5, cols, pad, h_out), Some(4)); // OB5
+        assert_eq!(output_row(0, 6, cols, pad, h_out), None); // OB6 boundary
+    }
+
+    #[test]
+    fn strips_tile_without_overlap() {
+        // With strips of R rows, rows produced by strip s = s*R + (d-C+1+pad)
+        // for d in [0, R+C-1). Verify adjacent strips cover each output row
+        // the right number of times for full accumulation: row h receives
+        // contributions from diagonals of its own strip and the halo rows of
+        // neighbours — here we just verify every output row is reachable.
+        let (r, cols, pad, h_out) = (4usize, 3usize, 1usize, 8usize);
+        let mut covered = vec![0usize; h_out];
+        for s in 0..2 {
+            for d in 0..(r + cols - 1) {
+                if let Some(row) = output_row(s * r, d, cols, pad, h_out) {
+                    covered[row] += 1;
+                }
+            }
+        }
+        assert!(covered.iter().all(|&c| c >= 1), "coverage {covered:?}");
+    }
+}

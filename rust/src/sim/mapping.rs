@@ -1,0 +1,465 @@
+//! Kernel/stride mapping — the paper's §II-B extension point.
+//!
+//! The array is optimized for 3×3 unit-stride kernels ("the most widely
+//! [used] filter"); §II-B defers other shapes to "a suitable mapping
+//! method [13]". This module implements that mapping so the same PE array
+//! serves the rest of the CNN zoo:
+//!
+//! * **KH < C (e.g. 1×1, 1×K kernels)** — the kernel column is zero-padded
+//!   to the array height; padded taps multiply by zero and add nothing, so
+//!   the result is exact while keeping the broadcast geometry.
+//! * **KH > C (e.g. 5×5, 7×7)** — each kernel column splits into
+//!   `ceil(KH/C)` sub-vectors of C taps; each sub-vector issues as its own
+//!   weight vector with a shifted accumulation base (the index system adds
+//!   `row_offset` to the strip base), exactly like processing a taller
+//!   virtual array over multiple passes.
+//! * **stride 2** — polyphase decomposition: the input splits into 4
+//!   phase sub-planes (even/odd rows × even/odd cols) and the kernel into
+//!   4 sub-kernels; each phase pair runs as a unit-stride conv on the
+//!   array and the partial outputs accumulate in the shared psum buffer.
+//!
+//! All mappings reuse [`simulate_layer`] unchanged — the point of the
+//! paper's design is that the accumulator flow is index-driven, so remaps
+//! only change *which* vectors are issued.
+
+use super::config::SimConfig;
+use super::scheduler::{simulate_layer, LayerResult, Mode};
+use super::stats::SimStats;
+use super::trace::Trace;
+use crate::tensor::conv::ConvSpec;
+use crate::tensor::Tensor;
+
+/// One sub-kernel issued on the array: weights padded/split to the array
+/// height, plus the accumulation row offset its outputs carry.
+#[derive(Debug)]
+pub struct MappedKernel {
+    pub weight: Tensor,
+    /// Added to the strip base when accumulating this sub-kernel's output.
+    pub row_offset: usize,
+}
+
+/// Split/pad `weight [K,C,KH,KW]` for an array with `cols` PE columns.
+pub fn map_kernel_rows(weight: &Tensor, cols: usize) -> Vec<MappedKernel> {
+    assert_eq!(weight.ndim(), 4);
+    let (k, c, kh, kw) = (
+        weight.shape()[0],
+        weight.shape()[1],
+        weight.shape()[2],
+        weight.shape()[3],
+    );
+    let chunks = kh.div_ceil(cols);
+    (0..chunks)
+        .map(|t| {
+            let mut sub = Tensor::zeros(&[k, c, cols, kw]);
+            for ki in 0..k {
+                for ci in 0..c {
+                    for i_local in 0..cols {
+                        let i = t * cols + i_local;
+                        if i >= kh {
+                            break; // zero-pad the tail
+                        }
+                        for j in 0..kw {
+                            *sub.at4_mut(ki, ci, i_local, j) = weight.at4(ki, ci, i, j);
+                        }
+                    }
+                }
+            }
+            MappedKernel {
+                weight: sub,
+                row_offset: t * cols,
+            }
+        })
+        .collect()
+}
+
+/// Simulate a conv layer of arbitrary kernel height at unit stride by
+/// mapping it onto the array (KH != PE columns allowed). Stats accumulate
+/// across sub-kernels; the functional output is exact.
+pub fn simulate_layer_mapped(
+    input: &Tensor,
+    weight: &Tensor,
+    bias: Option<&[f32]>,
+    cfg: &SimConfig,
+    spec: ConvSpec,
+    mode: Mode,
+    functional: bool,
+    trace: &mut Trace,
+) -> LayerResult {
+    assert_eq!(spec.stride, 1, "use simulate_layer_stride2 for stride 2");
+    let (kh, kw) = (weight.shape()[2], weight.shape()[3]);
+    let h = input.shape()[1];
+    let w = input.shape()[2];
+    let h_out = crate::tensor::conv::out_dim(h, kh, spec);
+    let w_out = crate::tensor::conv::out_dim(w, kw, spec);
+    let k_out = weight.shape()[0];
+
+    if kh == cfg.pe.cols {
+        return simulate_layer(input, weight, bias, cfg, spec, mode, functional, trace);
+    }
+
+    let mapped = map_kernel_rows(weight, cfg.pe.cols);
+    let mut stats = SimStats::default();
+    let mut dense_cycles = 0u64;
+    let mut out = functional.then(|| {
+        let mut t = Tensor::zeros(&[k_out, h_out, w_out]);
+        if let Some(b) = bias {
+            for (k, &bv) in b.iter().enumerate() {
+                for r in 0..h_out {
+                    for c in 0..w_out {
+                        *t.at3_mut(k, r, c) = bv;
+                    }
+                }
+            }
+        }
+        t
+    });
+
+    let _ = h;
+    // The sub-convs run at an enlarged padding p' = p + chunks·C − KH so
+    // every needed output row exists for every chunk; output indices then
+    // shift by dp = p' − p on both dims (a pure index shift the
+    // accumulator's index system applies for free in hardware).
+    let chunks = mapped.len();
+    let dp = chunks * cfg.pe.cols - kh;
+    let sub_spec = ConvSpec {
+        stride: 1,
+        pad: spec.pad + dp,
+    };
+    for sub in &mapped {
+        // Run the sub-kernel (height = cols) on the unmodified input; its
+        // taps sit `row_offset` rows lower in the virtual tall kernel, so
+        // its output row `m + row_offset + dp` contributes to full-conv
+        // row `m` (O[m] += O_sub[m + t·C + dp]).
+        let res = simulate_layer(
+            input,
+            &sub.weight,
+            None,
+            cfg,
+            sub_spec,
+            mode,
+            functional,
+            trace,
+        );
+        stats.merge(&res.stats);
+        dense_cycles += res.dense_cycles;
+        if let (Some(acc), Some(sub_out)) = (out.as_mut(), res.output) {
+            let sub_h = sub_out.shape()[1];
+            let sub_w = sub_out.shape()[2];
+            for k in 0..k_out {
+                for r in 0..h_out {
+                    let rs = r + sub.row_offset + dp;
+                    if rs >= sub_h {
+                        continue;
+                    }
+                    for c in 0..w_out {
+                        let cs = c + dp;
+                        if cs >= sub_w {
+                            continue;
+                        }
+                        *acc.at3_mut(k, r, c) += sub_out.at3(k, rs, cs);
+                    }
+                }
+            }
+        }
+    }
+    LayerResult {
+        stats,
+        dense_cycles,
+        output: out,
+    }
+}
+
+/// Simulate a stride-2 conv layer via polyphase decomposition: 4 phase
+/// sub-planes × matching sub-kernels run as unit-stride convs on the
+/// array (each routed through [`simulate_layer_mapped`], since sub-kernel
+/// heights are 1 or 2); partial outputs accumulate in the shared psum
+/// buffer. Cycle stats sum across phases.
+#[allow(clippy::too_many_arguments)]
+pub fn simulate_layer_stride2(
+    input: &Tensor,
+    weight: &Tensor,
+    bias: Option<&[f32]>,
+    cfg: &SimConfig,
+    spec: ConvSpec,
+    mode: Mode,
+    functional: bool,
+    trace: &mut Trace,
+) -> LayerResult {
+    assert_eq!(spec.stride, 2, "this mapper is for stride 2");
+    assert_eq!(
+        spec.pad, 0,
+        "stride-2 polyphase mapping currently supports pad 0 \
+         (pad the input tensor explicitly for padded strided convs)"
+    );
+    let (k_out, kh, kw) = (weight.shape()[0], weight.shape()[2], weight.shape()[3]);
+    let h_out = crate::tensor::conv::out_dim(input.shape()[1], kh, spec);
+    let w_out = crate::tensor::conv::out_dim(input.shape()[2], kw, spec);
+
+    let mut stats = SimStats::default();
+    let mut dense_cycles = 0u64;
+    let mut out = functional.then(|| {
+        let mut t = Tensor::zeros(&[k_out, h_out, w_out]);
+        if let Some(b) = bias {
+            for (k, &bv) in b.iter().enumerate() {
+                for r in 0..h_out {
+                    for c in 0..w_out {
+                        *t.at3_mut(k, r, c) = bv;
+                    }
+                }
+            }
+        }
+        t
+    });
+
+    let spec1 = ConvSpec { stride: 1, pad: 0 };
+    for pr in 0..2usize.min(kh) {
+        for pc in 0..2usize.min(kw) {
+            let xp = phase_plane(input, pr, pc);
+            let wp = phase_kernel(weight, pr, pc);
+            if xp.shape()[1] < wp.shape()[2] || xp.shape()[2] < wp.shape()[3] {
+                continue; // degenerate phase (tiny plane)
+            }
+            let res = simulate_layer_mapped(
+                &xp, &wp, None, cfg, spec1, mode, functional, trace,
+            );
+            stats.merge(&res.stats);
+            dense_cycles += res.dense_cycles;
+            if let (Some(acc), Some(sub)) = (out.as_mut(), res.output) {
+                for k in 0..k_out {
+                    for r in 0..h_out.min(sub.shape()[1]) {
+                        for c in 0..w_out.min(sub.shape()[2]) {
+                            *acc.at3_mut(k, r, c) += sub.at3(k, r, c);
+                        }
+                    }
+                }
+            }
+        }
+    }
+    LayerResult {
+        stats,
+        dense_cycles,
+        output: out,
+    }
+}
+
+/// Route a conv of any supported geometry to the right dataflow:
+/// native 3-column unit-stride, row-mapped (1×1/5×5/7×7), or polyphase
+/// stride-2. This is what the coordinator calls.
+#[allow(clippy::too_many_arguments)]
+pub fn simulate_layer_any(
+    input: &Tensor,
+    weight: &Tensor,
+    bias: Option<&[f32]>,
+    cfg: &SimConfig,
+    spec: ConvSpec,
+    mode: Mode,
+    functional: bool,
+    trace: &mut Trace,
+) -> LayerResult {
+    match spec.stride {
+        1 => simulate_layer_mapped(input, weight, bias, cfg, spec, mode, functional, trace),
+        2 => simulate_layer_stride2(input, weight, bias, cfg, spec, mode, functional, trace),
+        s => panic!("stride {s} unsupported (paper §II-B mappings cover 1 and 2)"),
+    }
+}
+
+/// Polyphase phase extraction: sub-plane of `input` at row/col parity
+/// `(pr, pc)` for stride 2.
+pub fn phase_plane(input: &Tensor, pr: usize, pc: usize) -> Tensor {
+    let (c, h, w) = (input.shape()[0], input.shape()[1], input.shape()[2]);
+    let hp = (h - pr).div_ceil(2);
+    let wp = (w - pc).div_ceil(2);
+    let mut out = Tensor::zeros(&[c, hp, wp]);
+    for ci in 0..c {
+        for r in 0..hp {
+            for col in 0..wp {
+                *out.at3_mut(ci, r, col) = input.at3(ci, 2 * r + pr, 2 * col + pc);
+            }
+        }
+    }
+    out
+}
+
+/// Polyphase sub-kernel at parity `(pr, pc)`: taps `weight[.., i, j]` with
+/// `i ≡ pr (mod 2)`, `j ≡ pc (mod 2)`.
+pub fn phase_kernel(weight: &Tensor, pr: usize, pc: usize) -> Tensor {
+    let (k, c, kh, kw) = (
+        weight.shape()[0],
+        weight.shape()[1],
+        weight.shape()[2],
+        weight.shape()[3],
+    );
+    let khp = (kh - pr).div_ceil(2);
+    let kwp = (kw - pc).div_ceil(2);
+    let mut out = Tensor::zeros(&[k, c, khp.max(1), kwp.max(1)]);
+    for ki in 0..k {
+        for ci in 0..c {
+            for i in 0..khp {
+                for j in 0..kwp {
+                    if 2 * i + pr < kh && 2 * j + pc < kw {
+                        *out.at4_mut(ki, ci, i, j) = weight.at4(ki, ci, 2 * i + pr, 2 * j + pc);
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::config::SimConfig;
+    use crate::tensor::conv::conv2d;
+    use crate::util::rng::Pcg32;
+
+    fn rand_t(rng: &mut Pcg32, shape: &[usize], density: f32) -> Tensor {
+        let n: usize = shape.iter().product();
+        Tensor::from_vec(
+            shape,
+            (0..n)
+                .map(|_| if rng.bernoulli(density) { rng.normal() } else { 0.0 })
+                .collect(),
+        )
+    }
+
+    fn cfg(rows: usize) -> SimConfig {
+        let mut c = SimConfig::paper_4_14_3();
+        c.pe.arrays = 2;
+        c.pe.rows = rows;
+        c.context_switch_cycles = 0;
+        c
+    }
+
+    #[test]
+    fn one_by_one_kernel_maps_exactly() {
+        let mut rng = Pcg32::seeded(61);
+        let input = rand_t(&mut rng, &[3, 8, 8], 0.6);
+        let weight = rand_t(&mut rng, &[4, 3, 1, 1], 0.7);
+        let bias: Vec<f32> = (0..4).map(|_| rng.normal()).collect();
+        let spec = ConvSpec { stride: 1, pad: 0 };
+        let golden = conv2d(&input, &weight, Some(&bias), spec);
+        let mut tr = Trace::disabled();
+        let res = simulate_layer_mapped(
+            &input,
+            &weight,
+            Some(&bias),
+            &cfg(4),
+            spec,
+            Mode::VectorSparse,
+            true,
+            &mut tr,
+        );
+        let out = res.output.unwrap();
+        assert!(
+            golden.allclose(&out, 1e-3, 1e-3),
+            "diff {}",
+            golden.max_abs_diff(&out)
+        );
+    }
+
+    #[test]
+    fn five_by_five_kernel_maps_exactly() {
+        let mut rng = Pcg32::seeded(62);
+        let input = rand_t(&mut rng, &[2, 10, 10], 0.5);
+        let weight = rand_t(&mut rng, &[3, 2, 5, 5], 0.5);
+        let spec = ConvSpec { stride: 1, pad: 2 };
+        let golden = conv2d(&input, &weight, None, spec);
+        let mut tr = Trace::disabled();
+        let res = simulate_layer_mapped(
+            &input,
+            &weight,
+            None,
+            &cfg(5),
+            spec,
+            Mode::VectorSparse,
+            true,
+            &mut tr,
+        );
+        let out = res.output.unwrap();
+        assert!(
+            golden.allclose(&out, 1e-3, 1e-3),
+            "diff {}",
+            golden.max_abs_diff(&out)
+        );
+        // 5-tall kernels need 2 passes of the 3-col array.
+        assert!(res.stats.cycles > 0);
+    }
+
+    #[test]
+    fn native_3x3_passes_through_unmapped() {
+        let mut rng = Pcg32::seeded(63);
+        let input = rand_t(&mut rng, &[2, 8, 8], 0.5);
+        let weight = rand_t(&mut rng, &[2, 2, 3, 3], 0.5);
+        let spec = ConvSpec::default();
+        let mut tr = Trace::disabled();
+        let a = simulate_layer_mapped(
+            &input, &weight, None, &cfg(4), spec, Mode::VectorSparse, false, &mut tr,
+        );
+        let b = simulate_layer(
+            &input, &weight, None, &cfg(4), spec, Mode::VectorSparse, false, &mut tr,
+        );
+        assert_eq!(a.stats.cycles, b.stats.cycles);
+    }
+
+    #[test]
+    fn map_kernel_rows_pads_and_splits() {
+        let mut rng = Pcg32::seeded(64);
+        let weight = rand_t(&mut rng, &[1, 1, 5, 3], 1.0);
+        let mapped = map_kernel_rows(&weight, 3);
+        assert_eq!(mapped.len(), 2);
+        assert_eq!(mapped[0].row_offset, 0);
+        assert_eq!(mapped[1].row_offset, 3);
+        // Chunk 1 holds taps 3,4 and a zero row.
+        assert_eq!(mapped[1].weight.at4(0, 0, 0, 0), weight.at4(0, 0, 3, 0));
+        assert_eq!(mapped[1].weight.at4(0, 0, 2, 0), 0.0);
+        // Tap mass is preserved across chunks.
+        let total: f32 = weight.data().iter().sum();
+        let mapped_total: f32 = mapped.iter().flat_map(|m| m.weight.data()).sum();
+        assert!((total - mapped_total).abs() < 1e-6);
+    }
+
+    /// Polyphase stride-2: sum of phase convs equals the strided conv.
+    #[test]
+    fn polyphase_stride2_equals_direct() {
+        let mut rng = Pcg32::seeded(65);
+        for _ in 0..6 {
+            let c = rng.range(1, 4);
+            let k = rng.range(1, 4);
+            let h = rng.range(6, 12) & !1; // even for clean phases
+            let w = rng.range(6, 12) & !1;
+            let input = rand_t(&mut rng, &[c, h, w], 0.7);
+            let weight = rand_t(&mut rng, &[k, c, 3, 3], 0.7);
+            let spec2 = ConvSpec { stride: 2, pad: 0 };
+            let golden = conv2d(&input, &weight, None, spec2);
+
+            // Σ over 4 phases of unit-stride convs on the sub-planes.
+            let mut acc = Tensor::zeros(golden.shape());
+            for pr in 0..2 {
+                for pc in 0..2 {
+                    let xp = phase_plane(&input, pr, pc);
+                    let wp = phase_kernel(&weight, pr, pc);
+                    let spec1 = ConvSpec { stride: 1, pad: 0 };
+                    if xp.shape()[1] < wp.shape()[2] || xp.shape()[2] < wp.shape()[3] {
+                        continue;
+                    }
+                    let sub = conv2d(&xp, &wp, None, spec1);
+                    for ki in 0..k {
+                        for r in 0..golden.shape()[1] {
+                            for col in 0..golden.shape()[2] {
+                                if r < sub.shape()[1] && col < sub.shape()[2] {
+                                    *acc.at3_mut(ki, r, col) += sub.at3(ki, r, col);
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+            assert!(
+                golden.allclose(&acc, 1e-3, 1e-3),
+                "polyphase mismatch {}",
+                golden.max_abs_diff(&acc)
+            );
+        }
+    }
+}

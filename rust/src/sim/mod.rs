@@ -1,0 +1,40 @@
+//! The VSCNN accelerator model — the paper's system contribution.
+//!
+//! The simulator is split along the blocks of the paper's Fig 3:
+//!
+//! * [`config`] — PE-array geometry (`[B, R, C]`), SRAM sizes, clock.
+//! * [`pe`] / [`pe_array`] — Fig 4/5: the multiplier+adder PEs, horizontal
+//!   input broadcast, vertical weight broadcast, diagonal accumulation.
+//! * [`index_unit`] — the vector index system: pairing nonzero input /
+//!   weight vectors and computing the output column each pair lands on.
+//! * [`accumulator`] — partial-sum accumulation keyed by output index.
+//! * [`sram`] / [`dram`] — local buffers and external-memory traffic.
+//! * [`scheduler`] — the dense and sparse dataflows of §III / Table I,
+//!   including multi-array synchronization (the source of the paper's
+//!   92%/85%-of-ideal efficiency).
+//! * [`postproc`] — ReLU + zero detection + output vector compression.
+//! * [`stats`] — cycle/work/traffic counters behind every figure.
+//! * [`trace`] — per-cycle issue trace (regenerates Table I / Fig 8).
+//!
+//! Two fidelity modes: **functional+timing** (values computed through the
+//! dataflow, validated against the golden conv — used by tests and small
+//! runs) and **timing-only** (occupancy-derived cycle counts — used for
+//! full VGG-16 sweeps; provably identical cycle counts, see
+//! `scheduler::tests::functional_and_timing_agree`).
+
+pub mod accumulator;
+pub mod config;
+pub mod dram;
+pub mod index_unit;
+pub mod mapping;
+pub mod pe;
+pub mod pe_array;
+pub mod postproc;
+pub mod scheduler;
+pub mod sram;
+pub mod stats;
+pub mod trace;
+
+pub use config::{PeConfig, SimConfig};
+pub use scheduler::{simulate_layer, LayerResult, Mode};
+pub use stats::SimStats;

@@ -1,0 +1,47 @@
+//! A single processing element (paper Fig 5): one multiplier and one adder
+//! for partial-sum accumulation. The PE holds no weight locally — both
+//! operands arrive on the broadcast buses each cycle, which is what lets
+//! the same PE serve dense and vector-sparse flows.
+
+/// One PE's combinational function for a cycle: multiply the broadcast
+/// input and weight, add the incoming diagonal partial sum.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct Pe {
+    /// MACs this PE has executed (for utilization accounting).
+    pub mac_count: u64,
+}
+
+impl Pe {
+    /// Execute one cycle: `psum_in + input * weight`.
+    #[inline]
+    pub fn cycle(&mut self, input: f32, weight: f32, psum_in: f32) -> f32 {
+        self.mac_count += 1;
+        psum_in + input * weight
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mac_semantics() {
+        let mut pe = Pe::default();
+        assert_eq!(pe.cycle(2.0, 3.0, 1.0), 7.0);
+        assert_eq!(pe.cycle(0.0, 5.0, 4.0), 4.0);
+        assert_eq!(pe.mac_count, 2);
+    }
+
+    #[test]
+    fn accumulation_chain() {
+        // Three PEs chained diagonally: psum flows through.
+        let mut pes = [Pe::default(); 3];
+        let inputs = [1.0, 2.0, 3.0];
+        let weights = [0.5, 0.25, 0.125];
+        let mut psum = 0.0;
+        for (pe, (i, w)) in pes.iter_mut().zip(inputs.iter().zip(&weights)) {
+            psum = pe.cycle(*i, *w, psum);
+        }
+        assert!((psum - (0.5 + 0.5 + 0.375)).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,144 @@
+//! One PE array (paper Fig 4): `R` rows × `C` columns.
+//!
+//! Per cycle the array receives an `R`-element input column vector
+//! (broadcast horizontally — row `r` of every PE column sees `input[r]`)
+//! and a `C`-element weight column vector (broadcast vertically — column
+//! `c` of every row sees `weight[c]`). PE `(r, c)` computes
+//! `input[r] * weight[c]`, and products on the same diagonal `r - c` are
+//! summed *in the same cycle* into one partial output element, yielding an
+//! `R + C - 1`-element partial output column per cycle.
+
+use super::pe::Pe;
+
+/// One R×C PE array with its diagonal adder tree.
+#[derive(Debug, Clone)]
+pub struct PeArray {
+    pub rows: usize,
+    pub cols: usize,
+    pes: Vec<Pe>,
+    /// Cycles this array has been issued work.
+    pub busy_cycles: u64,
+}
+
+impl PeArray {
+    pub fn new(rows: usize, cols: usize) -> PeArray {
+        PeArray {
+            rows,
+            cols,
+            pes: vec![Pe::default(); rows * cols],
+            busy_cycles: 0,
+        }
+    }
+
+    /// Length of the partial output column produced each cycle.
+    pub fn out_len(&self) -> usize {
+        self.rows + self.cols - 1
+    }
+
+    /// Execute one cycle: full `R x C` multiply + diagonal reduction.
+    ///
+    /// `out[d]` sums products with `r - c + (C-1) = d`; element `d` maps to
+    /// output row `strip_base + d - (C-1) + pad` (the caller applies the
+    /// offset — see [`super::accumulator`]).
+    pub fn cycle(&mut self, input: &[f32], weight: &[f32]) -> Vec<f32> {
+        assert_eq!(input.len(), self.rows, "input vector length != rows");
+        assert_eq!(weight.len(), self.cols, "weight vector length != cols");
+        let mut out = vec![0.0f32; self.out_len()];
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                let p = self.pes[r * self.cols + c].cycle(input[r], weight[c], 0.0);
+                out[r + (self.cols - 1) - c] += p;
+            }
+        }
+        self.busy_cycles += 1;
+        out
+    }
+
+    /// Total MACs executed by all PEs.
+    pub fn total_macs(&self) -> u64 {
+        self.pes.iter().map(|p| p.mac_count).sum()
+    }
+}
+
+/// Pure helper: the diagonal reduction of one cycle without PE state
+/// (used by the timing-only scheduler's functional cross-checks and by the
+/// accumulator tests).
+pub fn diagonal_product(input: &[f32], weight: &[f32]) -> Vec<f32> {
+    let (rows, cols) = (input.len(), weight.len());
+    let mut out = vec![0.0f32; rows + cols - 1];
+    for (r, &iv) in input.iter().enumerate() {
+        for (c, &wv) in weight.iter().enumerate() {
+            out[r + (cols - 1) - c] += iv * wv;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The paper's Fig 8 t=1 block: input A1..A5, weights WA1..WA3.
+    /// Row Am of the output diagonal must equal Σ_i A_{m+i-1}·WA_i — i.e.
+    /// the 1-D convolution (correlation) of the column with the kernel
+    /// column, including the OB0/OB6 boundary entries.
+    #[test]
+    fn fig8_t1_diagonal_sums() {
+        let a = [1.0, 2.0, 3.0, 4.0, 5.0]; // A1..A5
+        let w = [10.0, 20.0, 30.0]; // WA1..WA3
+        let mut arr = PeArray::new(5, 3);
+        let out = arr.cycle(&a, &w);
+        assert_eq!(out.len(), 7); // OB0..OB6
+        // out[d] = Σ_{r-c+2=d} a[r]*w[c]
+        // OB0 (d=0): r=0,c=2 → A1*WA3 = 30
+        assert_eq!(out[0], 30.0);
+        // OB1 (d=1): A1*WA2 + A2*WA3 = 20 + 60 = 80
+        assert_eq!(out[1], 80.0);
+        // OB2 (d=2): A1*WA1 + A2*WA2 + A3*WA3 = 10+40+90 = 140
+        assert_eq!(out[2], 140.0);
+        // OB6 (d=6): A5*WA1 = 50
+        assert_eq!(out[6], 50.0);
+        assert_eq!(arr.total_macs(), 15);
+        assert_eq!(arr.busy_cycles, 1);
+    }
+
+    #[test]
+    fn diagonal_product_matches_array() {
+        let a = [0.5, -1.0, 2.0];
+        let w = [1.0, 0.0, -2.0];
+        let mut arr = PeArray::new(3, 3);
+        assert_eq!(arr.cycle(&a, &w), diagonal_product(&a, &w));
+    }
+
+    #[test]
+    fn diagonal_is_1d_correlation_with_flip() {
+        // out[d] = Σ_c in[d - (C-1) + c] * w[c] — verify against a direct
+        // correlation for random vectors.
+        use crate::util::rng::Pcg32;
+        let mut rng = Pcg32::seeded(21);
+        for _ in 0..20 {
+            let r = rng.range(1, 10);
+            let c = rng.range(1, 5);
+            let input: Vec<f32> = (0..r).map(|_| rng.normal()).collect();
+            let weight: Vec<f32> = (0..c).map(|_| rng.normal()).collect();
+            let out = diagonal_product(&input, &weight);
+            for (d, &o) in out.iter().enumerate() {
+                let mut want = 0.0f32;
+                for (ci, &wv) in weight.iter().enumerate() {
+                    let ri = d as isize - (c as isize - 1) + ci as isize;
+                    if ri >= 0 && (ri as usize) < r {
+                        want += input[ri as usize] * wv;
+                    }
+                }
+                assert!((o - want).abs() < 1e-5, "d={d}: {o} vs {want}");
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "input vector length")]
+    fn wrong_input_length_panics() {
+        let mut arr = PeArray::new(4, 3);
+        let _ = arr.cycle(&[1.0; 3], &[1.0; 3]);
+    }
+}

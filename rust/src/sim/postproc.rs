@@ -1,0 +1,79 @@
+//! Post-processing unit (Fig 3): activation function, optional
+//! normalization, and **zero detection** — the block that turns the conv
+//! output back into compressed nonzero vectors before it leaves for DRAM,
+//! creating the input sparsity the *next* layer's scheduler exploits.
+
+use crate::sparse::VectorActivations;
+use crate::tensor::conv::relu_inplace;
+use crate::tensor::Tensor;
+
+/// Result of post-processing one layer output.
+#[derive(Debug)]
+pub struct PostprocResult {
+    /// Activated output (ReLU applied), still dense in memory.
+    pub output: Tensor,
+    /// Elements zeroed by ReLU (zero-detection statistic).
+    pub zeroed_elems: usize,
+    /// Vector-compressed view at vector length `r` — what is actually sent
+    /// to DRAM (`None` when `r == 0`, i.e. final layer).
+    pub compressed: Option<VectorActivations>,
+}
+
+/// Apply ReLU + zero detection + vector compression at vector length `r`.
+pub fn postprocess(mut output: Tensor, r: usize) -> PostprocResult {
+    let zeroed_elems = relu_inplace(&mut output);
+    let compressed = if r > 0 {
+        Some(VectorActivations::from_tensor(&output, r))
+    } else {
+        None
+    };
+    PostprocResult {
+        output,
+        zeroed_elems,
+        compressed,
+    }
+}
+
+/// Bytes written to DRAM for a compressed activation tensor: the nonzero
+/// vectors' payload plus one index entry per vector.
+pub fn output_dram_bytes(va: &VectorActivations, bytes_per_elem: usize, index_bytes: usize) -> u64 {
+    (va.sram_elems() * bytes_per_elem + va.index_entries() * index_bytes) as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn relu_then_compress() {
+        let t = Tensor::from_vec(
+            &[1, 4, 2],
+            vec![1.0, -1.0, 2.0, -2.0, -3.0, -4.0, -5.0, -6.0],
+        );
+        let res = postprocess(t, 2);
+        assert_eq!(res.zeroed_elems, 6);
+        // After ReLU: strip 0 has col 0 nonzero (1.0, 2.0), col 1 zero;
+        // strip 1 all zero.
+        let va = res.compressed.unwrap();
+        assert_eq!(va.nonzero_vectors(), 1);
+        assert!(va.occupied(0, 0, 0));
+        assert!(!va.occupied(0, 0, 1));
+        assert!(!va.occupied(0, 1, 0));
+    }
+
+    #[test]
+    fn no_compression_when_r_zero() {
+        let t = Tensor::from_vec(&[1, 2, 2], vec![1.0, -1.0, 0.5, 2.0]);
+        let res = postprocess(t, 0);
+        assert!(res.compressed.is_none());
+        assert_eq!(res.zeroed_elems, 1);
+    }
+
+    #[test]
+    fn dram_bytes_count_payload_and_index() {
+        let t = Tensor::from_vec(&[1, 4, 2], vec![1.0; 8]);
+        let va = VectorActivations::from_tensor(&t, 2);
+        // 4 nonzero vectors × 2 elems × 2 bytes + 4 × 2 index bytes = 24.
+        assert_eq!(output_dram_bytes(&va, 2, 2), 24);
+    }
+}

@@ -1,0 +1,620 @@
+//! The dense and vector-sparse dataflows of §III — the scheduler that maps
+//! a conv layer onto the `[B, R, C]` PE arrays and counts every cycle.
+//!
+//! ## Mapping (from Fig 4/7 and §IV's configuration discussion)
+//!
+//! * The `H` dimension is tiled into strips of `R` rows; an input vector is
+//!   one `R`-row column of one channel within a strip.
+//! * The `B` arrays serve `B` different filters (output channels) in
+//!   parallel — a *filter group*. Groups are processed sequentially
+//!   (`ceil(K / B)` groups).
+//! * Within a group each array sweeps channels, strips, then input columns
+//!   *independently* (per-array SRAM index pointers); arrays re-synchronize
+//!   at the **group boundary**, where the group advances at the pace of its
+//!   slowest filter. This group-level load imbalance is the multi-array
+//!   **sync loss** separating the design from the ideal vector-sparse
+//!   machine — wider groups lose more, which is exactly the paper's 92%
+//!   (`[4,14,3]`, 4-filter groups) vs 85% (`[8,7,3]`, 8-filter groups).
+//! * Dense mode issues every vector regardless of content; vector-sparse
+//!   mode issues only nonzero-vector pairs. Boundary pairs whose output
+//!   column falls outside the plane still occupy their slot (Table I `X`),
+//!   exactly as the hardware behaves (no look-ahead).
+//!
+//! The cycle count of the sparse flow is
+//! `Σ_groups max_{k ∈ group} Σ_c Σ_strips |nzI(c,s)| · |nzW(k,c)|` plus a
+//! small context-switch overhead per active block; dense replaces the two
+//! factors by `W` and `KW` (making every filter equal, so dense has no
+//! sync loss). The functional mode additionally pushes values through
+//! [`PeArray`]/[`Accumulator`] and must reproduce the golden conv exactly.
+
+use super::accumulator::Accumulator;
+use super::config::SimConfig;
+use super::dram::DramTraffic;
+use super::index_unit::{output_col, IssuedPair};
+use super::pe_array::diagonal_product;
+use super::stats::SimStats;
+use super::trace::{Trace, TraceEvent};
+use crate::sparse::{VectorActivations, VectorWeights};
+use crate::tensor::conv::ConvSpec;
+use crate::tensor::Tensor;
+
+/// Dataflow selector: the same hardware, with or without zero skipping.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Mode {
+    /// Issue every vector pair (the paper's dense CNN baseline flow).
+    Dense,
+    /// Skip all-zero input/weight vectors (the paper's contribution).
+    VectorSparse,
+}
+
+/// Result of simulating one conv layer.
+#[derive(Debug)]
+pub struct LayerResult {
+    pub stats: SimStats,
+    /// Cycle count the same layer takes in [`Mode::Dense`] (the speedup
+    /// denominator; always computed, it is closed-form).
+    pub dense_cycles: u64,
+    /// Functional output `[K, H_out, W_out]` (bias added, **pre**-ReLU);
+    /// `None` in timing-only runs.
+    pub output: Option<Tensor>,
+}
+
+/// Simulate one conv layer on the VSCNN accelerator.
+///
+/// * `input` — `[C, H, W]` activations (post-ReLU of the previous layer);
+/// * `weight` — `[K, C, KH, KW]`, `KH` must equal the array column count;
+/// * `functional` — also compute output values through the PE dataflow;
+/// * `trace` — per-cycle event sink (use [`Trace::disabled`] for speed).
+///
+/// Only stride 1 is supported (the paper's optimized case; §II-B defers
+/// other strides to a remapping layer).
+pub fn simulate_layer(
+    input: &Tensor,
+    weight: &Tensor,
+    bias: Option<&[f32]>,
+    cfg: &SimConfig,
+    spec: ConvSpec,
+    mode: Mode,
+    functional: bool,
+    trace: &mut Trace,
+) -> LayerResult {
+    assert_eq!(spec.stride, 1, "VSCNN dataflow models unit stride only");
+    assert_eq!(input.ndim(), 3);
+    assert_eq!(weight.ndim(), 4);
+    let (c_in, h, w) = (input.shape()[0], input.shape()[1], input.shape()[2]);
+    let (k_out, wc, kh, kw) = (
+        weight.shape()[0],
+        weight.shape()[1],
+        weight.shape()[2],
+        weight.shape()[3],
+    );
+    assert_eq!(c_in, wc, "channel mismatch");
+    assert_eq!(
+        kh, cfg.pe.cols,
+        "kernel height {kh} must equal PE columns {}",
+        cfg.pe.cols
+    );
+    let h_out = crate::tensor::conv::out_dim(h, kh, spec);
+    let w_out = crate::tensor::conv::out_dim(w, kw, spec);
+
+    let r = cfg.pe.rows;
+    let b = cfg.pe.arrays;
+    let va = VectorActivations::from_tensor(input, r);
+    let vw = VectorWeights::from_tensor(weight);
+    let strips = va.strips;
+    let n_groups = k_out.div_ceil(b);
+
+    // Dense reference: every (group, channel, strip) block issues W*KW
+    // pairs per array and pays one context switch.
+    let dense_blocks = (n_groups * c_in * strips) as u64;
+    let dense_cycles =
+        dense_blocks * (w as u64) * (kw as u64) + dense_blocks * cfg.context_switch_cycles;
+
+    let mut stats = SimStats::default();
+    let mut acc = functional.then(|| {
+        let mut a = Accumulator::new(k_out, h_out, w_out);
+        if let Some(bias) = bias {
+            for (k, &bv) in bias.iter().enumerate() {
+                for row in 0..h_out {
+                    for col in 0..w_out {
+                        *a.output_mut().at3_mut(k, row, col) = bv;
+                    }
+                }
+            }
+        }
+        a
+    });
+
+    // Dense-mode "virtual" index lists: all columns present.
+    let all_input_cols: Vec<u16> = (0..w as u16).collect();
+    let all_weight_cols: Vec<u8> = (0..kw as u8).collect();
+
+    // ---- shared precomputes (perf: hoisted out of the group loop;
+    // EXPERIMENTS.md §Perf) ------------------------------------------------
+
+    // Per-(c, s) nonzero-input-vector counts.
+    let nz_in_per_cs: Vec<u64> = (0..c_in)
+        .flat_map(|c| (0..strips).map(move |s| (c, s)))
+        .map(|(c, s)| match mode {
+            Mode::Dense => w as u64,
+            Mode::VectorSparse => va.nz_cols(c, s).len() as u64,
+        })
+        .collect();
+    // Per-channel: Σ_s |nzI| and the number of strips with any work.
+    let mut sum_nz_in = vec![0u64; c_in];
+    let mut live_strips = vec![0u64; c_in];
+    for c in 0..c_in {
+        for s in 0..strips {
+            let nz = nz_in_per_cs[c * strips + s];
+            sum_nz_in[c] += nz;
+            live_strips[c] += (nz > 0) as u64;
+        }
+    }
+
+    // --- timing: arrays run independently within a group, sync at the
+    // group boundary. work_k = Σ_c [|nzW(k,c)| · Σ_s|nzI(c,s)| + ctx ·
+    // live_strips(c)] — channels with no weight vectors cost nothing.
+    for g in 0..n_groups {
+        let filters = g * b..((g + 1) * b).min(k_out);
+        let n_filters = filters.len();
+        let mut max_work = 0u64;
+        let mut max_ctx = 0u64;
+        let mut sum_work = 0u64;
+        for k in filters {
+            let mut wk = 0u64;
+            let mut ctx = 0u64;
+            for c in 0..c_in {
+                let n_wcols = match mode {
+                    Mode::Dense => kw as u64,
+                    Mode::VectorSparse => vw.nz_cols(k, c).len() as u64,
+                };
+                if n_wcols == 0 {
+                    continue;
+                }
+                wk += n_wcols * sum_nz_in[c] + cfg.context_switch_cycles * live_strips[c];
+                ctx += cfg.context_switch_cycles * live_strips[c];
+            }
+            sum_work += wk;
+            if (wk, ctx) > (max_work, max_ctx) {
+                max_work = wk;
+                max_ctx = ctx;
+            }
+        }
+        stats.cycles += max_work;
+        stats.overhead_cycles += max_ctx;
+        stats.sync_stall_slots +=
+            n_filters as u64 * max_work - sum_work + (b - n_filters) as u64 * max_work;
+    }
+
+    // --- per-pair accounting: group-independent, computed once ----------
+    for c in 0..c_in {
+        // Σ over all filters of this channel's nonzero weight vectors, and
+        // how many filters carry each kernel column j.
+        let mut sum_w_all = 0u64;
+        let mut filters_with_j = vec![0u64; kw];
+        match mode {
+            Mode::Dense => {
+                sum_w_all = (k_out * kw) as u64;
+                filters_with_j.fill(k_out as u64);
+            }
+            Mode::VectorSparse => {
+                for k in 0..k_out {
+                    for &j in vw.nz_cols(k, c) {
+                        sum_w_all += 1;
+                        filters_with_j[j as usize] += 1;
+                    }
+                }
+            }
+        }
+
+        let skipped_w_per_nz_input = (k_out * kw) as u64 - sum_w_all;
+        for s in 0..strips {
+            let icols: &[u16] = match mode {
+                Mode::Dense => &all_input_cols,
+                Mode::VectorSparse => va.nz_cols(c, s),
+            };
+            if icols.is_empty() {
+                if mode == Mode::VectorSparse {
+                    stats.skipped_input += (w * k_out * kw) as u64;
+                }
+                continue;
+            }
+            if mode == Mode::VectorSparse {
+                stats.skipped_input += (w as u64 - icols.len() as u64) * (k_out * kw) as u64;
+                stats.skipped_weight += icols.len() as u64 * skipped_w_per_nz_input;
+            }
+
+            let issued: u64 = icols.len() as u64 * sum_w_all;
+            stats.issued_pairs += issued;
+            stats.macs += issued * (r as u64) * (kh as u64);
+
+            // Boundary (X) pairs: output col i - j + pad outside the
+            // plane. Counted per kernel column once, weighted by how many
+            // filters issue that column.
+            for (j, &nf) in filters_with_j.iter().enumerate() {
+                if nf == 0 {
+                    continue;
+                }
+                let lo = j as i64 - spec.pad as i64; // i < lo invalid
+                let hi = w_out as i64 + j as i64 - spec.pad as i64; // i >= hi invalid
+                let below = icols.partition_point(|&i| (i as i64) < lo) as u64;
+                let above =
+                    icols.len() as u64 - icols.partition_point(|&i| (i as i64) < hi) as u64;
+                stats.boundary_pairs += nf * (below + above);
+            }
+        }
+    }
+
+    // --- functional + trace (values through the PE dataflow) ------------
+    if functional || trace.enabled() {
+        for g in 0..n_groups {
+            let filters: Vec<usize> = (g * b..((g + 1) * b).min(k_out)).collect();
+            for c in 0..c_in {
+                let wcols: Vec<&[u8]> = filters
+                    .iter()
+                    .map(|&k| match mode {
+                        Mode::Dense => &all_weight_cols[..],
+                        Mode::VectorSparse => vw.nz_cols(k, c),
+                    })
+                    .collect();
+                for s in 0..strips {
+                    let icols: &[u16] = match mode {
+                        Mode::Dense => &all_input_cols,
+                        Mode::VectorSparse => va.nz_cols(c, s),
+                    };
+                    let base = s * r;
+                    let rows_here = ((s + 1) * r).min(h) - base;
+                    for (pos, &i) in icols.iter().enumerate() {
+                        // Input column vector (zero-padded to R for ragged
+                        // last strips).
+                        let mut col = vec![0.0f32; r];
+                        for (rr, cv) in col.iter_mut().enumerate().take(rows_here) {
+                            *cv = input.at3(c, base + rr, i as usize);
+                        }
+                        for (ai, &k) in filters.iter().enumerate() {
+                            for &j in wcols[ai] {
+                                let oc = output_col(i as usize, j as usize, spec.pad, w_out);
+                                trace.record(TraceEvent {
+                                    cycle: pos as u64,
+                                    array: ai,
+                                    filter: k,
+                                    channel: c,
+                                    strip: s,
+                                    pair: IssuedPair {
+                                        input_col: i as usize,
+                                        weight_col: j as usize,
+                                        output_col: oc,
+                                    },
+                                });
+                                if let Some(acc) = acc.as_mut() {
+                                    let wcol: Vec<f32> = (0..kh)
+                                        .map(|rr| weight.at4(k, c, rr, j as usize))
+                                        .collect();
+                                    let diag = diagonal_product(&col, &wcol);
+                                    acc.add_partial(k, &diag, base, oc, kh, spec.pad);
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    // --- DRAM traffic -------------------------------------------------
+    let bpe = cfg.sram.bytes_per_elem;
+    let (in_elems, in_vecs, w_elems, w_vecs) = match mode {
+        Mode::Dense => (
+            c_in * h * w,
+            0usize,
+            k_out * c_in * kh * kw,
+            0usize,
+        ),
+        Mode::VectorSparse => (
+            va.sram_elems(),
+            va.nonzero_vectors(),
+            vw.sram_elems(),
+            vw.nonzero_vectors(),
+        ),
+    };
+    // Inputs are re-read once per filter group unless the input buffer
+    // holds the layer's (compressed) activations entirely.
+    let input_rounds = if cfg.sram.input_bytes >= in_elems * bpe {
+        1
+    } else {
+        n_groups
+    } as u64;
+    // SRAM residency peaks (Fig 3's buffers): the input buffer holds the
+    // layer's compressed activations (or the largest strip working set
+    // when streaming), the weight buffer one filter group, the psum buffer
+    // one strip of partial output columns per array.
+    stats.sram_input_peak = ((in_elems * bpe) as u64).min(cfg.sram.input_bytes as u64);
+    stats.sram_weight_peak = ((w_elems * bpe) as u64 / n_groups.max(1) as u64)
+        .max((b * kh * kw * bpe) as u64);
+    stats.sram_psum_peak = (b * (r + kh - 1) * w_out * bpe) as u64;
+    stats.dram = DramTraffic {
+        input_read: (in_elems * bpe) as u64 * input_rounds,
+        weight_read: (w_elems * bpe) as u64,
+        // Output traffic is added by the coordinator after post-processing
+        // (it depends on the *output* sparsity).
+        output_write: 0,
+        index_bytes: ((in_vecs as u64 * input_rounds) + w_vecs as u64) * 2,
+    };
+
+    LayerResult {
+        stats,
+        dense_cycles,
+        output: acc.map(|a| a.into_output()),
+    }
+}
+
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::config::SimConfig;
+    use crate::tensor::conv::{conv2d, ConvSpec};
+    use crate::util::rng::Pcg32;
+
+    fn small_cfg(arrays: usize, rows: usize) -> SimConfig {
+        let mut cfg = SimConfig::paper_4_14_3();
+        cfg.pe.arrays = arrays;
+        cfg.pe.rows = rows;
+        cfg.context_switch_cycles = 0;
+        cfg
+    }
+
+    fn random_sparse(rng: &mut Pcg32, shape: &[usize], density: f32) -> Tensor {
+        let n: usize = shape.iter().product();
+        Tensor::from_vec(
+            shape,
+            (0..n)
+                .map(|_| if rng.bernoulli(density) { rng.normal() } else { 0.0 })
+                .collect(),
+        )
+    }
+
+    /// The paper's worked example (Fig 6/7, Table I): 5x5 input, pad 1,
+    /// 3x3 kernel, 15 PEs (R=5). Dense = 15 cycles, sparse = 8 cycles
+    /// (input column B and weight column WC all-zero), saving 47%.
+    #[test]
+    fn table1_cycle_counts() {
+        let cfg = small_cfg(1, 5);
+        let spec = ConvSpec { stride: 1, pad: 1 };
+        // Build the example: column B (index 1) of the input is zero and
+        // kernel column WC (index 2) is zero.
+        let mut rng = Pcg32::seeded(2);
+        let mut input = Tensor::zeros(&[1, 5, 5]);
+        for r in 0..5 {
+            for c in [0usize, 2, 3, 4] {
+                *input.at3_mut(0, r, c) = rng.f32_range(0.5, 1.0);
+            }
+        }
+        let mut weight = Tensor::zeros(&[1, 1, 3, 3]);
+        for i in 0..3 {
+            for j in 0..2 {
+                *weight.at4_mut(0, 0, i, j) = rng.f32_range(0.5, 1.0);
+            }
+        }
+
+        let mut tr = Trace::disabled();
+        let dense = simulate_layer(
+            &input, &weight, None, &cfg, spec, Mode::Dense, false, &mut tr,
+        );
+        assert_eq!(dense.stats.cycles, 15);
+        assert_eq!(dense.dense_cycles, 15);
+
+        let sparse = simulate_layer(
+            &input, &weight, None, &cfg, spec, Mode::VectorSparse, false, &mut tr,
+        );
+        assert_eq!(sparse.stats.cycles, 8);
+        // Saving 47% (paper §III).
+        let saving = 1.0 - sparse.stats.cycles as f64 / dense.stats.cycles as f64;
+        assert!((saving - 0.4667).abs() < 0.01, "saving {saving}");
+        // Skip accounting must close the books: issued + skipped = dense.
+        assert_eq!(
+            sparse.stats.issued_pairs + sparse.stats.skipped_pairs(),
+            15
+        );
+        // Table I sparse flow has exactly one X slot (E × WA).
+        assert_eq!(sparse.stats.boundary_pairs, 1);
+    }
+
+    /// Functional invariant: the sparse dataflow output equals the golden
+    /// conv (zero vectors contribute nothing), dense likewise.
+    #[test]
+    fn functional_matches_conv2d() {
+        let mut rng = Pcg32::seeded(9);
+        for _ in 0..8 {
+            let c_in = rng.range(1, 4);
+            let k_out = rng.range(1, 6);
+            let h = rng.range(4, 12);
+            let w = rng.range(4, 12);
+            let spec = ConvSpec { stride: 1, pad: 1 };
+            let cfg = small_cfg(rng.range(1, 4), rng.range(2, 6));
+            let input = random_sparse(&mut rng, &[c_in, h, w], 0.5);
+            let weight = random_sparse(&mut rng, &[k_out, c_in, 3, 3], 0.4);
+            let bias: Vec<f32> = (0..k_out).map(|_| rng.normal()).collect();
+            let golden = conv2d(&input, &weight, Some(&bias), spec);
+
+            let mut tr = Trace::disabled();
+            for mode in [Mode::Dense, Mode::VectorSparse] {
+                let res = simulate_layer(
+                    &input,
+                    &weight,
+                    Some(&bias),
+                    &cfg,
+                    spec,
+                    mode,
+                    true,
+                    &mut tr,
+                );
+                let out = res.output.unwrap();
+                assert!(
+                    golden.allclose(&out, 1e-3, 1e-3),
+                    "mode {mode:?}: diff {}",
+                    golden.max_abs_diff(&out)
+                );
+            }
+        }
+    }
+
+    /// Sparse cycles never exceed dense cycles, and equal them for fully
+    /// dense data.
+    #[test]
+    fn sparse_never_slower() {
+        let mut rng = Pcg32::seeded(10);
+        let cfg = small_cfg(2, 4);
+        let spec = ConvSpec::default();
+        for density in [1.0f32, 0.8, 0.4, 0.1] {
+            let input = random_sparse(&mut rng, &[2, 8, 8], density);
+            let weight = random_sparse(&mut rng, &[4, 2, 3, 3], density);
+            let mut tr = Trace::disabled();
+            let res = simulate_layer(
+                &input, &weight, None, &cfg, spec, Mode::VectorSparse, false, &mut tr,
+            );
+            assert!(
+                res.stats.cycles <= res.dense_cycles,
+                "density {density}: {} > {}",
+                res.stats.cycles,
+                res.dense_cycles
+            );
+            if density == 1.0 {
+                assert_eq!(res.stats.cycles, res.dense_cycles);
+                assert_eq!(res.stats.skipped_pairs(), 0);
+            }
+        }
+    }
+
+    /// Smaller R (more, shorter vectors) can only expose more zero vectors:
+    /// cycles(R=2) <= cycles(R=8) on the same data — the paper's reason
+    /// [8,7,3] beats [4,14,3].
+    #[test]
+    fn smaller_vectors_skip_more() {
+        let mut rng = Pcg32::seeded(11);
+        let input = random_sparse(&mut rng, &[2, 16, 10], 0.3);
+        let weight = random_sparse(&mut rng, &[2, 2, 3, 3], 0.5);
+        let spec = ConvSpec::default();
+        let mut tr = Trace::disabled();
+        let big = simulate_layer(
+            &input,
+            &weight,
+            None,
+            &small_cfg(1, 8),
+            spec,
+            Mode::VectorSparse,
+            false,
+            &mut tr,
+        );
+        let small = simulate_layer(
+            &input,
+            &weight,
+            None,
+            &small_cfg(1, 2),
+            spec,
+            Mode::VectorSparse,
+            false,
+            &mut tr,
+        );
+        // Normalize: cycles scale with strip count × vector length; compare
+        // issued pairs per dense pair instead.
+        let frac_big = big.stats.cycles as f64 / big.dense_cycles as f64;
+        let frac_small = small.stats.cycles as f64 / small.dense_cycles as f64;
+        assert!(
+            frac_small <= frac_big + 1e-9,
+            "small {frac_small} vs big {frac_big}"
+        );
+    }
+
+    /// More arrays per group ⇒ more sync loss (the 92% vs 85% effect).
+    #[test]
+    fn wider_groups_stall_more() {
+        let mut rng = Pcg32::seeded(12);
+        let input = random_sparse(&mut rng, &[3, 14, 10], 0.6);
+        let weight = random_sparse(&mut rng, &[8, 3, 3, 3], 0.3);
+        let spec = ConvSpec::default();
+        let mut tr = Trace::disabled();
+        let narrow = simulate_layer(
+            &input,
+            &weight,
+            None,
+            &small_cfg(2, 7),
+            spec,
+            Mode::VectorSparse,
+            false,
+            &mut tr,
+        );
+        let wide = simulate_layer(
+            &input,
+            &weight,
+            None,
+            &small_cfg(8, 7),
+            spec,
+            Mode::VectorSparse,
+            false,
+            &mut tr,
+        );
+        assert!(
+            wide.stats.utilization() <= narrow.stats.utilization() + 1e-9,
+            "wide {} narrow {}",
+            wide.stats.utilization(),
+            narrow.stats.utilization()
+        );
+    }
+
+    /// Issue accounting always closes: issued + skipped = dense pairs.
+    #[test]
+    fn pair_accounting_closes_randomized() {
+        let mut rng = Pcg32::seeded(13);
+        for _ in 0..10 {
+            let c_in = rng.range(1, 4);
+            let k_out = rng.range(1, 7);
+            let h = rng.range(3, 15);
+            let w = rng.range(3, 15);
+            let cfg = small_cfg(rng.range(1, 5), rng.range(2, 7));
+            let input = random_sparse(&mut rng, &[c_in, h, w], 0.4);
+            let weight = random_sparse(&mut rng, &[k_out, c_in, 3, 3], 0.4);
+            let mut tr = Trace::disabled();
+            let res = simulate_layer(
+                &input,
+                &weight,
+                None,
+                &cfg,
+                ConvSpec::default(),
+                Mode::VectorSparse,
+                false,
+                &mut tr,
+            );
+            let strips = h.div_ceil(cfg.pe.rows);
+            let n_groups = k_out.div_ceil(cfg.pe.arrays);
+            // Dense pair count uses group-padded filters? No: only real
+            // filters issue; idle arrays are stalls, not pairs.
+            let dense_pairs = (k_out * c_in * strips * w * 3) as u64;
+            let _ = n_groups;
+            assert_eq!(
+                res.stats.issued_pairs + res.stats.skipped_pairs(),
+                dense_pairs,
+                "accounting mismatch"
+            );
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "unit stride")]
+    fn stride_two_unsupported() {
+        let cfg = small_cfg(1, 4);
+        let input = Tensor::zeros(&[1, 8, 8]);
+        let weight = Tensor::zeros(&[1, 1, 3, 3]);
+        let mut tr = Trace::disabled();
+        let _ = simulate_layer(
+            &input,
+            &weight,
+            None,
+            &cfg,
+            ConvSpec { stride: 2, pad: 1 },
+            Mode::Dense,
+            false,
+            &mut tr,
+        );
+    }
+}

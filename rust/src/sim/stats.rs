@@ -1,0 +1,143 @@
+//! Cycle/work/traffic counters — every number in the paper's figures is
+//! derived from these.
+
+use super::dram::DramTraffic;
+use crate::util::json::Json;
+
+/// Statistics of one simulated layer (or an accumulated network run).
+#[derive(Debug, Default, Clone, Copy, PartialEq)]
+pub struct SimStats {
+    /// Compute cycles consumed (the paper's primary metric).
+    pub cycles: u64,
+    /// Vector pairs issued to the PE arrays (busy issue slots, summed over
+    /// arrays — one array-cycle each).
+    pub issued_pairs: u64,
+    /// Issue slots where an array idled waiting for the slowest array in
+    /// its group (multi-array sync loss).
+    pub sync_stall_slots: u64,
+    /// Pairs skipped because the input vector was all-zero.
+    pub skipped_input: u64,
+    /// Pairs skipped because the weight vector was all-zero (counted for
+    /// pairs whose input vector was nonzero; the overlap is attributed to
+    /// the input).
+    pub skipped_weight: u64,
+    /// Issued pairs whose output column fell outside the plane (X slots).
+    pub boundary_pairs: u64,
+    /// Scalar MACs performed (R*C per issued pair).
+    pub macs: u64,
+    /// Context-switch overhead cycles charged.
+    pub overhead_cycles: u64,
+    /// External memory traffic.
+    pub dram: DramTraffic,
+    /// Peak input-buffer residency (compressed), bytes.
+    pub sram_input_peak: u64,
+    /// Peak weight-buffer residency (compressed, one filter group), bytes.
+    pub sram_weight_peak: u64,
+    /// Peak partial-sum-buffer residency, bytes.
+    pub sram_psum_peak: u64,
+}
+
+impl SimStats {
+    /// Merge layer stats into a running total.
+    pub fn merge(&mut self, other: &SimStats) {
+        self.cycles += other.cycles;
+        self.issued_pairs += other.issued_pairs;
+        self.sync_stall_slots += other.sync_stall_slots;
+        self.skipped_input += other.skipped_input;
+        self.skipped_weight += other.skipped_weight;
+        self.boundary_pairs += other.boundary_pairs;
+        self.macs += other.macs;
+        self.overhead_cycles += other.overhead_cycles;
+        self.dram.merge(&other.dram);
+        self.sram_input_peak = self.sram_input_peak.max(other.sram_input_peak);
+        self.sram_weight_peak = self.sram_weight_peak.max(other.sram_weight_peak);
+        self.sram_psum_peak = self.sram_psum_peak.max(other.sram_psum_peak);
+    }
+
+    /// Total pairs skipped by zero-vector elimination.
+    pub fn skipped_pairs(&self) -> u64 {
+        self.skipped_input + self.skipped_weight
+    }
+
+    /// PE issue-slot utilization: busy slots / (busy + sync stalls).
+    pub fn utilization(&self) -> f64 {
+        let total = self.issued_pairs + self.sync_stall_slots;
+        if total == 0 {
+            0.0
+        } else {
+            self.issued_pairs as f64 / total as f64
+        }
+    }
+
+    /// Serialize for reports.
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("cycles", self.cycles)
+            .set("issued_pairs", self.issued_pairs)
+            .set("sync_stall_slots", self.sync_stall_slots)
+            .set("skipped_input", self.skipped_input)
+            .set("skipped_weight", self.skipped_weight)
+            .set("boundary_pairs", self.boundary_pairs)
+            .set("macs", self.macs)
+            .set("overhead_cycles", self.overhead_cycles)
+            .set("utilization", self.utilization())
+            .set("dram_total_bytes", self.dram.total())
+            .set("sram_input_peak", self.sram_input_peak)
+            .set("sram_weight_peak", self.sram_weight_peak)
+            .set("sram_psum_peak", self.sram_psum_peak);
+        o
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn merge_accumulates_everything() {
+        let a = SimStats {
+            cycles: 10,
+            issued_pairs: 8,
+            sync_stall_slots: 2,
+            skipped_input: 3,
+            skipped_weight: 1,
+            boundary_pairs: 1,
+            macs: 120,
+            overhead_cycles: 2,
+            dram: DramTraffic {
+                input_read: 5,
+                ..Default::default()
+            },
+            sram_input_peak: 10,
+            sram_weight_peak: 20,
+            sram_psum_peak: 30,
+        };
+        let mut t = SimStats::default();
+        t.merge(&a);
+        t.merge(&a);
+        assert_eq!(t.cycles, 20);
+        assert_eq!(t.macs, 240);
+        assert_eq!(t.skipped_pairs(), 8);
+        assert_eq!(t.dram.input_read, 10);
+    }
+
+    #[test]
+    fn utilization_bounds() {
+        let mut s = SimStats::default();
+        assert_eq!(s.utilization(), 0.0);
+        s.issued_pairs = 3;
+        s.sync_stall_slots = 1;
+        assert!((s.utilization() - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn json_has_key_fields() {
+        let s = SimStats {
+            cycles: 42,
+            ..Default::default()
+        };
+        let j = s.to_json();
+        assert_eq!(j.get("cycles").unwrap().as_usize(), Some(42));
+        assert!(j.get("utilization").is_some());
+    }
+}

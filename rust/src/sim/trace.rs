@@ -1,0 +1,154 @@
+//! Per-cycle issue trace — regenerates the paper's Table I timing diagram
+//! and the Fig 8 dataflow chart for small examples.
+
+use super::index_unit::IssuedPair;
+
+/// One traced cycle of one PE array.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TraceEvent {
+    pub cycle: u64,
+    pub array: usize,
+    /// Filter (output channel) the array is serving.
+    pub filter: usize,
+    /// Input channel.
+    pub channel: usize,
+    /// Row strip index.
+    pub strip: usize,
+    pub pair: IssuedPair,
+}
+
+/// A bounded cycle trace (records up to `limit` events to keep memory flat
+/// on big runs; Table I needs only tens).
+#[derive(Debug)]
+pub struct Trace {
+    pub events: Vec<TraceEvent>,
+    limit: usize,
+    dropped: u64,
+}
+
+impl Trace {
+    pub fn new(limit: usize) -> Trace {
+        Trace {
+            events: Vec::new(),
+            limit,
+            dropped: 0,
+        }
+    }
+
+    /// Disabled trace (records nothing).
+    pub fn disabled() -> Trace {
+        Trace::new(0)
+    }
+
+    pub fn record(&mut self, ev: TraceEvent) {
+        if self.events.len() < self.limit {
+            self.events.push(ev);
+        } else {
+            self.dropped += 1;
+        }
+    }
+
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+
+    /// Whether this trace records anything (fast-path check so the
+    /// scheduler can skip the functional inner loop on timing-only runs).
+    pub fn enabled(&self) -> bool {
+        self.limit > 0
+    }
+
+    /// Render a Table-I-style timing diagram: one row per field, one column
+    /// per cycle, for a single-array single-channel trace. Columns are
+    /// labelled like the paper: input columns A.., weight columns WA..WC,
+    /// output columns OA.. (X for discarded boundary slots).
+    pub fn render_timing_table(&self) -> String {
+        fn col_name(i: usize) -> String {
+            // 0 -> A, 1 -> B, ... wraps after Z.
+            let c = (b'A' + (i % 26) as u8) as char;
+            c.to_string()
+        }
+        let mut input_row = Vec::new();
+        let mut weight_row = Vec::new();
+        let mut output_row = Vec::new();
+        let mut cycle_row = Vec::new();
+        for (i, ev) in self.events.iter().enumerate() {
+            cycle_row.push(format!("{}", i + 1));
+            input_row.push(col_name(ev.pair.input_col));
+            weight_row.push(format!("W{}", col_name(ev.pair.weight_col)));
+            output_row.push(match ev.pair.output_col {
+                Some(o) => format!("O{}", col_name(o)),
+                None => "X".to_string(),
+            });
+        }
+        let render = |name: &str, cells: &[String]| {
+            let body = cells
+                .iter()
+                .map(|c| format!("{c:>4}"))
+                .collect::<Vec<_>>()
+                .join(" |");
+            format!("| {name:<6} |{body} |")
+        };
+        [
+            render("Cycle", &cycle_row),
+            render("Input", &input_row),
+            render("Weight", &weight_row),
+            render("Output", &output_row),
+        ]
+        .join("\n")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::index_unit::IssuedPair;
+
+    fn ev(cycle: u64, input_col: usize, weight_col: usize, output_col: Option<usize>) -> TraceEvent {
+        TraceEvent {
+            cycle,
+            array: 0,
+            filter: 0,
+            channel: 0,
+            strip: 0,
+            pair: IssuedPair {
+                input_col,
+                weight_col,
+                output_col,
+            },
+        }
+    }
+
+    #[test]
+    fn limit_and_dropped() {
+        let mut t = Trace::new(2);
+        t.record(ev(0, 0, 0, Some(1)));
+        t.record(ev(1, 0, 1, Some(0)));
+        t.record(ev(2, 0, 2, None));
+        assert_eq!(t.events.len(), 2);
+        assert_eq!(t.dropped(), 1);
+    }
+
+    #[test]
+    fn timing_table_matches_table1_prefix() {
+        // Table I dense cycles 1..3: input A broadcast, weights WA,WB,WC,
+        // outputs OB, OA, X.
+        let mut t = Trace::new(16);
+        t.record(ev(0, 0, 0, Some(1)));
+        t.record(ev(1, 0, 1, Some(0)));
+        t.record(ev(2, 0, 2, None));
+        let table = t.render_timing_table();
+        assert!(table.contains("WA"), "{table}");
+        assert!(table.contains("OB"), "{table}");
+        assert!(table.contains("OA"), "{table}");
+        assert!(table.contains("X"), "{table}");
+    }
+
+    #[test]
+    fn disabled_trace_records_nothing() {
+        let mut t = Trace::disabled();
+        t.record(ev(0, 0, 0, None));
+        assert!(t.events.is_empty());
+        assert_eq!(t.dropped(), 1);
+    }
+}

@@ -1,0 +1,160 @@
+//! Compact bitset used for vector-occupancy maps.
+//!
+//! The simulator precomputes, per layer, one occupancy bit per candidate
+//! vector; scheduling then iterates set bits instead of scanning floats —
+//! this is the software analogue of the paper's "only nonzero vectors are
+//! in SRAM" property and is also the simulator's main speed lever.
+
+/// Fixed-size bitset backed by `u64` words.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Bitset {
+    len: usize,
+    words: Vec<u64>,
+}
+
+impl Bitset {
+    /// All-zeros bitset of `len` bits.
+    pub fn new(len: usize) -> Bitset {
+        Bitset {
+            len,
+            words: vec![0; len.div_ceil(64)],
+        }
+    }
+
+    /// Number of bits.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// True when the bitset holds no bits.
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Set bit `i` to `v`.
+    #[inline]
+    pub fn set(&mut self, i: usize, v: bool) {
+        debug_assert!(i < self.len);
+        let (w, b) = (i / 64, i % 64);
+        if v {
+            self.words[w] |= 1 << b;
+        } else {
+            self.words[w] &= !(1 << b);
+        }
+    }
+
+    /// Read bit `i`.
+    #[inline]
+    pub fn get(&self, i: usize) -> bool {
+        debug_assert!(i < self.len);
+        (self.words[i / 64] >> (i % 64)) & 1 == 1
+    }
+
+    /// Number of set bits.
+    pub fn count_ones(&self) -> usize {
+        self.words.iter().map(|w| w.count_ones() as usize).sum()
+    }
+
+    /// Fraction of set bits (vector-granularity density).
+    pub fn density(&self) -> f64 {
+        if self.len == 0 {
+            0.0
+        } else {
+            self.count_ones() as f64 / self.len as f64
+        }
+    }
+
+    /// Iterate indices of set bits in increasing order.
+    pub fn iter_ones(&self) -> impl Iterator<Item = usize> + '_ {
+        self.words.iter().enumerate().flat_map(move |(wi, &w)| {
+            let mut w = w;
+            std::iter::from_fn(move || {
+                if w == 0 {
+                    None
+                } else {
+                    let b = w.trailing_zeros() as usize;
+                    w &= w - 1;
+                    Some(wi * 64 + b)
+                }
+            })
+        })
+    }
+
+    /// Count of set bits within `[lo, hi)`.
+    pub fn count_ones_in(&self, lo: usize, hi: usize) -> usize {
+        debug_assert!(lo <= hi && hi <= self.len);
+        (lo..hi).filter(|&i| self.get(i)).count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn set_get_roundtrip() {
+        let mut b = Bitset::new(130);
+        for i in [0, 1, 63, 64, 65, 127, 128, 129] {
+            assert!(!b.get(i));
+            b.set(i, true);
+            assert!(b.get(i));
+        }
+        assert_eq!(b.count_ones(), 8);
+        b.set(64, false);
+        assert!(!b.get(64));
+        assert_eq!(b.count_ones(), 7);
+    }
+
+    #[test]
+    fn iter_ones_in_order() {
+        let mut b = Bitset::new(200);
+        let set = [3usize, 64, 65, 130, 199];
+        for &i in &set {
+            b.set(i, true);
+        }
+        let got: Vec<usize> = b.iter_ones().collect();
+        assert_eq!(got, set);
+    }
+
+    #[test]
+    fn density_and_range_count() {
+        let mut b = Bitset::new(10);
+        b.set(2, true);
+        b.set(7, true);
+        assert!((b.density() - 0.2).abs() < 1e-12);
+        assert_eq!(b.count_ones_in(0, 5), 1);
+        assert_eq!(b.count_ones_in(5, 10), 1);
+        assert_eq!(b.count_ones_in(3, 7), 0);
+    }
+
+    #[test]
+    fn empty_bitset() {
+        let b = Bitset::new(0);
+        assert!(b.is_empty());
+        assert_eq!(b.count_ones(), 0);
+        assert_eq!(b.density(), 0.0);
+        assert_eq!(b.iter_ones().count(), 0);
+    }
+
+    #[test]
+    fn randomized_matches_reference_vec_bool() {
+        use crate::util::rng::Pcg32;
+        let mut rng = Pcg32::seeded(31);
+        for _ in 0..20 {
+            let n = rng.range(1, 300);
+            let mut b = Bitset::new(n);
+            let mut r = vec![false; n];
+            for _ in 0..n {
+                let i = rng.range(0, n);
+                let v = rng.bernoulli(0.5);
+                b.set(i, v);
+                r[i] = v;
+            }
+            assert_eq!(b.count_ones(), r.iter().filter(|&&x| x).count());
+            let got: Vec<usize> = b.iter_ones().collect();
+            let want: Vec<usize> =
+                r.iter().enumerate().filter(|(_, &x)| x).map(|(i, _)| i).collect();
+            assert_eq!(got, want);
+        }
+    }
+}

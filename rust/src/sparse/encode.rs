@@ -1,0 +1,376 @@
+//! Density and work statistics at element and vector granularity — the
+//! quantities plotted in the paper's Figs 9, 10 and 11 and consumed by the
+//! ideal baselines in [`crate::baselines`].
+//!
+//! * *density* — fraction of nonzero entries (elements or vectors);
+//! * *work*   — fraction of MAC work that remains when zeros are skipped at
+//!   the given granularity. At element granularity a MAC survives iff both
+//!   its operands are nonzero; at vector granularity a PE-array cycle
+//!   survives iff both its input vector and weight vector are nonzero.
+
+use crate::sparse::vector_format::{VectorActivations, VectorWeights};
+use crate::tensor::conv::ConvSpec;
+use crate::tensor::Tensor;
+
+/// Per-layer sparsity/work report (one layer of Fig 9/10/11 + the work
+/// totals the speedup figures divide).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DensityReport {
+    /// Element-granularity input activation density (Fig 9 "input").
+    pub input_elem: f64,
+    /// Element-granularity weight density (Fig 9 "weight").
+    pub weight_elem: f64,
+    /// Element-granularity surviving-work fraction (Fig 9 "work").
+    pub work_elem: f64,
+    /// Vector-granularity input density (Fig 10/11 "input").
+    pub input_vec: f64,
+    /// Vector-granularity weight density (Fig 10/11 "weight").
+    pub weight_vec: f64,
+    /// Vector-granularity surviving-work fraction (Fig 10/11 "work").
+    pub work_vec: f64,
+    /// Total MACs of the dense layer.
+    pub macs_total: u64,
+    /// MACs surviving fine-grained skipping.
+    pub macs_nonzero: u64,
+    /// Total (input vector × weight vector) issue pairs of the dense layer.
+    pub pairs_total: u64,
+    /// Pairs surviving vector skipping.
+    pub pairs_nonzero: u64,
+}
+
+/// 2-D inclusive prefix-sum of a nonzero-indicator plane, for O(1)
+/// "nonzeros inside rectangle" queries during the exact fine-grained work
+/// count.
+struct PrefixNnz {
+    h: usize,
+    w: usize,
+    /// `(h+1) x (w+1)` summed-area table.
+    sat: Vec<u32>,
+}
+
+impl PrefixNnz {
+    fn from_channel(t: &Tensor, c: usize) -> PrefixNnz {
+        let (h, w) = (t.shape()[1], t.shape()[2]);
+        let mut sat = vec![0u32; (h + 1) * (w + 1)];
+        for i in 0..h {
+            for j in 0..w {
+                let nz = (t.at3(c, i, j) != 0.0) as u32;
+                sat[(i + 1) * (w + 1) + (j + 1)] = nz
+                    + sat[i * (w + 1) + (j + 1)]
+                    + sat[(i + 1) * (w + 1) + j]
+                    - sat[i * (w + 1) + j];
+            }
+        }
+        PrefixNnz { h, w, sat }
+    }
+
+    /// Nonzeros in rows `[r0, r1]` × cols `[c0, c1]`, inclusive, clamped.
+    fn rect(&self, r0: isize, r1: isize, c0: isize, c1: isize) -> u64 {
+        let r0 = r0.max(0) as usize;
+        let c0 = c0.max(0) as usize;
+        let r1 = (r1.min(self.h as isize - 1)).max(-1);
+        let c1 = (c1.min(self.w as isize - 1)).max(-1);
+        if r1 < r0 as isize || c1 < c0 as isize {
+            return 0;
+        }
+        let (r1, c1) = (r1 as usize, c1 as usize);
+        let w1 = self.w + 1;
+        (self.sat[(r1 + 1) * w1 + (c1 + 1)] + self.sat[r0 * w1 + c0]
+            - self.sat[r0 * w1 + (c1 + 1)]
+            - self.sat[(r1 + 1) * w1 + c0]) as u64
+    }
+}
+
+/// Exact count of surviving fine-grained MACs for a conv layer.
+///
+/// A MAC indexed `(k, c, oh, ow, i, j)` survives iff `weight[k,c,i,j] != 0`
+/// and the input pixel `(c, oh*s+i-p, ow*s+j-p)` is in-bounds and nonzero.
+/// Computed as: for every nonzero weight tap, count the nonzero input pixels
+/// whose position maps to a valid output — an O(1) summed-area query.
+pub fn fine_grained_work(input: &Tensor, weight: &Tensor, spec: ConvSpec) -> u64 {
+    let (c_in, kh, kw) = (weight.shape()[1], weight.shape()[2], weight.shape()[3]);
+    assert_eq!(c_in, input.shape()[0]);
+    let h_out = crate::tensor::conv::out_dim(input.shape()[1], kh, spec) as isize;
+    let w_out = crate::tensor::conv::out_dim(input.shape()[2], kw, spec) as isize;
+    let (s, p) = (spec.stride as isize, spec.pad as isize);
+
+    // How many filters have a nonzero tap at (c, i, j)? One contiguous
+    // pass over the weight tensor (perf: this loop visits K*C*KH*KW
+    // elements and dominated layer_report before being linearized —
+    // EXPERIMENTS.md §Perf).
+    let taps = kh * kw;
+    let mut filters_nz_at = vec![0u32; c_in * taps];
+    for filt in weight.data().chunks_exact(c_in * taps) {
+        for (off, &v) in filt.iter().enumerate() {
+            if v != 0.0 {
+                filters_nz_at[off] += 1;
+            }
+        }
+    }
+
+    let mut total = 0u64;
+    for c in 0..c_in {
+        let sat = PrefixNnz::from_channel(input, c);
+        for i in 0..kh {
+            for j in 0..kw {
+                let filters_nz = filters_nz_at[(c * kh + i) * kw + j] as u64;
+                if filters_nz == 0 {
+                    continue;
+                }
+                if s == 1 {
+                    // Valid input rows: ih = oh + i - p for oh in [0, h_out).
+                    let r0 = i as isize - p;
+                    let r1 = r0 + h_out - 1;
+                    let c0 = j as isize - p;
+                    let c1 = c0 + w_out - 1;
+                    total += filters_nz * sat.rect(r0, r1, c0, c1);
+                } else {
+                    // General stride: count nonzero inputs on the stride
+                    // lattice row by row (rare path; VGG is stride 1).
+                    let mut cnt = 0u64;
+                    for oh in 0..h_out {
+                        let ih = oh * s + i as isize - p;
+                        if ih < 0 || ih >= sat.h as isize {
+                            continue;
+                        }
+                        for ow in 0..w_out {
+                            let iw = ow * s + j as isize - p;
+                            if iw < 0 || iw >= sat.w as isize {
+                                continue;
+                            }
+                            cnt += sat.rect(ih, ih, iw, iw);
+                        }
+                    }
+                    total += filters_nz * cnt;
+                }
+            }
+        }
+    }
+    total
+}
+
+/// Total dense MACs of a conv layer (every output × every tap).
+pub fn dense_macs(input: &Tensor, weight: &Tensor, spec: ConvSpec) -> u64 {
+    let (k_out, c_in, kh, kw) = (
+        weight.shape()[0],
+        weight.shape()[1],
+        weight.shape()[2],
+        weight.shape()[3],
+    );
+    let h_out = crate::tensor::conv::out_dim(input.shape()[1], kh, spec) as u64;
+    let w_out = crate::tensor::conv::out_dim(input.shape()[2], kw, spec) as u64;
+    k_out as u64 * c_in as u64 * kh as u64 * kw as u64 * h_out * w_out
+}
+
+/// Vector-granularity pair counts: `(pairs_total, pairs_nonzero)`.
+///
+/// One *pair* is one PE-array issue slot: (input vector `(c, strip, col)`)
+/// × (weight vector `(k, c, kcol)`). Dense hardware issues every pair
+/// (`C · strips · W · K · KW`); the VSCNN flow issues only pairs whose two
+/// vectors are both nonzero (boundary pairs with out-of-range output index
+/// still issue, exactly as in Table I's `X` slots).
+pub fn vector_pairs(va: &VectorActivations, vw: &VectorWeights) -> (u64, u64) {
+    assert_eq!(va.c, vw.c, "channel mismatch");
+    let total =
+        va.c as u64 * va.strips as u64 * va.w as u64 * vw.k as u64 * vw.kw as u64;
+    let mut nonzero = 0u64;
+    for c in 0..va.c {
+        // Σ_k |nzW(k,c)| — weight vectors surviving for this channel.
+        let w_nz: u64 = (0..vw.k).map(|k| vw.nz_cols(k, c).len() as u64).sum();
+        if w_nz == 0 {
+            continue;
+        }
+        let i_nz: u64 = (0..va.strips)
+            .map(|s| va.nz_cols(c, s).len() as u64)
+            .sum();
+        nonzero += w_nz * i_nz;
+    }
+    (total, nonzero)
+}
+
+/// Full per-layer report at vector length `r`.
+pub fn layer_report(input: &Tensor, weight: &Tensor, spec: ConvSpec, r: usize) -> DensityReport {
+    let va = VectorActivations::from_tensor(input, r);
+    let vw = VectorWeights::from_tensor(weight);
+    let macs_total = dense_macs(input, weight, spec);
+    let macs_nonzero = fine_grained_work(input, weight, spec);
+    let (pairs_total, pairs_nonzero) = vector_pairs(&va, &vw);
+    DensityReport {
+        input_elem: input.density(),
+        weight_elem: weight.density(),
+        work_elem: if macs_total == 0 {
+            0.0
+        } else {
+            macs_nonzero as f64 / macs_total as f64
+        },
+        input_vec: va.density(),
+        weight_vec: vw.density(),
+        work_vec: if pairs_total == 0 {
+            0.0
+        } else {
+            pairs_nonzero as f64 / pairs_total as f64
+        },
+        macs_total,
+        macs_nonzero,
+        pairs_total,
+        pairs_nonzero,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::conv::conv2d;
+    use crate::util::rng::Pcg32;
+
+    fn random_sparse(rng: &mut Pcg32, shape: &[usize], density: f32) -> Tensor {
+        let n: usize = shape.iter().product();
+        let data = (0..n)
+            .map(|_| if rng.bernoulli(density) { rng.normal() } else { 0.0 })
+            .collect();
+        Tensor::from_vec(shape, data)
+    }
+
+    /// Brute-force fine-grained work counter for validation.
+    fn brute_work(input: &Tensor, weight: &Tensor, spec: ConvSpec) -> u64 {
+        let (k_out, c_in, kh, kw) = (
+            weight.shape()[0],
+            weight.shape()[1],
+            weight.shape()[2],
+            weight.shape()[3],
+        );
+        let (h, w) = (input.shape()[1], input.shape()[2]);
+        let h_out = crate::tensor::conv::out_dim(h, kh, spec);
+        let w_out = crate::tensor::conv::out_dim(w, kw, spec);
+        let mut cnt = 0u64;
+        for k in 0..k_out {
+            for c in 0..c_in {
+                for oh in 0..h_out {
+                    for ow in 0..w_out {
+                        for i in 0..kh {
+                            for j in 0..kw {
+                                let ih = (oh * spec.stride + i) as isize - spec.pad as isize;
+                                let iw = (ow * spec.stride + j) as isize - spec.pad as isize;
+                                if ih < 0 || iw < 0 || ih >= h as isize || iw >= w as isize {
+                                    continue;
+                                }
+                                if weight.at4(k, c, i, j) != 0.0
+                                    && input.at3(c, ih as usize, iw as usize) != 0.0
+                                {
+                                    cnt += 1;
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        cnt
+    }
+
+    #[test]
+    fn fine_grained_work_matches_brute_force() {
+        let mut rng = Pcg32::seeded(404);
+        for _ in 0..15 {
+            let c_in = rng.range(1, 4);
+            let k_out = rng.range(1, 4);
+            let h = rng.range(3, 9);
+            let w = rng.range(3, 9);
+            let spec = ConvSpec {
+                stride: rng.range(1, 3),
+                pad: rng.range(0, 2),
+            };
+            if h + 2 * spec.pad < 3 || w + 2 * spec.pad < 3 {
+                continue;
+            }
+            let input = random_sparse(&mut rng, &[c_in, h, w], 0.5);
+            let weight = random_sparse(&mut rng, &[k_out, c_in, 3, 3], 0.4);
+            assert_eq!(
+                fine_grained_work(&input, &weight, spec),
+                brute_work(&input, &weight, spec),
+                "stride={} pad={}",
+                spec.stride,
+                spec.pad
+            );
+        }
+    }
+
+    #[test]
+    fn dense_tensors_give_density_one() {
+        let input = Tensor::from_vec(&[2, 6, 6], vec![1.0; 72]);
+        let weight = Tensor::from_vec(&[3, 2, 3, 3], vec![1.0; 54]);
+        let rep = layer_report(&input, &weight, ConvSpec::default(), 3);
+        assert_eq!(rep.input_elem, 1.0);
+        assert_eq!(rep.weight_elem, 1.0);
+        assert_eq!(rep.input_vec, 1.0);
+        assert_eq!(rep.weight_vec, 1.0);
+        assert_eq!(rep.work_vec, 1.0);
+        assert_eq!(rep.pairs_total, rep.pairs_nonzero);
+        // Element work < 1 only from padding boundary; interior all survives.
+        assert!(rep.work_elem > 0.7 && rep.work_elem <= 1.0);
+        assert_eq!(rep.macs_total, 3 * 2 * 9 * 36);
+    }
+
+    #[test]
+    fn all_zero_weight_means_no_work() {
+        let input = Tensor::from_vec(&[1, 4, 4], vec![1.0; 16]);
+        let weight = Tensor::zeros(&[2, 1, 3, 3]);
+        let rep = layer_report(&input, &weight, ConvSpec::default(), 2);
+        assert_eq!(rep.macs_nonzero, 0);
+        assert_eq!(rep.pairs_nonzero, 0);
+        assert_eq!(rep.work_vec, 0.0);
+    }
+
+    #[test]
+    fn vector_work_upper_bounds_element_work() {
+        // Skipping at coarser granularity can never skip more than
+        // fine-grained skipping: work_vec >= work_elem (modulo the boundary
+        // pairs which only exist at vector granularity — they only raise
+        // work_vec further).
+        let mut rng = Pcg32::seeded(808);
+        for _ in 0..10 {
+            let input = random_sparse(&mut rng, &[2, 8, 8], 0.4);
+            let weight = random_sparse(&mut rng, &[3, 2, 3, 3], 0.3);
+            let rep = layer_report(&input, &weight, ConvSpec::default(), 4);
+            assert!(
+                rep.work_vec >= rep.work_elem - 1e-9,
+                "vec {} < elem {}",
+                rep.work_vec,
+                rep.work_elem
+            );
+        }
+    }
+
+    #[test]
+    fn vector_pairs_match_manual_count() {
+        // 1 channel, 4x2 input, r=2 → 2 strips; one nonzero col per strip.
+        let mut input = Tensor::zeros(&[1, 4, 2]);
+        *input.at3_mut(0, 0, 0) = 1.0; // strip 0, col 0
+        *input.at3_mut(0, 2, 1) = 1.0; // strip 1, col 1
+        // 1 filter with 2 nonzero kernel columns.
+        let mut weight = Tensor::zeros(&[1, 1, 3, 3]);
+        *weight.at4_mut(0, 0, 0, 0) = 1.0;
+        *weight.at4_mut(0, 0, 1, 2) = 1.0;
+        let va = VectorActivations::from_tensor(&input, 2);
+        let vw = VectorWeights::from_tensor(&weight);
+        let (total, nz) = vector_pairs(&va, &vw);
+        // total = C(1)*strips(2)*W(2)*K(1)*KW(3) = 12
+        assert_eq!(total, 12);
+        // nz = Σ_strips |nzI| * |nzW| = (1*2) + (1*2) = 4
+        assert_eq!(nz, 4);
+    }
+
+    #[test]
+    fn conv_consistency_smoke() {
+        // The report's macs_nonzero of a dense input must equal the exact
+        // count of in-bounds (weight_nz × input_nz) products that conv2d
+        // actually performs — spot-check via an all-ones case where
+        // output values count contributing taps.
+        let input = Tensor::from_vec(&[1, 5, 5], vec![1.0; 25]);
+        let weight = Tensor::from_vec(&[1, 1, 3, 3], vec![1.0; 9]);
+        let spec = ConvSpec::default();
+        let out = conv2d(&input, &weight, None, spec);
+        let taps_sum: f32 = out.data().iter().sum();
+        assert_eq!(fine_grained_work(&input, &weight, spec), taps_sum as u64);
+    }
+}

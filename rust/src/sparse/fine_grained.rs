@@ -1,0 +1,152 @@
+//! Fine-grained (element-granularity) sparse format — the structure the
+//! comparison designs (Cambricon-X [15], SCNN [16]) index at, used here for
+//! the ideal fine-grained baseline and the Fig 9 density series.
+
+use crate::tensor::Tensor;
+
+/// CSR-like element-sparse view of a flat tensor: per-row nonzero column
+/// indices. For activations a "row" is one `(c, h)` scanline; for weights,
+/// one `(k, c, kh)` kernel row.
+#[derive(Debug, Clone)]
+pub struct FineGrained {
+    pub rows: usize,
+    pub cols: usize,
+    /// Row-pointer array (CSR `indptr`), len `rows + 1`.
+    indptr: Vec<usize>,
+    /// Column indices of nonzeros, grouped by row.
+    indices: Vec<u32>,
+    /// Nonzero values (same order as `indices`).
+    values: Vec<f32>,
+}
+
+impl FineGrained {
+    /// Encode any tensor as a 2-D CSR by flattening all but the last dim.
+    pub fn from_tensor(t: &Tensor) -> FineGrained {
+        let cols = *t.shape().last().expect("scalar tensor");
+        let rows = t.len() / cols.max(1);
+        let mut indptr = Vec::with_capacity(rows + 1);
+        let mut indices = Vec::new();
+        let mut values = Vec::new();
+        indptr.push(0);
+        for r in 0..rows {
+            for c in 0..cols {
+                let v = t.data()[r * cols + c];
+                if v != 0.0 {
+                    indices.push(c as u32);
+                    values.push(v);
+                }
+            }
+            indptr.push(indices.len());
+        }
+        FineGrained {
+            rows,
+            cols,
+            indptr,
+            indices,
+            values,
+        }
+    }
+
+    /// Number of stored nonzeros.
+    pub fn nnz(&self) -> usize {
+        self.values.len()
+    }
+
+    /// Element-granularity density (the Fig 9 series).
+    pub fn density(&self) -> f64 {
+        let total = self.rows * self.cols;
+        if total == 0 {
+            0.0
+        } else {
+            self.nnz() as f64 / total as f64
+        }
+    }
+
+    /// Nonzero `(col, value)` pairs of row `r`.
+    pub fn row(&self, r: usize) -> impl Iterator<Item = (u32, f32)> + '_ {
+        let lo = self.indptr[r];
+        let hi = self.indptr[r + 1];
+        self.indices[lo..hi]
+            .iter()
+            .copied()
+            .zip(self.values[lo..hi].iter().copied())
+    }
+
+    /// Reconstruct the dense tensor (for round-trip tests).
+    pub fn to_tensor(&self, shape: &[usize]) -> Tensor {
+        assert_eq!(shape.iter().product::<usize>(), self.rows * self.cols);
+        let mut t = Tensor::zeros(shape);
+        for r in 0..self.rows {
+            for (c, v) in self.row(r) {
+                t.data_mut()[r * self.cols + c as usize] = v;
+            }
+        }
+        t
+    }
+
+    /// Storage cost in elements + index entries (for the overhead
+    /// comparison against the vector format in the ablation bench).
+    pub fn storage_entries(&self) -> (usize, usize) {
+        (self.values.len(), self.indices.len() + self.indptr.len())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    #[test]
+    fn roundtrip_dense() {
+        let t = Tensor::from_vec(&[2, 3], vec![1.0, 0.0, 2.0, 0.0, 0.0, 3.0]);
+        let fg = FineGrained::from_tensor(&t);
+        assert_eq!(fg.nnz(), 3);
+        assert!((fg.density() - 0.5).abs() < 1e-12);
+        assert_eq!(fg.to_tensor(&[2, 3]), t);
+    }
+
+    #[test]
+    fn row_iteration() {
+        let t = Tensor::from_vec(&[2, 3], vec![0.0, 5.0, 0.0, 7.0, 0.0, 9.0]);
+        let fg = FineGrained::from_tensor(&t);
+        let r0: Vec<(u32, f32)> = fg.row(0).collect();
+        assert_eq!(r0, vec![(1, 5.0)]);
+        let r1: Vec<(u32, f32)> = fg.row(1).collect();
+        assert_eq!(r1, vec![(0, 7.0), (2, 9.0)]);
+    }
+
+    #[test]
+    fn empty_rows_ok() {
+        let t = Tensor::zeros(&[3, 4]);
+        let fg = FineGrained::from_tensor(&t);
+        assert_eq!(fg.nnz(), 0);
+        assert_eq!(fg.density(), 0.0);
+        assert_eq!(fg.row(1).count(), 0);
+        assert_eq!(fg.to_tensor(&[3, 4]), t);
+    }
+
+    #[test]
+    fn randomized_roundtrip() {
+        let mut rng = Pcg32::seeded(55);
+        for _ in 0..30 {
+            let rows = rng.range(1, 16);
+            let cols = rng.range(1, 16);
+            let data: Vec<f32> = (0..rows * cols)
+                .map(|_| if rng.bernoulli(0.35) { rng.normal() } else { 0.0 })
+                .collect();
+            let t = Tensor::from_vec(&[rows, cols], data);
+            let fg = FineGrained::from_tensor(&t);
+            assert_eq!(fg.to_tensor(&[rows, cols]), t);
+            assert_eq!(fg.nnz(), t.count_nonzero());
+        }
+    }
+
+    #[test]
+    fn four_dim_weights_flatten() {
+        let mut w = Tensor::zeros(&[2, 2, 3, 3]);
+        *w.at4_mut(1, 0, 2, 1) = 4.0;
+        let fg = FineGrained::from_tensor(&w);
+        assert_eq!(fg.nnz(), 1);
+        assert_eq!(fg.to_tensor(&[2, 2, 3, 3]), w);
+    }
+}

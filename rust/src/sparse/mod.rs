@@ -1,0 +1,24 @@
+//! Sparse data formats for the VSCNN index system.
+//!
+//! The paper's key idea is **vector sparsity**: instead of tracking single
+//! zero elements (fine-grained, Fig 1), zeros are tracked at the granularity
+//! of whole 1-D vectors (Fig 2):
+//!
+//! * an **input activation vector** is an `R`-element column strip — `R` =
+//!   PE-array rows (14 or 7) — of one channel at one spatial column;
+//! * a **weight vector** is one kernel column (`KH` elements, 3 for VGG) of
+//!   one `(k_out, c_in)` filter plane.
+//!
+//! All-zero vectors are *not stored in SRAM* and are never issued to the PE
+//! array; a per-vector index keeps accumulation correct. This module holds
+//! the compressed-vector format ([`vector_format`]), the fine-grained CSR
+//! used by the comparison baselines ([`fine_grained`]), the encoders and the
+//! density statistics behind Figs 9–11 ([`encode`]).
+
+pub mod bitset;
+pub mod encode;
+pub mod fine_grained;
+pub mod vector_format;
+
+pub use bitset::Bitset;
+pub use vector_format::{VectorActivations, VectorWeights};

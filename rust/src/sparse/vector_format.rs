@@ -1,0 +1,287 @@
+//! Compressed vector format (CVF) — the data structure behind the paper's
+//! index system.
+//!
+//! Only nonzero vectors are kept (matching "zero input data and weight data
+//! ... will not be in SRAM"); each surviving vector carries its original
+//! index so the shared accumulator flow can place partial sums correctly.
+
+use crate::sparse::bitset::Bitset;
+use crate::tensor::Tensor;
+
+/// Vector-sparse view of an activation tensor `[C, H, W]`.
+///
+/// The vector granularity is an `R`-element column strip: vector
+/// `(c, s, col)` covers `input[c, s*R .. min((s+1)*R, H), col]`. A vector is
+/// *occupied* iff any element in it is nonzero.
+#[derive(Debug, Clone)]
+pub struct VectorActivations {
+    /// Channels.
+    pub c: usize,
+    /// Row strips: `ceil(H / r)`.
+    pub strips: usize,
+    /// Spatial columns.
+    pub w: usize,
+    /// Vector length = PE-array rows (14 or 7 in the paper).
+    pub r: usize,
+    /// Original height (last strip may be ragged).
+    pub h: usize,
+    occ: Bitset,
+    /// Flattened per-`(c, strip)` sorted nonzero column indices — exactly
+    /// the contents of the input SRAM index list (CSR layout: one heap
+    /// allocation instead of one per group; EXPERIMENTS.md §Perf).
+    nz_flat: Vec<u16>,
+    /// `c * strips + 1` offsets into `nz_flat`.
+    nz_offsets: Vec<u32>,
+}
+
+impl VectorActivations {
+    /// Encode a `[C,H,W]` tensor at vector length `r`.
+    pub fn from_tensor(t: &Tensor, r: usize) -> VectorActivations {
+        assert_eq!(t.ndim(), 3, "activations must be [C,H,W]");
+        assert!(r > 0, "vector length must be positive");
+        let (c, h, w) = (t.shape()[0], t.shape()[1], t.shape()[2]);
+        let strips = h.div_ceil(r);
+        let mut occ = Bitset::new(c * strips * w);
+        let mut nz_flat = Vec::new();
+        let mut nz_offsets = Vec::with_capacity(c * strips + 1);
+        nz_offsets.push(0);
+        for ci in 0..c {
+            for s in 0..strips {
+                let row_lo = s * r;
+                let row_hi = ((s + 1) * r).min(h);
+                for col in 0..w {
+                    let nz = (row_lo..row_hi).any(|row| t.at3(ci, row, col) != 0.0);
+                    if nz {
+                        occ.set((ci * strips + s) * w + col, true);
+                        nz_flat.push(col as u16);
+                    }
+                }
+                nz_offsets.push(nz_flat.len() as u32);
+            }
+        }
+        VectorActivations {
+            c,
+            strips,
+            w,
+            r,
+            h,
+            occ,
+            nz_flat,
+            nz_offsets,
+        }
+    }
+
+    /// Total candidate vectors.
+    pub fn total_vectors(&self) -> usize {
+        self.c * self.strips * self.w
+    }
+
+    /// Occupied (nonzero) vectors.
+    pub fn nonzero_vectors(&self) -> usize {
+        self.occ.count_ones()
+    }
+
+    /// Vector-granularity density (the paper's Fig 10/11 "input" series).
+    pub fn density(&self) -> f64 {
+        self.occ.density()
+    }
+
+    /// Is vector `(c, strip, col)` occupied?
+    pub fn occupied(&self, c: usize, strip: usize, col: usize) -> bool {
+        self.occ.get((c * self.strips + strip) * self.w + col)
+    }
+
+    /// Sorted nonzero column indices for one `(c, strip)` — the index list
+    /// the scheduler walks when issuing input vectors.
+    #[inline]
+    pub fn nz_cols(&self, c: usize, strip: usize) -> &[u16] {
+        let g = c * self.strips + strip;
+        &self.nz_flat[self.nz_offsets[g] as usize..self.nz_offsets[g + 1] as usize]
+    }
+
+    /// Elements resident in the input SRAM (nonzero vectors × R).
+    pub fn sram_elems(&self) -> usize {
+        self.nonzero_vectors() * self.r
+    }
+
+    /// Index-list entries resident in SRAM (one per nonzero vector).
+    pub fn index_entries(&self) -> usize {
+        self.nonzero_vectors()
+    }
+}
+
+/// Vector-sparse view of a weight tensor `[K, C, KH, KW]`.
+///
+/// The weight vector granularity is one kernel *column*: vector
+/// `(k, c, j)` covers `weight[k, c, :, j]` (KH elements, 3 for VGG).
+#[derive(Debug, Clone)]
+pub struct VectorWeights {
+    pub k: usize,
+    pub c: usize,
+    pub kh: usize,
+    pub kw: usize,
+    occ: Bitset,
+    /// Flattened per-`(k, c)` sorted nonzero kernel-column indices (CSR
+    /// layout — see `VectorActivations::nz_flat`).
+    nz_flat: Vec<u8>,
+    /// `k * c + 1` offsets into `nz_flat`.
+    nz_offsets: Vec<u32>,
+}
+
+impl VectorWeights {
+    /// Encode a `[K,C,KH,KW]` weight tensor.
+    pub fn from_tensor(t: &Tensor) -> VectorWeights {
+        assert_eq!(t.ndim(), 4, "weights must be [K,C,KH,KW]");
+        let (k, c, kh, kw) = (t.shape()[0], t.shape()[1], t.shape()[2], t.shape()[3]);
+        let mut occ = Bitset::new(k * c * kw);
+        let mut nz_flat = Vec::new();
+        let mut nz_offsets = Vec::with_capacity(k * c + 1);
+        nz_offsets.push(0);
+        // Linear pass over contiguous (k,c) blocks of kh*kw elements
+        // (perf: strided at4 indexing here dominated encoding —
+        // EXPERIMENTS.md §Perf).
+        for (kc, block) in t.data().chunks_exact(kh * kw).enumerate() {
+            for j in 0..kw {
+                let nz = (0..kh).any(|i| block[i * kw + j] != 0.0);
+                if nz {
+                    occ.set(kc * kw + j, true);
+                    nz_flat.push(j as u8);
+                }
+            }
+            nz_offsets.push(nz_flat.len() as u32);
+        }
+        VectorWeights {
+            k,
+            c,
+            kh,
+            kw,
+            occ,
+            nz_flat,
+            nz_offsets,
+        }
+    }
+
+    /// Total candidate weight vectors.
+    pub fn total_vectors(&self) -> usize {
+        self.k * self.c * self.kw
+    }
+
+    /// Occupied weight vectors.
+    pub fn nonzero_vectors(&self) -> usize {
+        self.occ.count_ones()
+    }
+
+    /// Vector-granularity weight density (Fig 10/11 "weight" series).
+    pub fn density(&self) -> f64 {
+        self.occ.density()
+    }
+
+    /// Is weight vector `(k, c, j)` occupied?
+    pub fn occupied(&self, k: usize, c: usize, j: usize) -> bool {
+        self.occ.get((k * self.c + c) * self.kw + j)
+    }
+
+    /// Sorted nonzero kernel-column indices for filter `(k, c)`.
+    #[inline]
+    pub fn nz_cols(&self, k: usize, c: usize) -> &[u8] {
+        let g = k * self.c + c;
+        &self.nz_flat[self.nz_offsets[g] as usize..self.nz_offsets[g + 1] as usize]
+    }
+
+    /// Elements resident in the weight SRAM (nonzero vectors × KH).
+    pub fn sram_elems(&self) -> usize {
+        self.nonzero_vectors() * self.kh
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn activation_encoding_basic() {
+        // 1 channel, 4x3, r=2 → 2 strips × 3 cols = 6 vectors.
+        let mut t = Tensor::zeros(&[1, 4, 3]);
+        *t.at3_mut(0, 0, 1) = 5.0; // strip 0, col 1
+        *t.at3_mut(0, 3, 2) = -1.0; // strip 1, col 2
+        let va = VectorActivations::from_tensor(&t, 2);
+        assert_eq!(va.total_vectors(), 6);
+        assert_eq!(va.nonzero_vectors(), 2);
+        assert!(va.occupied(0, 0, 1));
+        assert!(va.occupied(0, 1, 2));
+        assert!(!va.occupied(0, 0, 0));
+        assert_eq!(va.nz_cols(0, 0), &[1]);
+        assert_eq!(va.nz_cols(0, 1), &[2]);
+        assert!((va.density() - 2.0 / 6.0).abs() < 1e-12);
+        assert_eq!(va.sram_elems(), 4);
+    }
+
+    #[test]
+    fn ragged_last_strip() {
+        // H=5, r=2 → 3 strips, last strip has 1 row.
+        let mut t = Tensor::zeros(&[1, 5, 2]);
+        *t.at3_mut(0, 4, 0) = 1.0;
+        let va = VectorActivations::from_tensor(&t, 2);
+        assert_eq!(va.strips, 3);
+        assert!(va.occupied(0, 2, 0));
+        assert!(!va.occupied(0, 2, 1));
+    }
+
+    #[test]
+    fn any_nonzero_element_occupies_whole_vector() {
+        let mut t = Tensor::zeros(&[1, 4, 1]);
+        *t.at3_mut(0, 1, 0) = 0.001; // single element in strip 0
+        let va = VectorActivations::from_tensor(&t, 4);
+        assert_eq!(va.nonzero_vectors(), 1);
+        assert_eq!(va.sram_elems(), 4); // whole vector stored
+    }
+
+    #[test]
+    fn weight_encoding_kernel_columns() {
+        // [2,1,3,3]: filter 0 has nonzero col 0 only; filter 1 all-zero.
+        let mut t = Tensor::zeros(&[2, 1, 3, 3]);
+        *t.at4_mut(0, 0, 2, 0) = 1.0;
+        let vw = VectorWeights::from_tensor(&t);
+        assert_eq!(vw.total_vectors(), 6);
+        assert_eq!(vw.nonzero_vectors(), 1);
+        assert!(vw.occupied(0, 0, 0));
+        assert!(!vw.occupied(0, 0, 1));
+        assert_eq!(vw.nz_cols(0, 0), &[0]);
+        assert!(vw.nz_cols(1, 0).is_empty());
+        assert_eq!(vw.sram_elems(), 3);
+    }
+
+    #[test]
+    fn dense_tensor_fully_occupied() {
+        let t = Tensor::from_vec(&[2, 4, 4], vec![1.0; 32]);
+        let va = VectorActivations::from_tensor(&t, 2);
+        assert_eq!(va.density(), 1.0);
+        let w = Tensor::from_vec(&[2, 2, 3, 3], vec![1.0; 36]);
+        let vw = VectorWeights::from_tensor(&w);
+        assert_eq!(vw.density(), 1.0);
+    }
+
+    #[test]
+    fn vector_density_at_least_element_density() {
+        // Vector granularity can only merge zeros, never create them.
+        use crate::util::rng::Pcg32;
+        let mut rng = Pcg32::seeded(123);
+        for _ in 0..20 {
+            let c = rng.range(1, 4);
+            let h = rng.range(2, 20);
+            let w = rng.range(1, 12);
+            let r = rng.range(1, 8);
+            let data = (0..c * h * w)
+                .map(|_| if rng.bernoulli(0.3) { 1.0 } else { 0.0 })
+                .collect();
+            let t = Tensor::from_vec(&[c, h, w], data);
+            let va = VectorActivations::from_tensor(&t, r);
+            assert!(
+                va.density() >= t.density() - 1e-9,
+                "vector density {} < element density {}",
+                va.density(),
+                t.density()
+            );
+        }
+    }
+}

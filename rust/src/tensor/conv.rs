@@ -1,0 +1,220 @@
+//! Golden CNN operators: direct convolution, pooling, ReLU.
+//!
+//! These are the scalar reference implementations every other path in the
+//! repo is validated against — the cycle simulator's functional output, the
+//! PJRT-executed JAX/Pallas artifacts, and the optimized forward pass.
+
+use super::Tensor;
+
+/// Convolution hyper-parameters (square kernels, symmetric padding).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ConvSpec {
+    pub stride: usize,
+    pub pad: usize,
+}
+
+impl Default for ConvSpec {
+    fn default() -> Self {
+        // The paper's optimized case: 3x3 kernel, unit stride, pad 1.
+        ConvSpec { stride: 1, pad: 1 }
+    }
+}
+
+/// Output spatial size for one dimension.
+pub fn out_dim(in_dim: usize, k: usize, spec: ConvSpec) -> usize {
+    assert!(in_dim + 2 * spec.pad >= k, "kernel larger than padded input");
+    (in_dim + 2 * spec.pad - k) / spec.stride + 1
+}
+
+/// Direct 2-D convolution (cross-correlation, as in all CNN frameworks).
+///
+/// `input` is `[C_in, H, W]`, `weight` is `[K_out, C_in, KH, KW]`, optional
+/// `bias` is `[K_out]`. Returns `[K_out, H_out, W_out]`.
+pub fn conv2d(input: &Tensor, weight: &Tensor, bias: Option<&[f32]>, spec: ConvSpec) -> Tensor {
+    assert_eq!(input.ndim(), 3, "input must be [C,H,W]");
+    assert_eq!(weight.ndim(), 4, "weight must be [K,C,KH,KW]");
+    let (c_in, h, w) = (input.shape()[0], input.shape()[1], input.shape()[2]);
+    let (k_out, wc, kh, kw) = (
+        weight.shape()[0],
+        weight.shape()[1],
+        weight.shape()[2],
+        weight.shape()[3],
+    );
+    assert_eq!(c_in, wc, "channel mismatch: input {c_in} vs weight {wc}");
+    if let Some(b) = bias {
+        assert_eq!(b.len(), k_out, "bias length mismatch");
+    }
+    let h_out = out_dim(h, kh, spec);
+    let w_out = out_dim(w, kw, spec);
+
+    let mut out = Tensor::zeros(&[k_out, h_out, w_out]);
+    for k in 0..k_out {
+        let b = bias.map_or(0.0, |b| b[k]);
+        for oh in 0..h_out {
+            for ow in 0..w_out {
+                let mut acc = b;
+                for c in 0..c_in {
+                    for i in 0..kh {
+                        // Signed arithmetic handles the padded border.
+                        let ih = (oh * spec.stride + i) as isize - spec.pad as isize;
+                        if ih < 0 || ih >= h as isize {
+                            continue;
+                        }
+                        for j in 0..kw {
+                            let iw = (ow * spec.stride + j) as isize - spec.pad as isize;
+                            if iw < 0 || iw >= w as isize {
+                                continue;
+                            }
+                            acc += input.at3(c, ih as usize, iw as usize) * weight.at4(k, c, i, j);
+                        }
+                    }
+                }
+                *out.at3_mut(k, oh, ow) = acc;
+            }
+        }
+    }
+    out
+}
+
+/// In-place ReLU; returns the count of elements clamped to zero (the
+/// post-processing unit's zero-detection statistic).
+pub fn relu_inplace(t: &mut Tensor) -> usize {
+    let mut zeroed = 0;
+    for x in t.data_mut() {
+        if *x < 0.0 {
+            *x = 0.0;
+            zeroed += 1;
+        }
+    }
+    zeroed
+}
+
+/// 2x2 max-pool with stride 2 (VGG's only pooling shape).
+/// Truncates odd trailing rows/cols like the original VGG implementation.
+pub fn maxpool2x2(input: &Tensor) -> Tensor {
+    assert_eq!(input.ndim(), 3, "input must be [C,H,W]");
+    let (c_n, h, w) = (input.shape()[0], input.shape()[1], input.shape()[2]);
+    let (ho, wo) = (h / 2, w / 2);
+    let mut out = Tensor::zeros(&[c_n, ho, wo]);
+    for c in 0..c_n {
+        for oh in 0..ho {
+            for ow in 0..wo {
+                let m = input
+                    .at3(c, 2 * oh, 2 * ow)
+                    .max(input.at3(c, 2 * oh, 2 * ow + 1))
+                    .max(input.at3(c, 2 * oh + 1, 2 * ow))
+                    .max(input.at3(c, 2 * oh + 1, 2 * ow + 1));
+                *out.at3_mut(c, oh, ow) = m;
+            }
+        }
+    }
+    out
+}
+
+/// Global average pool: `[C,H,W]` → `[C]`.
+pub fn global_avg_pool(input: &Tensor) -> Vec<f32> {
+    assert_eq!(input.ndim(), 3);
+    let (c_n, h, w) = (input.shape()[0], input.shape()[1], input.shape()[2]);
+    let denom = (h * w) as f32;
+    (0..c_n)
+        .map(|c| {
+            let mut s = 0.0;
+            for i in 0..h {
+                for j in 0..w {
+                    s += input.at3(c, i, j);
+                }
+            }
+            s / denom
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The paper's Fig 6 example: 5x5 input, pad 1, 3x3 kernel → 5x5 output.
+    #[test]
+    fn paper_example_shape() {
+        let spec = ConvSpec { stride: 1, pad: 1 };
+        assert_eq!(out_dim(5, 3, spec), 5);
+        let input = Tensor::zeros(&[1, 5, 5]);
+        let weight = Tensor::zeros(&[1, 1, 3, 3]);
+        let out = conv2d(&input, &weight, None, spec);
+        assert_eq!(out.shape(), &[1, 5, 5]);
+    }
+
+    #[test]
+    fn identity_kernel_passes_through() {
+        // Center-one 3x3 kernel reproduces the input exactly.
+        let mut w = Tensor::zeros(&[1, 1, 3, 3]);
+        *w.at4_mut(0, 0, 1, 1) = 1.0;
+        let input = Tensor::from_vec(&[1, 3, 3], (1..=9).map(|i| i as f32).collect());
+        let out = conv2d(&input, &w, None, ConvSpec::default());
+        assert_eq!(out.data(), input.data());
+    }
+
+    #[test]
+    fn known_small_convolution() {
+        // 1x3x3 input, all-ones 3x3 kernel, pad 1: each output = sum of the
+        // 3x3 neighbourhood (with zero padding).
+        let input = Tensor::from_vec(&[1, 3, 3], (1..=9).map(|i| i as f32).collect());
+        let w = Tensor::from_vec(&[1, 1, 3, 3], vec![1.0; 9]);
+        let out = conv2d(&input, &w, None, ConvSpec::default());
+        // Center = sum of all = 45; corner (0,0) = 1+2+4+5 = 12.
+        assert_eq!(out.at3(0, 1, 1), 45.0);
+        assert_eq!(out.at3(0, 0, 0), 12.0);
+        assert_eq!(out.at3(0, 2, 2), 5.0 + 6.0 + 8.0 + 9.0);
+    }
+
+    #[test]
+    fn bias_is_added_per_output_channel() {
+        let input = Tensor::zeros(&[1, 4, 4]);
+        let w = Tensor::zeros(&[2, 1, 3, 3]);
+        let out = conv2d(&input, &w, Some(&[1.5, -2.0]), ConvSpec::default());
+        assert!(out.data()[..16].iter().all(|&x| x == 1.5));
+        assert!(out.data()[16..].iter().all(|&x| x == -2.0));
+    }
+
+    #[test]
+    fn multi_channel_accumulates() {
+        // Two input channels of ones, 1x1 kernel of ones → output 2.
+        let input = Tensor::from_vec(&[2, 2, 2], vec![1.0; 8]);
+        let w = Tensor::from_vec(&[1, 2, 1, 1], vec![1.0, 1.0]);
+        let out = conv2d(&input, &w, None, ConvSpec { stride: 1, pad: 0 });
+        assert_eq!(out.shape(), &[1, 2, 2]);
+        assert!(out.data().iter().all(|&x| x == 2.0));
+    }
+
+    #[test]
+    fn stride_two_downsamples() {
+        let input = Tensor::from_vec(&[1, 4, 4], (0..16).map(|i| i as f32).collect());
+        let mut w = Tensor::zeros(&[1, 1, 1, 1]);
+        *w.at4_mut(0, 0, 0, 0) = 1.0;
+        let out = conv2d(&input, &w, None, ConvSpec { stride: 2, pad: 0 });
+        assert_eq!(out.shape(), &[1, 2, 2]);
+        assert_eq!(out.data(), &[0.0, 2.0, 8.0, 10.0]);
+    }
+
+    #[test]
+    fn relu_zeroes_negatives_and_counts() {
+        let mut t = Tensor::from_vec(&[4], vec![-1.0, 2.0, -3.0, 0.0]);
+        let zeroed = relu_inplace(&mut t);
+        assert_eq!(zeroed, 2);
+        assert_eq!(t.data(), &[0.0, 2.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn maxpool_takes_window_max() {
+        let input = Tensor::from_vec(&[1, 4, 4], (0..16).map(|i| i as f32).collect());
+        let out = maxpool2x2(&input);
+        assert_eq!(out.shape(), &[1, 2, 2]);
+        assert_eq!(out.data(), &[5.0, 7.0, 13.0, 15.0]);
+    }
+
+    #[test]
+    fn global_avg_pool_averages() {
+        let input = Tensor::from_vec(&[2, 2, 2], vec![1.0, 1.0, 1.0, 1.0, 2.0, 2.0, 2.0, 2.0]);
+        assert_eq!(global_avg_pool(&input), vec![1.0, 2.0]);
+    }
+}

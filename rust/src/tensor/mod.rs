@@ -1,0 +1,238 @@
+//! Dense tensor substrate: a minimal NCHW `f32` n-d array plus the golden
+//! (scalar, obviously-correct) implementations of the CNN operators the
+//! simulator and tests check against.
+//!
+//! The golden ops here are the *functional* reference; the fast path for
+//! whole-network forward passes is the PJRT runtime executing the
+//! JAX/Pallas-lowered HLO (see [`crate::runtime`]), which is cross-checked
+//! against these in integration tests.
+
+pub mod conv;
+pub mod ops;
+
+use std::fmt;
+
+/// A dense row-major tensor of `f32` with up to 4 dimensions.
+///
+/// Shapes follow the paper's convention: activations are `[C, H, W]`
+/// (single image; the accelerator processes one feature map at a time) and
+/// weights are `[K_out, C_in, KH, KW]`.
+#[derive(Clone, PartialEq)]
+pub struct Tensor {
+    shape: Vec<usize>,
+    data: Vec<f32>,
+}
+
+impl Tensor {
+    /// Zero-filled tensor.
+    pub fn zeros(shape: &[usize]) -> Tensor {
+        let n: usize = shape.iter().product();
+        Tensor {
+            shape: shape.to_vec(),
+            data: vec![0.0; n],
+        }
+    }
+
+    /// Build from shape and data; panics if lengths mismatch.
+    pub fn from_vec(shape: &[usize], data: Vec<f32>) -> Tensor {
+        let n: usize = shape.iter().product();
+        assert_eq!(n, data.len(), "shape {shape:?} != data len {}", data.len());
+        Tensor {
+            shape: shape.to_vec(),
+            data,
+        }
+    }
+
+    /// Shape slice.
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    /// Number of dimensions.
+    pub fn ndim(&self) -> usize {
+        self.shape.len()
+    }
+
+    /// Total number of elements.
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    /// True when the tensor holds no elements.
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Raw data slice (row-major).
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    /// Mutable raw data slice.
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    /// Consume into the raw data vector.
+    pub fn into_vec(self) -> Vec<f32> {
+        self.data
+    }
+
+    /// Reinterpret with a new shape of the same element count.
+    pub fn reshape(mut self, shape: &[usize]) -> Tensor {
+        let n: usize = shape.iter().product();
+        assert_eq!(n, self.data.len(), "reshape {shape:?} vs len {}", self.data.len());
+        self.shape = shape.to_vec();
+        self
+    }
+
+    #[inline]
+    fn offset(&self, idx: &[usize]) -> usize {
+        debug_assert_eq!(idx.len(), self.shape.len());
+        let mut off = 0;
+        for (i, (&x, &d)) in idx.iter().zip(&self.shape).enumerate() {
+            debug_assert!(x < d, "index {x} out of bounds for dim {i} ({d})");
+            off = off * d + x;
+        }
+        off
+    }
+
+    /// Element access by multi-index.
+    #[inline]
+    pub fn at(&self, idx: &[usize]) -> f32 {
+        self.data[self.offset(idx)]
+    }
+
+    /// Mutable element access by multi-index.
+    #[inline]
+    pub fn at_mut(&mut self, idx: &[usize]) -> &mut f32 {
+        let off = self.offset(idx);
+        &mut self.data[off]
+    }
+
+    /// 3-D accessor for `[C, H, W]` activations (fast path, no Vec index).
+    #[inline]
+    pub fn at3(&self, c: usize, h: usize, w: usize) -> f32 {
+        debug_assert_eq!(self.ndim(), 3);
+        let (hh, ww) = (self.shape[1], self.shape[2]);
+        self.data[(c * hh + h) * ww + w]
+    }
+
+    /// Mutable 3-D accessor.
+    #[inline]
+    pub fn at3_mut(&mut self, c: usize, h: usize, w: usize) -> &mut f32 {
+        debug_assert_eq!(self.ndim(), 3);
+        let (hh, ww) = (self.shape[1], self.shape[2]);
+        &mut self.data[(c * hh + h) * ww + w]
+    }
+
+    /// 4-D accessor for `[K, C, KH, KW]` weights.
+    #[inline]
+    pub fn at4(&self, k: usize, c: usize, i: usize, j: usize) -> f32 {
+        debug_assert_eq!(self.ndim(), 4);
+        let (cc, ii, jj) = (self.shape[1], self.shape[2], self.shape[3]);
+        self.data[((k * cc + c) * ii + i) * jj + j]
+    }
+
+    /// Mutable 4-D accessor.
+    #[inline]
+    pub fn at4_mut(&mut self, k: usize, c: usize, i: usize, j: usize) -> &mut f32 {
+        debug_assert_eq!(self.ndim(), 4);
+        let (cc, ii, jj) = (self.shape[1], self.shape[2], self.shape[3]);
+        &mut self.data[((k * cc + c) * ii + i) * jj + j]
+    }
+
+    /// Count of non-zero elements.
+    pub fn count_nonzero(&self) -> usize {
+        self.data.iter().filter(|&&x| x != 0.0).count()
+    }
+
+    /// Fraction of non-zero elements (element-granularity density).
+    pub fn density(&self) -> f64 {
+        if self.data.is_empty() {
+            0.0
+        } else {
+            self.count_nonzero() as f64 / self.data.len() as f64
+        }
+    }
+
+    /// Max |a - b| between two same-shape tensors.
+    pub fn max_abs_diff(&self, other: &Tensor) -> f32 {
+        assert_eq!(self.shape, other.shape, "shape mismatch");
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+
+    /// All-close check with absolute + relative tolerance.
+    pub fn allclose(&self, other: &Tensor, atol: f32, rtol: f32) -> bool {
+        if self.shape != other.shape {
+            return false;
+        }
+        self.data
+            .iter()
+            .zip(&other.data)
+            .all(|(a, b)| (a - b).abs() <= atol + rtol * b.abs())
+    }
+}
+
+impl fmt::Debug for Tensor {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "Tensor{:?} nnz={}/{} [{}...]",
+            self.shape,
+            self.count_nonzero(),
+            self.len(),
+            self.data.iter().take(4).map(|x| format!("{x:.3}")).collect::<Vec<_>>().join(", ")
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zeros_and_indexing() {
+        let mut t = Tensor::zeros(&[2, 3, 4]);
+        assert_eq!(t.len(), 24);
+        assert_eq!(t.at3(1, 2, 3), 0.0);
+        *t.at3_mut(1, 2, 3) = 5.0;
+        assert_eq!(t.at(&[1, 2, 3]), 5.0);
+        assert_eq!(t.count_nonzero(), 1);
+    }
+
+    #[test]
+    fn from_vec_and_reshape() {
+        let t = Tensor::from_vec(&[2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        let t = t.reshape(&[4]);
+        assert_eq!(t.at(&[2]), 3.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn from_vec_len_mismatch_panics() {
+        let _ = Tensor::from_vec(&[2, 2], vec![1.0]);
+    }
+
+    #[test]
+    fn at4_layout_matches_row_major() {
+        let data: Vec<f32> = (0..2 * 3 * 2 * 2).map(|i| i as f32).collect();
+        let t = Tensor::from_vec(&[2, 3, 2, 2], data);
+        // Element [k=1, c=2, i=1, j=0] is offset ((1*3+2)*2+1)*2+0 = 22.
+        assert_eq!(t.at4(1, 2, 1, 0), 22.0);
+    }
+
+    #[test]
+    fn density_and_allclose() {
+        let a = Tensor::from_vec(&[4], vec![0.0, 1.0, 0.0, 2.0]);
+        assert!((a.density() - 0.5).abs() < 1e-12);
+        let b = Tensor::from_vec(&[4], vec![0.0, 1.0 + 1e-6, 0.0, 2.0]);
+        assert!(a.allclose(&b, 1e-5, 1e-5));
+        assert!(!a.allclose(&b, 1e-9, 0.0));
+        assert!(a.max_abs_diff(&b) > 0.0);
+    }
+}

@@ -1,0 +1,264 @@
+//! Elementwise and linear-algebra helpers on [`Tensor`].
+
+use super::Tensor;
+
+/// Matrix multiply: `[M,K] x [K,N] -> [M,N]` (used by the FC layers and the
+/// im2col-based fast conv in the performance path).
+pub fn matmul(a: &Tensor, b: &Tensor) -> Tensor {
+    assert_eq!(a.ndim(), 2);
+    assert_eq!(b.ndim(), 2);
+    let (m, k) = (a.shape()[0], a.shape()[1]);
+    let (k2, n) = (b.shape()[0], b.shape()[1]);
+    assert_eq!(k, k2, "inner dims mismatch {k} vs {k2}");
+    let mut out = Tensor::zeros(&[m, n]);
+    let (ad, bd) = (a.data(), b.data());
+    let od = out.data_mut();
+    // ikj loop order: streams b rows, good cache behaviour without blocking.
+    for i in 0..m {
+        for p in 0..k {
+            let av = ad[i * k + p];
+            if av == 0.0 {
+                continue; // weight sparsity shortcut
+            }
+            let brow = &bd[p * n..(p + 1) * n];
+            let orow = &mut od[i * n..(i + 1) * n];
+            for (o, &bv) in orow.iter_mut().zip(brow) {
+                *o += av * bv;
+            }
+        }
+    }
+    out
+}
+
+/// im2col: unfold `[C,H,W]` into a `[C*KH*KW, H_out*W_out]` patch matrix so
+/// conv becomes a single matmul. Used by the optimized forward path.
+pub fn im2col(input: &Tensor, kh: usize, kw: usize, stride: usize, pad: usize) -> Tensor {
+    assert_eq!(input.ndim(), 3);
+    let (c_in, h, w) = (input.shape()[0], input.shape()[1], input.shape()[2]);
+    let h_out = (h + 2 * pad - kh) / stride + 1;
+    let w_out = (w + 2 * pad - kw) / stride + 1;
+    let mut out = Tensor::zeros(&[c_in * kh * kw, h_out * w_out]);
+    let od = out.data_mut();
+    let cols = h_out * w_out;
+    for c in 0..c_in {
+        for i in 0..kh {
+            for j in 0..kw {
+                let row = (c * kh + i) * kw + j;
+                for oh in 0..h_out {
+                    let ih = (oh * stride + i) as isize - pad as isize;
+                    if ih < 0 || ih >= h as isize {
+                        continue;
+                    }
+                    for ow in 0..w_out {
+                        let iw = (ow * stride + j) as isize - pad as isize;
+                        if iw < 0 || iw >= w as isize {
+                            continue;
+                        }
+                        od[row * cols + oh * w_out + ow] =
+                            input.at3(c, ih as usize, iw as usize);
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Convolution via im2col + matmul. Numerically identical to
+/// [`super::conv::conv2d`] (checked in tests) but much faster for the
+/// whole-network forward pass.
+pub fn conv2d_im2col(
+    input: &Tensor,
+    weight: &Tensor,
+    bias: Option<&[f32]>,
+    spec: super::conv::ConvSpec,
+) -> Tensor {
+    let (k_out, c_in, kh, kw) = (
+        weight.shape()[0],
+        weight.shape()[1],
+        weight.shape()[2],
+        weight.shape()[3],
+    );
+    assert_eq!(c_in, input.shape()[0]);
+    let h_out = super::conv::out_dim(input.shape()[1], kh, spec);
+    let w_out = super::conv::out_dim(input.shape()[2], kw, spec);
+    let patches = im2col(input, kh, kw, spec.stride, spec.pad);
+    let wmat = weight.clone().reshape(&[k_out, c_in * kh * kw]);
+    let mut out = matmul(&wmat, &patches); // [K, H_out*W_out]
+    if let Some(b) = bias {
+        let od = out.data_mut();
+        let cols = h_out * w_out;
+        for (k, &bv) in b.iter().enumerate() {
+            for x in &mut od[k * cols..(k + 1) * cols] {
+                *x += bv;
+            }
+        }
+    }
+    out.reshape(&[k_out, h_out, w_out])
+}
+
+/// Multithreaded im2col convolution: output channels are split across
+/// `threads` std threads (the patch matrix is shared read-only). This is
+/// the coordinator's fast functional path when PJRT artifacts are not in
+/// play. Numerically identical to [`conv2d_im2col`].
+pub fn conv2d_im2col_mt(
+    input: &Tensor,
+    weight: &Tensor,
+    bias: Option<&[f32]>,
+    spec: super::conv::ConvSpec,
+    threads: usize,
+) -> Tensor {
+    let (k_out, c_in, kh, kw) = (
+        weight.shape()[0],
+        weight.shape()[1],
+        weight.shape()[2],
+        weight.shape()[3],
+    );
+    assert_eq!(c_in, input.shape()[0]);
+    let threads = threads.max(1).min(k_out);
+    if threads == 1 {
+        return conv2d_im2col(input, weight, bias, spec);
+    }
+    let h_out = super::conv::out_dim(input.shape()[1], kh, spec);
+    let w_out = super::conv::out_dim(input.shape()[2], kw, spec);
+    let cols = h_out * w_out;
+    let kdim = c_in * kh * kw;
+    let patches = im2col(input, kh, kw, spec.stride, spec.pad);
+    let pd = patches.data();
+    let wd = weight.data();
+
+    let mut out = vec![0.0f32; k_out * cols];
+    let chunk = k_out.div_ceil(threads);
+    std::thread::scope(|s| {
+        for (ti, out_chunk) in out.chunks_mut(chunk * cols).enumerate() {
+            let k_lo = ti * chunk;
+            s.spawn(move || {
+                for (ki, orow) in out_chunk.chunks_mut(cols).enumerate() {
+                    let k = k_lo + ki;
+                    if let Some(b) = bias {
+                        orow.fill(b[k]);
+                    }
+                    for p in 0..kdim {
+                        let av = wd[k * kdim + p];
+                        if av == 0.0 {
+                            continue;
+                        }
+                        let prow = &pd[p * cols..(p + 1) * cols];
+                        for (o, &pv) in orow.iter_mut().zip(prow) {
+                            *o += av * pv;
+                        }
+                    }
+                }
+            });
+        }
+    });
+    Tensor::from_vec(&[k_out, h_out, w_out], out)
+}
+
+/// Sum of all elements.
+pub fn sum(t: &Tensor) -> f32 {
+    t.data().iter().sum()
+}
+
+/// Scale all elements in place.
+pub fn scale_inplace(t: &mut Tensor, s: f32) {
+    for x in t.data_mut() {
+        *x *= s;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::conv::{conv2d, ConvSpec};
+    use crate::util::rng::Pcg32;
+
+    fn random_tensor(rng: &mut Pcg32, shape: &[usize], density: f32) -> Tensor {
+        let n: usize = shape.iter().product();
+        let data = (0..n)
+            .map(|_| if rng.bernoulli(density) { rng.normal() } else { 0.0 })
+            .collect();
+        Tensor::from_vec(shape, data)
+    }
+
+    #[test]
+    fn matmul_known() {
+        let a = Tensor::from_vec(&[2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        let b = Tensor::from_vec(&[2, 2], vec![5.0, 6.0, 7.0, 8.0]);
+        let c = matmul(&a, &b);
+        assert_eq!(c.data(), &[19.0, 22.0, 43.0, 50.0]);
+    }
+
+    #[test]
+    fn matmul_identity() {
+        let a = Tensor::from_vec(&[2, 3], vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let eye = Tensor::from_vec(&[3, 3], vec![1.0, 0.0, 0.0, 0.0, 1.0, 0.0, 0.0, 0.0, 1.0]);
+        assert_eq!(matmul(&a, &eye).data(), a.data());
+    }
+
+    /// Property test: im2col+matmul conv equals direct conv on random
+    /// shapes, sparsities and paddings.
+    #[test]
+    fn conv_im2col_matches_direct_randomized() {
+        let mut rng = Pcg32::seeded(77);
+        for case in 0..40 {
+            let c_in = rng.range(1, 5);
+            let k_out = rng.range(1, 5);
+            let h = rng.range(3, 10);
+            let w = rng.range(3, 10);
+            let k = [1, 3, 5][rng.range(0, 3)];
+            let pad = rng.range(0, k / 2 + 2);
+            let stride = rng.range(1, 3);
+            if h + 2 * pad < k || w + 2 * pad < k {
+                continue;
+            }
+            let spec = ConvSpec { stride, pad };
+            let input = random_tensor(&mut rng, &[c_in, h, w], 0.6);
+            let weight = random_tensor(&mut rng, &[k_out, c_in, k, k], 0.5);
+            let bias: Vec<f32> = (0..k_out).map(|_| rng.normal()).collect();
+            let a = conv2d(&input, &weight, Some(&bias), spec);
+            let b = conv2d_im2col(&input, &weight, Some(&bias), spec);
+            assert!(
+                a.allclose(&b, 1e-4, 1e-4),
+                "case {case}: mismatch {} (cin={c_in} k={k} pad={pad} stride={stride})",
+                a.max_abs_diff(&b)
+            );
+        }
+    }
+
+    #[test]
+    fn conv_mt_matches_single_thread() {
+        let mut rng = Pcg32::seeded(88);
+        for threads in [1usize, 2, 3, 8] {
+            let input = random_tensor(&mut rng, &[3, 9, 9], 0.7);
+            let weight = random_tensor(&mut rng, &[7, 3, 3, 3], 0.5);
+            let bias: Vec<f32> = (0..7).map(|_| rng.normal()).collect();
+            let spec = ConvSpec::default();
+            let a = conv2d_im2col(&input, &weight, Some(&bias), spec);
+            let b = conv2d_im2col_mt(&input, &weight, Some(&bias), spec, threads);
+            assert!(
+                a.allclose(&b, 1e-6, 1e-6),
+                "threads={threads}: {}",
+                a.max_abs_diff(&b)
+            );
+        }
+    }
+
+    #[test]
+    fn conv_mt_more_threads_than_channels() {
+        let mut rng = Pcg32::seeded(89);
+        let input = random_tensor(&mut rng, &[2, 5, 5], 1.0);
+        let weight = random_tensor(&mut rng, &[2, 2, 3, 3], 1.0);
+        let a = conv2d_im2col(&input, &weight, None, ConvSpec::default());
+        let b = conv2d_im2col_mt(&input, &weight, None, ConvSpec::default(), 16);
+        assert!(a.allclose(&b, 1e-6, 1e-6));
+    }
+
+    #[test]
+    fn sum_and_scale() {
+        let mut t = Tensor::from_vec(&[3], vec![1.0, 2.0, 3.0]);
+        assert_eq!(sum(&t), 6.0);
+        scale_inplace(&mut t, 2.0);
+        assert_eq!(t.data(), &[2.0, 4.0, 6.0]);
+    }
+}

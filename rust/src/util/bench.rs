@@ -1,0 +1,77 @@
+//! Hand-rolled micro-benchmark harness (criterion is unavailable offline —
+//! DESIGN.md §9): warmup + median-of-N wall times with basic spread.
+
+use std::time::{Duration, Instant};
+
+/// Result of one benchmark case.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub median: Duration,
+    pub min: Duration,
+    pub max: Duration,
+    pub iters: usize,
+}
+
+impl BenchResult {
+    /// `name: median 12.3ms (min 11.8ms, max 13.1ms, n=9)`
+    pub fn line(&self) -> String {
+        format!(
+            "{:40} median {:>12?} (min {:?}, max {:?}, n={})",
+            self.name, self.median, self.min, self.max, self.iters
+        )
+    }
+
+    /// Throughput line given a per-iteration work amount.
+    pub fn throughput(&self, units: f64, unit_name: &str) -> String {
+        let per_sec = units / self.median.as_secs_f64();
+        format!("{:40} {:>14.3e} {unit_name}/s", self.name, per_sec)
+    }
+}
+
+/// Run `f` `iters` times after `warmup` runs; report the median.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> BenchResult {
+    assert!(iters > 0);
+    for _ in 0..warmup {
+        f();
+    }
+    let mut times = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        times.push(t0.elapsed());
+    }
+    times.sort();
+    BenchResult {
+        name: name.to_string(),
+        median: times[times.len() / 2],
+        min: times[0],
+        max: times[times.len() - 1],
+        iters,
+    }
+}
+
+/// Prevent the optimizer from discarding a value (ptr read + fence — stable
+/// Rust's `black_box` equivalent good enough for coarse benches).
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs_and_reports() {
+        let mut count = 0usize;
+        let r = bench("noop", 2, 5, || {
+            count += 1;
+            black_box(count);
+        });
+        assert_eq!(count, 7); // 2 warmup + 5 timed
+        assert_eq!(r.iters, 5);
+        assert!(r.min <= r.median && r.median <= r.max);
+        assert!(r.line().contains("noop"));
+        assert!(r.throughput(1e6, "ops").contains("ops/s"));
+    }
+}

@@ -1,0 +1,56 @@
+//! Substrate utilities built from scratch for the offline environment:
+//! deterministic PRNG, minimal JSON, a leveled logger and stat helpers.
+//!
+//! The build environment has no network access to crates.io, so the usual
+//! `rand`/`serde_json`/`log` stack is unavailable; these are small,
+//! well-tested replacements that the rest of the crate depends on.
+
+pub mod bench;
+pub mod json;
+pub mod logging;
+pub mod rng;
+pub mod stats;
+
+pub use json::Json;
+pub use rng::Pcg32;
+
+/// Integer ceiling division: smallest `q` with `q * d >= n`.
+#[inline]
+pub fn ceil_div(n: usize, d: usize) -> usize {
+    assert!(d > 0, "ceil_div by zero");
+    n.div_ceil(d)
+}
+
+/// Round `n` up to the next multiple of `m`.
+#[inline]
+pub fn round_up(n: usize, m: usize) -> usize {
+    ceil_div(n, m) * m
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ceil_div_basics() {
+        assert_eq!(ceil_div(0, 3), 0);
+        assert_eq!(ceil_div(1, 3), 1);
+        assert_eq!(ceil_div(3, 3), 1);
+        assert_eq!(ceil_div(4, 3), 2);
+        assert_eq!(ceil_div(9, 3), 3);
+    }
+
+    #[test]
+    fn round_up_basics() {
+        assert_eq!(round_up(0, 4), 0);
+        assert_eq!(round_up(1, 4), 4);
+        assert_eq!(round_up(4, 4), 4);
+        assert_eq!(round_up(5, 4), 8);
+    }
+
+    #[test]
+    #[should_panic(expected = "ceil_div by zero")]
+    fn ceil_div_zero_divisor_panics() {
+        let _ = ceil_div(1, 0);
+    }
+}

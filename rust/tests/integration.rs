@@ -1,0 +1,268 @@
+//! Cross-module integration: pruning → calibration → coordinator →
+//! experiments, on CPU backends (no artifacts needed).
+
+use vscnn::baselines::{ideal_speedups, skip_efficiency};
+use vscnn::coordinator::{Coordinator, FunctionalBackend, RunOptions};
+use vscnn::experiments::{self, ExpContext};
+use vscnn::model::init::{synthetic_batch, synthetic_params};
+use vscnn::model::vgg16::{tiny_vgg, vgg16_at};
+use vscnn::pruning;
+use vscnn::pruning::sensitivity::{flat_schedule, paper_schedule};
+use vscnn::sim::config::SimConfig;
+use vscnn::sim::scheduler::{simulate_layer, Mode};
+use vscnn::sim::trace::Trace;
+use vscnn::tensor::conv::ConvSpec;
+
+fn tiny_ctx() -> ExpContext {
+    ExpContext {
+        res: 32,
+        images: 2,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn all_experiments_run_and_report() {
+    let ctx = tiny_ctx();
+    let outputs = experiments::run_all(&ctx).expect("run_all");
+    assert_eq!(outputs.len(), experiments::list().len());
+    for out in &outputs {
+        assert!(!out.text.is_empty(), "{} text empty", out.id);
+        // JSON round-trips.
+        let text = out.json.pretty();
+        assert_eq!(
+            vscnn::util::json::Json::parse(&text).unwrap(),
+            out.json,
+            "{} json",
+            out.id
+        );
+    }
+}
+
+#[test]
+fn whole_network_speedup_consistent_with_layer_records() {
+    let ctx = tiny_ctx();
+    let reports =
+        experiments::workload::run_config(&ctx, SimConfig::paper_4_14_3()).expect("run");
+    for report in &reports {
+        let sum_cycles: u64 = report.layers.iter().map(|l| l.sparse.cycles).sum();
+        let sum_dense: u64 = report.layers.iter().map(|l| l.dense_cycles).sum();
+        assert_eq!(sum_cycles, report.totals.cycles);
+        assert_eq!(sum_dense, report.total_dense_cycles);
+        let series = report.overall_series();
+        assert!(series.ours <= series.ideal_vector + 1e-6);
+        assert!(series.vector_skip_efficiency() <= 1.0 + 1e-9);
+        assert!(skip_efficiency(series.ours, series.ideal_fine) <= 1.0 + 1e-9);
+    }
+}
+
+#[test]
+fn multi_image_batch_varies_but_stays_in_band() {
+    let ctx = ExpContext {
+        res: 32,
+        images: 3,
+        ..Default::default()
+    };
+    let reports = experiments::workload::run_config(&ctx, SimConfig::paper_8_7_3()).unwrap();
+    assert_eq!(reports.len(), 3);
+    let speedups: Vec<f64> = reports.iter().map(|r| r.overall_speedup()).collect();
+    for s in &speedups {
+        assert!(*s > 1.0 && *s < 50.0, "speedup {s}");
+    }
+    // Different images → (almost surely) different cycle counts.
+    assert!(
+        reports[0].totals.cycles != reports[1].totals.cycles
+            || reports[1].totals.cycles != reports[2].totals.cycles
+    );
+}
+
+#[test]
+fn hardware_aligned_pruning_ablation_beats_row_pruning() {
+    // DESIGN.md §4 ablation: pruning at the hardware's kernel-column
+    // granularity exposes every pruned vector to the skipper; Mao row
+    // pruning at the same element density leaves columns denser
+    // (1-(1-d)^3) and must be slower.
+    let net = tiny_vgg(8);
+    let img = vscnn::model::init::synthetic_image(net.input_shape, 5);
+    let mut cfg = SimConfig::paper_4_14_3();
+    cfg.pe.arrays = 2;
+    cfg.pe.rows = 4;
+    let opts = RunOptions {
+        sim: cfg,
+        backend: FunctionalBackend::Golden,
+        verify_dataflow: false,
+    };
+    let sched = flat_schedule(&net, 0.25);
+
+    let mut cycles = Vec::new();
+    for gran in [
+        pruning::VectorGranularity::KernelCol,
+        pruning::VectorGranularity::KernelRow,
+    ] {
+        let mut params = synthetic_params(&net, 5, 0.0);
+        pruning::prune_network_vectors_with(&mut params, &sched, gran);
+        let coord = Coordinator::new(net.clone(), params);
+        cycles.push(coord.run(&img, &opts).unwrap().totals.cycles);
+    }
+    assert!(
+        cycles[0] < cycles[1],
+        "aligned {} !< row {}",
+        cycles[0],
+        cycles[1]
+    );
+}
+
+#[test]
+fn dense_mode_is_exact_dense_reference() {
+    // Simulating in Dense mode must cost exactly the closed-form dense
+    // cycles and produce the same functional output as sparse mode.
+    let net = tiny_vgg(8);
+    let mut params = synthetic_params(&net, 6, 0.0);
+    pruning::prune_network_vectors(&mut params, &flat_schedule(&net, 0.3));
+    let img = vscnn::model::init::synthetic_image(net.input_shape, 6);
+    let mut cfg = SimConfig::paper_4_14_3();
+    cfg.pe.arrays = 2;
+    cfg.pe.rows = 4;
+
+    let lp = &params["c1_1"];
+    let mut tr = Trace::disabled();
+    let dense = simulate_layer(
+        &img,
+        &lp.weight,
+        Some(&lp.bias),
+        &cfg,
+        ConvSpec::default(),
+        Mode::Dense,
+        true,
+        &mut tr,
+    );
+    let sparse = simulate_layer(
+        &img,
+        &lp.weight,
+        Some(&lp.bias),
+        &cfg,
+        ConvSpec::default(),
+        Mode::VectorSparse,
+        true,
+        &mut tr,
+    );
+    assert_eq!(dense.stats.cycles, dense.dense_cycles);
+    assert_eq!(dense.dense_cycles, sparse.dense_cycles);
+    let (a, b) = (dense.output.unwrap(), sparse.output.unwrap());
+    assert!(a.allclose(&b, 1e-4, 1e-4), "diff {}", a.max_abs_diff(&b));
+}
+
+#[test]
+fn ideal_baselines_bracket_reality_on_vgg_slice() {
+    // On a real VGG-16 slice: ours <= ideal_vector <= ideal_fine.
+    let ctx = tiny_ctx();
+    let (coord, images, _) = experiments::workload::prepare(&ctx);
+    let opts = RunOptions::new(SimConfig::paper_8_7_3());
+    let report = coord.run(&images[0], &opts).unwrap();
+    for l in &report.layers {
+        let rep = l.density;
+        let (iv, ifg) = ideal_speedups(&rep);
+        assert!(l.speedups.ours <= iv + 1e-6, "{}: {} > {iv}", l.name, l.speedups.ours);
+        assert!(iv <= ifg + 1e-6, "{}: vec {iv} > fine {ifg}", l.name);
+    }
+}
+
+#[test]
+fn activation_calibration_survives_pipeline() {
+    // After workload::prepare, deep-layer activations must stay alive
+    // through the actual coordinator run (not just the calibration image).
+    let ctx = tiny_ctx();
+    let (coord, images, _) = experiments::workload::prepare(&ctx);
+    let opts = RunOptions::new(SimConfig::paper_4_14_3());
+    let report = coord.run(&images[0], &opts).unwrap();
+    let last = report.layers.last().unwrap();
+    assert!(
+        last.output_density_elem > 0.02,
+        "conv5_3 output density {} — dead activations",
+        last.output_density_elem
+    );
+}
+
+#[test]
+fn sram_budgets_hold_for_vgg16() {
+    // The paper's buffers must actually hold the working sets the
+    // scheduler assumes: psum and weight-group peaks within the default
+    // SRAM configuration on every VGG layer.
+    let ctx = tiny_ctx();
+    let (coord, images, _) = experiments::workload::prepare(&ctx);
+    for sim in [SimConfig::paper_4_14_3(), SimConfig::paper_8_7_3()] {
+        let report = coord.run(&images[0], &RunOptions::new(sim)).unwrap();
+        for l in &report.layers {
+            assert!(
+                l.sparse.sram_psum_peak <= sim.sram.psum_bytes as u64,
+                "{} [{}]: psum peak {} > {}",
+                l.name,
+                sim.pe.label(),
+                l.sparse.sram_psum_peak,
+                sim.sram.psum_bytes
+            );
+            assert!(l.sparse.sram_input_peak <= sim.sram.input_bytes as u64);
+            assert!(l.sparse.sram_weight_peak > 0);
+        }
+    }
+}
+
+#[test]
+fn mapped_kernels_extend_the_array() {
+    // §II-B extension: 1x1 and 5x5 kernels via the mapping layer produce
+    // exact functional results on the same array.
+    use vscnn::sim::mapping::simulate_layer_mapped;
+    use vscnn::sim::scheduler::Mode;
+    use vscnn::sim::trace::Trace;
+    use vscnn::util::rng::Pcg32;
+    let mut rng = Pcg32::seeded(99);
+    let mut cfg = SimConfig::paper_4_14_3();
+    cfg.pe.arrays = 2;
+    cfg.pe.rows = 5;
+    for (k, pad) in [(1usize, 0usize), (5, 2), (7, 3)] {
+        let n = 2 * 9 * 9;
+        let input = vscnn::tensor::Tensor::from_vec(
+            &[2, 9, 9],
+            (0..n).map(|_| rng.normal()).collect(),
+        );
+        let wn = 3 * 2 * k * k;
+        let weight = vscnn::tensor::Tensor::from_vec(
+            &[3, 2, k, k],
+            (0..wn).map(|_| rng.normal()).collect(),
+        );
+        let spec = ConvSpec { stride: 1, pad };
+        let golden = vscnn::tensor::conv::conv2d(&input, &weight, None, spec);
+        let mut tr = Trace::disabled();
+        let res = simulate_layer_mapped(
+            &input,
+            &weight,
+            None,
+            &cfg,
+            spec,
+            Mode::VectorSparse,
+            true,
+            &mut tr,
+        );
+        let out = res.output.unwrap();
+        assert!(
+            golden.allclose(&out, 1e-3, 1e-3),
+            "k={k}: diff {}",
+            golden.max_abs_diff(&out)
+        );
+    }
+}
+
+#[test]
+fn reduced_resolution_network_is_consistent() {
+    for res in [32usize, 64] {
+        let net = vgg16_at(res);
+        let mut params = synthetic_params(&net, 9, 0.0);
+        pruning::prune_network_vectors(&mut params, &paper_schedule(&net));
+        let images = synthetic_batch(net.input_shape, 1, 9);
+        let coord = Coordinator::new(net, params);
+        let report = coord
+            .run(&images[0], &RunOptions::new(SimConfig::paper_8_7_3()))
+            .unwrap();
+        assert_eq!(report.layers.len(), 13);
+    }
+}

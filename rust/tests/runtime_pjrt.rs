@@ -1,0 +1,146 @@
+//! Integration: the PJRT runtime executing real AOT artifacts, cross-
+//! checked against the rust golden conv — the three-corner check
+//! (rust golden ⇄ lax.conv HLO ⇄ Pallas-kernel HLO).
+//!
+//! Requires `make artifacts`; tests skip (with a notice) when the
+//! artifacts directory is absent so plain `cargo test` stays green.
+
+use vscnn::runtime::Runtime;
+use vscnn::tensor::conv::{conv2d, ConvSpec};
+use vscnn::tensor::Tensor;
+use vscnn::util::rng::Pcg32;
+
+fn runtime() -> Option<Runtime> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("SKIP: no artifacts at {dir:?}; run `make artifacts`");
+        return None;
+    }
+    Some(Runtime::new(dir).expect("runtime"))
+}
+
+fn random_tensor(rng: &mut Pcg32, shape: &[usize], density: f32) -> Tensor {
+    let n: usize = shape.iter().product();
+    Tensor::from_vec(
+        shape,
+        (0..n)
+            .map(|_| if rng.bernoulli(density) { rng.normal() } else { 0.0 })
+            .collect(),
+    )
+}
+
+#[test]
+fn pjrt_ref_artifact_matches_rust_golden_conv() {
+    let Some(rt) = runtime() else { return };
+    let mut rng = Pcg32::seeded(1);
+    // Smallest ref bucket present: find one with h <= 32 to keep golden fast.
+    let art = rt
+        .manifest()
+        .artifacts
+        .iter()
+        .filter(|a| a.kind == "ref")
+        .min_by_key(|a| a.c_in * a.h * a.w * a.c_out)
+        .expect("at least one ref artifact")
+        .clone();
+    let x = random_tensor(&mut rng, &[art.c_in, art.h, art.w], 0.6);
+    let w = random_tensor(&mut rng, &[art.c_out, art.c_in, 3, 3], 0.5);
+    let b: Vec<f32> = (0..art.c_out).map(|_| rng.normal()).collect();
+
+    let got = rt.run_conv(&art, &x, &w, &b).expect("pjrt exec");
+    let want = conv2d(&x, &w, Some(&b), ConvSpec { stride: 1, pad: 1 });
+    assert!(
+        want.allclose(&got, 1e-3, 1e-3),
+        "PJRT ref vs golden: max diff {}",
+        want.max_abs_diff(&got)
+    );
+}
+
+#[test]
+fn pjrt_pallas_kernel_matches_ref_artifact() {
+    let Some(rt) = runtime() else { return };
+    let mut rng = Pcg32::seeded(2);
+    let Some(vscnn_art) = rt
+        .manifest()
+        .artifacts
+        .iter()
+        .filter(|a| a.kind == "vscnn")
+        .min_by_key(|a| a.c_in * a.h * a.w * a.c_out)
+        .cloned()
+    else {
+        eprintln!("SKIP: no vscnn artifacts in manifest");
+        return;
+    };
+    let ref_art = rt
+        .manifest()
+        .find("ref", vscnn_art.c_in, vscnn_art.c_out, vscnn_art.h, vscnn_art.w)
+        .expect("matching ref bucket")
+        .clone();
+
+    let x = random_tensor(&mut rng, &[vscnn_art.c_in, vscnn_art.h, vscnn_art.w], 0.5);
+    let w = random_tensor(&mut rng, &[vscnn_art.c_out, vscnn_art.c_in, 3, 3], 0.4);
+    let b: Vec<f32> = (0..vscnn_art.c_out).map(|_| rng.normal()).collect();
+
+    let a = rt.run_conv(&vscnn_art, &x, &w, &b).expect("pallas artifact");
+    let r = rt.run_conv(&ref_art, &x, &w, &b).expect("ref artifact");
+    assert!(
+        r.allclose(&a, 1e-3, 1e-3),
+        "Pallas-kernel HLO vs lax HLO: max diff {}",
+        r.max_abs_diff(&a)
+    );
+}
+
+#[test]
+fn pjrt_shape_mismatch_is_clean_error() {
+    let Some(rt) = runtime() else { return };
+    let art = rt.manifest().artifacts[0].clone();
+    let x = Tensor::zeros(&[art.c_in, art.h + 1, art.w]);
+    let w = Tensor::zeros(&[art.c_out, art.c_in, 3, 3]);
+    let b = vec![0.0; art.c_out];
+    let err = rt.run_conv(&art, &x, &w, &b).unwrap_err();
+    assert!(format!("{err:#}").contains("input shape"));
+}
+
+#[test]
+fn coordinator_runs_on_pjrt_backend() {
+    // Full pipeline with the PJRT functional path at the artifact
+    // resolution (res 64 buckets are emitted by `make artifacts`).
+    let Some(rt) = runtime() else { return };
+    let has_res64 = rt.manifest().find("ref", 3, 64, 64, 64).is_some();
+    if !has_res64 {
+        eprintln!("SKIP: no res-64 ref buckets in manifest");
+        return;
+    }
+    use vscnn::coordinator::{FunctionalBackend, RunOptions};
+    use vscnn::experiments::workload;
+    use vscnn::experiments::ExpContext;
+
+    let ctx = ExpContext {
+        res: 64,
+        images: 1,
+        ..Default::default()
+    };
+    let (coord, images, _) = workload::prepare(&ctx);
+    let mut opts = RunOptions::new(vscnn::sim::config::SimConfig::paper_8_7_3());
+    let report_cpu = coord.run(&images[0], &opts).unwrap();
+    opts.backend = FunctionalBackend::Pjrt(std::sync::Arc::new(rt), "ref".to_string());
+    let report_pjrt = coord.run(&images[0], &opts).unwrap();
+
+    // XLA's conv and the rust im2col path differ by ~1e-6 per element;
+    // values sitting exactly at the ReLU threshold can flip, so zero
+    // patterns (and cycles) agree to a tolerance rather than exactly.
+    let (ca, cb) = (report_cpu.totals.cycles as f64, report_pjrt.totals.cycles as f64);
+    assert!(
+        (ca - cb).abs() / ca < 1e-3,
+        "cycle divergence: cpu {ca} vs pjrt {cb}"
+    );
+    assert_eq!(report_cpu.layers.len(), report_pjrt.layers.len());
+    for (a, b) in report_cpu.layers.iter().zip(&report_pjrt.layers) {
+        assert!(
+            (a.output_density_elem - b.output_density_elem).abs() < 1e-3,
+            "{}: {} vs {}",
+            a.name,
+            a.output_density_elem,
+            b.output_density_elem
+        );
+    }
+}
