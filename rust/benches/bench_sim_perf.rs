@@ -1,6 +1,19 @@
 //! §Perf bench: simulator and functional-path throughput on representative
-//! VGG-16 layers — the numbers tracked in EXPERIMENTS.md §Perf.
+//! VGG-16 layers — the numbers tracked in EXPERIMENTS.md §Perf and written
+//! to `BENCH_sim_perf.json` so the perf trajectory is diffable across PRs.
 //! Run: `cargo bench --bench bench_sim_perf`.
+//!
+//! * `sim-timing/*` — timing-only vector-sparse simulation (modelled
+//!   pairs/s).
+//! * `sim-functional-t1/*` vs `sim-functional-tN/*` — the functional
+//!   dataflow pinned to one worker vs all cores; the ratio is recorded in
+//!   the JSON `derived` block (`functional_speedup_*`).
+//! * `density/*` — the Fig 9–11 analysis path.
+//! * `conv-mt/*` — the blocked-matmul im2col forward.
+//!
+//! Env `VSCNN_BENCH_SCALING=1` additionally sweeps the conv3_1 functional
+//! case over 1/2/4/…/N workers (the thread-scaling curve in
+//! EXPERIMENTS.md §Perf).
 
 use vscnn::model::init::synthetic_image;
 use vscnn::pruning::{prune_vectors, VectorGranularity};
@@ -11,7 +24,8 @@ use vscnn::sparse::encode::layer_report;
 use vscnn::tensor::conv::ConvSpec;
 use vscnn::tensor::ops::conv2d_im2col_mt;
 use vscnn::tensor::Tensor;
-use vscnn::util::bench::{bench, black_box};
+use vscnn::util::bench::{bench, black_box, write_results, BenchResult};
+use vscnn::util::json::Json;
 use vscnn::util::rng::Pcg32;
 
 fn sparse_tensor(rng: &mut Pcg32, shape: &[usize], density: f32) -> Tensor {
@@ -24,17 +38,50 @@ fn sparse_tensor(rng: &mut Pcg32, shape: &[usize], density: f32) -> Tensor {
     )
 }
 
+fn functional_case(
+    label: &str,
+    input: &Tensor,
+    weight: &Tensor,
+    cfg: &SimConfig,
+    spec: ConvSpec,
+    iters: usize,
+) -> BenchResult {
+    let r = bench(label, 0, iters, || {
+        let mut tr = Trace::disabled();
+        let res = simulate_layer(
+            input,
+            weight,
+            None,
+            cfg,
+            spec,
+            Mode::VectorSparse,
+            true,
+            &mut tr,
+        );
+        black_box(res.output.map(|t| t.len()));
+    });
+    println!("{}", r.line());
+    r
+}
+
 fn main() {
     let mut rng = Pcg32::seeded(1234);
-    let cfg = SimConfig::paper_8_7_3();
+    let base_cfg = SimConfig::paper_8_7_3();
     let spec = ConvSpec::default();
     let threads = std::thread::available_parallelism().map_or(4, |n| n.get());
+    let scaling = std::env::var("VSCNN_BENCH_SCALING").is_ok();
 
-    // Representative layers: early (large plane, few channels) and late
-    // (small plane, many channels).
+    let mut results: Vec<BenchResult> = Vec::new();
+    let mut derived = Json::obj();
+    derived.set("threads", threads);
+
+    // Representative layers: early (large plane, few channels), the
+    // acceptance-tracked conv3_1 class, and late (small plane, many
+    // channels).
     let cases = [
-        ("conv2_1-like [64->128 @112]", 64usize, 128usize, 112usize),
-        ("conv4_2-like [512->512 @28]", 512, 512, 28),
+        ("conv2_1", 64usize, 128usize, 112usize),
+        ("conv3_1", 128, 256, 56),
+        ("conv4_2", 512, 512, 28),
     ];
 
     for (name, c_in, k_out, hw) in cases {
@@ -49,14 +96,14 @@ fn main() {
         prune_vectors(&mut weight, 0.235, VectorGranularity::KernelRow);
 
         // 1) timing-only simulation throughput (modelled dense pairs/s).
-        let dense_pairs = (k_out * c_in * hw.div_ceil(cfg.pe.rows) * hw * 3) as f64;
-        let r = bench(&format!("sim/{name}"), 1, 5, || {
+        let dense_pairs = (k_out * c_in * hw.div_ceil(base_cfg.pe.rows) * hw * 3) as f64;
+        let r = bench(&format!("sim-timing/{name}"), 1, 5, || {
             let mut tr = Trace::disabled();
             let res = simulate_layer(
                 &input,
                 &weight,
                 None,
-                &cfg,
+                &base_cfg,
                 spec,
                 Mode::VectorSparse,
                 false,
@@ -66,19 +113,80 @@ fn main() {
         });
         println!("{}", r.line());
         println!("{}", r.throughput(dense_pairs, "modelled-pairs"));
+        results.push(r);
 
-        // 2) density analysis (fig 9-11 inner loop).
+        // 2) functional dataflow: one worker vs all cores. The ratio is the
+        //    headline EXPERIMENTS.md §Perf number (the t1 path already
+        //    benefits from the value-carrying CVF, so the speedup over the
+        //    pre-refactor allocating engine is larger still).
+        let mut cfg1 = base_cfg;
+        cfg1.threads = 1;
+        let r1 = functional_case(
+            &format!("sim-functional-t1/{name}"),
+            &input,
+            &weight,
+            &cfg1,
+            spec,
+            3,
+        );
+        let mut cfgn = base_cfg;
+        cfgn.threads = threads;
+        let rn = functional_case(
+            &format!("sim-functional-t{threads}/{name}"),
+            &input,
+            &weight,
+            &cfgn,
+            spec,
+            3,
+        );
+        let speedup = r1.median.as_secs_f64() / rn.median.as_secs_f64().max(1e-12);
+        println!("functional speedup {name}: {speedup:.2}x on {threads} threads\n");
+        derived.set(&format!("functional_speedup_{name}"), speedup);
+        results.push(r1);
+        results.push(rn);
+
+        if scaling && name == "conv3_1" {
+            // 1, 2, 4, …, plus the full-core point when N is not a power
+            // of two (the most relevant point of the curve).
+            let mut points: Vec<usize> = std::iter::successors(Some(1usize), |t| Some(t * 2))
+                .take_while(|&t| t < threads)
+                .collect();
+            points.push(threads);
+            for t in points {
+                let mut cfg_t = base_cfg;
+                cfg_t.threads = t;
+                let rt = functional_case(
+                    &format!("sim-functional-scaling-t{t}/{name}"),
+                    &input,
+                    &weight,
+                    &cfg_t,
+                    spec,
+                    3,
+                );
+                results.push(rt);
+            }
+        }
+
+        // 3) density analysis (fig 9-11 inner loop).
         let r = bench(&format!("density/{name}"), 1, 5, || {
-            black_box(layer_report(&input, &weight, spec, cfg.pe.rows));
+            black_box(layer_report(&input, &weight, spec, base_cfg.pe.rows));
         });
         println!("{}", r.line());
+        results.push(r);
 
-        // 3) functional forward (im2col MT) in GMAC/s.
+        // 4) functional forward (blocked-matmul im2col MT) in MAC/s.
         let macs = (k_out * c_in * 9 * hw * hw) as f64;
         let r = bench(&format!("conv-mt{threads}/{name}"), 1, 5, || {
             black_box(conv2d_im2col_mt(&input, &weight, None, spec, threads));
         });
         println!("{}", r.line());
         println!("{}\n", r.throughput(macs, "MAC"));
+        results.push(r);
+    }
+
+    let path = "BENCH_sim_perf.json";
+    match write_results(path, &results, derived) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("failed to write {path}: {e}"),
     }
 }

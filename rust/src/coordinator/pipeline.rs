@@ -264,8 +264,31 @@ impl Coordinator {
     }
 
     /// Run a batch of images, returning one report each.
+    ///
+    /// Images are independent, so the batch fans out across scoped worker
+    /// threads. The run's thread budget is *split* across the batch
+    /// workers (each per-image run gets `budget / workers` simulator and
+    /// backend threads), so nested parallelism stays within the configured
+    /// budget instead of multiplying it — `--threads 1` really is
+    /// single-threaded. Each image's report is identical to a sequential
+    /// `run`; the returned order matches the input order, and an error
+    /// short-circuits the rest of its worker's chunk.
     pub fn run_batch(&self, inputs: &[Tensor], opts: &RunOptions) -> Result<Vec<NetworkReport>> {
-        inputs.iter().map(|x| self.run(x, opts)).collect()
+        let budget = opts.sim.effective_threads();
+        let workers = budget.min(inputs.len().max(1));
+        let mut inner = opts.clone();
+        inner.sim.threads = (budget / workers).max(1);
+        if let FunctionalBackend::Im2colMt(t) = &mut inner.backend {
+            *t = (*t / workers).max(1);
+        }
+        let inner = &inner;
+        let chunks: Result<Vec<Vec<NetworkReport>>> =
+            crate::util::par_chunk_map(inputs.len(), workers, |range| {
+                inputs[range].iter().map(|x| self.run(x, inner)).collect()
+            })
+            .into_iter()
+            .collect();
+        Ok(chunks?.into_iter().flatten().collect())
     }
 }
 
@@ -323,6 +346,25 @@ mod tests {
         assert_eq!(golden.totals.cycles, mt.totals.cycles);
         for (a, b) in golden.layers.iter().zip(&mt.layers) {
             assert!((a.output_density_elem - b.output_density_elem).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn run_batch_parallel_matches_sequential() {
+        let net = tiny_vgg(8);
+        let mut params = synthetic_params(&net, 7, 0.0);
+        pruning::prune_network_vectors(&mut params, &flat_schedule(&net, 0.4));
+        let imgs = crate::model::init::synthetic_batch(net.input_shape, 3, 7);
+        let coord = Coordinator::new(net, params);
+        let mut opts = small_opts();
+        opts.verify_dataflow = false;
+        let batch = coord.run_batch(&imgs, &opts).unwrap();
+        assert_eq!(batch.len(), 3);
+        for (img, rep) in imgs.iter().zip(&batch) {
+            let solo = coord.run(img, &opts).unwrap();
+            assert_eq!(solo.totals.cycles, rep.totals.cycles);
+            assert_eq!(solo.total_dense_cycles, rep.total_dense_cycles);
+            assert_eq!(solo.network, rep.network);
         }
     }
 

@@ -2,7 +2,7 @@
 //! activations, weights, and surviving work — at element granularity
 //! (Fig 9) and vector granularity for R=14 (Fig 10) and R=7 (Fig 11).
 
-use super::workload::{avg_layer_metric, run_config};
+use super::workload::run_config;
 use super::{ExpContext, ExpOutput};
 use crate::coordinator::report::ascii_table;
 use crate::coordinator::LayerRecord;
@@ -20,21 +20,24 @@ fn density_output(
     work_f: impl Fn(&LayerRecord) -> f64,
 ) -> Result<ExpOutput> {
     let reports = run_config(ctx, cfg)?;
-    let input = avg_layer_metric(&reports, input_f);
-    let weight = avg_layer_metric(&reports, weight_f);
-    let work = avg_layer_metric(&reports, work_f);
-
-    let rows: Vec<(String, Vec<(String, f64)>)> = input
-        .iter()
-        .zip(&weight)
-        .zip(&work)
-        .map(|((i, w), k)| {
+    // One pass over the per-image layer records for all three series
+    // (instead of three `avg_layer_metric` traversals).
+    let n = reports.len().max(1) as f64;
+    let rows: Vec<(String, Vec<(String, f64)>)> = (0..reports[0].layers.len())
+        .map(|i| {
+            let (mut si, mut sw, mut sk) = (0.0, 0.0, 0.0);
+            for r in &reports {
+                let l = &r.layers[i];
+                si += input_f(l);
+                sw += weight_f(l);
+                sk += work_f(l);
+            }
             (
-                i.0.clone(),
+                reports[0].layers[i].name.clone(),
                 vec![
-                    ("input".to_string(), i.1),
-                    ("weight".to_string(), w.1),
-                    ("work".to_string(), k.1),
+                    ("input".to_string(), si / n),
+                    ("weight".to_string(), sw / n),
+                    ("work".to_string(), sk / n),
                 ],
             )
         })

@@ -86,6 +86,10 @@ pub fn run(id: &str, ctx: &ExpContext) -> Result<ExpOutput> {
 
 /// Run every experiment, returning them in order.
 pub fn run_all(ctx: &ExpContext) -> Result<Vec<ExpOutput>> {
+    // Warm the workload memoizer for both paper configurations
+    // concurrently (one core-pool worker per configuration); every figure
+    // below then hits the cache instead of re-simulating.
+    workload::run_configs(ctx, &crate::sim::config::SimConfig::paper_configs())?;
     list().iter().map(|id| run(id, ctx)).collect()
 }
 

@@ -1,7 +1,7 @@
 //! `fig12` / `fig13` / `headline` / `scnn`: the speedup figures and the
 //! §IV summary numbers.
 
-use super::workload::{avg_layer_metric, run_config};
+use super::workload::{avg_layer_metric, run_config, run_configs};
 use super::{ExpContext, ExpOutput};
 use crate::baselines::scnn_like::{vscnn_speedup_per_area, ScnnModel};
 use crate::coordinator::report::ascii_table;
@@ -101,12 +101,17 @@ pub fn run_fig(ctx: &ExpContext, cfg_4_14_3: bool) -> Result<ExpOutput> {
 pub fn run_headline(ctx: &ExpContext) -> Result<ExpOutput> {
     let mut json = Json::obj();
     let mut text = String::from("Headline summary (paper §IV)\n");
-    for (cfg, paper_speedup, paper_veff, paper_feff) in [
+    let entries = [
         (SimConfig::paper_4_14_3(), 1.871, 0.92, 0.466),
         (SimConfig::paper_8_7_3(), 1.93, 0.85, 0.471),
-    ] {
-        let reports = run_config(ctx, cfg)?;
-        let (ours, iv, ifg, veff, feff) = overall_avg(&reports);
+    ];
+    // Both configurations simulate concurrently (one worker each, backed
+    // by the workload memoizer so repeat figures stay free).
+    let all = run_configs(ctx, &[entries[0].0, entries[1].0])?;
+    for ((cfg, paper_speedup, paper_veff, paper_feff), reports) in
+        entries.into_iter().zip(&all)
+    {
+        let (ours, iv, ifg, veff, feff) = overall_avg(reports);
         let mut o = Json::obj();
         o.set("speedup", ours)
             .set("ideal_vector", iv)

@@ -47,6 +47,10 @@ pub fn options(ctx: &ExpContext, sim: SimConfig) -> Result<RunOptions> {
         }
         None => FunctionalBackend::Im2colMt(ctx.threads),
     };
+    // The context's thread budget also drives the simulation engine
+    // (parallel functional dataflow + group-timing fan-out).
+    let mut sim = sim;
+    sim.threads = ctx.threads;
     Ok(RunOptions {
         sim,
         backend,
@@ -82,6 +86,30 @@ pub fn run_config(ctx: &ExpContext, sim: SimConfig) -> Result<Vec<NetworkReport>
     let reports = coord.run_batch(&images, &opts)?;
     cache.lock().unwrap().insert(key, reports.clone());
     Ok(reports)
+}
+
+/// Run the workload on several configurations concurrently, one scoped
+/// worker per configuration (each lands in the memoization cache, so later
+/// single-config calls are free). Results come back in `sims` order and are
+/// identical to sequential [`run_config`] calls — the multi-config Table-I
+/// runs and `exp all` fan out across cores through this.
+pub fn run_configs(ctx: &ExpContext, sims: &[SimConfig]) -> Result<Vec<Vec<NetworkReport>>> {
+    // Split the context's thread budget across the config workers so the
+    // nested per-config parallelism (batch fan-out, simulator, backend)
+    // stays within it — `--threads 1` runs the configs sequentially.
+    // Thread counts never change results, so the memoized reports stay
+    // valid for later full-budget callers.
+    let workers = sims.len().min(ctx.threads.max(1));
+    let mut inner = ctx.clone();
+    inner.threads = (ctx.threads / workers.max(1)).max(1);
+    let inner = &inner;
+    let chunks: Result<Vec<Vec<Vec<NetworkReport>>>> =
+        crate::util::par_chunk_map(sims.len(), workers, |range| {
+            sims[range].iter().map(|s| run_config(inner, *s)).collect()
+        })
+        .into_iter()
+        .collect();
+    Ok(chunks?.into_iter().flatten().collect())
 }
 
 /// Average a per-layer metric across image reports.
@@ -132,6 +160,22 @@ mod tests {
         assert_eq!(reports[0].layers.len(), 13);
         let speedup = reports[0].overall_speedup();
         assert!(speedup > 1.0, "speedup {speedup}");
+    }
+
+    #[test]
+    fn run_configs_matches_run_config_per_entry() {
+        let ctx = tiny_ctx();
+        let sims = [SimConfig::paper_4_14_3(), SimConfig::paper_8_7_3()];
+        let both = run_configs(&ctx, &sims).unwrap();
+        assert_eq!(both.len(), 2);
+        for (sim, reports) in sims.iter().zip(&both) {
+            let solo = run_config(&ctx, *sim).unwrap();
+            assert_eq!(solo.len(), reports.len());
+            for (a, b) in solo.iter().zip(reports) {
+                assert_eq!(a.totals.cycles, b.totals.cycles);
+                assert_eq!(a.config_label, b.config_label);
+            }
+        }
     }
 
     #[test]

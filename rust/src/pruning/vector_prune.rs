@@ -100,7 +100,7 @@ pub fn prune_vectors(
 /// Vector-granularity density of a weight tensor (fraction of kernel
 /// columns with any nonzero element).
 pub fn vector_density(weight: &Tensor) -> f64 {
-    let vw = crate::sparse::VectorWeights::from_tensor(weight);
+    let vw = crate::sparse::VectorWeights::index_only(weight);
     vw.density()
 }
 

@@ -1,155 +1,237 @@
 //! Executable cache: compile each HLO artifact once on the PJRT CPU
 //! client, then execute conv layers with zero-copy-ish literal plumbing.
+//!
+//! The real PJRT path needs the `xla` bindings, which are not vendored in
+//! the offline build environment; it is gated behind the `pjrt` cargo
+//! feature. The default build ships a stub [`Runtime`] with the same API:
+//! manifest parsing works, `new`/execution return a clear error, and every
+//! caller (coordinator backend, CLI, e2e example) falls back to the rust
+//! conv paths gracefully.
 
-use super::artifacts::{ArtifactInfo, Manifest};
-use crate::tensor::Tensor;
-use anyhow::{anyhow, Context, Result};
-use std::collections::HashMap;
-use std::sync::Mutex;
+use super::artifacts::Manifest;
 
-/// PJRT-backed executor over an artifact manifest.
-///
-/// Interior mutability so the coordinator can share one `Runtime` across
-/// worker threads (`xla::PjRtLoadedExecutable` execution is thread-safe;
-/// the cache map is guarded).
-pub struct Runtime {
-    client: xla::PjRtClient,
-    manifest: Manifest,
-    cache: Mutex<HashMap<String, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
-}
+#[cfg(feature = "pjrt")]
+pub use pjrt_impl::Runtime;
+#[cfg(not(feature = "pjrt"))]
+pub use stub_impl::Runtime;
 
-impl Runtime {
-    /// Create a CPU PJRT client over `artifacts_dir`.
-    pub fn new(artifacts_dir: impl AsRef<std::path::Path>) -> Result<Runtime> {
-        let manifest = Manifest::load(artifacts_dir)?;
-        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e}"))?;
-        Ok(Runtime {
-            client,
-            manifest,
-            cache: Mutex::new(HashMap::new()),
-        })
+#[cfg(feature = "pjrt")]
+mod pjrt_impl {
+    use super::Manifest;
+    use crate::runtime::artifacts::ArtifactInfo;
+    use crate::tensor::Tensor;
+    use anyhow::{anyhow, Context, Result};
+    use std::collections::HashMap;
+    use std::sync::Mutex;
+
+    /// PJRT-backed executor over an artifact manifest.
+    ///
+    /// Interior mutability so the coordinator can share one `Runtime` across
+    /// worker threads (`xla::PjRtLoadedExecutable` execution is thread-safe;
+    /// the cache map is guarded).
+    pub struct Runtime {
+        client: xla::PjRtClient,
+        manifest: Manifest,
+        cache: Mutex<HashMap<String, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
     }
 
-    /// The manifest in use.
-    pub fn manifest(&self) -> &Manifest {
-        &self.manifest
-    }
-
-    /// PJRT platform name (diagnostics).
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
-
-    fn load(&self, art: &ArtifactInfo) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
-        if let Some(exe) = self.cache.lock().unwrap().get(&art.name) {
-            return Ok(exe.clone());
+    impl Runtime {
+        /// Create a CPU PJRT client over `artifacts_dir`.
+        pub fn new(artifacts_dir: impl AsRef<std::path::Path>) -> Result<Runtime> {
+            let manifest = Manifest::load(artifacts_dir)?;
+            let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e}"))?;
+            Ok(Runtime {
+                client,
+                manifest,
+                cache: Mutex::new(HashMap::new()),
+            })
         }
-        let path = self.manifest.path_of(art);
-        let proto = xla::HloModuleProto::from_text_file(&path)
-            .map_err(|e| anyhow!("parsing HLO text {path:?}: {e}"))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .map_err(|e| anyhow!("compiling {}: {e}", art.name))?;
-        let exe = std::sync::Arc::new(exe);
-        self.cache
-            .lock()
-            .unwrap()
-            .insert(art.name.clone(), exe.clone());
-        Ok(exe)
+
+        /// The manifest in use.
+        pub fn manifest(&self) -> &Manifest {
+            &self.manifest
+        }
+
+        /// PJRT platform name (diagnostics).
+        pub fn platform(&self) -> String {
+            self.client.platform_name()
+        }
+
+        fn load(&self, art: &ArtifactInfo) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
+            if let Some(exe) = self.cache.lock().unwrap().get(&art.name) {
+                return Ok(exe.clone());
+            }
+            let path = self.manifest.path_of(art);
+            let proto = xla::HloModuleProto::from_text_file(&path)
+                .map_err(|e| anyhow!("parsing HLO text {path:?}: {e}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compiling {}: {e}", art.name))?;
+            let exe = std::sync::Arc::new(exe);
+            self.cache
+                .lock()
+                .unwrap()
+                .insert(art.name.clone(), exe.clone());
+            Ok(exe)
+        }
+
+        /// Execute a conv bucket: `x [C,H,W]`, `w [K,C,3,3]`, `b [K]` →
+        /// pre-ReLU `[K, H_out, W_out]`.
+        pub fn run_conv(
+            &self,
+            art: &ArtifactInfo,
+            x: &Tensor,
+            w: &Tensor,
+            b: &[f32],
+        ) -> Result<Tensor> {
+            anyhow::ensure!(
+                x.shape() == [art.c_in, art.h, art.w],
+                "input shape {:?} != artifact [{}, {}, {}]",
+                x.shape(),
+                art.c_in,
+                art.h,
+                art.w
+            );
+            anyhow::ensure!(
+                w.shape()[0] == art.c_out && w.shape()[1] == art.c_in,
+                "weight shape {:?} mismatches artifact {}",
+                w.shape(),
+                art.name
+            );
+            let exe = self.load(art)?;
+            let to_lit = |t: &[f32], dims: &[i64]| -> Result<xla::Literal> {
+                xla::Literal::vec1(t)
+                    .reshape(dims)
+                    .map_err(|e| anyhow!("literal reshape {dims:?}: {e}"))
+            };
+            let xl = to_lit(x.data(), &[art.c_in as i64, art.h as i64, art.w as i64])?;
+            let wl = to_lit(
+                w.data(),
+                &[
+                    art.c_out as i64,
+                    art.c_in as i64,
+                    w.shape()[2] as i64,
+                    w.shape()[3] as i64,
+                ],
+            )?;
+            let bl = xla::Literal::vec1(b);
+            let result = exe
+                .execute::<xla::Literal>(&[xl, wl, bl])
+                .map_err(|e| anyhow!("executing {}: {e}", art.name))?;
+            let lit = result[0][0]
+                .to_literal_sync()
+                .map_err(|e| anyhow!("fetching result: {e}"))?;
+            // aot.py lowers with return_tuple=True: unwrap the 1-tuple.
+            let out = lit.to_tuple1().map_err(|e| anyhow!("untuple: {e}"))?;
+            let values = out
+                .to_vec::<f32>()
+                .map_err(|e| anyhow!("literal to_vec: {e}"))?;
+            let h_out = art.h + 2 * art.pad - (w.shape()[2] - 1) - 1 + 1;
+            let w_out = art.w + 2 * art.pad - (w.shape()[3] - 1) - 1 + 1;
+            anyhow::ensure!(
+                values.len() == art.c_out * h_out * w_out,
+                "result length {} != {}x{}x{}",
+                values.len(),
+                art.c_out,
+                h_out,
+                w_out
+            );
+            Ok(Tensor::from_vec(&[art.c_out, h_out, w_out], values))
+        }
+
+        /// Convenience: find + run by geometry, preferring `kind`.
+        pub fn run_conv_by_shape(
+            &self,
+            kind: &str,
+            x: &Tensor,
+            w: &Tensor,
+            b: &[f32],
+        ) -> Result<Tensor> {
+            let (c_in, h, ww) = (x.shape()[0], x.shape()[1], x.shape()[2]);
+            let c_out = w.shape()[0];
+            let art = self
+                .manifest
+                .find(kind, c_in, c_out, h, ww)
+                .with_context(|| {
+                    format!("no '{kind}' artifact for [C={c_in},H={h},W={ww}]→K={c_out}; re-run `make artifacts`")
+                })?
+                .clone();
+            self.run_conv(&art, x, w, b)
+        }
     }
 
-    /// Execute a conv bucket: `x [C,H,W]`, `w [K,C,3,3]`, `b [K]` →
-    /// pre-ReLU `[K, H_out, W_out]`.
-    pub fn run_conv(
-        &self,
-        art: &ArtifactInfo,
-        x: &Tensor,
-        w: &Tensor,
-        b: &[f32],
-    ) -> Result<Tensor> {
-        anyhow::ensure!(
-            x.shape() == [art.c_in, art.h, art.w],
-            "input shape {:?} != artifact [{}, {}, {}]",
-            x.shape(),
-            art.c_in,
-            art.h,
-            art.w
-        );
-        anyhow::ensure!(
-            w.shape()[0] == art.c_out && w.shape()[1] == art.c_in,
-            "weight shape {:?} mismatches artifact {}",
-            w.shape(),
-            art.name
-        );
-        let exe = self.load(art)?;
-        let to_lit = |t: &[f32], dims: &[i64]| -> Result<xla::Literal> {
-            xla::Literal::vec1(t)
-                .reshape(dims)
-                .map_err(|e| anyhow!("literal reshape {dims:?}: {e}"))
-        };
-        let xl = to_lit(x.data(), &[art.c_in as i64, art.h as i64, art.w as i64])?;
-        let wl = to_lit(
-            w.data(),
-            &[
-                art.c_out as i64,
-                art.c_in as i64,
-                w.shape()[2] as i64,
-                w.shape()[3] as i64,
-            ],
-        )?;
-        let bl = xla::Literal::vec1(b);
-        let result = exe
-            .execute::<xla::Literal>(&[xl, wl, bl])
-            .map_err(|e| anyhow!("executing {}: {e}", art.name))?;
-        let lit = result[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow!("fetching result: {e}"))?;
-        // aot.py lowers with return_tuple=True: unwrap the 1-tuple.
-        let out = lit.to_tuple1().map_err(|e| anyhow!("untuple: {e}"))?;
-        let values = out
-            .to_vec::<f32>()
-            .map_err(|e| anyhow!("literal to_vec: {e}"))?;
-        let h_out = art.h + 2 * art.pad - (w.shape()[2] - 1) - 1 + 1;
-        let w_out = art.w + 2 * art.pad - (w.shape()[3] - 1) - 1 + 1;
-        anyhow::ensure!(
-            values.len() == art.c_out * h_out * w_out,
-            "result length {} != {}x{}x{}",
-            values.len(),
-            art.c_out,
-            h_out,
-            w_out
-        );
-        Ok(Tensor::from_vec(&[art.c_out, h_out, w_out], values))
-    }
-
-    /// Convenience: find + run by geometry, preferring `kind`.
-    pub fn run_conv_by_shape(
-        &self,
-        kind: &str,
-        x: &Tensor,
-        w: &Tensor,
-        b: &[f32],
-    ) -> Result<Tensor> {
-        let (c_in, h, ww) = (x.shape()[0], x.shape()[1], x.shape()[2]);
-        let c_out = w.shape()[0];
-        let art = self
-            .manifest
-            .find(kind, c_in, c_out, h, ww)
-            .with_context(|| {
-                format!("no '{kind}' artifact for [C={c_in},H={h},W={ww}]→K={c_out}; re-run `make artifacts`")
-            })?
-            .clone();
-        self.run_conv(&art, x, w, b)
-    }
+    // PJRT executables and client handles are safe to share across threads
+    // for execution; the xla crate just doesn't mark them. The cache Mutex
+    // guards the only interior mutation.
+    unsafe impl Send for Runtime {}
+    unsafe impl Sync for Runtime {}
 }
 
-// PJRT executables and client handles are safe to share across threads for
-// execution; the xla crate just doesn't mark them. The cache Mutex guards
-// the only interior mutation.
-unsafe impl Send for Runtime {}
-unsafe impl Sync for Runtime {}
+#[cfg(not(feature = "pjrt"))]
+mod stub_impl {
+    use super::Manifest;
+    use crate::runtime::artifacts::ArtifactInfo;
+    use crate::tensor::Tensor;
+    use anyhow::{bail, Result};
+
+    /// Stub runtime used when the crate is built without the `pjrt`
+    /// feature: [`Runtime::new`] validates the manifest (so error paths and
+    /// diagnostics stay testable) and then reports that execution is
+    /// unavailable.
+    pub struct Runtime {
+        manifest: Manifest,
+    }
+
+    impl Runtime {
+        /// Always fails after loading the manifest: the PJRT client needs
+        /// the `xla` bindings, which this build does not link.
+        pub fn new(artifacts_dir: impl AsRef<std::path::Path>) -> Result<Runtime> {
+            let manifest = Manifest::load(artifacts_dir)?;
+            bail!(
+                "PJRT runtime unavailable: built without the `pjrt` cargo feature \
+                 ({} artifacts parsed at {:?}); use the rust conv backends instead",
+                manifest.artifacts.len(),
+                manifest.dir
+            );
+        }
+
+        /// The manifest in use.
+        pub fn manifest(&self) -> &Manifest {
+            &self.manifest
+        }
+
+        /// PJRT platform name (diagnostics).
+        pub fn platform(&self) -> String {
+            "pjrt-disabled".to_string()
+        }
+
+        /// Unreachable in practice (`new` never returns a stub instance);
+        /// present so call sites typecheck identically with and without the
+        /// feature.
+        pub fn run_conv(
+            &self,
+            art: &ArtifactInfo,
+            _x: &Tensor,
+            _w: &Tensor,
+            _b: &[f32],
+        ) -> Result<Tensor> {
+            bail!("cannot execute {}: built without the `pjrt` feature", art.name)
+        }
+
+        /// See [`Self::run_conv`].
+        pub fn run_conv_by_shape(
+            &self,
+            kind: &str,
+            _x: &Tensor,
+            _w: &Tensor,
+            _b: &[f32],
+        ) -> Result<Tensor> {
+            bail!("cannot execute '{kind}' artifact: built without the `pjrt` feature")
+        }
+    }
+}
 
 #[cfg(test)]
 mod tests {
@@ -161,5 +243,20 @@ mod tests {
     #[test]
     fn missing_dir_errors() {
         assert!(Runtime::new("/nonexistent/artifacts").is_err());
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn stub_reports_disabled_feature_with_valid_manifest() {
+        let dir = std::env::temp_dir().join(format!("vscnn_stub_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"network":"vgg16","artifacts":[]}"#,
+        )
+        .unwrap();
+        let err = Runtime::new(&dir).unwrap_err();
+        assert!(format!("{err:#}").contains("pjrt"));
+        std::fs::remove_dir_all(&dir).ok();
     }
 }

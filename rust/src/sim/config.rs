@@ -80,6 +80,11 @@ pub struct SimConfig {
     /// sums and the array switches (c, strip, filter-group) context.
     /// The PE pipeline depth is small; default 2 (multiply + accumulate).
     pub context_switch_cycles: u64,
+    /// Host worker threads for the simulation engine itself (the parallel
+    /// functional dataflow and the group-timing fan-out). `0` = use every
+    /// available core. This is a *simulator* knob: cycle counts and
+    /// functional outputs are identical for every thread count.
+    pub threads: usize,
 }
 
 impl SimConfig {
@@ -91,6 +96,7 @@ impl SimConfig {
             freq_mhz: 500.0,
             dram_bytes_per_cycle: 8.0,
             context_switch_cycles: 2,
+            threads: 0,
         }
     }
 
@@ -105,6 +111,15 @@ impl SimConfig {
     /// Both paper configurations, labelled.
     pub fn paper_configs() -> Vec<SimConfig> {
         vec![Self::paper_4_14_3(), Self::paper_8_7_3()]
+    }
+
+    /// Resolve [`Self::threads`]: `0` means one worker per available core.
+    pub fn effective_threads(&self) -> usize {
+        if self.threads == 0 {
+            std::thread::available_parallelism().map_or(1, |n| n.get())
+        } else {
+            self.threads
+        }
     }
 }
 
@@ -129,5 +144,13 @@ mod tests {
         let s = SramConfig::default();
         assert!(s.input_bytes > 0 && s.weight_bytes > 0);
         assert_eq!(s.bytes_per_elem, 2);
+    }
+
+    #[test]
+    fn effective_threads_resolves_auto() {
+        let mut cfg = SimConfig::paper_8_7_3();
+        assert!(cfg.effective_threads() >= 1);
+        cfg.threads = 3;
+        assert_eq!(cfg.effective_threads(), 3);
     }
 }

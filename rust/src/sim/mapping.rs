@@ -75,6 +75,7 @@ pub fn map_kernel_rows(weight: &Tensor, cols: usize) -> Vec<MappedKernel> {
 /// Simulate a conv layer of arbitrary kernel height at unit stride by
 /// mapping it onto the array (KH != PE columns allowed). Stats accumulate
 /// across sub-kernels; the functional output is exact.
+#[allow(clippy::too_many_arguments)]
 pub fn simulate_layer_mapped(
     input: &Tensor,
     weight: &Tensor,

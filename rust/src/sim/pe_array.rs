@@ -64,14 +64,25 @@ impl PeArray {
 /// (used by the timing-only scheduler's functional cross-checks and by the
 /// accumulator tests).
 pub fn diagonal_product(input: &[f32], weight: &[f32]) -> Vec<f32> {
-    let (rows, cols) = (input.len(), weight.len());
-    let mut out = vec![0.0f32; rows + cols - 1];
+    let mut out = vec![0.0f32; input.len() + weight.len() - 1];
+    diagonal_product_into(input, weight, &mut out);
+    out
+}
+
+/// Allocation-free [`diagonal_product`]: writes the `R + C - 1` diagonal
+/// sums into a caller-owned scratch buffer. The functional scheduler calls
+/// this once per issued pair, so the hot loop makes no heap allocations
+/// (EXPERIMENTS.md §Perf).
+#[inline]
+pub fn diagonal_product_into(input: &[f32], weight: &[f32], out: &mut [f32]) {
+    let cols = weight.len();
+    debug_assert_eq!(out.len(), input.len() + cols - 1);
+    out.fill(0.0);
     for (r, &iv) in input.iter().enumerate() {
         for (c, &wv) in weight.iter().enumerate() {
             out[r + (cols - 1) - c] += iv * wv;
         }
     }
-    out
 }
 
 #[cfg(test)]
@@ -108,6 +119,15 @@ mod tests {
         let w = [1.0, 0.0, -2.0];
         let mut arr = PeArray::new(3, 3);
         assert_eq!(arr.cycle(&a, &w), diagonal_product(&a, &w));
+    }
+
+    #[test]
+    fn diagonal_product_into_reuses_dirty_scratch() {
+        let a = [1.0, 2.0];
+        let w = [3.0, 4.0];
+        let mut scratch = vec![9.0f32; 3];
+        diagonal_product_into(&a, &w, &mut scratch);
+        assert_eq!(scratch, diagonal_product(&a, &w));
     }
 
     #[test]

@@ -23,7 +23,8 @@ pub struct PostprocResult {
 pub fn postprocess(mut output: Tensor, r: usize) -> PostprocResult {
     let zeroed_elems = relu_inplace(&mut output);
     let compressed = if r > 0 {
-        Some(VectorActivations::from_tensor(&output, r))
+        // Index-only: downstream consumers only count vectors/bytes.
+        Some(VectorActivations::index_only(&output, r))
     } else {
         None
     };

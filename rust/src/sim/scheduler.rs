@@ -30,8 +30,8 @@
 use super::accumulator::Accumulator;
 use super::config::SimConfig;
 use super::dram::DramTraffic;
-use super::index_unit::{output_col, IssuedPair};
-use super::pe_array::diagonal_product;
+use super::index_unit::{output_col, output_row, IssuedPair};
+use super::pe_array::diagonal_product_into;
 use super::stats::SimStats;
 use super::trace::{Trace, TraceEvent};
 use crate::sparse::{VectorActivations, VectorWeights};
@@ -68,6 +68,7 @@ pub struct LayerResult {
 ///
 /// Only stride 1 is supported (the paper's optimized case; §II-B defers
 /// other strides to a remapping layer).
+#[allow(clippy::too_many_arguments)]
 pub fn simulate_layer(
     input: &Tensor,
     weight: &Tensor,
@@ -99,8 +100,20 @@ pub fn simulate_layer(
 
     let r = cfg.pe.rows;
     let b = cfg.pe.arrays;
-    let va = VectorActivations::from_tensor(input, r);
-    let vw = VectorWeights::from_tensor(weight);
+    // Only the parallel functional path reads the packed payloads; timing
+    // and trace runs encode index-only and skip the payload copy.
+    let want_vals = functional && !trace.enabled();
+    let (va, vw) = if want_vals {
+        (
+            VectorActivations::from_tensor(input, r),
+            VectorWeights::from_tensor(weight),
+        )
+    } else {
+        (
+            VectorActivations::index_only(input, r),
+            VectorWeights::index_only(weight),
+        )
+    };
     let strips = va.strips;
     let n_groups = k_out.div_ceil(b);
 
@@ -111,19 +124,7 @@ pub fn simulate_layer(
         dense_blocks * (w as u64) * (kw as u64) + dense_blocks * cfg.context_switch_cycles;
 
     let mut stats = SimStats::default();
-    let mut acc = functional.then(|| {
-        let mut a = Accumulator::new(k_out, h_out, w_out);
-        if let Some(bias) = bias {
-            for (k, &bv) in bias.iter().enumerate() {
-                for row in 0..h_out {
-                    for col in 0..w_out {
-                        *a.output_mut().at3_mut(k, row, col) = bv;
-                    }
-                }
-            }
-        }
-        a
-    });
+    let threads = cfg.effective_threads();
 
     // Dense-mode "virtual" index lists: all columns present.
     let all_input_cols: Vec<u16> = (0..w as u16).collect();
@@ -154,9 +155,13 @@ pub fn simulate_layer(
     // --- timing: arrays run independently within a group, sync at the
     // group boundary. work_k = Σ_c [|nzW(k,c)| · Σ_s|nzI(c,s)| + ctx ·
     // live_strips(c)] — channels with no weight vectors cost nothing.
-    for g in 0..n_groups {
+    // Groups are independent between boundary syncs, so they evaluate in
+    // parallel; all partials are u64 sums, so the merged totals are
+    // identical for every worker count.
+    let ctx_cycles = cfg.context_switch_cycles;
+    let group_timing = |g: usize| -> (u64, u64, u64, u64) {
         let filters = g * b..((g + 1) * b).min(k_out);
-        let n_filters = filters.len();
+        let n_filters = filters.len() as u64;
         let mut max_work = 0u64;
         let mut max_ctx = 0u64;
         let mut sum_work = 0u64;
@@ -171,8 +176,8 @@ pub fn simulate_layer(
                 if n_wcols == 0 {
                     continue;
                 }
-                wk += n_wcols * sum_nz_in[c] + cfg.context_switch_cycles * live_strips[c];
-                ctx += cfg.context_switch_cycles * live_strips[c];
+                wk += n_wcols * sum_nz_in[c] + ctx_cycles * live_strips[c];
+                ctx += ctx_cycles * live_strips[c];
             }
             sum_work += wk;
             if (wk, ctx) > (max_work, max_ctx) {
@@ -180,14 +185,45 @@ pub fn simulate_layer(
                 max_ctx = ctx;
             }
         }
-        stats.cycles += max_work;
-        stats.overhead_cycles += max_ctx;
-        stats.sync_stall_slots +=
-            n_filters as u64 * max_work - sum_work + (b - n_filters) as u64 * max_work;
+        (max_work, max_ctx, sum_work, n_filters)
+    };
+    // Fold one group's (max_work, max_ctx, sum_work, n_filters) into
+    // (cycles, overhead, sync_stalls). Every array in the group waits for
+    // the slowest filter's total work (pairs + context switches); arrays
+    // with no filter in a ragged last group stall the whole group — see
+    // `sync_stall_pinned_for_two_filter_group`.
+    let fold_group = |acc: &mut (u64, u64, u64), t: (u64, u64, u64, u64)| {
+        let (max_work, max_ctx, sum_work, n_filters) = t;
+        acc.0 += max_work;
+        acc.1 += max_ctx;
+        acc.2 += n_filters * max_work - sum_work + (b as u64 - n_filters) * max_work;
+    };
+    let timing_workers = if n_groups * b * c_in >= (1 << 14) {
+        threads
+    } else {
+        1
+    };
+    let mut timing = (0u64, 0u64, 0u64);
+    for p in crate::util::par_chunk_map(n_groups, timing_workers, |groups| {
+        let mut acc = (0u64, 0u64, 0u64);
+        for g in groups {
+            fold_group(&mut acc, group_timing(g));
+        }
+        acc
+    }) {
+        timing.0 += p.0;
+        timing.1 += p.1;
+        timing.2 += p.2;
     }
+    stats.cycles += timing.0;
+    stats.overhead_cycles += timing.1;
+    stats.sync_stall_slots += timing.2;
 
-    // --- per-pair accounting: group-independent, computed once ----------
-    for c in 0..c_in {
+    // --- per-pair accounting: group-independent, computed once per
+    // channel — channels are independent, so they too fan out across
+    // workers (u64 partial sums ⇒ deterministic totals). Tally order:
+    // (issued, macs, skipped_input, skipped_weight, boundary).
+    let pair_tally = |c: usize| -> (u64, u64, u64, u64, u64) {
         // Σ over all filters of this channel's nonzero weight vectors, and
         // how many filters carry each kernel column j.
         let mut sum_w_all = 0u64;
@@ -207,6 +243,7 @@ pub fn simulate_layer(
             }
         }
 
+        let mut t = (0u64, 0u64, 0u64, 0u64, 0u64);
         let skipped_w_per_nz_input = (k_out * kw) as u64 - sum_w_all;
         for s in 0..strips {
             let icols: &[u16] = match mode {
@@ -215,18 +252,18 @@ pub fn simulate_layer(
             };
             if icols.is_empty() {
                 if mode == Mode::VectorSparse {
-                    stats.skipped_input += (w * k_out * kw) as u64;
+                    t.2 += (w * k_out * kw) as u64;
                 }
                 continue;
             }
             if mode == Mode::VectorSparse {
-                stats.skipped_input += (w as u64 - icols.len() as u64) * (k_out * kw) as u64;
-                stats.skipped_weight += icols.len() as u64 * skipped_w_per_nz_input;
+                t.2 += (w as u64 - icols.len() as u64) * (k_out * kw) as u64;
+                t.3 += icols.len() as u64 * skipped_w_per_nz_input;
             }
 
             let issued: u64 = icols.len() as u64 * sum_w_all;
-            stats.issued_pairs += issued;
-            stats.macs += issued * (r as u64) * (kh as u64);
+            t.0 += issued;
+            t.1 += issued * (r as u64) * (kh as u64);
 
             // Boundary (X) pairs: output col i - j + pad outside the
             // plane. Counted per kernel column once, weighted by how many
@@ -240,13 +277,78 @@ pub fn simulate_layer(
                 let below = icols.partition_point(|&i| (i as i64) < lo) as u64;
                 let above =
                     icols.len() as u64 - icols.partition_point(|&i| (i as i64) < hi) as u64;
-                stats.boundary_pairs += nf * (below + above);
+                t.4 += nf * (below + above);
             }
         }
+        t
+    };
+    let tally_workers = if c_in * (k_out * kw + strips * 4) >= (1 << 14) {
+        threads
+    } else {
+        1
+    };
+    let mut tally = (0u64, 0u64, 0u64, 0u64, 0u64);
+    for p in crate::util::par_chunk_map(c_in, tally_workers, |channels| {
+        let mut acc = (0u64, 0u64, 0u64, 0u64, 0u64);
+        for c in channels {
+            add5(&mut acc, pair_tally(c));
+        }
+        acc
+    }) {
+        add5(&mut tally, p);
     }
+    stats.issued_pairs += tally.0;
+    stats.macs += tally.1;
+    stats.skipped_input += tally.2;
+    stats.skipped_weight += tally.3;
+    stats.boundary_pairs += tally.4;
 
     // --- functional + trace (values through the PE dataflow) ------------
-    if functional || trace.enabled() {
+    let mut output: Option<Tensor> = None;
+    if want_vals {
+        // Fast path: per-filter output planes are disjoint, so filters fan
+        // out across workers; the packed CVF payloads make the inner loop
+        // read contiguous slices with zero heap allocation.
+        output = Some(functional_forward(
+            input,
+            weight,
+            bias,
+            &va,
+            &vw,
+            mode,
+            spec,
+            FuncDims {
+                r,
+                kh,
+                kw,
+                k_out,
+                c_in,
+                strips,
+                h,
+                h_out,
+                w_out,
+            },
+            threads,
+        ));
+    } else if functional || trace.enabled() {
+        // Trace path: sequential so cycle events interleave exactly as the
+        // single-issue hardware would; only used for Table-I-sized runs.
+        let mut acc = functional.then(|| {
+            let mut a = Accumulator::new(k_out, h_out, w_out);
+            if let Some(bias) = bias {
+                for (k, &bv) in bias.iter().enumerate() {
+                    for row in 0..h_out {
+                        for col in 0..w_out {
+                            *a.output_mut().at3_mut(k, row, col) = bv;
+                        }
+                    }
+                }
+            }
+            a
+        });
+        let mut col = vec![0.0f32; r];
+        let mut wcol = vec![0.0f32; kh];
+        let mut diag = vec![0.0f32; r + kh - 1];
         for g in 0..n_groups {
             let filters: Vec<usize> = (g * b..((g + 1) * b).min(k_out)).collect();
             for c in 0..c_in {
@@ -267,7 +369,7 @@ pub fn simulate_layer(
                     for (pos, &i) in icols.iter().enumerate() {
                         // Input column vector (zero-padded to R for ragged
                         // last strips).
-                        let mut col = vec![0.0f32; r];
+                        col.fill(0.0);
                         for (rr, cv) in col.iter_mut().enumerate().take(rows_here) {
                             *cv = input.at3(c, base + rr, i as usize);
                         }
@@ -287,10 +389,10 @@ pub fn simulate_layer(
                                     },
                                 });
                                 if let Some(acc) = acc.as_mut() {
-                                    let wcol: Vec<f32> = (0..kh)
-                                        .map(|rr| weight.at4(k, c, rr, j as usize))
-                                        .collect();
-                                    let diag = diagonal_product(&col, &wcol);
+                                    for (rr, wv) in wcol.iter_mut().enumerate() {
+                                        *wv = weight.at4(k, c, rr, j as usize);
+                                    }
+                                    diagonal_product_into(&col, &wcol, &mut diag);
                                     acc.add_partial(k, &diag, base, oc, kh, spec.pad);
                                 }
                             }
@@ -299,6 +401,7 @@ pub fn simulate_layer(
                 }
             }
         }
+        output = acc.map(|a| a.into_output());
     }
 
     // --- DRAM traffic -------------------------------------------------
@@ -344,8 +447,178 @@ pub fn simulate_layer(
     LayerResult {
         stats,
         dense_cycles,
-        output: acc.map(|a| a.into_output()),
+        output,
     }
+}
+
+/// Dimensions threaded into [`functional_forward`] (one bundle instead of
+/// nine loose arguments).
+struct FuncDims {
+    r: usize,
+    kh: usize,
+    kw: usize,
+    k_out: usize,
+    c_in: usize,
+    strips: usize,
+    h: usize,
+    h_out: usize,
+    w_out: usize,
+}
+
+/// Element-wise 5-tuple accumulate for the per-channel pair tallies.
+fn add5(a: &mut (u64, u64, u64, u64, u64), b: (u64, u64, u64, u64, u64)) {
+    a.0 += b.0;
+    a.1 += b.1;
+    a.2 += b.2;
+    a.3 += b.3;
+    a.4 += b.4;
+}
+
+/// Add one diagonal partial column into a single filter's output plane —
+/// the slice-level twin of [`Accumulator::add_partial`], identical
+/// accumulation order so the parallel path is bit-for-bit the sequential
+/// result.
+#[inline]
+#[allow(clippy::too_many_arguments)]
+fn accumulate_diag(
+    plane: &mut [f32],
+    h_out: usize,
+    w_out: usize,
+    diag: &[f32],
+    strip_base: usize,
+    out_col: Option<usize>,
+    cols: usize,
+    pad: usize,
+) {
+    let Some(col) = out_col else { return };
+    for (d, &v) in diag.iter().enumerate() {
+        if let Some(row) = output_row(strip_base, d, cols, pad, h_out) {
+            plane[row * w_out + col] += v;
+        }
+    }
+}
+
+/// The functional dataflow, parallel and allocation-free: filters split
+/// across `threads` scoped workers (their `[H_out, W_out]` output planes
+/// are disjoint), each worker reusing three scratch buffers for the whole
+/// layer. Per filter the (channel, strip, input column, weight column)
+/// order matches the sequential trace path exactly, so outputs are
+/// bit-identical for every worker count.
+#[allow(clippy::too_many_arguments)]
+fn functional_forward(
+    input: &Tensor,
+    weight: &Tensor,
+    bias: Option<&[f32]>,
+    va: &VectorActivations,
+    vw: &VectorWeights,
+    mode: Mode,
+    spec: ConvSpec,
+    d: FuncDims,
+    threads: usize,
+) -> Tensor {
+    let FuncDims {
+        r,
+        kh,
+        kw,
+        k_out,
+        c_in,
+        strips,
+        h,
+        h_out,
+        w_out,
+    } = d;
+    let plane = h_out * w_out;
+    let w_in = input.shape()[2];
+    let mut out = vec![0.0f32; k_out * plane];
+    let workers = threads.max(1).min(k_out.max(1));
+    let chunk = k_out.div_ceil(workers).max(1);
+    std::thread::scope(|scope| {
+        for (ti, out_chunk) in out.chunks_mut(chunk * plane).enumerate() {
+            let k_lo = ti * chunk;
+            scope.spawn(move || {
+                // Per-worker scratch — the only buffers the hot loop
+                // touches; no allocation happens past this point.
+                let mut icol = vec![0.0f32; r];
+                let mut wcol = vec![0.0f32; kh];
+                let mut diag = vec![0.0f32; r + kh - 1];
+                for (ki, kplane) in out_chunk.chunks_mut(plane).enumerate() {
+                    let k = k_lo + ki;
+                    kplane.fill(bias.map_or(0.0, |bs| bs[k]));
+                    for c in 0..c_in {
+                        match mode {
+                            Mode::VectorSparse => {
+                                let wcols = vw.nz_cols(k, c);
+                                if wcols.is_empty() {
+                                    continue;
+                                }
+                                let wvals = vw.nz_vals(k, c);
+                                for s in 0..strips {
+                                    let icols = va.nz_cols(c, s);
+                                    let ivals = va.nz_vals(c, s);
+                                    let base = s * r;
+                                    for (pos, &i) in icols.iter().enumerate() {
+                                        let col = &ivals[pos * r..(pos + 1) * r];
+                                        for (wpos, &j) in wcols.iter().enumerate() {
+                                            let wv = &wvals[wpos * kh..(wpos + 1) * kh];
+                                            diagonal_product_into(col, wv, &mut diag);
+                                            let oc = output_col(
+                                                i as usize,
+                                                j as usize,
+                                                spec.pad,
+                                                w_out,
+                                            );
+                                            accumulate_diag(
+                                                kplane,
+                                                h_out,
+                                                w_out,
+                                                &diag,
+                                                base,
+                                                oc,
+                                                kh,
+                                                spec.pad,
+                                            );
+                                        }
+                                    }
+                                }
+                            }
+                            Mode::Dense => {
+                                for s in 0..strips {
+                                    let base = s * r;
+                                    let rows_here = ((s + 1) * r).min(h) - base;
+                                    for i in 0..w_in {
+                                        icol.fill(0.0);
+                                        for (rr, cv) in
+                                            icol.iter_mut().enumerate().take(rows_here)
+                                        {
+                                            *cv = input.at3(c, base + rr, i);
+                                        }
+                                        for j in 0..kw {
+                                            for (rr, wv) in wcol.iter_mut().enumerate() {
+                                                *wv = weight.at4(k, c, rr, j);
+                                            }
+                                            diagonal_product_into(&icol, &wcol, &mut diag);
+                                            let oc = output_col(i, j, spec.pad, w_out);
+                                            accumulate_diag(
+                                                kplane,
+                                                h_out,
+                                                w_out,
+                                                &diag,
+                                                base,
+                                                oc,
+                                                kh,
+                                                spec.pad,
+                                            );
+                                        }
+                                    }
+                                }
+                            }
+                        }
+                    }
+                }
+            });
+        }
+    });
+    Tensor::from_vec(&[k_out, h_out, w_out], out)
 }
 
 
@@ -459,6 +732,51 @@ mod tests {
         }
     }
 
+    /// The parallel functional path must be bit-identical across worker
+    /// counts AND to the sequential (trace-enabled) dataflow — the perf
+    /// refactor changes no semantics.
+    #[test]
+    fn functional_output_identical_across_thread_counts() {
+        let mut rng = Pcg32::seeded(77);
+        let input = random_sparse(&mut rng, &[3, 10, 9], 0.5);
+        let weight = random_sparse(&mut rng, &[5, 3, 3, 3], 0.4);
+        let bias: Vec<f32> = (0..5).map(|_| rng.normal()).collect();
+        let spec = ConvSpec::default();
+        let mut cfg = small_cfg(2, 4);
+        let mut outs: Vec<Tensor> = Vec::new();
+        for threads in [1usize, 2, 7] {
+            cfg.threads = threads;
+            let mut tr = Trace::disabled();
+            let res = simulate_layer(
+                &input,
+                &weight,
+                Some(&bias),
+                &cfg,
+                spec,
+                Mode::VectorSparse,
+                true,
+                &mut tr,
+            );
+            outs.push(res.output.unwrap());
+        }
+        assert_eq!(outs[0].data(), outs[1].data());
+        assert_eq!(outs[0].data(), outs[2].data());
+
+        // Sequential dataflow (trace enabled forces the legacy loop).
+        let mut tr = Trace::new(4);
+        let seq = simulate_layer(
+            &input,
+            &weight,
+            Some(&bias),
+            &cfg,
+            spec,
+            Mode::VectorSparse,
+            true,
+            &mut tr,
+        );
+        assert_eq!(seq.output.unwrap().data(), outs[0].data());
+    }
+
     /// Sparse cycles never exceed dense cycles, and equal them for fully
     /// dense data.
     #[test]
@@ -524,6 +842,60 @@ mod tests {
             frac_small <= frac_big + 1e-9,
             "small {frac_small} vs big {frac_big}"
         );
+    }
+
+    /// Satellite: pin `sync_stall_slots` for a hand-computed 2-filter
+    /// group with context-switch cycles in play.
+    ///
+    /// Setup: `[B=2, R=2, C=3]`, ctx = 2. One channel, `[1,4,3]` input
+    /// with nonzero vectors (strip 0: cols {0, 2}; strip 1: col {1}), so
+    /// `Σ_s |nzI| = 3` and both strips are live. Filter 0 has nonzero
+    /// kernel columns {0, 1}; filter 1 has {2}.
+    ///
+    ///   work_0 = 2·3 + 2·2 = 10   (pairs + ctx over 2 live strips)
+    ///   work_1 = 1·3 + 4   =  7
+    ///
+    /// The group finishes at the slowest filter (10 cycles): cycles = 10,
+    /// and filter 1's array idles 10 − 7 = 3 slots at the group boundary —
+    /// the stall formula must charge exactly that (the slowest filter's
+    /// total *includes* its context switches, since the other array waits
+    /// through them too).
+    #[test]
+    fn sync_stall_pinned_for_two_filter_group() {
+        let mut cfg = SimConfig::paper_4_14_3();
+        cfg.pe.arrays = 2;
+        cfg.pe.rows = 2;
+        cfg.context_switch_cycles = 2;
+        let spec = ConvSpec { stride: 1, pad: 1 };
+
+        let mut input = Tensor::zeros(&[1, 4, 3]);
+        *input.at3_mut(0, 0, 0) = 1.0; // strip 0, col 0
+        *input.at3_mut(0, 1, 2) = 1.0; // strip 0, col 2
+        *input.at3_mut(0, 3, 1) = 1.0; // strip 1, col 1
+        let mut weight = Tensor::zeros(&[2, 1, 3, 3]);
+        *weight.at4_mut(0, 0, 0, 0) = 1.0; // filter 0, kernel col 0
+        *weight.at4_mut(0, 0, 1, 1) = 1.0; // filter 0, kernel col 1
+        *weight.at4_mut(1, 0, 2, 2) = 1.0; // filter 1, kernel col 2
+
+        let mut tr = Trace::disabled();
+        let res = simulate_layer(
+            &input, &weight, None, &cfg, spec, Mode::VectorSparse, false, &mut tr,
+        );
+        assert_eq!(res.stats.cycles, 10);
+        assert_eq!(res.stats.overhead_cycles, 4);
+        assert_eq!(res.stats.sync_stall_slots, 3);
+        // dense reference: 2 (c, strip) blocks × W·KW = 9 pairs + ctx.
+        assert_eq!(res.dense_cycles, 22);
+        assert_eq!(res.stats.issued_pairs, 9);
+        assert_eq!(res.stats.boundary_pairs, 2);
+
+        // Dense mode makes every filter's work equal — zero sync stall,
+        // and cycles match the closed-form dense count exactly.
+        let dense = simulate_layer(
+            &input, &weight, None, &cfg, spec, Mode::Dense, false, &mut tr,
+        );
+        assert_eq!(dense.stats.cycles, 22);
+        assert_eq!(dense.stats.sync_stall_slots, 0);
     }
 
     /// More arrays per group ⇒ more sync loss (the 92% vs 85% effect).

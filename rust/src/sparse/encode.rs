@@ -190,8 +190,9 @@ pub fn vector_pairs(va: &VectorActivations, vw: &VectorWeights) -> (u64, u64) {
 
 /// Full per-layer report at vector length `r`.
 pub fn layer_report(input: &Tensor, weight: &Tensor, spec: ConvSpec, r: usize) -> DensityReport {
-    let va = VectorActivations::from_tensor(input, r);
-    let vw = VectorWeights::from_tensor(weight);
+    // Density analysis never reads payloads — index-only encode.
+    let va = VectorActivations::index_only(input, r);
+    let vw = VectorWeights::index_only(weight);
     let macs_total = dense_macs(input, weight, spec);
     let macs_nonzero = fine_grained_work(input, weight, spec);
     let (pairs_total, pairs_nonzero) = vector_pairs(&va, &vw);

@@ -32,11 +32,33 @@ pub struct VectorActivations {
     nz_flat: Vec<u16>,
     /// `c * strips + 1` offsets into `nz_flat`.
     nz_offsets: Vec<u32>,
+    /// Packed vector payloads: `r` values per nonzero vector, in `nz_flat`
+    /// order, zero-padded for ragged last strips — the compressed data the
+    /// SRAM actually holds. Value `p` of vector `nz_flat[i]` sits at
+    /// `vals_flat[i * r + p]`, so the functional dataflow reads contiguous
+    /// slices instead of re-gathering through `Tensor::at3`. Empty for
+    /// [`Self::index_only`] encodes.
+    vals_flat: Vec<f32>,
+    /// Whether `vals_flat` was packed (guards [`Self::nz_vals`]).
+    has_vals: bool,
 }
 
 impl VectorActivations {
-    /// Encode a `[C,H,W]` tensor at vector length `r`.
+    /// Encode a `[C,H,W]` tensor at vector length `r`, packing the value
+    /// payloads next to the index lists (what the SRAM holds — feeds the
+    /// functional dataflow).
     pub fn from_tensor(t: &Tensor, r: usize) -> VectorActivations {
+        Self::encode(t, r, true)
+    }
+
+    /// Index-only encode: occupancy + index lists without the value
+    /// payloads. For timing, density and post-processing paths that never
+    /// read [`Self::nz_vals`] — skips the payload allocation and copy.
+    pub fn index_only(t: &Tensor, r: usize) -> VectorActivations {
+        Self::encode(t, r, false)
+    }
+
+    fn encode(t: &Tensor, r: usize, pack_vals: bool) -> VectorActivations {
         assert_eq!(t.ndim(), 3, "activations must be [C,H,W]");
         assert!(r > 0, "vector length must be positive");
         let (c, h, w) = (t.shape()[0], t.shape()[1], t.shape()[2]);
@@ -44,16 +66,27 @@ impl VectorActivations {
         let mut occ = Bitset::new(c * strips * w);
         let mut nz_flat = Vec::new();
         let mut nz_offsets = Vec::with_capacity(c * strips + 1);
+        let mut vals_flat = Vec::new();
         nz_offsets.push(0);
+        let data = t.data();
         for ci in 0..c {
+            // One contiguous channel plane: rows are `w` apart.
+            let chan = &data[ci * h * w..(ci + 1) * h * w];
             for s in 0..strips {
                 let row_lo = s * r;
                 let row_hi = ((s + 1) * r).min(h);
                 for col in 0..w {
-                    let nz = (row_lo..row_hi).any(|row| t.at3(ci, row, col) != 0.0);
+                    let nz = (row_lo..row_hi).any(|row| chan[row * w + col] != 0.0);
                     if nz {
                         occ.set((ci * strips + s) * w + col, true);
                         nz_flat.push(col as u16);
+                        if pack_vals {
+                            let start = vals_flat.len();
+                            vals_flat.resize(start + r, 0.0);
+                            for (p, row) in (row_lo..row_hi).enumerate() {
+                                vals_flat[start + p] = chan[row * w + col];
+                            }
+                        }
                     }
                 }
                 nz_offsets.push(nz_flat.len() as u32);
@@ -68,6 +101,8 @@ impl VectorActivations {
             occ,
             nz_flat,
             nz_offsets,
+            vals_flat,
+            has_vals: pack_vals,
         }
     }
 
@@ -99,6 +134,18 @@ impl VectorActivations {
         &self.nz_flat[self.nz_offsets[g] as usize..self.nz_offsets[g + 1] as usize]
     }
 
+    /// Packed payloads of the nonzero vectors of one `(c, strip)`:
+    /// `nz_cols(c, strip).len() * r` values; position `pos` of the index
+    /// list owns the sub-slice `[pos * r, (pos + 1) * r)` (zero-padded for
+    /// ragged last strips). Panics on an [`Self::index_only`] encode.
+    #[inline]
+    pub fn nz_vals(&self, c: usize, strip: usize) -> &[f32] {
+        assert!(self.has_vals, "nz_vals on an index-only encode");
+        let g = c * self.strips + strip;
+        &self.vals_flat
+            [self.nz_offsets[g] as usize * self.r..self.nz_offsets[g + 1] as usize * self.r]
+    }
+
     /// Elements resident in the input SRAM (nonzero vectors × R).
     pub fn sram_elems(&self) -> usize {
         self.nonzero_vectors() * self.r
@@ -126,16 +173,33 @@ pub struct VectorWeights {
     nz_flat: Vec<u8>,
     /// `k * c + 1` offsets into `nz_flat`.
     nz_offsets: Vec<u32>,
+    /// Packed kernel-column payloads: `kh` values (top to bottom) per
+    /// nonzero vector, in `nz_flat` order — see
+    /// [`VectorActivations::nz_vals`]. Empty for [`Self::index_only`].
+    vals_flat: Vec<f32>,
+    /// Whether `vals_flat` was packed (guards [`Self::nz_vals`]).
+    has_vals: bool,
 }
 
 impl VectorWeights {
-    /// Encode a `[K,C,KH,KW]` weight tensor.
+    /// Encode a `[K,C,KH,KW]` weight tensor, packing kernel-column value
+    /// payloads next to the index lists.
     pub fn from_tensor(t: &Tensor) -> VectorWeights {
+        Self::encode(t, true)
+    }
+
+    /// Index-only encode — see [`VectorActivations::index_only`].
+    pub fn index_only(t: &Tensor) -> VectorWeights {
+        Self::encode(t, false)
+    }
+
+    fn encode(t: &Tensor, pack_vals: bool) -> VectorWeights {
         assert_eq!(t.ndim(), 4, "weights must be [K,C,KH,KW]");
         let (k, c, kh, kw) = (t.shape()[0], t.shape()[1], t.shape()[2], t.shape()[3]);
         let mut occ = Bitset::new(k * c * kw);
         let mut nz_flat = Vec::new();
         let mut nz_offsets = Vec::with_capacity(k * c + 1);
+        let mut vals_flat = Vec::new();
         nz_offsets.push(0);
         // Linear pass over contiguous (k,c) blocks of kh*kw elements
         // (perf: strided at4 indexing here dominated encoding —
@@ -146,6 +210,11 @@ impl VectorWeights {
                 if nz {
                     occ.set(kc * kw + j, true);
                     nz_flat.push(j as u8);
+                    if pack_vals {
+                        for i in 0..kh {
+                            vals_flat.push(block[i * kw + j]);
+                        }
+                    }
                 }
             }
             nz_offsets.push(nz_flat.len() as u32);
@@ -158,6 +227,8 @@ impl VectorWeights {
             occ,
             nz_flat,
             nz_offsets,
+            vals_flat,
+            has_vals: pack_vals,
         }
     }
 
@@ -186,6 +257,17 @@ impl VectorWeights {
     pub fn nz_cols(&self, k: usize, c: usize) -> &[u8] {
         let g = k * self.c + c;
         &self.nz_flat[self.nz_offsets[g] as usize..self.nz_offsets[g + 1] as usize]
+    }
+
+    /// Packed payloads of the nonzero kernel columns of filter `(k, c)`:
+    /// position `pos` of [`Self::nz_cols`] owns `[pos * kh, (pos+1) * kh)`.
+    /// Panics on an [`Self::index_only`] encode.
+    #[inline]
+    pub fn nz_vals(&self, k: usize, c: usize) -> &[f32] {
+        assert!(self.has_vals, "nz_vals on an index-only encode");
+        let g = k * self.c + c;
+        &self.vals_flat
+            [self.nz_offsets[g] as usize * self.kh..self.nz_offsets[g + 1] as usize * self.kh]
     }
 
     /// Elements resident in the weight SRAM (nonzero vectors × KH).
@@ -259,6 +341,94 @@ mod tests {
         let w = Tensor::from_vec(&[2, 2, 3, 3], vec![1.0; 36]);
         let vw = VectorWeights::from_tensor(&w);
         assert_eq!(vw.density(), 1.0);
+    }
+
+    #[test]
+    fn activation_values_packed_in_index_order() {
+        // Values must sit next to their indices: vals[pos*r..] is exactly
+        // the column strip of nz_cols[pos], zero-padded when ragged.
+        let mut t = Tensor::zeros(&[1, 5, 3]);
+        *t.at3_mut(0, 0, 1) = 2.0; // strip 0 col 1: [2, 3]
+        *t.at3_mut(0, 1, 1) = 3.0;
+        *t.at3_mut(0, 1, 2) = 4.0; // strip 0 col 2: [0, 4]
+        *t.at3_mut(0, 4, 0) = 5.0; // strip 2 (ragged, 1 row) col 0: [5, 0]
+        let va = VectorActivations::from_tensor(&t, 2);
+        assert_eq!(va.nz_cols(0, 0), &[1, 2]);
+        assert_eq!(va.nz_vals(0, 0), &[2.0, 3.0, 0.0, 4.0]);
+        assert!(va.nz_vals(0, 1).is_empty());
+        assert_eq!(va.nz_cols(0, 2), &[0]);
+        assert_eq!(va.nz_vals(0, 2), &[5.0, 0.0]);
+    }
+
+    #[test]
+    fn weight_values_packed_in_index_order() {
+        let mut t = Tensor::zeros(&[1, 2, 3, 3]);
+        // (k=0, c=1): column 0 = [1, 0, 2], column 2 = [0, 3, 0].
+        *t.at4_mut(0, 1, 0, 0) = 1.0;
+        *t.at4_mut(0, 1, 2, 0) = 2.0;
+        *t.at4_mut(0, 1, 1, 2) = 3.0;
+        let vw = VectorWeights::from_tensor(&t);
+        assert_eq!(vw.nz_cols(0, 1), &[0, 2]);
+        assert_eq!(vw.nz_vals(0, 1), &[1.0, 0.0, 2.0, 0.0, 3.0, 0.0]);
+        assert!(vw.nz_vals(0, 0).is_empty());
+    }
+
+    #[test]
+    fn packed_values_roundtrip_randomized() {
+        use crate::util::rng::Pcg32;
+        let mut rng = Pcg32::seeded(321);
+        for _ in 0..10 {
+            let c = rng.range(1, 4);
+            let h = rng.range(2, 16);
+            let w = rng.range(1, 10);
+            let r = rng.range(1, 6);
+            let data: Vec<f32> = (0..c * h * w)
+                .map(|_| if rng.bernoulli(0.4) { rng.normal() } else { 0.0 })
+                .collect();
+            let t = Tensor::from_vec(&[c, h, w], data);
+            let va = VectorActivations::from_tensor(&t, r);
+            for ci in 0..c {
+                for s in 0..va.strips {
+                    let cols = va.nz_cols(ci, s);
+                    let vals = va.nz_vals(ci, s);
+                    assert_eq!(vals.len(), cols.len() * r);
+                    for (pos, &col) in cols.iter().enumerate() {
+                        for p in 0..r {
+                            let row = s * r + p;
+                            let want = if row < h { t.at3(ci, row, col as usize) } else { 0.0 };
+                            assert_eq!(vals[pos * r + p], want);
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn index_only_matches_indices_and_guards_vals() {
+        let mut t = Tensor::zeros(&[2, 6, 4]);
+        *t.at3_mut(0, 1, 2) = 1.0;
+        *t.at3_mut(1, 5, 0) = -3.0;
+        let full = VectorActivations::from_tensor(&t, 3);
+        let idx = VectorActivations::index_only(&t, 3);
+        assert_eq!(idx.nonzero_vectors(), full.nonzero_vectors());
+        for c in 0..2 {
+            for s in 0..full.strips {
+                assert_eq!(idx.nz_cols(c, s), full.nz_cols(c, s));
+            }
+        }
+        let w = Tensor::from_vec(&[1, 2, 3, 3], vec![1.0; 18]);
+        let vw_idx = VectorWeights::index_only(&w);
+        assert_eq!(vw_idx.nonzero_vectors(), 6);
+        assert_eq!(vw_idx.nz_cols(0, 1), &[0, 1, 2]);
+    }
+
+    #[test]
+    #[should_panic(expected = "index-only")]
+    fn index_only_activation_vals_panics() {
+        let t = Tensor::from_vec(&[1, 2, 2], vec![1.0; 4]);
+        let va = VectorActivations::index_only(&t, 2);
+        let _ = va.nz_vals(0, 0);
     }
 
     #[test]

@@ -2,6 +2,50 @@
 
 use super::Tensor;
 
+/// Panel sizes for the blocked matmul: `[TILE_M × TILE_K]` A panels
+/// against `[TILE_K × TILE_N]` B panels keep one output panel and one B
+/// panel (~64 KB each at f32) resident in cache while A streams.
+const TILE_M: usize = 64;
+const TILE_K: usize = 64;
+const TILE_N: usize = 256;
+
+/// `out += a · b` on row-major slices (`a` is `[M,K]`, `b` is `[K,N]`,
+/// `out` is `[M,N]`, pre-initialized with zeros or bias).
+///
+/// Blocked `TILE_M × TILE_K × TILE_N` with the zero-skip kept on the
+/// packed A panel (vector-pruned weight rows skip whole B-row streams).
+/// For every output element the K-dimension accumulates in ascending `p`
+/// order — exactly the order of the unblocked `ikj` loop — so results are
+/// bit-identical to the pre-blocking implementation (EXPERIMENTS.md §Perf).
+pub fn matmul_acc_into(out: &mut [f32], a: &[f32], b: &[f32], m: usize, k: usize, n: usize) {
+    assert_eq!(a.len(), m * k, "A is not [M,K]");
+    assert_eq!(b.len(), k * n, "B is not [K,N]");
+    assert_eq!(out.len(), m * n, "out is not [M,N]");
+    for jb in (0..n).step_by(TILE_N) {
+        let jhi = (jb + TILE_N).min(n);
+        for ib in (0..m).step_by(TILE_M) {
+            let ihi = (ib + TILE_M).min(m);
+            for pb in (0..k).step_by(TILE_K) {
+                let phi = (pb + TILE_K).min(k);
+                for i in ib..ihi {
+                    let arow = &a[i * k..(i + 1) * k];
+                    let (olo, ohi) = (i * n + jb, i * n + jhi);
+                    let orow = &mut out[olo..ohi];
+                    for (p, &av) in arow.iter().enumerate().take(phi).skip(pb) {
+                        if av == 0.0 {
+                            continue; // weight sparsity shortcut
+                        }
+                        let brow = &b[p * n + jb..p * n + jhi];
+                        for (o, &bv) in orow.iter_mut().zip(brow) {
+                            *o += av * bv;
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
 /// Matrix multiply: `[M,K] x [K,N] -> [M,N]` (used by the FC layers and the
 /// im2col-based fast conv in the performance path).
 pub fn matmul(a: &Tensor, b: &Tensor) -> Tensor {
@@ -11,22 +55,7 @@ pub fn matmul(a: &Tensor, b: &Tensor) -> Tensor {
     let (k2, n) = (b.shape()[0], b.shape()[1]);
     assert_eq!(k, k2, "inner dims mismatch {k} vs {k2}");
     let mut out = Tensor::zeros(&[m, n]);
-    let (ad, bd) = (a.data(), b.data());
-    let od = out.data_mut();
-    // ikj loop order: streams b rows, good cache behaviour without blocking.
-    for i in 0..m {
-        for p in 0..k {
-            let av = ad[i * k + p];
-            if av == 0.0 {
-                continue; // weight sparsity shortcut
-            }
-            let brow = &bd[p * n..(p + 1) * n];
-            let orow = &mut od[i * n..(i + 1) * n];
-            for (o, &bv) in orow.iter_mut().zip(brow) {
-                *o += av * bv;
-            }
-        }
-    }
+    matmul_acc_into(out.data_mut(), a.data(), b.data(), m, k, n);
     out
 }
 
@@ -133,22 +162,22 @@ pub fn conv2d_im2col_mt(
         for (ti, out_chunk) in out.chunks_mut(chunk * cols).enumerate() {
             let k_lo = ti * chunk;
             s.spawn(move || {
-                for (ki, orow) in out_chunk.chunks_mut(cols).enumerate() {
-                    let k = k_lo + ki;
-                    if let Some(b) = bias {
-                        orow.fill(b[k]);
-                    }
-                    for p in 0..kdim {
-                        let av = wd[k * kdim + p];
-                        if av == 0.0 {
-                            continue;
-                        }
-                        let prow = &pd[p * cols..(p + 1) * cols];
-                        for (o, &pv) in orow.iter_mut().zip(prow) {
-                            *o += av * pv;
-                        }
+                let rows = out_chunk.len() / cols;
+                if let Some(b) = bias {
+                    for (ki, orow) in out_chunk.chunks_mut(cols).enumerate() {
+                        orow.fill(b[k_lo + ki]);
                     }
                 }
+                // Same blocked panel kernel as `matmul`, on this worker's
+                // filter rows against the shared patch matrix.
+                matmul_acc_into(
+                    out_chunk,
+                    &wd[k_lo * kdim..(k_lo + rows) * kdim],
+                    pd,
+                    rows,
+                    kdim,
+                    cols,
+                );
             });
         }
     });
@@ -187,6 +216,35 @@ mod tests {
         let b = Tensor::from_vec(&[2, 2], vec![5.0, 6.0, 7.0, 8.0]);
         let c = matmul(&a, &b);
         assert_eq!(c.data(), &[19.0, 22.0, 43.0, 50.0]);
+    }
+
+    /// The blocked panel kernel must accumulate every output element in
+    /// ascending-K order — bit-identical to the unblocked ikj loop.
+    #[test]
+    fn blocked_matmul_bit_identical_to_naive() {
+        let mut rng = Pcg32::seeded(99);
+        for _ in 0..6 {
+            let m = rng.range(1, 150);
+            let k = rng.range(1, 150);
+            let n = rng.range(1, 320);
+            let a = random_tensor(&mut rng, &[m, k], 0.5);
+            let b = random_tensor(&mut rng, &[k, n], 0.9);
+            let (ad, bd) = (a.data(), b.data());
+            let mut want = vec![0.0f32; m * n];
+            for i in 0..m {
+                for p in 0..k {
+                    let av = ad[i * k + p];
+                    if av == 0.0 {
+                        continue;
+                    }
+                    for (o, &bv) in want[i * n..(i + 1) * n].iter_mut().zip(&bd[p * n..(p + 1) * n]) {
+                        *o += av * bv;
+                    }
+                }
+            }
+            let got = matmul(&a, &b);
+            assert_eq!(got.data(), &want[..], "m={m} k={k} n={n}");
+        }
     }
 
     #[test]

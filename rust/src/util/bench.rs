@@ -1,6 +1,9 @@
 //! Hand-rolled micro-benchmark harness (criterion is unavailable offline —
-//! DESIGN.md §9): warmup + median-of-N wall times with basic spread.
+//! DESIGN.md §9): warmup + median-of-N wall times with basic spread, plus
+//! machine-readable JSON emission so the perf trajectory is tracked across
+//! PRs (EXPERIMENTS.md §Perf).
 
+use crate::util::json::Json;
 use std::time::{Duration, Instant};
 
 /// Result of one benchmark case.
@@ -27,6 +30,38 @@ impl BenchResult {
         let per_sec = units / self.median.as_secs_f64();
         format!("{:40} {:>14.3e} {unit_name}/s", self.name, per_sec)
     }
+
+    /// Serialize as `{name, median_ns, min_ns, max_ns, iters}`.
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("name", self.name.as_str())
+            .set("median_ns", self.median.as_nanos() as u64)
+            .set("min_ns", self.min.as_nanos() as u64)
+            .set("max_ns", self.max.as_nanos() as u64)
+            .set("iters", self.iters);
+        o
+    }
+}
+
+/// Bundle bench results (plus free-form derived metrics) into one report
+/// document: `{"results": [...], "derived": {...}}`.
+pub fn results_json(results: &[BenchResult], derived: Json) -> Json {
+    let mut o = Json::obj();
+    o.set(
+        "results",
+        Json::Arr(results.iter().map(|r| r.to_json()).collect()),
+    )
+    .set("derived", derived);
+    o
+}
+
+/// Write a bench report (see [`results_json`]) as pretty JSON.
+pub fn write_results(
+    path: &str,
+    results: &[BenchResult],
+    derived: Json,
+) -> std::io::Result<()> {
+    std::fs::write(path, results_json(results, derived).pretty())
 }
 
 /// Run `f` `iters` times after `warmup` runs; report the median.
@@ -73,5 +108,23 @@ mod tests {
         assert!(r.min <= r.median && r.median <= r.max);
         assert!(r.line().contains("noop"));
         assert!(r.throughput(1e6, "ops").contains("ops/s"));
+    }
+
+    #[test]
+    fn json_report_shape_and_roundtrip() {
+        let r = bench("case", 0, 3, || {
+            black_box(1 + 1);
+        });
+        let mut derived = Json::obj();
+        derived.set("speedup", 4.2);
+        let doc = results_json(&[r], derived);
+        let arr = doc.get("results").unwrap().as_arr().unwrap();
+        assert_eq!(arr.len(), 1);
+        assert_eq!(arr[0].get("name").unwrap().as_str(), Some("case"));
+        assert_eq!(arr[0].get("iters").unwrap().as_usize(), Some(3));
+        assert!(arr[0].get("median_ns").unwrap().as_f64().is_some());
+        assert!(doc.get("derived").unwrap().get("speedup").is_some());
+        // Round-trips through the parser.
+        assert_eq!(Json::parse(&doc.pretty()).unwrap(), doc);
     }
 }

@@ -8,10 +8,12 @@
 pub mod bench;
 pub mod json;
 pub mod logging;
+pub mod parallel;
 pub mod rng;
 pub mod stats;
 
 pub use json::Json;
+pub use parallel::par_chunk_map;
 pub use rng::Pcg32;
 
 /// Integer ceiling division: smallest `q` with `q * d >= n`.

@@ -1,0 +1,74 @@
+//! Minimal scoped-thread fan-out helper (rayon is unavailable offline —
+//! DESIGN.md §9). One implementation of the "split an index range into
+//! contiguous chunks, evaluate each on a worker, merge in order" pattern
+//! shared by the simulation engine, the batch runner and the multi-config
+//! experiment driver.
+
+/// Evaluate `f` over `0..n` split into at most `workers` contiguous
+/// chunks, each on its own scoped thread, and return the per-chunk results
+/// in chunk order.
+///
+/// Deterministic by construction: the chunk boundaries depend only on
+/// `(n, workers)` and results are merged in index order, so any
+/// order-sensitive fold inside `f` sees the same elements as a sequential
+/// loop over its range. With `workers <= 1` (or a single chunk) `f` runs
+/// inline on the caller's thread — no spawn overhead on small inputs.
+pub fn par_chunk_map<T, F>(n: usize, workers: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(std::ops::Range<usize>) -> T + Sync,
+{
+    if n == 0 {
+        return Vec::new();
+    }
+    let workers = workers.clamp(1, n);
+    let chunk = n.div_ceil(workers);
+    let n_chunks = n.div_ceil(chunk);
+    if n_chunks == 1 {
+        return vec![f(0..n)];
+    }
+    let mut slots: Vec<Option<T>> = Vec::new();
+    slots.resize_with(n_chunks, || None);
+    std::thread::scope(|s| {
+        for (ci, slot) in slots.iter_mut().enumerate() {
+            let f = &f;
+            s.spawn(move || {
+                let lo = ci * chunk;
+                *slot = Some(f(lo..((ci + 1) * chunk).min(n)));
+            });
+        }
+    });
+    slots
+        .into_iter()
+        .map(|r| r.expect("every chunk evaluated by its worker"))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn covers_range_exactly_once_in_order() {
+        for n in [0usize, 1, 2, 7, 16, 33] {
+            for workers in [1usize, 2, 3, 8, 64] {
+                let chunks = par_chunk_map(n, workers, |r| r.collect::<Vec<usize>>());
+                let flat: Vec<usize> = chunks.into_iter().flatten().collect();
+                assert_eq!(flat, (0..n).collect::<Vec<usize>>(), "n={n} w={workers}");
+            }
+        }
+    }
+
+    #[test]
+    fn partial_sums_merge_to_sequential_total() {
+        let chunks = par_chunk_map(1000, 7, |r| r.map(|i| i as u64).sum::<u64>());
+        assert_eq!(chunks.into_iter().sum::<u64>(), 499_500);
+    }
+
+    #[test]
+    fn single_worker_runs_inline() {
+        // With one worker the closure must still see the full range.
+        let chunks = par_chunk_map(5, 1, |r| (r.start, r.end));
+        assert_eq!(chunks, vec![(0, 5)]);
+    }
+}

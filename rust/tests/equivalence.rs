@@ -1,0 +1,171 @@
+//! Property-style equivalence suite: every functional path in the repo —
+//! golden `conv2d`, `conv2d_im2col`, the blocked multithreaded
+//! `conv2d_im2col_mt`, and the simulator's parallel functional dataflow —
+//! must agree on random shapes and densities, and the cycle model must be
+//! pinned by a hand-computed snapshot so the perf refactor provably
+//! changes no semantics (ISSUE 1 satellite).
+
+use vscnn::sim::config::SimConfig;
+use vscnn::sim::scheduler::{simulate_layer, Mode};
+use vscnn::sim::trace::Trace;
+use vscnn::tensor::conv::{conv2d, ConvSpec};
+use vscnn::tensor::ops::{conv2d_im2col, conv2d_im2col_mt};
+use vscnn::tensor::Tensor;
+use vscnn::util::rng::Pcg32;
+
+fn random_sparse(rng: &mut Pcg32, shape: &[usize], density: f32) -> Tensor {
+    let n: usize = shape.iter().product();
+    Tensor::from_vec(
+        shape,
+        (0..n)
+            .map(|_| {
+                if density > 0.0 && rng.bernoulli(density) {
+                    rng.normal()
+                } else {
+                    0.0
+                }
+            })
+            .collect(),
+    )
+}
+
+/// ~20 random shapes × densities {0.0, 0.3, 1.0}: golden conv2d ==
+/// im2col == im2col_mt == simulator functional output (both dataflow
+/// modes, random PE geometry and simulator worker counts).
+#[test]
+fn conv_paths_equivalent_across_shapes_and_densities() {
+    let mut rng = Pcg32::seeded(0x2607);
+    let spec = ConvSpec { stride: 1, pad: 1 };
+    for case in 0..20 {
+        let c_in = rng.range(1, 5);
+        let k_out = rng.range(1, 7);
+        let h = rng.range(4, 14);
+        let w = rng.range(4, 14);
+        for density in [0.0f32, 0.3, 1.0] {
+            let input = random_sparse(&mut rng, &[c_in, h, w], density);
+            let weight = random_sparse(&mut rng, &[k_out, c_in, 3, 3], density);
+            let bias: Vec<f32> = (0..k_out).map(|_| rng.normal()).collect();
+
+            let golden = conv2d(&input, &weight, Some(&bias), spec);
+            let im2col = conv2d_im2col(&input, &weight, Some(&bias), spec);
+            assert!(
+                golden.allclose(&im2col, 1e-4, 1e-4),
+                "case {case} d={density}: im2col diff {}",
+                golden.max_abs_diff(&im2col)
+            );
+            let mt = conv2d_im2col_mt(&input, &weight, Some(&bias), spec, rng.range(1, 6));
+            assert!(
+                golden.allclose(&mt, 1e-4, 1e-4),
+                "case {case} d={density}: im2col_mt diff {}",
+                golden.max_abs_diff(&mt)
+            );
+
+            let mut cfg = SimConfig::paper_4_14_3();
+            cfg.pe.arrays = rng.range(1, 4);
+            cfg.pe.rows = rng.range(2, 8);
+            cfg.threads = rng.range(1, 6);
+            let mut tr = Trace::disabled();
+            for mode in [Mode::VectorSparse, Mode::Dense] {
+                let res = simulate_layer(
+                    &input,
+                    &weight,
+                    Some(&bias),
+                    &cfg,
+                    spec,
+                    mode,
+                    true,
+                    &mut tr,
+                );
+                let out = res.output.expect("functional mode");
+                assert!(
+                    golden.allclose(&out, 1e-3, 1e-3),
+                    "case {case} d={density} {mode:?}: sim diff {}",
+                    golden.max_abs_diff(&out)
+                );
+            }
+        }
+    }
+}
+
+/// Build the hand-computed snapshot layer: `[B=2, R=2, C=3]`, ctx = 2,
+/// one input channel `[1,4,3]`, two filters. Every expected number below
+/// is derived by hand in the comments (and mirrored in the scheduler's
+/// `sync_stall_pinned_for_two_filter_group` unit test).
+fn snapshot_layer() -> (Tensor, Tensor, SimConfig, ConvSpec) {
+    let mut cfg = SimConfig::paper_4_14_3();
+    cfg.pe.arrays = 2;
+    cfg.pe.rows = 2;
+    cfg.context_switch_cycles = 2;
+    let spec = ConvSpec { stride: 1, pad: 1 };
+    let mut input = Tensor::zeros(&[1, 4, 3]);
+    *input.at3_mut(0, 0, 0) = 1.5; // strip 0, col 0
+    *input.at3_mut(0, 1, 2) = -2.0; // strip 0, col 2
+    *input.at3_mut(0, 3, 1) = 0.5; // strip 1, col 1
+    let mut weight = Tensor::zeros(&[2, 1, 3, 3]);
+    *weight.at4_mut(0, 0, 0, 0) = 1.0; // filter 0: kernel cols {0, 1}
+    *weight.at4_mut(0, 0, 1, 1) = -1.0;
+    *weight.at4_mut(1, 0, 2, 2) = 2.0; // filter 1: kernel col {2}
+    (input, weight, cfg, spec)
+}
+
+/// Cycle-count snapshot: pins the dense and sparse cycle model for one
+/// small layer. If any scheduler change shifts these numbers, the timing
+/// semantics changed — not just the implementation.
+///
+/// Hand computation (one group of 2 filters, Σ_s|nzI| = 3, 2 live strips):
+///   work_0 = |nzW|·ΣnzI + ctx·strips = 2·3 + 2·2 = 10
+///   work_1 = 1·3 + 4 = 7
+///   sparse cycles = max = 10; sync stall = 10 − 7 = 3; overhead = 4
+///   dense cycles = blocks(2) · W·KW(9) + blocks · ctx = 18 + 4 = 22
+///   issued = ΣnzI · Σ|nzW| = 3·3 = 9; macs = 9 · R·C = 54
+///   skipped_input = zero-input-vector pairs = (3−2)·6 + (3−1)·6 = 18
+///   skipped_weight = nz inputs × zero weight cols = 3 · (6−3) = 9
+///   boundary: strip0 col2×WA(j0) X, col0×WC(j2) X → 2
+#[test]
+fn cycle_snapshot_pinned_small_layer() {
+    let (input, weight, cfg, spec) = snapshot_layer();
+    let mut tr = Trace::disabled();
+    let sparse = simulate_layer(
+        &input,
+        &weight,
+        None,
+        &cfg,
+        spec,
+        Mode::VectorSparse,
+        true,
+        &mut tr,
+    );
+    assert_eq!(sparse.stats.cycles, 10);
+    assert_eq!(sparse.dense_cycles, 22);
+    assert_eq!(sparse.stats.sync_stall_slots, 3);
+    assert_eq!(sparse.stats.overhead_cycles, 4);
+    assert_eq!(sparse.stats.issued_pairs, 9);
+    assert_eq!(sparse.stats.macs, 54);
+    assert_eq!(sparse.stats.skipped_input, 18);
+    assert_eq!(sparse.stats.skipped_weight, 9);
+    assert_eq!(sparse.stats.boundary_pairs, 2);
+
+    let dense = simulate_layer(
+        &input,
+        &weight,
+        None,
+        &cfg,
+        spec,
+        Mode::Dense,
+        true,
+        &mut tr,
+    );
+    assert_eq!(dense.stats.cycles, 22);
+    assert_eq!(dense.stats.cycles, dense.dense_cycles);
+    assert_eq!(dense.stats.sync_stall_slots, 0);
+
+    // And both functional outputs still reproduce the golden conv.
+    let golden = conv2d(&input, &weight, None, spec);
+    for out in [sparse.output.unwrap(), dense.output.unwrap()] {
+        assert!(
+            golden.allclose(&out, 1e-5, 1e-5),
+            "diff {}",
+            golden.max_abs_diff(&out)
+        );
+    }
+}
