@@ -20,7 +20,7 @@ fn main() -> anyhow::Result<()> {
         res,
         ..Default::default()
     };
-    let (coord, images, _) = workload::prepare(&ctx);
+    let (coord, images, _) = workload::prepare(&ctx)?;
 
     println!("VGG-16 @ {res} | vector-pruned 23.5% | one synthetic image\n");
     println!(

@@ -33,7 +33,7 @@ fn main() -> anyhow::Result<()> {
 
     println!("== VSCNN end-to-end: VGG-16 @ {res}x{res}, {images} image(s) ==");
     let t_setup = std::time::Instant::now();
-    let (coord, batch, weight_density) = workload::prepare(&ctx);
+    let (coord, batch, weight_density) = workload::prepare(&ctx)?;
     println!(
         "workload: 13 conv layers, {:.1} GMAC dense, weight density {:.3} (paper 0.235), setup {:?}",
         coord.net.total_conv_macs() as f64 / 1e9,

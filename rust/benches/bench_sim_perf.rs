@@ -11,11 +11,23 @@
 //! * `density/*` — the Fig 9–11 analysis path.
 //! * `conv-mt/*` — the blocked-matmul im2col forward.
 //!
+//! * `engine-compile` / `engine-execute` — the compile/execute split:
+//!   one-time network compile cost (prune + calibrate + kernel mapping +
+//!   CVF weight encoding) vs steady-state per-image execution against the
+//!   shared `PreparedNetwork`. The JSON `derived` block records
+//!   `compile_ms` and `steady_state_images_per_sec` so the weight-side
+//!   caching win stays measurable across PRs.
+//!
 //! Env `VSCNN_BENCH_SCALING=1` additionally sweeps the conv3_1 functional
 //! case over 1/2/4/…/N workers (the thread-scaling curve in
 //! EXPERIMENTS.md §Perf).
 
+use std::sync::Arc;
+use vscnn::coordinator::RunOptions;
+use vscnn::engine::{compile, Calibration, CompileOptions, Engine, PAPER_COLS};
 use vscnn::model::init::synthetic_image;
+use vscnn::model::vgg16::vgg16_at;
+use vscnn::pruning::sensitivity::paper_schedule;
 use vscnn::pruning::{prune_vectors, VectorGranularity};
 use vscnn::sim::config::SimConfig;
 use vscnn::sim::scheduler::{simulate_layer, Mode};
@@ -181,6 +193,41 @@ fn main() {
         });
         println!("{}", r.line());
         println!("{}\n", r.throughput(macs, "MAC"));
+        results.push(r);
+    }
+
+    // 5) compile/execute split: VGG-16 @ 64, paper pruning + calibration.
+    //    Compile once (all weight-side work), then measure steady-state
+    //    images/sec on repeated images against the shared prepared state.
+    {
+        let net = vgg16_at(64);
+        let params = vscnn::model::init::synthetic_params(&net, 7, 0.0);
+        let copts = CompileOptions {
+            cols: PAPER_COLS,
+            prune: Some(paper_schedule(&net)),
+            calibration: Some(Calibration {
+                image: synthetic_image(net.input_shape, 7 ^ 0xCA11),
+                density_scale: 1.0,
+                threads,
+            }),
+        };
+        let t0 = std::time::Instant::now();
+        let prepared = Arc::new(compile(&net, params, &copts));
+        let compile_ms = t0.elapsed().as_secs_f64() * 1e3;
+        println!("engine-compile/vgg16-64: {compile_ms:.1} ms (once per network)");
+        derived.set("compile_ms", compile_ms);
+
+        let engine = Engine::new(prepared);
+        let img = synthetic_image(net.input_shape, 7 ^ 0xDEAD);
+        let mut opts = RunOptions::new(SimConfig::paper_8_7_3());
+        opts.sim.threads = threads;
+        let r = bench("engine-execute/vgg16-64", 1, 5, || {
+            black_box(engine.run_image(&img, &opts).expect("engine run").totals.cycles);
+        });
+        println!("{}", r.line());
+        let ips = 1.0 / r.median.as_secs_f64().max(1e-12);
+        println!("engine steady state: {ips:.2} images/sec (weight side fully cached)\n");
+        derived.set("steady_state_images_per_sec", ips);
         results.push(r);
     }
 

@@ -3,12 +3,13 @@
 //! detection → pool → next layer) exactly as the paper's system does, and
 //! collecting the per-layer records every experiment consumes.
 //!
-//! The functional forward pass runs on one of three interchangeable
-//! backends (cross-checked in tests): the golden scalar conv, the
-//! multithreaded im2col conv, or the PJRT runtime executing the
-//! JAX-lowered artifacts.
+//! Since the compile/execute split, the heavy lifting lives in
+//! [`crate::engine`]: [`Coordinator`] is a compatibility shim that compiles
+//! once at construction and delegates every run to the engine. The
+//! functional forward pass runs on one of three interchangeable backends
+//! (cross-checked in tests): the golden scalar conv, the multithreaded
+//! im2col conv, or the PJRT runtime executing the JAX-lowered artifacts.
 
-pub mod job;
 pub mod pipeline;
 pub mod report;
 

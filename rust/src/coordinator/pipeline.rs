@@ -1,294 +1,85 @@
-//! The layer pipeline: conv (PE arrays) → post-processing (ReLU + zero
-//! detection) → pool → next layer, with real activation sparsity flowing
-//! through, as in the paper's Fig 3 system loop.
+//! Compatibility shim over the compile/execute engine.
+//!
+//! Historically this module *was* the pipeline: it re-encoded every conv
+//! layer's weights into CVF and recomputed the weight-side densities per
+//! image. That work now happens exactly once in [`crate::engine::compile`];
+//! [`Coordinator`] keeps the old construct-and-run API on top of the
+//! engine (same reports, bit-identical numbers) for callers that don't
+//! need to manage [`PreparedNetwork`]s themselves.
 
-use super::job::ConvJob;
-use super::report::LayerRecord;
-use crate::baselines::{ideal_speedups, SpeedupSeries};
+use crate::engine::{self, CompileOptions, Engine, PreparedNetwork, PAPER_COLS};
 use crate::model::init::Params;
-use crate::model::{LayerKind, Network};
-use crate::runtime::Runtime;
-use crate::sim::config::SimConfig;
-use crate::sim::postproc;
-use crate::sim::mapping::simulate_layer_any;
-use crate::sim::scheduler::Mode;
-use crate::sim::stats::SimStats;
-use crate::sim::trace::Trace;
-use crate::sparse::encode::layer_report;
-use crate::tensor::conv::maxpool2x2;
+use crate::model::Network;
 use crate::tensor::Tensor;
-use crate::util::json::Json;
-use anyhow::{Context, Result};
-use std::sync::Arc;
+use anyhow::Result;
+use std::sync::{Arc, Mutex};
 
-/// Which engine computes the functional forward pass.
-#[derive(Clone)]
-pub enum FunctionalBackend {
-    /// Scalar golden conv — slow, for tiny runs and tests.
-    Golden,
-    /// Multithreaded im2col conv (the default fast path).
-    Im2colMt(usize),
-    /// PJRT executing the AOT artifacts of the given kind
-    /// (`"ref"` = lax.conv, `"vscnn"` = Pallas column kernel).
-    Pjrt(Arc<Runtime>, String),
-}
-
-impl std::fmt::Debug for FunctionalBackend {
-    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        match self {
-            FunctionalBackend::Golden => write!(f, "Golden"),
-            FunctionalBackend::Im2colMt(t) => write!(f, "Im2colMt({t})"),
-            FunctionalBackend::Pjrt(_, k) => write!(f, "Pjrt({k})"),
-        }
-    }
-}
-
-/// Options for one network run.
-#[derive(Debug, Clone)]
-pub struct RunOptions {
-    pub sim: SimConfig,
-    pub backend: FunctionalBackend,
-    /// Also run the simulator's own functional dataflow per layer and
-    /// assert it matches the backend (expensive; tests/small runs only).
-    pub verify_dataflow: bool,
-}
-
-impl RunOptions {
-    pub fn new(sim: SimConfig) -> RunOptions {
-        RunOptions {
-            sim,
-            backend: FunctionalBackend::Im2colMt(
-                std::thread::available_parallelism().map_or(4, |n| n.get()),
-            ),
-            verify_dataflow: false,
-        }
-    }
-}
-
-/// Result of running one image through the network on one configuration.
-#[derive(Debug, Clone)]
-pub struct NetworkReport {
-    pub network: String,
-    pub config_label: String,
-    pub layers: Vec<LayerRecord>,
-    pub totals: SimStats,
-    pub total_dense_cycles: u64,
-}
-
-impl NetworkReport {
-    /// Whole-network speedup over the dense flow (the paper's headline
-    /// 1.871x / 1.93x metric).
-    pub fn overall_speedup(&self) -> f64 {
-        self.total_dense_cycles as f64 / self.totals.cycles.max(1) as f64
-    }
-
-    /// Whole-network ideal-machine speedups (cycle-weighted, same
-    /// aggregation as the per-layer ones).
-    pub fn overall_series(&self) -> SpeedupSeries {
-        let (mut pairs_t, mut pairs_nz) = (0u64, 0u64);
-        let (mut macs_t, mut macs_nz) = (0u64, 0u64);
-        for l in &self.layers {
-            pairs_t += l.density.pairs_total;
-            pairs_nz += l.density.pairs_nonzero;
-            macs_t += l.density.macs_total;
-            macs_nz += l.density.macs_nonzero;
-        }
-        SpeedupSeries {
-            ours: self.overall_speedup(),
-            ideal_vector: pairs_t as f64 / pairs_nz.max(1) as f64,
-            ideal_fine: macs_t as f64 / macs_nz.max(1) as f64,
-        }
-    }
-
-    pub fn to_json(&self) -> Json {
-        let series = self.overall_series();
-        let mut o = Json::obj();
-        o.set("network", self.network.as_str())
-            .set("config", self.config_label.as_str())
-            .set("overall_speedup", series.ours)
-            .set("overall_ideal_vector", series.ideal_vector)
-            .set("overall_ideal_fine", series.ideal_fine)
-            .set("vector_skip_efficiency", series.vector_skip_efficiency())
-            .set("fine_skip_efficiency", series.fine_skip_efficiency())
-            .set("total_cycles", self.totals.cycles)
-            .set("total_dense_cycles", self.total_dense_cycles)
-            .set(
-                "layers",
-                Json::Arr(self.layers.iter().map(|l| l.to_json()).collect()),
-            );
-        o
-    }
-}
+// Re-exported from the engine for source compatibility with pre-split
+// callers (`coordinator::{RunOptions, FunctionalBackend, NetworkReport}`).
+pub use crate::engine::{FunctionalBackend, NetworkReport, RunOptions};
 
 /// Drives a (pruned) network through the accelerator model.
+///
+/// Construction compiles the network once (CVF weight encoding, kernel
+/// mapping, weight-side stats) for the paper's 3-column array geometry;
+/// runs against other column counts recompile the mapping plans lazily and
+/// cache them. Use [`crate::engine`] directly to share one compile across
+/// coordinators or to control pruning/calibration at compile time.
 pub struct Coordinator {
     pub net: Network,
-    pub params: Params,
+    /// Compiled plans by PE-column count (index 0 = construction compile).
+    prepared: Mutex<Vec<Arc<PreparedNetwork>>>,
 }
 
 impl Coordinator {
     /// `params` must hold (possibly pruned) weights for every conv layer.
     pub fn new(net: Network, params: Params) -> Coordinator {
-        Coordinator { net, params }
+        let prepared = engine::compile(&net, params, &CompileOptions::new(PAPER_COLS));
+        Coordinator {
+            net,
+            prepared: Mutex::new(vec![Arc::new(prepared)]),
+        }
+    }
+
+    /// Wrap an already-compiled network (shares the compile, no re-work).
+    pub fn from_prepared(prepared: Arc<PreparedNetwork>) -> Coordinator {
+        Coordinator {
+            net: prepared.net.clone(),
+            prepared: Mutex::new(vec![prepared]),
+        }
+    }
+
+    fn engine_for(&self, cols: usize) -> Engine {
+        // Fast path: short lock, no work held under it.
+        let base = {
+            let cache = self.prepared.lock().unwrap();
+            if let Some(p) = cache.iter().find(|p| p.cols == cols) {
+                return Engine::new(p.clone());
+            }
+            cache[0].clone()
+        };
+        // Recompile outside the lock so concurrent runs at an
+        // already-compiled geometry never block on it; re-check before
+        // inserting in case another thread raced us to the same cols.
+        let p = Arc::new(base.recompiled(cols));
+        let mut cache = self.prepared.lock().unwrap();
+        if let Some(existing) = cache.iter().find(|p| p.cols == cols) {
+            return Engine::new(existing.clone());
+        }
+        cache.push(p.clone());
+        Engine::new(p)
     }
 
     /// Run one image through the network; returns per-layer records with
     /// the activation sparsity produced by this very input.
     pub fn run(&self, input: &Tensor, opts: &RunOptions) -> Result<NetworkReport> {
-        assert_eq!(
-            input.shape(),
-            &self.net.input_shape,
-            "input shape mismatch"
-        );
-        let mut act = input.clone();
-        let mut layers = Vec::new();
-        let mut totals = SimStats::default();
-        let mut total_dense = 0u64;
-
-        for layer in &self.net.layers {
-            match &layer.kind {
-                LayerKind::Conv { .. } => {
-                    let params = self
-                        .params
-                        .get(&layer.name)
-                        .with_context(|| format!("missing params for {}", layer.name))?;
-                    let job = ConvJob::new(&layer.name, &layer.kind, &act, params);
-
-                    // --- timing (vector-sparse flow) --------------------
-                    let mut trace = Trace::disabled();
-                    let res = simulate_layer_any(
-                        job.input,
-                        &params.weight,
-                        Some(&params.bias),
-                        &opts.sim,
-                        job.spec,
-                        Mode::VectorSparse,
-                        false,
-                        &mut trace,
-                    );
-
-                    // --- densities / ideal baselines --------------------
-                    let density =
-                        layer_report(job.input, &params.weight, job.spec, opts.sim.pe.rows);
-                    let (ideal_vector, ideal_fine) = ideal_speedups(&density);
-
-                    // --- functional forward ------------------------------
-                    let out = self.forward_conv(&job, opts)?;
-                    if opts.verify_dataflow {
-                        let mut tr = Trace::disabled();
-                        let fres = simulate_layer_any(
-                            job.input,
-                            &params.weight,
-                            Some(&params.bias),
-                            &opts.sim,
-                            job.spec,
-                            Mode::VectorSparse,
-                            true,
-                            &mut tr,
-                        );
-                        let sim_out = fres.output.expect("functional mode");
-                        anyhow::ensure!(
-                            sim_out.allclose(&out, 1e-2, 1e-2),
-                            "{}: dataflow output diverges from backend by {}",
-                            layer.name,
-                            sim_out.max_abs_diff(&out)
-                        );
-                    }
-
-                    // --- post-processing (ReLU + zero detection) --------
-                    let post = postproc::postprocess(out, opts.sim.pe.rows);
-                    let mut stats = res.stats;
-                    if let Some(va) = &post.compressed {
-                        stats.dram.output_write =
-                            postproc::output_dram_bytes(va, opts.sim.sram.bytes_per_elem, 2);
-                    }
-
-                    let record = LayerRecord {
-                        name: layer.name.clone(),
-                        density,
-                        sparse: stats,
-                        dense_cycles: res.dense_cycles,
-                        speedups: SpeedupSeries {
-                            ours: res.dense_cycles as f64 / stats.cycles.max(1) as f64,
-                            ideal_vector,
-                            ideal_fine,
-                        },
-                        output_density_elem: post.output.density(),
-                    };
-                    totals.merge(&record.sparse);
-                    total_dense += record.dense_cycles;
-                    layers.push(record);
-                    act = post.output;
-                }
-                LayerKind::Relu => {
-                    // ReLU already applied by the conv post-processing;
-                    // applying again is a no-op (idempotent).
-                }
-                LayerKind::MaxPool2 => {
-                    act = maxpool2x2(&act);
-                }
-                LayerKind::Linear { .. } => {
-                    // FC head is out of the accelerator evaluation scope.
-                }
-            }
-        }
-
-        Ok(NetworkReport {
-            network: self.net.name.clone(),
-            config_label: opts.sim.pe.label(),
-            layers,
-            totals,
-            total_dense_cycles: total_dense,
-        })
+        self.engine_for(opts.sim.pe.cols).run_image(input, opts)
     }
 
-    fn forward_conv(&self, job: &ConvJob<'_>, opts: &RunOptions) -> Result<Tensor> {
-        Ok(match &opts.backend {
-            FunctionalBackend::Golden => crate::tensor::conv::conv2d(
-                job.input,
-                &job.params.weight,
-                Some(&job.params.bias),
-                job.spec,
-            ),
-            FunctionalBackend::Im2colMt(threads) => crate::tensor::ops::conv2d_im2col_mt(
-                job.input,
-                &job.params.weight,
-                Some(&job.params.bias),
-                job.spec,
-                *threads,
-            ),
-            FunctionalBackend::Pjrt(rt, kind) => rt
-                .run_conv_by_shape(kind, job.input, &job.params.weight, &job.params.bias)
-                .with_context(|| format!("PJRT conv for {}", job.name))?,
-        })
-    }
-
-    /// Run a batch of images, returning one report each.
-    ///
-    /// Images are independent, so the batch fans out across scoped worker
-    /// threads. The run's thread budget is *split* across the batch
-    /// workers (each per-image run gets `budget / workers` simulator and
-    /// backend threads), so nested parallelism stays within the configured
-    /// budget instead of multiplying it — `--threads 1` really is
-    /// single-threaded. Each image's report is identical to a sequential
-    /// `run`; the returned order matches the input order, and an error
-    /// short-circuits the rest of its worker's chunk.
+    /// Run a batch of images, returning one report each (see
+    /// [`Engine::run_batch`] for the threading contract).
     pub fn run_batch(&self, inputs: &[Tensor], opts: &RunOptions) -> Result<Vec<NetworkReport>> {
-        let budget = opts.sim.effective_threads();
-        let workers = budget.min(inputs.len().max(1));
-        let mut inner = opts.clone();
-        inner.sim.threads = (budget / workers).max(1);
-        if let FunctionalBackend::Im2colMt(t) = &mut inner.backend {
-            *t = (*t / workers).max(1);
-        }
-        let inner = &inner;
-        let chunks: Result<Vec<Vec<NetworkReport>>> =
-            crate::util::par_chunk_map(inputs.len(), workers, |range| {
-                inputs[range].iter().map(|x| self.run(x, inner)).collect()
-            })
-            .into_iter()
-            .collect();
-        Ok(chunks?.into_iter().flatten().collect())
+        self.engine_for(opts.sim.pe.cols).run_batch(inputs, opts)
     }
 }
 
@@ -299,6 +90,7 @@ mod tests {
     use crate::model::vgg16::tiny_vgg;
     use crate::pruning;
     use crate::pruning::sensitivity::flat_schedule;
+    use crate::sim::config::SimConfig;
 
     fn setup(seed: u64) -> (Coordinator, Tensor) {
         let net = tiny_vgg(8);
@@ -397,5 +189,21 @@ mod tests {
             cycles.push(coord.run(&img, &opts).unwrap().totals.cycles);
         }
         assert!(cycles[0] <= cycles[1] && cycles[1] <= cycles[2], "{cycles:?}");
+    }
+
+    #[test]
+    fn shim_recompiles_for_non_paper_columns() {
+        // The compatibility shim transparently serves a 4-column run from
+        // the same coordinator (recompiled mapping plans, shared weights).
+        let (coord, img) = setup(5);
+        let mut opts = small_opts();
+        opts.verify_dataflow = false;
+        let c3 = coord.run(&img, &opts).unwrap();
+        opts.sim.pe.cols = 4;
+        let c4 = coord.run(&img, &opts).unwrap();
+        assert_eq!(c3.layers.len(), c4.layers.len());
+        // 3-tall kernels on a 4-column array waste the 4th column — never
+        // faster than the native geometry on the same data.
+        assert!(c4.totals.cycles >= c3.totals.cycles);
     }
 }

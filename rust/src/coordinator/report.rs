@@ -1,47 +1,10 @@
 //! Per-layer and per-network records — the data behind every figure.
+//!
+//! The record types live in [`crate::engine`] (the layer that produces
+//! them); this module re-exports them for source compatibility and keeps
+//! the rendering helpers.
 
-use crate::baselines::SpeedupSeries;
-use crate::sim::stats::SimStats;
-use crate::sparse::encode::DensityReport;
-use crate::util::json::Json;
-
-/// Everything measured for one conv layer in one run.
-#[derive(Debug, Clone)]
-pub struct LayerRecord {
-    pub name: String,
-    /// Input/weight/work densities at both granularities.
-    pub density: DensityReport,
-    /// Vector-sparse flow stats (the design under test).
-    pub sparse: SimStats,
-    /// Dense-flow cycle count (speedup denominator).
-    pub dense_cycles: u64,
-    /// Speedups: ours vs the ideal machines.
-    pub speedups: SpeedupSeries,
-    /// Post-ReLU output density (what the next layer sees).
-    pub output_density_elem: f64,
-}
-
-impl LayerRecord {
-    pub fn to_json(&self) -> Json {
-        let mut o = Json::obj();
-        o.set("name", self.name.as_str())
-            .set("input_density_elem", self.density.input_elem)
-            .set("weight_density_elem", self.density.weight_elem)
-            .set("work_density_elem", self.density.work_elem)
-            .set("input_density_vec", self.density.input_vec)
-            .set("weight_density_vec", self.density.weight_vec)
-            .set("work_density_vec", self.density.work_vec)
-            .set("cycles", self.sparse.cycles)
-            .set("dense_cycles", self.dense_cycles)
-            .set("speedup", self.speedups.ours)
-            .set("speedup_ideal_vector", self.speedups.ideal_vector)
-            .set("speedup_ideal_fine", self.speedups.ideal_fine)
-            .set("utilization", self.sparse.utilization())
-            .set("output_density_elem", self.output_density_elem)
-            .set("stats", self.sparse.to_json());
-        o
-    }
-}
+pub use crate::engine::LayerRecord;
 
 /// Render an ASCII table of layer records with selected columns.
 pub fn ascii_table(rows: &[(String, Vec<(String, f64)>)]) -> String {

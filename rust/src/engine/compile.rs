@@ -1,0 +1,283 @@
+//! The compile phase: turn `(network, params)` into a [`PreparedNetwork`]
+//! of input-independent per-layer artifacts (see the module doc of
+//! [`crate::engine`]).
+
+use crate::model::init::Params;
+use crate::model::{LayerKind, Network};
+use crate::pruning;
+use crate::sim::config::SimConfig;
+use crate::sim::mapping::{compile_conv, CompiledConv};
+use crate::sparse::encode::{weight_side_stats, WeightSideStats};
+use crate::sparse::VectorWeights;
+use crate::tensor::conv::ConvSpec;
+use crate::tensor::Tensor;
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+/// PE-column count of both paper configurations (`[4,14,3]` / `[8,7,3]`):
+/// the kernel height the array natively serves, and the default mapping
+/// target for compiled plans.
+pub const PAPER_COLS: usize = 3;
+
+/// Optional activation calibration performed at compile time (substitutes
+/// the missing training — see [`crate::model::calibrate`]).
+#[derive(Debug, Clone)]
+pub struct Calibration {
+    /// Held-out calibration image (keep it out of the measurement batch).
+    pub image: Tensor,
+    /// Multiplier on the per-layer post-ReLU density profile (1.0 = paper).
+    pub density_scale: f64,
+    /// Host threads for the calibration forward pass.
+    pub threads: usize,
+}
+
+/// What [`compile`] does to the raw parameters before encoding.
+#[derive(Debug, Clone)]
+pub struct CompileOptions {
+    /// PE-array column count the kernel mapping targets.
+    pub cols: usize,
+    /// Vector-prune the weights to this per-layer density schedule first.
+    pub prune: Option<BTreeMap<String, f64>>,
+    /// Then calibrate activations against a held-out image.
+    pub calibration: Option<Calibration>,
+}
+
+impl CompileOptions {
+    /// Encode-only compile (no pruning, no calibration) for `cols` columns.
+    pub fn new(cols: usize) -> CompileOptions {
+        CompileOptions {
+            cols,
+            prune: None,
+            calibration: None,
+        }
+    }
+}
+
+/// Everything input-independent about one conv layer, computed once.
+#[derive(Debug)]
+pub struct CompiledLayer {
+    pub name: String,
+    pub spec: ConvSpec,
+    /// The (pruned, calibrated) weight tensor `[K, C, KH, KW]`.
+    pub weight: Arc<Tensor>,
+    pub bias: Arc<Vec<f32>>,
+    /// Value-carrying CVF encode of `weight` — the compressed form the
+    /// weight SRAM holds.
+    pub vw: Arc<VectorWeights>,
+    /// Weight-side density statistics (the cached half of
+    /// [`crate::sparse::encode::layer_report_cached`]).
+    pub wstats: WeightSideStats,
+    /// The §II-B mapping plan: pre-encoded sub-kernels / polyphase phases.
+    pub conv: CompiledConv,
+    /// Activation shape `[C, H, W]` entering this layer.
+    pub in_shape: [usize; 3],
+}
+
+impl CompiledLayer {
+    /// Closed-form dense-flow cycle baseline under `cfg` (no simulation
+    /// needed; equals the scheduler's reported `dense_cycles`).
+    pub fn dense_cycles(&self, cfg: &SimConfig) -> u64 {
+        self.conv.dense_cycles(cfg)
+    }
+}
+
+/// A network compiled for execution: shared, immutable, cheap to hand to
+/// any number of executing workers.
+#[derive(Debug)]
+pub struct PreparedNetwork {
+    pub net: Network,
+    /// PE-column count the plans target.
+    pub cols: usize,
+    /// Compiled conv layers by layer name.
+    pub layers: BTreeMap<String, Arc<CompiledLayer>>,
+    /// Overall conv weight density after pruning/calibration.
+    pub weight_density: f64,
+}
+
+impl PreparedNetwork {
+    /// Rebuild the mapping plans for a different PE-column count, sharing
+    /// the weight tensors, CVF encodes and density stats (those are
+    /// cols-independent). Cheap relative to a full [`compile`].
+    pub fn recompiled(&self, cols: usize) -> PreparedNetwork {
+        let layers = self
+            .layers
+            .iter()
+            .map(|(name, cl)| {
+                let conv = compile_conv(
+                    cl.in_shape,
+                    cl.weight.clone(),
+                    Some(cl.vw.clone()),
+                    cols,
+                    cl.spec,
+                    true,
+                );
+                (
+                    name.clone(),
+                    Arc::new(CompiledLayer {
+                        name: cl.name.clone(),
+                        spec: cl.spec,
+                        weight: cl.weight.clone(),
+                        bias: cl.bias.clone(),
+                        vw: cl.vw.clone(),
+                        wstats: cl.wstats.clone(),
+                        conv,
+                        in_shape: cl.in_shape,
+                    }),
+                )
+            })
+            .collect();
+        PreparedNetwork {
+            net: self.net.clone(),
+            cols,
+            layers,
+            weight_density: self.weight_density,
+        }
+    }
+}
+
+/// Compile a network: optional vector pruning, optional activation
+/// calibration, then — per conv layer — kernel mapping and CVF weight
+/// encoding, all exactly once. `params` is consumed; its tensors move into
+/// the prepared layers without copying.
+///
+/// Panics on geometry mismatches (missing layer params, wrong weight or
+/// bias shapes), like the per-job checks the monolithic pipeline performed.
+pub fn compile(net: &Network, mut params: Params, opts: &CompileOptions) -> PreparedNetwork {
+    if let Some(schedule) = &opts.prune {
+        pruning::prune_network_vectors(&mut params, schedule);
+    }
+    if let Some(cal) = &opts.calibration {
+        crate::model::calibrate::calibrate_activations(
+            net,
+            &mut params,
+            &cal.image,
+            cal.density_scale,
+            cal.threads,
+        );
+    }
+
+    // Overall conv weight density of the artifact that will be executed
+    // (calibration rescales weights but never changes the zero pattern).
+    let mut kept = 0u64;
+    let mut total = 0u64;
+    for lp in params.values() {
+        if lp.weight.ndim() == 4 {
+            kept += lp.weight.count_nonzero() as u64;
+            total += lp.weight.len() as u64;
+        }
+    }
+    let weight_density = if total == 0 {
+        0.0
+    } else {
+        kept as f64 / total as f64
+    };
+
+    let shapes = net.activation_shapes();
+    let mut layers = BTreeMap::new();
+    for (li, layer) in net.layers.iter().enumerate() {
+        let LayerKind::Conv { c_in, c_out, k, spec } = &layer.kind else {
+            continue;
+        };
+        let lp = params
+            .remove(&layer.name)
+            .unwrap_or_else(|| panic!("missing params for {}", layer.name));
+        assert_eq!(
+            lp.weight.shape(),
+            &[*c_out, *c_in, *k, *k],
+            "{}: weight shape",
+            layer.name
+        );
+        assert_eq!(lp.bias.len(), *c_out, "{}: bias length", layer.name);
+        let in_shape = shapes[li];
+        assert_eq!(in_shape[0], *c_in, "{}: input channels", layer.name);
+
+        let weight = Arc::new(lp.weight);
+        let vw = Arc::new(VectorWeights::from_tensor(&weight));
+        let wstats = weight_side_stats(&weight, &vw);
+        let conv = compile_conv(
+            in_shape,
+            weight.clone(),
+            Some(vw.clone()),
+            opts.cols,
+            *spec,
+            true,
+        );
+        layers.insert(
+            layer.name.clone(),
+            Arc::new(CompiledLayer {
+                name: layer.name.clone(),
+                spec: *spec,
+                weight,
+                bias: Arc::new(lp.bias),
+                vw,
+                wstats,
+                conv,
+                in_shape,
+            }),
+        );
+    }
+    PreparedNetwork {
+        net: net.clone(),
+        cols: opts.cols,
+        layers,
+        weight_density,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::init::synthetic_params;
+    use crate::model::vgg16::tiny_vgg;
+    use crate::pruning::sensitivity::flat_schedule;
+
+    #[test]
+    fn compile_encodes_every_conv_layer_once() {
+        let net = tiny_vgg(8);
+        let params = synthetic_params(&net, 3, 0.0);
+        let mut opts = CompileOptions::new(PAPER_COLS);
+        opts.prune = Some(flat_schedule(&net, 0.5));
+        let prepared = compile(&net, params, &opts);
+        assert_eq!(prepared.layers.len(), 4);
+        assert_eq!(prepared.cols, 3);
+        assert!(prepared.weight_density > 0.2 && prepared.weight_density <= 0.51);
+        for name in net.conv_layer_names() {
+            let cl = &prepared.layers[name];
+            // Value-carrying encode: functional execution reads payloads.
+            assert!(cl.vw.nonzero_vectors() > 0);
+            assert_eq!(cl.wstats.k, cl.weight.shape()[0]);
+            // 3x3 at cols=3 compiles to the native direct plan: one
+            // sub-conv, dense baseline > 0.
+            assert_eq!(cl.conv.sub_dims.len(), 1);
+            assert!(cl.dense_cycles(&SimConfig::paper_8_7_3()) > 0);
+        }
+    }
+
+    #[test]
+    fn recompiled_shares_weights_and_changes_cols() {
+        let net = tiny_vgg(8);
+        let params = synthetic_params(&net, 4, 0.0);
+        let prepared = compile(&net, params, &CompileOptions::new(3));
+        let re = prepared.recompiled(4);
+        assert_eq!(re.cols, 4);
+        for name in net.conv_layer_names() {
+            // Weight storage and encodes are shared, not copied.
+            assert!(Arc::ptr_eq(
+                &prepared.layers[name].weight,
+                &re.layers[name].weight
+            ));
+            assert!(Arc::ptr_eq(&prepared.layers[name].vw, &re.layers[name].vw));
+            // 3-tall kernels on a 4-column array need the row mapping.
+            assert_eq!(re.layers[name].conv.cols, 4);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "missing params")]
+    fn compile_rejects_missing_params() {
+        let net = tiny_vgg(8);
+        let mut params = synthetic_params(&net, 5, 0.0);
+        params.remove("c2_1");
+        let _ = compile(&net, params, &CompileOptions::new(3));
+    }
+}

@@ -1,0 +1,419 @@
+//! The execute phase: run images against a [`PreparedNetwork`], with
+//! per-image work only on the activation side (see the module doc of
+//! [`crate::engine`]).
+
+use super::compile::{CompiledLayer, PreparedNetwork};
+use crate::baselines::{ideal_speedups, SpeedupSeries};
+use crate::model::LayerKind;
+use crate::runtime::Runtime;
+use crate::sim::config::SimConfig;
+use crate::sim::mapping::simulate_compiled;
+use crate::sim::postproc;
+use crate::sim::scheduler::Mode;
+use crate::sim::stats::SimStats;
+use crate::sim::trace::Trace;
+use crate::sparse::encode::{layer_report_cached, DensityReport};
+use crate::tensor::conv::maxpool2x2;
+use crate::tensor::Tensor;
+use crate::util::json::Json;
+use anyhow::{Context, Result};
+use std::sync::Arc;
+
+/// Everything measured for one conv layer in one run.
+#[derive(Debug, Clone)]
+pub struct LayerRecord {
+    pub name: String,
+    /// Input/weight/work densities at both granularities.
+    pub density: DensityReport,
+    /// Vector-sparse flow stats (the design under test).
+    pub sparse: SimStats,
+    /// Dense-flow cycle count (speedup denominator).
+    pub dense_cycles: u64,
+    /// Speedups: ours vs the ideal machines.
+    pub speedups: SpeedupSeries,
+    /// Post-ReLU output density (what the next layer sees).
+    pub output_density_elem: f64,
+}
+
+impl LayerRecord {
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("name", self.name.as_str())
+            .set("input_density_elem", self.density.input_elem)
+            .set("weight_density_elem", self.density.weight_elem)
+            .set("work_density_elem", self.density.work_elem)
+            .set("input_density_vec", self.density.input_vec)
+            .set("weight_density_vec", self.density.weight_vec)
+            .set("work_density_vec", self.density.work_vec)
+            .set("cycles", self.sparse.cycles)
+            .set("dense_cycles", self.dense_cycles)
+            .set("speedup", self.speedups.ours)
+            .set("speedup_ideal_vector", self.speedups.ideal_vector)
+            .set("speedup_ideal_fine", self.speedups.ideal_fine)
+            .set("utilization", self.sparse.utilization())
+            .set("output_density_elem", self.output_density_elem)
+            .set("stats", self.sparse.to_json());
+        o
+    }
+}
+
+/// Which engine computes the functional forward pass.
+#[derive(Clone)]
+pub enum FunctionalBackend {
+    /// Scalar golden conv — slow, for tiny runs and tests.
+    Golden,
+    /// Multithreaded im2col conv (the default fast path).
+    Im2colMt(usize),
+    /// PJRT executing the AOT artifacts of the given kind
+    /// (`"ref"` = lax.conv, `"vscnn"` = Pallas column kernel).
+    Pjrt(Arc<Runtime>, String),
+}
+
+impl std::fmt::Debug for FunctionalBackend {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            FunctionalBackend::Golden => write!(f, "Golden"),
+            FunctionalBackend::Im2colMt(t) => write!(f, "Im2colMt({t})"),
+            FunctionalBackend::Pjrt(_, k) => write!(f, "Pjrt({k})"),
+        }
+    }
+}
+
+/// Options for one network run.
+#[derive(Debug, Clone)]
+pub struct RunOptions {
+    pub sim: SimConfig,
+    pub backend: FunctionalBackend,
+    /// Also run the simulator's own functional dataflow per layer and
+    /// assert it matches the backend (expensive; tests/small runs only).
+    pub verify_dataflow: bool,
+}
+
+impl RunOptions {
+    pub fn new(sim: SimConfig) -> RunOptions {
+        RunOptions {
+            sim,
+            backend: FunctionalBackend::Im2colMt(
+                std::thread::available_parallelism().map_or(4, |n| n.get()),
+            ),
+            verify_dataflow: false,
+        }
+    }
+}
+
+/// Result of running one image through the network on one configuration.
+#[derive(Debug, Clone)]
+pub struct NetworkReport {
+    pub network: String,
+    pub config_label: String,
+    pub layers: Vec<LayerRecord>,
+    pub totals: SimStats,
+    pub total_dense_cycles: u64,
+}
+
+impl NetworkReport {
+    /// Whole-network speedup over the dense flow (the paper's headline
+    /// 1.871x / 1.93x metric).
+    pub fn overall_speedup(&self) -> f64 {
+        self.total_dense_cycles as f64 / self.totals.cycles.max(1) as f64
+    }
+
+    /// Whole-network ideal-machine speedups (cycle-weighted, same
+    /// aggregation as the per-layer ones).
+    pub fn overall_series(&self) -> SpeedupSeries {
+        let (mut pairs_t, mut pairs_nz) = (0u64, 0u64);
+        let (mut macs_t, mut macs_nz) = (0u64, 0u64);
+        for l in &self.layers {
+            pairs_t += l.density.pairs_total;
+            pairs_nz += l.density.pairs_nonzero;
+            macs_t += l.density.macs_total;
+            macs_nz += l.density.macs_nonzero;
+        }
+        SpeedupSeries {
+            ours: self.overall_speedup(),
+            ideal_vector: pairs_t as f64 / pairs_nz.max(1) as f64,
+            ideal_fine: macs_t as f64 / macs_nz.max(1) as f64,
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let series = self.overall_series();
+        let mut o = Json::obj();
+        o.set("network", self.network.as_str())
+            .set("config", self.config_label.as_str())
+            .set("overall_speedup", series.ours)
+            .set("overall_ideal_vector", series.ideal_vector)
+            .set("overall_ideal_fine", series.ideal_fine)
+            .set("vector_skip_efficiency", series.vector_skip_efficiency())
+            .set("fine_skip_efficiency", series.fine_skip_efficiency())
+            .set("total_cycles", self.totals.cycles)
+            .set("total_dense_cycles", self.total_dense_cycles)
+            .set(
+                "layers",
+                Json::Arr(self.layers.iter().map(|l| l.to_json()).collect()),
+            );
+        o
+    }
+}
+
+/// Executes images against a shared [`PreparedNetwork`]. Construction is
+/// free — all the heavy lifting happened in [`super::compile`]; clones of
+/// the engine (or of the prepared `Arc`) share every compiled artifact.
+#[derive(Debug, Clone)]
+pub struct Engine {
+    prepared: Arc<PreparedNetwork>,
+}
+
+impl Engine {
+    pub fn new(prepared: Arc<PreparedNetwork>) -> Engine {
+        Engine { prepared }
+    }
+
+    /// The shared compiled state this engine executes against.
+    pub fn prepared(&self) -> &Arc<PreparedNetwork> {
+        &self.prepared
+    }
+
+    /// Run one image through the network; returns per-layer records with
+    /// the activation sparsity produced by this very input. Identical
+    /// numbers to the pre-split monolithic pipeline.
+    pub fn run_image(&self, input: &Tensor, opts: &RunOptions) -> Result<NetworkReport> {
+        let net = &self.prepared.net;
+        assert_eq!(
+            opts.sim.pe.cols, self.prepared.cols,
+            "network compiled for {} PE columns, run asked for {} \
+             (use PreparedNetwork::recompiled)",
+            self.prepared.cols, opts.sim.pe.cols
+        );
+        assert_eq!(input.shape(), &net.input_shape, "input shape mismatch");
+        let mut act = input.clone();
+        let mut layers = Vec::new();
+        let mut totals = SimStats::default();
+        let mut total_dense = 0u64;
+
+        for layer in &net.layers {
+            match &layer.kind {
+                LayerKind::Conv { .. } => {
+                    let cl = self
+                        .prepared
+                        .layers
+                        .get(&layer.name)
+                        .with_context(|| format!("missing compiled layer {}", layer.name))?;
+
+                    // --- timing (vector-sparse flow) --------------------
+                    let mut trace = Trace::disabled();
+                    let res = simulate_compiled(
+                        &act,
+                        &cl.conv,
+                        Some(cl.bias.as_slice()),
+                        &opts.sim,
+                        Mode::VectorSparse,
+                        false,
+                        &mut trace,
+                    );
+
+                    // --- densities / ideal baselines (weight side cached)
+                    let density =
+                        layer_report_cached(&act, &cl.wstats, cl.spec, opts.sim.pe.rows);
+                    let (ideal_vector, ideal_fine) = ideal_speedups(&density);
+
+                    // --- functional forward ------------------------------
+                    let out = forward_conv(cl, &act, opts)?;
+                    if opts.verify_dataflow {
+                        let mut tr = Trace::disabled();
+                        let fres = simulate_compiled(
+                            &act,
+                            &cl.conv,
+                            Some(cl.bias.as_slice()),
+                            &opts.sim,
+                            Mode::VectorSparse,
+                            true,
+                            &mut tr,
+                        );
+                        let sim_out = fres.output.expect("functional mode");
+                        anyhow::ensure!(
+                            sim_out.allclose(&out, 1e-2, 1e-2),
+                            "{}: dataflow output diverges from backend by {}",
+                            layer.name,
+                            sim_out.max_abs_diff(&out)
+                        );
+                    }
+
+                    // --- post-processing (ReLU + zero detection) --------
+                    let post = postproc::postprocess(out, opts.sim.pe.rows);
+                    let mut stats = res.stats;
+                    if let Some(va) = &post.compressed {
+                        stats.dram.output_write =
+                            postproc::output_dram_bytes(va, opts.sim.sram.bytes_per_elem, 2);
+                    }
+
+                    let record = LayerRecord {
+                        name: layer.name.clone(),
+                        density,
+                        sparse: stats,
+                        dense_cycles: res.dense_cycles,
+                        speedups: SpeedupSeries {
+                            ours: res.dense_cycles as f64 / stats.cycles.max(1) as f64,
+                            ideal_vector,
+                            ideal_fine,
+                        },
+                        output_density_elem: post.output.density(),
+                    };
+                    totals.merge(&record.sparse);
+                    total_dense += record.dense_cycles;
+                    layers.push(record);
+                    act = post.output;
+                }
+                LayerKind::Relu => {
+                    // ReLU already applied by the conv post-processing;
+                    // applying again is a no-op (idempotent).
+                }
+                LayerKind::MaxPool2 => {
+                    act = maxpool2x2(&act);
+                }
+                LayerKind::Linear { .. } => {
+                    // FC head is out of the accelerator evaluation scope.
+                }
+            }
+        }
+
+        Ok(NetworkReport {
+            network: net.name.clone(),
+            config_label: opts.sim.pe.label(),
+            layers,
+            totals,
+            total_dense_cycles: total_dense,
+        })
+    }
+
+    /// Run a batch of images, returning one report each.
+    ///
+    /// Images are independent, so the batch fans out across scoped worker
+    /// threads sharing the prepared state. The run's thread budget is
+    /// *split* across the batch workers (each per-image run gets
+    /// `budget / workers` simulator and backend threads), so nested
+    /// parallelism stays within the configured budget instead of
+    /// multiplying it — `--threads 1` really is single-threaded. Each
+    /// image's report is identical to a sequential `run_image`; the
+    /// returned order matches the input order, and an error
+    /// short-circuits the rest of its worker's chunk.
+    pub fn run_batch(&self, inputs: &[Tensor], opts: &RunOptions) -> Result<Vec<NetworkReport>> {
+        let budget = opts.sim.effective_threads();
+        let workers = budget.min(inputs.len().max(1));
+        let mut inner = opts.clone();
+        inner.sim.threads = (budget / workers).max(1);
+        if let FunctionalBackend::Im2colMt(t) = &mut inner.backend {
+            *t = (*t / workers).max(1);
+        }
+        let inner = &inner;
+        let chunks: Result<Vec<Vec<NetworkReport>>> =
+            crate::util::par_chunk_map(inputs.len(), workers, |range| {
+                inputs[range]
+                    .iter()
+                    .map(|x| self.run_image(x, inner))
+                    .collect()
+            })
+            .into_iter()
+            .collect();
+        Ok(chunks?.into_iter().flatten().collect())
+    }
+}
+
+fn forward_conv(cl: &CompiledLayer, input: &Tensor, opts: &RunOptions) -> Result<Tensor> {
+    Ok(match &opts.backend {
+        FunctionalBackend::Golden => {
+            crate::tensor::conv::conv2d(input, &cl.weight, Some(cl.bias.as_slice()), cl.spec)
+        }
+        FunctionalBackend::Im2colMt(threads) => crate::tensor::ops::conv2d_im2col_mt(
+            input,
+            &cl.weight,
+            Some(cl.bias.as_slice()),
+            cl.spec,
+            *threads,
+        ),
+        FunctionalBackend::Pjrt(rt, kind) => rt
+            .run_conv_by_shape(kind, input, &cl.weight, cl.bias.as_slice())
+            .with_context(|| format!("PJRT conv for {}", cl.name))?,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::compile::{compile, CompileOptions};
+    use crate::model::init::{synthetic_image, synthetic_params};
+    use crate::model::vgg16::tiny_vgg;
+    use crate::pruning;
+    use crate::pruning::sensitivity::flat_schedule;
+
+    fn prepared(seed: u64) -> (Arc<PreparedNetwork>, Tensor) {
+        let net = tiny_vgg(8);
+        let mut params = synthetic_params(&net, seed, 0.0);
+        pruning::prune_network_vectors(&mut params, &flat_schedule(&net, 0.4));
+        let img = synthetic_image(net.input_shape, seed);
+        (Arc::new(compile(&net, params, &CompileOptions::new(3))), img)
+    }
+
+    fn small_opts() -> RunOptions {
+        let mut cfg = SimConfig::paper_4_14_3();
+        cfg.pe.arrays = 2;
+        cfg.pe.rows = 4;
+        RunOptions {
+            sim: cfg,
+            backend: FunctionalBackend::Golden,
+            verify_dataflow: true,
+        }
+    }
+
+    #[test]
+    fn engine_runs_and_verifies_dataflow() {
+        let (p, img) = prepared(21);
+        let engine = Engine::new(p);
+        let report = engine.run_image(&img, &small_opts()).unwrap();
+        assert_eq!(report.layers.len(), 4);
+        assert!(report.overall_speedup() >= 1.0);
+    }
+
+    #[test]
+    fn compiled_dense_baseline_matches_execution() {
+        // The closed-form dense cycles stored at compile time must equal
+        // what executing the plan reports, for both paper geometries.
+        let (p, img) = prepared(22);
+        for sim in [SimConfig::paper_4_14_3(), SimConfig::paper_8_7_3()] {
+            let mut opts = small_opts();
+            opts.sim = sim;
+            opts.verify_dataflow = false;
+            let report = Engine::new(p.clone()).run_image(&img, &opts).unwrap();
+            for l in &report.layers {
+                assert_eq!(
+                    p.layers[&l.name].dense_cycles(&sim),
+                    l.dense_cycles,
+                    "{} {}",
+                    l.name,
+                    sim.pe.label()
+                );
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "PE columns")]
+    fn engine_rejects_mismatched_cols() {
+        let (p, img) = prepared(23);
+        let mut opts = small_opts();
+        opts.sim.pe.cols = 4;
+        let _ = Engine::new(p).run_image(&img, &opts);
+    }
+
+    #[test]
+    fn recompiled_network_runs_on_other_geometry() {
+        let (p, img) = prepared(23);
+        let re = Arc::new(p.recompiled(4));
+        let mut opts = small_opts();
+        opts.sim.pe.cols = 4;
+        opts.verify_dataflow = false;
+        let report = Engine::new(re).run_image(&img, &opts).unwrap();
+        assert_eq!(report.layers.len(), 4);
+        assert!(report.overall_speedup() >= 1.0);
+    }
+}

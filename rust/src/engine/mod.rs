@@ -1,0 +1,39 @@
+//! Compile/execute engine — the vector-sparse pipeline split at its
+//! natural seam.
+//!
+//! The paper treats vector-sparse weights as a *static* artifact: pruned,
+//! CVF-encoded once, and streamed to the array — only activations change
+//! per image. This module makes the software follow the same contract:
+//!
+//! * **Compile** ([`compile`]): prune → calibrate → per-layer kernel
+//!   mapping ([`crate::sim::mapping::compile_conv`]: row-mapping /
+//!   polyphase) → CVF weight encoding, **once per network**. The result is
+//!   a [`PreparedNetwork`] of [`Arc<CompiledLayer>`]s holding everything
+//!   input-independent: the encoded [`crate::sparse::VectorWeights`], the
+//!   mapped sub-kernel plan, the weight-side density statistics
+//!   ([`crate::sparse::encode::WeightSideStats`]), and the closed-form
+//!   dense-cycle baseline.
+//! * **Execute** ([`Engine::run_image`] / [`Engine::run_batch`]): run
+//!   images against the shared prepared state. Per image, only the
+//!   activation-side work remains — the functional forward, the
+//!   activation CVF encodes, and the input-side density stats. Nothing on
+//!   the weight side is recomputed, regardless of image or config count.
+//!
+//! The plans are compiled for one PE-column count (`cols`, 3 in both paper
+//! configurations); everything else in a [`crate::sim::config::SimConfig`]
+//! — arrays, rows, SRAM, context-switch cost — varies freely at execute
+//! time, so the two paper configs share a single compile.
+//! [`PreparedNetwork::recompiled`] rebuilds the (cheap) mapping plans for a
+//! different column count while sharing the weight tensors and encodes.
+//!
+//! Reports are identical to what the pre-split monolithic coordinator
+//! produced — [`crate::coordinator::Coordinator`] survives as a
+//! compatibility shim over this engine.
+
+pub mod compile;
+pub mod execute;
+
+pub use compile::{
+    compile, Calibration, CompileOptions, CompiledLayer, PreparedNetwork, PAPER_COLS,
+};
+pub use execute::{Engine, FunctionalBackend, LayerRecord, NetworkReport, RunOptions};

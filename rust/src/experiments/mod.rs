@@ -34,7 +34,11 @@ pub struct ExpOutput {
 /// Experiment-wide knobs (see CLI `--help`).
 #[derive(Debug, Clone)]
 pub struct ExpContext {
-    /// VGG input resolution (224 = paper; smaller = faster smoke runs).
+    /// Workload network from the model zoo (`vgg16` = the paper's
+    /// evaluation; `alexnet`/`resnet10`/`mixed` exercise the §II-B
+    /// mapping paths).
+    pub net: String,
+    /// Input resolution (224 = paper; smaller = faster smoke runs).
     pub res: usize,
     /// PRNG seed for synthetic weights/images.
     pub seed: u64,
@@ -52,8 +56,11 @@ pub struct ExpContext {
 impl Default for ExpContext {
     fn default() -> Self {
         ExpContext {
+            net: "vgg16".to_string(),
             res: 224,
-            seed: 20190526, // ISCAS 2019 opening day
+            // Historical seed, kept unchanged so every report stays
+            // reproducible across PRs.
+            seed: 20190526,
             images: 1,
             bias_shift: 0.0,
             threads: std::thread::available_parallelism().map_or(4, |n| n.get()),

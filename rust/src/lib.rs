@@ -1,7 +1,7 @@
-//! # vscnn — VSCNN: CNN Accelerator With Vector Sparsity (ISCAS 2019)
+//! # vscnn — VSCNN: CNN Accelerator With Vector Sparsity (cs.AR 2022)
 //!
-//! A full-system reproduction of Chang & Chang, "VSCNN: Convolution Neural
-//! Network Accelerator with Vector Sparsity" (DOI 10.1109/ISCAS.2019.8702471)
+//! A full-system reproduction of "VSCNN: Convolution Neural Network
+//! Accelerator with Vector Sparsity" (cs.AR 2022, arXiv:2205.02271)
 //! as a three-layer Rust + JAX + Pallas stack:
 //!
 //! * **L3 (this crate)** — the paper's system: a cycle-level simulator of the
@@ -15,13 +15,16 @@
 //! * **L1 (python/compile/kernels/)** — the VSCNN column dataflow as a Pallas
 //!   kernel, validated against a pure-jnp oracle.
 //!
-//! Entry points: [`coordinator::Coordinator`] to simulate a network,
-//! [`experiments`] for the paper's tables/figures, the `vscnn` binary for the
-//! CLI, and `examples/` for runnable scenarios.
+//! Entry points: [`engine::compile`] + [`engine::Engine`] for the
+//! compile-once/execute-many path, [`coordinator::Coordinator`] for the
+//! one-shot construct-and-run shim, [`experiments`] for the paper's
+//! tables/figures, the `vscnn` binary for the CLI, and `examples/` for
+//! runnable scenarios.
 
 pub mod baselines;
 pub mod cli;
 pub mod coordinator;
+pub mod engine;
 pub mod experiments;
 pub mod model;
 pub mod pruning;

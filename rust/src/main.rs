@@ -2,9 +2,11 @@
 //! simulations, and diagnostics from the command line.
 //!
 //! ```text
-//! vscnn exp <id|all> [--res N] [--images N] [--seed S] [--pjrt DIR]
-//!                    [--out DIR] [--bias-shift X] [--threads N]
-//! vscnn simulate     [--config 4,14,3|8,7,3] [--res N] [--density D] ...
+//! vscnn exp <id|all> [--net vgg16|alexnet|resnet10|mixed] [--res N]
+//!                    [--images N] [--seed S] [--pjrt DIR] [--out DIR]
+//!                    [--bias-shift X] [--threads N]
+//! vscnn simulate     [--config 4,14,3|8,7,3] [--net NAME] [--res N]
+//!                    [--density D] ...
 //! vscnn runtime-info [--artifacts DIR]
 //! vscnn list
 //! ```
@@ -50,14 +52,14 @@ fn dispatch(cli: &Cli) -> Result<()> {
 
 fn print_help() {
     println!(
-        "vscnn {} — VSCNN accelerator reproduction (ISCAS 2019)\n\n\
+        "vscnn {} — VSCNN accelerator reproduction (cs.AR 2022, arXiv:2205.02271)\n\n\
          commands:\n\
          \x20 exp <id|all>    run a paper experiment ({})\n\
-         \x20 simulate        one-off simulation of a pruned VGG-16\n\
+         \x20 simulate        one-off simulation of a pruned zoo network\n\
          \x20 runtime-info    check the PJRT runtime + artifacts\n\
          \x20 list            list experiment ids\n\n\
-         common flags: --res N (default 224) --images N --seed S\n\
-         \x20 --bias-shift X --threads N --pjrt DIR --out DIR",
+         common flags: --net vgg16|alexnet|resnet10|mixed --res N (default 224)\n\
+         \x20 --images N --seed S --bias-shift X --threads N --pjrt DIR --out DIR",
         vscnn::VERSION,
         experiments::list().join(", ")
     );
@@ -66,6 +68,7 @@ fn print_help() {
 fn ctx_from(cli: &Cli) -> Result<ExpContext> {
     let default = ExpContext::default();
     Ok(ExpContext {
+        net: cli.get("net").unwrap_or(&default.net).to_string(),
         res: cli.get_num("res", default.res)?,
         seed: cli.get_num("seed", default.seed)?,
         images: cli.get_num("images", default.images)?,
@@ -77,7 +80,7 @@ fn ctx_from(cli: &Cli) -> Result<ExpContext> {
 
 fn cmd_exp(cli: &Cli) -> Result<()> {
     cli.check_known(&[
-        "res", "seed", "images", "bias-shift", "threads", "pjrt", "out",
+        "net", "res", "seed", "images", "bias-shift", "threads", "pjrt", "out",
     ])?;
     let Some(id) = cli.positional.first() else {
         bail!("usage: vscnn exp <id|all>; ids: {:?}", experiments::list());
@@ -104,7 +107,7 @@ fn cmd_exp(cli: &Cli) -> Result<()> {
 
 fn cmd_simulate(cli: &Cli) -> Result<()> {
     cli.check_known(&[
-        "res", "seed", "images", "bias-shift", "threads", "pjrt", "config", "density",
+        "net", "res", "seed", "images", "bias-shift", "threads", "pjrt", "config", "density",
     ])?;
     let ctx = ctx_from(cli)?;
     let cfg = match cli.get("config").unwrap_or("8,7,3") {
@@ -126,7 +129,7 @@ fn cmd_simulate(cli: &Cli) -> Result<()> {
 
     let (coord, images, achieved) = if let Some(d) = cli.get("density") {
         let density: f64 = d.parse().context("--density")?;
-        let net = vscnn::model::vgg16::vgg16_at(ctx.res);
+        let net = vscnn::model::zoo::by_name(&ctx.net, ctx.res)?;
         let mut params =
             vscnn::model::init::synthetic_params(&net, ctx.seed, ctx.bias_shift);
         let sched = vscnn::pruning::sensitivity::flat_schedule(&net, density);
@@ -139,7 +142,7 @@ fn cmd_simulate(cli: &Cli) -> Result<()> {
             achieved,
         )
     } else {
-        vscnn::experiments::workload::prepare(&ctx)
+        vscnn::experiments::workload::prepare(&ctx)?
     };
     log_info!("weight density after pruning: {achieved:.3}");
 

@@ -1,9 +1,117 @@
-//! Additional workloads beyond VGG-16, exercising the §II-B mapping layer:
-//! non-3×3 kernels (1×1, 5×5, 7×7) and stride-2 downsampling convs — the
-//! geometries the paper defers to "a suitable mapping method [13]".
+//! The model zoo: workloads beyond VGG-16, exercising the §II-B mapping
+//! layer end-to-end — non-3×3 kernels (1×1, 5×5, 7×7, 11×11) and strided
+//! convs (stride 2 and the AlexNet stem's stride 4) — the geometries the
+//! paper defers to "a suitable mapping method [13]". Every network here
+//! runs on the VSCNN array through `sim::mapping` and is selectable on the
+//! CLI via `--net`.
 
 use super::{Layer, LayerKind, Network};
 use crate::tensor::conv::ConvSpec;
+use anyhow::{bail, Result};
+
+/// Conv rows used by the zoo builders: `(name, c_in, c_out, k, stride, pad)`.
+type ConvRow = (&'static str, usize, usize, usize, usize, usize);
+
+/// Build a sequential conv/ReLU stack, inserting a 2×2 max-pool after the
+/// named layers only while the spatial plane stays poolable (≥ 2) — so the
+/// same topology scales from full resolution down to tiny smoke-test
+/// inputs.
+fn stack(name: String, res: usize, convs: &[ConvRow], pool_after: &[&str]) -> Network {
+    let mut layers = Vec::new();
+    let mut cur = [3usize, res, res];
+    for &(lname, c_in, c_out, k, stride, pad) in convs {
+        let kind = LayerKind::Conv {
+            c_in,
+            c_out,
+            k,
+            spec: ConvSpec { stride, pad },
+        };
+        cur = super::shapes::layer_output_shape(cur, &kind);
+        layers.push(Layer {
+            name: lname.to_string(),
+            kind,
+        });
+        layers.push(Layer {
+            name: format!("{lname}_relu"),
+            kind: LayerKind::Relu,
+        });
+        if pool_after.contains(&lname) && cur[1] >= 2 && cur[2] >= 2 {
+            layers.push(Layer {
+                name: format!("{lname}_pool"),
+                kind: LayerKind::MaxPool2,
+            });
+            cur = [cur[0], cur[1] / 2, cur[2] / 2];
+        }
+    }
+    Network {
+        name,
+        input_shape: [3, res, res],
+        layers,
+    }
+}
+
+/// AlexNet's five conv layers (Krizhevsky et al. 2012, conv trunk only):
+/// the 11×11 stride-4 stem, the 5×5 mid layer and three 3×3 layers —
+/// every §II-B mapping path (row split, polyphase stride 4, native) in one
+/// classic network. `res` must be a multiple of 32 (224 = the real input,
+/// modulo AlexNet's historical 227 off-by-one).
+pub fn alexnet(res: usize) -> Network {
+    assert!(res >= 32 && res % 32 == 0, "resolution must be a multiple of 32");
+    let convs: &[ConvRow] = &[
+        ("conv1", 3, 64, 11, 4, 2),
+        ("conv2", 64, 192, 5, 1, 2),
+        ("conv3", 192, 384, 3, 1, 1),
+        ("conv4", 384, 256, 3, 1, 1),
+        ("conv5", 256, 256, 3, 1, 1),
+    ];
+    stack(
+        format!("alexnet-{res}"),
+        res,
+        convs,
+        &["conv1", "conv2", "conv5"],
+    )
+}
+
+/// A compact ResNet-style trunk (sequential approximation, no skip adds —
+/// the accelerator evaluation cares about conv geometry, not accuracy):
+/// 7×7 stride-2 stem, three stages separated by 3×3 stride-2 downsampling
+/// convs, 1×1 projections. Exercises polyphase stride 2 *with padding* and
+/// the 1×1 row mapping at network scale. `res` must be a multiple of 16.
+pub fn resnet10(res: usize) -> Network {
+    assert!(res >= 16 && res % 16 == 0, "resolution must be a multiple of 16");
+    let convs: &[ConvRow] = &[
+        ("stem7x7", 3, 32, 7, 2, 3),
+        ("s1_conv1", 32, 32, 3, 1, 1),
+        ("s1_conv2", 32, 32, 3, 1, 1),
+        ("down1", 32, 64, 3, 2, 1),
+        ("s2_conv1", 64, 64, 3, 1, 1),
+        ("s2_proj", 64, 64, 1, 1, 0),
+        ("down2", 64, 128, 3, 2, 1),
+        ("s3_conv1", 128, 128, 3, 1, 1),
+        ("head1x1", 128, 128, 1, 1, 0),
+    ];
+    stack(format!("resnet10-{res}"), res, convs, &[])
+}
+
+/// Look up a zoo network by CLI name. Resolution constraints are surfaced
+/// as clean errors here (the builders themselves assert, as library API).
+pub fn by_name(name: &str, res: usize) -> Result<Network> {
+    let multiple = match name {
+        "vgg16" | "alexnet" => 32,
+        "resnet10" | "mixed" => 16,
+        other => bail!("unknown network '{other}' (known: vgg16, alexnet, resnet10, mixed)"),
+    };
+    if res < multiple || res % multiple != 0 {
+        bail!("--net {name} needs --res to be a multiple of {multiple} (got {res})");
+    }
+    Ok(match name {
+        "vgg16" => super::vgg16::vgg16_at(res),
+        "alexnet" => alexnet(res),
+        "resnet10" => resnet10(res),
+        "mixed" => mixed_kernel_net(res),
+        _ => unreachable!(),
+    })
+}
 
 /// A compact mixed-geometry backbone (AlexNet/ResNet-flavoured):
 /// 7×7 stem, stride-2 downsampling convs instead of pools, 1×1
@@ -58,6 +166,44 @@ mod tests {
         // 1x1 keeps spatial dims.
         assert_eq!(shapes[7][1], shapes[5][1]);
         assert_eq!(net.conv_layer_names().len(), 7);
+    }
+
+    #[test]
+    fn alexnet_shapes_match_the_classic_trunk() {
+        let net = alexnet(224);
+        assert_eq!(net.conv_layer_names().len(), 5);
+        let shapes = net.activation_shapes();
+        // conv1 11x11 s4 p2: (224+4-11)/4+1 = 55; pool -> 27; conv2 keeps
+        // 27; pool -> 13; conv3..5 keep 13; final pool -> 6.
+        assert_eq!(shapes[1], [64, 55, 55]);
+        assert_eq!(shapes[3], [64, 27, 27]);
+        assert_eq!(*shapes.last().unwrap(), [256, 6, 6]);
+
+        // At smoke resolution the plane shrinks to 1x1 and the final pool
+        // drops out; every layer still has a valid geometry.
+        let tiny = alexnet(32);
+        let tshapes = tiny.activation_shapes();
+        assert_eq!(tshapes[1], [64, 7, 7]);
+        assert_eq!(*tshapes.last().unwrap(), [256, 1, 1]);
+    }
+
+    #[test]
+    fn resnet10_shapes_downsample_by_stride() {
+        let net = resnet10(32);
+        assert_eq!(net.conv_layer_names().len(), 9);
+        let shapes = net.activation_shapes();
+        assert_eq!(shapes[1], [32, 16, 16]); // 7x7 s2 p3 stem halves
+        let last = *shapes.last().unwrap();
+        assert_eq!(last, [128, 4, 4]); // two more stride-2 halvings
+    }
+
+    #[test]
+    fn by_name_covers_the_zoo_and_rejects_unknown() {
+        assert_eq!(by_name("vgg16", 32).unwrap().conv_layer_names().len(), 13);
+        assert_eq!(by_name("alexnet", 32).unwrap().conv_layer_names().len(), 5);
+        assert_eq!(by_name("resnet10", 32).unwrap().conv_layer_names().len(), 9);
+        assert_eq!(by_name("mixed", 32).unwrap().conv_layer_names().len(), 7);
+        assert!(by_name("lenet", 32).is_err());
     }
 
     #[test]

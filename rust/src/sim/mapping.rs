@@ -13,21 +13,40 @@
 //!   weight vector with a shifted accumulation base (the index system adds
 //!   `row_offset` to the strip base), exactly like processing a taller
 //!   virtual array over multiple passes.
-//! * **stride 2** — polyphase decomposition: the input splits into 4
-//!   phase sub-planes (even/odd rows × even/odd cols) and the kernel into
-//!   4 sub-kernels; each phase pair runs as a unit-stride conv on the
-//!   array and the partial outputs accumulate in the shared psum buffer.
+//! * **stride S ≥ 2** — polyphase decomposition: the input splits into S²
+//!   phase sub-planes (row/col index mod S) and the kernel into S²
+//!   sub-kernels; each phase pair runs as a unit-stride conv on the array
+//!   (row-mapped again if its phase kernel height differs from C) and the
+//!   partial outputs accumulate in the shared psum buffer. Padded strided
+//!   convs materialize the zero border explicitly before phase extraction;
+//!   the all-zero border vectors are skipped by the index system in
+//!   vector-sparse mode (dense mode pays for them, as real hardware
+//!   streaming a padded plane would).
+//!
+//! ## Compile/execute split
+//!
+//! The decomposition above is *input-independent*: which sub-kernels exist,
+//! their CVF encodes, and their accumulation offsets depend only on the
+//! weight tensor, the conv spec and the array geometry. [`compile_conv`]
+//! performs it once, producing a [`CompiledConv`] plan with every
+//! sub-kernel pre-encoded; [`simulate_compiled`] executes an image against
+//! the plan (the only per-image work left on the weight side is zero).
+//! The legacy entry points ([`simulate_layer_mapped`],
+//! [`simulate_layer_strided`], [`simulate_layer_any`]) are thin wrappers
+//! that compile per call — same results, no caching.
 //!
 //! All mappings reuse [`simulate_layer`] unchanged — the point of the
 //! paper's design is that the accumulator flow is index-driven, so remaps
 //! only change *which* vectors are issued.
 
 use super::config::SimConfig;
-use super::scheduler::{simulate_layer, LayerResult, Mode};
+use super::scheduler::{simulate_layer, simulate_layer_encoded, LayerResult, Mode};
 use super::stats::SimStats;
 use super::trace::Trace;
-use crate::tensor::conv::ConvSpec;
+use crate::sparse::VectorWeights;
+use crate::tensor::conv::{out_dim, pad_input, ConvSpec};
 use crate::tensor::Tensor;
+use std::sync::Arc;
 
 /// One sub-kernel issued on the array: weights padded/split to the array
 /// height, plus the accumulation row offset its outputs carry.
@@ -72,9 +91,414 @@ pub fn map_kernel_rows(weight: &Tensor, cols: usize) -> Vec<MappedKernel> {
         .collect()
 }
 
+/// A sub-kernel ready to issue: raw tensor (dense/trace paths) plus its
+/// CVF encode (timing + sparse functional paths), both behind `Arc` so
+/// compiled plans share weight storage with their [`super::super::engine`]
+/// layer instead of copying it.
+#[derive(Debug, Clone)]
+pub struct EncodedKernel {
+    pub weight: Arc<Tensor>,
+    pub vw: Arc<VectorWeights>,
+    /// Added to the strip base when accumulating this sub-kernel's output.
+    pub row_offset: usize,
+}
+
+/// The input-independent decomposition of one conv layer onto the array.
+#[derive(Debug, Clone)]
+pub enum ConvPlan {
+    /// `KH == C`, unit stride: the native dataflow, no remap.
+    Direct { sub: EncodedKernel, spec: ConvSpec },
+    /// Unit stride, `KH != C`: row-mapped sub-kernels issued at an enlarged
+    /// padding `sub_spec.pad = spec.pad + dp` (see [`compile_conv`]).
+    RowMapped {
+        subs: Vec<EncodedKernel>,
+        spec: ConvSpec,
+        sub_spec: ConvSpec,
+        dp: usize,
+    },
+    /// Stride ≥ 2: polyphase phases, each itself a compiled unit-stride
+    /// conv on its phase sub-plane.
+    Polyphase { spec: ConvSpec, phases: Vec<PhasePlan> },
+}
+
+/// One polyphase phase: parity `(pr, pc)` and the compiled unit-stride conv
+/// of its phase kernel over the phase sub-plane.
+#[derive(Debug, Clone)]
+pub struct PhasePlan {
+    pub pr: usize,
+    pub pc: usize,
+    pub conv: CompiledConv,
+}
+
+/// A conv layer compiled for a `cols`-column PE array and a fixed input
+/// shape: the decomposition plan plus the closed-form dense-cycle inputs.
+#[derive(Debug, Clone)]
+pub struct CompiledConv {
+    pub plan: ConvPlan,
+    /// `(plane_h, plane_w, sub_kw)` of every sub-conv the plan issues —
+    /// enough to evaluate the dense baseline without simulating.
+    pub sub_dims: Vec<[usize; 3]>,
+    /// The `[C, H, W]` activation shape the plan was compiled for
+    /// (executing a different shape would silently invalidate
+    /// [`Self::dense_cycles`], so [`simulate_compiled`] asserts it).
+    pub in_shape: [usize; 3],
+    pub k_out: usize,
+    pub c_in: usize,
+    /// Original kernel height/width (pre-mapping).
+    pub kh: usize,
+    pub kw: usize,
+    /// PE columns the plan was compiled for.
+    pub cols: usize,
+}
+
+impl CompiledConv {
+    /// Closed-form dense-flow cycle count of this plan under `cfg` — the
+    /// speedup denominator, computable at compile time (it is
+    /// input-data-independent). Matches the `dense_cycles` the scheduler
+    /// reports when executing the plan.
+    pub fn dense_cycles(&self, cfg: &SimConfig) -> u64 {
+        let groups = self.k_out.div_ceil(cfg.pe.arrays) as u64;
+        self.sub_dims
+            .iter()
+            .map(|&[h, w, kw]| {
+                let strips = h.div_ceil(cfg.pe.rows) as u64;
+                let blocks = groups * self.c_in as u64 * strips;
+                blocks * (w as u64) * (kw as u64) + blocks * cfg.context_switch_cycles
+            })
+            .sum()
+    }
+}
+
+fn encode_arc(t: &Tensor, pack_vals: bool) -> Arc<VectorWeights> {
+    Arc::new(if pack_vals {
+        VectorWeights::from_tensor(t)
+    } else {
+        VectorWeights::index_only(t)
+    })
+}
+
+/// Compile a conv layer of any supported geometry into its array plan.
+///
+/// * `in_shape` — the `[C, H, W]` activation shape entering the layer
+///   (strided plans need it to size phase planes);
+/// * `vw` — optional pre-built CVF encode of `weight` (reused for the
+///   native `KH == cols` case; sub-kernels always get fresh encodes);
+/// * `pack_vals` — carry value payloads in the encodes (required for the
+///   parallel functional dataflow; index-only is enough for timing).
+pub fn compile_conv(
+    in_shape: [usize; 3],
+    weight: Arc<Tensor>,
+    vw: Option<Arc<VectorWeights>>,
+    cols: usize,
+    spec: ConvSpec,
+    pack_vals: bool,
+) -> CompiledConv {
+    assert_eq!(weight.ndim(), 4);
+    assert_eq!(in_shape[0], weight.shape()[1], "channel mismatch");
+    match spec.stride {
+        1 => compile_unit_stride(in_shape, weight, vw, cols, spec, pack_vals),
+        s if s >= 2 => compile_polyphase(in_shape, &weight, cols, spec, pack_vals),
+        _ => panic!("stride 0 is not a convolution"),
+    }
+}
+
+fn compile_unit_stride(
+    in_shape: [usize; 3],
+    weight: Arc<Tensor>,
+    vw: Option<Arc<VectorWeights>>,
+    cols: usize,
+    spec: ConvSpec,
+    pack_vals: bool,
+) -> CompiledConv {
+    assert_eq!(spec.stride, 1);
+    let [_, h, w] = in_shape;
+    let (k_out, c_in, kh, kw) = (
+        weight.shape()[0],
+        weight.shape()[1],
+        weight.shape()[2],
+        weight.shape()[3],
+    );
+    if kh == cols {
+        let sub_vw = vw.unwrap_or_else(|| encode_arc(&weight, pack_vals));
+        return CompiledConv {
+            plan: ConvPlan::Direct {
+                sub: EncodedKernel {
+                    weight,
+                    vw: sub_vw,
+                    row_offset: 0,
+                },
+                spec,
+            },
+            sub_dims: vec![[h, w, kw]],
+            in_shape,
+            k_out,
+            c_in,
+            kh,
+            kw,
+            cols,
+        };
+    }
+    compile_row_mapped(in_shape, &weight, cols, spec, pack_vals)
+}
+
+/// The `KH != cols`, unit-stride mapping. Borrows the weight tensor — the
+/// plan stores only the (small) sub-kernels, never the original, so
+/// per-call wrappers avoid copying it.
+fn compile_row_mapped(
+    in_shape: [usize; 3],
+    weight: &Tensor,
+    cols: usize,
+    spec: ConvSpec,
+    pack_vals: bool,
+) -> CompiledConv {
+    assert_eq!(spec.stride, 1);
+    let [_, h, w] = in_shape;
+    let (k_out, c_in, kh, kw) = (
+        weight.shape()[0],
+        weight.shape()[1],
+        weight.shape()[2],
+        weight.shape()[3],
+    );
+    // The sub-convs run at an enlarged padding p' = p + chunks·C − KH so
+    // every needed output row exists for every chunk; output indices then
+    // shift by dp = p' − p on both dims (a pure index shift the
+    // accumulator's index system applies for free in hardware).
+    let mapped = map_kernel_rows(weight, cols);
+    let chunks = mapped.len();
+    let dp = chunks * cols - kh;
+    let sub_spec = ConvSpec {
+        stride: 1,
+        pad: spec.pad + dp,
+    };
+    let subs: Vec<EncodedKernel> = mapped
+        .into_iter()
+        .map(|m| {
+            let vw = encode_arc(&m.weight, pack_vals);
+            EncodedKernel {
+                weight: Arc::new(m.weight),
+                vw,
+                row_offset: m.row_offset,
+            }
+        })
+        .collect();
+    CompiledConv {
+        sub_dims: vec![[h, w, kw]; chunks],
+        in_shape,
+        plan: ConvPlan::RowMapped {
+            subs,
+            spec,
+            sub_spec,
+            dp,
+        },
+        k_out,
+        c_in,
+        kh,
+        kw,
+        cols,
+    }
+}
+
+fn compile_polyphase(
+    in_shape: [usize; 3],
+    weight: &Tensor,
+    cols: usize,
+    spec: ConvSpec,
+    pack_vals: bool,
+) -> CompiledConv {
+    let s = spec.stride;
+    assert!(s >= 2);
+    let [c, h, w] = in_shape;
+    let (k_out, kh, kw) = (weight.shape()[0], weight.shape()[2], weight.shape()[3]);
+    // Padded strided convs run on the explicitly padded plane (pad 0 after
+    // materialization), so phase planes size from the padded dims.
+    let (hp_in, wp_in) = (h + 2 * spec.pad, w + 2 * spec.pad);
+    let mut phases = Vec::new();
+    let mut sub_dims = Vec::new();
+    let spec1 = ConvSpec { stride: 1, pad: 0 };
+    for pr in 0..s.min(kh) {
+        for pc in 0..s.min(kw) {
+            let wp = Arc::new(phase_kernel(weight, pr, pc, s));
+            let (khp, kwp) = (wp.shape()[2], wp.shape()[3]);
+            let (ph, pw) = ((hp_in - pr).div_ceil(s), (wp_in - pc).div_ceil(s));
+            if ph < khp || pw < kwp {
+                continue; // degenerate phase (tiny plane)
+            }
+            let inner = compile_unit_stride([c, ph, pw], wp, None, cols, spec1, pack_vals);
+            sub_dims.extend(inner.sub_dims.iter().copied());
+            phases.push(PhasePlan {
+                pr,
+                pc,
+                conv: inner,
+            });
+        }
+    }
+    CompiledConv {
+        plan: ConvPlan::Polyphase { spec, phases },
+        sub_dims,
+        in_shape,
+        k_out,
+        c_in: c,
+        kh,
+        kw,
+        cols,
+    }
+}
+
+/// `[K, H_out, W_out]` zeros, pre-filled with per-filter bias when present
+/// (the psum buffer's initial state), for functional runs only.
+fn bias_filled(
+    functional: bool,
+    k_out: usize,
+    h_out: usize,
+    w_out: usize,
+    bias: Option<&[f32]>,
+) -> Option<Tensor> {
+    functional.then(|| {
+        let mut t = Tensor::zeros(&[k_out, h_out, w_out]);
+        if let Some(b) = bias {
+            for (k, &bv) in b.iter().enumerate() {
+                for r in 0..h_out {
+                    for c in 0..w_out {
+                        *t.at3_mut(k, r, c) = bv;
+                    }
+                }
+            }
+        }
+        t
+    })
+}
+
+/// Execute one image against a compiled conv plan. Stats accumulate across
+/// sub-kernels/phases; the functional output is exact (matches the golden
+/// conv of the original geometry).
+pub fn simulate_compiled(
+    input: &Tensor,
+    cc: &CompiledConv,
+    bias: Option<&[f32]>,
+    cfg: &SimConfig,
+    mode: Mode,
+    functional: bool,
+    trace: &mut Trace,
+) -> LayerResult {
+    assert_eq!(
+        cc.cols, cfg.pe.cols,
+        "plan compiled for {} PE columns, simulating with {}",
+        cc.cols, cfg.pe.cols
+    );
+    // A different input shape would silently invalidate `sub_dims` /
+    // `dense_cycles` — make the misuse loud.
+    assert_eq!(
+        shape3(input),
+        cc.in_shape,
+        "plan compiled for input {:?}, executing {:?}",
+        cc.in_shape,
+        input.shape()
+    );
+    match &cc.plan {
+        ConvPlan::Direct { sub, spec } => simulate_layer_encoded(
+            input, &sub.weight, &sub.vw, bias, cfg, *spec, mode, functional, trace,
+        ),
+        ConvPlan::RowMapped {
+            subs,
+            spec,
+            sub_spec,
+            dp,
+        } => {
+            let dp = *dp;
+            let h_out = out_dim(input.shape()[1], cc.kh, *spec);
+            let w_out = out_dim(input.shape()[2], cc.kw, *spec);
+            let mut stats = SimStats::default();
+            let mut dense_cycles = 0u64;
+            let mut out = bias_filled(functional, cc.k_out, h_out, w_out, bias);
+            for sub in subs {
+                // Run the sub-kernel (height = cols) on the unmodified
+                // input; its taps sit `row_offset` rows lower in the
+                // virtual tall kernel, so its output row `m + row_offset +
+                // dp` contributes to full-conv row `m`.
+                let res = simulate_layer_encoded(
+                    input,
+                    &sub.weight,
+                    &sub.vw,
+                    None,
+                    cfg,
+                    *sub_spec,
+                    mode,
+                    functional,
+                    trace,
+                );
+                stats.merge(&res.stats);
+                dense_cycles += res.dense_cycles;
+                if let (Some(acc), Some(sub_out)) = (out.as_mut(), res.output) {
+                    let sub_h = sub_out.shape()[1];
+                    let sub_w = sub_out.shape()[2];
+                    for k in 0..cc.k_out {
+                        for r in 0..h_out {
+                            let rs = r + sub.row_offset + dp;
+                            if rs >= sub_h {
+                                continue;
+                            }
+                            for c in 0..w_out {
+                                let cs = c + dp;
+                                if cs >= sub_w {
+                                    continue;
+                                }
+                                *acc.at3_mut(k, r, c) += sub_out.at3(k, rs, cs);
+                            }
+                        }
+                    }
+                }
+            }
+            LayerResult {
+                stats,
+                dense_cycles,
+                output: out,
+            }
+        }
+        ConvPlan::Polyphase { spec, phases } => {
+            let s = spec.stride;
+            let h_out = out_dim(input.shape()[1], cc.kh, *spec);
+            let w_out = out_dim(input.shape()[2], cc.kw, *spec);
+            let padded;
+            let x: &Tensor = if spec.pad > 0 {
+                padded = pad_input(input, spec.pad);
+                &padded
+            } else {
+                input
+            };
+            let mut stats = SimStats::default();
+            let mut dense_cycles = 0u64;
+            let mut out = bias_filled(functional, cc.k_out, h_out, w_out, bias);
+            for ph in phases {
+                let xp = phase_plane(x, ph.pr, ph.pc, s);
+                let res = simulate_compiled(&xp, &ph.conv, None, cfg, mode, functional, trace);
+                stats.merge(&res.stats);
+                dense_cycles += res.dense_cycles;
+                if let (Some(acc), Some(sub)) = (out.as_mut(), res.output) {
+                    for k in 0..cc.k_out {
+                        for r in 0..h_out.min(sub.shape()[1]) {
+                            for c in 0..w_out.min(sub.shape()[2]) {
+                                *acc.at3_mut(k, r, c) += sub.at3(k, r, c);
+                            }
+                        }
+                    }
+                }
+            }
+            LayerResult {
+                stats,
+                dense_cycles,
+                output: out,
+            }
+        }
+    }
+}
+
+fn shape3(t: &Tensor) -> [usize; 3] {
+    [t.shape()[0], t.shape()[1], t.shape()[2]]
+}
+
 /// Simulate a conv layer of arbitrary kernel height at unit stride by
-/// mapping it onto the array (KH != PE columns allowed). Stats accumulate
-/// across sub-kernels; the functional output is exact.
+/// mapping it onto the array (KH != PE columns allowed). Compiles the plan
+/// per call — use [`compile_conv`] + [`simulate_compiled`] to amortize.
 #[allow(clippy::too_many_arguments)]
 pub fn simulate_layer_mapped(
     input: &Tensor,
@@ -86,97 +510,22 @@ pub fn simulate_layer_mapped(
     functional: bool,
     trace: &mut Trace,
 ) -> LayerResult {
-    assert_eq!(spec.stride, 1, "use simulate_layer_stride2 for stride 2");
-    let (kh, kw) = (weight.shape()[2], weight.shape()[3]);
-    let h = input.shape()[1];
-    let w = input.shape()[2];
-    let h_out = crate::tensor::conv::out_dim(h, kh, spec);
-    let w_out = crate::tensor::conv::out_dim(w, kw, spec);
-    let k_out = weight.shape()[0];
-
-    if kh == cfg.pe.cols {
+    assert_eq!(spec.stride, 1, "use simulate_layer_strided for stride >= 2");
+    if weight.shape()[2] == cfg.pe.cols {
         return simulate_layer(input, weight, bias, cfg, spec, mode, functional, trace);
     }
-
-    let mapped = map_kernel_rows(weight, cfg.pe.cols);
-    let mut stats = SimStats::default();
-    let mut dense_cycles = 0u64;
-    let mut out = functional.then(|| {
-        let mut t = Tensor::zeros(&[k_out, h_out, w_out]);
-        if let Some(b) = bias {
-            for (k, &bv) in b.iter().enumerate() {
-                for r in 0..h_out {
-                    for c in 0..w_out {
-                        *t.at3_mut(k, r, c) = bv;
-                    }
-                }
-            }
-        }
-        t
-    });
-
-    let _ = h;
-    // The sub-convs run at an enlarged padding p' = p + chunks·C − KH so
-    // every needed output row exists for every chunk; output indices then
-    // shift by dp = p' − p on both dims (a pure index shift the
-    // accumulator's index system applies for free in hardware).
-    let chunks = mapped.len();
-    let dp = chunks * cfg.pe.cols - kh;
-    let sub_spec = ConvSpec {
-        stride: 1,
-        pad: spec.pad + dp,
-    };
-    for sub in &mapped {
-        // Run the sub-kernel (height = cols) on the unmodified input; its
-        // taps sit `row_offset` rows lower in the virtual tall kernel, so
-        // its output row `m + row_offset + dp` contributes to full-conv
-        // row `m` (O[m] += O_sub[m + t·C + dp]).
-        let res = simulate_layer(
-            input,
-            &sub.weight,
-            None,
-            cfg,
-            sub_spec,
-            mode,
-            functional,
-            trace,
-        );
-        stats.merge(&res.stats);
-        dense_cycles += res.dense_cycles;
-        if let (Some(acc), Some(sub_out)) = (out.as_mut(), res.output) {
-            let sub_h = sub_out.shape()[1];
-            let sub_w = sub_out.shape()[2];
-            for k in 0..k_out {
-                for r in 0..h_out {
-                    let rs = r + sub.row_offset + dp;
-                    if rs >= sub_h {
-                        continue;
-                    }
-                    for c in 0..w_out {
-                        let cs = c + dp;
-                        if cs >= sub_w {
-                            continue;
-                        }
-                        *acc.at3_mut(k, r, c) += sub_out.at3(k, rs, cs);
-                    }
-                }
-            }
-        }
-    }
-    LayerResult {
-        stats,
-        dense_cycles,
-        output: out,
-    }
+    let pack = functional && !trace.enabled();
+    // The row-mapped plan stores only the sub-kernels, so the original
+    // weight tensor is borrowed, never copied.
+    let cc = compile_row_mapped(shape3(input), weight, cfg.pe.cols, spec, pack);
+    simulate_compiled(input, &cc, bias, cfg, mode, functional, trace)
 }
 
-/// Simulate a stride-2 conv layer via polyphase decomposition: 4 phase
-/// sub-planes × matching sub-kernels run as unit-stride convs on the
-/// array (each routed through [`simulate_layer_mapped`], since sub-kernel
-/// heights are 1 or 2); partial outputs accumulate in the shared psum
-/// buffer. Cycle stats sum across phases.
+/// Simulate a strided (S ≥ 2) conv layer via polyphase decomposition,
+/// compiling the plan per call. Padded strided convs are handled by
+/// materializing the zero border (see the module doc).
 #[allow(clippy::too_many_arguments)]
-pub fn simulate_layer_stride2(
+pub fn simulate_layer_strided(
     input: &Tensor,
     weight: &Tensor,
     bias: Option<&[f32]>,
@@ -186,66 +535,16 @@ pub fn simulate_layer_stride2(
     functional: bool,
     trace: &mut Trace,
 ) -> LayerResult {
-    assert_eq!(spec.stride, 2, "this mapper is for stride 2");
-    assert_eq!(
-        spec.pad, 0,
-        "stride-2 polyphase mapping currently supports pad 0 \
-         (pad the input tensor explicitly for padded strided convs)"
-    );
-    let (k_out, kh, kw) = (weight.shape()[0], weight.shape()[2], weight.shape()[3]);
-    let h_out = crate::tensor::conv::out_dim(input.shape()[1], kh, spec);
-    let w_out = crate::tensor::conv::out_dim(input.shape()[2], kw, spec);
-
-    let mut stats = SimStats::default();
-    let mut dense_cycles = 0u64;
-    let mut out = functional.then(|| {
-        let mut t = Tensor::zeros(&[k_out, h_out, w_out]);
-        if let Some(b) = bias {
-            for (k, &bv) in b.iter().enumerate() {
-                for r in 0..h_out {
-                    for c in 0..w_out {
-                        *t.at3_mut(k, r, c) = bv;
-                    }
-                }
-            }
-        }
-        t
-    });
-
-    let spec1 = ConvSpec { stride: 1, pad: 0 };
-    for pr in 0..2usize.min(kh) {
-        for pc in 0..2usize.min(kw) {
-            let xp = phase_plane(input, pr, pc);
-            let wp = phase_kernel(weight, pr, pc);
-            if xp.shape()[1] < wp.shape()[2] || xp.shape()[2] < wp.shape()[3] {
-                continue; // degenerate phase (tiny plane)
-            }
-            let res = simulate_layer_mapped(
-                &xp, &wp, None, cfg, spec1, mode, functional, trace,
-            );
-            stats.merge(&res.stats);
-            dense_cycles += res.dense_cycles;
-            if let (Some(acc), Some(sub)) = (out.as_mut(), res.output) {
-                for k in 0..k_out {
-                    for r in 0..h_out.min(sub.shape()[1]) {
-                        for c in 0..w_out.min(sub.shape()[2]) {
-                            *acc.at3_mut(k, r, c) += sub.at3(k, r, c);
-                        }
-                    }
-                }
-            }
-        }
-    }
-    LayerResult {
-        stats,
-        dense_cycles,
-        output: out,
-    }
+    assert!(spec.stride >= 2, "this mapper is for stride >= 2");
+    let pack = functional && !trace.enabled();
+    // Polyphase plans store only the phase kernels — borrow, don't copy.
+    let cc = compile_polyphase(shape3(input), weight, cfg.pe.cols, spec, pack);
+    simulate_compiled(input, &cc, bias, cfg, mode, functional, trace)
 }
 
 /// Route a conv of any supported geometry to the right dataflow:
-/// native 3-column unit-stride, row-mapped (1×1/5×5/7×7), or polyphase
-/// stride-2. This is what the coordinator calls.
+/// native 3-column unit-stride, row-mapped (1×1/5×5/7×7/11×11), or
+/// polyphase strided. This is what the per-call (non-compiled) paths use.
 #[allow(clippy::too_many_arguments)]
 pub fn simulate_layer_any(
     input: &Tensor,
@@ -258,23 +557,23 @@ pub fn simulate_layer_any(
     trace: &mut Trace,
 ) -> LayerResult {
     match spec.stride {
+        0 => panic!("stride 0 is not a convolution"),
         1 => simulate_layer_mapped(input, weight, bias, cfg, spec, mode, functional, trace),
-        2 => simulate_layer_stride2(input, weight, bias, cfg, spec, mode, functional, trace),
-        s => panic!("stride {s} unsupported (paper §II-B mappings cover 1 and 2)"),
+        _ => simulate_layer_strided(input, weight, bias, cfg, spec, mode, functional, trace),
     }
 }
 
 /// Polyphase phase extraction: sub-plane of `input` at row/col parity
-/// `(pr, pc)` for stride 2.
-pub fn phase_plane(input: &Tensor, pr: usize, pc: usize) -> Tensor {
+/// `(pr, pc)` for stride `s`.
+pub fn phase_plane(input: &Tensor, pr: usize, pc: usize, s: usize) -> Tensor {
     let (c, h, w) = (input.shape()[0], input.shape()[1], input.shape()[2]);
-    let hp = (h - pr).div_ceil(2);
-    let wp = (w - pc).div_ceil(2);
+    let hp = (h - pr).div_ceil(s);
+    let wp = (w - pc).div_ceil(s);
     let mut out = Tensor::zeros(&[c, hp, wp]);
     for ci in 0..c {
         for r in 0..hp {
             for col in 0..wp {
-                *out.at3_mut(ci, r, col) = input.at3(ci, 2 * r + pr, 2 * col + pc);
+                *out.at3_mut(ci, r, col) = input.at3(ci, s * r + pr, s * col + pc);
             }
         }
     }
@@ -282,23 +581,23 @@ pub fn phase_plane(input: &Tensor, pr: usize, pc: usize) -> Tensor {
 }
 
 /// Polyphase sub-kernel at parity `(pr, pc)`: taps `weight[.., i, j]` with
-/// `i ≡ pr (mod 2)`, `j ≡ pc (mod 2)`.
-pub fn phase_kernel(weight: &Tensor, pr: usize, pc: usize) -> Tensor {
+/// `i ≡ pr (mod s)`, `j ≡ pc (mod s)`.
+pub fn phase_kernel(weight: &Tensor, pr: usize, pc: usize, s: usize) -> Tensor {
     let (k, c, kh, kw) = (
         weight.shape()[0],
         weight.shape()[1],
         weight.shape()[2],
         weight.shape()[3],
     );
-    let khp = (kh - pr).div_ceil(2);
-    let kwp = (kw - pc).div_ceil(2);
+    let khp = (kh - pr).div_ceil(s);
+    let kwp = (kw - pc).div_ceil(s);
     let mut out = Tensor::zeros(&[k, c, khp.max(1), kwp.max(1)]);
     for ki in 0..k {
         for ci in 0..c {
             for i in 0..khp {
                 for j in 0..kwp {
-                    if 2 * i + pr < kh && 2 * j + pc < kw {
-                        *out.at4_mut(ki, ci, i, j) = weight.at4(ki, ci, 2 * i + pr, 2 * j + pc);
+                    if s * i + pr < kh && s * j + pc < kw {
+                        *out.at4_mut(ki, ci, i, j) = weight.at4(ki, ci, s * i + pr, s * j + pc);
                     }
                 }
             }
@@ -438,8 +737,8 @@ mod tests {
             let mut acc = Tensor::zeros(golden.shape());
             for pr in 0..2 {
                 for pc in 0..2 {
-                    let xp = phase_plane(&input, pr, pc);
-                    let wp = phase_kernel(&weight, pr, pc);
+                    let xp = phase_plane(&input, pr, pc, 2);
+                    let wp = phase_kernel(&weight, pr, pc, 2);
                     let spec1 = ConvSpec { stride: 1, pad: 0 };
                     if xp.shape()[1] < wp.shape()[2] || xp.shape()[2] < wp.shape()[3] {
                         continue;
@@ -461,6 +760,95 @@ mod tests {
                 "polyphase mismatch {}",
                 golden.max_abs_diff(&acc)
             );
+        }
+    }
+
+    /// Strided convs with padding and stride > 2 (the AlexNet stem and
+    /// ResNet downsamples) run exactly through the polyphase mapper.
+    #[test]
+    fn strided_padded_kernels_map_exactly() {
+        let mut rng = Pcg32::seeded(66);
+        let cases: &[(usize, usize, usize, usize)] = &[
+            // (k, stride, pad, hw)
+            (11, 4, 2, 19),
+            (7, 2, 3, 12),
+            (3, 2, 1, 10),
+            (1, 2, 0, 8),
+            (5, 3, 2, 13),
+        ];
+        for &(k, stride, pad, hw) in cases {
+            let input = rand_t(&mut rng, &[2, hw, hw], 0.6);
+            let weight = rand_t(&mut rng, &[3, 2, k, k], 0.6);
+            let spec = ConvSpec { stride, pad };
+            let golden = conv2d(&input, &weight, None, spec);
+            let mut tr = Trace::disabled();
+            let res = simulate_layer_strided(
+                &input,
+                &weight,
+                None,
+                &cfg(4),
+                spec,
+                Mode::VectorSparse,
+                true,
+                &mut tr,
+            );
+            let out = res.output.unwrap();
+            assert_eq!(out.shape(), golden.shape(), "k={k} s={stride} p={pad}");
+            assert!(
+                golden.allclose(&out, 1e-3, 1e-3),
+                "k={k} s={stride} p={pad}: diff {}",
+                golden.max_abs_diff(&out)
+            );
+            assert!(res.stats.cycles > 0 && res.stats.cycles <= res.dense_cycles);
+        }
+    }
+
+    /// A compiled plan must reproduce the per-call wrappers bit-for-bit —
+    /// same cycles, same stats, same functional output — and its
+    /// closed-form dense baseline must match the scheduler's.
+    #[test]
+    fn compiled_plan_matches_per_call_simulation() {
+        let mut rng = Pcg32::seeded(67);
+        let cfgv = cfg(4);
+        let cases: &[(usize, usize, usize, usize)] =
+            &[(3, 1, 1, 9), (5, 1, 2, 9), (1, 1, 0, 8), (3, 2, 1, 10), (11, 4, 2, 15)];
+        for &(k, stride, pad, hw) in cases {
+            let weight = Arc::new(rand_t(&mut rng, &[3, 2, k, k], 0.5));
+            let spec = ConvSpec { stride, pad };
+            let cc = compile_conv([2, hw, hw], weight.clone(), None, cfgv.pe.cols, spec, true);
+            for _ in 0..2 {
+                let input = rand_t(&mut rng, &[2, hw, hw], 0.5);
+                let mut tr = Trace::disabled();
+                let a = simulate_compiled(
+                    &input,
+                    &cc,
+                    None,
+                    &cfgv,
+                    Mode::VectorSparse,
+                    true,
+                    &mut tr,
+                );
+                let b = simulate_layer_any(
+                    &input,
+                    &weight,
+                    None,
+                    &cfgv,
+                    spec,
+                    Mode::VectorSparse,
+                    true,
+                    &mut tr,
+                );
+                assert_eq!(a.stats.cycles, b.stats.cycles, "k={k} s={stride}");
+                assert_eq!(a.stats.issued_pairs, b.stats.issued_pairs);
+                assert_eq!(a.dense_cycles, b.dense_cycles);
+                assert_eq!(
+                    a.output.unwrap().data(),
+                    b.output.unwrap().data(),
+                    "k={k} s={stride}: functional outputs must be bit-identical"
+                );
+                // Closed-form dense baseline == simulated dense baseline.
+                assert_eq!(cc.dense_cycles(&cfgv), b.dense_cycles, "k={k} s={stride}");
+            }
         }
     }
 }

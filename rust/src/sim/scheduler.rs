@@ -79,6 +79,34 @@ pub fn simulate_layer(
     functional: bool,
     trace: &mut Trace,
 ) -> LayerResult {
+    // Only the parallel functional path reads the packed payloads; timing
+    // and trace runs encode index-only and skip the payload copy.
+    let vw = if functional && !trace.enabled() {
+        VectorWeights::from_tensor(weight)
+    } else {
+        VectorWeights::index_only(weight)
+    };
+    simulate_layer_encoded(input, weight, &vw, bias, cfg, spec, mode, functional, trace)
+}
+
+/// [`simulate_layer`] with the weight-side CVF encode supplied by the
+/// caller — the execute half of the compile/execute split. `vw` must be the
+/// encode of `weight` (value-carrying when `functional` is set without a
+/// trace; index-only is enough otherwise); the per-image activation encode
+/// still happens here. Statistics and outputs are identical to
+/// [`simulate_layer`], which is now a thin wrapper that encodes per call.
+#[allow(clippy::too_many_arguments)]
+pub fn simulate_layer_encoded(
+    input: &Tensor,
+    weight: &Tensor,
+    vw: &VectorWeights,
+    bias: Option<&[f32]>,
+    cfg: &SimConfig,
+    spec: ConvSpec,
+    mode: Mode,
+    functional: bool,
+    trace: &mut Trace,
+) -> LayerResult {
     assert_eq!(spec.stride, 1, "VSCNN dataflow models unit stride only");
     assert_eq!(input.ndim(), 3);
     assert_eq!(weight.ndim(), 4);
@@ -90,6 +118,8 @@ pub fn simulate_layer(
         weight.shape()[3],
     );
     assert_eq!(c_in, wc, "channel mismatch");
+    assert_eq!(vw.k, k_out, "weight encode does not match the weight tensor");
+    assert_eq!(vw.c, wc, "weight encode does not match the weight tensor");
     assert_eq!(
         kh, cfg.pe.cols,
         "kernel height {kh} must equal PE columns {}",
@@ -100,19 +130,11 @@ pub fn simulate_layer(
 
     let r = cfg.pe.rows;
     let b = cfg.pe.arrays;
-    // Only the parallel functional path reads the packed payloads; timing
-    // and trace runs encode index-only and skip the payload copy.
     let want_vals = functional && !trace.enabled();
-    let (va, vw) = if want_vals {
-        (
-            VectorActivations::from_tensor(input, r),
-            VectorWeights::from_tensor(weight),
-        )
+    let va = if want_vals {
+        VectorActivations::from_tensor(input, r)
     } else {
-        (
-            VectorActivations::index_only(input, r),
-            VectorWeights::index_only(weight),
-        )
+        VectorActivations::index_only(input, r)
     };
     let strips = va.strips;
     let n_groups = k_out.div_ceil(b);
@@ -314,7 +336,7 @@ pub fn simulate_layer(
             weight,
             bias,
             &va,
-            &vw,
+            vw,
             mode,
             spec,
             FuncDims {

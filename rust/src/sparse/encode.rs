@@ -81,23 +81,62 @@ impl PrefixNnz {
     }
 }
 
-/// Exact count of surviving fine-grained MACs for a conv layer.
-///
-/// A MAC indexed `(k, c, oh, ow, i, j)` survives iff `weight[k,c,i,j] != 0`
-/// and the input pixel `(c, oh*s+i-p, ow*s+j-p)` is in-bounds and nonzero.
-/// Computed as: for every nonzero weight tap, count the nonzero input pixels
-/// whose position maps to a valid output — an O(1) summed-area query.
-pub fn fine_grained_work(input: &Tensor, weight: &Tensor, spec: ConvSpec) -> u64 {
-    let (c_in, kh, kw) = (weight.shape()[1], weight.shape()[2], weight.shape()[3]);
-    assert_eq!(c_in, input.shape()[0]);
-    let h_out = crate::tensor::conv::out_dim(input.shape()[1], kh, spec) as isize;
-    let w_out = crate::tensor::conv::out_dim(input.shape()[2], kw, spec) as isize;
-    let (s, p) = (spec.stride as isize, spec.pad as isize);
+/// Input-independent side of a [`DensityReport`]: everything derivable from
+/// the weight tensor alone, computed once at compile time and reused for
+/// every image (see `engine::compile`). [`layer_report_cached`] consumes it.
+#[derive(Debug, Clone)]
+pub struct WeightSideStats {
+    /// Weight tensor dims `[K, C, KH, KW]`.
+    pub k: usize,
+    pub c: usize,
+    pub kh: usize,
+    pub kw: usize,
+    /// Element-granularity weight density (Fig 9 "weight").
+    pub weight_elem: f64,
+    /// Vector-granularity weight density (Fig 10/11 "weight").
+    pub weight_vec: f64,
+    /// Per channel: Σ_k |nzW(k, c)| — the weight factor of the surviving
+    /// vector-pair count.
+    pub w_nz_per_c: Vec<u64>,
+    /// Filters with a nonzero tap at `(c, i, j)`, laid out
+    /// `(c*KH + i)*KW + j` — the weight factor of the fine-grained work
+    /// count.
+    pub filters_nz_at: Vec<u32>,
+}
 
-    // How many filters have a nonzero tap at (c, i, j)? One contiguous
-    // pass over the weight tensor (perf: this loop visits K*C*KH*KW
-    // elements and dominated layer_report before being linearized —
-    // EXPERIMENTS.md §Perf).
+/// Compute the weight-side stats from a weight tensor and its CVF encode
+/// (the encode may be value-carrying or index-only; only indices are read).
+pub fn weight_side_stats(weight: &Tensor, vw: &VectorWeights) -> WeightSideStats {
+    assert_eq!(weight.ndim(), 4, "weights must be [K,C,KH,KW]");
+    let (k, c, kh, kw) = (
+        weight.shape()[0],
+        weight.shape()[1],
+        weight.shape()[2],
+        weight.shape()[3],
+    );
+    assert_eq!(vw.k, k, "CVF encode does not match the weight tensor");
+    assert_eq!(vw.c, c, "CVF encode does not match the weight tensor");
+    let w_nz_per_c = (0..c)
+        .map(|ci| (0..k).map(|ki| vw.nz_cols(ki, ci).len() as u64).sum())
+        .collect();
+    WeightSideStats {
+        k,
+        c,
+        kh,
+        kw,
+        weight_elem: weight.density(),
+        weight_vec: vw.density(),
+        w_nz_per_c,
+        filters_nz_at: nz_tap_histogram(weight),
+    }
+}
+
+/// How many filters have a nonzero tap at `(c, i, j)`? One contiguous
+/// pass over the weight tensor (perf: this loop visits K*C*KH*KW
+/// elements and dominated layer_report before being linearized —
+/// EXPERIMENTS.md §Perf).
+fn nz_tap_histogram(weight: &Tensor) -> Vec<u32> {
+    let (c_in, kh, kw) = (weight.shape()[1], weight.shape()[2], weight.shape()[3]);
     let taps = kh * kw;
     let mut filters_nz_at = vec![0u32; c_in * taps];
     for filt in weight.data().chunks_exact(c_in * taps) {
@@ -107,6 +146,33 @@ pub fn fine_grained_work(input: &Tensor, weight: &Tensor, spec: ConvSpec) -> u64
             }
         }
     }
+    filters_nz_at
+}
+
+/// Exact count of surviving fine-grained MACs for a conv layer.
+///
+/// A MAC indexed `(k, c, oh, ow, i, j)` survives iff `weight[k,c,i,j] != 0`
+/// and the input pixel `(c, oh*s+i-p, ow*s+j-p)` is in-bounds and nonzero.
+/// Computed as: for every nonzero weight tap, count the nonzero input pixels
+/// whose position maps to a valid output — an O(1) summed-area query.
+pub fn fine_grained_work(input: &Tensor, weight: &Tensor, spec: ConvSpec) -> u64 {
+    let (kh, kw) = (weight.shape()[2], weight.shape()[3]);
+    fine_work_from_taps(input, &nz_tap_histogram(weight), kh, kw, spec)
+}
+
+/// [`fine_grained_work`] with the weight-side tap histogram precomputed.
+fn fine_work_from_taps(
+    input: &Tensor,
+    filters_nz_at: &[u32],
+    kh: usize,
+    kw: usize,
+    spec: ConvSpec,
+) -> u64 {
+    let c_in = input.shape()[0];
+    assert_eq!(filters_nz_at.len(), c_in * kh * kw, "tap histogram size");
+    let h_out = crate::tensor::conv::out_dim(input.shape()[1], kh, spec) as isize;
+    let w_out = crate::tensor::conv::out_dim(input.shape()[2], kw, spec) as isize;
+    let (s, p) = (spec.stride as isize, spec.pad as isize);
 
     let mut total = 0u64;
     for c in 0..c_in {
@@ -157,6 +223,18 @@ pub fn dense_macs(input: &Tensor, weight: &Tensor, spec: ConvSpec) -> u64 {
         weight.shape()[2],
         weight.shape()[3],
     );
+    dense_macs_dims(input, k_out, c_in, kh, kw, spec)
+}
+
+/// [`dense_macs`] from weight dims alone (no weight tensor needed).
+fn dense_macs_dims(
+    input: &Tensor,
+    k_out: usize,
+    c_in: usize,
+    kh: usize,
+    kw: usize,
+    spec: ConvSpec,
+) -> u64 {
     let h_out = crate::tensor::conv::out_dim(input.shape()[1], kh, spec) as u64;
     let w_out = crate::tensor::conv::out_dim(input.shape()[2], kw, spec) as u64;
     k_out as u64 * c_in as u64 * kh as u64 * kw as u64 * h_out * w_out
@@ -190,22 +268,52 @@ pub fn vector_pairs(va: &VectorActivations, vw: &VectorWeights) -> (u64, u64) {
 
 /// Full per-layer report at vector length `r`.
 pub fn layer_report(input: &Tensor, weight: &Tensor, spec: ConvSpec, r: usize) -> DensityReport {
+    let vw = VectorWeights::index_only(weight);
+    layer_report_cached(input, &weight_side_stats(weight, &vw), spec, r)
+}
+
+/// [`layer_report`] against precomputed weight-side stats: only the
+/// input-side quantities (activation encode, summed-area tables, pair
+/// products) are computed per image — the per-image half of the
+/// compile/execute split. Produces numbers identical to [`layer_report`].
+pub fn layer_report_cached(
+    input: &Tensor,
+    ws: &WeightSideStats,
+    spec: ConvSpec,
+    r: usize,
+) -> DensityReport {
+    assert_eq!(input.shape()[0], ws.c, "channel mismatch");
     // Density analysis never reads payloads — index-only encode.
     let va = VectorActivations::index_only(input, r);
-    let vw = VectorWeights::index_only(weight);
-    let macs_total = dense_macs(input, weight, spec);
-    let macs_nonzero = fine_grained_work(input, weight, spec);
-    let (pairs_total, pairs_nonzero) = vector_pairs(&va, &vw);
+    let macs_total = dense_macs_dims(input, ws.k, ws.c, ws.kh, ws.kw, spec);
+    let macs_nonzero = fine_work_from_taps(input, &ws.filters_nz_at, ws.kh, ws.kw, spec);
+
+    // Surviving vector pairs: Σ_c (Σ_k |nzW(k,c)|) · (Σ_s |nzI(c,s)|) —
+    // the weight factor comes from the cache.
+    let pairs_total =
+        va.c as u64 * va.strips as u64 * va.w as u64 * ws.k as u64 * ws.kw as u64;
+    let mut pairs_nonzero = 0u64;
+    for c in 0..va.c {
+        let w_nz = ws.w_nz_per_c[c];
+        if w_nz == 0 {
+            continue;
+        }
+        let i_nz: u64 = (0..va.strips)
+            .map(|s| va.nz_cols(c, s).len() as u64)
+            .sum();
+        pairs_nonzero += w_nz * i_nz;
+    }
+
     DensityReport {
         input_elem: input.density(),
-        weight_elem: weight.density(),
+        weight_elem: ws.weight_elem,
         work_elem: if macs_total == 0 {
             0.0
         } else {
             macs_nonzero as f64 / macs_total as f64
         },
         input_vec: va.density(),
-        weight_vec: vw.density(),
+        weight_vec: ws.weight_vec,
         work_vec: if pairs_total == 0 {
             0.0
         } else {
@@ -359,6 +467,40 @@ mod tests {
         assert_eq!(total, 12);
         // nz = Σ_strips |nzI| * |nzW| = (1*2) + (1*2) = 4
         assert_eq!(nz, 4);
+    }
+
+    #[test]
+    fn cached_layer_report_is_bit_identical() {
+        // The compile/execute split caches the weight-side stats; the
+        // cached report must equal the from-scratch one exactly (same
+        // integer counts, same f64s), for both CVF encode flavours.
+        let mut rng = Pcg32::seeded(909);
+        for case in 0..8 {
+            let c_in = rng.range(1, 4);
+            let k_out = rng.range(1, 5);
+            let h = rng.range(4, 12);
+            let w = rng.range(4, 12);
+            let k = if case % 2 == 0 { 3 } else { 5 };
+            let spec = ConvSpec {
+                stride: rng.range(1, 3),
+                pad: rng.range(0, 2),
+            };
+            if h + 2 * spec.pad < k || w + 2 * spec.pad < k {
+                continue;
+            }
+            let input = random_sparse(&mut rng, &[c_in, h, w], 0.5);
+            let weight = random_sparse(&mut rng, &[k_out, c_in, k, k], 0.4);
+            let r = rng.range(1, 6);
+            let full = layer_report(&input, &weight, spec, r);
+            for vw in [
+                VectorWeights::index_only(&weight),
+                VectorWeights::from_tensor(&weight),
+            ] {
+                let ws = weight_side_stats(&weight, &vw);
+                let cached = layer_report_cached(&input, &ws, spec, r);
+                assert_eq!(full, cached, "case {case}");
+            }
+        }
     }
 
     #[test]

@@ -76,6 +76,26 @@ pub fn conv2d(input: &Tensor, weight: &Tensor, bias: Option<&[f32]>, spec: ConvS
     out
 }
 
+/// Zero-pad a `[C, H, W]` tensor by `pad` on every spatial border (the
+/// explicit form of a conv's implicit padding — used by the polyphase
+/// mapper for padded strided convs).
+pub fn pad_input(input: &Tensor, pad: usize) -> Tensor {
+    assert_eq!(input.ndim(), 3, "input must be [C,H,W]");
+    if pad == 0 {
+        return input.clone();
+    }
+    let (c, h, w) = (input.shape()[0], input.shape()[1], input.shape()[2]);
+    let mut out = Tensor::zeros(&[c, h + 2 * pad, w + 2 * pad]);
+    for ci in 0..c {
+        for i in 0..h {
+            for j in 0..w {
+                *out.at3_mut(ci, i + pad, j + pad) = input.at3(ci, i, j);
+            }
+        }
+    }
+    out
+}
+
 /// In-place ReLU; returns the count of elements clamped to zero (the
 /// post-processing unit's zero-detection statistic).
 pub fn relu_inplace(t: &mut Tensor) -> usize {
@@ -210,6 +230,27 @@ mod tests {
         let out = maxpool2x2(&input);
         assert_eq!(out.shape(), &[1, 2, 2]);
         assert_eq!(out.data(), &[5.0, 7.0, 13.0, 15.0]);
+    }
+
+    #[test]
+    fn pad_input_matches_implicit_padding() {
+        // conv(x, w, pad p) == conv(pad(x, p), w, pad 0), any stride.
+        let input = Tensor::from_vec(&[1, 3, 3], (1..=9).map(|v| v as f32).collect());
+        let weight = Tensor::from_vec(&[1, 1, 3, 3], vec![1.0; 9]);
+        for stride in [1usize, 2] {
+            let spec = ConvSpec { stride, pad: 1 };
+            let implicit = conv2d(&input, &weight, None, spec);
+            let explicit = conv2d(
+                &pad_input(&input, 1),
+                &weight,
+                None,
+                ConvSpec { stride, pad: 0 },
+            );
+            assert_eq!(implicit.shape(), explicit.shape());
+            assert_eq!(implicit.data(), explicit.data());
+        }
+        // pad 0 is the identity.
+        assert_eq!(pad_input(&input, 0).data(), input.data());
     }
 
     #[test]

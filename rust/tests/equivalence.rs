@@ -5,10 +5,14 @@
 //! pinned by a hand-computed snapshot so the perf refactor provably
 //! changes no semantics (ISSUE 1 satellite).
 
+use std::sync::Arc;
+use vscnn::engine::{compile, CompileOptions, Engine, PreparedNetwork, PAPER_COLS};
+use vscnn::model::LayerKind;
 use vscnn::sim::config::SimConfig;
+use vscnn::sim::mapping::simulate_compiled;
 use vscnn::sim::scheduler::{simulate_layer, Mode};
 use vscnn::sim::trace::Trace;
-use vscnn::tensor::conv::{conv2d, ConvSpec};
+use vscnn::tensor::conv::{conv2d, maxpool2x2, relu_inplace, ConvSpec};
 use vscnn::tensor::ops::{conv2d_im2col, conv2d_im2col_mt};
 use vscnn::tensor::Tensor;
 use vscnn::util::rng::Pcg32;
@@ -84,6 +88,110 @@ fn conv_paths_equivalent_across_shapes_and_densities() {
                 );
             }
         }
+    }
+}
+
+/// Compile a pruned zoo network for the engine (paper 3-column mapping).
+fn compiled_zoo_net(name: &str, res: usize, seed: u64) -> Arc<PreparedNetwork> {
+    use vscnn::pruning::{self, sensitivity::flat_schedule};
+    let net = vscnn::model::zoo::by_name(name, res).unwrap();
+    let mut params = vscnn::model::init::synthetic_params(&net, seed, 0.0);
+    pruning::prune_network_vectors(&mut params, &flat_schedule(&net, 0.4));
+    Arc::new(compile(&net, params, &CompileOptions::new(PAPER_COLS)))
+}
+
+/// Network-level equivalence of the §II-B mapped paths: walk AlexNet and
+/// the ResNet-style trunk layer by layer, feeding each conv layer the real
+/// (golden-computed) activations, and assert the engine's compiled
+/// vector-sparse dataflow reproduces the golden conv per layer — covering
+/// 1×1, 5×5, 11×11 (stride 4), 7×7 (stride 2) and padded stride-2 3×3
+/// geometries end to end, not just unit shapes.
+#[test]
+fn zoo_networks_match_golden_conv_per_layer() {
+    let mut cfg = SimConfig::paper_8_7_3();
+    cfg.pe.arrays = 2;
+    for name in ["alexnet", "resnet10"] {
+        let prepared = compiled_zoo_net(name, 32, 0x5EED);
+        let net = &prepared.net;
+        let mut act = vscnn::model::init::synthetic_image(net.input_shape, 0x1317);
+        let mut kernels_seen: Vec<(usize, usize)> = Vec::new();
+        for layer in &net.layers {
+            match &layer.kind {
+                LayerKind::Conv { k, spec, .. } => {
+                    let cl = &prepared.layers[&layer.name];
+                    kernels_seen.push((*k, spec.stride));
+                    let golden =
+                        conv2d(&act, &cl.weight, Some(cl.bias.as_slice()), cl.spec);
+                    let mut tr = Trace::disabled();
+                    let res = simulate_compiled(
+                        &act,
+                        &cl.conv,
+                        Some(cl.bias.as_slice()),
+                        &cfg,
+                        Mode::VectorSparse,
+                        true,
+                        &mut tr,
+                    );
+                    let out = res.output.expect("functional mode");
+                    assert!(
+                        golden.allclose(&out, 1e-2, 1e-3),
+                        "{name}/{}: mapped dataflow diff {}",
+                        layer.name,
+                        golden.max_abs_diff(&out)
+                    );
+                    assert!(
+                        res.stats.cycles <= res.dense_cycles,
+                        "{name}/{}: sparse slower than dense",
+                        layer.name
+                    );
+                    // Continue the walk on the golden activations.
+                    let mut next = golden;
+                    relu_inplace(&mut next);
+                    act = next;
+                }
+                LayerKind::MaxPool2 => act = maxpool2x2(&act),
+                _ => {}
+            }
+        }
+        // The walk must actually have exercised the mapped geometries.
+        if name == "alexnet" {
+            assert!(kernels_seen.contains(&(11, 4)), "{kernels_seen:?}");
+            assert!(kernels_seen.contains(&(5, 1)), "{kernels_seen:?}");
+            assert!(kernels_seen.contains(&(3, 1)), "{kernels_seen:?}");
+        } else {
+            assert!(kernels_seen.contains(&(7, 2)), "{kernels_seen:?}");
+            assert!(kernels_seen.contains(&(1, 1)), "{kernels_seen:?}");
+            assert!(kernels_seen.contains(&(3, 2)), "{kernels_seen:?}");
+        }
+    }
+}
+
+/// The engine's own end-to-end run (timing + densities + post-processing)
+/// agrees with its backend on every mapped geometry: `verify_dataflow`
+/// asserts per-layer equality inside the engine, and the report stays in
+/// the sane band.
+#[test]
+fn zoo_networks_run_end_to_end_through_engine() {
+    for name in ["alexnet", "resnet10"] {
+        let prepared = compiled_zoo_net(name, 32, 0xA11E);
+        let net_input = prepared.net.input_shape;
+        let engine = Engine::new(prepared);
+        let img = vscnn::model::init::synthetic_image(net_input, 7);
+        let mut cfg = SimConfig::paper_8_7_3();
+        cfg.pe.arrays = 2;
+        let opts = vscnn::coordinator::RunOptions {
+            sim: cfg,
+            backend: vscnn::coordinator::FunctionalBackend::Golden,
+            verify_dataflow: true,
+        };
+        let report = engine.run_image(&img, &opts).unwrap();
+        let expect = if name == "alexnet" { 5 } else { 9 };
+        assert_eq!(report.layers.len(), expect, "{name}");
+        assert!(
+            report.overall_speedup() >= 1.0,
+            "{name}: speedup {}",
+            report.overall_speedup()
+        );
     }
 }
 

@@ -156,7 +156,7 @@ fn dense_mode_is_exact_dense_reference() {
 fn ideal_baselines_bracket_reality_on_vgg_slice() {
     // On a real VGG-16 slice: ours <= ideal_vector <= ideal_fine.
     let ctx = tiny_ctx();
-    let (coord, images, _) = experiments::workload::prepare(&ctx);
+    let (coord, images, _) = experiments::workload::prepare(&ctx).unwrap();
     let opts = RunOptions::new(SimConfig::paper_8_7_3());
     let report = coord.run(&images[0], &opts).unwrap();
     for l in &report.layers {
@@ -172,7 +172,7 @@ fn activation_calibration_survives_pipeline() {
     // After workload::prepare, deep-layer activations must stay alive
     // through the actual coordinator run (not just the calibration image).
     let ctx = tiny_ctx();
-    let (coord, images, _) = experiments::workload::prepare(&ctx);
+    let (coord, images, _) = experiments::workload::prepare(&ctx).unwrap();
     let opts = RunOptions::new(SimConfig::paper_4_14_3());
     let report = coord.run(&images[0], &opts).unwrap();
     let last = report.layers.last().unwrap();
@@ -189,7 +189,7 @@ fn sram_budgets_hold_for_vgg16() {
     // scheduler assumes: psum and weight-group peaks within the default
     // SRAM configuration on every VGG layer.
     let ctx = tiny_ctx();
-    let (coord, images, _) = experiments::workload::prepare(&ctx);
+    let (coord, images, _) = experiments::workload::prepare(&ctx).unwrap();
     for sim in [SimConfig::paper_4_14_3(), SimConfig::paper_8_7_3()] {
         let report = coord.run(&images[0], &RunOptions::new(sim)).unwrap();
         for l in &report.layers {
