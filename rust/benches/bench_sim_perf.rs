@@ -229,6 +229,18 @@ fn main() {
         println!("engine steady state: {ips:.2} images/sec (weight side fully cached)\n");
         derived.set("steady_state_images_per_sec", ips);
         results.push(r);
+
+        // Memory-model headline metrics (default tiled accounting): the
+        // roofline shape of the workload, tracked across PRs.
+        let report = engine.run_image(&img, &opts).expect("engine run");
+        println!(
+            "memory model [{}]: {:.0}% of layers memory-bound, {:.1}% effective bw util\n",
+            report.mem_model.label(),
+            100.0 * report.memory_bound_layer_frac(),
+            100.0 * report.effective_bw_util()
+        );
+        derived.set("memory_bound_layer_frac", report.memory_bound_layer_frac());
+        derived.set("effective_bw_util", report.effective_bw_util());
     }
 
     let path = "BENCH_sim_perf.json";

@@ -1,8 +1,15 @@
 //! The dense-CNN baseline: the same `[B, R, C]` array running the dense
 //! flow (every vector issued). This is the denominator of every speedup in
 //! Figs 12/13. Closed-form — no per-element work.
+//!
+//! Under [`crate::sim::config::MemModel::Tiled`] the baseline carries the
+//! same memory floor as the sparse flow ([`dense_mem_cycles`]): the dense
+//! machine streams *uncompressed* activations and weights through the
+//! identical double-buffered SRAM hierarchy, so speedups stay
+//! apples-to-apples.
 
 use crate::sim::config::SimConfig;
+use crate::sim::sram::{stream_tiles, TileDemand, TilePlan};
 use crate::tensor::conv::ConvSpec;
 
 /// Dense cycle count for a conv layer on `cfg`:
@@ -21,6 +28,74 @@ pub fn dense_cycles(
     let groups = k_out.div_ceil(cfg.pe.arrays) as u64;
     let blocks = groups * c_in as u64 * strips;
     blocks * (w as u64) * (kw as u64) + blocks * cfg.context_switch_cycles
+}
+
+/// Per-tile demands of the dense flow on a sub-conv issued at the array
+/// height (`KH = cfg.pe.cols`): every `(channel, strip)` block costs
+/// `W * KW` pairs plus one context switch, inputs stream uncompressed
+/// (re-fetched per filter group unless the whole plane fits the input
+/// buffer), and each group's dense weights load once per group when they
+/// fit half the weight buffer — every tile otherwise. The scheduler's
+/// `Mode::Dense` tiled run streams exactly these demands, so the closed
+/// form and the simulator agree bit-for-bit.
+pub fn dense_tile_demands(
+    cfg: &SimConfig,
+    c_in: usize,
+    k_out: usize,
+    h: usize,
+    w: usize,
+    kw: usize,
+) -> Vec<TileDemand> {
+    let bpe = cfg.sram.bytes_per_elem;
+    let r = cfg.pe.rows;
+    let kh = cfg.pe.cols;
+    let b = cfg.pe.arrays.max(1);
+    let max_group_w_bytes = b.min(k_out) * c_in * kh * kw * bpe;
+    let plan = TilePlan::new(&cfg.sram, &cfg.pe, c_in, h, w, w, k_out, max_group_w_bytes);
+    let input_resident = cfg.sram.input_bytes >= c_in * h * w * bpe;
+    let mut demands = Vec::with_capacity(plan.total_tiles());
+    for g in 0..plan.groups {
+        let filters = (((g + 1) * b).min(k_out)) - g * b;
+        let w_bytes_g = (filters * c_in * kh * kw * bpe) as u64;
+        for t in 0..plan.tiles_per_group {
+            let strips = plan.tile_strips(t);
+            let blocks = (c_in * strips.len()) as u64;
+            let compute = blocks * (w as u64) * (kw as u64) + blocks * cfg.context_switch_cycles;
+            let mut input_bytes = 0u64;
+            if g == 0 || !input_resident {
+                for s in strips {
+                    let rows = ((s + 1) * r).min(h).saturating_sub(s * r);
+                    input_bytes += (c_in * rows * w * bpe) as u64;
+                }
+            }
+            let weight_bytes = if t == 0 || !plan.weight_group_fits {
+                w_bytes_g
+            } else {
+                0
+            };
+            demands.push(TileDemand {
+                compute,
+                input_bytes,
+                weight_bytes,
+            });
+        }
+    }
+    demands
+}
+
+/// Memory-aware dense cycle count: [`dense_tile_demands`] streamed through
+/// the double-buffered SRAM model. Always `>= dense_cycles` (the pure
+/// compute count) and `>=` the traffic's transfer-cycle floor.
+pub fn dense_mem_cycles(
+    cfg: &SimConfig,
+    c_in: usize,
+    k_out: usize,
+    h: usize,
+    w: usize,
+    kw: usize,
+) -> u64 {
+    let demands = dense_tile_demands(cfg, c_in, k_out, h, w, kw);
+    stream_tiles(&cfg.sram, cfg.dram_bytes_per_cycle, &demands).cycles
 }
 
 /// Dense MAC issue slots (pairs × per-array PEs) — the utilization
@@ -45,15 +120,21 @@ mod tests {
     use crate::tensor::Tensor;
     use crate::util::rng::Pcg32;
 
-    /// The closed form must equal the simulator's dense run exactly.
+    /// The closed form must equal the simulator's dense run exactly —
+    /// under both memory models.
     #[test]
     fn closed_form_matches_simulator() {
         let mut rng = Pcg32::seeded(3);
-        for _ in 0..8 {
+        for case in 0..8 {
             let mut cfg = SimConfig::paper_4_14_3();
             cfg.pe.arrays = rng.range(1, 5);
             cfg.pe.rows = rng.range(2, 8);
             cfg.context_switch_cycles = rng.range(0, 3) as u64;
+            cfg.mem_model = if case % 2 == 0 {
+                crate::sim::config::MemModel::Ideal
+            } else {
+                crate::sim::config::MemModel::Tiled
+            };
             let c_in = rng.range(1, 4);
             let k_out = rng.range(1, 9);
             let h = rng.range(3, 16);
@@ -66,13 +147,49 @@ mod tests {
             let spec = crate::tensor::conv::ConvSpec::default();
             let mut tr = Trace::disabled();
             let res = simulate_layer(&input, &weight, None, &cfg, spec, Mode::Dense, false, &mut tr);
-            assert_eq!(
-                res.stats.cycles,
-                dense_cycles(&cfg, c_in, k_out, h, w, 3, spec),
-                "cfg {:?}",
-                cfg.pe
-            );
+            let expect = match cfg.mem_model {
+                crate::sim::config::MemModel::Ideal => {
+                    dense_cycles(&cfg, c_in, k_out, h, w, 3, spec)
+                }
+                crate::sim::config::MemModel::Tiled => dense_mem_cycles(&cfg, c_in, k_out, h, w, 3),
+            };
+            assert_eq!(res.stats.cycles, expect, "cfg {:?}", cfg.pe);
+            assert_eq!(res.dense_cycles, expect, "cfg {:?}", cfg.pe);
         }
+    }
+
+    /// The memory-aware dense count dominates the pure compute count and
+    /// the traffic's transfer floor, and collapses to compute-plus-fills
+    /// when bandwidth is effectively infinite.
+    #[test]
+    fn dense_mem_cycles_bounds() {
+        let mut cfg = SimConfig::paper_8_7_3();
+        cfg.sram.input_bytes = 256;
+        cfg.sram.weight_bytes = 256;
+        cfg.dram_bytes_per_cycle = 1.0;
+        let spec = crate::tensor::conv::ConvSpec::default();
+        let (c_in, k_out, h, w, kw) = (3usize, 8usize, 20usize, 16usize, 3usize);
+        let compute = dense_cycles(&cfg, c_in, k_out, h, w, kw, spec);
+        let mem = dense_mem_cycles(&cfg, c_in, k_out, h, w, kw);
+        assert!(mem >= compute, "{mem} < {compute}");
+        let demands = dense_tile_demands(&cfg, c_in, k_out, h, w, kw);
+        let transfer: u64 = demands
+            .iter()
+            .map(|d| {
+                crate::sim::dram::cycles_for_bytes(
+                    d.input_bytes + d.weight_bytes,
+                    cfg.dram_bytes_per_cycle,
+                )
+            })
+            .sum();
+        assert!(mem >= transfer, "{mem} < {transfer}");
+        // Plenty of bandwidth and SRAM: one tile, and only its 1-cycle
+        // prologue fill separates the memory-aware count from compute.
+        let mut fast = cfg;
+        fast.dram_bytes_per_cycle = 1e9;
+        fast.sram.input_bytes = 1 << 20;
+        fast.sram.weight_bytes = 1 << 20;
+        assert_eq!(dense_mem_cycles(&fast, c_in, k_out, h, w, kw), compute + 1);
     }
 
     #[test]

@@ -18,6 +18,13 @@ pub fn cycles(report: &DensityReport, pes: usize) -> u64 {
     report.macs_nonzero.div_ceil(pes as u64)
 }
 
+/// Ideal cycle count floored by the layer's DRAM transfer cycles — the
+/// same memory floor as [`crate::baselines::ideal_vector::mem_cycles`]:
+/// skipping MACs does not skip the bytes that feed them.
+pub fn mem_cycles(report: &DensityReport, pes: usize, transfer_cycles: u64) -> u64 {
+    cycles(report, pes).max(transfer_cycles)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -72,5 +79,11 @@ mod tests {
         let s = speedup(&rep);
         assert!(s > 8.0 && s < 10.5, "speedup {s}");
         assert_eq!(cycles(&rep, 1), rep.macs_nonzero);
+        // The memory floor binds exactly when transfer dominates.
+        assert_eq!(mem_cycles(&rep, 1, 0), rep.macs_nonzero);
+        assert_eq!(
+            mem_cycles(&rep, 1, rep.macs_nonzero + 7),
+            rep.macs_nonzero + 7
+        );
     }
 }

@@ -22,6 +22,15 @@ pub fn cycles(report: &DensityReport, arrays: usize) -> u64 {
     report.pairs_nonzero.div_ceil(arrays as u64)
 }
 
+/// Ideal cycle count floored by the DRAM transfer the same compressed
+/// layer must move — even a perfectly balanced machine cannot outrun the
+/// bus. This is the tiled memory model's floor shared with every
+/// baseline, so skip-efficiency numbers cannot exceed the bandwidth
+/// bound.
+pub fn mem_cycles(report: &DensityReport, arrays: usize, transfer_cycles: u64) -> u64 {
+    cycles(report, arrays).max(transfer_cycles)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -61,6 +70,9 @@ mod tests {
             cfg.pe.arrays = rng.range(1, 5);
             cfg.pe.rows = rng.range(2, 8);
             cfg.context_switch_cycles = 0;
+            // Pure-compute comparison: the unfloored ideal machine only
+            // upper-bounds the simulator's compute cycles.
+            cfg.mem_model = crate::sim::config::MemModel::Ideal;
             let c_in = rng.range(1, 4);
             let k_out = rng.range(1, 8);
             let h = rng.range(4, 14);
@@ -98,5 +110,15 @@ mod tests {
         let rep = layer_report(&input, &weight, ConvSpec::default(), 4);
         assert_eq!(cycles(&rep, 1), rep.pairs_nonzero);
         assert_eq!(cycles(&rep, 4), rep.pairs_nonzero.div_ceil(4));
+    }
+
+    #[test]
+    fn mem_cycles_apply_the_transfer_floor() {
+        let input = Tensor::from_vec(&[1, 4, 4], vec![1.0; 16]);
+        let weight = Tensor::from_vec(&[4, 1, 3, 3], vec![1.0; 36]);
+        let rep = layer_report(&input, &weight, ConvSpec::default(), 4);
+        let compute = cycles(&rep, 4);
+        assert_eq!(mem_cycles(&rep, 4, 0), compute);
+        assert_eq!(mem_cycles(&rep, 4, compute + 100), compute + 100);
     }
 }

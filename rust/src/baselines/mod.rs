@@ -52,6 +52,25 @@ pub fn ideal_speedups(report: &DensityReport) -> (f64, f64) {
     (ideal_vector::speedup(report), ideal_fine::speedup(report))
 }
 
+/// Ideal-machine speedups under the tiled memory model: each ideal
+/// machine's cycle count is floored by the layer's DRAM transfer cycles
+/// (same compressed traffic, perfect overlap), and the speedup is taken
+/// against the memory-aware dense baseline — so skip-efficiency numbers
+/// cannot exceed the bandwidth bound.
+pub fn ideal_speedups_mem(
+    report: &DensityReport,
+    cfg: &crate::sim::config::SimConfig,
+    dense_cycles: u64,
+    transfer_cycles: u64,
+) -> (f64, f64) {
+    let iv = ideal_vector::mem_cycles(report, cfg.pe.arrays, transfer_cycles);
+    let fine = ideal_fine::mem_cycles(report, cfg.pe.total_pes(), transfer_cycles);
+    (
+        dense_cycles as f64 / iv.max(1) as f64,
+        dense_cycles as f64 / fine.max(1) as f64,
+    )
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

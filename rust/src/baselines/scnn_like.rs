@@ -55,6 +55,23 @@ impl ScnnModel {
     pub fn speedup_per_area(&self, report: &DensityReport) -> f64 {
         self.speedup(report) / (1.0 + self.index_area_overhead)
     }
+
+    /// [`Self::speedup`] capped at the bandwidth bound
+    /// `dense_cycles / transfer_cycles` — the tiled memory floor shared
+    /// with the dense and ideal baselines: no machine that must move this
+    /// traffic can beat dense by more than the bus allows.
+    pub fn speedup_with_bw_floor(
+        &self,
+        report: &DensityReport,
+        dense_cycles: u64,
+        transfer_cycles: u64,
+    ) -> f64 {
+        let s = self.speedup(report);
+        if transfer_cycles == 0 {
+            return s;
+        }
+        s.min(dense_cycles as f64 / transfer_cycles as f64)
+    }
 }
 
 /// VSCNN speedup per unit area for the same comparison.
@@ -108,6 +125,18 @@ mod tests {
             index_area_overhead: 0.0,
         };
         assert!((m.speedup(&rep) - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn bw_floor_caps_the_modelled_speedup() {
+        let rep = report_with(1000, 60);
+        let m = ScnnModel::default();
+        let uncapped = m.speedup(&rep);
+        // No transfer data: unchanged. Tight bus: capped at dense/transfer.
+        assert_eq!(m.speedup_with_bw_floor(&rep, 1000, 0), uncapped);
+        let capped = m.speedup_with_bw_floor(&rep, 1000, 800);
+        assert!((capped - 1.25).abs() < 1e-12, "capped {capped}");
+        assert!(capped < uncapped);
     }
 
     #[test]

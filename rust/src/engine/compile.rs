@@ -7,6 +7,7 @@ use crate::model::{LayerKind, Network};
 use crate::pruning;
 use crate::sim::config::SimConfig;
 use crate::sim::mapping::{compile_conv, CompiledConv};
+use crate::sim::sram::TilePlan;
 use crate::sparse::encode::{weight_side_stats, WeightSideStats};
 use crate::sparse::VectorWeights;
 use crate::tensor::conv::ConvSpec;
@@ -78,6 +79,37 @@ impl CompiledLayer {
     /// needed; equals the scheduler's reported `dense_cycles`).
     pub fn dense_cycles(&self, cfg: &SimConfig) -> u64 {
         self.conv.dense_cycles(cfg)
+    }
+
+    /// The SRAM tiling of this layer's *primary* (unmapped) geometry
+    /// under `cfg` — derived entirely at compile time for reporting and
+    /// provisioning (input side sized for worst-case dense strips, weight
+    /// side from the layer's compressed encode with the raw-format escape
+    /// the execute-time model applies). Row-mapped and polyphase layers
+    /// execute as several sub-convs, each tiled separately by the
+    /// scheduler over its own sub-plane; this plan describes the
+    /// original-shape working set those tilings share.
+    pub fn tile_plan(&self, cfg: &SimConfig) -> TilePlan {
+        let [c_in, h, w] = self.in_shape;
+        let bpe = cfg.sram.bytes_per_elem;
+        let b = cfg.pe.arrays.max(1);
+        let groups = self.vw.k.div_ceil(b).max(1);
+        let dense_kc_bytes = self.vw.kh * self.vw.kw * bpe;
+        let max_group_bytes = (0..groups)
+            .map(|g| {
+                let mut bytes = 0usize;
+                for k in g * b..((g + 1) * b).min(self.vw.k) {
+                    for c in 0..self.vw.c {
+                        let cvf = self.vw.nz_cols(k, c).len() * (self.vw.kh * bpe + 2);
+                        bytes += cvf.min(dense_kc_bytes);
+                    }
+                }
+                bytes
+            })
+            .max()
+            .unwrap_or(0);
+        let w_out = crate::tensor::conv::out_dim(w, self.conv.kw, self.spec);
+        TilePlan::new(&cfg.sram, &cfg.pe, c_in, h, w, w_out, self.vw.k, max_group_bytes)
     }
 }
 
@@ -270,6 +302,33 @@ mod tests {
             // 3-tall kernels on a 4-column array need the row mapping.
             assert_eq!(re.layers[name].conv.cols, 4);
         }
+    }
+
+    #[test]
+    fn tile_plan_is_compile_time_derivable() {
+        let net = tiny_vgg(8);
+        let params = synthetic_params(&net, 6, 0.0);
+        let prepared = compile(&net, params, &CompileOptions::new(PAPER_COLS));
+        let cfg = SimConfig::paper_8_7_3();
+        for name in net.conv_layer_names() {
+            let cl = &prepared.layers[name];
+            let plan = cl.tile_plan(&cfg);
+            // Tiny planes on R=7 arrays: every layer's strips fit half of
+            // the 64 KiB input buffer in a single tile.
+            let strips = cl.in_shape[1].div_ceil(cfg.pe.rows);
+            assert_eq!(plan.strips, strips, "{name}");
+            assert_eq!(plan.strips_per_tile, strips, "{name}");
+            assert_eq!(plan.tiles_per_group, 1, "{name}");
+            assert_eq!(plan.groups, cl.vw.k.div_ceil(cfg.pe.arrays), "{name}");
+            assert!(plan.total_tiles() >= 1, "{name}");
+        }
+        // Starving the input buffer forces more, smaller tiles.
+        let mut tiny = cfg;
+        tiny.sram.input_bytes = 64;
+        let cl = &prepared.layers[net.conv_layer_names()[0]];
+        let plan = cl.tile_plan(&tiny);
+        assert_eq!(plan.strips_per_tile, 1);
+        assert_eq!(plan.tiles_per_group, 2);
     }
 
     #[test]

@@ -3,14 +3,14 @@
 //! [`crate::engine`]).
 
 use super::compile::{CompiledLayer, PreparedNetwork};
-use crate::baselines::{ideal_speedups, SpeedupSeries};
+use crate::baselines::{ideal_speedups, ideal_speedups_mem, SpeedupSeries};
 use crate::model::LayerKind;
 use crate::runtime::Runtime;
-use crate::sim::config::SimConfig;
+use crate::sim::config::{MemModel, SimConfig};
 use crate::sim::mapping::simulate_compiled;
 use crate::sim::postproc;
 use crate::sim::scheduler::Mode;
-use crate::sim::stats::SimStats;
+use crate::sim::stats::{MemBound, SimStats};
 use crate::sim::trace::Trace;
 use crate::sparse::encode::{layer_report_cached, DensityReport};
 use crate::tensor::conv::maxpool2x2;
@@ -33,6 +33,11 @@ pub struct LayerRecord {
     pub speedups: SpeedupSeries,
     /// Post-ReLU output density (what the next layer sees).
     pub output_density_elem: f64,
+    /// Roofline classification under the run's memory model (always
+    /// `Compute` under [`MemModel::Ideal`]).
+    pub bound: MemBound,
+    /// Fraction of the layer's cycles the DRAM bus was busy.
+    pub bw_util: f64,
 }
 
 impl LayerRecord {
@@ -52,6 +57,8 @@ impl LayerRecord {
             .set("speedup_ideal_fine", self.speedups.ideal_fine)
             .set("utilization", self.sparse.utilization())
             .set("output_density_elem", self.output_density_elem)
+            .set("bound", self.bound.label())
+            .set("bw_utilization", self.bw_util)
             .set("stats", self.sparse.to_json());
         o
     }
@@ -106,9 +113,18 @@ impl RunOptions {
 pub struct NetworkReport {
     pub network: String,
     pub config_label: String,
+    /// Memory model the run was timed under.
+    pub mem_model: MemModel,
     pub layers: Vec<LayerRecord>,
     pub totals: SimStats,
     pub total_dense_cycles: u64,
+    /// Cycles needed to move the run's *total* DRAM traffic
+    /// (`totals.dram.transfer_cycles(bandwidth)`) — the roofline memory
+    /// axis. Counted from the raw byte totals (no raw-format escape) and
+    /// including output write-back, which the tiled model overlaps with
+    /// the next layer's prologue — so this can legitimately exceed
+    /// `totals.cycles`; it is a traffic measure, not a bound on them.
+    pub dram_floor_cycles: u64,
 }
 
 impl NetworkReport {
@@ -119,8 +135,28 @@ impl NetworkReport {
     }
 
     /// Whole-network ideal-machine speedups (cycle-weighted, same
-    /// aggregation as the per-layer ones).
+    /// aggregation as the per-layer ones). Under the tiled memory model
+    /// the ideal machines carry the same per-layer memory floor as the
+    /// per-layer series, aggregated by summing their floored cycle counts
+    /// — so the network-level efficiency numbers respect the bandwidth
+    /// bound too.
     pub fn overall_series(&self) -> SpeedupSeries {
+        if self.mem_model == MemModel::Tiled && !self.layers.is_empty() {
+            // Tiled: recover each layer's floored ideal cycle count from
+            // its (dense-normalized) speedup and sum.
+            let mut iv_cycles = 0.0f64;
+            let mut fine_cycles = 0.0f64;
+            for l in &self.layers {
+                iv_cycles += l.dense_cycles as f64 / l.speedups.ideal_vector.max(1e-12);
+                fine_cycles += l.dense_cycles as f64 / l.speedups.ideal_fine.max(1e-12);
+            }
+            let dense = self.total_dense_cycles as f64;
+            return SpeedupSeries {
+                ours: self.overall_speedup(),
+                ideal_vector: dense / iv_cycles.max(1e-12),
+                ideal_fine: dense / fine_cycles.max(1e-12),
+            };
+        }
         let (mut pairs_t, mut pairs_nz) = (0u64, 0u64);
         let (mut macs_t, mut macs_nz) = (0u64, 0u64);
         for l in &self.layers {
@@ -136,11 +172,39 @@ impl NetworkReport {
         }
     }
 
+    /// Fraction of conv layers classified memory-bound (0 under the ideal
+    /// memory model).
+    pub fn memory_bound_layer_frac(&self) -> f64 {
+        if self.layers.is_empty() {
+            return 0.0;
+        }
+        let mem = self.layers.iter().filter(|l| l.bound == MemBound::Memory).count();
+        mem as f64 / self.layers.len() as f64
+    }
+
+    /// Network-level DRAM bus busy fraction: transfer cycles over total
+    /// cycles (0 under the ideal memory model).
+    pub fn effective_bw_util(&self) -> f64 {
+        if self.totals.cycles == 0 {
+            0.0
+        } else {
+            self.totals.transfer_cycles.min(self.totals.cycles) as f64
+                / self.totals.cycles as f64
+        }
+    }
+
     pub fn to_json(&self) -> Json {
         let series = self.overall_series();
+        let mut roofline = Json::obj();
+        roofline
+            .set("compute_cycles", self.totals.compute_cycles)
+            .set("transfer_cycles", self.totals.transfer_cycles)
+            .set("dram_floor_cycles", self.dram_floor_cycles)
+            .set("bound", self.totals.bound().label());
         let mut o = Json::obj();
         o.set("network", self.network.as_str())
             .set("config", self.config_label.as_str())
+            .set("mem_model", self.mem_model.label())
             .set("overall_speedup", series.ours)
             .set("overall_ideal_vector", series.ideal_vector)
             .set("overall_ideal_fine", series.ideal_fine)
@@ -148,6 +212,9 @@ impl NetworkReport {
             .set("fine_skip_efficiency", series.fine_skip_efficiency())
             .set("total_cycles", self.totals.cycles)
             .set("total_dense_cycles", self.total_dense_cycles)
+            .set("memory_bound_layer_frac", self.memory_bound_layer_frac())
+            .set("effective_bw_util", self.effective_bw_util())
+            .set("roofline", roofline)
             .set(
                 "layers",
                 Json::Arr(self.layers.iter().map(|l| l.to_json()).collect()),
@@ -215,7 +282,18 @@ impl Engine {
                     // --- densities / ideal baselines (weight side cached)
                     let density =
                         layer_report_cached(&act, &cl.wstats, cl.spec, opts.sim.pe.rows);
-                    let (ideal_vector, ideal_fine) = ideal_speedups(&density);
+                    // Under the tiled model every baseline shares the
+                    // layer's transfer-cycle floor (ISSUE 3 satellite:
+                    // skip efficiency cannot exceed the bandwidth bound).
+                    let (ideal_vector, ideal_fine) = match opts.sim.mem_model {
+                        MemModel::Ideal => ideal_speedups(&density),
+                        MemModel::Tiled => ideal_speedups_mem(
+                            &density,
+                            &opts.sim,
+                            res.dense_cycles,
+                            res.stats.transfer_cycles,
+                        ),
+                    };
 
                     // --- functional forward ------------------------------
                     let out = forward_conv(cl, &act, opts)?;
@@ -258,6 +336,8 @@ impl Engine {
                             ideal_fine,
                         },
                         output_density_elem: post.output.density(),
+                        bound: stats.bound(),
+                        bw_util: stats.bw_utilization(),
                     };
                     totals.merge(&record.sparse);
                     total_dense += record.dense_cycles;
@@ -277,12 +357,15 @@ impl Engine {
             }
         }
 
+        let dram_floor_cycles = totals.dram.transfer_cycles(opts.sim.dram_bytes_per_cycle);
         Ok(NetworkReport {
             network: net.name.clone(),
             config_label: opts.sim.pe.label(),
+            mem_model: opts.sim.mem_model,
             layers,
             totals,
             total_dense_cycles: total_dense,
+            dram_floor_cycles,
         })
     }
 
@@ -394,6 +477,39 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn tiled_model_reports_memory_fields_and_dominates_ideal() {
+        let (p, img) = prepared(24);
+        let mut opts = small_opts();
+        opts.verify_dataflow = false;
+        opts.sim.mem_model = MemModel::Ideal;
+        let ideal = Engine::new(p.clone()).run_image(&img, &opts).unwrap();
+        assert_eq!(ideal.totals.transfer_cycles, 0);
+        assert_eq!(ideal.memory_bound_layer_frac(), 0.0);
+        assert_eq!(ideal.effective_bw_util(), 0.0);
+
+        opts.sim.mem_model = MemModel::Tiled;
+        let tiled = Engine::new(p).run_image(&img, &opts).unwrap();
+        // The memory floor can only add cycles, on ours and on dense.
+        assert!(tiled.totals.cycles >= ideal.totals.cycles);
+        assert!(tiled.totals.cycles >= tiled.totals.transfer_cycles);
+        assert!(tiled.total_dense_cycles >= ideal.total_dense_cycles);
+        assert!(tiled.totals.tiles > 0);
+        for l in &tiled.layers {
+            assert!((0.0..=1.0).contains(&l.bw_util), "{}", l.name);
+            assert!(
+                l.speedups.ours <= l.speedups.ideal_vector + 1e-9,
+                "{}",
+                l.name
+            );
+        }
+        let j = tiled.to_json();
+        assert_eq!(j.get("mem_model").unwrap().as_str(), Some("tiled"));
+        assert!(j.get("roofline").unwrap().get("transfer_cycles").is_some());
+        assert!(j.get("memory_bound_layer_frac").is_some());
+        assert!(j.get("effective_bw_util").is_some());
     }
 
     #[test]

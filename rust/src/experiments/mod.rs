@@ -51,6 +51,10 @@ pub struct ExpContext {
     pub threads: usize,
     /// Artifacts directory for PJRT-backed runs (`None` = rust conv).
     pub artifacts_dir: Option<String>,
+    /// Memory model for the cycle accounting (CLI `--mem-model`):
+    /// `Tiled` (default) charges SRAM-sized tiles max(compute, transfer);
+    /// `Ideal` reproduces the pure-compute counts.
+    pub mem_model: crate::sim::config::MemModel,
 }
 
 impl Default for ExpContext {
@@ -65,6 +69,7 @@ impl Default for ExpContext {
             bias_shift: 0.0,
             threads: std::thread::available_parallelism().map_or(4, |n| n.get()),
             artifacts_dir: None,
+            mem_model: crate::sim::config::MemModel::Tiled,
         }
     }
 }

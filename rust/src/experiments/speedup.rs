@@ -14,20 +14,32 @@ fn speedup_rows(reports: &[NetworkReport]) -> Vec<(String, Vec<(String, f64)>)> 
     let ours = avg_layer_metric(reports, |l| l.speedups.ours);
     let iv = avg_layer_metric(reports, |l| l.speedups.ideal_vector);
     let ifg = avg_layer_metric(reports, |l| l.speedups.ideal_fine);
+    let bw = avg_layer_metric(reports, |l| l.bw_util);
     ours.iter()
         .zip(&iv)
         .zip(&ifg)
-        .map(|((o, v), f)| {
+        .zip(&bw)
+        .map(|(((o, v), f), b)| {
             (
                 o.0.clone(),
                 vec![
                     ("ours".to_string(), o.1),
                     ("ideal_vector".to_string(), v.1),
                     ("ideal_fine".to_string(), f.1),
+                    ("bw_util".to_string(), b.1),
                 ],
             )
         })
         .collect()
+}
+
+/// Average memory-bound layer fraction and effective bandwidth
+/// utilization across image reports (the roofline summary line).
+fn mem_summary(reports: &[NetworkReport]) -> (f64, f64) {
+    let n = reports.len().max(1) as f64;
+    let frac: f64 = reports.iter().map(|r| r.memory_bound_layer_frac()).sum();
+    let util: f64 = reports.iter().map(|r| r.effective_bw_util()).sum();
+    (frac / n, util / n)
 }
 
 fn overall_avg(reports: &[NetworkReport]) -> (f64, f64, f64, f64, f64) {
@@ -55,14 +67,18 @@ pub fn run_fig(ctx: &ExpContext, cfg_4_14_3: bool) -> Result<ExpOutput> {
     let reports = run_config(ctx, cfg)?;
     let rows = speedup_rows(&reports);
     let (ours, iv, ifg, veff, feff) = overall_avg(&reports);
+    let (mem_frac, bw_util) = mem_summary(&reports);
 
     let mut json = Json::obj();
     json.set("config", cfg.pe.label())
+        .set("mem_model", ctx.mem_model.label())
         .set("overall_speedup", ours)
         .set("overall_ideal_vector", iv)
         .set("overall_ideal_fine", ifg)
         .set("vector_skip_efficiency", veff)
         .set("fine_skip_efficiency", feff)
+        .set("memory_bound_layer_frac", mem_frac)
+        .set("effective_bw_util", bw_util)
         .set("paper_overall_speedup", paper_overall)
         .set(
             "layers",
@@ -80,14 +96,17 @@ pub fn run_fig(ctx: &ExpContext, cfg_4_14_3: bool) -> Result<ExpOutput> {
             ),
         );
     let text = format!(
-        "Fig {} — speedup over dense, {}\n{}\noverall: ours {:.3}x | ideal vector {:.3}x | ideal fine {:.3}x (paper: {:.3}x)\n",
+        "Fig {} — speedup over dense, {} (mem model: {})\n{}\noverall: ours {:.3}x | ideal vector {:.3}x | ideal fine {:.3}x (paper: {:.3}x)\nmemory-bound layers: {:.0}% | effective DRAM bw utilization: {:.1}%\n",
         if cfg_4_14_3 { 12 } else { 13 },
         cfg.pe.label(),
+        ctx.mem_model.label(),
         ascii_table(&rows),
         ours,
         iv,
         ifg,
-        paper_overall
+        paper_overall,
+        100.0 * mem_frac,
+        100.0 * bw_util
     );
     Ok(ExpOutput {
         id: id.to_string(),
@@ -112,18 +131,42 @@ pub fn run_headline(ctx: &ExpContext) -> Result<ExpOutput> {
         entries.into_iter().zip(&all)
     {
         let (ours, iv, ifg, veff, feff) = overall_avg(reports);
+        let (mem_frac, bw_util) = mem_summary(reports);
+        // Per-layer roofline classification (image 0; the classification
+        // is shape-dominated, so one image is representative). Empty when
+        // the run had no images (`--images 0`).
+        let layers = Json::Arr(
+            reports
+                .first()
+                .map(|r| r.layers.as_slice())
+                .unwrap_or(&[])
+                .iter()
+                .map(|l| {
+                    let mut lo = Json::obj();
+                    lo.set("name", l.name.as_str())
+                        .set("bound", l.bound.label())
+                        .set("bw_utilization", l.bw_util)
+                        .set("speedup", l.speedups.ours);
+                    lo
+                })
+                .collect(),
+        );
         let mut o = Json::obj();
         o.set("speedup", ours)
             .set("ideal_vector", iv)
             .set("ideal_fine", ifg)
             .set("vector_skip_efficiency", veff)
             .set("fine_skip_efficiency", feff)
+            .set("memory_bound_layer_frac", mem_frac)
+            .set("effective_bw_util", bw_util)
+            .set("mem_model", ctx.mem_model.label())
+            .set("layers", layers)
             .set("paper_speedup", paper_speedup)
             .set("paper_vector_skip_efficiency", paper_veff)
             .set("paper_fine_skip_efficiency", paper_feff);
         json.set(&cfg.pe.label(), o);
         text.push_str(&format!(
-            "{}: speedup {:.3}x (paper {:.3}x) | vector-skip eff {:.1}% (paper {:.0}%) | fine-skip eff {:.1}% (paper {:.1}%)\n",
+            "{}: speedup {:.3}x (paper {:.3}x) | vector-skip eff {:.1}% (paper {:.0}%) | fine-skip eff {:.1}% (paper {:.1}%) | mem-bound layers {:.0}% | bw util {:.1}%\n",
             cfg.pe.label(),
             ours,
             paper_speedup,
@@ -131,6 +174,8 @@ pub fn run_headline(ctx: &ExpContext) -> Result<ExpOutput> {
             100.0 * paper_veff,
             100.0 * feff,
             100.0 * paper_feff,
+            100.0 * mem_frac,
+            100.0 * bw_util,
         ));
     }
     Ok(ExpOutput {
@@ -169,10 +214,16 @@ pub fn run_scnn(ctx: &ExpContext) -> Result<ExpOutput> {
         pairs_total: 0,
         pairs_nonzero: 0,
     };
-    let scnn_speedup = model.speedup(&agg);
+    // Under the tiled model the SCNN-like comparator shares the same
+    // bandwidth floor as every other baseline: no machine moving this
+    // traffic beats dense by more than the bus allows.
+    let total_dense: u64 = reports.iter().map(|r| r.total_dense_cycles).sum();
+    let total_transfer: u64 = reports.iter().map(|r| r.totals.transfer_cycles).sum();
+    let scnn_speedup = model.speedup_with_bw_floor(&agg, total_dense, total_transfer);
 
     let mut json = Json::obj();
     json.set("vscnn_speedup", ours)
+        .set("transfer_floor_cycles", total_transfer)
         .set("vscnn_fine_skip_efficiency", feff)
         .set("vscnn_speedup_per_area", vscnn_speedup_per_area(ours))
         .set("scnn_speedup", scnn_speedup)

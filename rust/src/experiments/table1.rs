@@ -38,6 +38,9 @@ pub fn run(ctx: &ExpContext) -> Result<ExpOutput> {
     cfg.pe.arrays = 1;
     cfg.pe.rows = 5; // 15 PEs, as in §III
     cfg.context_switch_cycles = 0;
+    // Table I is the paper's pure-compute timing diagram (15 vs 8
+    // cycles); the memory hierarchy is out of its scope.
+    cfg.mem_model = crate::sim::config::MemModel::Ideal;
     let spec = ConvSpec { stride: 1, pad: 1 };
 
     let mut text = String::new();

@@ -88,9 +88,12 @@ pub fn options(ctx: &ExpContext, sim: SimConfig) -> Result<RunOptions> {
         None => FunctionalBackend::Im2colMt(ctx.threads),
     };
     // The context's thread budget also drives the simulation engine
-    // (parallel functional dataflow + group-timing fan-out).
+    // (parallel functional dataflow + group-timing fan-out), and the
+    // context's memory model wins over whatever the config carried
+    // (the CLI's `--mem-model` flag flows in through the context).
     let mut sim = sim;
     sim.threads = ctx.threads;
+    sim.mem_model = ctx.mem_model;
     Ok(RunOptions {
         sim,
         backend,
@@ -108,13 +111,14 @@ pub fn run_config(ctx: &ExpContext, sim: SimConfig) -> Result<Vec<NetworkReport>
     static CACHE: OnceLock<Mutex<HashMap<String, Vec<NetworkReport>>>> = OnceLock::new();
 
     let key = format!(
-        "{} res{} seed{} img{} shift{} {} pjrt:{}",
+        "{} res{} seed{} img{} shift{} {} mem:{} pjrt:{}",
         ctx.net,
         ctx.res,
         ctx.seed,
         ctx.images,
         ctx.bias_shift,
         sim.pe.label(),
+        ctx.mem_model.label(),
         ctx.artifacts_dir.as_deref().unwrap_or("-"),
     );
     let cache = CACHE.get_or_init(|| Mutex::new(HashMap::new()));
@@ -265,6 +269,22 @@ mod tests {
             assert_eq!(reports[0].layers.len(), expect, "{net}");
             assert!(reports[0].overall_speedup() >= 1.0, "{net}");
         }
+    }
+
+    #[test]
+    fn mem_model_flows_from_context_and_caches_separately() {
+        let ctx_t = tiny_ctx();
+        let mut ctx_i = tiny_ctx();
+        ctx_i.mem_model = crate::sim::config::MemModel::Ideal;
+        let tiled = run_config(&ctx_t, SimConfig::paper_8_7_3()).unwrap();
+        let ideal = run_config(&ctx_i, SimConfig::paper_8_7_3()).unwrap();
+        assert_eq!(tiled[0].mem_model.label(), "tiled");
+        assert_eq!(ideal[0].mem_model.label(), "ideal");
+        // The memory floor only adds cycles, and only the tiled run
+        // reports transfer time.
+        assert!(tiled[0].totals.cycles >= ideal[0].totals.cycles);
+        assert_eq!(ideal[0].totals.transfer_cycles, 0);
+        assert!(tiled[0].totals.transfer_cycles > 0);
     }
 
     #[test]

@@ -4,9 +4,9 @@
 //! ```text
 //! vscnn exp <id|all> [--net vgg16|alexnet|resnet10|mixed] [--res N]
 //!                    [--images N] [--seed S] [--pjrt DIR] [--out DIR]
-//!                    [--bias-shift X] [--threads N]
+//!                    [--bias-shift X] [--threads N] [--mem-model ideal|tiled]
 //! vscnn simulate     [--config 4,14,3|8,7,3] [--net NAME] [--res N]
-//!                    [--density D] ...
+//!                    [--density D] [--mem-model ideal|tiled] ...
 //! vscnn runtime-info [--artifacts DIR]
 //! vscnn list
 //! ```
@@ -59,7 +59,8 @@ fn print_help() {
          \x20 runtime-info    check the PJRT runtime + artifacts\n\
          \x20 list            list experiment ids\n\n\
          common flags: --net vgg16|alexnet|resnet10|mixed --res N (default 224)\n\
-         \x20 --images N --seed S --bias-shift X --threads N --pjrt DIR --out DIR",
+         \x20 --images N --seed S --bias-shift X --threads N --pjrt DIR --out DIR\n\
+         \x20 --mem-model ideal|tiled (tiled = SRAM/DRAM-aware cycle accounting, default)",
         vscnn::VERSION,
         experiments::list().join(", ")
     );
@@ -67,6 +68,11 @@ fn print_help() {
 
 fn ctx_from(cli: &Cli) -> Result<ExpContext> {
     let default = ExpContext::default();
+    let mem_model = match cli.get("mem-model") {
+        None => default.mem_model,
+        Some(s) => vscnn::sim::config::MemModel::parse(s)
+            .ok_or_else(|| anyhow::anyhow!("--mem-model must be 'ideal' or 'tiled', got '{s}'"))?,
+    };
     Ok(ExpContext {
         net: cli.get("net").unwrap_or(&default.net).to_string(),
         res: cli.get_num("res", default.res)?,
@@ -75,12 +81,13 @@ fn ctx_from(cli: &Cli) -> Result<ExpContext> {
         bias_shift: cli.get_num("bias-shift", default.bias_shift)?,
         threads: cli.get_num("threads", default.threads)?,
         artifacts_dir: cli.get("pjrt").map(|s| s.to_string()),
+        mem_model,
     })
 }
 
 fn cmd_exp(cli: &Cli) -> Result<()> {
     cli.check_known(&[
-        "net", "res", "seed", "images", "bias-shift", "threads", "pjrt", "out",
+        "net", "res", "seed", "images", "bias-shift", "threads", "pjrt", "out", "mem-model",
     ])?;
     let Some(id) = cli.positional.first() else {
         bail!("usage: vscnn exp <id|all>; ids: {:?}", experiments::list());
@@ -108,6 +115,7 @@ fn cmd_exp(cli: &Cli) -> Result<()> {
 fn cmd_simulate(cli: &Cli) -> Result<()> {
     cli.check_known(&[
         "net", "res", "seed", "images", "bias-shift", "threads", "pjrt", "config", "density",
+        "mem-model",
     ])?;
     let ctx = ctx_from(cli)?;
     let cfg = match cli.get("config").unwrap_or("8,7,3") {
@@ -152,13 +160,16 @@ fn cmd_simulate(cli: &Cli) -> Result<()> {
         let report = coord.run(img, &opts)?;
         let series = report.overall_series();
         println!(
-            "image {i}: {} cycles {} dense {} speedup {:.3}x (ideal vec {:.3}x fine {:.3}x) wall {:?}",
+            "image {i}: {} mem[{}] cycles {} dense {} speedup {:.3}x (ideal vec {:.3}x fine {:.3}x) mem-bound {:.0}% bw-util {:.1}% wall {:?}",
             cfg.pe.label(),
+            report.mem_model.label(),
             report.totals.cycles,
             report.total_dense_cycles,
             series.ours,
             series.ideal_vector,
             series.ideal_fine,
+            100.0 * report.memory_bound_layer_frac(),
+            100.0 * report.effective_bw_util(),
             t0.elapsed()
         );
     }

@@ -66,6 +66,39 @@ impl Default for SramConfig {
     }
 }
 
+/// Memory-model selector for the cycle accounting.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MemModel {
+    /// Infinite SRAM, zero transfer time: pure compute cycles. This is the
+    /// pre-tiling behavior, kept reachable for comparisons and pinned
+    /// bit-for-bit by `tests/memory_model.rs`.
+    Ideal,
+    /// Tiled, double-buffered SRAM/DRAM model: each layer splits into
+    /// SRAM-sized tiles (input strips × filter groups) and every tile is
+    /// charged `max(compute, DRAM transfer)` with a prologue fill — see
+    /// [`crate::sim::sram::stream_tiles`].
+    Tiled,
+}
+
+impl MemModel {
+    /// Parse a CLI flag value (`ideal` / `tiled`).
+    pub fn parse(s: &str) -> Option<MemModel> {
+        match s {
+            "ideal" => Some(MemModel::Ideal),
+            "tiled" => Some(MemModel::Tiled),
+            _ => None,
+        }
+    }
+
+    /// Label used in reports and cache keys.
+    pub fn label(&self) -> &'static str {
+        match self {
+            MemModel::Ideal => "ideal",
+            MemModel::Tiled => "tiled",
+        }
+    }
+}
+
 /// Full simulator configuration.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct SimConfig {
@@ -85,6 +118,11 @@ pub struct SimConfig {
     /// available core. This is a *simulator* knob: cycle counts and
     /// functional outputs are identical for every thread count.
     pub threads: usize,
+    /// Memory model for the cycle accounting: [`MemModel::Tiled`] (the
+    /// default) charges SRAM-sized tiles `max(compute, transfer)` with
+    /// double-buffered fills; [`MemModel::Ideal`] reports pure compute
+    /// cycles (infinite SRAM, zero transfer time).
+    pub mem_model: MemModel,
 }
 
 impl SimConfig {
@@ -97,6 +135,7 @@ impl SimConfig {
             dram_bytes_per_cycle: 8.0,
             context_switch_cycles: 2,
             threads: 0,
+            mem_model: MemModel::Tiled,
         }
     }
 
@@ -144,6 +183,17 @@ mod tests {
         let s = SramConfig::default();
         assert!(s.input_bytes > 0 && s.weight_bytes > 0);
         assert_eq!(s.bytes_per_elem, 2);
+    }
+
+    #[test]
+    fn mem_model_parse_and_label_round_trip() {
+        assert_eq!(MemModel::parse("ideal"), Some(MemModel::Ideal));
+        assert_eq!(MemModel::parse("tiled"), Some(MemModel::Tiled));
+        assert_eq!(MemModel::parse("bogus"), None);
+        assert_eq!(MemModel::Ideal.label(), "ideal");
+        assert_eq!(MemModel::Tiled.label(), "tiled");
+        // The paper configs default to the tiled (memory-aware) model.
+        assert_eq!(SimConfig::paper_4_14_3().mem_model, MemModel::Tiled);
     }
 
     #[test]

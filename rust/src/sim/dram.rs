@@ -33,11 +33,19 @@ impl DramTraffic {
     }
 
     /// Cycles needed to move this traffic at `bytes_per_cycle` (the memory-
-    /// bound lower latency bound; reported next to compute cycles).
+    /// bound lower latency bound; the network roofline summary reports it
+    /// next to the tiled cycle count).
     pub fn transfer_cycles(&self, bytes_per_cycle: f64) -> u64 {
-        assert!(bytes_per_cycle > 0.0);
-        (self.total() as f64 / bytes_per_cycle).ceil() as u64
+        cycles_for_bytes(self.total(), bytes_per_cycle)
     }
+}
+
+/// Cycles to move `bytes` at `bytes_per_cycle`, rounded up (zero bytes
+/// move in zero cycles). The per-tile conversion of the tiled memory
+/// model ([`crate::sim::sram::stream_tiles`]).
+pub fn cycles_for_bytes(bytes: u64, bytes_per_cycle: f64) -> u64 {
+    assert!(bytes_per_cycle > 0.0);
+    (bytes as f64 / bytes_per_cycle).ceil() as u64
 }
 
 #[cfg(test)]
@@ -67,5 +75,13 @@ mod tests {
         };
         assert_eq!(t.transfer_cycles(4.0), 3);
         assert_eq!(t.transfer_cycles(10.0), 1);
+    }
+
+    #[test]
+    fn cycles_for_bytes_rounds_up_and_handles_zero() {
+        assert_eq!(cycles_for_bytes(0, 8.0), 0);
+        assert_eq!(cycles_for_bytes(1, 8.0), 1);
+        assert_eq!(cycles_for_bytes(16, 8.0), 2);
+        assert_eq!(cycles_for_bytes(17, 8.0), 3);
     }
 }

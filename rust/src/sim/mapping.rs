@@ -39,7 +39,7 @@
 //! paper's design is that the accumulator flow is index-driven, so remaps
 //! only change *which* vectors are issued.
 
-use super::config::SimConfig;
+use super::config::{MemModel, SimConfig};
 use super::scheduler::{simulate_layer, simulate_layer_encoded, LayerResult, Mode};
 use super::stats::SimStats;
 use super::trace::Trace;
@@ -155,17 +155,30 @@ impl CompiledConv {
     /// Closed-form dense-flow cycle count of this plan under `cfg` — the
     /// speedup denominator, computable at compile time (it is
     /// input-data-independent). Matches the `dense_cycles` the scheduler
-    /// reports when executing the plan.
+    /// reports when executing the plan, under either memory model: the
+    /// tiled model's dense baseline streams each sub-conv's uncompressed
+    /// data through the same double-buffered SRAM hierarchy.
     pub fn dense_cycles(&self, cfg: &SimConfig) -> u64 {
-        let groups = self.k_out.div_ceil(cfg.pe.arrays) as u64;
-        self.sub_dims
-            .iter()
-            .map(|&[h, w, kw]| {
-                let strips = h.div_ceil(cfg.pe.rows) as u64;
-                let blocks = groups * self.c_in as u64 * strips;
-                blocks * (w as u64) * (kw as u64) + blocks * cfg.context_switch_cycles
-            })
-            .sum()
+        match cfg.mem_model {
+            MemModel::Ideal => {
+                let groups = self.k_out.div_ceil(cfg.pe.arrays) as u64;
+                self.sub_dims
+                    .iter()
+                    .map(|&[h, w, kw]| {
+                        let strips = h.div_ceil(cfg.pe.rows) as u64;
+                        let blocks = groups * self.c_in as u64 * strips;
+                        blocks * (w as u64) * (kw as u64) + blocks * cfg.context_switch_cycles
+                    })
+                    .sum()
+            }
+            MemModel::Tiled => self
+                .sub_dims
+                .iter()
+                .map(|&[h, w, kw]| {
+                    crate::baselines::dense::dense_mem_cycles(cfg, self.c_in, self.k_out, h, w, kw)
+                })
+                .sum(),
+        }
     }
 }
 

@@ -8,7 +8,11 @@
 //! * [`index_unit`] — the vector index system: pairing nonzero input /
 //!   weight vectors and computing the output column each pair lands on.
 //! * [`accumulator`] — partial-sum accumulation keyed by output index.
-//! * [`sram`] / [`dram`] — local buffers and external-memory traffic.
+//! * [`sram`] / [`dram`] — local buffers, the tiled double-buffered
+//!   execution model (`TilePlan` / `stream_tiles`) and external-memory
+//!   traffic. Under the default [`config::MemModel::Tiled`] every layer is
+//!   charged `max(compute, DRAM transfer)` per SRAM-sized tile;
+//!   [`config::MemModel::Ideal`] keeps the pure-compute accounting.
 //! * [`scheduler`] — the dense and sparse dataflows of §III / Table I,
 //!   including multi-array synchronization (the source of the paper's
 //!   92%/85%-of-ideal efficiency).
@@ -21,6 +25,10 @@
 //! runs) and **timing-only** (occupancy-derived cycle counts — used for
 //! full VGG-16 sweeps; provably identical cycle counts, see
 //! `scheduler::tests::functional_and_timing_agree`).
+
+// Delete-or-use policy (ISSUE 3 satellite): everything in the simulator
+// model must be exercised by the live timing path, not just unit tests.
+#![deny(dead_code)]
 
 pub mod accumulator;
 pub mod config;
@@ -35,6 +43,6 @@ pub mod sram;
 pub mod stats;
 pub mod trace;
 
-pub use config::{PeConfig, SimConfig};
+pub use config::{MemModel, PeConfig, SimConfig};
 pub use scheduler::{simulate_layer, LayerResult, Mode};
-pub use stats::SimStats;
+pub use stats::{MemBound, SimStats};

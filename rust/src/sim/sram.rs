@@ -1,9 +1,18 @@
 //! SRAM buffer models (Fig 3's input / weight / partial-sum / output
-//! buffers with their controllers).
+//! buffers with their controllers), and the tiled double-buffered
+//! execution model built on them.
 //!
 //! The buffers are accounting models: they track resident bytes, peak
 //! occupancy and overflow-driven refetches — enough to reproduce the
 //! paper's architectural numbers without RTL-level port modelling.
+//!
+//! [`TilePlan`] splits a conv layer into SRAM-sized tiles (input-row
+//! strips × filter groups) at compile time; [`stream_tiles`] then drives a
+//! tile sequence through the double-buffered hierarchy, charging each tile
+//! `max(compute, transfer)` with a serial prologue fill — the
+//! [`crate::sim::config::MemModel::Tiled`] cycle accounting.
+
+use super::config::{PeConfig, SramConfig};
 
 /// One SRAM buffer with a capacity and occupancy/traffic counters.
 #[derive(Debug, Clone)]
@@ -61,6 +70,176 @@ impl SramBuffer {
     }
 }
 
+/// How one conv layer (or mapped sub-conv) splits into SRAM-sized tiles.
+///
+/// Input-independent: derived from the layer shape, the PE geometry and
+/// the [`SramConfig`] capacities — the input side is provisioned for the
+/// worst case (a fully dense strip), so the plan can be computed at
+/// compile time and reused for every image.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TilePlan {
+    /// Input strips (`R` input rows each) in the layer.
+    pub strips: usize,
+    /// Strips streamed per tile: as many full-height dense strips as fit
+    /// in half the input buffer (the other half prefetches the next tile).
+    pub strips_per_tile: usize,
+    /// Input tiles per filter group: `ceil(strips / strips_per_tile)`.
+    pub tiles_per_group: usize,
+    /// Filter groups: `ceil(K / B)`.
+    pub groups: usize,
+    /// Worst-case (dense) bytes of one full-height input strip.
+    pub dense_strip_bytes: usize,
+    /// The largest filter group's weights fit in half the weight buffer
+    /// (double buffered); when false the group re-streams its weights on
+    /// every input tile.
+    pub weight_group_fits: bool,
+    /// The psum buffer holds one strip of partial output columns per
+    /// array (`B * (R + C - 1) * W_out` elements).
+    pub psum_fits: bool,
+}
+
+impl TilePlan {
+    /// Plan the tiling of a sub-conv over input `[c_in, h, w]` with output
+    /// plane width `w_out` and `k_out` filters. `max_group_weight_bytes`
+    /// is the largest filter-group footprint the weight buffer must hold
+    /// (compressed for the sparse flow, dense for the dense baseline).
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        sram: &SramConfig,
+        pe: &PeConfig,
+        c_in: usize,
+        h: usize,
+        w: usize,
+        w_out: usize,
+        k_out: usize,
+        max_group_weight_bytes: usize,
+    ) -> TilePlan {
+        let r = pe.rows;
+        let strips = h.div_ceil(r).max(1);
+        let dense_strip_bytes = c_in * r * w * sram.bytes_per_elem;
+        let half_in = (sram.input_bytes / 2).max(1);
+        let strips_per_tile = (half_in / dense_strip_bytes.max(1)).clamp(1, strips);
+        let tiles_per_group = strips.div_ceil(strips_per_tile);
+        let groups = k_out.div_ceil(pe.arrays.max(1)).max(1);
+        let weight_group_fits = max_group_weight_bytes <= sram.weight_bytes / 2;
+        let psum_bytes = pe.arrays * (r + pe.cols - 1) * w_out * sram.bytes_per_elem;
+        let psum_fits = psum_bytes <= sram.psum_bytes;
+        TilePlan {
+            strips,
+            strips_per_tile,
+            tiles_per_group,
+            groups,
+            dense_strip_bytes,
+            weight_group_fits,
+            psum_fits,
+        }
+    }
+
+    /// Total tiles the layer executes: one per (group, input tile).
+    pub fn total_tiles(&self) -> usize {
+        self.groups * self.tiles_per_group
+    }
+
+    /// Strip index range of input tile `t` (within any group).
+    pub fn tile_strips(&self, t: usize) -> std::ops::Range<usize> {
+        let lo = t * self.strips_per_tile;
+        lo..((t + 1) * self.strips_per_tile).min(self.strips)
+    }
+}
+
+/// One tile's demand on the array and the memory system.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TileDemand {
+    /// Compute cycles the slowest array in the group needs for this tile.
+    pub compute: u64,
+    /// Input bytes fetched from DRAM for this tile (0 when resident).
+    pub input_bytes: u64,
+    /// Weight bytes fetched from DRAM for this tile (0 when the group's
+    /// weights are already resident).
+    pub weight_bytes: u64,
+}
+
+/// Result of streaming a tile sequence through the double-buffered SRAM.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct TiledTiming {
+    /// Total cycles: `>= max(compute_cycles, transfer_cycles)` always.
+    pub cycles: u64,
+    /// Sum of per-tile compute cycles (tile-synchronized occupancy).
+    pub compute_cycles: u64,
+    /// Sum of per-tile DRAM transfer cycles.
+    pub transfer_cycles: u64,
+    /// Transfer cycles that could not hide behind compute: the prologue
+    /// fill of the first tile plus every non-double-bufferable
+    /// (overflowing) tile.
+    pub fill_cycles: u64,
+    /// Tiles streamed.
+    pub tiles: u64,
+    /// Tiles whose working set overflowed a buffer half (fetched without
+    /// overlap).
+    pub overflows: u64,
+    /// Peak bytes resident in the input buffer half.
+    pub input_peak: u64,
+    /// Peak bytes resident in the weight buffer half.
+    pub weight_peak: u64,
+}
+
+/// Drive `demands` through the double-buffered input/weight SRAM model at
+/// `bytes_per_cycle` of DRAM bandwidth.
+///
+/// Tile `i`'s compute overlaps tile `i+1`'s transfer when the prefetch
+/// fits the spare buffer halves ([`SramBuffer::fill`] is the live check);
+/// the first fill is a serial prologue, an overflowing tile loses the
+/// overlap, and the last tile's compute drains with nothing left to
+/// prefetch. The result satisfies
+/// `cycles >= max(compute_cycles, transfer_cycles)`.
+pub fn stream_tiles(
+    sram: &SramConfig,
+    bytes_per_cycle: f64,
+    demands: &[TileDemand],
+) -> TiledTiming {
+    let mut out = TiledTiming {
+        tiles: demands.len() as u64,
+        ..TiledTiming::default()
+    };
+    if demands.is_empty() {
+        return out;
+    }
+    let mut in_buf = SramBuffer::new("input", (sram.input_bytes / 2).max(1));
+    let mut w_buf = SramBuffer::new("weight", (sram.weight_bytes / 2).max(1));
+    // Per tile: transfer cycles and whether the fetch double-buffers.
+    let mut transfers: Vec<(u64, bool)> = Vec::with_capacity(demands.len());
+    for d in demands {
+        in_buf.clear();
+        w_buf.clear();
+        let in_ok = d.input_bytes == 0 || in_buf.fill(d.input_bytes as usize);
+        let w_ok = d.weight_bytes == 0 || w_buf.fill(d.weight_bytes as usize);
+        if !(in_ok && w_ok) {
+            out.overflows += 1;
+        }
+        let t = super::dram::cycles_for_bytes(d.input_bytes + d.weight_bytes, bytes_per_cycle);
+        transfers.push((t, in_ok && w_ok));
+        out.transfer_cycles += t;
+        out.compute_cycles += d.compute;
+    }
+    // Prologue: the first tile's fill has nothing to hide behind.
+    out.cycles += transfers[0].0;
+    out.fill_cycles += transfers[0].0;
+    for (i, d) in demands.iter().enumerate() {
+        match transfers.get(i + 1) {
+            Some(&(t_next, true)) => out.cycles += d.compute.max(t_next),
+            Some(&(t_next, false)) => {
+                out.cycles += d.compute + t_next;
+                out.fill_cycles += t_next;
+            }
+            // Pipeline drain: the last tile computes with the bus idle.
+            None => out.cycles += d.compute,
+        }
+    }
+    out.input_peak = in_buf.peak_bytes as u64;
+    out.weight_peak = w_buf.peak_bytes as u64;
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -86,5 +265,109 @@ mod tests {
         let b = SramBuffer::new("w", 64);
         assert!(b.fits_empty(64));
         assert!(!b.fits_empty(65));
+    }
+
+    fn plan_cfg(input_bytes: usize, weight_bytes: usize) -> SramConfig {
+        SramConfig {
+            input_bytes,
+            weight_bytes,
+            psum_bytes: 1024,
+            output_bytes: 1024,
+            bytes_per_elem: 2,
+        }
+    }
+
+    #[test]
+    fn tile_plan_splits_strips_by_half_buffer() {
+        let pe = PeConfig {
+            arrays: 2,
+            rows: 4,
+            cols: 3,
+        };
+        // 2 channels, 16 rows, 8 cols: 4 strips of 2*4*8*2 = 128 bytes.
+        // Half of a 512-byte input buffer holds 2 dense strips.
+        let plan = TilePlan::new(&plan_cfg(512, 512), &pe, 2, 16, 8, 8, 5, 100);
+        assert_eq!(plan.strips, 4);
+        assert_eq!(plan.dense_strip_bytes, 128);
+        assert_eq!(plan.strips_per_tile, 2);
+        assert_eq!(plan.tiles_per_group, 2);
+        assert_eq!(plan.groups, 3); // ceil(5 / 2)
+        assert_eq!(plan.total_tiles(), 6);
+        assert_eq!(plan.tile_strips(0), 0..2);
+        assert_eq!(plan.tile_strips(1), 2..4);
+        assert!(plan.weight_group_fits); // 100 <= 256
+        let tight = TilePlan::new(&plan_cfg(512, 512), &pe, 2, 16, 8, 8, 5, 300);
+        assert!(!tight.weight_group_fits);
+        // A strip larger than the half-buffer still streams one at a time.
+        let tiny = TilePlan::new(&plan_cfg(64, 512), &pe, 2, 16, 8, 8, 5, 100);
+        assert_eq!(tiny.strips_per_tile, 1);
+        assert_eq!(tiny.tiles_per_group, 4);
+    }
+
+    #[test]
+    fn stream_tiles_overlaps_transfer_with_compute() {
+        // Two tiles, everything fits: cycles = T0 + max(C0, T1) + C1.
+        let sram = plan_cfg(200, 200);
+        let demands = [
+            TileDemand {
+                compute: 10,
+                input_bytes: 16,
+                weight_bytes: 0,
+            },
+            TileDemand {
+                compute: 3,
+                input_bytes: 24,
+                weight_bytes: 0,
+            },
+        ];
+        let t = stream_tiles(&sram, 4.0, &demands);
+        // T0 = 4, T1 = 6: 4 + max(10, 6) + 3 = 17.
+        assert_eq!(t.cycles, 17);
+        assert_eq!(t.compute_cycles, 13);
+        assert_eq!(t.transfer_cycles, 10);
+        assert_eq!(t.fill_cycles, 4);
+        assert_eq!(t.tiles, 2);
+        assert_eq!(t.overflows, 0);
+        assert_eq!(t.input_peak, 24);
+    }
+
+    #[test]
+    fn stream_tiles_serializes_overflowing_fetches() {
+        // Half the input buffer is 8 bytes; both tiles overflow it, so
+        // neither fetch double-buffers: cycles = T0 + (C0 + T1) + C1.
+        let sram = plan_cfg(16, 200);
+        let demands = [
+            TileDemand {
+                compute: 10,
+                input_bytes: 16,
+                weight_bytes: 0,
+            },
+            TileDemand {
+                compute: 3,
+                input_bytes: 24,
+                weight_bytes: 0,
+            },
+        ];
+        let t = stream_tiles(&sram, 4.0, &demands);
+        assert_eq!(t.cycles, 4 + 10 + 6 + 3);
+        assert_eq!(t.fill_cycles, 10);
+        assert_eq!(t.overflows, 2);
+    }
+
+    #[test]
+    fn stream_tiles_lower_bound_holds() {
+        let sram = plan_cfg(128, 128);
+        let demands: Vec<TileDemand> = (0..7)
+            .map(|i| TileDemand {
+                compute: (i as u64 * 13) % 29,
+                input_bytes: (i as u64 * 31) % 90,
+                weight_bytes: (i as u64 * 17) % 70,
+            })
+            .collect();
+        let t = stream_tiles(&sram, 3.0, &demands);
+        assert!(t.cycles >= t.compute_cycles);
+        assert!(t.cycles >= t.transfer_cycles);
+        assert!(t.fill_cycles <= t.transfer_cycles);
+        assert_eq!(stream_tiles(&sram, 3.0, &[]).cycles, 0);
     }
 }

@@ -4,6 +4,25 @@
 use super::dram::DramTraffic;
 use crate::util::json::Json;
 
+/// Roofline classification of a layer under the tiled memory model.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MemBound {
+    /// The PE arrays dominate: compute cycles >= transfer cycles.
+    Compute,
+    /// The DRAM bus dominates: transfer cycles > compute cycles.
+    Memory,
+}
+
+impl MemBound {
+    /// Label used in reports (`"compute"` / `"memory"`).
+    pub fn label(&self) -> &'static str {
+        match self {
+            MemBound::Compute => "compute",
+            MemBound::Memory => "memory",
+        }
+    }
+}
+
 /// Statistics of one simulated layer (or an accumulated network run).
 #[derive(Debug, Default, Clone, Copy, PartialEq)]
 pub struct SimStats {
@@ -27,6 +46,20 @@ pub struct SimStats {
     pub macs: u64,
     /// Context-switch overhead cycles charged.
     pub overhead_cycles: u64,
+    /// Pure-compute cycles: under [`crate::sim::config::MemModel::Tiled`]
+    /// the tile-synchronized array occupancy, under `Ideal` equal to
+    /// [`Self::cycles`].
+    pub compute_cycles: u64,
+    /// DRAM transfer cycles demanded across all tiles (input + weight +
+    /// index traffic at the configured bandwidth; 0 under `Ideal`).
+    pub transfer_cycles: u64,
+    /// Transfer cycles that could not hide behind compute (prologue fills
+    /// and overflowing tiles).
+    pub fill_cycles: u64,
+    /// Tiles executed by the tiled memory model (0 under `Ideal`).
+    pub tiles: u64,
+    /// SRAM capacity overflows observed while streaming tiles.
+    pub sram_overflows: u64,
     /// External memory traffic.
     pub dram: DramTraffic,
     /// Peak input-buffer residency (compressed), bytes.
@@ -48,6 +81,11 @@ impl SimStats {
         self.boundary_pairs += other.boundary_pairs;
         self.macs += other.macs;
         self.overhead_cycles += other.overhead_cycles;
+        self.compute_cycles += other.compute_cycles;
+        self.transfer_cycles += other.transfer_cycles;
+        self.fill_cycles += other.fill_cycles;
+        self.tiles += other.tiles;
+        self.sram_overflows += other.sram_overflows;
         self.dram.merge(&other.dram);
         self.sram_input_peak = self.sram_input_peak.max(other.sram_input_peak);
         self.sram_weight_peak = self.sram_weight_peak.max(other.sram_weight_peak);
@@ -57,6 +95,33 @@ impl SimStats {
     /// Total pairs skipped by zero-vector elimination.
     pub fn skipped_pairs(&self) -> u64 {
         self.skipped_input + self.skipped_weight
+    }
+
+    /// Which resource bounds this layer: memory when the DRAM bus demands
+    /// more cycles than the arrays do. Always `Compute` under the ideal
+    /// memory model (transfer cycles are zero there).
+    pub fn bound(&self) -> MemBound {
+        if self.transfer_cycles > self.compute_cycles {
+            MemBound::Memory
+        } else {
+            MemBound::Compute
+        }
+    }
+
+    /// Cycles the arrays spent waiting on DRAM (0 under the ideal model).
+    pub fn mem_stall_cycles(&self) -> u64 {
+        self.cycles.saturating_sub(self.compute_cycles)
+    }
+
+    /// Fraction of total cycles the DRAM bus was busy (0 under the ideal
+    /// model; approaches 1 for memory-bound layers). Bounded by 1 because
+    /// the tiled model guarantees `cycles >= transfer_cycles`.
+    pub fn bw_utilization(&self) -> f64 {
+        if self.cycles == 0 {
+            0.0
+        } else {
+            self.transfer_cycles.min(self.cycles) as f64 / self.cycles as f64
+        }
     }
 
     /// PE issue-slot utilization: busy slots / (busy + sync stalls).
@@ -80,6 +145,14 @@ impl SimStats {
             .set("boundary_pairs", self.boundary_pairs)
             .set("macs", self.macs)
             .set("overhead_cycles", self.overhead_cycles)
+            .set("compute_cycles", self.compute_cycles)
+            .set("transfer_cycles", self.transfer_cycles)
+            .set("fill_cycles", self.fill_cycles)
+            .set("mem_stall_cycles", self.mem_stall_cycles())
+            .set("tiles", self.tiles)
+            .set("sram_overflows", self.sram_overflows)
+            .set("bound", self.bound().label())
+            .set("bw_utilization", self.bw_utilization())
             .set("utilization", self.utilization())
             .set("dram_total_bytes", self.dram.total())
             .set("sram_input_peak", self.sram_input_peak)
@@ -104,6 +177,11 @@ mod tests {
             boundary_pairs: 1,
             macs: 120,
             overhead_cycles: 2,
+            compute_cycles: 7,
+            transfer_cycles: 3,
+            fill_cycles: 1,
+            tiles: 2,
+            sram_overflows: 1,
             dram: DramTraffic {
                 input_read: 5,
                 ..Default::default()
@@ -119,6 +197,28 @@ mod tests {
         assert_eq!(t.macs, 240);
         assert_eq!(t.skipped_pairs(), 8);
         assert_eq!(t.dram.input_read, 10);
+        assert_eq!(t.compute_cycles, 14);
+        assert_eq!(t.transfer_cycles, 6);
+        assert_eq!(t.fill_cycles, 2);
+        assert_eq!(t.tiles, 4);
+        assert_eq!(t.sram_overflows, 2);
+        assert_eq!(t.mem_stall_cycles(), 6);
+    }
+
+    #[test]
+    fn bound_and_bw_utilization_classify() {
+        let mut s = SimStats::default();
+        assert_eq!(s.bound(), MemBound::Compute);
+        assert_eq!(s.bw_utilization(), 0.0);
+        s.cycles = 10;
+        s.compute_cycles = 8;
+        s.transfer_cycles = 4;
+        assert_eq!(s.bound(), MemBound::Compute);
+        assert!((s.bw_utilization() - 0.4).abs() < 1e-12);
+        s.transfer_cycles = 9;
+        assert_eq!(s.bound(), MemBound::Memory);
+        assert_eq!(MemBound::Memory.label(), "memory");
+        assert_eq!(MemBound::Compute.label(), "compute");
     }
 
     #[test]

@@ -199,11 +199,17 @@ fn zoo_networks_run_end_to_end_through_engine() {
 /// one input channel `[1,4,3]`, two filters. Every expected number below
 /// is derived by hand in the comments (and mirrored in the scheduler's
 /// `sync_stall_pinned_for_two_filter_group` unit test).
+///
+/// Runs under `MemModel::Ideal`: the pre-refactor scheduler had no memory
+/// model, so the ideal setting is by definition the path these pinned
+/// numbers must keep reproducing bit-for-bit (ISSUE 3 satellite; the
+/// tiled model's own pins live in tests/memory_model.rs).
 fn snapshot_layer() -> (Tensor, Tensor, SimConfig, ConvSpec) {
     let mut cfg = SimConfig::paper_4_14_3();
     cfg.pe.arrays = 2;
     cfg.pe.rows = 2;
     cfg.context_switch_cycles = 2;
+    cfg.mem_model = vscnn::sim::config::MemModel::Ideal;
     let spec = ConvSpec { stride: 1, pad: 1 };
     let mut input = Tensor::zeros(&[1, 4, 3]);
     *input.at3_mut(0, 0, 0) = 1.5; // strip 0, col 0
@@ -252,6 +258,13 @@ fn cycle_snapshot_pinned_small_layer() {
     assert_eq!(sparse.stats.skipped_input, 18);
     assert_eq!(sparse.stats.skipped_weight, 9);
     assert_eq!(sparse.stats.boundary_pairs, 2);
+    // Ideal memory model: zero transfer time, no tiles, compute == cycles
+    // (the pre-refactor accounting, bit-for-bit).
+    assert_eq!(sparse.stats.compute_cycles, sparse.stats.cycles);
+    assert_eq!(sparse.stats.transfer_cycles, 0);
+    assert_eq!(sparse.stats.fill_cycles, 0);
+    assert_eq!(sparse.stats.tiles, 0);
+    assert_eq!(sparse.stats.sram_overflows, 0);
 
     let dense = simulate_layer(
         &input,

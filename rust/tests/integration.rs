@@ -155,9 +155,14 @@ fn dense_mode_is_exact_dense_reference() {
 #[test]
 fn ideal_baselines_bracket_reality_on_vgg_slice() {
     // On a real VGG-16 slice: ours <= ideal_vector <= ideal_fine.
+    // Pure-compute comparison: the analytic (unfloored) ideal machines
+    // bracket the compute cycle model, so this runs under MemModel::Ideal
+    // (the tiled bracketing with transfer floors is covered by
+    // engine::execute tests and tests/memory_model.rs).
     let ctx = tiny_ctx();
     let (coord, images, _) = experiments::workload::prepare(&ctx).unwrap();
-    let opts = RunOptions::new(SimConfig::paper_8_7_3());
+    let mut opts = RunOptions::new(SimConfig::paper_8_7_3());
+    opts.sim.mem_model = vscnn::sim::config::MemModel::Ideal;
     let report = coord.run(&images[0], &opts).unwrap();
     for l in &report.layers {
         let rep = l.density;

@@ -1,0 +1,200 @@
+//! Tiled memory-model suite (ISSUE 3): property tests for the
+//! tile/double-buffer cycle accounting across random layer geometries,
+//! plus the pin that `MemModel::Ideal` reproduces the pre-refactor
+//! (pure-compute) scheduler output bit-for-bit.
+
+use vscnn::sim::config::{MemModel, SimConfig};
+use vscnn::sim::mapping::simulate_layer_any;
+use vscnn::sim::scheduler::{simulate_layer, Mode};
+use vscnn::sim::stats::MemBound;
+use vscnn::sim::trace::Trace;
+use vscnn::tensor::conv::ConvSpec;
+use vscnn::tensor::Tensor;
+use vscnn::util::rng::Pcg32;
+
+fn random_sparse(rng: &mut Pcg32, shape: &[usize], density: f32) -> Tensor {
+    let n: usize = shape.iter().product();
+    Tensor::from_vec(
+        shape,
+        (0..n)
+            .map(|_| {
+                if density > 0.0 && rng.bernoulli(density) {
+                    rng.normal()
+                } else {
+                    0.0
+                }
+            })
+            .collect(),
+    )
+}
+
+/// Property (ISSUE 3 satellite): across random layer shapes, kernels and
+/// strides, tiled cycles >= max(compute lower bound, transfer lower
+/// bound), the dense baseline carries the same floor, and the sparse flow
+/// never loses to dense.
+#[test]
+fn tiled_cycles_dominate_compute_and_transfer_lower_bounds() {
+    let mut rng = Pcg32::seeded(0x713D);
+    let kernels: [(usize, usize, usize); 4] = [(3, 1, 1), (1, 1, 0), (5, 1, 2), (3, 2, 1)];
+    for case in 0..16 {
+        let (k, stride, pad) = kernels[case % kernels.len()];
+        let c_in = rng.range(1, 4);
+        let k_out = rng.range(1, 7);
+        let hw = rng.range(6, 16);
+        let spec = ConvSpec { stride, pad };
+        let input = random_sparse(&mut rng, &[c_in, hw, hw], 0.5);
+        let weight = random_sparse(&mut rng, &[k_out, c_in, k, k], 0.5);
+
+        let mut icfg = SimConfig::paper_4_14_3();
+        icfg.pe.arrays = rng.range(1, 4);
+        icfg.pe.rows = rng.range(2, 7);
+        icfg.mem_model = MemModel::Ideal;
+        let mut tcfg = icfg;
+        tcfg.mem_model = MemModel::Tiled;
+        // Starve SRAM and bandwidth so the memory terms actually bind.
+        tcfg.sram.input_bytes = rng.range(64, 1024);
+        tcfg.sram.weight_bytes = rng.range(64, 1024);
+        tcfg.dram_bytes_per_cycle = [0.5f64, 1.0, 4.0][case % 3];
+
+        let mut tr = Trace::disabled();
+        let ideal = simulate_layer_any(
+            &input,
+            &weight,
+            None,
+            &icfg,
+            spec,
+            Mode::VectorSparse,
+            false,
+            &mut tr,
+        );
+        let tiled = simulate_layer_any(
+            &input,
+            &weight,
+            None,
+            &tcfg,
+            spec,
+            Mode::VectorSparse,
+            false,
+            &mut tr,
+        );
+        let t = &tiled.stats;
+        // cycles >= max(compute, transfer); compute >= the ideal
+        // (group-synced, zero-memory) count.
+        assert!(t.cycles >= t.compute_cycles, "case {case}");
+        assert!(t.cycles >= t.transfer_cycles, "case {case}");
+        assert!(t.compute_cycles >= ideal.stats.cycles, "case {case}");
+        assert!(t.tiles > 0, "case {case}");
+        assert!(t.fill_cycles <= t.transfer_cycles, "case {case}");
+        assert!(t.bw_utilization() <= 1.0 + 1e-12, "case {case}");
+
+        // Same memory floor on the dense denominator, and the sparse flow
+        // (compressed traffic + raw-format escape) never loses to dense.
+        assert!(tiled.dense_cycles >= ideal.dense_cycles, "case {case}");
+        let dense = simulate_layer_any(
+            &input,
+            &weight,
+            None,
+            &tcfg,
+            spec,
+            Mode::Dense,
+            false,
+            &mut tr,
+        );
+        assert_eq!(dense.stats.cycles, dense.dense_cycles, "case {case}");
+        assert!(t.cycles <= dense.stats.cycles, "case {case}");
+    }
+}
+
+/// Pin: `MemModel::Ideal` reproduces the pre-refactor scheduler output
+/// bit-for-bit — the hand-computed `[B=2, R=2, C=3]` snapshot (see
+/// tests/equivalence.rs for the derivation) with every memory counter
+/// zero.
+#[test]
+fn ideal_model_is_bit_identical_to_pre_refactor_scheduler() {
+    let mut cfg = SimConfig::paper_4_14_3();
+    cfg.pe.arrays = 2;
+    cfg.pe.rows = 2;
+    cfg.context_switch_cycles = 2;
+    cfg.mem_model = MemModel::Ideal;
+    let spec = ConvSpec { stride: 1, pad: 1 };
+    let mut input = Tensor::zeros(&[1, 4, 3]);
+    *input.at3_mut(0, 0, 0) = 1.5;
+    *input.at3_mut(0, 1, 2) = -2.0;
+    *input.at3_mut(0, 3, 1) = 0.5;
+    let mut weight = Tensor::zeros(&[2, 1, 3, 3]);
+    *weight.at4_mut(0, 0, 0, 0) = 1.0;
+    *weight.at4_mut(0, 0, 1, 1) = -1.0;
+    *weight.at4_mut(1, 0, 2, 2) = 2.0;
+
+    let mut tr = Trace::disabled();
+    let res = simulate_layer(
+        &input,
+        &weight,
+        None,
+        &cfg,
+        spec,
+        Mode::VectorSparse,
+        false,
+        &mut tr,
+    );
+    // The pre-refactor cycle model, unchanged.
+    assert_eq!(res.stats.cycles, 10);
+    assert_eq!(res.dense_cycles, 22);
+    assert_eq!(res.stats.sync_stall_slots, 3);
+    assert_eq!(res.stats.overhead_cycles, 4);
+    assert_eq!(res.stats.issued_pairs, 9);
+    // The memory side stays inert under Ideal.
+    assert_eq!(res.stats.compute_cycles, 10);
+    assert_eq!(res.stats.transfer_cycles, 0);
+    assert_eq!(res.stats.fill_cycles, 0);
+    assert_eq!(res.stats.tiles, 0);
+    assert_eq!(res.stats.sram_overflows, 0);
+    assert_eq!(res.stats.mem_stall_cycles(), 0);
+    assert_eq!(res.stats.bound(), MemBound::Compute);
+    assert_eq!(res.stats.bw_utilization(), 0.0);
+}
+
+/// A bandwidth-starved layer classifies as memory-bound with cycles
+/// pinned near its transfer demand; a bandwidth-rich one is
+/// compute-bound with cycles near the ideal count.
+#[test]
+fn bound_classification_follows_the_roofline() {
+    let mut rng = Pcg32::seeded(0xB0D1);
+    let input = random_sparse(&mut rng, &[4, 16, 12], 0.6);
+    let weight = random_sparse(&mut rng, &[8, 4, 3, 3], 0.6);
+    let spec = ConvSpec { stride: 1, pad: 1 };
+
+    let mut slow = SimConfig::paper_4_14_3();
+    slow.pe.arrays = 2;
+    slow.pe.rows = 4;
+    slow.dram_bytes_per_cycle = 0.05;
+    let mut tr = Trace::disabled();
+    let starved = simulate_layer(
+        &input,
+        &weight,
+        None,
+        &slow,
+        spec,
+        Mode::VectorSparse,
+        false,
+        &mut tr,
+    );
+    assert_eq!(starved.stats.bound(), MemBound::Memory);
+    assert!(starved.stats.mem_stall_cycles() > 0);
+    assert!(starved.stats.bw_utilization() > 0.5);
+
+    let mut fast = slow;
+    fast.dram_bytes_per_cycle = 1e6;
+    let rich = simulate_layer(
+        &input,
+        &weight,
+        None,
+        &fast,
+        spec,
+        Mode::VectorSparse,
+        false,
+        &mut tr,
+    );
+    assert_eq!(rich.stats.bound(), MemBound::Compute);
+    assert!(rich.stats.cycles < starved.stats.cycles);
+}
