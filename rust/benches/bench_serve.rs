@@ -1,0 +1,96 @@
+//! Serving-simulator bench: event-loop throughput (simulated requests/s
+//! of wall time) across load levels and policies, plus the one-time
+//! profiling cost, written to `BENCH_serve_perf.json` so the serving hot
+//! path stays measurable across PRs (the *capacity* numbers live in
+//! `BENCH_serve.json`, emitted by `vscnn exp serve`).
+//! Run: `cargo bench --bench bench_serve`.
+//!
+//! Env `VSCNN_BENCH_RES` overrides the profiling resolution (default 32:
+//! the event loop, not the engine, is under test here).
+
+use std::time::Instant;
+use vscnn::serve::{
+    build_profiles, default_fleet, default_mix, simulate, BatchPolicy, DispatchPolicy,
+    ServeSpec, ServiceProfile, TrafficModel,
+};
+use vscnn::util::bench::{bench, black_box, write_results, BenchResult};
+use vscnn::util::json::Json;
+
+fn spec_at(rps: f64, policy: DispatchPolicy, max_batch: usize) -> ServeSpec {
+    ServeSpec {
+        tenants: default_mix(32),
+        instances: default_fleet(4),
+        traffic: TrafficModel::OpenLoop { rps },
+        policy,
+        batch: BatchPolicy {
+            max_batch,
+            max_wait_cycles: 250_000,
+        },
+        queue_cap: 32,
+        duration_cycles: 2_000_000_000, // 4 simulated seconds at 500 MHz
+        clock_mhz: 500.0,
+        seed: 7,
+    }
+}
+
+fn main() {
+    let res: usize = std::env::var("VSCNN_BENCH_RES")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(32);
+    let threads = std::thread::available_parallelism().map_or(4, |n| n.get());
+
+    let mut results: Vec<BenchResult> = Vec::new();
+    let mut derived = Json::obj();
+    derived.set("threads", threads).set("res", res);
+
+    // One-time profiling cost (engine-backed; dominated by the compile of
+    // the three mix networks on a cold cache, cache hits afterwards).
+    let mut spec = spec_at(1_000.0, DispatchPolicy::NetworkAffinity, 8);
+    spec.tenants = default_mix(res);
+    let t0 = Instant::now();
+    let profiles = build_profiles(&spec, threads).expect("profiling");
+    derived.set("profile_cold_ms", t0.elapsed().as_secs_f64() * 1e3);
+    let t1 = Instant::now();
+    let _ = build_profiles(&spec, threads).expect("profiling (warm)");
+    derived.set("profile_warm_ms", t1.elapsed().as_secs_f64() * 1e3);
+
+    // Event-loop throughput on synthetic profiles: independent of the
+    // engine, scales with offered load.
+    let toy = ServiceProfile {
+        single_cycles: 900_000,
+        marginal_cycles: 550_000,
+        switch_cycles: 350_000,
+    };
+    let toy_profiles = vec![vec![toy; 4]; 3];
+    for (label, rps, policy, max_batch) in [
+        ("light/rr", 500.0, DispatchPolicy::RoundRobin, 1),
+        ("heavy/rr", 8_000.0, DispatchPolicy::RoundRobin, 1),
+        ("heavy/affinity-batch", 8_000.0, DispatchPolicy::NetworkAffinity, 8),
+    ] {
+        let spec = spec_at(rps, policy, max_batch);
+        let mut offered = 0u64;
+        let r = bench(&format!("serve-sim/{label}"), 1, 5, || {
+            let out = simulate(&spec, &toy_profiles);
+            offered = out.offered;
+            black_box(out.completed);
+        });
+        println!("{}", r.line());
+        println!("{}", r.throughput(offered as f64, "req"));
+        results.push(r);
+    }
+
+    // And one engine-profiled run, end to end.
+    let r = bench("serve-sim/engine-profiles", 1, 3, || {
+        let out = simulate(&spec, &profiles);
+        black_box(out.completed);
+    });
+    println!("{}", r.line());
+    results.push(r);
+
+    let path = "BENCH_serve_perf.json";
+    match write_results(path, &results, derived) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
+}

@@ -2,7 +2,7 @@
 //! DESIGN.md §9). Subcommand + `--key value` flags, with typed accessors.
 
 use anyhow::{anyhow, bail, Result};
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, BTreeSet};
 
 /// Parsed command line: `vscnn <command> [args...] [--flag value]...`.
 #[derive(Debug, Clone, Default)]
@@ -12,6 +12,10 @@ pub struct Cli {
     pub positional: Vec<String>,
     /// `--key value` and boolean `--key` flags.
     flags: BTreeMap<String, String>,
+    /// Flags given with no value (trailing `--flag` or `--flag --other`).
+    /// Valid as booleans; asking for their *value* is a clean error
+    /// instead of a confusing `cannot parse 'true'`.
+    bare: BTreeSet<String>,
 }
 
 impl Cli {
@@ -26,11 +30,13 @@ impl Cli {
                 }
                 if let Some((k, v)) = name.split_once('=') {
                     cli.flags.insert(k.to_string(), v.to_string());
-                } else if it.peek().is_some_and(|n| !n.starts_with("--")) {
-                    let v = it.next().unwrap();
+                } else if let Some(v) = it.next_if(|n| !n.starts_with("--")) {
                     cli.flags.insert(name.to_string(), v);
                 } else {
-                    // Boolean flag.
+                    // Boolean flag (also reached when a value-taking flag
+                    // is the last argument — remembered so the typed
+                    // accessors can report it properly).
+                    cli.bare.insert(name.to_string());
                     cli.flags.insert(name.to_string(), "true".to_string());
                 }
             } else if cli.command.is_empty() {
@@ -47,6 +53,20 @@ impl Cli {
         self.flags.get(key).map(|s| s.as_str())
     }
 
+    /// String flag that *requires* a value: `Ok(None)` when absent, an
+    /// error when the flag was given bare (`vscnn serve --out`) — so a
+    /// trailing value flag can't be mistaken for the literal string
+    /// `"true"`.
+    pub fn get_value(&self, key: &str) -> Result<Option<&str>> {
+        match self.flags.get(key) {
+            None => Ok(None),
+            Some(_) if self.bare.contains(key) => {
+                Err(anyhow!("flag --{key} expects a value but none was given"))
+            }
+            Some(v) => Ok(Some(v.as_str())),
+        }
+    }
+
     /// Boolean flag (present, or `--key true/false`).
     pub fn get_bool(&self, key: &str) -> bool {
         matches!(self.get(key), Some("true") | Some("1") | Some("yes"))
@@ -56,6 +76,9 @@ impl Cli {
     pub fn get_num<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T> {
         match self.get(key) {
             None => Ok(default),
+            Some(_) if self.bare.contains(key) => {
+                Err(anyhow!("flag --{key} expects a value but none was given"))
+            }
             Some(v) => v
                 .parse()
                 .map_err(|_| anyhow!("flag --{key}: cannot parse '{v}'")),
@@ -115,5 +138,42 @@ mod tests {
     fn boolean_flag_at_end() {
         let cli = parse(&["run", "--verbose"]);
         assert!(cli.get_bool("verbose"));
+    }
+
+    #[test]
+    fn value_flag_at_end_errors_cleanly() {
+        // `vscnn simulate --res` — a value-taking flag as the last
+        // argument must produce a proper Err from the typed accessor
+        // (not a panic, and not "cannot parse 'true'").
+        let cli = parse(&["simulate", "--res"]);
+        assert!(cli.get_bool("res")); // still usable as a boolean
+        let err = cli.get_num::<usize>("res", 1).unwrap_err();
+        assert!(
+            err.to_string().contains("expects a value"),
+            "unexpected message: {err}"
+        );
+    }
+
+    #[test]
+    fn string_flag_at_end_errors_through_get_value() {
+        // `vscnn serve --out` must not write a file literally named
+        // "true": the value-requiring accessor reports it.
+        let cli = parse(&["serve", "--out"]);
+        let err = cli.get_value("out").unwrap_err();
+        assert!(err.to_string().contains("expects a value"));
+        assert_eq!(cli.get_value("missing").unwrap(), None);
+        let ok = parse(&["serve", "--out", "r.json"]);
+        assert_eq!(ok.get_value("out").unwrap(), Some("r.json"));
+    }
+
+    #[test]
+    fn value_flag_before_another_flag_errors_cleanly() {
+        let cli = parse(&["simulate", "--res", "--trace"]);
+        assert!(cli.get_bool("trace"));
+        let err = cli.get_num::<usize>("res", 1).unwrap_err();
+        assert!(err.to_string().contains("expects a value"));
+        // An explicit value is still parsed normally.
+        let ok = parse(&["simulate", "--res", "64", "--trace"]);
+        assert_eq!(ok.get_num::<usize>("res", 1).unwrap(), 64);
     }
 }

@@ -172,6 +172,18 @@ impl NetworkReport {
         }
     }
 
+    /// Cycles the DRAM bus spent streaming the compressed CVF weight
+    /// payloads of this run at `bytes_per_cycle` (index traffic, shared
+    /// with the input side, is left out — a conservative lower bound).
+    /// This is the portion of a run's memory traffic that does not depend
+    /// on the image — the part a serving batch amortizes by keeping
+    /// weights resident across same-network requests
+    /// ([`crate::serve::fleet::ServiceProfile`]), and the reload cost a
+    /// fleet instance pays when it switches networks.
+    pub fn weight_stream_cycles(&self, bytes_per_cycle: f64) -> u64 {
+        crate::sim::dram::cycles_for_bytes(self.totals.dram.weight_read, bytes_per_cycle)
+    }
+
     /// Fraction of conv layers classified memory-bound (0 under the ideal
     /// memory model).
     pub fn memory_bound_layer_frac(&self) -> f64 {
@@ -510,6 +522,19 @@ mod tests {
         assert!(j.get("roofline").unwrap().get("transfer_cycles").is_some());
         assert!(j.get("memory_bound_layer_frac").is_some());
         assert!(j.get("effective_bw_util").is_some());
+    }
+
+    #[test]
+    fn weight_stream_cycles_is_a_positive_fraction_of_traffic() {
+        let (p, img) = prepared(25);
+        let mut opts = small_opts();
+        opts.verify_dataflow = false;
+        let report = Engine::new(p).run_image(&img, &opts).unwrap();
+        let bw = opts.sim.dram_bytes_per_cycle;
+        let ws = report.weight_stream_cycles(bw);
+        assert!(ws > 0);
+        // Weight payloads are a strict subset of the total DRAM traffic.
+        assert!(ws <= report.totals.dram.transfer_cycles(bw));
     }
 
     #[test]

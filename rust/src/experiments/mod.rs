@@ -11,11 +11,13 @@
 //! | `fig13`   | per-layer + overall speedup, `[8,7,3]`             |
 //! | `headline`| 1.871x/1.93x + 92%/85% + 46.6%/47.1% summary       |
 //! | `scnn`    | §IV comparison against the SCNN-like model         |
+//! | `serve`   | fleet serving capacity curve (beyond the paper)    |
 //!
 //! Every experiment returns a [`Json`] document and a human-readable text
 //! block; the CLI writes both under `reports/`.
 
 pub mod density;
+pub mod serve;
 pub mod speedup;
 pub mod table1;
 pub mod workload;
@@ -77,7 +79,7 @@ impl Default for ExpContext {
 /// All experiment ids, in paper order.
 pub fn list() -> &'static [&'static str] {
     &[
-        "table1", "fig9", "fig10", "fig11", "fig12", "fig13", "headline", "scnn",
+        "table1", "fig9", "fig10", "fig11", "fig12", "fig13", "headline", "scnn", "serve",
     ]
 }
 
@@ -92,6 +94,7 @@ pub fn run(id: &str, ctx: &ExpContext) -> Result<ExpOutput> {
         "fig13" => speedup::run_fig(ctx, false),
         "headline" => speedup::run_headline(ctx),
         "scnn" => speedup::run_scnn(ctx),
+        "serve" => serve::run_serve(ctx),
         _ => bail!("unknown experiment '{id}'; known: {:?}", list()),
     }
 }
@@ -117,7 +120,9 @@ mod tests {
 
     #[test]
     fn list_covers_every_paper_artifact() {
-        // 1 table + 5 figures + 2 derived comparisons.
-        assert_eq!(list().len(), 8);
+        // 1 table + 5 figures + 2 derived comparisons + the serving
+        // capacity curve.
+        assert_eq!(list().len(), 9);
+        assert!(list().contains(&"serve"));
     }
 }

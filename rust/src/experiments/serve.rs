@@ -1,0 +1,270 @@
+//! `serve`: the serving capacity-curve experiment — offered load vs p99
+//! latency for a heterogeneous VSCNN fleet, with and without the serving
+//! optimizations.
+//!
+//! Two configurations sweep the same offered-load grid over the same
+//! profiled fleet:
+//!
+//! * **naive** — round-robin dispatch, no batching: every batch is one
+//!   request and most launches pay the network-switch weight reload.
+//! * **tuned** — network-affinity sharding + dynamic batching: instances
+//!   mostly re-serve their resident network, so the weight-side CVF
+//!   stream is amortized across batches.
+//!
+//! The emitted curve (`reports/serve.json` + `BENCH_serve.json`) shows
+//! where queueing sets in, where batching starts to win, and where the
+//! memory-bound knee from the tiled timing model (PR 3) appears — see
+//! EXPERIMENTS.md §Serving for a worked reading.
+
+use super::{ExpContext, ExpOutput};
+use crate::coordinator::report::ascii_table;
+use crate::serve::{
+    build_profiles, default_fleet, default_mix, simulate, BatchPolicy, DispatchPolicy,
+    ServeReport, ServeSpec, TrafficModel,
+};
+use crate::util::json::Json;
+use anyhow::Result;
+
+/// Offered load, as fractions of the estimated warm-batch capacity.
+const LOAD_FRACS: [f64; 6] = [0.25, 0.5, 0.75, 1.0, 1.25, 1.5];
+
+/// Expected arrivals per sweep point (sets the horizon per offered rate).
+const ARRIVALS_PER_POINT: f64 = 300.0;
+
+/// One sweep point: the same offered load under both configurations.
+struct CurvePoint {
+    offered_rps: f64,
+    naive: ServeReport,
+    tuned: ServeReport,
+}
+
+fn point_json(p: &CurvePoint) -> Json {
+    let side = |r: &ServeReport| {
+        let mut o = Json::obj();
+        o.set("throughput_rps", r.throughput_rps())
+            .set("p50_ms", r.latency.p50 / (r.clock_mhz * 1e3))
+            .set("p99_ms", r.p99_ms())
+            .set("completed", r.completed)
+            .set("rejected", r.rejected)
+            .set(
+                "mean_utilization",
+                if r.instances.is_empty() {
+                    0.0
+                } else {
+                    r.instances.iter().map(|i| i.utilization).sum::<f64>()
+                        / r.instances.len() as f64
+                },
+            );
+        o
+    };
+    let mut o = Json::obj();
+    o.set("offered_rps", p.offered_rps)
+        .set("naive", side(&p.naive))
+        .set("tuned", side(&p.tuned));
+    o
+}
+
+/// Run the `serve` experiment (see module docs).
+pub fn run_serve(ctx: &ExpContext) -> Result<ExpOutput> {
+    let tenants = default_mix(ctx.res);
+    let instances = default_fleet(4);
+    let base = ServeSpec {
+        tenants: tenants.clone(),
+        instances,
+        traffic: TrafficModel::OpenLoop { rps: 1.0 },
+        policy: DispatchPolicy::NetworkAffinity,
+        batch: BatchPolicy::none(),
+        queue_cap: 32,
+        duration_cycles: 1,
+        clock_mhz: 500.0,
+        seed: ctx.seed,
+    };
+    let profiles = build_profiles(&base, ctx.threads)?;
+
+    // Mix-weighted service means, for the capacity estimate and the batch
+    // wait window.
+    let wsum: f64 = tenants.iter().map(|t| t.weight).sum();
+    let mut capacity_rps = 0.0;
+    for i in 0..base.instances.len() {
+        let mean_marginal: f64 = tenants
+            .iter()
+            .enumerate()
+            .map(|(t, ten)| ten.weight / wsum * profiles[t][i].marginal_cycles as f64)
+            .sum();
+        capacity_rps += base.clock_hz() / mean_marginal.max(1.0);
+    }
+    let mut mean_single = 0.0;
+    for (t, ten) in tenants.iter().enumerate() {
+        let avg: f64 = profiles[t]
+            .iter()
+            .map(|p| p.single_cycles as f64)
+            .sum::<f64>()
+            / profiles[t].len() as f64;
+        mean_single += ten.weight / wsum * avg;
+    }
+    // Half a service time of slack: enough to coalesce under load, small
+    // against the queueing delays it is meant to beat.
+    let max_wait_cycles = ((mean_single / 2.0) as u64).max(1);
+
+    let mut curve: Vec<CurvePoint> = Vec::new();
+    for frac in LOAD_FRACS {
+        let rps = capacity_rps * frac;
+        let duration_cycles = (ARRIVALS_PER_POINT * base.clock_hz() / rps).ceil() as u64;
+
+        let mut naive = base.clone();
+        naive.traffic = TrafficModel::OpenLoop { rps };
+        naive.policy = DispatchPolicy::RoundRobin;
+        naive.batch = BatchPolicy::none();
+        naive.duration_cycles = duration_cycles;
+
+        let mut tuned = naive.clone();
+        tuned.policy = DispatchPolicy::NetworkAffinity;
+        tuned.batch = BatchPolicy {
+            max_batch: 8,
+            max_wait_cycles,
+        };
+
+        let naive_report = ServeReport::new(&naive, &simulate(&naive, &profiles));
+        let tuned_report = ServeReport::new(&tuned, &simulate(&tuned, &profiles));
+        curve.push(CurvePoint {
+            offered_rps: rps,
+            naive: naive_report,
+            tuned: tuned_report,
+        });
+    }
+
+    // Acceptance metric: at the highest offered load the tuned fleet must
+    // strictly beat the naive one on tail latency without losing
+    // throughput.
+    let high = curve.last().expect("non-empty sweep");
+    let wins_at_high_load = high.tuned.throughput_rps() >= high.naive.throughput_rps()
+        && high.tuned.p99_ms() < high.naive.p99_ms();
+
+    // Knee: first sweep point where the tuned p99 leaves the flat region
+    // (2x the lightest-load p99) — queueing has set in.
+    let base_p99 = curve[0].tuned.p99_ms();
+    let knee_rps = curve
+        .iter()
+        .find(|p| p.tuned.p99_ms() > 2.0 * base_p99)
+        .map(|p| p.offered_rps);
+
+    let mut json = Json::obj();
+    json.set(
+        "tenants",
+        Json::Arr(
+            tenants
+                .iter()
+                .map(|t| Json::Str(t.name.clone()))
+                .collect(),
+        ),
+    )
+    .set(
+        "fleet",
+        Json::Arr(
+            base.instances
+                .iter()
+                .map(|i| Json::Str(i.label()))
+                .collect(),
+        ),
+    )
+    .set("capacity_rps_estimate", capacity_rps)
+    .set("max_batch", 8usize)
+    .set("max_wait_cycles", max_wait_cycles)
+    .set("queue_cap", base.queue_cap)
+    .set("seed", base.seed)
+    .set("wins_at_high_load", wins_at_high_load)
+    .set("knee_rps", knee_rps.map_or(Json::Null, Json::Num))
+    .set(
+        "curve",
+        Json::Arr(curve.iter().map(point_json).collect()),
+    );
+
+    let rows: Vec<(String, Vec<(String, f64)>)> = curve
+        .iter()
+        .map(|p| {
+            (
+                format!("{:.0} rps", p.offered_rps),
+                vec![
+                    ("naive_p99_ms".to_string(), p.naive.p99_ms()),
+                    ("tuned_p99_ms".to_string(), p.tuned.p99_ms()),
+                    ("naive_rps".to_string(), p.naive.throughput_rps()),
+                    ("tuned_rps".to_string(), p.tuned.throughput_rps()),
+                    ("naive_rej".to_string(), p.naive.rejected as f64),
+                    ("tuned_rej".to_string(), p.tuned.rejected as f64),
+                ],
+            )
+        })
+        .collect();
+    let text = format!(
+        "Serving capacity curve — {} tenants on {} instances (est. capacity {:.0} rps)\n\
+         naive = round-robin, no batching | tuned = affinity + batch<=8 (wait {} cyc)\n{}\n\
+         high load: tuned p99 {:.3} ms vs naive {:.3} ms — affinity+batching {}\n",
+        tenants.len(),
+        base.instances.len(),
+        capacity_rps,
+        max_wait_cycles,
+        ascii_table(&rows),
+        high.tuned.p99_ms(),
+        high.naive.p99_ms(),
+        if wins_at_high_load { "wins" } else { "DOES NOT WIN" },
+    );
+
+    // Machine-readable trajectory next to the bench outputs.
+    let mut derived = Json::obj();
+    derived
+        .set("capacity_rps_estimate", capacity_rps)
+        .set("high_load_offered_rps", high.offered_rps)
+        .set("high_load_naive_p99_ms", high.naive.p99_ms())
+        .set("high_load_tuned_p99_ms", high.tuned.p99_ms())
+        .set("high_load_naive_rps", high.naive.throughput_rps())
+        .set("high_load_tuned_rps", high.tuned.throughput_rps())
+        .set("wins_at_high_load", wins_at_high_load)
+        .set("knee_rps", knee_rps.map_or(Json::Null, Json::Num));
+    let bench_path = "BENCH_serve.json";
+    if let Err(e) = crate::util::bench::write_results(bench_path, &[], derived) {
+        crate::log_warn!("could not write {bench_path}: {e}");
+    }
+
+    Ok(ExpOutput {
+        id: "serve".to_string(),
+        json,
+        text,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn capacity_curve_shows_tuned_winning_at_high_load() {
+        let ctx = ExpContext {
+            res: 32,
+            ..Default::default()
+        };
+        let out = run_serve(&ctx).unwrap();
+        assert_eq!(out.id, "serve");
+        let curve = out.json.get("curve").unwrap().as_arr().unwrap();
+        assert_eq!(curve.len(), LOAD_FRACS.len());
+        // The acceptance bit: affinity + batching strictly beats naive
+        // round-robin/no-batching at the top of the curve.
+        assert_eq!(
+            out.json.get("wins_at_high_load").unwrap().as_bool(),
+            Some(true)
+        );
+        let last = curve.last().unwrap();
+        let naive_p99 = last.get("naive").unwrap().get("p99_ms").unwrap().as_f64().unwrap();
+        let tuned_p99 = last.get("tuned").unwrap().get("p99_ms").unwrap().as_f64().unwrap();
+        assert!(tuned_p99 < naive_p99, "tuned {tuned_p99} !< naive {naive_p99}");
+        // Load points are increasing and positive.
+        let rps: Vec<f64> = curve
+            .iter()
+            .map(|p| p.get("offered_rps").unwrap().as_f64().unwrap())
+            .collect();
+        assert!(rps.windows(2).all(|w| w[0] < w[1]));
+        assert!(rps[0] > 0.0);
+        // Text renders the table and the verdict.
+        assert!(out.text.contains("tuned_p99_ms"));
+        assert!(out.text.contains("wins"));
+    }
+}

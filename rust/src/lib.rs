@@ -18,8 +18,9 @@
 //! Entry points: [`engine::compile`] + [`engine::Engine`] for the
 //! compile-once/execute-many path, [`coordinator::Coordinator`] for the
 //! one-shot construct-and-run shim, [`experiments`] for the paper's
-//! tables/figures, the `vscnn` binary for the CLI, and `examples/` for
-//! runnable scenarios.
+//! tables/figures, [`serve`] for the multi-accelerator serving simulator
+//! (traffic, batching, sharding, tail latency), the `vscnn` binary for
+//! the CLI, and `examples/` for runnable scenarios.
 
 pub mod baselines;
 pub mod cli;
@@ -29,6 +30,7 @@ pub mod experiments;
 pub mod model;
 pub mod pruning;
 pub mod runtime;
+pub mod serve;
 pub mod sim;
 pub mod sparse;
 pub mod tensor;

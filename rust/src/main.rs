@@ -7,6 +7,10 @@
 //!                    [--bias-shift X] [--threads N] [--mem-model ideal|tiled]
 //! vscnn simulate     [--config 4,14,3|8,7,3] [--net NAME] [--res N]
 //!                    [--density D] [--mem-model ideal|tiled] ...
+//! vscnn serve        [--rps N] [--duration-ms N] [--seed S] [--res N]
+//!                    [--net NAME] [--instances N] [--policy P]
+//!                    [--max-batch N] [--batch-wait-us N] [--queue-cap N]
+//!                    [--clients N] [--think-ms N] [--out FILE]
 //! vscnn runtime-info [--artifacts DIR]
 //! vscnn list
 //! ```
@@ -38,13 +42,19 @@ fn dispatch(cli: &Cli) -> Result<()> {
             Ok(())
         }
         "list" => {
+            println!("experiments:");
             for id in experiments::list() {
-                println!("{id}");
+                println!("  {id}");
+            }
+            println!("networks (--net):");
+            for name in vscnn::model::zoo::names() {
+                println!("  {name}");
             }
             Ok(())
         }
         "exp" => cmd_exp(cli),
         "simulate" => cmd_simulate(cli),
+        "serve" => cmd_serve(cli),
         "runtime-info" => cmd_runtime_info(cli),
         other => bail!("unknown command '{other}' (try `vscnn help`)"),
     }
@@ -56,31 +66,35 @@ fn print_help() {
          commands:\n\
          \x20 exp <id|all>    run a paper experiment ({})\n\
          \x20 simulate        one-off simulation of a pruned zoo network\n\
+         \x20 serve           serve a multi-tenant request mix on a fleet of accelerators\n\
          \x20 runtime-info    check the PJRT runtime + artifacts\n\
-         \x20 list            list experiment ids\n\n\
-         common flags: --net vgg16|alexnet|resnet10|mixed --res N (default 224)\n\
+         \x20 list            list experiment ids and zoo network names\n\n\
+         common flags: --net {} --res N (default 224)\n\
          \x20 --images N --seed S --bias-shift X --threads N --pjrt DIR --out DIR\n\
-         \x20 --mem-model ideal|tiled (tiled = SRAM/DRAM-aware cycle accounting, default)",
+         \x20 --mem-model ideal|tiled (tiled = SRAM/DRAM-aware cycle accounting, default)\n\
+         serve flags: --rps N --duration-ms N --instances N --policy round-robin|least-loaded|affinity\n\
+         \x20 --max-batch N --batch-wait-us N --queue-cap N --clients N --think-ms N --out FILE",
         vscnn::VERSION,
-        experiments::list().join(", ")
+        experiments::list().join(", "),
+        vscnn::model::zoo::names().join("|"),
     );
 }
 
 fn ctx_from(cli: &Cli) -> Result<ExpContext> {
     let default = ExpContext::default();
-    let mem_model = match cli.get("mem-model") {
+    let mem_model = match cli.get_value("mem-model")? {
         None => default.mem_model,
         Some(s) => vscnn::sim::config::MemModel::parse(s)
             .ok_or_else(|| anyhow::anyhow!("--mem-model must be 'ideal' or 'tiled', got '{s}'"))?,
     };
     Ok(ExpContext {
-        net: cli.get("net").unwrap_or(&default.net).to_string(),
+        net: cli.get_value("net")?.unwrap_or(&default.net).to_string(),
         res: cli.get_num("res", default.res)?,
         seed: cli.get_num("seed", default.seed)?,
         images: cli.get_num("images", default.images)?,
         bias_shift: cli.get_num("bias-shift", default.bias_shift)?,
         threads: cli.get_num("threads", default.threads)?,
-        artifacts_dir: cli.get("pjrt").map(|s| s.to_string()),
+        artifacts_dir: cli.get_value("pjrt")?.map(|s| s.to_string()),
         mem_model,
     })
 }
@@ -93,7 +107,7 @@ fn cmd_exp(cli: &Cli) -> Result<()> {
         bail!("usage: vscnn exp <id|all>; ids: {:?}", experiments::list());
     };
     let ctx = ctx_from(cli)?;
-    let out_dir = cli.get("out").unwrap_or("reports");
+    let out_dir = cli.get_value("out")?.unwrap_or("reports");
     std::fs::create_dir_all(out_dir).with_context(|| format!("creating {out_dir}"))?;
 
     let outputs = if id == "all" {
@@ -118,7 +132,7 @@ fn cmd_simulate(cli: &Cli) -> Result<()> {
         "mem-model",
     ])?;
     let ctx = ctx_from(cli)?;
-    let cfg = match cli.get("config").unwrap_or("8,7,3") {
+    let cfg = match cli.get_value("config")?.unwrap_or("8,7,3") {
         "4,14,3" => vscnn::sim::config::SimConfig::paper_4_14_3(),
         "8,7,3" => vscnn::sim::config::SimConfig::paper_8_7_3(),
         other => {
@@ -135,8 +149,9 @@ fn cmd_simulate(cli: &Cli) -> Result<()> {
         }
     };
 
-    let (coord, images, achieved) = if let Some(d) = cli.get("density") {
-        let density: f64 = d.parse().context("--density")?;
+    let (coord, images, achieved) = if let Some(d) = cli.get_value("density")? {
+        let density =
+            vscnn::pruning::sensitivity::checked_density(d.parse().context("--density")?)?;
         let net = vscnn::model::zoo::by_name(&ctx.net, ctx.res)?;
         let mut params =
             vscnn::model::init::synthetic_params(&net, ctx.seed, ctx.bias_shift);
@@ -176,9 +191,96 @@ fn cmd_simulate(cli: &Cli) -> Result<()> {
     Ok(())
 }
 
+fn cmd_serve(cli: &Cli) -> Result<()> {
+    cli.check_known(&[
+        "net",
+        "res",
+        "rps",
+        "duration-ms",
+        "seed",
+        "threads",
+        "instances",
+        "policy",
+        "max-batch",
+        "batch-wait-us",
+        "queue-cap",
+        "clients",
+        "think-ms",
+        "out",
+    ])?;
+    use vscnn::serve::{
+        build_profiles, default_fleet, default_mix, simulate, BatchPolicy, DispatchPolicy,
+        ServeReport, ServeSpec, Tenant, TrafficModel,
+    };
+
+    let defaults = ExpContext::default();
+    // Serving defaults favor quick turnarounds: the mix compiles three
+    // networks, so the default resolution is the smallest the full mix
+    // supports scaled up one notch (override with --res).
+    let res: usize = cli.get_num("res", 64)?;
+    let seed: u64 = cli.get_num("seed", defaults.seed)?;
+    let threads: usize = cli.get_num("threads", defaults.threads)?;
+    let rps: f64 = cli.get_num("rps", 200.0)?;
+    anyhow::ensure!(rps > 0.0, "--rps must be positive, got {rps}");
+    let duration_ms: f64 = cli.get_num("duration-ms", 100.0)?;
+    anyhow::ensure!(duration_ms > 0.0, "--duration-ms must be positive");
+    let instances: usize = cli.get_num("instances", 4)?;
+    let policy = DispatchPolicy::parse(cli.get_value("policy")?.unwrap_or("affinity"))?;
+    let max_batch: usize = cli.get_num("max-batch", 8)?;
+    anyhow::ensure!(max_batch >= 1, "--max-batch must be >= 1");
+    let batch_wait_us: f64 = cli.get_num("batch-wait-us", 100.0)?;
+    let queue_cap: usize = cli.get_num("queue-cap", 32)?;
+    let clients: usize = cli.get_num("clients", 0)?;
+    let think_ms: f64 = cli.get_num("think-ms", 1.0)?;
+
+    let clock_mhz = 500.0; // matches SimConfig::freq_mhz
+    let tenants = match cli.get_value("net")? {
+        Some(net) => vec![Tenant::new(net, res, 1.0)],
+        None => default_mix(res),
+    };
+    let traffic = if clients > 0 {
+        TrafficModel::ClosedLoop {
+            clients,
+            think_cycles: (think_ms * clock_mhz * 1e3) as u64,
+        }
+    } else {
+        TrafficModel::OpenLoop { rps }
+    };
+    let spec = ServeSpec {
+        tenants,
+        instances: default_fleet(instances),
+        traffic,
+        policy,
+        batch: BatchPolicy {
+            max_batch,
+            max_wait_cycles: ((batch_wait_us * clock_mhz) as u64).max(1),
+        },
+        queue_cap,
+        duration_cycles: ((duration_ms * clock_mhz * 1e3) as u64).max(1),
+        clock_mhz,
+        seed,
+    };
+
+    log_info!(
+        "profiling {} tenants on {} instances (compile cache shared)",
+        spec.tenants.len(),
+        spec.instances.len()
+    );
+    let profiles = build_profiles(&spec, threads)?;
+    let outcome = simulate(&spec, &profiles);
+    let report = ServeReport::new(&spec, &outcome);
+    print!("{}", report.text());
+    if let Some(path) = cli.get_value("out")? {
+        std::fs::write(path, report.to_json().pretty())
+            .with_context(|| format!("writing {path}"))?;
+        log_info!("wrote {path}");
+    }
+    Ok(())
+}
+
 fn cmd_runtime_info(cli: &Cli) -> Result<()> {
     cli.check_known(&["artifacts"])?;
-    let dir = cli.get("artifacts").unwrap_or("artifacts");
+    let dir = cli.get_value("artifacts")?.unwrap_or("artifacts");
     let rt = vscnn::runtime::Runtime::new(dir)?;
     println!("platform: {}", rt.platform());
     println!("artifacts ({}):", rt.manifest().artifacts.len());

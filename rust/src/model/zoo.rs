@@ -93,13 +93,19 @@ pub fn resnet10(res: usize) -> Network {
     stack(format!("resnet10-{res}"), res, convs, &[])
 }
 
+/// Every zoo network name accepted by [`by_name`] and the CLI `--net`
+/// flag (`vscnn list` and `--help` enumerate these).
+pub fn names() -> &'static [&'static str] {
+    &["vgg16", "alexnet", "resnet10", "mixed"]
+}
+
 /// Look up a zoo network by CLI name. Resolution constraints are surfaced
 /// as clean errors here (the builders themselves assert, as library API).
 pub fn by_name(name: &str, res: usize) -> Result<Network> {
     let multiple = match name {
         "vgg16" | "alexnet" => 32,
         "resnet10" | "mixed" => 16,
-        other => bail!("unknown network '{other}' (known: vgg16, alexnet, resnet10, mixed)"),
+        other => bail!("unknown network '{other}' (known: {})", names().join(", ")),
     };
     if res < multiple || res % multiple != 0 {
         bail!("--net {name} needs --res to be a multiple of {multiple} (got {res})");
@@ -195,6 +201,79 @@ mod tests {
         assert_eq!(shapes[1], [32, 16, 16]); // 7x7 s2 p3 stem halves
         let last = *shapes.last().unwrap();
         assert_eq!(last, [128, 4, 4]); // two more stride-2 halvings
+    }
+
+    #[test]
+    fn resnet10_shape_chain_halves_exactly_at_stride2() {
+        // The stride-2 *padded* convs (7x7 p3 stem, 3x3 p1 downsamplers)
+        // must halve the plane exactly at any supported resolution — the
+        // polyphase mapping depends on these geometries being clean.
+        for res in [32usize, 64, 224] {
+            let net = resnet10(res);
+            let shapes = net.activation_shapes();
+            // conv j sits at layer index 2j (conv/relu pairs, no pools).
+            let out_of = |j: usize| shapes[2 * j + 1];
+            assert_eq!(out_of(0), [32, res / 2, res / 2], "stem @{res}");
+            assert_eq!(out_of(1), [32, res / 2, res / 2], "3x3 s1 p1 keeps @{res}");
+            assert_eq!(out_of(3), [64, res / 4, res / 4], "down1 @{res}");
+            assert_eq!(out_of(5), [64, res / 4, res / 4], "1x1 proj keeps @{res}");
+            assert_eq!(out_of(6), [128, res / 8, res / 8], "down2 @{res}");
+            assert_eq!(*shapes.last().unwrap(), [128, res / 8, res / 8], "@{res}");
+        }
+    }
+
+    #[test]
+    fn alexnet_shape_chain_and_pool_placement_across_resolutions() {
+        for res in [32usize, 64, 224] {
+            let net = alexnet(res);
+            let shapes = net.activation_shapes();
+            // 11x11 stride-4 pad-2 stem: (res + 4 - 11)/4 + 1.
+            let stem = (res + 4 - 11) / 4 + 1;
+            assert_eq!(shapes[1], [64, stem, stem], "stem @{res}");
+            // Pools sit after conv1/conv2/conv5 only, in that order, and
+            // drop out (never panic) when the plane shrinks below 2.
+            let pools: Vec<&str> = net
+                .layers
+                .iter()
+                .filter(|l| matches!(l.kind, LayerKind::MaxPool2))
+                .map(|l| l.name.as_str())
+                .collect();
+            assert!(!pools.is_empty(), "@{res}");
+            assert_eq!(pools[0], "conv1_pool", "@{res}");
+            for p in &pools {
+                assert!(
+                    ["conv1_pool", "conv2_pool", "conv5_pool"].contains(p),
+                    "unexpected pool {p} @{res}"
+                );
+            }
+            if res == 224 {
+                assert_eq!(pools.len(), 3);
+                assert_eq!(*shapes.last().unwrap(), [256, 6, 6]);
+            }
+            // No conv layer ever sees an empty plane.
+            for (i, l) in net.layers.iter().enumerate() {
+                if matches!(l.kind, LayerKind::Conv { .. }) {
+                    assert!(
+                        shapes[i][1] >= 1 && shapes[i][2] >= 1,
+                        "{} sees {:?} @{res}",
+                        l.name,
+                        shapes[i]
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn zoo_builders_reject_unsupported_resolutions() {
+        // Library builders assert; the CLI path returns clean errors.
+        assert!(by_name("alexnet", 48).is_err()); // not a multiple of 32
+        assert!(by_name("resnet10", 24).is_err()); // not a multiple of 16
+        assert!(by_name("vgg16", 16).is_err()); // below the minimum
+        let err = by_name("lenet", 32).unwrap_err().to_string();
+        for n in names() {
+            assert!(err.contains(n), "error should list '{n}': {err}");
+        }
     }
 
     #[test]

@@ -68,6 +68,18 @@ pub fn paper_schedule(net: &Network) -> BTreeMap<String, f64> {
     schedule_for(net, &VGG16_PROFILE, PAPER_OVERALL_DENSITY)
 }
 
+/// Validate a user-supplied density target: pruning to `d` only makes
+/// sense for `d` in `(0.0, 1.0]` — anything else silently produces
+/// nonsense schedules (all-zero weights or no-op pruning reported as if
+/// it happened). The CLI `--density` flag goes through this.
+pub fn checked_density(d: f64) -> anyhow::Result<f64> {
+    anyhow::ensure!(
+        d.is_finite() && d > 0.0 && d <= 1.0,
+        "density must be in (0.0, 1.0], got {d}"
+    );
+    Ok(d)
+}
+
 /// A flat schedule (same density everywhere) for ablations.
 pub fn flat_schedule(net: &Network, density: f64) -> BTreeMap<String, f64> {
     net.conv_layer_names()
@@ -119,6 +131,16 @@ mod tests {
         // after self-normalizing scaling.
         for (_, d) in &sched {
             assert!((d - 0.4).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn checked_density_accepts_the_half_open_unit_interval() {
+        assert_eq!(checked_density(0.235).unwrap(), 0.235);
+        assert_eq!(checked_density(1.0).unwrap(), 1.0);
+        for bad in [0.0, -0.1, 1.0001, 17.0, f64::NAN, f64::INFINITY] {
+            let err = checked_density(bad).unwrap_err();
+            assert!(err.to_string().contains("density"), "{bad}: {err}");
         }
     }
 

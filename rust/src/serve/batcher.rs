@@ -1,0 +1,189 @@
+//! Dynamic batching: coalesce same-tenant requests so one weight-side
+//! CVF stream is amortized across the whole batch (PR 3's traffic model:
+//! weights stay resident in the weight SRAM while only activations stream
+//! per image).
+//!
+//! Classic size-or-deadline window: a batch launches as soon as
+//! `max_batch` same-tenant requests are queued, or when the oldest one
+//! has waited `max_wait_cycles` — whichever comes first. `max_batch = 1`
+//! degenerates to no batching (the naive baseline). Batches never mix
+//! tenants: a batch shares one set of weights by construction.
+
+use std::collections::VecDeque;
+
+/// Batching window parameters.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BatchPolicy {
+    /// Largest batch a single launch may take (>= 1; 1 = no batching).
+    pub max_batch: usize,
+    /// Longest a queued request may wait for its batch to fill before the
+    /// partial batch launches anyway.
+    pub max_wait_cycles: u64,
+}
+
+impl BatchPolicy {
+    /// No batching: every request launches alone, immediately.
+    pub fn none() -> BatchPolicy {
+        BatchPolicy {
+            max_batch: 1,
+            max_wait_cycles: 0,
+        }
+    }
+}
+
+/// One queued request.
+#[derive(Debug, Clone, Copy)]
+struct Pending {
+    req: usize,
+    arrival: u64,
+}
+
+/// Per-instance batching queues, one FIFO per tenant.
+#[derive(Debug)]
+pub struct Batcher {
+    policy: BatchPolicy,
+    queues: Vec<VecDeque<Pending>>,
+    queued: usize,
+}
+
+impl Batcher {
+    pub fn new(policy: BatchPolicy, tenants: usize) -> Batcher {
+        assert!(policy.max_batch >= 1, "max_batch must be >= 1");
+        Batcher {
+            policy,
+            queues: vec![VecDeque::new(); tenants],
+            queued: 0,
+        }
+    }
+
+    /// Total requests waiting across all tenant queues.
+    pub fn queued(&self) -> usize {
+        self.queued
+    }
+
+    /// Enqueue a request of `tenant` that arrived at `arrival`.
+    pub fn push(&mut self, tenant: usize, req: usize, arrival: u64) {
+        self.queues[tenant].push_back(Pending { req, arrival });
+        self.queued += 1;
+    }
+
+    /// The tenant whose queue is launchable at `now` — full to `max_batch`
+    /// or with its head past the wait window — preferring the oldest head
+    /// (ties: lowest tenant index). `None` if nothing is ready yet.
+    fn ready_tenant(&self, now: u64) -> Option<usize> {
+        let mut best: Option<(u64, usize)> = None;
+        for (t, q) in self.queues.iter().enumerate() {
+            let Some(head) = q.front() else { continue };
+            let full = q.len() >= self.policy.max_batch;
+            let expired = now >= head.arrival.saturating_add(self.policy.max_wait_cycles);
+            let better = match best {
+                None => true,
+                Some(b) => (head.arrival, t) < b,
+            };
+            if (full || expired) && better {
+                best = Some((head.arrival, t));
+            }
+        }
+        best.map(|(_, t)| t)
+    }
+
+    /// Pop a launchable batch at `now`: `(tenant, request ids)` in FIFO
+    /// order, at most `max_batch` long. `None` if no queue is ready.
+    pub fn take_ready(&mut self, now: u64) -> Option<(usize, Vec<usize>)> {
+        let tenant = self.ready_tenant(now)?;
+        let q = &mut self.queues[tenant];
+        let n = q.len().min(self.policy.max_batch);
+        let batch: Vec<usize> = q.drain(..n).map(|p| p.req).collect();
+        self.queued -= batch.len();
+        Some((tenant, batch))
+    }
+
+    /// Earliest cycle at which a currently-queued partial batch becomes
+    /// launchable by deadline (its head's arrival + wait window). `None`
+    /// when every queue is empty. If something is already launchable this
+    /// returns a cycle <= `now`.
+    pub fn next_deadline(&self) -> Option<u64> {
+        self.queues
+            .iter()
+            .filter_map(|q| q.front())
+            .map(|p| p.arrival.saturating_add(self.policy.max_wait_cycles))
+            .min()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn policy(max_batch: usize, wait: u64) -> BatchPolicy {
+        BatchPolicy {
+            max_batch,
+            max_wait_cycles: wait,
+        }
+    }
+
+    #[test]
+    fn full_batch_launches_immediately() {
+        let mut b = Batcher::new(policy(2, 1000), 2);
+        b.push(0, 10, 5);
+        assert_eq!(b.take_ready(5), None); // partial, window open
+        b.push(0, 11, 6);
+        let (t, reqs) = b.take_ready(6).unwrap();
+        assert_eq!((t, reqs), (0, vec![10, 11]));
+        assert_eq!(b.queued(), 0);
+    }
+
+    #[test]
+    fn deadline_launches_partial_batch() {
+        let mut b = Batcher::new(policy(4, 100), 1);
+        b.push(0, 1, 50);
+        assert_eq!(b.next_deadline(), Some(150));
+        assert_eq!(b.take_ready(149), None);
+        let (t, reqs) = b.take_ready(150).unwrap();
+        assert_eq!((t, reqs), (0, vec![1]));
+        assert_eq!(b.next_deadline(), None);
+    }
+
+    #[test]
+    fn no_batching_is_immediate_and_single() {
+        let mut b = Batcher::new(BatchPolicy::none(), 1);
+        b.push(0, 7, 0);
+        b.push(0, 8, 0);
+        assert_eq!(b.take_ready(0).unwrap().1, vec![7]);
+        assert_eq!(b.take_ready(0).unwrap().1, vec![8]);
+        assert_eq!(b.take_ready(0), None);
+    }
+
+    #[test]
+    fn oldest_head_wins_across_tenants() {
+        let mut b = Batcher::new(policy(1, 0), 3);
+        b.push(2, 20, 10);
+        b.push(0, 30, 20);
+        assert_eq!(b.take_ready(20).unwrap(), (2, vec![20]));
+        assert_eq!(b.take_ready(20).unwrap(), (0, vec![30]));
+    }
+
+    #[test]
+    fn batches_never_mix_tenants() {
+        let mut b = Batcher::new(policy(8, 0), 2);
+        b.push(0, 1, 0);
+        b.push(1, 2, 0);
+        b.push(0, 3, 0);
+        let (t, reqs) = b.take_ready(0).unwrap();
+        assert_eq!((t, reqs), (0, vec![1, 3]));
+        let (t, reqs) = b.take_ready(0).unwrap();
+        assert_eq!((t, reqs), (1, vec![2]));
+    }
+
+    #[test]
+    fn oversized_queue_drains_in_max_batch_chunks() {
+        let mut b = Batcher::new(policy(3, 0), 1);
+        for i in 0..7 {
+            b.push(0, i, 0);
+        }
+        assert_eq!(b.take_ready(0).unwrap().1.len(), 3);
+        assert_eq!(b.take_ready(0).unwrap().1.len(), 3);
+        assert_eq!(b.take_ready(0).unwrap().1.len(), 1);
+        assert_eq!(b.queued(), 0);
+    }
+}

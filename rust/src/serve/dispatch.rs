@@ -1,0 +1,223 @@
+//! Dispatch policies: which accelerator instance admits an arriving
+//! request.
+//!
+//! * **Round-robin** — the naive baseline: instances in rotation,
+//!   regardless of load or which network's weights they hold. Rejects if
+//!   the chosen instance is full (no second try), like a dumb L4 balancer.
+//! * **Least-loaded** — the instance with the smallest backlog (estimated
+//!   queued service cycles plus remaining busy time) that still has queue
+//!   space; ties break on the lowest index.
+//! * **Network-affinity** — each network is sharded onto a *home* subset
+//!   of instances, so an instance mostly re-serves the network whose
+//!   compiled weights ([`crate::engine::PreparedNetwork`], shared through
+//!   the compile cache) it already streamed — avoiding the weight-reload
+//!   switch penalty and giving the batcher same-tenant runs to coalesce.
+//!   Within the home set the least-loaded instance wins; if every home
+//!   queue is full the request spills to the global least-loaded instance
+//!   rather than being rejected outright.
+
+use anyhow::{bail, Result};
+
+/// A dispatcher's view of one instance at admission time.
+#[derive(Debug, Clone, Copy)]
+pub struct InstanceLoad {
+    /// Requests waiting in the instance's queues (all tenants).
+    pub queued: usize,
+    /// Estimated cycles to drain: queued marginal service + remaining busy.
+    pub backlog_cycles: u64,
+    /// Whether the instance can admit another request (queue cap).
+    pub has_space: bool,
+}
+
+/// Admission policy (see module docs).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DispatchPolicy {
+    RoundRobin,
+    LeastLoaded,
+    NetworkAffinity,
+}
+
+impl DispatchPolicy {
+    /// Parse a CLI flag value.
+    pub fn parse(s: &str) -> Result<DispatchPolicy> {
+        Ok(match s {
+            "round-robin" | "rr" => DispatchPolicy::RoundRobin,
+            "least-loaded" | "ll" => DispatchPolicy::LeastLoaded,
+            "affinity" | "network-affinity" => DispatchPolicy::NetworkAffinity,
+            other => bail!(
+                "unknown dispatch policy '{other}' \
+                 (known: round-robin, least-loaded, affinity)"
+            ),
+        })
+    }
+
+    /// Label used in reports and cache keys.
+    pub fn label(&self) -> &'static str {
+        match self {
+            DispatchPolicy::RoundRobin => "round-robin",
+            DispatchPolicy::LeastLoaded => "least-loaded",
+            DispatchPolicy::NetworkAffinity => "affinity",
+        }
+    }
+}
+
+/// Stateful dispatcher over a fixed fleet.
+#[derive(Debug)]
+pub struct Dispatcher {
+    policy: DispatchPolicy,
+    rr_cursor: usize,
+    /// Home instance set per network id (affinity policy only).
+    homes: Vec<Vec<usize>>,
+}
+
+impl Dispatcher {
+    /// `nets` is the number of distinct networks in the mix; `instances`
+    /// the fleet size. Affinity homes are a deterministic partition: net
+    /// `i` owns a contiguous run of `ceil(instances / nets)` instances
+    /// starting at `i * instances / nets` (wrapping), so every instance
+    /// serves at most a couple of networks and every network has a home.
+    pub fn new(policy: DispatchPolicy, nets: usize, instances: usize) -> Dispatcher {
+        assert!(instances > 0, "empty fleet");
+        let per_net = instances.div_ceil(nets.max(1)).max(1);
+        let homes = (0..nets)
+            .map(|i| {
+                let start = i * instances / nets.max(1);
+                (0..per_net).map(|j| (start + j) % instances).collect()
+            })
+            .collect();
+        Dispatcher {
+            policy,
+            rr_cursor: 0,
+            homes,
+        }
+    }
+
+    /// Home instances of a network (affinity sharding), for reports.
+    pub fn home_of(&self, net_id: usize) -> &[usize] {
+        &self.homes[net_id]
+    }
+
+    /// Pick the instance that admits a request of network `net_id`, or
+    /// `None` to reject. `loads` is indexed by instance.
+    pub fn choose(&mut self, net_id: usize, loads: &[InstanceLoad]) -> Option<usize> {
+        match self.policy {
+            DispatchPolicy::RoundRobin => {
+                let i = self.rr_cursor % loads.len();
+                self.rr_cursor = (self.rr_cursor + 1) % loads.len();
+                loads[i].has_space.then_some(i)
+            }
+            DispatchPolicy::LeastLoaded => least_loaded(loads, None),
+            DispatchPolicy::NetworkAffinity => {
+                least_loaded(loads, Some(&self.homes[net_id]))
+                    .or_else(|| least_loaded(loads, None))
+            }
+        }
+    }
+}
+
+/// Least-backlog instance with queue space, optionally restricted to a
+/// candidate subset. Ties break on the lowest instance index (candidate
+/// lists are built in ascending order by construction).
+fn least_loaded(loads: &[InstanceLoad], among: Option<&[usize]>) -> Option<usize> {
+    let mut best: Option<usize> = None;
+    let consider = |i: usize, best: &mut Option<usize>| {
+        if !loads[i].has_space {
+            return;
+        }
+        match *best {
+            None => *best = Some(i),
+            Some(b) => {
+                let (cur, old) = (loads[i], loads[b]);
+                if (cur.backlog_cycles, cur.queued, i) < (old.backlog_cycles, old.queued, b) {
+                    *best = Some(i);
+                }
+            }
+        }
+    };
+    match among {
+        Some(set) => {
+            for &i in set {
+                consider(i, &mut best);
+            }
+        }
+        None => {
+            for i in 0..loads.len() {
+                consider(i, &mut best);
+            }
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn load(backlog: u64, queued: usize, space: bool) -> InstanceLoad {
+        InstanceLoad {
+            queued,
+            backlog_cycles: backlog,
+            has_space: space,
+        }
+    }
+
+    #[test]
+    fn parse_and_label_round_trip() {
+        for (s, p) in [
+            ("round-robin", DispatchPolicy::RoundRobin),
+            ("least-loaded", DispatchPolicy::LeastLoaded),
+            ("affinity", DispatchPolicy::NetworkAffinity),
+        ] {
+            assert_eq!(DispatchPolicy::parse(s).unwrap(), p);
+            assert_eq!(DispatchPolicy::parse(p.label()).unwrap(), p);
+        }
+        assert!(DispatchPolicy::parse("bogus").is_err());
+    }
+
+    #[test]
+    fn round_robin_rotates_and_rejects_on_full() {
+        let mut d = Dispatcher::new(DispatchPolicy::RoundRobin, 2, 3);
+        let mut loads = vec![load(0, 0, true); 3];
+        assert_eq!(d.choose(0, &loads), Some(0));
+        assert_eq!(d.choose(1, &loads), Some(1));
+        assert_eq!(d.choose(0, &loads), Some(2));
+        assert_eq!(d.choose(0, &loads), Some(0));
+        loads[1].has_space = false;
+        // Naive: lands on the full instance and rejects, no retry.
+        assert_eq!(d.choose(0, &loads), None);
+    }
+
+    #[test]
+    fn least_loaded_prefers_smallest_backlog_with_space() {
+        let mut d = Dispatcher::new(DispatchPolicy::LeastLoaded, 2, 3);
+        let loads = vec![load(500, 2, true), load(100, 1, false), load(200, 1, true)];
+        assert_eq!(d.choose(0, &loads), Some(2));
+        let empty = vec![load(0, 0, false); 3];
+        assert_eq!(d.choose(0, &empty), None);
+    }
+
+    #[test]
+    fn affinity_homes_partition_and_spill() {
+        let mut d = Dispatcher::new(DispatchPolicy::NetworkAffinity, 3, 4);
+        // Every net has at least one home; homes are within range.
+        for net in 0..3 {
+            assert!(!d.home_of(net).is_empty());
+            assert!(d.home_of(net).iter().all(|&i| i < 4));
+        }
+        // Different nets prefer different instances when idle.
+        let loads = vec![load(0, 0, true); 4];
+        let picks: Vec<usize> = (0..3).map(|n| d.choose(n, &loads).unwrap()).collect();
+        assert!(picks.windows(2).any(|w| w[0] != w[1]), "picks {picks:?}");
+        // Home full -> spills to a non-home instance instead of rejecting.
+        let home = d.home_of(0).to_vec();
+        let mut loads = vec![load(0, 0, true); 4];
+        for &h in &home {
+            loads[h].has_space = false;
+        }
+        let spill = d.choose(0, &loads).unwrap();
+        assert!(!home.contains(&spill));
+        // Everything full -> reject.
+        let full = vec![load(0, 0, false); 4];
+        assert_eq!(d.choose(0, &full), None);
+    }
+}

@@ -1,0 +1,131 @@
+//! Deterministic discrete-event queue for the serving simulator.
+//!
+//! A binary min-heap keyed by `(cycle, seq)` where `seq` is a monotone
+//! insertion counter: two events scheduled for the same cycle pop in the
+//! order they were pushed, so the simulation is a pure function of the
+//! spec and seed — no iteration-order or wall-clock nondeterminism can
+//! leak in. Payloads need no ordering of their own.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+struct Entry<T> {
+    cycle: u64,
+    seq: u64,
+    payload: T,
+}
+
+// Manual impls: order by (cycle, seq) only — reversed so the std max-heap
+// pops the earliest event first.
+impl<T> PartialEq for Entry<T> {
+    fn eq(&self, other: &Self) -> bool {
+        self.cycle == other.cycle && self.seq == other.seq
+    }
+}
+impl<T> Eq for Entry<T> {}
+impl<T> PartialOrd for Entry<T> {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl<T> Ord for Entry<T> {
+    fn cmp(&self, other: &Self) -> Ordering {
+        (other.cycle, other.seq).cmp(&(self.cycle, self.seq))
+    }
+}
+
+/// Min-heap of `(cycle, payload)` events with deterministic FIFO
+/// tie-breaking at equal cycles.
+pub struct EventQueue<T> {
+    heap: BinaryHeap<Entry<T>>,
+    seq: u64,
+}
+
+impl<T> Default for EventQueue<T> {
+    fn default() -> Self {
+        EventQueue {
+            heap: BinaryHeap::new(),
+            seq: 0,
+        }
+    }
+}
+
+impl<T> EventQueue<T> {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Schedule `payload` at `cycle`. Events at the same cycle pop in push
+    /// order.
+    pub fn push(&mut self, cycle: u64, payload: T) {
+        let seq = self.seq;
+        self.seq += 1;
+        self.heap.push(Entry {
+            cycle,
+            seq,
+            payload,
+        });
+    }
+
+    /// Pop the earliest event as `(cycle, payload)`.
+    pub fn pop(&mut self) -> Option<(u64, T)> {
+        self.heap.pop().map(|e| (e.cycle, e.payload))
+    }
+
+    /// Cycle of the earliest pending event.
+    pub fn peek_cycle(&self) -> Option<u64> {
+        self.heap.peek().map(|e| e.cycle)
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pops_in_cycle_order() {
+        let mut q = EventQueue::new();
+        q.push(30, "c");
+        q.push(10, "a");
+        q.push(20, "b");
+        assert_eq!(q.peek_cycle(), Some(10));
+        assert_eq!(q.pop(), Some((10, "a")));
+        assert_eq!(q.pop(), Some((20, "b")));
+        assert_eq!(q.pop(), Some((30, "c")));
+        assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn equal_cycles_pop_fifo() {
+        let mut q = EventQueue::new();
+        for i in 0..100usize {
+            q.push(7, i);
+        }
+        for i in 0..100usize {
+            assert_eq!(q.pop(), Some((7, i)));
+        }
+    }
+
+    #[test]
+    fn interleaved_push_pop_stays_ordered() {
+        let mut q = EventQueue::new();
+        q.push(5, 0usize);
+        q.push(1, 1);
+        assert_eq!(q.pop(), Some((1, 1)));
+        q.push(3, 2);
+        q.push(3, 3);
+        assert_eq!(q.pop(), Some((3, 2)));
+        assert_eq!(q.pop(), Some((3, 3)));
+        assert_eq!(q.pop(), Some((5, 0)));
+        assert!(q.is_empty());
+        assert_eq!(q.len(), 0);
+    }
+}

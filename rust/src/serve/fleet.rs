@@ -1,0 +1,736 @@
+//! The fleet simulator: a heterogeneous set of VSCNN accelerator
+//! instances driven by a request stream through dispatch and batching.
+//!
+//! ## Service model
+//!
+//! Serving is simulated in the *cycle domain* on top of the engine's
+//! memory-aware timing (PR 3). Each `(tenant, instance-config)` pair is
+//! profiled **once** by actually compiling the tenant's network (through
+//! the shared compile cache of [`crate::experiments::workload::prepared`])
+//! and running one synthetic image through [`crate::engine::Engine`]; the
+//! resulting [`ServiceProfile`] decomposes the measured cycle count into:
+//!
+//! * `single_cycles` — the full engine cycles for one image, weight
+//!   streaming included. The latency floor: no served request can beat it.
+//! * `marginal_cycles` — the cost of one *additional* image in a warm
+//!   batch: `max(compute_cycles, single - weight_stream)`. With weights
+//!   resident in the weight SRAM only activations stream per image, but
+//!   the PE arrays still do all the compute.
+//! * `switch_cycles` — the weight-side DRAM stream charged when an
+//!   instance picks up a batch of a *different* network than the one it
+//!   last served (the compiled CVF weights must be re-streamed).
+//!
+//! A batch of `n` same-tenant requests therefore costs
+//! `switch? + single + (n-1) * marginal` cycles — batching strictly
+//! amortizes the weight side, never the compute side. Under
+//! [`MemModel::Ideal`] transfer is free, so `marginal = single` and
+//! `switch = 0` (nothing to amortize, nothing to reload).
+//!
+//! ## Determinism
+//!
+//! The event loop is single-threaded and totally ordered by
+//! [`super::events::EventQueue`]; all randomness comes from seeded
+//! [`Pcg32`] streams; engine cycle counts are thread-count-invariant.
+//! A `(spec, seed)` pair therefore produces a bit-identical
+//! [`super::report::ServeReport`] regardless of the host thread budget —
+//! pinned by `tests/serve.rs`.
+
+use super::batcher::{BatchPolicy, Batcher};
+use super::dispatch::{DispatchPolicy, Dispatcher, InstanceLoad};
+use super::events::EventQueue;
+use super::traffic::{exp_interarrival, RequestMix, Tenant, TrafficModel};
+use crate::engine::{Engine, FunctionalBackend, NetworkReport, RunOptions};
+use crate::experiments::ExpContext;
+use crate::model::init::synthetic_image;
+use crate::sim::config::{MemModel, SimConfig};
+use crate::util::rng::Pcg32;
+use anyhow::Result;
+use std::collections::BTreeMap;
+use std::sync::{Mutex, OnceLock};
+
+/// One accelerator instance in the fleet: a PE geometry + memory model.
+#[derive(Debug, Clone, Copy)]
+pub struct InstanceSpec {
+    pub config: SimConfig,
+}
+
+impl InstanceSpec {
+    /// Label used in reports, e.g. `[8,7,3]/tiled`.
+    pub fn label(&self) -> String {
+        format!("{}/{}", self.config.pe.label(), self.config.mem_model.label())
+    }
+}
+
+/// The default heterogeneous fleet: both paper geometries under the tiled
+/// (memory-aware) model plus one of each under the ideal model, repeated
+/// cyclically to `n` instances.
+pub fn default_fleet(n: usize) -> Vec<InstanceSpec> {
+    let mut templates = vec![
+        SimConfig::paper_4_14_3(),
+        SimConfig::paper_8_7_3(),
+        SimConfig::paper_4_14_3(),
+        SimConfig::paper_8_7_3(),
+    ];
+    templates[2].mem_model = MemModel::Ideal;
+    templates[3].mem_model = MemModel::Ideal;
+    (0..n.max(1))
+        .map(|i| InstanceSpec {
+            config: templates[i % templates.len()],
+        })
+        .collect()
+}
+
+/// Full serving scenario specification.
+#[derive(Debug, Clone)]
+pub struct ServeSpec {
+    pub tenants: Vec<Tenant>,
+    pub instances: Vec<InstanceSpec>,
+    pub traffic: TrafficModel,
+    pub policy: DispatchPolicy,
+    pub batch: BatchPolicy,
+    /// Per-instance queue capacity; arrivals beyond it are rejected.
+    pub queue_cap: usize,
+    /// Simulated horizon in cycles: arrivals stop here and events past it
+    /// are not executed (late completions stay in flight).
+    pub duration_cycles: u64,
+    /// Serving clock in MHz (converts rps and latency to the cycle
+    /// domain; matches `SimConfig::freq_mhz` by default).
+    pub clock_mhz: f64,
+    pub seed: u64,
+}
+
+impl ServeSpec {
+    /// Cycles per second of the serving clock.
+    pub fn clock_hz(&self) -> f64 {
+        self.clock_mhz * 1e6
+    }
+
+    /// Convert a cycle count to milliseconds under the serving clock.
+    pub fn cycles_to_ms(&self, cycles: u64) -> f64 {
+        cycles as f64 / (self.clock_mhz * 1e3)
+    }
+}
+
+/// Cycle-domain service profile of one tenant on one instance config
+/// (see module docs).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ServiceProfile {
+    pub single_cycles: u64,
+    pub marginal_cycles: u64,
+    pub switch_cycles: u64,
+}
+
+/// Profile one tenant on one instance configuration: compile through the
+/// shared workload cache, run one synthetic image, decompose the cycles.
+/// Results are memoized per `(net, res, seed, config)` process-wide, so a
+/// capacity sweep re-profiles nothing.
+pub fn service_profile(
+    tenant: &Tenant,
+    cfg: &SimConfig,
+    seed: u64,
+    threads: usize,
+) -> Result<ServiceProfile> {
+    static CACHE: OnceLock<Mutex<BTreeMap<String, ServiceProfile>>> = OnceLock::new();
+    // Every cycle-affecting config field takes part in the key (freq_mhz
+    // is reporting-only and threads never change cycle counts).
+    let key = format!(
+        "{} res{} seed{} {} mem:{} bw{} cs{} sram{}/{}/{}/{}/{}",
+        tenant.net,
+        tenant.res,
+        seed,
+        cfg.pe.label(),
+        cfg.mem_model.label(),
+        cfg.dram_bytes_per_cycle,
+        cfg.context_switch_cycles,
+        cfg.sram.input_bytes,
+        cfg.sram.weight_bytes,
+        cfg.sram.psum_bytes,
+        cfg.sram.output_bytes,
+        cfg.sram.bytes_per_elem,
+    );
+    let cache = CACHE.get_or_init(|| Mutex::new(BTreeMap::new()));
+    if let Some(hit) = cache.lock().unwrap().get(&key) {
+        return Ok(*hit);
+    }
+
+    let ctx = ExpContext {
+        net: tenant.net.clone(),
+        res: tenant.res,
+        images: 1,
+        threads,
+        mem_model: cfg.mem_model,
+        seed,
+        ..ExpContext::default()
+    };
+    let prepared = crate::experiments::workload::prepared(&ctx)?;
+    let img = synthetic_image(prepared.net.input_shape, seed ^ 0x5EA7);
+    let mut sim = *cfg;
+    sim.threads = threads;
+    let opts = RunOptions {
+        sim,
+        backend: FunctionalBackend::Im2colMt(threads.max(1)),
+        verify_dataflow: false,
+    };
+    let report = Engine::new(prepared).run_image(&img, &opts)?;
+    let profile = profile_from_report(&report, cfg);
+    cache.lock().unwrap().insert(key, profile);
+    Ok(profile)
+}
+
+/// Decompose one engine run into a cycle-domain service profile — the
+/// cache-free core of [`service_profile`] (exposed so tests can profile
+/// with explicit thread budgets past the memoizer).
+pub fn profile_from_report(report: &NetworkReport, cfg: &SimConfig) -> ServiceProfile {
+    let single = report.totals.cycles.max(1);
+    match cfg.mem_model {
+        // Ideal memory: weights move for free, so there is nothing to
+        // amortize across a batch and nothing to reload on a switch.
+        MemModel::Ideal => ServiceProfile {
+            single_cycles: single,
+            marginal_cycles: single,
+            switch_cycles: 0,
+        },
+        MemModel::Tiled => {
+            let weight_stream = report.weight_stream_cycles(cfg.dram_bytes_per_cycle);
+            let marginal = report
+                .totals
+                .compute_cycles
+                .max(single.saturating_sub(weight_stream))
+                .clamp(1, single);
+            ServiceProfile {
+                single_cycles: single,
+                marginal_cycles: marginal,
+                switch_cycles: weight_stream.min(single),
+            }
+        }
+    }
+}
+
+/// Profiles for a whole spec, indexed `[tenant][instance]`.
+pub fn build_profiles(spec: &ServeSpec, threads: usize) -> Result<Vec<Vec<ServiceProfile>>> {
+    spec.tenants
+        .iter()
+        .map(|t| {
+            spec.instances
+                .iter()
+                .map(|inst| service_profile(t, &inst.config, spec.seed, threads))
+                .collect()
+        })
+        .collect()
+}
+
+/// One request's lifecycle (admitted or rejected).
+#[derive(Debug, Clone, Copy)]
+pub struct RequestRecord {
+    pub tenant: usize,
+    /// Admitting instance (`None` = rejected).
+    pub instance: Option<usize>,
+    pub arrival: u64,
+    /// Batch launch cycle (admitted requests whose batch launched).
+    pub start: Option<u64>,
+    /// Completion cycle (`None` = rejected or still in flight at the end).
+    pub completion: Option<u64>,
+    /// Size of the batch this request completed in.
+    pub batch_size: usize,
+}
+
+impl RequestRecord {
+    /// End-to-end latency in cycles (completed requests only).
+    pub fn latency(&self) -> Option<u64> {
+        self.completion.map(|c| c - self.arrival)
+    }
+}
+
+/// Per-instance counters accumulated by the simulation.
+#[derive(Debug, Clone, Default)]
+pub struct InstanceStats {
+    pub label: String,
+    /// Busy cycles within the simulated horizon.
+    pub busy_cycles: u64,
+    pub batches: u64,
+    /// Batches that paid the network-switch weight reload.
+    pub switches: u64,
+    pub completed: u64,
+    pub max_queue: usize,
+    /// Time-integral of queue depth (cycles × requests), for mean depth.
+    pub queue_area: u64,
+}
+
+impl InstanceStats {
+    /// Busy fraction of the simulated horizon.
+    pub fn utilization(&self, duration_cycles: u64) -> f64 {
+        self.busy_cycles as f64 / duration_cycles.max(1) as f64
+    }
+
+    /// Time-averaged queue depth.
+    pub fn mean_queue_depth(&self, duration_cycles: u64) -> f64 {
+        self.queue_area as f64 / duration_cycles.max(1) as f64
+    }
+
+    /// Mean completed batch size.
+    pub fn avg_batch(&self) -> f64 {
+        self.completed as f64 / self.batches.max(1) as f64
+    }
+}
+
+/// Everything the simulation measured; [`super::report::ServeReport`]
+/// renders it.
+#[derive(Debug, Clone)]
+pub struct ServeOutcome {
+    pub offered: u64,
+    pub admitted: u64,
+    pub rejected: u64,
+    pub completed: u64,
+    pub records: Vec<RequestRecord>,
+    pub instances: Vec<InstanceStats>,
+}
+
+impl ServeOutcome {
+    /// Requests admitted but not completed within the horizon (queued or
+    /// mid-batch when the simulation stopped).
+    pub fn in_flight(&self) -> u64 {
+        self.admitted - self.completed
+    }
+}
+
+enum Event {
+    /// A request arrives. `client` marks closed-loop re-issue chains
+    /// (unused under open-loop traffic).
+    Arrival { tenant: usize, client: bool },
+    /// A partial batch's wait window may have expired on this instance.
+    BatchTimer { instance: usize, token: u64 },
+    /// The batch holding these request ids finishes on this instance.
+    Complete { instance: usize, reqs: Vec<usize> },
+}
+
+struct Instance {
+    batcher: Batcher,
+    /// Busy until this cycle; idle when `busy_until <= now`.
+    busy_until: u64,
+    /// Network id whose weights are resident in the weight SRAM.
+    resident_net: Option<usize>,
+    /// Invalidation token for pending batch timers.
+    timer_token: u64,
+    /// Estimated marginal cycles queued (for least-loaded dispatch).
+    backlog_cycles: u64,
+    last_queue_change: u64,
+    stats: InstanceStats,
+}
+
+impl Instance {
+    /// Account the time-integral of queue depth up to `now`.
+    fn note_queue(&mut self, now: u64, horizon: u64) {
+        let until = now.min(horizon);
+        let since = self.last_queue_change.min(horizon);
+        self.stats.queue_area += self.batcher.queued() as u64 * (until - since);
+        self.last_queue_change = now;
+    }
+}
+
+/// The running simulation state (one `simulate` call).
+struct Sim<'a> {
+    spec: &'a ServeSpec,
+    profiles: &'a [Vec<ServiceProfile>],
+    /// Distinct-network id per tenant (affinity shard key).
+    net_ids: Vec<usize>,
+    dispatcher: Dispatcher,
+    mix: RequestMix,
+    rng: Pcg32,
+    instances: Vec<Instance>,
+    events: EventQueue<Event>,
+    records: Vec<RequestRecord>,
+    offered: u64,
+    admitted: u64,
+    rejected: u64,
+    completed: u64,
+}
+
+impl<'a> Sim<'a> {
+    fn new(spec: &'a ServeSpec, profiles: &'a [Vec<ServiceProfile>]) -> Sim<'a> {
+        assert_eq!(profiles.len(), spec.tenants.len(), "profiles per tenant");
+        assert!(!spec.instances.is_empty(), "empty fleet");
+
+        // Distinct networks, in first-appearance order.
+        let mut nets: Vec<&str> = Vec::new();
+        let mut net_ids = Vec::with_capacity(spec.tenants.len());
+        for t in &spec.tenants {
+            let id = match nets.iter().position(|n| *n == t.net) {
+                Some(i) => i,
+                None => {
+                    nets.push(&t.net);
+                    nets.len() - 1
+                }
+            };
+            net_ids.push(id);
+        }
+
+        let instances = spec
+            .instances
+            .iter()
+            .map(|is| Instance {
+                batcher: Batcher::new(spec.batch, spec.tenants.len()),
+                busy_until: 0,
+                resident_net: None,
+                timer_token: 0,
+                backlog_cycles: 0,
+                last_queue_change: 0,
+                stats: InstanceStats {
+                    label: is.label(),
+                    ..InstanceStats::default()
+                },
+            })
+            .collect();
+
+        Sim {
+            dispatcher: Dispatcher::new(spec.policy, nets.len(), spec.instances.len()),
+            mix: RequestMix::new(&spec.tenants),
+            rng: Pcg32::new(spec.seed, 1),
+            net_ids,
+            spec,
+            profiles,
+            instances,
+            events: EventQueue::new(),
+            records: Vec::new(),
+            offered: 0,
+            admitted: 0,
+            rejected: 0,
+            completed: 0,
+        }
+    }
+
+    fn horizon(&self) -> u64 {
+        self.spec.duration_cycles
+    }
+
+    /// Schedule an arrival `mean_cycles` (exponentially distributed) after
+    /// `now`, unless it would fall past the horizon.
+    fn schedule_arrival(&mut self, now: u64, mean_cycles: f64, client: bool) {
+        let at = now + exp_interarrival(&mut self.rng, mean_cycles);
+        if at <= self.horizon() {
+            let tenant = self.mix.sample(&mut self.rng);
+            self.events.push(at, Event::Arrival { tenant, client });
+        }
+    }
+
+    /// Launch a batch on instance `i` if one is ready, else arm the wait
+    /// window timer. Called whenever the instance might have become able
+    /// to start work (arrival while idle, completion, timer expiry).
+    fn try_launch(&mut self, i: usize, now: u64) {
+        let horizon = self.horizon();
+        let inst = &mut self.instances[i];
+        if inst.busy_until > now {
+            return;
+        }
+        inst.note_queue(now, horizon);
+        if let Some((tenant, reqs)) = inst.batcher.take_ready(now) {
+            let prof = self.profiles[tenant][i];
+            let net = self.net_ids[tenant];
+            let switch = if inst.resident_net == Some(net) {
+                0
+            } else {
+                prof.switch_cycles
+            };
+            if switch > 0 {
+                inst.stats.switches += 1;
+            }
+            inst.resident_net = Some(net);
+            let n = reqs.len() as u64;
+            let duration = switch + prof.single_cycles + (n - 1) * prof.marginal_cycles;
+            let end = now + duration;
+            inst.busy_until = end;
+            inst.stats.batches += 1;
+            inst.stats.busy_cycles += end.min(horizon) - now.min(horizon);
+            inst.backlog_cycles = inst.backlog_cycles.saturating_sub(n * prof.marginal_cycles);
+            for &r in &reqs {
+                self.records[r].start = Some(now);
+                self.records[r].batch_size = reqs.len();
+            }
+            self.events.push(end, Event::Complete { instance: i, reqs });
+        } else if inst.batcher.queued() > 0 {
+            // Partial batches only: wake up when the oldest one expires.
+            if let Some(deadline) = inst.batcher.next_deadline() {
+                inst.timer_token += 1;
+                let token = inst.timer_token;
+                let at = deadline.max(now + 1);
+                self.events.push(at, Event::BatchTimer { instance: i, token });
+            }
+        }
+    }
+
+    fn on_arrival(&mut self, now: u64, tenant: usize, client: bool) {
+        self.offered += 1;
+        let loads: Vec<InstanceLoad> = self
+            .instances
+            .iter()
+            .map(|inst| InstanceLoad {
+                queued: inst.batcher.queued(),
+                backlog_cycles: inst.backlog_cycles + inst.busy_until.saturating_sub(now),
+                has_space: inst.batcher.queued() < self.spec.queue_cap,
+            })
+            .collect();
+        let choice = self.dispatcher.choose(self.net_ids[tenant], &loads);
+        let req_id = self.records.len();
+        self.records.push(RequestRecord {
+            tenant,
+            instance: choice,
+            arrival: now,
+            start: None,
+            completion: None,
+            batch_size: 0,
+        });
+        match choice {
+            Some(i) => {
+                self.admitted += 1;
+                let horizon = self.horizon();
+                let marginal = self.profiles[tenant][i].marginal_cycles;
+                let inst = &mut self.instances[i];
+                inst.note_queue(now, horizon);
+                inst.batcher.push(tenant, req_id, now);
+                inst.backlog_cycles += marginal;
+                inst.stats.max_queue = inst.stats.max_queue.max(inst.batcher.queued());
+                self.try_launch(i, now);
+            }
+            None => {
+                self.rejected += 1;
+                // A rejected closed-loop client retries after a think gap.
+                if client {
+                    if let TrafficModel::ClosedLoop { think_cycles, .. } = self.spec.traffic {
+                        self.schedule_arrival(now, think_cycles.max(1) as f64, true);
+                    }
+                }
+            }
+        }
+        // Open loop: the Poisson process marches on regardless of state.
+        if let TrafficModel::OpenLoop { rps } = self.spec.traffic {
+            let mean = self.spec.clock_hz() / rps.max(1e-9);
+            self.schedule_arrival(now, mean, false);
+        }
+    }
+
+    fn on_complete(&mut self, now: u64, instance: usize, reqs: Vec<usize>) {
+        let n = reqs.len() as u64;
+        self.completed += n;
+        self.instances[instance].stats.completed += n;
+        for r in reqs {
+            self.records[r].completion = Some(now);
+        }
+        // Closed-loop clients re-issue after their think time. Client
+        // identity is not tracked through batches — the population size
+        // is what matters — so each completion spawns one successor.
+        if let TrafficModel::ClosedLoop { think_cycles, .. } = self.spec.traffic {
+            for _ in 0..n {
+                self.schedule_arrival(now, think_cycles.max(1) as f64, true);
+            }
+        }
+        self.try_launch(instance, now);
+    }
+
+    fn run(mut self) -> ServeOutcome {
+        // Seed the arrival processes.
+        match self.spec.traffic {
+            TrafficModel::OpenLoop { rps } => {
+                let mean = self.spec.clock_hz() / rps.max(1e-9);
+                self.schedule_arrival(0, mean, false);
+            }
+            TrafficModel::ClosedLoop { clients, think_cycles } => {
+                for _ in 0..clients {
+                    self.schedule_arrival(0, think_cycles.max(1) as f64, true);
+                }
+            }
+        }
+
+        while let Some((now, ev)) = self.events.pop() {
+            if now > self.horizon() {
+                break; // heap order: everything left is at or after `now`
+            }
+            match ev {
+                Event::Arrival { tenant, client } => self.on_arrival(now, tenant, client),
+                Event::BatchTimer { instance, token } => {
+                    if self.instances[instance].timer_token == token {
+                        self.try_launch(instance, now);
+                    }
+                }
+                Event::Complete { instance, reqs } => self.on_complete(now, instance, reqs),
+            }
+        }
+
+        // Close the queue-depth integrals at the horizon.
+        let horizon = self.horizon();
+        for inst in self.instances.iter_mut() {
+            inst.note_queue(horizon, horizon);
+        }
+
+        ServeOutcome {
+            offered: self.offered,
+            admitted: self.admitted,
+            rejected: self.rejected,
+            completed: self.completed,
+            records: self.records,
+            instances: self.instances.into_iter().map(|i| i.stats).collect(),
+        }
+    }
+}
+
+/// Run the discrete-event simulation. `profiles` comes from
+/// [`build_profiles`]; the loop itself never touches the engine, so a
+/// multi-point capacity sweep is pure event processing after one
+/// profiling pass.
+pub fn simulate(spec: &ServeSpec, profiles: &[Vec<ServiceProfile>]) -> ServeOutcome {
+    Sim::new(spec, profiles).run()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A synthetic profile set: no engine needed for event-loop tests.
+    fn toy_spec(
+        policy: DispatchPolicy,
+        batch: BatchPolicy,
+        rps: f64,
+    ) -> (ServeSpec, Vec<Vec<ServiceProfile>>) {
+        let tenants = vec![
+            Tenant::new("vgg16", 32, 0.5),
+            Tenant::new("alexnet", 32, 0.5),
+        ];
+        let instances = vec![
+            InstanceSpec {
+                config: SimConfig::paper_4_14_3(),
+            },
+            InstanceSpec {
+                config: SimConfig::paper_8_7_3(),
+            },
+        ];
+        let spec = ServeSpec {
+            tenants,
+            instances,
+            traffic: TrafficModel::OpenLoop { rps },
+            policy,
+            batch,
+            queue_cap: 8,
+            duration_cycles: 50_000_000,
+            clock_mhz: 500.0,
+            seed: 42,
+        };
+        let prof = ServiceProfile {
+            single_cycles: 1_000_000,
+            marginal_cycles: 600_000,
+            switch_cycles: 400_000,
+        };
+        let profiles = vec![vec![prof; 2]; 2];
+        (spec, profiles)
+    }
+
+    fn window(max_batch: usize, max_wait_cycles: u64) -> BatchPolicy {
+        BatchPolicy {
+            max_batch,
+            max_wait_cycles,
+        }
+    }
+
+    #[test]
+    fn conservation_holds_on_toy_fleet() {
+        for rps in [50.0, 500.0, 5_000.0, 50_000.0] {
+            let (spec, profiles) = toy_spec(DispatchPolicy::LeastLoaded, window(4, 100_000), rps);
+            let out = simulate(&spec, &profiles);
+            assert_eq!(
+                out.offered,
+                out.completed + out.rejected + out.in_flight(),
+                "rps {rps}"
+            );
+            let rec_completed = out.records.iter().filter(|r| r.completion.is_some()).count();
+            assert_eq!(rec_completed as u64, out.completed);
+            let rec_rejected = out.records.iter().filter(|r| r.instance.is_none()).count();
+            assert_eq!(rec_rejected as u64, out.rejected);
+        }
+    }
+
+    #[test]
+    fn latency_never_beats_single_image_cycles() {
+        let (spec, profiles) =
+            toy_spec(DispatchPolicy::NetworkAffinity, window(8, 200_000), 2_000.0);
+        let out = simulate(&spec, &profiles);
+        assert!(out.completed > 0);
+        for r in &out.records {
+            if let Some(lat) = r.latency() {
+                let i = r.instance.unwrap();
+                assert!(
+                    lat >= profiles[r.tenant][i].single_cycles,
+                    "latency {lat} < single"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn batching_forms_batches_under_load() {
+        let (spec, profiles) =
+            toy_spec(DispatchPolicy::NetworkAffinity, window(8, 500_000), 20_000.0);
+        let out = simulate(&spec, &profiles);
+        let max_batch = out.records.iter().map(|r| r.batch_size).max().unwrap_or(0);
+        assert!(max_batch > 1, "no batch formed (max {max_batch})");
+        // Stats are self-consistent.
+        let sum: u64 = out.instances.iter().map(|i| i.completed).sum();
+        assert_eq!(sum, out.completed);
+        for i in &out.instances {
+            assert!(i.utilization(spec.duration_cycles) <= 1.0 + 1e-12);
+            assert!(i.mean_queue_depth(spec.duration_cycles) <= spec.queue_cap as f64);
+        }
+    }
+
+    #[test]
+    fn deterministic_for_same_seed() {
+        let (spec, profiles) = toy_spec(DispatchPolicy::RoundRobin, window(4, 100_000), 3_000.0);
+        let a = simulate(&spec, &profiles);
+        let b = simulate(&spec, &profiles);
+        assert_eq!(a.offered, b.offered);
+        assert_eq!(a.completed, b.completed);
+        assert_eq!(a.records.len(), b.records.len());
+        for (x, y) in a.records.iter().zip(&b.records) {
+            assert_eq!(x.arrival, y.arrival);
+            assert_eq!(x.completion, y.completion);
+            assert_eq!(x.instance, y.instance);
+        }
+    }
+
+    #[test]
+    fn closed_loop_self_throttles() {
+        let (mut spec, profiles) = toy_spec(DispatchPolicy::LeastLoaded, BatchPolicy::none(), 0.0);
+        spec.traffic = TrafficModel::ClosedLoop {
+            clients: 3,
+            think_cycles: 100_000,
+        };
+        let out = simulate(&spec, &profiles);
+        assert!(out.offered > 0);
+        // With 3 clients at >= 1M cycles per turn over 50M cycles, the
+        // offered load is bounded by the client population.
+        assert!(out.offered <= 3 * 50 + 3, "offered {}", out.offered);
+        assert_eq!(out.offered, out.completed + out.rejected + out.in_flight());
+    }
+
+    #[test]
+    fn affinity_switches_less_than_round_robin() {
+        let mk = |policy| {
+            let (spec, profiles) = toy_spec(policy, BatchPolicy::none(), 5_000.0);
+            let out = simulate(&spec, &profiles);
+            out.instances.iter().map(|i| i.switches).sum::<u64>()
+        };
+        let rr = mk(DispatchPolicy::RoundRobin);
+        let aff = mk(DispatchPolicy::NetworkAffinity);
+        assert!(aff < rr, "affinity switches {aff} !< round-robin {rr}");
+    }
+
+    #[test]
+    fn default_fleet_mixes_geometries_and_memory_models() {
+        let fleet = default_fleet(4);
+        assert_eq!(fleet.len(), 4);
+        let labels: Vec<String> = fleet.iter().map(|f| f.label()).collect();
+        assert!(labels.iter().any(|l| l.contains("tiled")));
+        assert!(labels.iter().any(|l| l.contains("ideal")));
+        assert!(labels.iter().any(|l| l.contains("[4,14,3]")));
+        assert!(labels.iter().any(|l| l.contains("[8,7,3]")));
+        // Replication wraps.
+        assert_eq!(default_fleet(6).len(), 6);
+        assert_eq!(default_fleet(0).len(), 1);
+    }
+}

@@ -1,0 +1,44 @@
+//! Multi-accelerator serving simulator: traffic, batching, sharding and
+//! tail latency for a fleet of VSCNN instances.
+//!
+//! The paper evaluates one chip on one image at a time; the ROADMAP's
+//! north star is serving heavy traffic. This subsystem bridges the two:
+//! a deterministic discrete-event simulation (cycle domain, seeded PRNG)
+//! drives a heterogeneous fleet of accelerator instances — each a
+//! compiled [`crate::engine::PreparedNetwork`] under its own
+//! [`crate::sim::config::SimConfig`] — with open-loop Poisson or
+//! closed-loop traffic over a multi-tenant request mix, and reports what
+//! per-chip speedup numbers cannot: p50/p95/p99 latency, per-instance
+//! utilization, queue depths, rejections, and where the capacity knee
+//! sits.
+//!
+//! Module map:
+//!
+//! * [`events`] — the deterministic event queue (cycle, FIFO ties).
+//! * [`traffic`] — tenants, request mixes, Poisson/closed-loop arrivals.
+//! * [`dispatch`] — round-robin / least-loaded / network-affinity
+//!   admission.
+//! * [`batcher`] — size-or-deadline dynamic batching windows.
+//! * [`fleet`] — service profiles from real engine runs + the simulator.
+//! * [`report`] — [`report::ServeReport`]: percentiles, utilization,
+//!   JSON/text.
+//!
+//! Entry points: [`fleet::build_profiles`] → [`fleet::simulate`] →
+//! [`report::ServeReport::new`]; the `vscnn serve` CLI subcommand and the
+//! `exp serve` capacity-curve experiment wrap them.
+
+pub mod batcher;
+pub mod dispatch;
+pub mod events;
+pub mod fleet;
+pub mod report;
+pub mod traffic;
+
+pub use batcher::BatchPolicy;
+pub use dispatch::DispatchPolicy;
+pub use fleet::{
+    build_profiles, default_fleet, profile_from_report, simulate, InstanceSpec, ServeOutcome,
+    ServeSpec, ServiceProfile,
+};
+pub use report::ServeReport;
+pub use traffic::{default_mix, Tenant, TrafficModel};

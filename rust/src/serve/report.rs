@@ -1,0 +1,382 @@
+//! [`ServeReport`]: the rendered results of one serving simulation —
+//! request accounting, per-request latency percentiles, per-tenant and
+//! per-instance breakdowns — as deterministic JSON (bit-identical for a
+//! fixed `(spec, seed)` regardless of host threads) and a text block.
+
+use super::fleet::{ServeOutcome, ServeSpec};
+use crate::util::json::Json;
+use crate::util::stats::{mean, percentile};
+
+/// Latency summary in cycles (converted to ms by the clock at render
+/// time).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct LatencySummary {
+    pub p50: f64,
+    pub p95: f64,
+    pub p99: f64,
+    pub mean: f64,
+    pub max: f64,
+    pub count: u64,
+}
+
+impl LatencySummary {
+    fn from_cycles(latencies: &[f64]) -> LatencySummary {
+        LatencySummary {
+            p50: percentile(latencies, 50.0),
+            p95: percentile(latencies, 95.0),
+            p99: percentile(latencies, 99.0),
+            mean: mean(latencies),
+            max: latencies.iter().cloned().fold(0.0, f64::max),
+            count: latencies.len() as u64,
+        }
+    }
+
+    fn to_json(self, cycles_per_ms: f64) -> Json {
+        let mut o = Json::obj();
+        o.set("count", self.count)
+            .set("p50_cycles", self.p50)
+            .set("p95_cycles", self.p95)
+            .set("p99_cycles", self.p99)
+            .set("mean_cycles", self.mean)
+            .set("max_cycles", self.max)
+            .set("p50_ms", self.p50 / cycles_per_ms)
+            .set("p95_ms", self.p95 / cycles_per_ms)
+            .set("p99_ms", self.p99 / cycles_per_ms)
+            .set("mean_ms", self.mean / cycles_per_ms)
+            .set("max_ms", self.max / cycles_per_ms);
+        o
+    }
+}
+
+/// Per-tenant serving summary.
+#[derive(Debug, Clone)]
+pub struct TenantSummary {
+    pub name: String,
+    pub offered: u64,
+    pub completed: u64,
+    pub rejected: u64,
+    pub latency: LatencySummary,
+}
+
+/// Per-instance serving summary.
+#[derive(Debug, Clone)]
+pub struct InstanceSummary {
+    pub label: String,
+    pub utilization: f64,
+    pub batches: u64,
+    pub avg_batch: f64,
+    pub switches: u64,
+    pub completed: u64,
+    pub mean_queue_depth: f64,
+    pub max_queue: usize,
+}
+
+/// The full rendered report of one serving run.
+#[derive(Debug, Clone)]
+pub struct ServeReport {
+    pub policy: String,
+    pub traffic: String,
+    pub max_batch: usize,
+    pub max_wait_cycles: u64,
+    pub queue_cap: usize,
+    pub clock_mhz: f64,
+    pub duration_cycles: u64,
+    pub seed: u64,
+    pub offered: u64,
+    pub admitted: u64,
+    pub rejected: u64,
+    pub completed: u64,
+    pub in_flight: u64,
+    pub latency: LatencySummary,
+    pub tenants: Vec<TenantSummary>,
+    pub instances: Vec<InstanceSummary>,
+}
+
+impl ServeReport {
+    /// Render the outcome of [`super::fleet::simulate`] under its spec.
+    pub fn new(spec: &ServeSpec, outcome: &ServeOutcome) -> ServeReport {
+        let all: Vec<f64> = outcome
+            .records
+            .iter()
+            .filter_map(|r| r.latency())
+            .map(|l| l as f64)
+            .collect();
+
+        let tenants = spec
+            .tenants
+            .iter()
+            .enumerate()
+            .map(|(ti, t)| {
+                let lat: Vec<f64> = outcome
+                    .records
+                    .iter()
+                    .filter(|r| r.tenant == ti)
+                    .filter_map(|r| r.latency())
+                    .map(|l| l as f64)
+                    .collect();
+                TenantSummary {
+                    name: t.name.clone(),
+                    offered: outcome.records.iter().filter(|r| r.tenant == ti).count() as u64,
+                    completed: lat.len() as u64,
+                    rejected: outcome
+                        .records
+                        .iter()
+                        .filter(|r| r.tenant == ti && r.instance.is_none())
+                        .count() as u64,
+                    latency: LatencySummary::from_cycles(&lat),
+                }
+            })
+            .collect();
+
+        let instances = outcome
+            .instances
+            .iter()
+            .map(|i| InstanceSummary {
+                label: i.label.clone(),
+                utilization: i.utilization(spec.duration_cycles),
+                batches: i.batches,
+                avg_batch: i.avg_batch(),
+                switches: i.switches,
+                completed: i.completed,
+                mean_queue_depth: i.mean_queue_depth(spec.duration_cycles),
+                max_queue: i.max_queue,
+            })
+            .collect();
+
+        ServeReport {
+            policy: spec.policy.label().to_string(),
+            traffic: spec.traffic.label(),
+            max_batch: spec.batch.max_batch,
+            max_wait_cycles: spec.batch.max_wait_cycles,
+            queue_cap: spec.queue_cap,
+            clock_mhz: spec.clock_mhz,
+            duration_cycles: spec.duration_cycles,
+            seed: spec.seed,
+            offered: outcome.offered,
+            admitted: outcome.admitted,
+            rejected: outcome.rejected,
+            completed: outcome.completed,
+            in_flight: outcome.in_flight(),
+            latency: LatencySummary::from_cycles(&all),
+            tenants,
+            instances,
+        }
+    }
+
+    /// Simulated horizon in seconds.
+    pub fn duration_secs(&self) -> f64 {
+        self.duration_cycles as f64 / (self.clock_mhz * 1e6)
+    }
+
+    /// Completed requests per second of simulated time.
+    pub fn throughput_rps(&self) -> f64 {
+        self.completed as f64 / self.duration_secs().max(1e-12)
+    }
+
+    /// Offered (generated) requests per second of simulated time.
+    pub fn offered_rps(&self) -> f64 {
+        self.offered as f64 / self.duration_secs().max(1e-12)
+    }
+
+    /// p99 latency in milliseconds.
+    pub fn p99_ms(&self) -> f64 {
+        self.latency.p99 / (self.clock_mhz * 1e3)
+    }
+
+    pub fn to_json(&self) -> Json {
+        let cycles_per_ms = self.clock_mhz * 1e3;
+        let mut o = Json::obj();
+        o.set("policy", self.policy.as_str())
+            .set("traffic", self.traffic.as_str())
+            .set("max_batch", self.max_batch)
+            .set("max_wait_cycles", self.max_wait_cycles)
+            .set("queue_cap", self.queue_cap)
+            .set("clock_mhz", self.clock_mhz)
+            .set("duration_cycles", self.duration_cycles)
+            .set("seed", self.seed)
+            .set("offered", self.offered)
+            .set("admitted", self.admitted)
+            .set("rejected", self.rejected)
+            .set("completed", self.completed)
+            .set("in_flight", self.in_flight)
+            .set("offered_rps", self.offered_rps())
+            .set("throughput_rps", self.throughput_rps())
+            .set("latency", self.latency.to_json(cycles_per_ms))
+            .set(
+                "tenants",
+                Json::Arr(
+                    self.tenants
+                        .iter()
+                        .map(|t| {
+                            let mut to = Json::obj();
+                            to.set("name", t.name.as_str())
+                                .set("offered", t.offered)
+                                .set("completed", t.completed)
+                                .set("rejected", t.rejected)
+                                .set("latency", t.latency.to_json(cycles_per_ms));
+                            to
+                        })
+                        .collect(),
+                ),
+            )
+            .set(
+                "instances",
+                Json::Arr(
+                    self.instances
+                        .iter()
+                        .map(|i| {
+                            let mut io = Json::obj();
+                            io.set("label", i.label.as_str())
+                                .set("utilization", i.utilization)
+                                .set("batches", i.batches)
+                                .set("avg_batch", i.avg_batch)
+                                .set("switches", i.switches)
+                                .set("completed", i.completed)
+                                .set("mean_queue_depth", i.mean_queue_depth)
+                                .set("max_queue", i.max_queue);
+                            io
+                        })
+                        .collect(),
+                ),
+            );
+        o
+    }
+
+    /// Human-readable summary block.
+    pub fn text(&self) -> String {
+        let mut s = String::new();
+        s.push_str(&format!(
+            "serve: {} | {} | batch<=:{} wait:{}cyc | queue cap {} | {:.0} MHz | {:.1} ms horizon | seed {}\n",
+            self.policy,
+            self.traffic,
+            self.max_batch,
+            self.max_wait_cycles,
+            self.queue_cap,
+            self.clock_mhz,
+            self.duration_secs() * 1e3,
+            self.seed,
+        ));
+        s.push_str(&format!(
+            "requests: offered {} ({:.1} rps) = completed {} ({:.1} rps) + rejected {} + in-flight {}\n",
+            self.offered,
+            self.offered_rps(),
+            self.completed,
+            self.throughput_rps(),
+            self.rejected,
+            self.in_flight,
+        ));
+        let cpm = self.clock_mhz * 1e3;
+        s.push_str(&format!(
+            "latency: p50 {:.3} ms | p95 {:.3} ms | p99 {:.3} ms | mean {:.3} ms (n={})\n",
+            self.latency.p50 / cpm,
+            self.latency.p95 / cpm,
+            self.latency.p99 / cpm,
+            self.latency.mean / cpm,
+            self.latency.count,
+        ));
+        for t in &self.tenants {
+            s.push_str(&format!(
+                "  tenant {:16} completed {:6} rejected {:6} | p50 {:.3} ms p99 {:.3} ms\n",
+                t.name,
+                t.completed,
+                t.rejected,
+                t.latency.p50 / cpm,
+                t.latency.p99 / cpm,
+            ));
+        }
+        for i in &self.instances {
+            s.push_str(&format!(
+                "  inst {:16} util {:5.1}% | batches {:5} (avg {:.2}) | switches {:4} | queue mean {:.2} max {:2} | done {}\n",
+                i.label,
+                100.0 * i.utilization,
+                i.batches,
+                i.avg_batch,
+                i.switches,
+                i.mean_queue_depth,
+                i.max_queue,
+                i.completed,
+            ));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::batcher::BatchPolicy;
+    use crate::serve::dispatch::DispatchPolicy;
+    use crate::serve::fleet::{simulate, InstanceSpec, ServeSpec, ServiceProfile};
+    use crate::serve::traffic::{Tenant, TrafficModel};
+    use crate::sim::config::SimConfig;
+
+    fn toy_report() -> ServeReport {
+        let spec = ServeSpec {
+            tenants: vec![
+                Tenant::new("vgg16", 32, 0.6),
+                Tenant::new("resnet10", 16, 0.4),
+            ],
+            instances: vec![
+                InstanceSpec {
+                    config: SimConfig::paper_8_7_3(),
+                },
+                InstanceSpec {
+                    config: SimConfig::paper_4_14_3(),
+                },
+            ],
+            traffic: TrafficModel::OpenLoop { rps: 2_000.0 },
+            policy: DispatchPolicy::NetworkAffinity,
+            batch: BatchPolicy {
+                max_batch: 4,
+                max_wait_cycles: 100_000,
+            },
+            queue_cap: 16,
+            duration_cycles: 100_000_000,
+            clock_mhz: 500.0,
+            seed: 9,
+        };
+        let prof = ServiceProfile {
+            single_cycles: 800_000,
+            marginal_cycles: 500_000,
+            switch_cycles: 300_000,
+        };
+        let profiles = vec![vec![prof; 2]; 2];
+        let out = simulate(&spec, &profiles);
+        ServeReport::new(&spec, &out)
+    }
+
+    #[test]
+    fn report_is_consistent_and_renders() {
+        let r = toy_report();
+        assert_eq!(r.offered, r.completed + r.rejected + r.in_flight);
+        assert!(r.latency.p50 <= r.latency.p95 && r.latency.p95 <= r.latency.p99);
+        assert!(r.latency.p99 <= r.latency.max);
+        assert!(r.throughput_rps() > 0.0);
+        assert!(r.p99_ms() > 0.0);
+        let text = r.text();
+        assert!(text.contains("latency: p50"));
+        assert!(text.contains("tenant"));
+        assert!(text.contains("inst"));
+    }
+
+    #[test]
+    fn json_round_trips_and_has_key_fields() {
+        let r = toy_report();
+        let j = r.to_json();
+        assert_eq!(Json::parse(&j.pretty()).unwrap(), j);
+        assert!(j.get("latency").unwrap().get("p99_ms").is_some());
+        assert_eq!(j.get("tenants").unwrap().as_arr().unwrap().len(), 2);
+        assert_eq!(j.get("instances").unwrap().as_arr().unwrap().len(), 2);
+        assert_eq!(
+            j.get("offered").unwrap().as_usize().unwrap() as u64,
+            r.offered
+        );
+    }
+
+    #[test]
+    fn json_is_bit_identical_across_runs() {
+        let a = toy_report().to_json().pretty();
+        let b = toy_report().to_json().pretty();
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,179 @@
+//! Request traffic: the multi-tenant request mix and the arrival models.
+//!
+//! A *tenant* is one served workload — a zoo network at a fixed input
+//! resolution with a share of the traffic. Arrivals come from one of two
+//! classic models:
+//!
+//! * **Open loop** (`rps`): a Poisson process — exponential inter-arrival
+//!   times, independent of the fleet's state. What a datacenter sees from
+//!   millions of uncoordinated users; overload shows up as queueing and
+//!   rejections, not back-pressure.
+//! * **Closed loop** (`clients`, `think_cycles`): each client issues one
+//!   request, waits for its completion plus a think time, then issues the
+//!   next. Self-throttling; overload shows up as lower per-client rates.
+//!
+//! All randomness is a seeded [`Pcg32`] stream, so a `(spec, seed)` pair
+//! reproduces the exact arrival sequence.
+
+use crate::util::rng::Pcg32;
+
+/// One served workload: a zoo network at one input resolution, with a
+/// relative traffic share.
+#[derive(Debug, Clone)]
+pub struct Tenant {
+    /// Display name (unique within a mix), e.g. `vgg16@64`.
+    pub name: String,
+    /// Zoo network name (`crate::model::zoo::by_name`).
+    pub net: String,
+    /// Input resolution.
+    pub res: usize,
+    /// Relative traffic share (normalized over the mix).
+    pub weight: f64,
+}
+
+impl Tenant {
+    pub fn new(net: &str, res: usize, weight: f64) -> Tenant {
+        Tenant {
+            name: format!("{net}@{res}"),
+            net: net.to_string(),
+            res,
+            weight,
+        }
+    }
+}
+
+/// The default serving mix: the three zoo CNNs at mixed resolutions
+/// (`resnet10` runs at half resolution — its stride-2 trunk serves
+/// smaller inputs in practice). `res` must be a multiple of 32.
+pub fn default_mix(res: usize) -> Vec<Tenant> {
+    vec![
+        Tenant::new("vgg16", res, 0.4),
+        Tenant::new("alexnet", res, 0.3),
+        Tenant::new("resnet10", (res / 2).max(16), 0.3),
+    ]
+}
+
+/// Cumulative-weight sampler over a tenant mix.
+#[derive(Debug, Clone)]
+pub struct RequestMix {
+    cumulative: Vec<f64>,
+}
+
+impl RequestMix {
+    pub fn new(tenants: &[Tenant]) -> RequestMix {
+        assert!(!tenants.is_empty(), "empty tenant mix");
+        let total: f64 = tenants.iter().map(|t| t.weight.max(0.0)).sum();
+        assert!(total > 0.0, "tenant mix has no positive weight");
+        let mut acc = 0.0;
+        let cumulative = tenants
+            .iter()
+            .map(|t| {
+                acc += t.weight.max(0.0) / total;
+                acc
+            })
+            .collect();
+        RequestMix { cumulative }
+    }
+
+    /// Sample a tenant index proportionally to the weights.
+    pub fn sample(&self, rng: &mut Pcg32) -> usize {
+        let u = rng.f32() as f64;
+        self.cumulative
+            .iter()
+            .position(|&c| u < c)
+            .unwrap_or(self.cumulative.len() - 1)
+    }
+}
+
+/// Arrival model (see module docs).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum TrafficModel {
+    /// Poisson arrivals at `rps` requests per second (converted to the
+    /// cycle domain by the fleet clock).
+    OpenLoop { rps: f64 },
+    /// `clients` closed-loop clients, each re-issuing `think_cycles` after
+    /// its previous request completes (or is rejected).
+    ClosedLoop { clients: usize, think_cycles: u64 },
+}
+
+impl TrafficModel {
+    /// Short label for reports.
+    pub fn label(&self) -> String {
+        match self {
+            TrafficModel::OpenLoop { rps } => format!("open-loop {rps} rps"),
+            TrafficModel::ClosedLoop {
+                clients,
+                think_cycles,
+            } => format!("closed-loop {clients} clients (think {think_cycles} cyc)"),
+        }
+    }
+}
+
+/// Sample an exponential inter-arrival gap with the given mean, in whole
+/// cycles (at least 1 so time always advances).
+pub fn exp_interarrival(rng: &mut Pcg32, mean_cycles: f64) -> u64 {
+    assert!(mean_cycles > 0.0, "non-positive mean inter-arrival");
+    // 1 - f32() is in (0, 1]; ln of it is finite and <= 0.
+    let u = 1.0 - rng.f32() as f64;
+    let gap = -u.ln() * mean_cycles;
+    (gap.ceil() as u64).max(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mix_samples_proportionally() {
+        let tenants = vec![
+            Tenant::new("vgg16", 32, 3.0),
+            Tenant::new("alexnet", 32, 1.0),
+        ];
+        let mix = RequestMix::new(&tenants);
+        let mut rng = Pcg32::seeded(7);
+        let n = 20_000;
+        let hits = (0..n).filter(|_| mix.sample(&mut rng) == 0).count();
+        let frac = hits as f64 / n as f64;
+        assert!((frac - 0.75).abs() < 0.02, "share {frac}");
+    }
+
+    #[test]
+    fn exp_interarrival_has_the_right_mean() {
+        let mut rng = Pcg32::seeded(11);
+        let mean = 1000.0;
+        let n = 50_000;
+        let sum: u64 = (0..n).map(|_| exp_interarrival(&mut rng, mean)).sum();
+        let avg = sum as f64 / n as f64;
+        // Ceil-rounding biases up by < 1 cycle.
+        assert!((avg - mean).abs() < mean * 0.03, "mean {avg}");
+    }
+
+    #[test]
+    fn exp_interarrival_always_advances() {
+        let mut rng = Pcg32::seeded(13);
+        for _ in 0..10_000 {
+            assert!(exp_interarrival(&mut rng, 0.001) >= 1);
+        }
+    }
+
+    #[test]
+    fn default_mix_is_valid_and_varies_resolution() {
+        let mix = default_mix(64);
+        assert_eq!(mix.len(), 3);
+        assert!(mix.iter().any(|t| t.res != 64), "resolutions should vary");
+        let _ = RequestMix::new(&mix); // weights normalize
+        let tiny = default_mix(32);
+        assert!(tiny.iter().all(|t| t.res >= 16));
+    }
+
+    #[test]
+    fn labels_render() {
+        assert!(TrafficModel::OpenLoop { rps: 10.0 }.label().contains("rps"));
+        assert!(TrafficModel::ClosedLoop {
+            clients: 4,
+            think_cycles: 100
+        }
+        .label()
+        .contains("clients"));
+    }
+}

@@ -1,0 +1,240 @@
+//! Serving-simulator property tests: conservation, the engine-cycle
+//! latency floor, thread-budget determinism, and the high-load win of
+//! affinity + batching (the ISSUE 4 acceptance criteria).
+
+use vscnn::engine::{Engine, FunctionalBackend, RunOptions};
+use vscnn::experiments::{self, ExpContext};
+use vscnn::model::init::synthetic_image;
+use vscnn::serve::{
+    build_profiles, default_fleet, default_mix, profile_from_report, simulate, BatchPolicy,
+    DispatchPolicy, InstanceSpec, ServeReport, ServeSpec, ServiceProfile, TrafficModel,
+};
+use vscnn::util::rng::Pcg32;
+
+/// Two tiled instances (both paper geometries): the smallest fleet that
+/// still exercises heterogeneity, cheap enough to engine-profile in a
+/// debug test run.
+fn small_fleet() -> Vec<InstanceSpec> {
+    default_fleet(2)
+}
+
+fn base_spec(traffic: TrafficModel, policy: DispatchPolicy, batch: BatchPolicy) -> ServeSpec {
+    ServeSpec {
+        tenants: default_mix(32),
+        instances: small_fleet(),
+        traffic,
+        policy,
+        batch,
+        queue_cap: 16,
+        duration_cycles: 80_000_000,
+        clock_mhz: 500.0,
+        seed: 20190526,
+    }
+}
+
+#[test]
+fn conservation_over_randomized_specs() {
+    // Pure event-loop property: offered = completed + rejected + in-flight
+    // for every policy / batching / load / seed combination. Toy profiles
+    // keep the engine out of the loop so dozens of cases stay fast.
+    let mut rng = Pcg32::seeded(77);
+    let policies = [
+        DispatchPolicy::RoundRobin,
+        DispatchPolicy::LeastLoaded,
+        DispatchPolicy::NetworkAffinity,
+    ];
+    for case in 0..40 {
+        let policy = policies[rng.below(3) as usize];
+        let max_batch = 1 + rng.below(8) as usize;
+        let batch = BatchPolicy {
+            max_batch,
+            max_wait_cycles: 1 + rng.next_u32() as u64 % 400_000,
+        };
+        let rps = 100.0 * (1 + rng.below(200)) as f64;
+        let traffic = if rng.bernoulli(0.3) {
+            TrafficModel::ClosedLoop {
+                clients: 1 + rng.below(8) as usize,
+                think_cycles: rng.next_u32() as u64 % 200_000,
+            }
+        } else {
+            TrafficModel::OpenLoop { rps }
+        };
+        let mut spec = base_spec(traffic, policy, batch);
+        spec.queue_cap = 1 + rng.below(24) as usize;
+        spec.seed = rng.next_u64();
+        spec.duration_cycles = 10_000_000 + rng.next_u32() as u64 % 40_000_000;
+
+        let prof = ServiceProfile {
+            single_cycles: 200_000 + rng.next_u32() as u64 % 2_000_000,
+            marginal_cycles: 0, // fixed up below
+            switch_cycles: rng.next_u32() as u64 % 500_000,
+        };
+        let profiles: Vec<Vec<ServiceProfile>> = (0..spec.tenants.len())
+            .map(|_| {
+                (0..spec.instances.len())
+                    .map(|_| {
+                        let single = 200_000 + rng.next_u32() as u64 % 2_000_000;
+                        ServiceProfile {
+                            single_cycles: single,
+                            marginal_cycles: (single / 2).max(1),
+                            switch_cycles: prof.switch_cycles,
+                        }
+                    })
+                    .collect()
+            })
+            .collect();
+
+        let out = simulate(&spec, &profiles);
+        assert_eq!(
+            out.offered,
+            out.completed + out.rejected + out.in_flight(),
+            "case {case}: conservation"
+        );
+        assert_eq!(out.records.len() as u64, out.offered, "case {case}");
+        let done: u64 = out.instances.iter().map(|i| i.completed).sum();
+        assert_eq!(done, out.completed, "case {case}");
+        for inst in &out.instances {
+            assert!(
+                inst.utilization(spec.duration_cycles) <= 1.0 + 1e-12,
+                "case {case}: utilization"
+            );
+        }
+        // Every completed request launched after it arrived and finished
+        // after it launched.
+        for r in &out.records {
+            if let (Some(s), Some(c)) = (r.start, r.completion) {
+                assert!(r.arrival <= s && s < c, "case {case}: ordering");
+            }
+        }
+    }
+}
+
+#[test]
+fn latency_floor_is_the_engine_single_image_cycles() {
+    // Engine-profiled run: no served request may ever complete faster
+    // than its tenant's full one-image engine cycles on the admitting
+    // instance — queueing, batching and switching only ever add latency.
+    let spec = base_spec(
+        TrafficModel::OpenLoop { rps: 3_000.0 },
+        DispatchPolicy::NetworkAffinity,
+        BatchPolicy {
+            max_batch: 8,
+            max_wait_cycles: 100_000,
+        },
+    );
+    let profiles = build_profiles(&spec, 0).expect("profiles");
+    for row in &profiles {
+        for p in row {
+            assert!(p.single_cycles >= p.marginal_cycles);
+            assert!(p.marginal_cycles >= 1);
+            assert!(p.switch_cycles <= p.single_cycles);
+        }
+    }
+    let out = simulate(&spec, &profiles);
+    assert!(out.completed > 0, "nothing completed");
+    for r in &out.records {
+        if let Some(lat) = r.latency() {
+            let inst = r.instance.expect("completed implies admitted");
+            let floor = profiles[r.tenant][inst].single_cycles;
+            assert!(
+                lat >= floor,
+                "tenant {} on instance {inst}: latency {lat} < engine cycles {floor}",
+                r.tenant
+            );
+        }
+    }
+}
+
+/// Profile every `(tenant, instance)` pair of `spec` with an explicit
+/// thread budget, bypassing `service_profile`'s memoizer (whose key
+/// deliberately omits threads) — so a thread-dependent engine would
+/// actually be caught.
+fn profiles_with_threads(spec: &ServeSpec, threads: usize) -> Vec<Vec<ServiceProfile>> {
+    spec.tenants
+        .iter()
+        .map(|tenant| {
+            let ctx = ExpContext {
+                net: tenant.net.clone(),
+                res: tenant.res,
+                images: 1,
+                threads,
+                seed: spec.seed,
+                ..ExpContext::default()
+            };
+            let prepared = experiments::workload::prepared(&ctx).expect("compile");
+            let img = synthetic_image(prepared.net.input_shape, spec.seed ^ 0x5EA7);
+            spec.instances
+                .iter()
+                .map(|inst| {
+                    let mut sim = inst.config;
+                    sim.threads = threads;
+                    let opts = RunOptions {
+                        sim,
+                        backend: FunctionalBackend::Im2colMt(threads),
+                        verify_dataflow: false,
+                    };
+                    let engine = Engine::new(prepared.clone());
+                    let report = engine.run_image(&img, &opts).expect("run");
+                    profile_from_report(&report, &inst.config)
+                })
+                .collect()
+        })
+        .collect()
+}
+
+#[test]
+fn report_is_bit_identical_across_thread_budgets() {
+    // The acceptance determinism bit: the ServeReport JSON for a fixed
+    // seed must not depend on the host thread budget. Profiles are built
+    // cache-free per thread budget, so this exercises the engine runs
+    // themselves, not just the event loop.
+    let spec = base_spec(
+        TrafficModel::OpenLoop { rps: 1_500.0 },
+        DispatchPolicy::LeastLoaded,
+        BatchPolicy {
+            max_batch: 4,
+            max_wait_cycles: 150_000,
+        },
+    );
+    let render = |threads: usize| {
+        let profiles = profiles_with_threads(&spec, threads);
+        let out = simulate(&spec, &profiles);
+        ServeReport::new(&spec, &out).to_json().pretty()
+    };
+    let a = render(1);
+    let b = render(3);
+    assert_eq!(a, b, "serve JSON varies with the thread budget");
+
+    // The public (memoized) profile path agrees with the cache-free one.
+    let cached = build_profiles(&spec, 2).expect("profiles");
+    assert_eq!(cached, profiles_with_threads(&spec, 2));
+}
+
+#[test]
+fn affinity_plus_batching_beats_naive_at_high_load() {
+    // The acceptance capacity-curve bit, via the `exp serve` experiment
+    // at smoke resolution: at the top of the curve the tuned fleet must
+    // strictly beat naive round-robin/no-batching on p99 without losing
+    // throughput.
+    let ctx = ExpContext {
+        res: 32,
+        ..ExpContext::default()
+    };
+    let out = experiments::run("serve", &ctx).expect("exp serve");
+    assert_eq!(
+        out.json.get("wins_at_high_load").and_then(|j| j.as_bool()),
+        Some(true),
+        "tuned config does not win at high load:\n{}",
+        out.text
+    );
+    // The curve itself is present and well-formed.
+    let curve = out.json.get("curve").unwrap().as_arr().unwrap();
+    assert!(curve.len() >= 4);
+    for p in curve {
+        for side in ["naive", "tuned"] {
+            let s = p.get(side).unwrap();
+            assert!(s.get("p99_ms").unwrap().as_f64().unwrap() >= 0.0);
+            assert!(s.get("throughput_rps").unwrap().as_f64().unwrap() >= 0.0);
+        }
+    }
+}
