@@ -32,9 +32,7 @@ fn run_case(
     let coord = Coordinator::new(net, params);
     let opts = RunOptions {
         sim: cfg,
-        backend: FunctionalBackend::Im2colMt(
-            std::thread::available_parallelism().map_or(4, |n| n.get()),
-        ),
+        backend: FunctionalBackend::Im2colMt(vscnn::util::default_threads()),
         verify_dataflow: false,
     };
     Ok(coord.run(&img, &opts)?.overall_speedup())

@@ -38,7 +38,7 @@ fn main() {
         .ok()
         .and_then(|s| s.parse().ok())
         .unwrap_or(32);
-    let threads = std::thread::available_parallelism().map_or(4, |n| n.get());
+    let threads = vscnn::util::default_threads();
 
     let mut results: Vec<BenchResult> = Vec::new();
     let mut derived = Json::obj();
@@ -70,13 +70,24 @@ fn main() {
     ] {
         let spec = spec_at(rps, policy, max_batch);
         let mut offered = 0u64;
+        let mut events = 0u64;
         let r = bench(&format!("serve-sim/{label}"), 1, 5, || {
             let out = simulate(&spec, &toy_profiles);
             offered = out.offered;
+            events = out.events_processed;
             black_box(out.completed);
         });
         println!("{}", r.line());
         println!("{}", r.throughput(offered as f64, "req"));
+        println!("{}", r.throughput(events as f64, "event"));
+        if label == "heavy/affinity-batch" {
+            // The headline event-loop throughput tracked across PRs
+            // (batched draining + allocation-free dispatch snapshots).
+            derived.set(
+                "events_per_sec",
+                events as f64 / r.median.as_secs_f64().max(1e-12),
+            );
+        }
         results.push(r);
     }
 

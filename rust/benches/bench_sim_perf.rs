@@ -17,6 +17,13 @@
 //!   shared `PreparedNetwork`. The JSON `derived` block records
 //!   `compile_ms` and `steady_state_images_per_sec` so the weight-side
 //!   caching win stays measurable across PRs.
+//! * `engine-execute-t8/{pooled,scoped-baseline}` — ISSUE 5's acceptance
+//!   pair at `--threads 8` on VGG-16 @ 32 (the CI smoke workload): the
+//!   persistent-pool engine with the analytic scheduler vs the pre-pool
+//!   baseline (`force_scoped` spawn-per-call + `exact_scheduler` walk).
+//!   Reports are bit-identical between the two (tests/pool_determinism.rs)
+//!   — only the wall clock differs. `derived` records `images_per_sec`,
+//!   `scoped_baseline_images_per_sec` and `speedup_vs_scoped`.
 //!
 //! Env `VSCNN_BENCH_SCALING=1` additionally sweeps the conv3_1 functional
 //! case over 1/2/4/…/N workers (the thread-scaling curve in
@@ -80,7 +87,7 @@ fn main() {
     let mut rng = Pcg32::seeded(1234);
     let base_cfg = SimConfig::paper_8_7_3();
     let spec = ConvSpec::default();
-    let threads = std::thread::available_parallelism().map_or(4, |n| n.get());
+    let threads = vscnn::util::default_threads();
     let scaling = std::env::var("VSCNN_BENCH_SCALING").is_ok();
 
     let mut results: Vec<BenchResult> = Vec::new();
@@ -241,6 +248,61 @@ fn main() {
         );
         derived.set("memory_bound_layer_frac", report.memory_bound_layer_frac());
         derived.set("effective_bw_util", report.effective_bw_util());
+    }
+
+    // 6) ISSUE 5 acceptance pair: pooled + analytic engine vs the pre-pool
+    //    scoped + exact baseline, both at --threads 8, VGG-16 @ 32.
+    {
+        let net = vgg16_at(32);
+        let params = vscnn::model::init::synthetic_params(&net, 7, 0.0);
+        let copts = CompileOptions {
+            cols: PAPER_COLS,
+            prune: Some(paper_schedule(&net)),
+            calibration: Some(Calibration {
+                image: synthetic_image(net.input_shape, 7 ^ 0xCA11),
+                density_scale: 1.0,
+                threads,
+            }),
+        };
+        let engine = Engine::new(Arc::new(compile(&net, params, &copts)));
+        let img = synthetic_image(net.input_shape, 7 ^ 0xBEEF);
+
+        let mut opts = RunOptions::new(SimConfig::paper_8_7_3());
+        opts.sim.threads = 8;
+        opts.backend = vscnn::engine::FunctionalBackend::Im2colMt(8);
+
+        let r_pool = bench("engine-execute-t8/pooled", 2, 9, || {
+            black_box(engine.run_image(&img, &opts).expect("engine run").totals.cycles);
+        });
+        println!("{}", r_pool.line());
+
+        let mut base_opts = opts.clone();
+        base_opts.sim.exact_scheduler = true;
+        vscnn::util::parallel::force_scoped(true);
+        let r_scoped = bench("engine-execute-t8/scoped-baseline", 2, 9, || {
+            black_box(
+                engine
+                    .run_image(&img, &base_opts)
+                    .expect("engine run")
+                    .totals
+                    .cycles,
+            );
+        });
+        vscnn::util::parallel::force_scoped(false);
+        println!("{}", r_scoped.line());
+
+        let ips = 1.0 / r_pool.median.as_secs_f64().max(1e-12);
+        let ips_scoped = 1.0 / r_scoped.median.as_secs_f64().max(1e-12);
+        let speedup = ips / ips_scoped.max(1e-12);
+        println!(
+            "engine t8 (vgg16-32): {ips:.2} images/sec pooled vs {ips_scoped:.2} scoped \
+             baseline ({speedup:.2}x)\n"
+        );
+        derived.set("images_per_sec", ips);
+        derived.set("scoped_baseline_images_per_sec", ips_scoped);
+        derived.set("speedup_vs_scoped", speedup);
+        results.push(r_pool);
+        results.push(r_scoped);
     }
 
     let path = "BENCH_sim_perf.json";

@@ -1,0 +1,96 @@
+#!/usr/bin/env python3
+"""Diff a freshly generated bench report against the committed baseline.
+
+Usage: check_bench_regression.py NEW.json BASELINE.json [--threshold 0.10]
+
+Compares the two `{"results": [...], "derived": {...}}` documents written
+by `cargo bench --bench bench_sim_perf` / `bench_serve`:
+
+* per-series `median_ns` — warns when a series got more than THRESHOLD
+  slower than the committed run;
+* throughput-style `derived` keys (anything ending in `_per_sec` plus
+  `speedup_vs_scoped` and the `functional_speedup_*` family) — warns when
+  one dropped by more than THRESHOLD.
+
+Warn-only by design: bench hosts differ, so CI prints the table and the
+warnings but never fails the build on them (pass --strict to exit 1 on
+warnings instead, for local gating on one machine).
+"""
+
+import argparse
+import json
+import sys
+
+
+def load(path):
+    with open(path) as f:
+        return json.load(f)
+
+
+def series_medians(doc):
+    return {r["name"]: r["median_ns"] for r in doc.get("results", [])}
+
+
+def throughput_keys(derived):
+    out = {}
+    for key, val in derived.items():
+        if not isinstance(val, (int, float)):
+            continue
+        if key.endswith("_per_sec") or key == "speedup_vs_scoped" or key.startswith(
+            "functional_speedup_"
+        ):
+            out[key] = float(val)
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("new", help="freshly generated bench JSON")
+    ap.add_argument("baseline", help="committed previous run")
+    ap.add_argument("--threshold", type=float, default=0.10,
+                    help="relative regression that triggers a warning (default 0.10)")
+    ap.add_argument("--strict", action="store_true",
+                    help="exit 1 when any warning fires")
+    args = ap.parse_args()
+
+    new, base = load(args.new), load(args.baseline)
+    warnings = []
+
+    print(f"{'series':44} {'baseline':>12} {'new':>12} {'ratio':>7}")
+    new_med, base_med = series_medians(new), series_medians(base)
+    for name in sorted(new_med):
+        if name not in base_med or base_med[name] <= 0:
+            continue
+        ratio = new_med[name] / base_med[name]
+        flag = ""
+        if ratio > 1.0 + args.threshold:
+            flag = "  <-- SLOWER"
+            warnings.append(f"{name}: median {ratio:.2f}x the baseline")
+        print(f"{name:44} {base_med[name]:>12} {new_med[name]:>12} {ratio:>6.2f}x{flag}")
+
+    new_thr = throughput_keys(new.get("derived", {}))
+    base_thr = throughput_keys(base.get("derived", {}))
+    for key in sorted(new_thr):
+        if key not in base_thr or base_thr[key] <= 0:
+            continue
+        ratio = new_thr[key] / base_thr[key]
+        flag = ""
+        if ratio < 1.0 - args.threshold:
+            flag = "  <-- THROUGHPUT DROP"
+            warnings.append(f"derived.{key}: {ratio:.2f}x the baseline")
+        print(f"derived.{key:36} {base_thr[key]:>12.3f} {new_thr[key]:>12.3f} {ratio:>6.2f}x{flag}")
+
+    if warnings:
+        print(f"\nWARNING: {len(warnings)} series regressed more than "
+              f"{args.threshold:.0%} vs {args.baseline}:", file=sys.stderr)
+        for w in warnings:
+            print(f"  - {w}", file=sys.stderr)
+        if args.strict:
+            return 1
+    else:
+        print(f"\nOK: no series regressed more than {args.threshold:.0%}.")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

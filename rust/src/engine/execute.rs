@@ -100,9 +100,7 @@ impl RunOptions {
     pub fn new(sim: SimConfig) -> RunOptions {
         RunOptions {
             sim,
-            backend: FunctionalBackend::Im2colMt(
-                std::thread::available_parallelism().map_or(4, |n| n.get()),
-            ),
+            backend: FunctionalBackend::Im2colMt(crate::util::default_threads()),
             verify_dataflow: false,
         }
     }

@@ -69,7 +69,7 @@ impl Default for ExpContext {
             seed: 20190526,
             images: 1,
             bias_shift: 0.0,
-            threads: std::thread::available_parallelism().map_or(4, |n| n.get()),
+            threads: crate::util::default_threads(),
             artifacts_dir: None,
             mem_model: crate::sim::config::MemModel::Tiled,
         }

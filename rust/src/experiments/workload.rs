@@ -28,18 +28,25 @@ use std::sync::{Arc, Mutex, OnceLock};
 /// Returns the shared prepared network (weight encoding, kernel mapping
 /// and weight-side stats all done).
 pub fn prepared(ctx: &ExpContext) -> Result<Arc<PreparedNetwork>> {
-    static CACHE: OnceLock<Mutex<HashMap<String, Arc<PreparedNetwork>>>> = OnceLock::new();
+    // Two-level cache: a short-lived map lock hands out one slot per key,
+    // and the compile runs under the *slot's* lock only — concurrent
+    // callers of the same key still share exactly one compile, while
+    // different keys (e.g. the serve mix's three networks, profiled
+    // tenant-parallel since ISSUE 5) compile concurrently instead of
+    // serializing on the map.
+    type Slot = Arc<Mutex<Option<Arc<PreparedNetwork>>>>;
+    static CACHE: OnceLock<Mutex<HashMap<String, Slot>>> = OnceLock::new();
     let key = format!(
         "{} res{} seed{} shift{}",
         ctx.net, ctx.res, ctx.seed, ctx.bias_shift
     );
-    let cache = CACHE.get_or_init(|| Mutex::new(HashMap::new()));
-    // The lock is held across the compile on purpose: concurrent callers
-    // of the same key must share one compile (the 'exactly once' contract),
-    // and per-key compiles happen once per process, so the serialization
-    // never bites a warm cache.
-    let mut cache = cache.lock().unwrap();
-    if let Some(hit) = cache.get(&key) {
+    let slot: Slot = {
+        let cache = CACHE.get_or_init(|| Mutex::new(HashMap::new()));
+        let mut map = cache.lock().unwrap();
+        map.entry(key).or_default().clone()
+    };
+    let mut slot = slot.lock().unwrap();
+    if let Some(hit) = &*slot {
         return Ok(hit.clone());
     }
 
@@ -60,7 +67,7 @@ pub fn prepared(ctx: &ExpContext) -> Result<Arc<PreparedNetwork>> {
         }),
     };
     let p = Arc::new(compile(&net, params, &opts));
-    cache.insert(key, p.clone());
+    *slot = Some(p.clone());
     Ok(p)
 }
 

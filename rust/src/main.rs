@@ -70,7 +70,8 @@ fn print_help() {
          \x20 runtime-info    check the PJRT runtime + artifacts\n\
          \x20 list            list experiment ids and zoo network names\n\n\
          common flags: --net {} --res N (default 224)\n\
-         \x20 --images N --seed S --bias-shift X --threads N --pjrt DIR --out DIR\n\
+         \x20 --images N --seed S --bias-shift X --pjrt DIR --out DIR\n\
+         \x20 --threads N (host worker threads; 0 = auto, one per core — the default)\n\
          \x20 --mem-model ideal|tiled (tiled = SRAM/DRAM-aware cycle accounting, default)\n\
          serve flags: --rps N --duration-ms N --instances N --policy round-robin|least-loaded|affinity\n\
          \x20 --max-batch N --batch-wait-us N --queue-cap N --clients N --think-ms N --out FILE",
@@ -87,13 +88,17 @@ fn ctx_from(cli: &Cli) -> Result<ExpContext> {
         Some(s) => vscnn::sim::config::MemModel::parse(s)
             .ok_or_else(|| anyhow::anyhow!("--mem-model must be 'ideal' or 'tiled', got '{s}'"))?,
     };
+    // `--threads 0` means auto (one worker per available core), matching
+    // `SimConfig::threads == 0` — resolved here so every consumer (the
+    // im2col backend included) sees a concrete count.
+    let threads = vscnn::util::resolve_threads(cli.get_num("threads", default.threads)?);
     Ok(ExpContext {
         net: cli.get_value("net")?.unwrap_or(&default.net).to_string(),
         res: cli.get_num("res", default.res)?,
         seed: cli.get_num("seed", default.seed)?,
         images: cli.get_num("images", default.images)?,
         bias_shift: cli.get_num("bias-shift", default.bias_shift)?,
-        threads: cli.get_num("threads", default.threads)?,
+        threads,
         artifacts_dir: cli.get_value("pjrt")?.map(|s| s.to_string()),
         mem_model,
     })
@@ -219,7 +224,8 @@ fn cmd_serve(cli: &Cli) -> Result<()> {
     // supports scaled up one notch (override with --res).
     let res: usize = cli.get_num("res", 64)?;
     let seed: u64 = cli.get_num("seed", defaults.seed)?;
-    let threads: usize = cli.get_num("threads", defaults.threads)?;
+    // --threads 0 = auto, same convention as `exp`/`simulate`.
+    let threads: usize = vscnn::util::resolve_threads(cli.get_num("threads", defaults.threads)?);
     let rps: f64 = cli.get_num("rps", 200.0)?;
     anyhow::ensure!(rps > 0.0, "--rps must be positive, got {rps}");
     let duration_ms: f64 = cli.get_num("duration-ms", 100.0)?;

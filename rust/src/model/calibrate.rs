@@ -121,13 +121,14 @@ fn conv_spec(kind: &LayerKind) -> crate::tensor::conv::ConvSpec {
     }
 }
 
-/// `q`-quantile (0..1) of a slice, by sorting a copy.
+/// `q`-quantile (0..1) of an `f32` slice — the shared nearest-rank
+/// [`crate::util::stats::quantile`] (one interpolation rule for the
+/// whole crate; `f32 → f64` is exact and the result is always an element
+/// of `xs`, so the round-trip loses nothing).
 fn quantile(xs: &[f32], q: f64) -> f32 {
     debug_assert!(!xs.is_empty());
-    let mut s = xs.to_vec();
-    s.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    let idx = ((s.len() as f64 - 1.0) * q.clamp(0.0, 1.0)).round() as usize;
-    s[idx]
+    let wide: Vec<f64> = xs.iter().map(|&x| x as f64).collect();
+    crate::util::stats::quantile(&wide, q) as f32
 }
 
 #[cfg(test)]

@@ -77,6 +77,21 @@ impl<T> EventQueue<T> {
         self.heap.peek().map(|e| e.cycle)
     }
 
+    /// Batched drain: append every event scheduled at exactly `cycle` to
+    /// `out`, in FIFO (push) order. The serving loop processes one
+    /// timestamp per drain; events pushed *while* processing the batch —
+    /// even at the same cycle — carry higher `seq`s, so the caller's next
+    /// drain picks them up in exactly the order one-at-a-time popping
+    /// would have (pinned by `drain_matches_pop_order`).
+    pub fn drain_cycle(&mut self, cycle: u64, out: &mut Vec<T>) {
+        while let Some(e) = self.heap.peek() {
+            if e.cycle != cycle {
+                break;
+            }
+            out.push(self.heap.pop().expect("peeked entry exists").payload);
+        }
+    }
+
     pub fn len(&self) -> usize {
         self.heap.len()
     }
@@ -112,6 +127,31 @@ mod tests {
         for i in 0..100usize {
             assert_eq!(q.pop(), Some((7, i)));
         }
+    }
+
+    #[test]
+    fn drain_matches_pop_order() {
+        // The batched drain must yield exactly what repeated pops would.
+        let mut a = EventQueue::new();
+        let mut b = EventQueue::new();
+        for (cycle, v) in [(5u64, 0usize), (3, 1), (5, 2), (3, 3), (4, 4), (3, 5)] {
+            a.push(cycle, v);
+            b.push(cycle, v);
+        }
+        let mut drained: Vec<(u64, usize)> = Vec::new();
+        let mut batch = Vec::new();
+        while let Some(cycle) = a.peek_cycle() {
+            a.drain_cycle(cycle, &mut batch);
+            for v in batch.drain(..) {
+                drained.push((cycle, v));
+            }
+        }
+        let mut popped = Vec::new();
+        while let Some(e) = b.pop() {
+            popped.push(e);
+        }
+        assert_eq!(drained, popped);
+        assert_eq!(drained, vec![(3, 1), (3, 3), (3, 5), (4, 4), (5, 0), (5, 2)]);
     }
 
     #[test]

@@ -207,16 +207,30 @@ pub fn profile_from_report(report: &NetworkReport, cfg: &SimConfig) -> ServicePr
 }
 
 /// Profiles for a whole spec, indexed `[tenant][instance]`.
+///
+/// Tenants are independent networks, so they profile concurrently on the
+/// persistent pool (the thread budget splits across tenant workers; each
+/// tenant's instance configs run sequentially so the per-config memoizer
+/// dedupes engine runs instead of racing them). Results are identical to
+/// the sequential loop — profiles are cycle counts, thread-invariant.
 pub fn build_profiles(spec: &ServeSpec, threads: usize) -> Result<Vec<Vec<ServiceProfile>>> {
-    spec.tenants
-        .iter()
-        .map(|t| {
-            spec.instances
+    let workers = spec.tenants.len().min(threads.max(1)).max(1);
+    let inner_threads = (threads / workers).max(1);
+    let chunks: Result<Vec<Vec<Vec<ServiceProfile>>>> =
+        crate::util::par_chunk_map(spec.tenants.len(), workers, |range| {
+            spec.tenants[range]
                 .iter()
-                .map(|inst| service_profile(t, &inst.config, spec.seed, threads))
+                .map(|t| {
+                    spec.instances
+                        .iter()
+                        .map(|inst| service_profile(t, &inst.config, spec.seed, inner_threads))
+                        .collect()
+                })
                 .collect()
         })
-        .collect()
+        .into_iter()
+        .collect();
+    Ok(chunks?.into_iter().flatten().collect())
 }
 
 /// One request's lifecycle (admitted or rejected).
@@ -281,6 +295,9 @@ pub struct ServeOutcome {
     pub admitted: u64,
     pub rejected: u64,
     pub completed: u64,
+    /// Discrete events executed by the loop (arrivals + timers +
+    /// completions) — the denominator of the bench's events/s metric.
+    pub events_processed: u64,
     pub records: Vec<RequestRecord>,
     pub instances: Vec<InstanceStats>,
 }
@@ -339,6 +356,9 @@ struct Sim<'a> {
     instances: Vec<Instance>,
     events: EventQueue<Event>,
     records: Vec<RequestRecord>,
+    /// Reusable dispatch-snapshot buffer (hot: one refill per arrival
+    /// instead of one allocation per arrival).
+    loads: Vec<InstanceLoad>,
     offered: u64,
     admitted: u64,
     rejected: u64,
@@ -388,6 +408,7 @@ impl<'a> Sim<'a> {
             net_ids,
             spec,
             profiles,
+            loads: Vec::with_capacity(instances.len()),
             instances,
             events: EventQueue::new(),
             records: Vec::new(),
@@ -459,16 +480,14 @@ impl<'a> Sim<'a> {
 
     fn on_arrival(&mut self, now: u64, tenant: usize, client: bool) {
         self.offered += 1;
-        let loads: Vec<InstanceLoad> = self
-            .instances
-            .iter()
-            .map(|inst| InstanceLoad {
-                queued: inst.batcher.queued(),
-                backlog_cycles: inst.backlog_cycles + inst.busy_until.saturating_sub(now),
-                has_space: inst.batcher.queued() < self.spec.queue_cap,
-            })
-            .collect();
-        let choice = self.dispatcher.choose(self.net_ids[tenant], &loads);
+        let queue_cap = self.spec.queue_cap;
+        self.loads.clear();
+        self.loads.extend(self.instances.iter().map(|inst| InstanceLoad {
+            queued: inst.batcher.queued(),
+            backlog_cycles: inst.backlog_cycles + inst.busy_until.saturating_sub(now),
+            has_space: inst.batcher.queued() < queue_cap,
+        }));
+        let choice = self.dispatcher.choose(self.net_ids[tenant], &self.loads);
         let req_id = self.records.len();
         self.records.push(RequestRecord {
             tenant,
@@ -539,18 +558,29 @@ impl<'a> Sim<'a> {
             }
         }
 
-        while let Some((now, ev)) = self.events.pop() {
+        // Batched draining: all events of one timestamp come out of the
+        // heap in one sweep and execute back to back. Handlers that push
+        // same-cycle events (e.g. zero-gap arrivals) enqueue with higher
+        // seqs, so the next sweep runs them — exactly the order
+        // one-at-a-time popping produced (`events::drain_matches_pop_order`).
+        let mut batch: Vec<Event> = Vec::new();
+        let mut events_processed = 0u64;
+        while let Some(now) = self.events.peek_cycle() {
             if now > self.horizon() {
                 break; // heap order: everything left is at or after `now`
             }
-            match ev {
-                Event::Arrival { tenant, client } => self.on_arrival(now, tenant, client),
-                Event::BatchTimer { instance, token } => {
-                    if self.instances[instance].timer_token == token {
-                        self.try_launch(instance, now);
+            self.events.drain_cycle(now, &mut batch);
+            for ev in batch.drain(..) {
+                events_processed += 1;
+                match ev {
+                    Event::Arrival { tenant, client } => self.on_arrival(now, tenant, client),
+                    Event::BatchTimer { instance, token } => {
+                        if self.instances[instance].timer_token == token {
+                            self.try_launch(instance, now);
+                        }
                     }
+                    Event::Complete { instance, reqs } => self.on_complete(now, instance, reqs),
                 }
-                Event::Complete { instance, reqs } => self.on_complete(now, instance, reqs),
             }
         }
 
@@ -565,6 +595,7 @@ impl<'a> Sim<'a> {
             admitted: self.admitted,
             rejected: self.rejected,
             completed: self.completed,
+            events_processed,
             records: self.records,
             instances: self.instances.into_iter().map(|i| i.stats).collect(),
         }
@@ -638,6 +669,9 @@ mod tests {
                 out.completed + out.rejected + out.in_flight(),
                 "rps {rps}"
             );
+            // Every offered request was one arrival event; completions
+            // and batch timers add more.
+            assert!(out.events_processed >= out.offered, "rps {rps}");
             let rec_completed = out.records.iter().filter(|r| r.completion.is_some()).count();
             assert_eq!(rec_completed as u64, out.completed);
             let rec_rejected = out.records.iter().filter(|r| r.instance.is_none()).count();

@@ -123,6 +123,12 @@ pub struct SimConfig {
     /// double-buffered fills; [`MemModel::Ideal`] reports pure compute
     /// cycles (infinite SRAM, zero transfer time).
     pub mem_model: MemModel,
+    /// Verification knob: disable the scheduler's analytic (closed-form)
+    /// fast paths and always run the exact per-vector/per-strip walk.
+    /// Cycle counts and statistics are bit-identical either way — pinned
+    /// by `sim::scheduler` tests and `tests/memory_model.rs` — so this
+    /// only trades speed; the benches use it to measure the fast path.
+    pub exact_scheduler: bool,
 }
 
 impl SimConfig {
@@ -136,6 +142,7 @@ impl SimConfig {
             context_switch_cycles: 2,
             threads: 0,
             mem_model: MemModel::Tiled,
+            exact_scheduler: false,
         }
     }
 
@@ -152,13 +159,10 @@ impl SimConfig {
         vec![Self::paper_4_14_3(), Self::paper_8_7_3()]
     }
 
-    /// Resolve [`Self::threads`]: `0` means one worker per available core.
+    /// Resolve [`Self::threads`]: `0` means auto, via the crate-wide
+    /// [`crate::util::resolve_threads`] (one worker per available core).
     pub fn effective_threads(&self) -> usize {
-        if self.threads == 0 {
-            std::thread::available_parallelism().map_or(1, |n| n.get())
-        } else {
-            self.threads
-        }
+        crate::util::resolve_threads(self.threads)
     }
 }
 

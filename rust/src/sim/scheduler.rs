@@ -30,7 +30,7 @@
 use super::accumulator::Accumulator;
 use super::config::{MemModel, SimConfig};
 use super::dram::DramTraffic;
-use super::index_unit::{output_col, output_row, IssuedPair};
+use super::index_unit::{output_col, IssuedPair};
 use super::pe_array::diagonal_product_into;
 use super::sram::{stream_tiles, SramBuffer, TileDemand, TilePlan};
 use super::stats::SimStats;
@@ -181,6 +181,26 @@ pub fn simulate_layer_encoded(
         }
     }
 
+    // Strip uniformity — the analytic fast path's trigger. Channel `c` is
+    // *uniform* when every strip carries the same nonzero-column list
+    // (trivially true for single-strip layers and for the dense flow,
+    // which issues every column in every strip). Per-strip tallies over
+    // identical strips are u64 sums of identical terms, so they collapse
+    // to one strip × `strips` bit-identically; `cfg.exact_scheduler`
+    // turns the collapse off so tests can pin the equivalence.
+    let use_analytic = !cfg.exact_scheduler;
+    let uniform: Vec<bool> = match mode {
+        Mode::Dense => vec![use_analytic; c_in],
+        Mode::VectorSparse => (0..c_in)
+            .map(|c| {
+                use_analytic && {
+                    let first = va.nz_cols(c, 0);
+                    (1..strips).all(|s| va.nz_cols(c, s) == first)
+                }
+            })
+            .collect(),
+    };
+
     // --- timing: arrays run independently within a group, sync at the
     // group boundary. work_k = Σ_c [|nzW(k,c)| · Σ_s|nzI(c,s)| + ctx ·
     // live_strips(c)] — channels with no weight vectors cost nothing.
@@ -233,16 +253,24 @@ pub fn simulate_layer_encoded(
         1
     };
     let mut timing = (0u64, 0u64, 0u64);
-    for p in crate::util::par_chunk_map(n_groups, timing_workers, |groups| {
+    // Per-group slowest-filter work, kept for the tiled model: when one
+    // tile covers the whole group, its compute demand *is* this number
+    // (see the analytic fast path below).
+    let mut group_max: Vec<u64> = Vec::with_capacity(n_groups);
+    for (p, maxes) in crate::util::par_chunk_map(n_groups, timing_workers, |groups| {
         let mut acc = (0u64, 0u64, 0u64);
+        let mut maxes = Vec::with_capacity(groups.len());
         for g in groups {
-            fold_group(&mut acc, group_timing(g));
+            let t = group_timing(g);
+            maxes.push(t.0);
+            fold_group(&mut acc, t);
         }
-        acc
+        (acc, maxes)
     }) {
         timing.0 += p.0;
         timing.1 += p.1;
         timing.2 += p.2;
+        group_max.extend(maxes);
     }
     stats.cycles += timing.0;
     stats.overhead_cycles += timing.1;
@@ -274,25 +302,24 @@ pub fn simulate_layer_encoded(
 
         let mut t = (0u64, 0u64, 0u64, 0u64, 0u64);
         let skipped_w_per_nz_input = (k_out * kw) as u64 - sum_w_all;
-        for s in 0..strips {
-            let icols: &[u16] = match mode {
-                Mode::Dense => &all_input_cols,
-                Mode::VectorSparse => va.nz_cols(c, s),
-            };
+        // One strip's contribution, `mult` times over (all tallies are
+        // u64 sums, so `mult` identical strips fold to one multiply —
+        // bit-identical to the per-strip walk).
+        let mut strip_tally = |icols: &[u16], mult: u64| {
             if icols.is_empty() {
                 if mode == Mode::VectorSparse {
-                    t.2 += (w * k_out * kw) as u64;
+                    t.2 += mult * (w * k_out * kw) as u64;
                 }
-                continue;
+                return;
             }
             if mode == Mode::VectorSparse {
-                t.2 += (w as u64 - icols.len() as u64) * (k_out * kw) as u64;
-                t.3 += icols.len() as u64 * skipped_w_per_nz_input;
+                t.2 += mult * (w as u64 - icols.len() as u64) * (k_out * kw) as u64;
+                t.3 += mult * icols.len() as u64 * skipped_w_per_nz_input;
             }
 
             let issued: u64 = icols.len() as u64 * sum_w_all;
-            t.0 += issued;
-            t.1 += issued * (r as u64) * (kh as u64);
+            t.0 += mult * issued;
+            t.1 += mult * issued * (r as u64) * (kh as u64);
 
             // Boundary (X) pairs: output col i - j + pad outside the
             // plane. Counted per kernel column once, weighted by how many
@@ -306,7 +333,23 @@ pub fn simulate_layer_encoded(
                 let below = icols.partition_point(|&i| (i as i64) < lo) as u64;
                 let above =
                     icols.len() as u64 - icols.partition_point(|&i| (i as i64) < hi) as u64;
-                t.4 += nf * (below + above);
+                t.4 += mult * nf * (below + above);
+            }
+        };
+        if uniform[c] {
+            // Analytic fast path: every strip is the same strip.
+            let icols: &[u16] = match mode {
+                Mode::Dense => &all_input_cols,
+                Mode::VectorSparse => va.nz_cols(c, 0),
+            };
+            strip_tally(icols, strips as u64);
+        } else {
+            for s in 0..strips {
+                let icols: &[u16] = match mode {
+                    Mode::Dense => &all_input_cols,
+                    Mode::VectorSparse => va.nz_cols(c, s),
+                };
+                strip_tally(icols, 1);
             }
         }
         t
@@ -524,55 +567,114 @@ pub fn simulate_layer_encoded(
                 let plan =
                     TilePlan::new(&cfg.sram, &cfg.pe, c_in, h, w, w_out, k_out, max_group);
 
-                // Prefix sums over strips per channel: Σ nzI and live
-                // strips of any strip range in O(1).
-                let stride = strips + 1;
-                let mut pref_nz = vec![0u64; c_in * stride];
-                let mut pref_live = vec![0u64; c_in * stride];
-                for c in 0..c_in {
-                    for s in 0..strips {
-                        let nz = nz_in_per_cs[c * strips + s];
-                        pref_nz[c * stride + s + 1] = pref_nz[c * stride + s] + nz;
-                        pref_live[c * stride + s + 1] =
-                            pref_live[c * stride + s] + u64::from(nz > 0);
-                    }
-                }
                 let mut demands = Vec::with_capacity(plan.total_tiles());
-                for g in 0..n_groups {
-                    for t in 0..plan.tiles_per_group {
-                        let srange = plan.tile_strips(t);
-                        // Slowest filter in the group over the tile's strips.
-                        let mut compute = 0u64;
+                if use_analytic && plan.tiles_per_group == 1 {
+                    // Analytic fast path #1 — one tile per group (the whole
+                    // layer's strips fit the input-buffer half, the common
+                    // case at small/medium resolutions): the tile covers
+                    // every strip, so its compute demand is exactly the
+                    // group-boundary max the timing pass already computed.
+                    // No per-strip walk, O(groups) total.
+                    for (g, &compute) in group_max.iter().enumerate() {
+                        demands.push(TileDemand {
+                            compute,
+                            input_bytes: if g == 0 || !input_resident { in_total } else { 0 },
+                            weight_bytes: group_w_bytes[g],
+                        });
+                    }
+                } else if use_analytic && uniform.iter().all(|&u| u) {
+                    // Analytic fast path #2 — every channel strip-uniform:
+                    // a filter's work over any strip range is (range
+                    // length) × its per-strip work, so the slowest filter
+                    // of a tile is tile_len × the group's per-strip max
+                    // (u64 distributivity — bit-identical to the walk).
+                    let nz0: Vec<u64> = (0..c_in).map(|c| nz_in_per_cs[c * strips]).collect();
+                    for g in 0..n_groups {
+                        let mut per_strip_max = 0u64;
                         for k in g * b..((g + 1) * b).min(k_out) {
                             let mut wk = 0u64;
-                            for c in 0..c_in {
+                            for (c, &nz) in nz0.iter().enumerate() {
                                 let n_wcols = vw.nz_cols(k, c).len() as u64;
                                 if n_wcols == 0 {
                                     continue;
                                 }
-                                let base = c * stride;
-                                let nz = pref_nz[base + srange.end] - pref_nz[base + srange.start];
-                                let live =
-                                    pref_live[base + srange.end] - pref_live[base + srange.start];
-                                wk += n_wcols * nz + ctx_cycles * live;
+                                wk += n_wcols * nz + ctx_cycles * u64::from(nz > 0);
                             }
-                            compute = compute.max(wk);
+                            per_strip_max = per_strip_max.max(wk);
                         }
-                        let input_bytes: u64 = if g == 0 || !input_resident {
-                            srange.map(|s| strip_in_bytes[s]).sum()
-                        } else {
-                            0
-                        };
-                        let weight_bytes = if t == 0 || !plan.weight_group_fits {
-                            group_w_bytes[g]
-                        } else {
-                            0
-                        };
-                        demands.push(TileDemand {
-                            compute,
-                            input_bytes,
-                            weight_bytes,
-                        });
+                        for t in 0..plan.tiles_per_group {
+                            let srange = plan.tile_strips(t);
+                            let len = (srange.end - srange.start) as u64;
+                            let input_bytes: u64 = if g == 0 || !input_resident {
+                                srange.map(|s| strip_in_bytes[s]).sum()
+                            } else {
+                                0
+                            };
+                            let weight_bytes = if t == 0 || !plan.weight_group_fits {
+                                group_w_bytes[g]
+                            } else {
+                                0
+                            };
+                            demands.push(TileDemand {
+                                compute: len * per_strip_max,
+                                input_bytes,
+                                weight_bytes,
+                            });
+                        }
+                    }
+                } else {
+                    // Exact per-strip walk, with prefix sums over strips
+                    // per channel: Σ nzI and live strips of any strip
+                    // range in O(1).
+                    let stride = strips + 1;
+                    let mut pref_nz = vec![0u64; c_in * stride];
+                    let mut pref_live = vec![0u64; c_in * stride];
+                    for c in 0..c_in {
+                        for s in 0..strips {
+                            let nz = nz_in_per_cs[c * strips + s];
+                            pref_nz[c * stride + s + 1] = pref_nz[c * stride + s] + nz;
+                            pref_live[c * stride + s + 1] =
+                                pref_live[c * stride + s] + u64::from(nz > 0);
+                        }
+                    }
+                    for g in 0..n_groups {
+                        for t in 0..plan.tiles_per_group {
+                            let srange = plan.tile_strips(t);
+                            // Slowest filter in the group over the tile's
+                            // strips.
+                            let mut compute = 0u64;
+                            for k in g * b..((g + 1) * b).min(k_out) {
+                                let mut wk = 0u64;
+                                for c in 0..c_in {
+                                    let n_wcols = vw.nz_cols(k, c).len() as u64;
+                                    if n_wcols == 0 {
+                                        continue;
+                                    }
+                                    let base = c * stride;
+                                    let nz =
+                                        pref_nz[base + srange.end] - pref_nz[base + srange.start];
+                                    let live = pref_live[base + srange.end]
+                                        - pref_live[base + srange.start];
+                                    wk += n_wcols * nz + ctx_cycles * live;
+                                }
+                                compute = compute.max(wk);
+                            }
+                            let input_bytes: u64 = if g == 0 || !input_resident {
+                                srange.map(|s| strip_in_bytes[s]).sum()
+                            } else {
+                                0
+                            };
+                            let weight_bytes = if t == 0 || !plan.weight_group_fits {
+                                group_w_bytes[g]
+                            } else {
+                                0
+                            };
+                            demands.push(TileDemand {
+                                compute,
+                                input_bytes,
+                                weight_bytes,
+                            });
+                        }
                     }
                 }
                 demands
@@ -621,36 +723,44 @@ fn add5(a: &mut (u64, u64, u64, u64, u64), b: (u64, u64, u64, u64, u64)) {
     a.4 += b.4;
 }
 
-/// Add one diagonal partial column into a single filter's output plane —
-/// the slice-level twin of [`Accumulator::add_partial`], identical
-/// accumulation order so the parallel path is bit-for-bit the sequential
-/// result.
+/// The valid diagonal window of one strip: diagonal element `d` lands on
+/// output row `strip_base + d - (kh - 1) + pad`, which is monotone in
+/// `d`, so the rows inside `[0, h_out)` form one contiguous run. Returns
+/// `(d_lo, d_hi, row_lo)` with `d_lo <= d_hi`: diagonal elements
+/// `[d_lo, d_hi)` accumulate into rows `[row_lo, row_lo + d_hi - d_lo)`.
+/// Exactly the `Some` set of `index_unit::output_row` over
+/// `0..diag_len`, precomputed once per strip so the MAC accumulation is
+/// a branch-free contiguous add.
 #[inline]
-#[allow(clippy::too_many_arguments)]
-fn accumulate_diag(
-    plane: &mut [f32],
-    h_out: usize,
-    w_out: usize,
-    diag: &[f32],
+fn diag_clip(
     strip_base: usize,
-    out_col: Option<usize>,
-    cols: usize,
+    diag_len: usize,
+    kh: usize,
     pad: usize,
-) {
-    let Some(col) = out_col else { return };
-    for (d, &v) in diag.iter().enumerate() {
-        if let Some(row) = output_row(strip_base, d, cols, pad, h_out) {
-            plane[row * w_out + col] += v;
-        }
-    }
+    h_out: usize,
+) -> (usize, usize, usize) {
+    let shift = strip_base as i64 + pad as i64 - (kh as i64 - 1);
+    let d_lo = (-shift).max(0) as usize;
+    let d_hi = (h_out as i64 - shift).min(diag_len as i64).max(d_lo as i64) as usize;
+    let row_lo = if d_hi > d_lo {
+        (shift + d_lo as i64) as usize
+    } else {
+        0
+    };
+    (d_lo, d_hi, row_lo)
 }
 
 /// The functional dataflow, parallel and allocation-free: filters split
-/// across `threads` scoped workers (their `[H_out, W_out]` output planes
-/// are disjoint), each worker reusing three scratch buffers for the whole
-/// layer. Per filter the (channel, strip, input column, weight column)
-/// order matches the sequential trace path exactly, so outputs are
-/// bit-identical for every worker count.
+/// into per-worker chunks on the persistent pool (their `[H_out, W_out]`
+/// output planes are disjoint), each worker borrowing its scratch from
+/// the thread's [`crate::util::scratch`] arena. Each filter accumulates
+/// into a **transposed** (`[W_out, H_out]`) scratch plane, so one issued
+/// pair's partial column is a contiguous, branch-free add of the clipped
+/// diagonal run ([`diag_clip`]); the plane is un-transposed once at the
+/// end. Per filter the (channel, strip, input column, weight column,
+/// diagonal) order matches the sequential trace path exactly, and a
+/// transpose only permutes independently-accumulated sums — so outputs
+/// are bit-identical for every worker count and to the pre-SoA loop.
 #[allow(clippy::too_many_arguments)]
 fn functional_forward(
     input: &Tensor,
@@ -676,98 +786,112 @@ fn functional_forward(
     } = d;
     let plane = h_out * w_out;
     let w_in = input.shape()[2];
+    let diag_len = r + kh - 1;
     let mut out = vec![0.0f32; k_out * plane];
     let workers = threads.max(1).min(k_out.max(1));
     let chunk = k_out.div_ceil(workers).max(1);
-    std::thread::scope(|scope| {
-        for (ti, out_chunk) in out.chunks_mut(chunk * plane).enumerate() {
-            let k_lo = ti * chunk;
-            scope.spawn(move || {
-                // Per-worker scratch — the only buffers the hot loop
-                // touches; no allocation happens past this point.
-                let mut icol = vec![0.0f32; r];
-                let mut wcol = vec![0.0f32; kh];
-                let mut diag = vec![0.0f32; r + kh - 1];
-                for (ki, kplane) in out_chunk.chunks_mut(plane).enumerate() {
-                    let k = k_lo + ki;
-                    kplane.fill(bias.map_or(0.0, |bs| bs[k]));
-                    for c in 0..c_in {
-                        match mode {
-                            Mode::VectorSparse => {
-                                let wcols = vw.nz_cols(k, c);
-                                if wcols.is_empty() {
-                                    continue;
+    crate::util::par_chunks_mut(&mut out, chunk * plane, |ti, out_chunk| {
+        let k_lo = ti * chunk;
+        // Per-worker scratch from the thread's arena — the only buffers
+        // the hot loop touches; nothing allocates past the worker's
+        // first-ever layer.
+        let mut icol = crate::util::scratch::take_f32(r, 0.0);
+        let mut wcol = crate::util::scratch::take_f32(kh, 0.0);
+        let mut diag = crate::util::scratch::take_f32(diag_len, 0.0);
+        let mut tplane = crate::util::scratch::take_f32(plane, 0.0);
+        for (ki, kplane) in out_chunk.chunks_mut(plane).enumerate() {
+            let k = k_lo + ki;
+            tplane.fill(bias.map_or(0.0, |bs| bs[k]));
+            for c in 0..c_in {
+                match mode {
+                    Mode::VectorSparse => {
+                        let wcols = vw.nz_cols(k, c);
+                        if wcols.is_empty() {
+                            continue;
+                        }
+                        let wvals = vw.nz_vals(k, c);
+                        for s in 0..strips {
+                            let icols = va.nz_cols(c, s);
+                            if icols.is_empty() {
+                                continue;
+                            }
+                            let (soa, n) = va.nz_group_soa(c, s);
+                            let (d_lo, d_hi, row_lo) =
+                                diag_clip(s * r, diag_len, kh, spec.pad, h_out);
+                            for (pos, &i) in icols.iter().enumerate() {
+                                // Gather this vector from the SoA planes.
+                                let mut idx = pos;
+                                for iv in icol.iter_mut() {
+                                    *iv = soa[idx];
+                                    idx += n;
                                 }
-                                let wvals = vw.nz_vals(k, c);
-                                for s in 0..strips {
-                                    let icols = va.nz_cols(c, s);
-                                    let ivals = va.nz_vals(c, s);
-                                    let base = s * r;
-                                    for (pos, &i) in icols.iter().enumerate() {
-                                        let col = &ivals[pos * r..(pos + 1) * r];
-                                        for (wpos, &j) in wcols.iter().enumerate() {
-                                            let wv = &wvals[wpos * kh..(wpos + 1) * kh];
-                                            diagonal_product_into(col, wv, &mut diag);
-                                            let oc = output_col(
-                                                i as usize,
-                                                j as usize,
-                                                spec.pad,
-                                                w_out,
-                                            );
-                                            accumulate_diag(
-                                                kplane,
-                                                h_out,
-                                                w_out,
-                                                &diag,
-                                                base,
-                                                oc,
-                                                kh,
-                                                spec.pad,
-                                            );
-                                        }
+                                for (wpos, &j) in wcols.iter().enumerate() {
+                                    let Some(oc) =
+                                        output_col(i as usize, j as usize, spec.pad, w_out)
+                                    else {
+                                        continue; // boundary X slot
+                                    };
+                                    let wv = &wvals[wpos * kh..(wpos + 1) * kh];
+                                    diagonal_product_into(&icol, wv, &mut diag);
+                                    let dst = oc * h_out + row_lo;
+                                    for (t, &dv) in tplane[dst..dst + (d_hi - d_lo)]
+                                        .iter_mut()
+                                        .zip(&diag[d_lo..d_hi])
+                                    {
+                                        *t += dv;
                                     }
                                 }
                             }
-                            Mode::Dense => {
-                                for s in 0..strips {
-                                    let base = s * r;
-                                    let rows_here = ((s + 1) * r).min(h) - base;
-                                    for i in 0..w_in {
-                                        icol.fill(0.0);
-                                        for (rr, cv) in
-                                            icol.iter_mut().enumerate().take(rows_here)
-                                        {
-                                            *cv = input.at3(c, base + rr, i);
-                                        }
-                                        for j in 0..kw {
-                                            for (rr, wv) in wcol.iter_mut().enumerate() {
-                                                *wv = weight.at4(k, c, rr, j);
-                                            }
-                                            diagonal_product_into(&icol, &wcol, &mut diag);
-                                            let oc = output_col(i, j, spec.pad, w_out);
-                                            accumulate_diag(
-                                                kplane,
-                                                h_out,
-                                                w_out,
-                                                &diag,
-                                                base,
-                                                oc,
-                                                kh,
-                                                spec.pad,
-                                            );
-                                        }
+                        }
+                    }
+                    Mode::Dense => {
+                        for s in 0..strips {
+                            let base = s * r;
+                            let rows_here = ((s + 1) * r).min(h) - base;
+                            let (d_lo, d_hi, row_lo) =
+                                diag_clip(base, diag_len, kh, spec.pad, h_out);
+                            for i in 0..w_in {
+                                icol.fill(0.0);
+                                for (rr, cv) in icol.iter_mut().enumerate().take(rows_here) {
+                                    *cv = input.at3(c, base + rr, i);
+                                }
+                                for j in 0..kw {
+                                    let Some(oc) = output_col(i, j, spec.pad, w_out) else {
+                                        continue;
+                                    };
+                                    for (rr, wv) in wcol.iter_mut().enumerate() {
+                                        *wv = weight.at4(k, c, rr, j);
+                                    }
+                                    diagonal_product_into(&icol, &wcol, &mut diag);
+                                    let dst = oc * h_out + row_lo;
+                                    for (t, &dv) in tplane[dst..dst + (d_hi - d_lo)]
+                                        .iter_mut()
+                                        .zip(&diag[d_lo..d_hi])
+                                    {
+                                        *t += dv;
                                     }
                                 }
                             }
                         }
                     }
                 }
-            });
+            }
+            // Un-transpose the accumulated [W_out, H_out] plane into the
+            // row-major output chunk (a pure permutation of finished
+            // sums — no reordering of additions).
+            for (row, out_row) in kplane.chunks_exact_mut(w_out).enumerate() {
+                for (col, o) in out_row.iter_mut().enumerate() {
+                    *o = tplane[col * h_out + row];
+                }
+            }
         }
+        crate::util::scratch::recycle_f32(icol);
+        crate::util::scratch::recycle_f32(wcol);
+        crate::util::scratch::recycle_f32(diag);
+        crate::util::scratch::recycle_f32(tplane);
     });
     Tensor::from_vec(&[k_out, h_out, w_out], out)
 }
-
 
 #[cfg(test)]
 mod tests {
@@ -1176,6 +1300,102 @@ mod tests {
                 dense_pairs,
                 "accounting mismatch"
             );
+        }
+    }
+
+    /// ISSUE 5: the analytic (closed-form) scheduler fast paths —
+    /// uniform-strip tally collapse, one-tile-per-group demand reuse,
+    /// all-uniform tile scaling — must be bit-identical to the exact
+    /// per-strip walk across randomized shapes, densities (0, sparse,
+    /// dense — dense triggers the uniform path) and both memory models.
+    #[test]
+    fn analytic_scheduler_matches_exact_walk() {
+        let mut rng = Pcg32::seeded(501);
+        let spec = ConvSpec { stride: 1, pad: 1 };
+        for case in 0..24 {
+            let mut cfg = small_cfg(rng.range(1, 4), rng.range(2, 7));
+            cfg.context_switch_cycles = rng.range(0, 3) as u64;
+            if case % 2 == 0 {
+                // Starved memory system: tiling (and its analytic
+                // demand paths) actually engage.
+                cfg.mem_model = MemModel::Tiled;
+                cfg.sram.input_bytes = rng.range(64, 2048);
+                cfg.sram.weight_bytes = rng.range(64, 2048);
+                cfg.dram_bytes_per_cycle = [0.5, 2.0, 8.0][rng.range(0, 3)];
+            }
+            let c_in = rng.range(1, 4);
+            let k_out = rng.range(1, 7);
+            let h = rng.range(4, 18);
+            let w = rng.range(4, 12);
+            let density = [0.0f32, 0.15, 0.5, 1.0][case % 4];
+            let input = if case % 5 == 0 {
+                // Vertically tiled rows: every strip identical, so the
+                // uniform fast path engages with nontrivial sparsity.
+                let strip = random_sparse(&mut rng, &[c_in, cfg.pe.rows, w], 0.4);
+                let mut t = Tensor::zeros(&[c_in, h, w]);
+                for c in 0..c_in {
+                    for row in 0..h {
+                        for col in 0..w {
+                            *t.at3_mut(c, row, col) = strip.at3(c, row % cfg.pe.rows, col);
+                        }
+                    }
+                }
+                t
+            } else {
+                random_sparse(&mut rng, &[c_in, h, w], density)
+            };
+            let weight = random_sparse(&mut rng, &[k_out, c_in, 3, 3], 0.5);
+            let mut tr = Trace::disabled();
+            for mode in [Mode::Dense, Mode::VectorSparse] {
+                let fast = simulate_layer(
+                    &input, &weight, None, &cfg, spec, mode, false, &mut tr,
+                );
+                let mut exact_cfg = cfg;
+                exact_cfg.exact_scheduler = true;
+                let exact = simulate_layer(
+                    &input, &weight, None, &exact_cfg, spec, mode, false, &mut tr,
+                );
+                assert_eq!(fast.stats, exact.stats, "case {case} mode {mode:?}");
+                assert_eq!(
+                    fast.dense_cycles, exact.dense_cycles,
+                    "case {case} mode {mode:?}"
+                );
+            }
+        }
+    }
+
+    /// `diag_clip` must reproduce the `Some` set of
+    /// `index_unit::output_row` exactly: same valid window, same rows.
+    #[test]
+    fn diag_clip_matches_output_row() {
+        for base in [0usize, 3, 7, 20] {
+            for kh in [1usize, 3, 5] {
+                for pad in [0usize, 1, 2] {
+                    for h_out in [1usize, 5, 9] {
+                        for r in [1usize, 4, 7] {
+                            let dl = r + kh - 1;
+                            let (d_lo, d_hi, row_lo) = diag_clip(base, dl, kh, pad, h_out);
+                            assert!(d_lo <= d_hi && d_hi <= dl);
+                            for d in 0..dl {
+                                let want =
+                                    crate::sim::index_unit::output_row(base, d, kh, pad, h_out);
+                                if d >= d_lo && d < d_hi {
+                                    assert_eq!(
+                                        want,
+                                        Some(row_lo + (d - d_lo)),
+                                        "base {base} kh {kh} pad {pad} h_out {h_out} d {d}"
+                                    );
+                                } else {
+                                    assert_eq!(
+                                        want, None,
+                                        "base {base} kh {kh} pad {pad} h_out {h_out} d {d}"
+                                    );
+                                }
+                            }
+                        }
+                    }
+                }
+            }
         }
     }
 

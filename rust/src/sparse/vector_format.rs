@@ -4,6 +4,21 @@
 //! Only nonzero vectors are kept (matching "zero input data and weight data
 //! ... will not be in SRAM"); each surviving vector carries its original
 //! index so the shared accumulator flow can place partial sums correctly.
+//!
+//! ## Layout (ISSUE 5): structure-of-arrays
+//!
+//! The value-carrying activation encode is stored as separate contiguous
+//! **index planes** (`nz_flat` CSR lists) and **payload planes**: within a
+//! `(channel, strip)` group of `n` nonzero vectors, element `p` of every
+//! vector sits contiguously in plane `p` (`vals[p * n + v]`), instead of
+//! the old array-of-vectors order (`vals[v * r + p]`). The encoder fills
+//! each plane with one contiguous row sweep and detects occupancy with a
+//! branch-free bitwise-OR accumulator, so the per-image activation encode
+//! autovectorizes; the old per-vector layout stays reachable through the
+//! [`VectorActivations::nz_vals_aos`] conversion and is pinned equivalent
+//! by the round-trip tests below. Weight payloads keep the per-vector
+//! order ([`VectorWeights::nz_vals`]): a weight vector is the `KH`-element
+//! operand the MAC kernel consumes whole, so per-vector *is* its plane.
 
 use crate::sparse::bitset::Bitset;
 use crate::tensor::Tensor;
@@ -32,14 +47,14 @@ pub struct VectorActivations {
     nz_flat: Vec<u16>,
     /// `c * strips + 1` offsets into `nz_flat`.
     nz_offsets: Vec<u32>,
-    /// Packed vector payloads: `r` values per nonzero vector, in `nz_flat`
-    /// order, zero-padded for ragged last strips — the compressed data the
-    /// SRAM actually holds. Value `p` of vector `nz_flat[i]` sits at
-    /// `vals_flat[i * r + p]`, so the functional dataflow reads contiguous
-    /// slices instead of re-gathering through `Tensor::at3`. Empty for
-    /// [`Self::index_only`] encodes.
+    /// Packed vector payloads in **plane-major (SoA) order**: the group
+    /// `(c, strip)` with `n = nz_cols(c, strip).len()` vectors occupies
+    /// `vals_flat[off * r .. (off + n) * r]` (`off = nz_offsets[g]`), and
+    /// within the group element `p` of every vector is contiguous —
+    /// vector `v`'s element `p` sits at `group[p * n + v]`, zero-padded
+    /// for ragged last strips. Empty for [`Self::index_only`] encodes.
     vals_flat: Vec<f32>,
-    /// Whether `vals_flat` was packed (guards [`Self::nz_vals`]).
+    /// Whether `vals_flat` was packed (guards the payload accessors).
     has_vals: bool,
 }
 
@@ -69,29 +84,51 @@ impl VectorActivations {
         let mut vals_flat = Vec::new();
         nz_offsets.push(0);
         let data = t.data();
+        // Per-column occupancy as an OR of magnitude bits over the strip's
+        // rows: `x != 0.0  ⟺  (x.to_bits() & 0x7FFF_FFFF) != 0` (treats
+        // ±0.0 as zero and NaN/inf as nonzero, exactly like the float
+        // compare) — branch-free over contiguous rows, so it vectorizes.
+        let mut colbits = crate::util::scratch::take_u32(w, 0);
         for ci in 0..c {
             // One contiguous channel plane: rows are `w` apart.
             let chan = &data[ci * h * w..(ci + 1) * h * w];
             for s in 0..strips {
                 let row_lo = s * r;
                 let row_hi = ((s + 1) * r).min(h);
-                for col in 0..w {
-                    let nz = (row_lo..row_hi).any(|row| chan[row * w + col] != 0.0);
-                    if nz {
+                colbits.fill(0);
+                for row in row_lo..row_hi {
+                    let row_vals = &chan[row * w..(row + 1) * w];
+                    for (b, &x) in colbits.iter_mut().zip(row_vals) {
+                        *b |= x.to_bits() & 0x7FFF_FFFF;
+                    }
+                }
+                let group_start = nz_flat.len();
+                for (col, &b) in colbits.iter().enumerate() {
+                    if b != 0 {
                         occ.set((ci * strips + s) * w + col, true);
                         nz_flat.push(col as u16);
-                        if pack_vals {
-                            let start = vals_flat.len();
-                            vals_flat.resize(start + r, 0.0);
-                            for (p, row) in (row_lo..row_hi).enumerate() {
-                                vals_flat[start + p] = chan[row * w + col];
-                            }
+                    }
+                }
+                let n = nz_flat.len() - group_start;
+                if pack_vals && n > 0 {
+                    // SoA payload: one contiguous plane per element row,
+                    // gathered from one row sweep each; planes past the
+                    // ragged end stay at the zero fill.
+                    let base = vals_flat.len();
+                    vals_flat.resize(base + n * r, 0.0);
+                    let cols = &nz_flat[group_start..];
+                    for (p, row) in (row_lo..row_hi).enumerate() {
+                        let row_vals = &chan[row * w..(row + 1) * w];
+                        let plane = &mut vals_flat[base + p * n..base + (p + 1) * n];
+                        for (dst, &col) in plane.iter_mut().zip(cols) {
+                            *dst = row_vals[col as usize];
                         }
                     }
                 }
                 nz_offsets.push(nz_flat.len() as u32);
             }
         }
+        crate::util::scratch::recycle_u32(colbits);
         VectorActivations {
             c,
             strips,
@@ -134,16 +171,41 @@ impl VectorActivations {
         &self.nz_flat[self.nz_offsets[g] as usize..self.nz_offsets[g + 1] as usize]
     }
 
-    /// Packed payloads of the nonzero vectors of one `(c, strip)`:
-    /// `nz_cols(c, strip).len() * r` values; position `pos` of the index
-    /// list owns the sub-slice `[pos * r, (pos + 1) * r)` (zero-padded for
-    /// ragged last strips). Panics on an [`Self::index_only`] encode.
+    /// SoA payload of one `(c, strip)` group: the full `n * r` plane-major
+    /// slice plus `n` (the group's nonzero-vector count). Element `p` of
+    /// the vector at index-list position `pos` sits at `slice[p * n + pos]`
+    /// (zero-padded for ragged last strips). Panics on an
+    /// [`Self::index_only`] encode.
     #[inline]
-    pub fn nz_vals(&self, c: usize, strip: usize) -> &[f32] {
-        assert!(self.has_vals, "nz_vals on an index-only encode");
+    pub fn nz_group_soa(&self, c: usize, strip: usize) -> (&[f32], usize) {
+        assert!(self.has_vals, "nz_group_soa on an index-only encode");
         let g = c * self.strips + strip;
-        &self.vals_flat
-            [self.nz_offsets[g] as usize * self.r..self.nz_offsets[g + 1] as usize * self.r]
+        let (lo, hi) = (self.nz_offsets[g] as usize, self.nz_offsets[g + 1] as usize);
+        (&self.vals_flat[lo * self.r..hi * self.r], hi - lo)
+    }
+
+    /// One payload plane of `(c, strip)`: element `p` (row `strip * r + p`)
+    /// of every nonzero vector, in index-list order.
+    #[inline]
+    pub fn nz_plane(&self, c: usize, strip: usize, p: usize) -> &[f32] {
+        let (soa, n) = self.nz_group_soa(c, strip);
+        &soa[p * n..(p + 1) * n]
+    }
+
+    /// The pre-SoA **array-of-vectors** payload of one `(c, strip)` — the
+    /// conversion that keeps the old layout reachable: position `pos` of
+    /// the index list owns `[pos * r, (pos + 1) * r)`, exactly the slice
+    /// `nz_vals` used to return. Allocates; for tests and format
+    /// interop, not the hot path.
+    pub fn nz_vals_aos(&self, c: usize, strip: usize) -> Vec<f32> {
+        let (soa, n) = self.nz_group_soa(c, strip);
+        let mut out = vec![0.0f32; n * self.r];
+        for pos in 0..n {
+            for p in 0..self.r {
+                out[pos * self.r + p] = soa[p * n + pos];
+            }
+        }
+        out
     }
 
     /// Elements resident in the input SRAM (nonzero vectors × R).
@@ -344,9 +406,9 @@ mod tests {
     }
 
     #[test]
-    fn activation_values_packed_in_index_order() {
-        // Values must sit next to their indices: vals[pos*r..] is exactly
-        // the column strip of nz_cols[pos], zero-padded when ragged.
+    fn activation_values_packed_plane_major() {
+        // SoA: within a group, plane p holds element p of every vector;
+        // the AoS conversion reproduces the old per-vector layout.
         let mut t = Tensor::zeros(&[1, 5, 3]);
         *t.at3_mut(0, 0, 1) = 2.0; // strip 0 col 1: [2, 3]
         *t.at3_mut(0, 1, 1) = 3.0;
@@ -354,10 +416,17 @@ mod tests {
         *t.at3_mut(0, 4, 0) = 5.0; // strip 2 (ragged, 1 row) col 0: [5, 0]
         let va = VectorActivations::from_tensor(&t, 2);
         assert_eq!(va.nz_cols(0, 0), &[1, 2]);
-        assert_eq!(va.nz_vals(0, 0), &[2.0, 3.0, 0.0, 4.0]);
-        assert!(va.nz_vals(0, 1).is_empty());
+        let (soa, n) = va.nz_group_soa(0, 0);
+        assert_eq!(n, 2);
+        assert_eq!(soa, &[2.0, 0.0, 3.0, 4.0]); // plane 0 | plane 1
+        assert_eq!(va.nz_plane(0, 0, 0), &[2.0, 0.0]);
+        assert_eq!(va.nz_plane(0, 0, 1), &[3.0, 4.0]);
+        // AoS conversion = the pre-SoA `nz_vals` layout.
+        assert_eq!(va.nz_vals_aos(0, 0), vec![2.0, 3.0, 0.0, 4.0]);
+        assert!(va.nz_group_soa(0, 1).0.is_empty());
         assert_eq!(va.nz_cols(0, 2), &[0]);
-        assert_eq!(va.nz_vals(0, 2), &[5.0, 0.0]);
+        assert_eq!(va.nz_vals_aos(0, 2), vec![5.0, 0.0]);
+        assert_eq!(va.nz_group_soa(0, 2).0, &[5.0, 0.0]); // n = 1: SoA == AoS
     }
 
     #[test]
@@ -390,13 +459,18 @@ mod tests {
             for ci in 0..c {
                 for s in 0..va.strips {
                     let cols = va.nz_cols(ci, s);
-                    let vals = va.nz_vals(ci, s);
-                    assert_eq!(vals.len(), cols.len() * r);
+                    let (soa, n) = va.nz_group_soa(ci, s);
+                    assert_eq!(n, cols.len());
+                    assert_eq!(soa.len(), n * r);
+                    let aos = va.nz_vals_aos(ci, s);
                     for (pos, &col) in cols.iter().enumerate() {
                         for p in 0..r {
                             let row = s * r + p;
                             let want = if row < h { t.at3(ci, row, col as usize) } else { 0.0 };
-                            assert_eq!(vals[pos * r + p], want);
+                            // Plane-major storage and the AoS conversion
+                            // agree with the tensor element for element.
+                            assert_eq!(soa[p * n + pos], want);
+                            assert_eq!(aos[pos * r + p], want);
                         }
                     }
                 }
@@ -428,7 +502,7 @@ mod tests {
     fn index_only_activation_vals_panics() {
         let t = Tensor::from_vec(&[1, 2, 2], vec![1.0; 4]);
         let va = VectorActivations::index_only(&t, 2);
-        let _ = va.nz_vals(0, 0);
+        let _ = va.nz_group_soa(0, 0);
     }
 
     #[test]

@@ -67,8 +67,20 @@ pub fn im2col(input: &Tensor, kh: usize, kw: usize, stride: usize, pad: usize) -
     let h_out = (h + 2 * pad - kh) / stride + 1;
     let w_out = (w + 2 * pad - kw) / stride + 1;
     let mut out = Tensor::zeros(&[c_in * kh * kw, h_out * w_out]);
-    let od = out.data_mut();
+    im2col_fill(input, kh, kw, stride, pad, out.data_mut());
+    out
+}
+
+/// [`im2col`] into a caller-owned, pre-zeroed `kdim * cols` buffer — the
+/// multithreaded forward recycles the patch matrix (megabytes per conv
+/// layer) through the scratch arena instead of re-allocating and
+/// page-faulting it on every call.
+fn im2col_fill(input: &Tensor, kh: usize, kw: usize, stride: usize, pad: usize, od: &mut [f32]) {
+    let (c_in, h, w) = (input.shape()[0], input.shape()[1], input.shape()[2]);
+    let h_out = (h + 2 * pad - kh) / stride + 1;
+    let w_out = (w + 2 * pad - kw) / stride + 1;
     let cols = h_out * w_out;
+    assert_eq!(od.len(), c_in * kh * kw * cols, "patch buffer size");
     for c in 0..c_in {
         for i in 0..kh {
             for j in 0..kw {
@@ -90,7 +102,6 @@ pub fn im2col(input: &Tensor, kh: usize, kw: usize, stride: usize, pad: usize) -
             }
         }
     }
-    out
 }
 
 /// Convolution via im2col + matmul. Numerically identical to
@@ -126,10 +137,11 @@ pub fn conv2d_im2col(
     out.reshape(&[k_out, h_out, w_out])
 }
 
-/// Multithreaded im2col convolution: output channels are split across
-/// `threads` std threads (the patch matrix is shared read-only). This is
-/// the coordinator's fast functional path when PJRT artifacts are not in
-/// play. Numerically identical to [`conv2d_im2col`].
+/// Multithreaded im2col convolution: output channels are split into
+/// per-worker chunks on the persistent pool (the patch matrix is shared
+/// read-only) — no thread spawns per call. This is the coordinator's
+/// fast functional path when PJRT artifacts are not in play. Numerically
+/// identical to [`conv2d_im2col`].
 pub fn conv2d_im2col_mt(
     input: &Tensor,
     weight: &Tensor,
@@ -152,35 +164,35 @@ pub fn conv2d_im2col_mt(
     let w_out = super::conv::out_dim(input.shape()[2], kw, spec);
     let cols = h_out * w_out;
     let kdim = c_in * kh * kw;
-    let patches = im2col(input, kh, kw, spec.stride, spec.pad);
-    let pd = patches.data();
+    // Patch matrix from the scratch arena: the biggest per-call buffer
+    // (MBs per layer) allocates once per thread, then recycles.
+    let mut patches = crate::util::scratch::take_f32(kdim * cols, 0.0);
+    im2col_fill(input, kh, kw, spec.stride, spec.pad, &mut patches);
+    let pd: &[f32] = &patches;
     let wd = weight.data();
 
     let mut out = vec![0.0f32; k_out * cols];
     let chunk = k_out.div_ceil(threads);
-    std::thread::scope(|s| {
-        for (ti, out_chunk) in out.chunks_mut(chunk * cols).enumerate() {
-            let k_lo = ti * chunk;
-            s.spawn(move || {
-                let rows = out_chunk.len() / cols;
-                if let Some(b) = bias {
-                    for (ki, orow) in out_chunk.chunks_mut(cols).enumerate() {
-                        orow.fill(b[k_lo + ki]);
-                    }
-                }
-                // Same blocked panel kernel as `matmul`, on this worker's
-                // filter rows against the shared patch matrix.
-                matmul_acc_into(
-                    out_chunk,
-                    &wd[k_lo * kdim..(k_lo + rows) * kdim],
-                    pd,
-                    rows,
-                    kdim,
-                    cols,
-                );
-            });
+    crate::util::par_chunks_mut(&mut out, chunk * cols, |ti, out_chunk| {
+        let k_lo = ti * chunk;
+        let rows = out_chunk.len() / cols;
+        if let Some(b) = bias {
+            for (ki, orow) in out_chunk.chunks_mut(cols).enumerate() {
+                orow.fill(b[k_lo + ki]);
+            }
         }
+        // Same blocked panel kernel as `matmul`, on this worker's
+        // filter rows against the shared patch matrix.
+        matmul_acc_into(
+            out_chunk,
+            &wd[k_lo * kdim..(k_lo + rows) * kdim],
+            pd,
+            rows,
+            kdim,
+            cols,
+        );
     });
+    crate::util::scratch::recycle_f32(patches);
     Tensor::from_vec(&[k_out, h_out, w_out], out)
 }
 

@@ -9,12 +9,35 @@ pub mod bench;
 pub mod json;
 pub mod logging;
 pub mod parallel;
+pub mod pool;
 pub mod rng;
+pub mod scratch;
 pub mod stats;
 
 pub use json::Json;
-pub use parallel::par_chunk_map;
+pub use parallel::{par_chunk_map, par_chunks_mut};
 pub use rng::Pcg32;
+
+/// The one host-thread default shared by every layer of the stack (the
+/// CLI, the engine, the experiment driver and the simulator all used to
+/// carry their own): one worker per available core, `1` when the core
+/// count cannot be determined. A `--threads 0` / `SimConfig::threads == 0`
+/// resolves through this ("auto").
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism().map_or(1, |n| n.get())
+}
+
+/// Resolve a user-facing thread count: `0` means auto
+/// ([`default_threads`]), anything else is taken literally. The one place
+/// the `--threads 0` / `SimConfig::threads == 0` convention is
+/// implemented.
+pub fn resolve_threads(n: usize) -> usize {
+    if n == 0 {
+        default_threads()
+    } else {
+        n
+    }
+}
 
 /// Integer ceiling division: smallest `q` with `q * d >= n`.
 #[inline]

@@ -1,18 +1,77 @@
-//! Minimal scoped-thread fan-out helper (rayon is unavailable offline —
-//! DESIGN.md §9). One implementation of the "split an index range into
-//! contiguous chunks, evaluate each on a worker, merge in order" pattern
-//! shared by the simulation engine, the batch runner and the multi-config
-//! experiment driver.
+//! Parallel fan-out helpers (rayon is unavailable offline — DESIGN.md §9).
+//!
+//! Since ISSUE 5 both entry points run on the persistent
+//! [`super::pool::WorkerPool`] instead of spawning scoped threads per
+//! call: a parallel region costs a queue push and a wake-up, not N thread
+//! spawns. The old per-call `std::thread::scope` implementation is kept
+//! behind [`force_scoped`] as the measured baseline
+//! (`benches/bench_sim_perf.rs`) and as the reference the pool is pinned
+//! bit-identical against (`tests/pool_determinism.rs`).
+
+use super::pool::WorkerPool;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Mutex;
+
+/// When set, every fan-out below spawns scoped threads per call (the
+/// pre-pool behavior). Results are bit-identical either way — this is a
+/// benchmarking/verification knob, not a semantic one.
+static FORCE_SCOPED: AtomicBool = AtomicBool::new(false);
+
+/// Toggle the scoped-thread fallback (see [`FORCE_SCOPED`]). Used by the
+/// perf benches to measure the spawn-per-call baseline and by the
+/// determinism tests; process-global. Tests that depend on which mode
+/// actually runs must hold [`scoped_test_lock`] around the toggle —
+/// otherwise a concurrently running test can flip the flag mid-measure
+/// (results stay bit-identical either way, but the pinned mode would
+/// silently not be the mode exercised).
+pub fn force_scoped(on: bool) {
+    FORCE_SCOPED.store(on, Ordering::SeqCst);
+}
+
+/// Whether the scoped-thread fallback is active.
+pub fn scoped_mode() -> bool {
+    FORCE_SCOPED.load(Ordering::SeqCst)
+}
+
+/// Holds the process-wide mode lock; restores pooled mode when dropped
+/// (panic-safe), so a failing test can't leave the process scoped.
+pub struct ScopedModeLock {
+    _guard: std::sync::MutexGuard<'static, ()>,
+}
+
+impl Drop for ScopedModeLock {
+    fn drop(&mut self) {
+        FORCE_SCOPED.store(false, Ordering::SeqCst);
+    }
+}
+
+/// Serialize tests that toggle — or rely on — the execution mode: hold
+/// the returned lock for the whole comparison region. Recovers from
+/// poisoning (a panicked holder already restored nothing worse than the
+/// default mode, which `Drop` re-asserts).
+pub fn scoped_test_lock() -> ScopedModeLock {
+    static LOCK: Mutex<()> = Mutex::new(());
+    ScopedModeLock {
+        _guard: LOCK.lock().unwrap_or_else(|e| e.into_inner()),
+    }
+}
+
+/// Raw-pointer wrapper that lets pool tasks write disjoint regions of a
+/// caller-owned buffer. Callers must guarantee disjointness.
+struct SendPtr<T>(*mut T);
+// SAFETY: only used to address disjoint elements/chunks from parallel
+// tasks, all of which complete before the owning frame returns.
+unsafe impl<T: Send> Send for SendPtr<T> {}
+unsafe impl<T: Send> Sync for SendPtr<T> {}
 
 /// Evaluate `f` over `0..n` split into at most `workers` contiguous
-/// chunks, each on its own scoped thread, and return the per-chunk results
-/// in chunk order.
+/// chunks and return the per-chunk results in chunk order.
 ///
 /// Deterministic by construction: the chunk boundaries depend only on
 /// `(n, workers)` and results are merged in index order, so any
 /// order-sensitive fold inside `f` sees the same elements as a sequential
 /// loop over its range. With `workers <= 1` (or a single chunk) `f` runs
-/// inline on the caller's thread — no spawn overhead on small inputs.
+/// inline on the caller's thread — no pool round-trip on small inputs.
 pub fn par_chunk_map<T, F>(n: usize, workers: usize, f: F) -> Vec<T>
 where
     T: Send,
@@ -29,19 +88,74 @@ where
     }
     let mut slots: Vec<Option<T>> = Vec::new();
     slots.resize_with(n_chunks, || None);
-    std::thread::scope(|s| {
-        for (ci, slot) in slots.iter_mut().enumerate() {
-            let f = &f;
-            s.spawn(move || {
-                let lo = ci * chunk;
-                *slot = Some(f(lo..((ci + 1) * chunk).min(n)));
-            });
-        }
-    });
+    if scoped_mode() {
+        std::thread::scope(|s| {
+            for (ci, slot) in slots.iter_mut().enumerate() {
+                let f = &f;
+                s.spawn(move || {
+                    let lo = ci * chunk;
+                    *slot = Some(f(lo..((ci + 1) * chunk).min(n)));
+                });
+            }
+        });
+    } else {
+        let base = SendPtr(slots.as_mut_ptr());
+        WorkerPool::global().run(n_chunks, &|ci| {
+            let lo = ci * chunk;
+            let v = f(lo..((ci + 1) * chunk).min(n));
+            // SAFETY: each task index writes only its own slot, and all
+            // tasks finish before `run` returns (then `slots` is read).
+            unsafe {
+                *base.0.add(ci) = Some(v);
+            }
+        });
+    }
     slots
         .into_iter()
         .map(|r| r.expect("every chunk evaluated by its worker"))
         .collect()
+}
+
+/// Run `f(chunk_index, chunk)` over `data` split into `chunk_len`-sized
+/// mutable chunks (the last may be shorter), one pool task per chunk.
+///
+/// The disjoint-output twin of [`par_chunk_map`]: the functional dataflow
+/// and the im2col forward write per-filter planes into one output buffer.
+/// Chunk boundaries depend only on `(data.len(), chunk_len)`, so outputs
+/// are bit-identical for every worker count and to the scoped fallback.
+pub fn par_chunks_mut<T, F>(data: &mut [T], chunk_len: usize, f: F)
+where
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    assert!(chunk_len > 0, "chunk_len must be positive");
+    let len = data.len();
+    let n_chunks = len.div_ceil(chunk_len);
+    if n_chunks <= 1 {
+        if len > 0 {
+            f(0, data);
+        }
+        return;
+    }
+    if scoped_mode() {
+        std::thread::scope(|s| {
+            for (ci, chunk) in data.chunks_mut(chunk_len).enumerate() {
+                let f = &f;
+                s.spawn(move || f(ci, chunk));
+            }
+        });
+        return;
+    }
+    let base = SendPtr(data.as_mut_ptr());
+    WorkerPool::global().run(n_chunks, &|ci| {
+        let lo = ci * chunk_len;
+        let hi = ((ci + 1) * chunk_len).min(len);
+        // SAFETY: chunk `ci` covers `[lo, hi)` exclusively — the ranges
+        // are disjoint by construction and every task finishes before
+        // `run` returns, when the caller regains `&mut data`.
+        let chunk = unsafe { std::slice::from_raw_parts_mut(base.0.add(lo), hi - lo) };
+        f(ci, chunk);
+    });
 }
 
 #[cfg(test)]
@@ -70,5 +184,31 @@ mod tests {
         // With one worker the closure must still see the full range.
         let chunks = par_chunk_map(5, 1, |r| (r.start, r.end));
         assert_eq!(chunks, vec![(0, 5)]);
+    }
+
+    #[test]
+    fn chunks_mut_writes_every_element_once() {
+        for len in [0usize, 1, 5, 16, 33] {
+            for chunk_len in [1usize, 2, 7, 40] {
+                let mut data = vec![0u32; len];
+                par_chunks_mut(&mut data, chunk_len, |ci, chunk| {
+                    for (off, x) in chunk.iter_mut().enumerate() {
+                        *x += (ci * chunk_len + off) as u32 + 1;
+                    }
+                });
+                let want: Vec<u32> = (0..len as u32).map(|i| i + 1).collect();
+                assert_eq!(data, want, "len={len} chunk={chunk_len}");
+            }
+        }
+    }
+
+    #[test]
+    fn scoped_fallback_matches_pool() {
+        let _mode = scoped_test_lock();
+        force_scoped(false);
+        let pooled = par_chunk_map(100, 5, |r| r.sum::<usize>());
+        force_scoped(true);
+        let scoped = par_chunk_map(100, 5, |r| r.sum::<usize>());
+        assert_eq!(pooled, scoped);
     }
 }

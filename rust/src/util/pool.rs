@@ -1,0 +1,273 @@
+//! Persistent worker pool behind [`crate::util::par_chunk_map`] and
+//! [`crate::util::parallel::par_chunks_mut`].
+//!
+//! Every parallel site used to pay a `std::thread::scope` spawn per call —
+//! hundreds of spawns per simulated image once the engine, the batch
+//! runner and the serving profiler stack up. The pool spawns its workers
+//! **once** (lazily, on first parallel call) and keeps them parked on a
+//! condvar between jobs, so a parallel region costs a queue push and a
+//! wake-up instead of N thread spawns.
+//!
+//! ## Scheduling
+//!
+//! A job is a type-erased chunk runner plus an atomic next-chunk cursor:
+//! workers (and the submitting thread, which always participates) *steal*
+//! chunks from the shared cursor with `fetch_add`, so a slow chunk never
+//! idles the other workers — the classic self-scheduling form of work
+//! stealing. Multiple jobs can be in flight at once (nested parallel
+//! regions submit freely); the queue holds every job with unclaimed
+//! chunks and workers drain it in submission order.
+//!
+//! ## Determinism
+//!
+//! The pool schedules *execution*, never *meaning*: chunk boundaries are a
+//! pure function of the caller's `(n, workers)` and results are merged by
+//! chunk index, so any thread interleaving produces bit-identical output
+//! (pinned by `tests/pool_determinism.rs`).
+//!
+//! ## Deadlock freedom
+//!
+//! A submitter first runs chunks itself until the cursor is exhausted and
+//! only then blocks on the job's completion — it can only be waiting on
+//! chunks *claimed by running threads*. Nested jobs form a tree whose
+//! deepest chunks spawn no further work, so some claimed chunk always
+//! makes progress.
+
+use std::panic::AssertUnwindSafe;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+
+/// Type-erased pointer to a job's chunk runner. May dangle once the
+/// submitting frame returns; the completion protocol guarantees it is
+/// never dereferenced after that (see [`WorkerPool::run`]).
+struct TaskRef(*const (dyn Fn(usize) + Sync));
+// SAFETY: the pointee is `Sync` (shared-call safe) and the pointer is only
+// dereferenced under the job's claim/completion protocol.
+unsafe impl Send for TaskRef {}
+unsafe impl Sync for TaskRef {}
+
+/// Erase the closure's lifetime so it can sit in the job queue. The raw
+/// pointer is only dereferenced for claimed chunks, all of which complete
+/// before [`WorkerPool::run`] returns — the pointee outlives every use.
+#[allow(clippy::useless_transmute)]
+fn erase<'a>(f: &'a (dyn Fn(usize) + Sync + 'a)) -> TaskRef {
+    let p: *const (dyn Fn(usize) + Sync + 'a) = f;
+    TaskRef(unsafe {
+        std::mem::transmute::<
+            *const (dyn Fn(usize) + Sync + 'a),
+            *const (dyn Fn(usize) + Sync + 'static),
+        >(p)
+    })
+}
+
+struct Job {
+    task: TaskRef,
+    n_chunks: usize,
+    /// Next chunk index to claim (claimed past `n_chunks` = exhausted).
+    next: AtomicUsize,
+    /// Chunks claimed but not yet finished + chunks never claimed.
+    left: Mutex<usize>,
+    done_cv: Condvar,
+    /// First panic payload caught in a chunk; re-raised by the submitter
+    /// (same payload the `std::thread::scope` baseline would deliver).
+    panic: Mutex<Option<Box<dyn std::any::Any + Send>>>,
+}
+
+impl Job {
+    /// Claim and run chunks until the cursor is exhausted. Returns after
+    /// the *claim* fails; other claimed chunks may still be running.
+    fn run_chunks(&self) {
+        loop {
+            let i = self.next.fetch_add(1, Ordering::Relaxed);
+            if i >= self.n_chunks {
+                return;
+            }
+            // SAFETY: `i < n_chunks` was claimed, so the submitter is still
+            // blocked in `run` and the pointee is alive.
+            let task = unsafe { &*self.task.0 };
+            if let Err(payload) = std::panic::catch_unwind(AssertUnwindSafe(|| task(i))) {
+                let mut p = self.panic.lock().unwrap();
+                if p.is_none() {
+                    *p = Some(payload);
+                }
+            }
+            let mut left = self.left.lock().unwrap();
+            *left -= 1;
+            if *left == 0 {
+                self.done_cv.notify_all();
+            }
+        }
+    }
+
+    fn exhausted(&self) -> bool {
+        self.next.load(Ordering::Relaxed) >= self.n_chunks
+    }
+}
+
+struct Shared {
+    /// Jobs that may still have unclaimed chunks, in submission order.
+    queue: Mutex<Vec<Arc<Job>>>,
+    work_cv: Condvar,
+}
+
+/// The persistent pool. Use [`WorkerPool::global`]; constructing private
+/// pools is deliberately unsupported (one pool per process keeps the
+/// worker count bounded by the machine, not by call sites).
+pub struct WorkerPool {
+    shared: Arc<Shared>,
+    /// Worker threads spawned (reporting/tests only).
+    workers: usize,
+}
+
+impl WorkerPool {
+    /// The process-wide pool, spawned on first use with
+    /// [`super::default_threads`] workers.
+    pub fn global() -> &'static WorkerPool {
+        static POOL: OnceLock<WorkerPool> = OnceLock::new();
+        POOL.get_or_init(|| {
+            let shared = Arc::new(Shared {
+                queue: Mutex::new(Vec::new()),
+                work_cv: Condvar::new(),
+            });
+            let workers = super::default_threads();
+            for i in 0..workers {
+                let sh = shared.clone();
+                std::thread::Builder::new()
+                    .name(format!("vscnn-pool-{i}"))
+                    .spawn(move || worker_loop(&sh))
+                    .expect("spawn pool worker");
+            }
+            WorkerPool { shared, workers }
+        })
+    }
+
+    /// Number of persistent worker threads (excludes submitters, which
+    /// also execute chunks).
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Run `f(0..n_chunks)` across the pool, returning when every chunk
+    /// has finished. The submitting thread participates, so `n_chunks == 1`
+    /// runs entirely inline. Panics in `f` are re-raised here after all
+    /// chunks complete (matching `std::thread::scope` semantics).
+    pub fn run(&self, n_chunks: usize, f: &(dyn Fn(usize) + Sync)) {
+        if n_chunks == 0 {
+            return;
+        }
+        if n_chunks == 1 {
+            f(0);
+            return;
+        }
+        let job = Arc::new(Job {
+            task: erase(f),
+            n_chunks,
+            next: AtomicUsize::new(0),
+            left: Mutex::new(n_chunks),
+            done_cv: Condvar::new(),
+            panic: Mutex::new(None),
+        });
+        {
+            let mut q = self.shared.queue.lock().unwrap();
+            q.push(job.clone());
+        }
+        self.shared.work_cv.notify_all();
+        job.run_chunks();
+        let mut left = job.left.lock().unwrap();
+        while *left > 0 {
+            left = job.done_cv.wait(left).unwrap();
+        }
+        drop(left);
+        // Lazily GC'd by workers too; remove eagerly to keep the queue
+        // short.
+        {
+            let mut q = self.shared.queue.lock().unwrap();
+            q.retain(|j| !Arc::ptr_eq(j, &job));
+        }
+        let payload = job.panic.lock().unwrap().take();
+        if let Some(payload) = payload {
+            std::panic::resume_unwind(payload);
+        }
+    }
+}
+
+fn worker_loop(shared: &Shared) {
+    loop {
+        let job = {
+            let mut q = shared.queue.lock().unwrap();
+            loop {
+                q.retain(|j| !j.exhausted());
+                if let Some(j) = q.first() {
+                    break j.clone();
+                }
+                q = shared.work_cv.wait(q).unwrap();
+            }
+        };
+        job.run_chunks();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn runs_every_chunk_exactly_once() {
+        let hits = AtomicU64::new(0);
+        let mask = Mutex::new(vec![false; 37]);
+        WorkerPool::global().run(37, &|i| {
+            hits.fetch_add(1, Ordering::SeqCst);
+            let mut m = mask.lock().unwrap();
+            assert!(!m[i], "chunk {i} ran twice");
+            m[i] = true;
+        });
+        assert_eq!(hits.load(Ordering::SeqCst), 37);
+        assert!(mask.lock().unwrap().iter().all(|&b| b));
+    }
+
+    #[test]
+    fn nested_jobs_complete() {
+        let total = AtomicU64::new(0);
+        WorkerPool::global().run(4, &|_| {
+            WorkerPool::global().run(8, &|j| {
+                total.fetch_add(j as u64 + 1, Ordering::SeqCst);
+            });
+        });
+        assert_eq!(total.load(Ordering::SeqCst), 4 * (1..=8).sum::<u64>());
+    }
+
+    #[test]
+    fn zero_and_one_chunk_run_inline() {
+        let hits = AtomicU64::new(0);
+        WorkerPool::global().run(0, &|_| {
+            hits.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(hits.load(Ordering::SeqCst), 0);
+        WorkerPool::global().run(1, &|i| {
+            assert_eq!(i, 0);
+            hits.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(hits.load(Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    fn task_panic_propagates_to_submitter() {
+        let res = std::panic::catch_unwind(|| {
+            WorkerPool::global().run(3, &|i| {
+                if i == 1 {
+                    panic!("boom");
+                }
+            });
+        });
+        // The original payload is re-raised, scope-style.
+        let payload = res.expect_err("panic must propagate");
+        assert_eq!(payload.downcast_ref::<&str>(), Some(&"boom"));
+        // The pool survives a panicking job.
+        let ok = AtomicU64::new(0);
+        WorkerPool::global().run(3, &|_| {
+            ok.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(ok.load(Ordering::SeqCst), 3);
+    }
+}

@@ -1,0 +1,134 @@
+//! Per-worker reusable scratch buffers.
+//!
+//! Each thread — the persistent pool workers above all — owns one
+//! [`ScratchArena`]: a free-list of previously used buffers, checked out
+//! with `take_*` and returned with `recycle_*`. Because pool workers
+//! live for the whole process, a hot loop that takes and recycles its
+//! buffers allocates only on its first visit to a given thread; every
+//! later image, batch or serve-profiling run reuses the same memory.
+//!
+//! Buffers are re-initialized on every `take_*` (`resize` after `clear`,
+//! filled with the caller's value), so no state can leak between users —
+//! pinned by `tests/pool_determinism.rs`, which runs repeated engine
+//! images on one pool and asserts bit-identical reports.
+
+use std::cell::RefCell;
+
+/// Free-lists of reusable buffers, one arena per thread.
+#[derive(Default)]
+pub struct ScratchArena {
+    f32s: Vec<Vec<f32>>,
+    u32s: Vec<Vec<u32>>,
+}
+
+/// Pull the **best-fitting** buffer from a free-list: the smallest one
+/// whose capacity already covers `len`, else the largest available (one
+/// grow beats many). Size-aware so small takes (an 8-float MAC column)
+/// don't walk off with the multi-MB im2col buffer and force it to be
+/// re-grown — the lists stay role-stable and per-thread heap stays near
+/// one copy of each distinct working size.
+fn best_fit<T>(list: &mut Vec<Vec<T>>, len: usize) -> Vec<T> {
+    let mut best: Option<usize> = None;
+    for (i, v) in list.iter().enumerate() {
+        let cap = v.capacity();
+        best = match best {
+            None => Some(i),
+            Some(b) => {
+                let bcap = list[b].capacity();
+                let better = if cap >= len {
+                    bcap < len || cap < bcap
+                } else {
+                    bcap < len && cap > bcap
+                };
+                if better {
+                    Some(i)
+                } else {
+                    Some(b)
+                }
+            }
+        };
+    }
+    match best {
+        Some(i) => list.swap_remove(i),
+        None => Vec::new(),
+    }
+}
+
+impl ScratchArena {
+    fn take_f32(&mut self, len: usize, fill: f32) -> Vec<f32> {
+        let mut v = best_fit(&mut self.f32s, len);
+        v.clear();
+        v.resize(len, fill);
+        v
+    }
+
+    fn take_u32(&mut self, len: usize, fill: u32) -> Vec<u32> {
+        let mut v = best_fit(&mut self.u32s, len);
+        v.clear();
+        v.resize(len, fill);
+        v
+    }
+}
+
+thread_local! {
+    static ARENA: RefCell<ScratchArena> = RefCell::new(ScratchArena::default());
+}
+
+/// Check out an `f32` buffer of `len` elements, all set to `fill`.
+pub fn take_f32(len: usize, fill: f32) -> Vec<f32> {
+    ARENA.with(|a| a.borrow_mut().take_f32(len, fill))
+}
+
+/// Return an `f32` buffer to this thread's arena for reuse.
+pub fn recycle_f32(v: Vec<f32>) {
+    ARENA.with(|a| a.borrow_mut().f32s.push(v));
+}
+
+/// Check out a `u32` buffer of `len` elements, all set to `fill`.
+pub fn take_u32(len: usize, fill: u32) -> Vec<u32> {
+    ARENA.with(|a| a.borrow_mut().take_u32(len, fill))
+}
+
+/// Return a `u32` buffer to this thread's arena for reuse.
+pub fn recycle_u32(v: Vec<u32>) {
+    ARENA.with(|a| a.borrow_mut().u32s.push(v));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn take_reinitializes_recycled_buffers() {
+        let mut a = take_f32(4, 1.5);
+        assert_eq!(a, vec![1.5; 4]);
+        a[0] = 99.0;
+        recycle_f32(a);
+        // The recycled buffer must come back fully re-initialized.
+        let b = take_f32(6, 0.0);
+        assert_eq!(b, vec![0.0; 6]);
+        recycle_f32(b);
+    }
+
+    #[test]
+    fn best_fit_keeps_buffer_roles_stable() {
+        // A small take must not walk off with the big recycled buffer.
+        let big = take_f32(1000, 0.0);
+        let small = take_f32(4, 0.0);
+        recycle_f32(big);
+        recycle_f32(small);
+        let s = take_f32(3, 1.0);
+        assert!(s.capacity() < 1000, "small take claimed the big buffer");
+        let b = take_f32(900, 0.0);
+        assert!(b.capacity() >= 1000, "big take missed the big buffer");
+        recycle_f32(s);
+        recycle_f32(b);
+    }
+
+    #[test]
+    fn u32_roundtrip() {
+        let w = take_u32(2, 1);
+        assert_eq!(w, vec![1, 1]);
+        recycle_u32(w);
+    }
+}

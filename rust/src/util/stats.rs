@@ -42,15 +42,28 @@ pub fn median(xs: &[f64]) -> f64 {
     }
 }
 
-/// Percentile via nearest-rank on a sorted copy; `p` in [0, 100].
-pub fn percentile(xs: &[f64], p: f64) -> f64 {
+/// `q`-quantile for `q` in [0, 1] via **nearest rank**: the value at
+/// sorted index `round((n - 1) * q)`, no interpolation between
+/// neighbours — always an element of `xs`, never a blend. 0.0 for empty
+/// input; `q` outside [0, 1] is clamped.
+///
+/// The single quantile implementation in the crate: [`percentile`] (the
+/// serving latency reports), `model::calibrate` (the bias quantile) and
+/// `serve::report` all resolve here, so every consumer agrees on the
+/// interpolation rule.
+pub fn quantile(xs: &[f64], q: f64) -> f64 {
     if xs.is_empty() {
         return 0.0;
     }
     let mut s = xs.to_vec();
     s.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    let rank = ((p / 100.0) * (s.len() as f64 - 1.0)).round() as usize;
+    let rank = ((s.len() as f64 - 1.0) * q.clamp(0.0, 1.0)).round() as usize;
     s[rank.min(s.len() - 1)]
+}
+
+/// Percentile (`p` in [0, 100]) — [`quantile`] at `p / 100`.
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    quantile(xs, p / 100.0)
 }
 
 /// Running accumulator for counts expressed as ratios (e.g. densities).
@@ -113,6 +126,22 @@ mod tests {
         assert_eq!(percentile(&xs, 0.0), 1.0);
         assert_eq!(percentile(&xs, 100.0), 5.0);
         assert_eq!(percentile(&xs, 50.0), 3.0);
+    }
+
+    #[test]
+    fn quantile_nearest_rank_never_interpolates() {
+        let xs = [3.0, 1.0, 2.0, 4.0];
+        assert_eq!(quantile(&xs, 0.0), 1.0);
+        assert_eq!(quantile(&xs, 1.0), 4.0);
+        // round(3 * 0.5) = 2 → sorted[2] = 3 (nearest rank, not 2.5).
+        assert_eq!(quantile(&xs, 0.5), 3.0);
+        // Out-of-range q clamps.
+        assert_eq!(quantile(&xs, -1.0), 1.0);
+        assert_eq!(quantile(&xs, 2.0), 4.0);
+        // Percentile is exactly quantile(p / 100).
+        for p in [0.0, 10.0, 37.0, 50.0, 95.0, 100.0] {
+            assert_eq!(percentile(&xs, p), quantile(&xs, p / 100.0));
+        }
     }
 
     #[test]

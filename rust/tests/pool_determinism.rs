@@ -1,0 +1,104 @@
+//! ISSUE 5 pinning: the persistent worker pool, the per-worker scratch
+//! arenas, the SoA CVF functional loop and the analytic scheduler change
+//! *speed only*. Reports must be bit-identical:
+//!
+//! * across `--threads 1 / 2 / 8`;
+//! * between the pool and the scoped-spawn baseline (`force_scoped`);
+//! * between the analytic fast paths and the exact walk
+//!   (`SimConfig::exact_scheduler`);
+//! * across repeated runs on one live pool, interleaved with runs of a
+//!   different workload — i.e. no scratch-arena state leaks between
+//!   images.
+
+use std::sync::Arc;
+use vscnn::engine::{compile, CompileOptions, Engine, FunctionalBackend, RunOptions};
+use vscnn::model::init::{synthetic_image, synthetic_params};
+use vscnn::model::vgg16::tiny_vgg;
+use vscnn::pruning;
+use vscnn::pruning::sensitivity::flat_schedule;
+use vscnn::sim::config::SimConfig;
+use vscnn::tensor::Tensor;
+use vscnn::util::parallel::{force_scoped, scoped_test_lock};
+
+fn engine_and_image(seed: u64) -> (Engine, Tensor) {
+    let net = tiny_vgg(16);
+    let mut params = synthetic_params(&net, seed, 0.0);
+    pruning::prune_network_vectors(&mut params, &flat_schedule(&net, 0.4));
+    let img = synthetic_image(net.input_shape, seed ^ 1);
+    let prepared = Arc::new(compile(&net, params, &CompileOptions::new(3)));
+    (Engine::new(prepared), img)
+}
+
+#[test]
+fn network_report_bit_identical_across_threads_pool_and_exactness() {
+    // Hold the mode lock for the whole matrix so a concurrent test can't
+    // flip the execution mode mid-comparison.
+    let _mode = scoped_test_lock();
+    let (engine, img) = engine_and_image(31);
+    let mut reference: Option<String> = None;
+    for exact in [false, true] {
+        for scoped in [false, true] {
+            for threads in [1usize, 2, 8] {
+                let mut opts = RunOptions::new(SimConfig::paper_8_7_3());
+                opts.sim.threads = threads;
+                opts.sim.exact_scheduler = exact;
+                opts.backend = FunctionalBackend::Im2colMt(threads);
+                force_scoped(scoped);
+                let json = engine.run_image(&img, &opts).unwrap().to_json().pretty();
+                match &reference {
+                    None => reference = Some(json),
+                    Some(want) => assert_eq!(
+                        &json, want,
+                        "report diverged at exact={exact} scoped={scoped} threads={threads}"
+                    ),
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn batch_reports_match_per_image_runs_on_the_pool() {
+    // Pin pooled execution (the property under test) against concurrent
+    // mode toggles.
+    let _mode = scoped_test_lock();
+    let (engine, _) = engine_and_image(33);
+    let images: Vec<Tensor> = (0..5)
+        .map(|i| synthetic_image(engine.prepared().net.input_shape, 100 + i))
+        .collect();
+    for threads in [1usize, 3, 8] {
+        let mut opts = RunOptions::new(SimConfig::paper_4_14_3());
+        opts.sim.threads = threads;
+        opts.backend = FunctionalBackend::Im2colMt(threads);
+        let batch = engine.run_batch(&images, &opts).unwrap();
+        assert_eq!(batch.len(), images.len());
+        for (img, report) in images.iter().zip(&batch) {
+            let solo = engine.run_image(img, &opts).unwrap();
+            assert_eq!(
+                solo.to_json().pretty(),
+                report.to_json().pretty(),
+                "threads={threads}"
+            );
+        }
+    }
+}
+
+/// Scratch-arena hygiene: repeated runs of the same image on one live
+/// pool — interleaved with a different workload that dirties every
+/// per-worker buffer — must stay bit-identical.
+#[test]
+fn repeated_runs_on_one_pool_leak_no_scratch_state() {
+    // The leak property lives in the *pooled* arenas — hold the mode lock
+    // so this actually runs pooled, not scoped-by-a-neighbour.
+    let _mode = scoped_test_lock();
+    let (engine, img) = engine_and_image(32);
+    let (other_engine, other_img) = engine_and_image(77);
+    let opts = RunOptions::new(SimConfig::paper_8_7_3());
+    let first = engine.run_image(&img, &opts).unwrap().to_json().pretty();
+    for round in 0..3 {
+        // Dirty the arenas with different data (and shapes of scratch use).
+        let _ = other_engine.run_image(&other_img, &opts).unwrap();
+        let again = engine.run_image(&img, &opts).unwrap().to_json().pretty();
+        assert_eq!(first, again, "round {round}");
+    }
+}

@@ -201,11 +201,24 @@ fn report_is_bit_identical_across_thread_budgets() {
         let out = simulate(&spec, &profiles);
         ServeReport::new(&spec, &out).to_json().pretty()
     };
+    // Hold the mode lock across the whole comparison so a concurrent
+    // test can't flip pooled/scoped execution mid-measure.
+    let _mode = vscnn::util::parallel::scoped_test_lock();
+    vscnn::util::parallel::force_scoped(false);
     let a = render(1);
     let b = render(3);
     assert_eq!(a, b, "serve JSON varies with the thread budget");
+    let c = render(8);
+    assert_eq!(a, c, "serve JSON varies at 8 threads");
 
-    // The public (memoized) profile path agrees with the cache-free one.
+    // ISSUE 5: the persistent-pool engine and the scoped-spawn baseline
+    // produce the same bits too.
+    vscnn::util::parallel::force_scoped(true);
+    let scoped = render(3);
+    assert_eq!(a, scoped, "serve JSON differs between pool and scoped");
+
+    // The public (memoized, tenant-parallel) profile path agrees with the
+    // cache-free one.
     let cached = build_profiles(&spec, 2).expect("profiles");
     assert_eq!(cached, profiles_with_threads(&spec, 2));
 }
