@@ -10,8 +10,8 @@
 
 use std::time::Instant;
 use vscnn::serve::{
-    build_profiles, default_fleet, default_mix, simulate, BatchPolicy, DispatchPolicy,
-    ServeSpec, ServiceProfile, TrafficModel,
+    build_profiles, default_fleet, default_mix, simulate, BatchPolicy, DispatchPolicy, FaultSpec,
+    RobustnessPolicy, ServeSpec, ServiceProfile, TrafficModel,
 };
 use vscnn::util::bench::{bench, black_box, write_results, BenchResult};
 use vscnn::util::json::Json;
@@ -30,6 +30,8 @@ fn spec_at(rps: f64, policy: DispatchPolicy, max_batch: usize) -> ServeSpec {
         duration_cycles: 2_000_000_000, // 4 simulated seconds at 500 MHz
         clock_mhz: 500.0,
         seed: 7,
+        faults: FaultSpec::none(),
+        robust: RobustnessPolicy::none(),
     }
 }
 
@@ -90,6 +92,29 @@ fn main() {
         }
         results.push(r);
     }
+
+    // Fault-injected arm: crash/straggler plan plus timeouts, retries and
+    // hedging, so the robustness machinery's event-loop overhead stays
+    // visible across PRs next to the clean heavy run.
+    let mut fspec = spec_at(8_000.0, DispatchPolicy::NetworkAffinity, 8);
+    fspec.faults =
+        FaultSpec::parse("crash:1,mttr:2,straggler:4,slow:4,slowms:1").expect("fault spec");
+    fspec.robust = RobustnessPolicy {
+        timeout_cycles: 25_000_000, // 50 ms at 500 MHz, generous vs queueing
+        max_retries: 2,
+        backoff_cycles: 500_000,
+        hedge_cycles: 5_000_000,
+        shed: true,
+    };
+    let mut fevents = 0u64;
+    let r = bench("serve-sim/heavy/faulted", 1, 5, || {
+        let out = simulate(&fspec, &toy_profiles);
+        fevents = out.events_processed;
+        black_box(out.completed);
+    });
+    println!("{}", r.line());
+    println!("{}", r.throughput(fevents as f64, "event"));
+    results.push(r);
 
     // And one engine-profiled run, end to end.
     let r = bench("serve-sim/engine-profiles", 1, 3, || {

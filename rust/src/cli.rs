@@ -167,6 +167,48 @@ mod tests {
     }
 
     #[test]
+    fn serve_fault_flags_parse_in_every_shape() {
+        // The resilience flags mix value flags (--faults, --timeout-us,
+        // --retries, --hedge-us) with one bare boolean (--shed); exercise
+        // the exact shapes `vscnn serve` uses.
+        let cli = parse(&[
+            "serve",
+            "--faults",
+            "crash:0.01,mttr:2",
+            "--timeout-us",
+            "5000",
+            "--retries",
+            "2",
+            "--hedge-us=800",
+            "--shed",
+        ]);
+        assert_eq!(cli.get_value("faults").unwrap(), Some("crash:0.01,mttr:2"));
+        assert_eq!(cli.get_num::<f64>("timeout-us", 0.0).unwrap(), 5000.0);
+        assert_eq!(cli.get_num::<u32>("retries", 0).unwrap(), 2);
+        assert_eq!(cli.get_num::<f64>("hedge-us", 0.0).unwrap(), 800.0);
+        assert!(cli.get_bool("shed"));
+        // All absent -> robustness stays off.
+        let off = parse(&["serve"]);
+        assert_eq!(off.get_value("faults").unwrap(), None);
+        assert!(!off.get_bool("shed"));
+        assert_eq!(off.get_num::<u32>("retries", 0).unwrap(), 0);
+    }
+
+    #[test]
+    fn serve_fault_flags_error_cleanly_when_malformed() {
+        // `--faults --shed`: the value flag swallowed nothing, so asking
+        // for its value must be a clean error (not the string "true").
+        let cli = parse(&["serve", "--faults", "--shed"]);
+        assert!(cli.get_bool("shed"));
+        let err = cli.get_value("faults").unwrap_err();
+        assert!(err.to_string().contains("expects a value"));
+        // Non-numeric retry/timeout values are typed-accessor errors.
+        let bad = parse(&["serve", "--retries", "two", "--timeout-us", "5ms"]);
+        assert!(bad.get_num::<u32>("retries", 0).is_err());
+        assert!(bad.get_num::<f64>("timeout-us", 0.0).is_err());
+    }
+
+    #[test]
     fn value_flag_before_another_flag_errors_cleanly() {
         let cli = parse(&["simulate", "--res", "--trace"]);
         assert!(cli.get_bool("trace"));

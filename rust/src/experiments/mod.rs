@@ -12,12 +12,14 @@
 //! | `headline`| 1.871x/1.93x + 92%/85% + 46.6%/47.1% summary       |
 //! | `scnn`    | §IV comparison against the SCNN-like model         |
 //! | `serve`   | fleet serving capacity curve (beyond the paper)    |
+//! | `serve-faults` | resilience degradation curve under injected faults |
 //!
 //! Every experiment returns a [`Json`] document and a human-readable text
 //! block; the CLI writes both under `reports/`.
 
 pub mod density;
 pub mod serve;
+pub mod serve_faults;
 pub mod speedup;
 pub mod table1;
 pub mod workload;
@@ -79,7 +81,16 @@ impl Default for ExpContext {
 /// All experiment ids, in paper order.
 pub fn list() -> &'static [&'static str] {
     &[
-        "table1", "fig9", "fig10", "fig11", "fig12", "fig13", "headline", "scnn", "serve",
+        "table1",
+        "fig9",
+        "fig10",
+        "fig11",
+        "fig12",
+        "fig13",
+        "headline",
+        "scnn",
+        "serve",
+        "serve-faults",
     ]
 }
 
@@ -95,6 +106,8 @@ pub fn run(id: &str, ctx: &ExpContext) -> Result<ExpOutput> {
         "headline" => speedup::run_headline(ctx),
         "scnn" => speedup::run_scnn(ctx),
         "serve" => serve::run_serve(ctx),
+        // Both spellings accepted; the report file is serve_faults.json.
+        "serve-faults" | "serve_faults" => serve_faults::run_serve_faults(ctx),
         _ => bail!("unknown experiment '{id}'; known: {:?}", list()),
     }
 }
@@ -121,8 +134,9 @@ mod tests {
     #[test]
     fn list_covers_every_paper_artifact() {
         // 1 table + 5 figures + 2 derived comparisons + the serving
-        // capacity curve.
-        assert_eq!(list().len(), 9);
+        // capacity curve + the resilience degradation curve.
+        assert_eq!(list().len(), 10);
         assert!(list().contains(&"serve"));
+        assert!(list().contains(&"serve-faults"));
     }
 }

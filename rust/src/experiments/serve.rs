@@ -19,8 +19,8 @@
 use super::{ExpContext, ExpOutput};
 use crate::coordinator::report::ascii_table;
 use crate::serve::{
-    build_profiles, default_fleet, default_mix, simulate, BatchPolicy, DispatchPolicy,
-    ServeReport, ServeSpec, TrafficModel,
+    build_profiles, default_fleet, default_mix, simulate, BatchPolicy, DispatchPolicy, FaultSpec,
+    RobustnessPolicy, ServeReport, ServeSpec, TrafficModel,
 };
 use crate::util::json::Json;
 use anyhow::Result;
@@ -78,6 +78,8 @@ pub fn run_serve(ctx: &ExpContext) -> Result<ExpOutput> {
         duration_cycles: 1,
         clock_mhz: 500.0,
         seed: ctx.seed,
+        faults: FaultSpec::none(),
+        robust: RobustnessPolicy::none(),
     };
     let profiles = build_profiles(&base, ctx.threads)?;
 

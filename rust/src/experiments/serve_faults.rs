@@ -1,0 +1,354 @@
+//! `serve-faults`: the resilience degradation curve — goodput, tail
+//! latency and availability as the per-instance crash rate rises, under a
+//! constant background of stragglers.
+//!
+//! Two client configurations sweep the same crash-rate grid over the same
+//! profiled fleet (ISSUE 6):
+//!
+//! * **plain** — per-attempt timeout + 2 retries with exponential backoff
+//!   + load shedding; no hedging.
+//! * **hedged** — the same, plus hedged requests: a second attempt is
+//!   raced on another instance when the first exceeds the hedge window,
+//!   first completion wins.
+//!
+//! Every point also injects transient stragglers (a few per
+//! instance-second, 4x slowdown) so the hedge arm has something to win
+//! against even before chips start dying. The emitted curve
+//! (`reports/serve_faults.json` + `BENCH_serve_faults.json`) shows how
+//! gracefully the fleet sheds capacity as availability drops — see
+//! EXPERIMENTS.md §Resilience for a worked reading.
+
+use super::{ExpContext, ExpOutput};
+use crate::coordinator::report::ascii_table;
+use crate::serve::{
+    build_profiles, default_fleet, default_mix, simulate, BatchPolicy, DispatchPolicy, FaultSpec,
+    RobustnessPolicy, ServeReport, ServeSpec, TrafficModel,
+};
+use crate::util::json::Json;
+use anyhow::Result;
+
+/// Crash intensity swept, in *expected crashes per instance over the
+/// horizon* (the per-second rate is derived from the horizon so the curve
+/// shape is resolution-invariant). Zero anchors the no-crash
+/// (stragglers-only) baseline; the top point takes each instance down
+/// three times in expectation.
+const EXPECTED_CRASHES: [f64; 5] = [0.0, 0.25, 0.5, 1.0, 3.0];
+
+/// Expected arrivals per sweep point (sets the horizon from the offered
+/// rate, exactly like the `serve` capacity curve).
+const ARRIVALS_PER_POINT: f64 = 400.0;
+
+/// Offered load as a fraction of the estimated warm-batch capacity: high
+/// enough that lost capacity shows up in goodput, below the knee so the
+/// zero-crash anchor is healthy.
+const LOAD_FRAC: f64 = 0.85;
+
+/// One sweep point: the same fault plan under both client configurations.
+struct FaultPoint {
+    crash_per_sec: f64,
+    plain: ServeReport,
+    hedged: ServeReport,
+}
+
+/// Goodput (completed requests per second) of one report.
+fn goodput(r: &ServeReport) -> f64 {
+    r.throughput_rps()
+}
+
+/// Fleet availability of one report (1.0 when no resilience section —
+/// cannot happen in this sweep, every point has stragglers on).
+fn availability(r: &ServeReport) -> f64 {
+    r.resilience.as_ref().map_or(1.0, |res| res.availability)
+}
+
+fn side_json(r: &ServeReport) -> Json {
+    let mut o = Json::obj();
+    o.set("goodput_rps", goodput(r))
+        .set("p99_ms", r.p99_ms())
+        .set("completed", r.completed)
+        .set("rejected", r.rejected)
+        .set("timed_out", r.timed_out)
+        .set("shed", r.shed)
+        .set("availability", availability(r));
+    if let Some(res) = &r.resilience {
+        o.set("retries", res.retries)
+            .set("hedges", res.hedges)
+            .set("hedge_wins", res.hedge_wins)
+            .set("rehomed", res.rehomed)
+            .set("crashes", res.crashes)
+            .set("mttr_ms", res.mttr_ms);
+    }
+    o
+}
+
+fn point_json(p: &FaultPoint) -> Json {
+    let mut o = Json::obj();
+    o.set("crash_per_sec", p.crash_per_sec)
+        .set("plain", side_json(&p.plain))
+        .set("hedged", side_json(&p.hedged));
+    o
+}
+
+/// Run the `serve-faults` experiment (see module docs).
+pub fn run_serve_faults(ctx: &ExpContext) -> Result<ExpOutput> {
+    let tenants = default_mix(ctx.res);
+    let instances = default_fleet(4);
+    let base = ServeSpec {
+        tenants: tenants.clone(),
+        instances,
+        traffic: TrafficModel::OpenLoop { rps: 1.0 },
+        policy: DispatchPolicy::NetworkAffinity,
+        batch: BatchPolicy::none(),
+        queue_cap: 32,
+        duration_cycles: 1,
+        clock_mhz: 500.0,
+        seed: ctx.seed,
+        faults: FaultSpec::none(),
+        robust: RobustnessPolicy::none(),
+    };
+    let profiles = build_profiles(&base, ctx.threads)?;
+
+    // Mix-weighted service means: capacity estimate (same arithmetic as
+    // the `serve` experiment) and the single-request mean that anchors the
+    // timeout/backoff/hedge windows.
+    let wsum: f64 = tenants.iter().map(|t| t.weight).sum();
+    let mut capacity_rps = 0.0;
+    for i in 0..base.instances.len() {
+        let mean_marginal: f64 = tenants
+            .iter()
+            .enumerate()
+            .map(|(t, ten)| ten.weight / wsum * profiles[t][i].marginal_cycles as f64)
+            .sum();
+        capacity_rps += base.clock_hz() / mean_marginal.max(1.0);
+    }
+    let mut mean_single = 0.0;
+    for (t, ten) in tenants.iter().enumerate() {
+        let avg: f64 = profiles[t]
+            .iter()
+            .map(|p| p.single_cycles as f64)
+            .sum::<f64>()
+            / profiles[t].len() as f64;
+        mean_single += ten.weight / wsum * avg;
+    }
+
+    let rps = capacity_rps * LOAD_FRAC;
+    let duration_cycles = (ARRIVALS_PER_POINT * base.clock_hz() / rps).ceil() as u64;
+    let duration_secs = duration_cycles as f64 / base.clock_hz();
+    // Two straggler episodes per instance in expectation, whatever the
+    // horizon, so the hedge arm always has slow chips to race against.
+    let straggler_per_sec = 2.0 / duration_secs;
+
+    // Timeout generous against queueing + 4x straggler stretch; retries
+    // with half-a-service backoff; shedding on so overload degrades by
+    // priority instead of by queue-full lottery.
+    let robust_plain = RobustnessPolicy {
+        timeout_cycles: ((mean_single * 24.0) as u64).max(1),
+        max_retries: 2,
+        backoff_cycles: ((mean_single / 2.0) as u64).max(1),
+        hedge_cycles: 0,
+        shed: true,
+    };
+    let robust_hedged = RobustnessPolicy {
+        hedge_cycles: ((mean_single * 6.0) as u64).max(1),
+        ..robust_plain
+    };
+
+    let mut curve: Vec<FaultPoint> = Vec::new();
+    for expected in EXPECTED_CRASHES {
+        let crash = expected / duration_secs;
+        let faults = FaultSpec {
+            crash_per_sec: crash,
+            mttr_ms: 1.5,
+            straggler_per_sec,
+            slowdown: 4.0,
+            straggler_ms: 1.0,
+            req_fault_prob: 0.0,
+        };
+        let mut plain = base.clone();
+        plain.traffic = TrafficModel::OpenLoop { rps };
+        plain.duration_cycles = duration_cycles;
+        plain.batch = BatchPolicy {
+            max_batch: 8,
+            max_wait_cycles: ((mean_single / 2.0) as u64).max(1),
+        };
+        plain.faults = faults;
+        plain.robust = robust_plain;
+
+        let mut hedged = plain.clone();
+        hedged.robust = robust_hedged;
+
+        let plain_report = ServeReport::new(&plain, &simulate(&plain, &profiles));
+        let hedged_report = ServeReport::new(&hedged, &simulate(&hedged, &profiles));
+        curve.push(FaultPoint {
+            crash_per_sec: crash,
+            plain: plain_report,
+            hedged: hedged_report,
+        });
+    }
+
+    let zero = curve.first().expect("non-empty sweep");
+    let worst = curve.last().expect("non-empty sweep");
+    // Acceptance metrics: availability must actually fall across the
+    // sweep, and the goodput retention quantifies how gracefully.
+    let availability_drop = availability(&zero.plain) - availability(&worst.plain);
+    let goodput_retention = goodput(&worst.plain) / goodput(&zero.plain).max(1e-9);
+    let hedge_p99_win = p_ratio(worst.hedged.p99_ms(), worst.plain.p99_ms());
+
+    let mut json = Json::obj();
+    json.set(
+        "tenants",
+        Json::Arr(tenants.iter().map(|t| Json::Str(t.name.clone())).collect()),
+    )
+    .set(
+        "fleet",
+        Json::Arr(
+            base.instances
+                .iter()
+                .map(|i| Json::Str(i.label()))
+                .collect(),
+        ),
+    )
+    .set("capacity_rps_estimate", capacity_rps)
+    .set("offered_rps", rps)
+    .set("duration_secs", duration_secs)
+    .set("mttr_ms", 1.5)
+    .set("straggler_per_sec", straggler_per_sec)
+    .set("timeout_cycles", robust_plain.timeout_cycles)
+    .set("max_retries", robust_plain.max_retries as u64)
+    .set("hedge_cycles", robust_hedged.hedge_cycles)
+    .set("seed", base.seed)
+    .set("availability_drop", availability_drop)
+    .set("goodput_retention", goodput_retention)
+    .set("hedge_p99_ratio", hedge_p99_win)
+    .set("curve", Json::Arr(curve.iter().map(point_json).collect()));
+
+    let rows: Vec<(String, Vec<(String, f64)>)> = curve
+        .iter()
+        .map(|p| {
+            (
+                format!("crash {:>5.0}/s", p.crash_per_sec),
+                vec![
+                    ("plain_rps".to_string(), goodput(&p.plain)),
+                    ("plain_p99_ms".to_string(), p.plain.p99_ms()),
+                    ("plain_avail".to_string(), availability(&p.plain)),
+                    ("hedge_rps".to_string(), goodput(&p.hedged)),
+                    ("hedge_p99_ms".to_string(), p.hedged.p99_ms()),
+                    ("hedge_avail".to_string(), availability(&p.hedged)),
+                ],
+            )
+        })
+        .collect();
+    let text = format!(
+        "Resilience degradation curve — {} tenants on {} instances, offered {:.0} rps ({:.0}% of capacity)\n\
+         constant stragglers {:.0}/inst-s (4x, 1 ms); crash mttr 1.5 ms; timeout+2 retries+shed, hedge arm adds {} cyc hedge\n{}\n\
+         worst point: availability {:.3}, goodput retention {:.3}, hedged p99/plain p99 {:.3}\n",
+        tenants.len(),
+        base.instances.len(),
+        rps,
+        LOAD_FRAC * 100.0,
+        straggler_per_sec,
+        robust_hedged.hedge_cycles,
+        ascii_table(&rows),
+        availability(&worst.plain),
+        goodput_retention,
+        hedge_p99_win,
+    );
+
+    // Machine-readable trajectory next to the bench outputs.
+    let mut derived = Json::obj();
+    derived
+        .set("offered_rps", rps)
+        .set("zero_crash_goodput_rps", goodput(&zero.plain))
+        .set("worst_crash_goodput_rps", goodput(&worst.plain))
+        .set("goodput_retention", goodput_retention)
+        .set("zero_crash_availability", availability(&zero.plain))
+        .set("worst_crash_availability", availability(&worst.plain))
+        .set("availability_drop", availability_drop)
+        .set("worst_plain_p99_ms", worst.plain.p99_ms())
+        .set("worst_hedged_p99_ms", worst.hedged.p99_ms())
+        .set("hedge_p99_ratio", hedge_p99_win);
+    let bench_path = "BENCH_serve_faults.json";
+    if let Err(e) = crate::util::bench::write_results(bench_path, &[], derived) {
+        crate::log_warn!("could not write {bench_path}: {e}");
+    }
+
+    Ok(ExpOutput {
+        id: "serve_faults".to_string(),
+        json,
+        text,
+    })
+}
+
+/// `a / b`, guarding the degenerate zero-latency denominator.
+fn p_ratio(a: f64, b: f64) -> f64 {
+    a / b.max(1e-9)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn degradation_curve_loses_availability_as_crashes_rise() {
+        let ctx = ExpContext {
+            res: 32,
+            ..Default::default()
+        };
+        let out = run_serve_faults(&ctx).unwrap();
+        assert_eq!(out.id, "serve_faults");
+        let curve = out.json.get("curve").unwrap().as_arr().unwrap();
+        assert_eq!(curve.len(), EXPECTED_CRASHES.len());
+
+        let avail = |p: &Json| {
+            p.get("plain")
+                .unwrap()
+                .get("availability")
+                .unwrap()
+                .as_f64()
+                .unwrap()
+        };
+        // No crashes -> every cycle available; the heaviest crash rate
+        // (expected >1 crash per instance over the horizon) takes real
+        // downtime.
+        assert_eq!(avail(&curve[0]), 1.0);
+        let worst = avail(curve.last().unwrap());
+        assert!(worst < 1.0, "availability stayed {worst} at crash:150");
+        assert!(worst > 0.0);
+        // Crashes showed up in the resilience ledger at the top rate.
+        let crashes = curve
+            .last()
+            .unwrap()
+            .get("plain")
+            .unwrap()
+            .get("crashes")
+            .unwrap()
+            .as_f64()
+            .unwrap();
+        assert!(crashes > 0.0);
+        // The fleet still serves under fire: goodput never hits zero.
+        for p in curve {
+            let g = p
+                .get("plain")
+                .unwrap()
+                .get("goodput_rps")
+                .unwrap()
+                .as_f64()
+                .unwrap();
+            assert!(g > 0.0, "goodput collapsed at {:?}", p.get("crash_per_sec"));
+        }
+        // Text renders the table and the summary line.
+        assert!(out.text.contains("plain_p99_ms"));
+        assert!(out.text.contains("goodput retention"));
+    }
+
+    #[test]
+    fn curve_is_deterministic_for_the_same_seed() {
+        let ctx = ExpContext {
+            res: 32,
+            ..Default::default()
+        };
+        let a = run_serve_faults(&ctx).unwrap();
+        let b = run_serve_faults(&ctx).unwrap();
+        assert_eq!(a.json.pretty(), b.json.pretty());
+    }
+}

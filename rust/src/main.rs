@@ -11,6 +11,8 @@
 //!                    [--net NAME] [--instances N] [--policy P]
 //!                    [--max-batch N] [--batch-wait-us N] [--queue-cap N]
 //!                    [--clients N] [--think-ms N] [--out FILE]
+//!                    [--faults SPEC] [--timeout-us N] [--retries N]
+//!                    [--backoff-us N] [--hedge-us N] [--shed]
 //! vscnn runtime-info [--artifacts DIR]
 //! vscnn list
 //! ```
@@ -74,7 +76,9 @@ fn print_help() {
          \x20 --threads N (host worker threads; 0 = auto, one per core — the default)\n\
          \x20 --mem-model ideal|tiled (tiled = SRAM/DRAM-aware cycle accounting, default)\n\
          serve flags: --rps N --duration-ms N --instances N --policy round-robin|least-loaded|affinity\n\
-         \x20 --max-batch N --batch-wait-us N --queue-cap N --clients N --think-ms N --out FILE",
+         \x20 --max-batch N --batch-wait-us N --queue-cap N --clients N --think-ms N --out FILE\n\
+         \x20 --faults crash:RATE,mttr:MS,straggler:RATE,slow:X,slowms:MS,reqfault:P (per-instance rates)\n\
+         \x20 --timeout-us N (per-attempt timeout) --retries N --backoff-us N --hedge-us N --shed",
         vscnn::VERSION,
         experiments::list().join(", "),
         vscnn::model::zoo::names().join("|"),
@@ -212,10 +216,16 @@ fn cmd_serve(cli: &Cli) -> Result<()> {
         "clients",
         "think-ms",
         "out",
+        "faults",
+        "timeout-us",
+        "retries",
+        "backoff-us",
+        "hedge-us",
+        "shed",
     ])?;
     use vscnn::serve::{
         build_profiles, default_fleet, default_mix, simulate, BatchPolicy, DispatchPolicy,
-        ServeReport, ServeSpec, Tenant, TrafficModel,
+        FaultSpec, RobustnessPolicy, ServeReport, ServeSpec, Tenant, TrafficModel,
     };
 
     let defaults = ExpContext::default();
@@ -240,6 +250,30 @@ fn cmd_serve(cli: &Cli) -> Result<()> {
     let think_ms: f64 = cli.get_num("think-ms", 1.0)?;
 
     let clock_mhz = 500.0; // matches SimConfig::freq_mhz
+    // Fault injection + client-side robustness (all off by default, so the
+    // plain `vscnn serve` path stays bit-identical to the pre-fault sim).
+    let faults = match cli.get_value("faults")? {
+        Some(s) => FaultSpec::parse(s)?,
+        None => FaultSpec::none(),
+    };
+    let timeout_us: f64 = cli.get_num("timeout-us", 0.0)?;
+    anyhow::ensure!(timeout_us >= 0.0, "--timeout-us must be >= 0");
+    let retries: u32 = cli.get_num("retries", 0)?;
+    let backoff_us: f64 = cli.get_num("backoff-us", 50.0)?;
+    anyhow::ensure!(backoff_us >= 0.0, "--backoff-us must be >= 0");
+    let hedge_us: f64 = cli.get_num("hedge-us", 0.0)?;
+    anyhow::ensure!(hedge_us >= 0.0, "--hedge-us must be >= 0");
+    anyhow::ensure!(
+        retries == 0 || timeout_us > 0.0,
+        "--retries needs --timeout-us > 0 (retries trigger on attempt timeout)"
+    );
+    let robust = RobustnessPolicy {
+        timeout_cycles: (timeout_us * clock_mhz) as u64,
+        max_retries: retries,
+        backoff_cycles: ((backoff_us * clock_mhz) as u64).max(1),
+        hedge_cycles: (hedge_us * clock_mhz) as u64,
+        shed: cli.get_bool("shed"),
+    };
     let tenants = match cli.get_value("net")? {
         Some(net) => vec![Tenant::new(net, res, 1.0)],
         None => default_mix(res),
@@ -265,6 +299,8 @@ fn cmd_serve(cli: &Cli) -> Result<()> {
         duration_cycles: ((duration_ms * clock_mhz * 1e3) as u64).max(1),
         clock_mhz,
         seed,
+        faults,
+        robust,
     };
 
     log_info!(

@@ -98,6 +98,33 @@ impl Batcher {
         Some((tenant, batch))
     }
 
+    /// Remove one queued request (a cancelled attempt: timeout, or the
+    /// losing side of a hedge). Returns `true` if it was still queued —
+    /// `false` means the request already launched in a batch and the
+    /// in-flight work can only be discarded at completion.
+    pub fn remove(&mut self, tenant: usize, req: usize) -> bool {
+        let q = &mut self.queues[tenant];
+        if let Some(pos) = q.iter().position(|p| p.req == req) {
+            q.remove(pos);
+            self.queued -= 1;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Drain every queued request (crash re-homing): `(tenant, request)`
+    /// pairs in tenant-index order, FIFO within each tenant — a pinned,
+    /// deterministic re-dispatch order.
+    pub fn drain_all(&mut self) -> Vec<(usize, usize)> {
+        let mut out = Vec::with_capacity(self.queued);
+        for (t, q) in self.queues.iter_mut().enumerate() {
+            out.extend(q.drain(..).map(|p| (t, p.req)));
+        }
+        self.queued = 0;
+        out
+    }
+
     /// Earliest cycle at which a currently-queued partial batch becomes
     /// launchable by deadline (its head's arrival + wait window). `None`
     /// when every queue is empty. If something is already launchable this
@@ -173,6 +200,36 @@ mod tests {
         assert_eq!((t, reqs), (0, vec![1, 3]));
         let (t, reqs) = b.take_ready(0).unwrap();
         assert_eq!((t, reqs), (1, vec![2]));
+    }
+
+    #[test]
+    fn remove_cancels_queued_but_not_launched() {
+        let mut b = Batcher::new(policy(4, 1000), 2);
+        b.push(0, 1, 0);
+        b.push(0, 2, 0);
+        b.push(1, 3, 0);
+        assert!(b.remove(0, 2));
+        assert_eq!(b.queued(), 2);
+        assert!(!b.remove(0, 2), "already removed");
+        assert!(!b.remove(1, 99), "never queued");
+        // The remaining entries are intact and FIFO.
+        let (t, reqs) = b.take_ready(1_000).unwrap();
+        assert_eq!((t, reqs), (0, vec![1]));
+        assert!(!b.remove(0, 1), "launched requests are not queued");
+    }
+
+    #[test]
+    fn drain_all_is_tenant_order_fifo() {
+        let mut b = Batcher::new(policy(8, 1000), 3);
+        b.push(2, 20, 0);
+        b.push(0, 1, 1);
+        b.push(2, 21, 2);
+        b.push(0, 2, 3);
+        let drained = b.drain_all();
+        assert_eq!(drained, vec![(0, 1), (0, 2), (2, 20), (2, 21)]);
+        assert_eq!(b.queued(), 0);
+        assert_eq!(b.next_deadline(), None);
+        assert!(b.drain_all().is_empty());
     }
 
     #[test]

@@ -15,7 +15,14 @@
 //!   Within the home set the least-loaded instance wins; if every home
 //!   queue is full the request spills to the global least-loaded instance
 //!   rather than being rejected outright.
+//!
+//! All policies are **failure-aware** (ISSUE 6): a `Down` (crashed)
+//! instance admits nothing — even naive round-robin cannot route to a
+//! dead chip. Least-loaded and affinity additionally avoid `Degraded`
+//! (straggling / breaker-open) instances whenever an `Up` instance with
+//! queue space exists, so limping chips only absorb overflow.
 
+use super::faults::Health;
 use anyhow::{bail, Result};
 
 /// A dispatcher's view of one instance at admission time.
@@ -27,6 +34,9 @@ pub struct InstanceLoad {
     pub backlog_cycles: u64,
     /// Whether the instance can admit another request (queue cap).
     pub has_space: bool,
+    /// Crash/straggler/breaker state; `Down` never admits, `Degraded` is
+    /// a last resort for the load-aware policies.
+    pub health: Health,
 }
 
 /// Admission policy (see module docs).
@@ -104,7 +114,7 @@ impl Dispatcher {
             DispatchPolicy::RoundRobin => {
                 let i = self.rr_cursor % loads.len();
                 self.rr_cursor = (self.rr_cursor + 1) % loads.len();
-                loads[i].has_space.then_some(i)
+                (loads[i].has_space && loads[i].health != Health::Down).then_some(i)
             }
             DispatchPolicy::LeastLoaded => least_loaded(loads, None),
             DispatchPolicy::NetworkAffinity => {
@@ -116,19 +126,23 @@ impl Dispatcher {
 }
 
 /// Least-backlog instance with queue space, optionally restricted to a
-/// candidate subset. Ties break on the lowest instance index (candidate
+/// candidate subset. `Down` instances are never eligible; `Degraded`
+/// ones lose to any healthy candidate (the comparison key leads with the
+/// degraded bit), so limping chips only take traffic when every `Up`
+/// queue is full. Ties break on the lowest instance index (candidate
 /// lists are built in ascending order by construction).
 fn least_loaded(loads: &[InstanceLoad], among: Option<&[usize]>) -> Option<usize> {
     let mut best: Option<usize> = None;
+    let key =
+        |l: InstanceLoad, i: usize| (l.health == Health::Degraded, l.backlog_cycles, l.queued, i);
     let consider = |i: usize, best: &mut Option<usize>| {
-        if !loads[i].has_space {
+        if !loads[i].has_space || loads[i].health == Health::Down {
             return;
         }
         match *best {
             None => *best = Some(i),
             Some(b) => {
-                let (cur, old) = (loads[i], loads[b]);
-                if (cur.backlog_cycles, cur.queued, i) < (old.backlog_cycles, old.queued, b) {
+                if key(loads[i], i) < key(loads[b], b) {
                     *best = Some(i);
                 }
             }
@@ -158,6 +172,7 @@ mod tests {
             queued,
             backlog_cycles: backlog,
             has_space: space,
+            health: Health::Up,
         }
     }
 
@@ -194,6 +209,44 @@ mod tests {
         assert_eq!(d.choose(0, &loads), Some(2));
         let empty = vec![load(0, 0, false); 3];
         assert_eq!(d.choose(0, &empty), None);
+    }
+
+    #[test]
+    fn no_policy_routes_to_a_down_instance() {
+        for policy in [
+            DispatchPolicy::RoundRobin,
+            DispatchPolicy::LeastLoaded,
+            DispatchPolicy::NetworkAffinity,
+        ] {
+            let mut d = Dispatcher::new(policy, 1, 2);
+            let mut loads = vec![load(0, 0, true); 2];
+            loads[0].health = Health::Down;
+            for _ in 0..4 {
+                if let Some(i) = d.choose(0, &loads) {
+                    assert_eq!(i, 1, "{policy:?} routed to a dead instance");
+                }
+            }
+            // Whole fleet down: every policy rejects.
+            loads[1].health = Health::Down;
+            for _ in 0..4 {
+                assert_eq!(d.choose(0, &loads), None, "{policy:?} admits to a dead fleet");
+            }
+        }
+    }
+
+    #[test]
+    fn degraded_instance_is_a_last_resort_for_load_aware_policies() {
+        let mut d = Dispatcher::new(DispatchPolicy::LeastLoaded, 1, 3);
+        // The degraded instance has the smallest backlog but loses to any
+        // healthy instance with space.
+        let mut loads = vec![load(10, 1, true), load(500, 3, true), load(900, 4, true)];
+        loads[0].health = Health::Degraded;
+        assert_eq!(d.choose(0, &loads), Some(1));
+        // Healthy queues full: the limping instance absorbs the overflow
+        // rather than the request being rejected.
+        loads[1].has_space = false;
+        loads[2].has_space = false;
+        assert_eq!(d.choose(0, &loads), Some(0));
     }
 
     #[test]

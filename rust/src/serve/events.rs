@@ -1,13 +1,68 @@
-//! Deterministic discrete-event queue for the serving simulator.
+//! Deterministic discrete-event queue and event vocabulary for the
+//! serving simulator.
 //!
 //! A binary min-heap keyed by `(cycle, seq)` where `seq` is a monotone
 //! insertion counter: two events scheduled for the same cycle pop in the
 //! order they were pushed, so the simulation is a pure function of the
 //! spec and seed — no iteration-order or wall-clock nondeterminism can
 //! leak in. Payloads need no ordering of their own.
+//!
+//! ## Same-cycle tie-break contract
+//!
+//! Ties at one cycle resolve strictly in **push order**, which the
+//! simulation exploits to pin a *pessimistic* resolution order
+//! (`tests/serve.rs` holds the property tests):
+//!
+//! 1. **Fault-plan events first.** The seeded crash/recover/straggler
+//!    timeline ([`super::faults::generate_plan`]) is enqueued before the
+//!    arrival processes are seeded, so a crash at cycle `c` carries a
+//!    lower `seq` than *any* event scheduled during the run for `c` — a
+//!    batch completing exactly when its instance crashes is killed and
+//!    re-homed, not completed.
+//! 2. **Timeouts beat completions.** A per-attempt [`ServeEvent::Timeout`]
+//!    is pushed at dispatch time, before the batch containing the attempt
+//!    is launched (and thus before its [`ServeEvent::Complete`] exists);
+//!    an attempt whose timeout lands exactly on its completion cycle is
+//!    timed out.
+//! 3. Among run-scheduled events, causal push order wins — identical to
+//!    one-at-a-time popping even under `drain_cycle` batching (pinned by
+//!    `drain_matches_pop_order`).
 
+use super::faults::FaultKind;
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
+
+/// The serving simulator's event vocabulary. Ordering between same-cycle
+/// events is purely push order (see the module docs); the variants carry
+/// no priority of their own.
+#[derive(Debug, Clone)]
+pub enum ServeEvent {
+    /// A request arrives. `client` marks closed-loop re-issue chains
+    /// (unused under open-loop traffic); `reissue_of` links a closed-loop
+    /// re-issue to the request whose completion/rejection spawned it.
+    Arrival {
+        tenant: usize,
+        client: bool,
+        reissue_of: Option<usize>,
+    },
+    /// Re-dispatch request `req` after a retry backoff.
+    Retry { req: usize },
+    /// A partial batch's wait window may have expired on this instance.
+    BatchTimer { instance: usize, token: u64 },
+    /// The batch running on `instance` (its `running` set) finishes.
+    /// `epoch` is the instance's crash epoch at launch: a crash bumps the
+    /// epoch, so completions of batches killed by a crash are ignored.
+    Complete { instance: usize, epoch: u32 },
+    /// Attempt `token` of request `req` has been in flight for the
+    /// timeout window; if still live it is cancelled (and retried or
+    /// failed).
+    Timeout { req: usize, token: u32 },
+    /// Hedge trigger: if attempt `token` of `req` is still live, issue a
+    /// duplicate attempt on another instance.
+    Hedge { req: usize, token: u32 },
+    /// A fault-plan event hits `instance`.
+    Fault { instance: usize, kind: FaultKind },
+}
 
 struct Entry<T> {
     cycle: u64,

@@ -1,0 +1,460 @@
+//! Fault injection and recovery for the serving fleet: what the capacity
+//! curves look like when instances crash, limp, and drop requests.
+//!
+//! VSCNN's pitch is one hardware path that survives both dense and sparse
+//! regimes; at fleet scale the serving story must survive regime changes
+//! too — faults are the steady state at thousands of instances. This
+//! module supplies the *deterministic* ingredients the event loop
+//! ([`super::fleet`]) threads through:
+//!
+//! * [`FaultSpec`] — the injected fault mix, parsed from the CLI
+//!   `--faults` grammar (`crash:RATE,mttr:MS,straggler:RATE,slow:X,
+//!   slowms:MS,reqfault:P`).
+//! * [`generate_plan`] — a seeded, pre-materialized timeline of
+//!   crash/recover and straggler start/end events per instance, drawn
+//!   from dedicated [`Pcg32`] streams so the arrival stream (and thus the
+//!   zero-fault simulation) is untouched: replays are bit-reproducible
+//!   and the no-fault configuration stays bit-identical to the pre-fault
+//!   simulator.
+//! * [`Health`] — the per-instance state dispatch consults: `Up`,
+//!   `Degraded` (straggling, or breaker open after consecutive
+//!   timeouts), `Down` (crashed, queue drained and re-homed).
+//! * [`RobustnessPolicy`] — the client-side knobs: per-attempt timeout,
+//!   bounded retry with exponential backoff, hedged requests (duplicate
+//!   to a second instance after a delay, first completion wins, loser
+//!   cancelled), and SLO-aware load shedding (lowest-priority tenants
+//!   rejected first when surviving capacity drops below offered load).
+//!
+//! All cycle arithmetic is integral; all randomness is seeded PCG32. A
+//! `(spec, seed)` pair reproduces the exact fault timeline, pinned by
+//! `tests/serve.rs`.
+
+use super::traffic::exp_interarrival;
+use crate::util::rng::Pcg32;
+use anyhow::{bail, Context, Result};
+
+/// Base PCG32 stream id for fault-plan draws. Instance `i` uses streams
+/// `BASE + 2i` (crashes) and `BASE + 2i + 1` (stragglers); per-request
+/// execution faults use [`REQ_FAULT_STREAM`]. The arrival process owns
+/// stream 1, so fault injection never perturbs the arrival sequence.
+const FAULT_STREAM_BASE: u64 = 0x0F00;
+
+/// PCG32 stream id for per-request execution-fault draws.
+pub const REQ_FAULT_STREAM: u64 = 7;
+
+/// Injected fault mix for one serving run. All rates are per instance.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultSpec {
+    /// Crash arrivals per instance-second (Poisson). 0 = never.
+    pub crash_per_sec: f64,
+    /// Mean time to recover from a crash, in milliseconds (exponential).
+    pub mttr_ms: f64,
+    /// Straggler-episode arrivals per instance-second (Poisson). 0 = never.
+    pub straggler_per_sec: f64,
+    /// Service-time multiplier while an instance straggles (>= 1).
+    pub slowdown: f64,
+    /// Mean straggler-episode length in milliseconds (exponential).
+    pub straggler_ms: f64,
+    /// Per-request execution-fault probability in [0, 1): the batch
+    /// finishes but this request's result is corrupt and must be retried.
+    pub req_fault_prob: f64,
+}
+
+impl FaultSpec {
+    /// No injected faults: the zero-fault configuration, bit-identical to
+    /// the pre-fault simulator.
+    pub fn none() -> FaultSpec {
+        FaultSpec {
+            crash_per_sec: 0.0,
+            mttr_ms: 5.0,
+            straggler_per_sec: 0.0,
+            slowdown: 4.0,
+            straggler_ms: 2.0,
+            req_fault_prob: 0.0,
+        }
+    }
+
+    /// True when no fault source is active (rates and probabilities all
+    /// zero) — the plan is empty and the simulation takes the legacy path.
+    pub fn is_none(&self) -> bool {
+        self.crash_per_sec == 0.0 && self.straggler_per_sec == 0.0 && self.req_fault_prob == 0.0
+    }
+
+    /// Parse the CLI `--faults` grammar: comma-separated `key:value`
+    /// pairs. Keys: `crash` (crashes per instance-second), `mttr` (ms),
+    /// `straggler` (episodes per instance-second), `slow` (multiplier,
+    /// >= 1), `slowms` (episode ms), `reqfault` (probability in [0, 1)).
+    /// Unspecified keys keep the [`FaultSpec::none`] defaults.
+    pub fn parse(s: &str) -> Result<FaultSpec> {
+        let mut spec = FaultSpec::none();
+        if s.trim().is_empty() {
+            bail!("--faults spec is empty (example: crash:0.5,mttr:5,straggler:1,slow:4)");
+        }
+        for part in s.split(',') {
+            let Some((key, val)) = part.split_once(':') else {
+                bail!("--faults: '{part}' is not key:value (example: crash:0.5)");
+            };
+            let num: f64 = val
+                .parse()
+                .with_context(|| format!("--faults {key}: cannot parse '{val}'"))?;
+            if !num.is_finite() {
+                bail!("--faults {key}: '{val}' is not finite");
+            }
+            match key {
+                "crash" => {
+                    anyhow::ensure!(num >= 0.0, "--faults crash: rate must be >= 0, got {num}");
+                    spec.crash_per_sec = num;
+                }
+                "mttr" => {
+                    anyhow::ensure!(num > 0.0, "--faults mttr: must be > 0 ms, got {num}");
+                    spec.mttr_ms = num;
+                }
+                "straggler" => {
+                    anyhow::ensure!(num >= 0.0, "--faults straggler: rate must be >= 0, got {num}");
+                    spec.straggler_per_sec = num;
+                }
+                "slow" => {
+                    anyhow::ensure!(num >= 1.0, "--faults slow: multiplier must be >= 1, got {num}");
+                    spec.slowdown = num;
+                }
+                "slowms" => {
+                    anyhow::ensure!(num > 0.0, "--faults slowms: must be > 0 ms, got {num}");
+                    spec.straggler_ms = num;
+                }
+                "reqfault" => {
+                    anyhow::ensure!(
+                        (0.0..1.0).contains(&num),
+                        "--faults reqfault: probability must be in [0, 1), got {num}"
+                    );
+                    spec.req_fault_prob = num;
+                }
+                other => bail!(
+                    "--faults: unknown key '{other}' \
+                     (known: crash, mttr, straggler, slow, slowms, reqfault)"
+                ),
+            }
+        }
+        Ok(spec)
+    }
+
+    /// Short label for reports.
+    pub fn label(&self) -> String {
+        if self.is_none() {
+            return "none".to_string();
+        }
+        let mut parts = Vec::new();
+        if self.crash_per_sec > 0.0 {
+            parts.push(format!(
+                "crash {}/s mttr {}ms",
+                self.crash_per_sec, self.mttr_ms
+            ));
+        }
+        if self.straggler_per_sec > 0.0 {
+            parts.push(format!(
+                "straggler {}/s x{} {}ms",
+                self.straggler_per_sec, self.slowdown, self.straggler_ms
+            ));
+        }
+        if self.req_fault_prob > 0.0 {
+            parts.push(format!("reqfault {}", self.req_fault_prob));
+        }
+        parts.join(" | ")
+    }
+}
+
+/// Client-side robustness knobs (all off by default = legacy behavior).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RobustnessPolicy {
+    /// Per-attempt timeout in cycles, measured from dispatch (queueing
+    /// counts). 0 = no timeouts.
+    pub timeout_cycles: u64,
+    /// Dispatch retries after a failed attempt (timeout, queue-full, or
+    /// execution fault). 0 = fail fast, the legacy behavior.
+    pub max_retries: u32,
+    /// Base retry backoff in cycles; doubles per retry (exponential).
+    pub backoff_cycles: u64,
+    /// Hedge delay in cycles: if the primary attempt has not completed
+    /// after this long, duplicate the request onto a second instance.
+    /// First completion wins; the loser is cancelled. 0 = no hedging.
+    pub hedge_cycles: u64,
+    /// SLO-aware load shedding: reject the lowest-priority tenants first
+    /// when queue occupancy over the surviving (non-crashed) instances
+    /// crosses their admission threshold.
+    pub shed: bool,
+}
+
+impl RobustnessPolicy {
+    /// Everything off: the legacy fail-fast client.
+    pub fn none() -> RobustnessPolicy {
+        RobustnessPolicy {
+            timeout_cycles: 0,
+            max_retries: 0,
+            backoff_cycles: 0,
+            hedge_cycles: 0,
+            shed: false,
+        }
+    }
+
+    /// True when any robustness mechanism is on.
+    pub fn active(&self) -> bool {
+        self.timeout_cycles > 0 || self.max_retries > 0 || self.hedge_cycles > 0 || self.shed
+    }
+
+    /// Backoff before retry number `retry` (1-based): exponential with a
+    /// capped shift, at least one cycle so time always advances.
+    pub fn backoff_for(&self, retry: u32) -> u64 {
+        let shift = (retry.saturating_sub(1)).min(16);
+        (self.backoff_cycles << shift).max(1)
+    }
+
+    /// Shedding admission threshold for a tenant priority (0 = highest):
+    /// priority `p` is admitted while the alive-fleet queue occupancy is
+    /// below `1 - 0.3 * min(p, 3)` — lowest priorities are shed first as
+    /// surviving capacity fills up.
+    pub fn shed_threshold(priority: u8) -> f64 {
+        1.0 - 0.3 * priority.min(3) as f64
+    }
+}
+
+/// Per-instance health as seen by dispatch.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Health {
+    /// Serving normally.
+    Up,
+    /// Limping: straggling (slowdown > 1) or breaker open after
+    /// consecutive timeouts. Dispatch avoids it when an `Up` instance
+    /// with queue space exists.
+    Degraded,
+    /// Crashed: accepts nothing until its recover event.
+    Down,
+}
+
+/// One scheduled fault-plan event.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum FaultKind {
+    /// Instance dies: running batch killed, queue drained and re-homed.
+    Crash,
+    /// Instance returns, cold (no resident network, healthy).
+    Recover,
+    /// Straggler episode begins: service times multiply by the factor.
+    SlowStart(f64),
+    /// Straggler episode ends.
+    SlowEnd,
+}
+
+/// A fault-plan entry: `kind` hits `instance` at `cycle`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultEvent {
+    pub cycle: u64,
+    pub instance: usize,
+    pub kind: FaultKind,
+}
+
+/// Materialize the seeded fault timeline for a fleet of `instances` over
+/// `horizon` cycles at `clock_hz` cycles/sec. Crash/recover pairs and
+/// straggler episodes alternate per instance (exponential gaps, at least
+/// one cycle, so pairs never collide); events are returned sorted by
+/// `(cycle, instance)` with starts before ends, ready to enqueue ahead of
+/// the arrival process. Deterministic per `(spec, seed)`.
+pub fn generate_plan(
+    spec: &FaultSpec,
+    instances: usize,
+    horizon: u64,
+    clock_hz: f64,
+    seed: u64,
+) -> Vec<FaultEvent> {
+    let mut plan: Vec<FaultEvent> = Vec::new();
+    if spec.is_none() {
+        return plan;
+    }
+    let cycles_per_ms = clock_hz / 1e3;
+    for i in 0..instances {
+        if spec.crash_per_sec > 0.0 {
+            let mut rng = Pcg32::new(seed, FAULT_STREAM_BASE + 2 * i as u64);
+            let mean_gap = clock_hz / spec.crash_per_sec;
+            let mean_repair = spec.mttr_ms * cycles_per_ms;
+            let mut t = 0u64;
+            loop {
+                t += exp_interarrival(&mut rng, mean_gap);
+                if t > horizon {
+                    break;
+                }
+                plan.push(FaultEvent {
+                    cycle: t,
+                    instance: i,
+                    kind: FaultKind::Crash,
+                });
+                t += exp_interarrival(&mut rng, mean_repair.max(1.0));
+                if t > horizon {
+                    break; // stays down; availability accounting closes it
+                }
+                plan.push(FaultEvent {
+                    cycle: t,
+                    instance: i,
+                    kind: FaultKind::Recover,
+                });
+            }
+        }
+        if spec.straggler_per_sec > 0.0 {
+            let mut rng = Pcg32::new(seed, FAULT_STREAM_BASE + 2 * i as u64 + 1);
+            let mean_gap = clock_hz / spec.straggler_per_sec;
+            let mean_episode = spec.straggler_ms * cycles_per_ms;
+            let mut t = 0u64;
+            loop {
+                t += exp_interarrival(&mut rng, mean_gap);
+                if t > horizon {
+                    break;
+                }
+                plan.push(FaultEvent {
+                    cycle: t,
+                    instance: i,
+                    kind: FaultKind::SlowStart(spec.slowdown),
+                });
+                t += exp_interarrival(&mut rng, mean_episode.max(1.0));
+                if t > horizon {
+                    break;
+                }
+                plan.push(FaultEvent {
+                    cycle: t,
+                    instance: i,
+                    kind: FaultKind::SlowEnd,
+                });
+            }
+        }
+    }
+    // Per-instance streams are monotone; a stable sort by (cycle,
+    // instance) pins the global interleaving.
+    plan.sort_by_key(|e| (e.cycle, e.instance));
+    plan
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_full_grammar() {
+        let s = FaultSpec::parse("crash:0.5,mttr:8,straggler:2,slow:6,slowms:3,reqfault:0.01")
+            .unwrap();
+        assert_eq!(s.crash_per_sec, 0.5);
+        assert_eq!(s.mttr_ms, 8.0);
+        assert_eq!(s.straggler_per_sec, 2.0);
+        assert_eq!(s.slowdown, 6.0);
+        assert_eq!(s.straggler_ms, 3.0);
+        assert_eq!(s.req_fault_prob, 0.01);
+        assert!(!s.is_none());
+        assert!(s.label().contains("crash"));
+    }
+
+    #[test]
+    fn parse_partial_keeps_defaults() {
+        let s = FaultSpec::parse("crash:0.01").unwrap();
+        assert_eq!(s.crash_per_sec, 0.01);
+        assert_eq!(s.mttr_ms, FaultSpec::none().mttr_ms);
+        assert_eq!(s.straggler_per_sec, 0.0);
+        assert!(!s.is_none());
+    }
+
+    #[test]
+    fn parse_errors_are_specific() {
+        for (input, needle) in [
+            ("", "empty"),
+            ("crash", "key:value"),
+            ("crash:abc", "cannot parse"),
+            ("crash:-1", ">= 0"),
+            ("slow:0.5", ">= 1"),
+            ("reqfault:1.5", "[0, 1)"),
+            ("mttr:0", "> 0"),
+            ("bogus:1", "unknown key"),
+        ] {
+            let err = FaultSpec::parse(input).unwrap_err();
+            assert!(
+                format!("{err:#}").contains(needle),
+                "input '{input}': expected '{needle}' in '{err:#}'"
+            );
+        }
+    }
+
+    #[test]
+    fn none_spec_has_empty_plan() {
+        let plan = generate_plan(&FaultSpec::none(), 8, 1_000_000_000, 5e8, 42);
+        assert!(plan.is_empty());
+        assert!(FaultSpec::none().is_none());
+        assert_eq!(FaultSpec::none().label(), "none");
+    }
+
+    #[test]
+    fn plan_is_deterministic_and_sorted() {
+        let spec = FaultSpec::parse("crash:50,mttr:2,straggler:100,slow:4,slowms:1").unwrap();
+        let a = generate_plan(&spec, 4, 500_000_000, 5e8, 9);
+        let b = generate_plan(&spec, 4, 500_000_000, 5e8, 9);
+        assert_eq!(a, b, "same (spec, seed) must replay bit-identically");
+        assert!(!a.is_empty(), "rates high enough to fire within horizon");
+        assert!(a.windows(2).all(|w| (w[0].cycle, w[0].instance) <= (w[1].cycle, w[1].instance)));
+        let c = generate_plan(&spec, 4, 500_000_000, 5e8, 10);
+        assert_ne!(a, c, "different seeds produce different timelines");
+    }
+
+    #[test]
+    fn plan_alternates_crash_recover_per_instance() {
+        let spec = FaultSpec::parse("crash:100,mttr:1").unwrap();
+        let plan = generate_plan(&spec, 3, 1_000_000_000, 5e8, 3);
+        for i in 0..3 {
+            let mut down = false;
+            for e in plan.iter().filter(|e| e.instance == i) {
+                match e.kind {
+                    FaultKind::Crash => {
+                        assert!(!down, "crash while down (instance {i})");
+                        down = true;
+                    }
+                    FaultKind::Recover => {
+                        assert!(down, "recover while up (instance {i})");
+                        down = false;
+                    }
+                    _ => panic!("unexpected straggler event"),
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn backoff_grows_exponentially_and_caps() {
+        let r = RobustnessPolicy {
+            backoff_cycles: 100,
+            ..RobustnessPolicy::none()
+        };
+        assert_eq!(r.backoff_for(1), 100);
+        assert_eq!(r.backoff_for(2), 200);
+        assert_eq!(r.backoff_for(3), 400);
+        // Shift is capped, not overflowing.
+        assert!(r.backoff_for(60) >= r.backoff_for(17));
+        let zero = RobustnessPolicy::none();
+        assert_eq!(zero.backoff_for(1), 1, "backoff always advances time");
+    }
+
+    #[test]
+    fn shed_thresholds_order_priorities() {
+        let t0 = RobustnessPolicy::shed_threshold(0);
+        let t1 = RobustnessPolicy::shed_threshold(1);
+        let t3 = RobustnessPolicy::shed_threshold(3);
+        let t9 = RobustnessPolicy::shed_threshold(9);
+        assert_eq!(t0, 1.0, "highest priority is shed last");
+        assert!(t0 > t1 && t1 > t3, "lower priority sheds earlier");
+        assert_eq!(t3, t9, "priorities past 3 share the floor");
+        assert!(t3 > 0.0);
+    }
+
+    #[test]
+    fn robustness_active_flags() {
+        assert!(!RobustnessPolicy::none().active());
+        let mut r = RobustnessPolicy::none();
+        r.timeout_cycles = 10;
+        assert!(r.active());
+        let mut h = RobustnessPolicy::none();
+        h.hedge_cycles = 5;
+        assert!(h.active());
+        let mut s = RobustnessPolicy::none();
+        s.shed = true;
+        assert!(s.active());
+    }
+}

@@ -26,6 +26,36 @@
 //! [`MemModel::Ideal`] transfer is free, so `marginal = single` and
 //! `switch = 0` (nothing to amortize, nothing to reload).
 //!
+//! ## Resilience (ISSUE 6)
+//!
+//! The loop optionally threads a seeded fault plan
+//! ([`super::faults::generate_plan`]) and a client-side
+//! [`RobustnessPolicy`] through the same event queue:
+//!
+//! * **Crashes** kill the running batch (crash-epoch bump invalidates its
+//!   pending [`ServeEvent::Complete`]) and drain the queue; both are
+//!   re-homed onto surviving instances for free (no retry budget spent).
+//!   Recovery brings the instance back cold.
+//! * **Stragglers** multiply the duration of batches launched during the
+//!   episode; dispatch sees the instance as `Degraded` and avoids it.
+//! * **Timeouts** cancel an attempt after `timeout_cycles` in flight
+//!   (queueing counts); launched work completes but its result is
+//!   discarded as a *stale completion*. Consecutive timeouts open a
+//!   per-instance breaker that marks it `Degraded` for a cooldown.
+//! * **Retries** re-dispatch a failed attempt (capacity, timeout, or
+//!   execution fault) with exponential backoff, up to `max_retries`.
+//! * **Hedges** duplicate a still-unfinished request onto a second
+//!   instance after `hedge_cycles`; the first completion wins and the
+//!   loser is cancelled (de-queued, or left to go stale if launched).
+//! * **Shedding** rejects the lowest-priority tenants at admission when
+//!   queue occupancy over the surviving fleet crosses their threshold.
+//!
+//! Every request ends in exactly one [`Outcome`] bucket, so the ledger
+//! `offered = completed + rejected + timed_out + shed + in_flight` holds
+//! under any interleaving — hedge duplicates and crash re-homes are
+//! *attempts* of one request, never new requests (pinned by
+//! `tests/serve.rs`).
+//!
 //! ## Determinism
 //!
 //! The event loop is single-threaded and totally ordered by
@@ -33,11 +63,17 @@
 //! [`Pcg32`] streams; engine cycle counts are thread-count-invariant.
 //! A `(spec, seed)` pair therefore produces a bit-identical
 //! [`super::report::ServeReport`] regardless of the host thread budget —
-//! pinned by `tests/serve.rs`.
+//! pinned by `tests/serve.rs`. The fault plan and per-request fault draws
+//! use dedicated streams, so the zero-fault configuration consumes the
+//! exact RNG sequence — and emits the exact event sequence — of the
+//! pre-fault simulator: its reports stay bit-identical.
 
 use super::batcher::{BatchPolicy, Batcher};
 use super::dispatch::{DispatchPolicy, Dispatcher, InstanceLoad};
-use super::events::EventQueue;
+use super::events::{EventQueue, ServeEvent};
+use super::faults::{
+    generate_plan, FaultKind, FaultSpec, Health, RobustnessPolicy, REQ_FAULT_STREAM,
+};
 use super::traffic::{exp_interarrival, RequestMix, Tenant, TrafficModel};
 use crate::engine::{Engine, FunctionalBackend, NetworkReport, RunOptions};
 use crate::experiments::ExpContext;
@@ -47,6 +83,12 @@ use crate::util::rng::Pcg32;
 use anyhow::Result;
 use std::collections::BTreeMap;
 use std::sync::{Mutex, OnceLock};
+
+/// Consecutive per-attempt timeouts on one instance that open its
+/// breaker (dispatch then treats it as `Degraded`).
+const BREAKER_STREAK: u32 = 3;
+/// Breaker cooldown, in units of the attempt timeout.
+const BREAKER_COOLDOWN_TIMEOUTS: u64 = 8;
 
 /// One accelerator instance in the fleet: a PE geometry + memory model.
 #[derive(Debug, Clone, Copy)]
@@ -97,6 +139,11 @@ pub struct ServeSpec {
     /// domain; matches `SimConfig::freq_mhz` by default).
     pub clock_mhz: f64,
     pub seed: u64,
+    /// Injected fault mix ([`FaultSpec::none`] = the legacy simulator).
+    pub faults: FaultSpec,
+    /// Client-side robustness knobs ([`RobustnessPolicy::none`] = legacy
+    /// fail-fast behavior).
+    pub robust: RobustnessPolicy,
 }
 
 impl ServeSpec {
@@ -108,6 +155,14 @@ impl ServeSpec {
     /// Convert a cycle count to milliseconds under the serving clock.
     pub fn cycles_to_ms(&self, cycles: u64) -> f64 {
         cycles as f64 / (self.clock_mhz * 1e3)
+    }
+
+    /// True when the run exercises the resilience layer at all — any
+    /// fault source or any robustness mechanism. Gates the extra report
+    /// sections so zero-fault output stays bit-identical to the
+    /// pre-fault simulator.
+    pub fn resilience_active(&self) -> bool {
+        !self.faults.is_none() || self.robust.active()
     }
 }
 
@@ -233,19 +288,52 @@ pub fn build_profiles(spec: &ServeSpec, threads: usize) -> Result<Vec<Vec<Servic
     Ok(chunks?.into_iter().flatten().collect())
 }
 
+/// Terminal (or not-yet-terminal) state of one request — exactly one
+/// bucket per request, so the conservation ledger
+/// `offered = completed + rejected + timed_out + shed + in_flight`
+/// holds by construction.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Outcome {
+    /// Still queued, running, hedged, or awaiting a retry at the horizon.
+    InFlight,
+    /// A (non-faulted) attempt completed; first completion wins.
+    Completed,
+    /// Dropped for capacity or after exhausting retries on execution
+    /// faults — uniformly counted for open- and closed-loop traffic
+    /// (closed-loop clients additionally re-issue a *new* request).
+    Rejected,
+    /// Final attempt timed out with no retry budget left.
+    TimedOut,
+    /// Refused at admission by SLO-aware load shedding.
+    Shed,
+}
+
 /// One request's lifecycle (admitted or rejected).
 #[derive(Debug, Clone, Copy)]
 pub struct RequestRecord {
     pub tenant: usize,
-    /// Admitting instance (`None` = rejected).
+    /// Instance that served (or last held) the request; `None` = never
+    /// admitted anywhere.
     pub instance: Option<usize>,
     pub arrival: u64,
     /// Batch launch cycle (admitted requests whose batch launched).
     pub start: Option<u64>,
-    /// Completion cycle (`None` = rejected or still in flight at the end).
+    /// Completion cycle (`None` = not completed within the horizon).
     pub completion: Option<u64>,
     /// Size of the batch this request completed in.
     pub batch_size: usize,
+    /// Where the request ended up (see [`Outcome`]).
+    pub outcome: Outcome,
+    /// Dispatch attempts that consumed retry budget (first try included;
+    /// crash re-homes and hedges are free).
+    pub attempts: u32,
+    /// A hedge duplicate was placed for this request.
+    pub hedged: bool,
+    /// The hedge attempt (not the primary) completed first.
+    pub hedge_won: bool,
+    /// Closed-loop lineage: the request whose completion/rejection
+    /// spawned this one (`None` for fresh arrivals).
+    pub reissue_of: Option<usize>,
 }
 
 impl RequestRecord {
@@ -259,7 +347,8 @@ impl RequestRecord {
 #[derive(Debug, Clone, Default)]
 pub struct InstanceStats {
     pub label: String,
-    /// Busy cycles within the simulated horizon.
+    /// Busy cycles within the simulated horizon (work killed by a crash
+    /// is un-counted — the chip never finished it).
     pub busy_cycles: u64,
     pub batches: u64,
     /// Batches that paid the network-switch weight reload.
@@ -268,6 +357,10 @@ pub struct InstanceStats {
     pub max_queue: usize,
     /// Time-integral of queue depth (cycles × requests), for mean depth.
     pub queue_area: u64,
+    /// Crash events that hit this instance.
+    pub crashes: u64,
+    /// Cycles spent down (crashed) within the horizon.
+    pub down_cycles: u64,
 }
 
 impl InstanceStats {
@@ -285,6 +378,11 @@ impl InstanceStats {
     pub fn avg_batch(&self) -> f64 {
         self.completed as f64 / self.batches.max(1) as f64
     }
+
+    /// Fraction of the horizon this instance was up.
+    pub fn availability(&self, duration_cycles: u64) -> f64 {
+        1.0 - self.down_cycles as f64 / duration_cycles.max(1) as f64
+    }
 }
 
 /// Everything the simulation measured; [`super::report::ServeReport`]
@@ -292,32 +390,77 @@ impl InstanceStats {
 #[derive(Debug, Clone)]
 pub struct ServeOutcome {
     pub offered: u64,
+    /// Requests that were admitted somewhere at least once.
     pub admitted: u64,
     pub rejected: u64,
     pub completed: u64,
+    /// Requests whose final attempt timed out (terminal).
+    pub timed_out: u64,
+    /// Requests refused at admission by load shedding.
+    pub shed: u64,
+    /// Requests not yet terminal at the horizon (queued, running, hedged,
+    /// or awaiting a retry backoff). Counted from per-record [`Outcome`]s
+    /// — with retries a request can be admitted more than once, so
+    /// `admitted - completed` is no longer the right derivation.
+    pub in_flight: u64,
+    /// Retry re-dispatches scheduled (attempt-level, not per request).
+    pub retries: u64,
+    /// Hedge duplicates actually placed on a second instance.
+    pub hedges: u64,
+    /// Requests whose hedge attempt beat the primary.
+    pub hedge_wins: u64,
+    /// Attempts re-dispatched onto a surviving instance after a crash.
+    pub rehomed: u64,
+    /// Per-request execution faults injected at completion.
+    pub faulted: u64,
+    /// Completions of cancelled attempts (timed out, hedged-out, or
+    /// killed) whose results were discarded.
+    pub stale_completions: u64,
+    pub crashes: u64,
+    pub recoveries: u64,
+    /// Total crash-to-recover cycles over completed recoveries (MTTR
+    /// numerator; `recoveries` is the denominator).
+    pub recovery_cycles: u64,
+    /// Total instance-down cycles within the horizon, all instances.
+    pub down_cycles: u64,
     /// Discrete events executed by the loop (arrivals + timers +
-    /// completions) — the denominator of the bench's events/s metric.
+    /// completions + fault/robustness events) — the denominator of the
+    /// bench's events/s metric.
     pub events_processed: u64,
     pub records: Vec<RequestRecord>,
     pub instances: Vec<InstanceStats>,
 }
 
-impl ServeOutcome {
-    /// Requests admitted but not completed within the horizon (queued or
-    /// mid-batch when the simulation stopped).
-    pub fn in_flight(&self) -> u64 {
-        self.admitted - self.completed
-    }
+/// One live dispatch of a request onto an instance. A request has one
+/// live attempt normally, two while a hedge races, zero while it waits
+/// out a retry backoff.
+#[derive(Debug, Clone, Copy)]
+struct Attempt {
+    /// Per-request monotone id; `Timeout`/`Hedge` events and the
+    /// instance's running set name attempts by token, so cancelled
+    /// attempts go *stale* instead of being chased through the queues.
+    token: u32,
+    instance: usize,
+    hedge: bool,
 }
 
-enum Event {
-    /// A request arrives. `client` marks closed-loop re-issue chains
-    /// (unused under open-loop traffic).
-    Arrival { tenant: usize, client: bool },
-    /// A partial batch's wait window may have expired on this instance.
-    BatchTimer { instance: usize, token: u64 },
-    /// The batch holding these request ids finishes on this instance.
-    Complete { instance: usize, reqs: Vec<usize> },
+/// Why an attempt (and possibly its request) failed.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum FailCause {
+    /// No instance could admit it (queue caps / whole fleet down).
+    Capacity,
+    /// The attempt timeout expired.
+    TimedOut,
+    /// Injected per-request execution fault at completion.
+    ExecFault,
+}
+
+/// Mutable per-request simulation state (parallel to `records`).
+struct ReqState {
+    live: Vec<Attempt>,
+    next_token: u32,
+    /// Closed-loop client chain: terminal outcomes re-issue.
+    client: bool,
 }
 
 struct Instance {
@@ -331,6 +474,20 @@ struct Instance {
     /// Estimated marginal cycles queued (for least-loaded dispatch).
     backlog_cycles: u64,
     last_queue_change: u64,
+    /// Crash epoch: bumped on crash so pending `Complete` events of
+    /// killed batches are ignored.
+    epoch: u32,
+    /// The launched batch as `(req, attempt token)` pairs — owned by the
+    /// instance (not the event) so a crash can kill and re-home it.
+    running: Vec<(usize, u32)>,
+    /// Service-time multiplier (> 1 during a straggler episode).
+    slowdown: f64,
+    /// Crash cycle while down; `None` = up.
+    down_since: Option<u64>,
+    /// Breaker: treated as `Degraded` until this cycle.
+    breaker_until: u64,
+    /// Consecutive attempt timeouts (resets on a served completion).
+    timeout_streak: u32,
     stats: InstanceStats,
 }
 
@@ -341,6 +498,17 @@ impl Instance {
         let since = self.last_queue_change.min(horizon);
         self.stats.queue_area += self.batcher.queued() as u64 * (until - since);
         self.last_queue_change = now;
+    }
+
+    /// Health as dispatch sees it at `now`.
+    fn health(&self, now: u64) -> Health {
+        if self.down_since.is_some() {
+            Health::Down
+        } else if self.slowdown > 1.0 || self.breaker_until > now {
+            Health::Degraded
+        } else {
+            Health::Up
+        }
     }
 }
 
@@ -353,9 +521,13 @@ struct Sim<'a> {
     dispatcher: Dispatcher,
     mix: RequestMix,
     rng: Pcg32,
+    /// Per-request execution-fault draws — a dedicated stream so the
+    /// arrival sequence is untouched by fault injection.
+    fault_rng: Pcg32,
     instances: Vec<Instance>,
-    events: EventQueue<Event>,
+    events: EventQueue<ServeEvent>,
     records: Vec<RequestRecord>,
+    req_state: Vec<ReqState>,
     /// Reusable dispatch-snapshot buffer (hot: one refill per arrival
     /// instead of one allocation per arrival).
     loads: Vec<InstanceLoad>,
@@ -363,6 +535,17 @@ struct Sim<'a> {
     admitted: u64,
     rejected: u64,
     completed: u64,
+    timed_out: u64,
+    shed: u64,
+    retries: u64,
+    hedges: u64,
+    hedge_wins: u64,
+    rehomed: u64,
+    faulted: u64,
+    stale_completions: u64,
+    crashes: u64,
+    recoveries: u64,
+    recovery_cycles: u64,
 }
 
 impl<'a> Sim<'a> {
@@ -394,6 +577,12 @@ impl<'a> Sim<'a> {
                 timer_token: 0,
                 backlog_cycles: 0,
                 last_queue_change: 0,
+                epoch: 0,
+                running: Vec::new(),
+                slowdown: 1.0,
+                down_since: None,
+                breaker_until: 0,
+                timeout_streak: 0,
                 stats: InstanceStats {
                     label: is.label(),
                     ..InstanceStats::default()
@@ -405,6 +594,7 @@ impl<'a> Sim<'a> {
             dispatcher: Dispatcher::new(spec.policy, nets.len(), spec.instances.len()),
             mix: RequestMix::new(&spec.tenants),
             rng: Pcg32::new(spec.seed, 1),
+            fault_rng: Pcg32::new(spec.seed, REQ_FAULT_STREAM),
             net_ids,
             spec,
             profiles,
@@ -412,10 +602,22 @@ impl<'a> Sim<'a> {
             instances,
             events: EventQueue::new(),
             records: Vec::new(),
+            req_state: Vec::new(),
             offered: 0,
             admitted: 0,
             rejected: 0,
             completed: 0,
+            timed_out: 0,
+            shed: 0,
+            retries: 0,
+            hedges: 0,
+            hedge_wins: 0,
+            rehomed: 0,
+            faulted: 0,
+            stale_completions: 0,
+            crashes: 0,
+            recoveries: 0,
+            recovery_cycles: 0,
         }
     }
 
@@ -424,12 +626,190 @@ impl<'a> Sim<'a> {
     }
 
     /// Schedule an arrival `mean_cycles` (exponentially distributed) after
-    /// `now`, unless it would fall past the horizon.
-    fn schedule_arrival(&mut self, now: u64, mean_cycles: f64, client: bool) {
+    /// `now`, unless it would fall past the horizon. `reissue_of` links a
+    /// closed-loop re-issue to the request that spawned it.
+    fn schedule_arrival(
+        &mut self,
+        now: u64,
+        mean_cycles: f64,
+        client: bool,
+        reissue_of: Option<usize>,
+    ) {
         let at = now + exp_interarrival(&mut self.rng, mean_cycles);
         if at <= self.horizon() {
             let tenant = self.mix.sample(&mut self.rng);
-            self.events.push(at, Event::Arrival { tenant, client });
+            self.events.push(
+                at,
+                ServeEvent::Arrival {
+                    tenant,
+                    client,
+                    reissue_of,
+                },
+            );
+        }
+    }
+
+    /// Closed-loop chain: a client whose request reached a terminal
+    /// outcome re-issues after a think gap (uniform across completion,
+    /// rejection, timeout, and shed — the satellite-2 fix: open-loop
+    /// failures are counted, closed-loop failures re-issue, and both land
+    /// in exactly one ledger bucket).
+    fn reissue_if_client(&mut self, now: u64, req: usize) {
+        if self.req_state[req].client {
+            if let TrafficModel::ClosedLoop { think_cycles, .. } = self.spec.traffic {
+                self.schedule_arrival(now, think_cycles.max(1) as f64, true, Some(req));
+            }
+        }
+    }
+
+    /// Remove attempt `token` from `req`'s live set; false if already
+    /// cancelled (stale).
+    fn remove_live_token(&mut self, req: usize, token: u32) -> bool {
+        let live = &mut self.req_state[req].live;
+        match live.iter().position(|a| a.token == token) {
+            Some(pos) => {
+                live.remove(pos);
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Remove `req`'s live attempt on `instance` (crash queue drain);
+    /// false if it had none there.
+    fn remove_live_on(&mut self, req: usize, instance: usize) -> bool {
+        let live = &mut self.req_state[req].live;
+        match live.iter().position(|a| a.instance == instance) {
+            Some(pos) => {
+                live.remove(pos);
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// SLO-aware admission control: shed `tenant` when queue occupancy
+    /// over the surviving fleet crosses its priority threshold (a dead
+    /// fleet sheds everyone).
+    fn should_shed(&self, tenant: usize) -> bool {
+        let mut alive = 0usize;
+        let mut queued = 0usize;
+        for inst in &self.instances {
+            if inst.down_since.is_none() {
+                alive += 1;
+                queued += inst.batcher.queued();
+            }
+        }
+        if alive == 0 {
+            return true;
+        }
+        let load = queued as f64 / (alive * self.spec.queue_cap.max(1)) as f64;
+        load >= RobustnessPolicy::shed_threshold(self.spec.tenants[tenant].priority)
+    }
+
+    /// Try to place one attempt of `req` on the fleet. `free` attempts
+    /// (crash re-homes, hedges) don't consume retry budget; `hedge`
+    /// attempts must land on an instance without a live attempt of the
+    /// same request. Returns false if no instance admits it.
+    fn dispatch_attempt(&mut self, req: usize, now: u64, free: bool, hedge: bool) -> bool {
+        let tenant = self.records[req].tenant;
+        let queue_cap = self.spec.queue_cap;
+        self.loads.clear();
+        for (idx, inst) in self.instances.iter().enumerate() {
+            let mut has_space = inst.batcher.queued() < queue_cap;
+            if hedge && self.req_state[req].live.iter().any(|a| a.instance == idx) {
+                has_space = false; // a hedge must race on a *different* chip
+            }
+            self.loads.push(InstanceLoad {
+                queued: inst.batcher.queued(),
+                backlog_cycles: inst.backlog_cycles + inst.busy_until.saturating_sub(now),
+                has_space,
+                health: inst.health(now),
+            });
+        }
+        let choice = self.dispatcher.choose(self.net_ids[tenant], &self.loads);
+        if !free {
+            self.records[req].attempts += 1;
+        }
+        let Some(i) = choice else {
+            return false;
+        };
+        if self.records[req].instance.is_none() {
+            self.admitted += 1;
+        }
+        self.records[req].instance = Some(i);
+        let token = self.req_state[req].next_token;
+        self.req_state[req].next_token += 1;
+        self.req_state[req].live.push(Attempt {
+            token,
+            instance: i,
+            hedge,
+        });
+        // Robustness events go in *before* the batch can launch, so a
+        // timeout landing exactly on the completion cycle wins the
+        // same-cycle tie (see `events` module docs).
+        let rb = self.spec.robust;
+        if rb.timeout_cycles > 0 {
+            self.events
+                .push(now + rb.timeout_cycles, ServeEvent::Timeout { req, token });
+        }
+        if rb.hedge_cycles > 0 && !hedge && !self.records[req].hedged {
+            self.events
+                .push(now + rb.hedge_cycles, ServeEvent::Hedge { req, token });
+        }
+        let horizon = self.horizon();
+        let marginal = self.profiles[tenant][i].marginal_cycles;
+        let inst = &mut self.instances[i];
+        inst.note_queue(now, horizon);
+        inst.batcher.push(tenant, req, now);
+        inst.backlog_cycles += marginal;
+        inst.stats.max_queue = inst.stats.max_queue.max(inst.batcher.queued());
+        self.try_launch(i, now);
+        true
+    }
+
+    /// An attempt failed with no other attempt still racing: retry with
+    /// backoff if budget remains, else settle the request's terminal
+    /// outcome (and re-issue the closed-loop chain).
+    fn fail_attempt(&mut self, req: usize, now: u64, cause: FailCause) {
+        if !self.req_state[req].live.is_empty() {
+            return; // a hedge twin is still in flight
+        }
+        let rb = self.spec.robust;
+        let attempts = self.records[req].attempts;
+        if rb.max_retries > 0 && attempts <= rb.max_retries {
+            self.retries += 1;
+            let at = now + rb.backoff_for(attempts);
+            // Past-horizon retries never execute: the request simply
+            // stays in flight at the end, which the ledger counts.
+            self.events.push(at, ServeEvent::Retry { req });
+            return;
+        }
+        let outcome = match cause {
+            FailCause::TimedOut => {
+                self.timed_out += 1;
+                Outcome::TimedOut
+            }
+            FailCause::Capacity | FailCause::ExecFault => {
+                self.rejected += 1;
+                Outcome::Rejected
+            }
+        };
+        self.records[req].outcome = outcome;
+        self.reissue_if_client(now, req);
+    }
+
+    /// Cancel a losing attempt: de-queue it if it hasn't launched (its
+    /// completion would otherwise be stale anyway — this just frees the
+    /// slot earlier).
+    fn cancel_queued_attempt(&mut self, req: usize, att: Attempt, now: u64) {
+        let tenant = self.records[req].tenant;
+        let horizon = self.horizon();
+        let marginal = self.profiles[tenant][att.instance].marginal_cycles;
+        let inst = &mut self.instances[att.instance];
+        inst.note_queue(now, horizon);
+        if inst.batcher.remove(tenant, req) {
+            inst.backlog_cycles = inst.backlog_cycles.saturating_sub(marginal);
         }
     }
 
@@ -439,7 +819,7 @@ impl<'a> Sim<'a> {
     fn try_launch(&mut self, i: usize, now: u64) {
         let horizon = self.horizon();
         let inst = &mut self.instances[i];
-        if inst.busy_until > now {
+        if inst.down_since.is_some() || inst.busy_until > now {
             return;
         }
         inst.note_queue(now, horizon);
@@ -456,104 +836,292 @@ impl<'a> Sim<'a> {
             }
             inst.resident_net = Some(net);
             let n = reqs.len() as u64;
-            let duration = switch + prof.single_cycles + (n - 1) * prof.marginal_cycles;
+            let mut duration = switch + prof.single_cycles + (n - 1) * prof.marginal_cycles;
+            if inst.slowdown > 1.0 {
+                // Straggler episode: everything on the chip runs slow.
+                duration = ((duration as f64) * inst.slowdown).ceil() as u64;
+            }
             let end = now + duration;
             inst.busy_until = end;
             inst.stats.batches += 1;
             inst.stats.busy_cycles += end.min(horizon) - now.min(horizon);
             inst.backlog_cycles = inst.backlog_cycles.saturating_sub(n * prof.marginal_cycles);
+            let epoch = inst.epoch;
+            inst.running.clear();
             for &r in &reqs {
                 self.records[r].start = Some(now);
                 self.records[r].batch_size = reqs.len();
+                // Every queued request has a live attempt on this
+                // instance (timeouts de-queue when they cancel).
+                let token = self.req_state[r]
+                    .live
+                    .iter()
+                    .find(|a| a.instance == i)
+                    .map(|a| a.token)
+                    .unwrap_or(u32::MAX);
+                inst.running.push((r, token));
             }
-            self.events.push(end, Event::Complete { instance: i, reqs });
+            self.events.push(end, ServeEvent::Complete { instance: i, epoch });
         } else if inst.batcher.queued() > 0 {
             // Partial batches only: wake up when the oldest one expires.
             if let Some(deadline) = inst.batcher.next_deadline() {
                 inst.timer_token += 1;
                 let token = inst.timer_token;
                 let at = deadline.max(now + 1);
-                self.events.push(at, Event::BatchTimer { instance: i, token });
+                self.events.push(at, ServeEvent::BatchTimer { instance: i, token });
             }
         }
     }
 
-    fn on_arrival(&mut self, now: u64, tenant: usize, client: bool) {
+    fn on_arrival(&mut self, now: u64, tenant: usize, client: bool, reissue_of: Option<usize>) {
         self.offered += 1;
-        let queue_cap = self.spec.queue_cap;
-        self.loads.clear();
-        self.loads.extend(self.instances.iter().map(|inst| InstanceLoad {
-            queued: inst.batcher.queued(),
-            backlog_cycles: inst.backlog_cycles + inst.busy_until.saturating_sub(now),
-            has_space: inst.batcher.queued() < queue_cap,
-        }));
-        let choice = self.dispatcher.choose(self.net_ids[tenant], &self.loads);
         let req_id = self.records.len();
         self.records.push(RequestRecord {
             tenant,
-            instance: choice,
+            instance: None,
             arrival: now,
             start: None,
             completion: None,
             batch_size: 0,
+            outcome: Outcome::InFlight,
+            attempts: 0,
+            hedged: false,
+            hedge_won: false,
+            reissue_of,
         });
-        match choice {
-            Some(i) => {
-                self.admitted += 1;
-                let horizon = self.horizon();
-                let marginal = self.profiles[tenant][i].marginal_cycles;
-                let inst = &mut self.instances[i];
-                inst.note_queue(now, horizon);
-                inst.batcher.push(tenant, req_id, now);
-                inst.backlog_cycles += marginal;
-                inst.stats.max_queue = inst.stats.max_queue.max(inst.batcher.queued());
-                self.try_launch(i, now);
-            }
-            None => {
-                self.rejected += 1;
-                // A rejected closed-loop client retries after a think gap.
-                if client {
-                    if let TrafficModel::ClosedLoop { think_cycles, .. } = self.spec.traffic {
-                        self.schedule_arrival(now, think_cycles.max(1) as f64, true);
-                    }
-                }
-            }
+        self.req_state.push(ReqState {
+            live: Vec::new(),
+            next_token: 0,
+            client,
+        });
+        if self.spec.robust.shed && self.should_shed(tenant) {
+            self.records[req_id].outcome = Outcome::Shed;
+            self.shed += 1;
+            self.reissue_if_client(now, req_id);
+        } else if !self.dispatch_attempt(req_id, now, false, false) {
+            self.fail_attempt(req_id, now, FailCause::Capacity);
         }
         // Open loop: the Poisson process marches on regardless of state.
         if let TrafficModel::OpenLoop { rps } = self.spec.traffic {
             let mean = self.spec.clock_hz() / rps.max(1e-9);
-            self.schedule_arrival(now, mean, false);
+            self.schedule_arrival(now, mean, false, None);
         }
     }
 
-    fn on_complete(&mut self, now: u64, instance: usize, reqs: Vec<usize>) {
-        let n = reqs.len() as u64;
-        self.completed += n;
-        self.instances[instance].stats.completed += n;
-        for r in reqs {
-            self.records[r].completion = Some(now);
+    fn on_retry(&mut self, now: u64, req: usize) {
+        if self.records[req].outcome != Outcome::InFlight {
+            return; // settled while the backoff ran
         }
-        // Closed-loop clients re-issue after their think time. Client
-        // identity is not tracked through batches — the population size
-        // is what matters — so each completion spawns one successor.
-        if let TrafficModel::ClosedLoop { think_cycles, .. } = self.spec.traffic {
-            for _ in 0..n {
-                self.schedule_arrival(now, think_cycles.max(1) as f64, true);
+        if !self.req_state[req].live.is_empty() {
+            return; // a crash re-home beat the backoff to it
+        }
+        if !self.dispatch_attempt(req, now, false, false) {
+            self.fail_attempt(req, now, FailCause::Capacity);
+        }
+    }
+
+    fn on_timeout(&mut self, now: u64, req: usize, token: u32) {
+        // A stale token means the attempt already completed, was
+        // cancelled, or was re-homed (re-homes mint fresh tokens).
+        let live = &self.req_state[req].live;
+        let Some(pos) = live.iter().position(|a| a.token == token) else {
+            return;
+        };
+        let i = live[pos].instance;
+        self.req_state[req].live.remove(pos);
+        let tenant = self.records[req].tenant;
+        let horizon = self.horizon();
+        let marginal = self.profiles[tenant][i].marginal_cycles;
+        let inst = &mut self.instances[i];
+        inst.note_queue(now, horizon);
+        // De-queue if it never launched; launched work runs to completion
+        // and is discarded as stale. Either way the attempt timed out on
+        // this chip and charges its breaker.
+        if inst.batcher.remove(tenant, req) {
+            inst.backlog_cycles = inst.backlog_cycles.saturating_sub(marginal);
+        }
+        inst.timeout_streak += 1;
+        if inst.timeout_streak >= BREAKER_STREAK {
+            inst.breaker_until = now + BREAKER_COOLDOWN_TIMEOUTS * self.spec.robust.timeout_cycles;
+        }
+        if self.req_state[req].live.is_empty() {
+            self.fail_attempt(req, now, FailCause::TimedOut);
+        }
+    }
+
+    fn on_hedge(&mut self, now: u64, req: usize, token: u32) {
+        if self.records[req].hedged {
+            return; // one hedge per request
+        }
+        // Only hedge an attempt that is still live (not completed, timed
+        // out, or re-homed — a re-home already changed instances).
+        if !self.req_state[req].live.iter().any(|a| a.token == token) {
+            return;
+        }
+        if self.dispatch_attempt(req, now, true, true) {
+            self.hedges += 1;
+            self.records[req].hedged = true;
+        }
+    }
+
+    fn on_crash(&mut self, now: u64, i: usize) {
+        self.crashes += 1;
+        let horizon = self.horizon();
+        let (killed, drained) = {
+            let inst = &mut self.instances[i];
+            inst.note_queue(now, horizon);
+            inst.stats.crashes += 1;
+            inst.epoch = inst.epoch.wrapping_add(1);
+            inst.down_since = Some(now);
+            inst.resident_net = None;
+            inst.timer_token += 1; // orphan any pending batch timer
+            inst.timeout_streak = 0;
+            inst.breaker_until = 0;
+            // Un-count the busy cycles the chip will never serve.
+            let unserved = inst.busy_until.min(horizon).saturating_sub(now.min(horizon));
+            inst.stats.busy_cycles = inst.stats.busy_cycles.saturating_sub(unserved);
+            inst.busy_until = now;
+            inst.backlog_cycles = 0;
+            (std::mem::take(&mut inst.running), inst.batcher.drain_all())
+        };
+        // Re-home, killed batch first (dispatched earliest), then the
+        // queue in tenant-FIFO order — a pinned, deterministic order.
+        for (req, token) in killed {
+            if self.remove_live_token(req, token) {
+                self.rehome(req, now);
             }
         }
-        self.try_launch(instance, now);
+        for (_tenant, req) in drained {
+            if self.remove_live_on(req, i) {
+                self.rehome(req, now);
+            }
+        }
+    }
+
+    /// Re-dispatch a crash victim onto the surviving fleet — free (no
+    /// retry budget), unless a hedge twin is still racing elsewhere.
+    fn rehome(&mut self, req: usize, now: u64) {
+        if self.records[req].outcome != Outcome::InFlight {
+            return;
+        }
+        if !self.req_state[req].live.is_empty() {
+            return;
+        }
+        if self.dispatch_attempt(req, now, true, false) {
+            self.rehomed += 1;
+        } else {
+            self.fail_attempt(req, now, FailCause::Capacity);
+        }
+    }
+
+    fn on_recover(&mut self, now: u64, i: usize) {
+        self.recoveries += 1;
+        let horizon = self.horizon();
+        let inst = &mut self.instances[i];
+        if let Some(since) = inst.down_since.take() {
+            let d = now.min(horizon).saturating_sub(since.min(horizon));
+            inst.stats.down_cycles += d;
+            self.recovery_cycles += now - since;
+        }
+        // Back cold: empty queue, no resident net; new arrivals route in.
+        inst.last_queue_change = now;
+    }
+
+    fn on_complete(&mut self, now: u64, i: usize, epoch: u32) {
+        if self.instances[i].epoch != epoch {
+            return; // batch was killed by a crash; work already re-homed
+        }
+        let running = std::mem::take(&mut self.instances[i].running);
+        self.instances[i].timeout_streak = 0;
+        let mut done = 0u64;
+        let mut respawn: Vec<usize> = Vec::new();
+        let fault_prob = self.spec.faults.req_fault_prob;
+        for (req, token) in running {
+            let pos = self.req_state[req].live.iter().position(|a| a.token == token);
+            let Some(pos) = pos else {
+                // Cancelled while running (timed out / lost a hedge):
+                // the work finished but the result is discarded.
+                self.stale_completions += 1;
+                continue;
+            };
+            // The fault stream is only consulted when faults can fire,
+            // so the zero-fault path draws nothing from it.
+            if fault_prob > 0.0 && self.fault_rng.bernoulli(fault_prob as f32) {
+                self.faulted += 1;
+                self.req_state[req].live.remove(pos);
+                if self.req_state[req].live.is_empty() {
+                    self.fail_attempt(req, now, FailCause::ExecFault);
+                }
+                continue;
+            }
+            // Winner: settle the request, cancel any losing twin.
+            let was_hedge = self.req_state[req].live[pos].hedge;
+            let mut losers = std::mem::take(&mut self.req_state[req].live);
+            losers.remove(pos);
+            for att in losers {
+                self.cancel_queued_attempt(req, att, now);
+            }
+            self.records[req].completion = Some(now);
+            self.records[req].outcome = Outcome::Completed;
+            self.records[req].instance = Some(i);
+            if was_hedge {
+                self.hedge_wins += 1;
+                self.records[req].hedge_won = true;
+            }
+            done += 1;
+            if self.req_state[req].client {
+                respawn.push(req);
+            }
+        }
+        self.completed += done;
+        self.instances[i].stats.completed += done;
+        // Closed-loop clients re-issue after their think time. Client
+        // identity is not tracked through batches — the population size
+        // is what matters — so each served completion spawns one
+        // successor (failures re-issue through `fail_attempt`).
+        if let TrafficModel::ClosedLoop { think_cycles, .. } = self.spec.traffic {
+            for req in respawn {
+                self.schedule_arrival(now, think_cycles.max(1) as f64, true, Some(req));
+            }
+        }
+        self.try_launch(i, now);
     }
 
     fn run(mut self) -> ServeOutcome {
+        // The fault plan goes in *first*: at any shared cycle its events
+        // carry the lowest seqs, so a crash beats the completions,
+        // timeouts, and arrivals of that cycle (the pessimistic order —
+        // see the `events` module docs). Empty when faults are off: the
+        // legacy event sequence is untouched.
+        let plan = generate_plan(
+            &self.spec.faults,
+            self.spec.instances.len(),
+            self.horizon(),
+            self.spec.clock_hz(),
+            self.spec.seed,
+        );
+        for e in plan {
+            self.events.push(
+                e.cycle,
+                ServeEvent::Fault {
+                    instance: e.instance,
+                    kind: e.kind,
+                },
+            );
+        }
+
         // Seed the arrival processes.
         match self.spec.traffic {
             TrafficModel::OpenLoop { rps } => {
                 let mean = self.spec.clock_hz() / rps.max(1e-9);
-                self.schedule_arrival(0, mean, false);
+                self.schedule_arrival(0, mean, false, None);
             }
-            TrafficModel::ClosedLoop { clients, think_cycles } => {
+            TrafficModel::ClosedLoop {
+                clients,
+                think_cycles,
+            } => {
                 for _ in 0..clients {
-                    self.schedule_arrival(0, think_cycles.max(1) as f64, true);
+                    self.schedule_arrival(0, think_cycles.max(1) as f64, true, None);
                 }
             }
         }
@@ -563,7 +1131,7 @@ impl<'a> Sim<'a> {
         // same-cycle events (e.g. zero-gap arrivals) enqueue with higher
         // seqs, so the next sweep runs them — exactly the order
         // one-at-a-time popping produced (`events::drain_matches_pop_order`).
-        let mut batch: Vec<Event> = Vec::new();
+        let mut batch: Vec<ServeEvent> = Vec::new();
         let mut events_processed = 0u64;
         while let Some(now) = self.events.peek_cycle() {
             if now > self.horizon() {
@@ -573,28 +1141,65 @@ impl<'a> Sim<'a> {
             for ev in batch.drain(..) {
                 events_processed += 1;
                 match ev {
-                    Event::Arrival { tenant, client } => self.on_arrival(now, tenant, client),
-                    Event::BatchTimer { instance, token } => {
+                    ServeEvent::Arrival {
+                        tenant,
+                        client,
+                        reissue_of,
+                    } => self.on_arrival(now, tenant, client, reissue_of),
+                    ServeEvent::Retry { req } => self.on_retry(now, req),
+                    ServeEvent::BatchTimer { instance, token } => {
                         if self.instances[instance].timer_token == token {
                             self.try_launch(instance, now);
                         }
                     }
-                    Event::Complete { instance, reqs } => self.on_complete(now, instance, reqs),
+                    ServeEvent::Complete { instance, epoch } => {
+                        self.on_complete(now, instance, epoch)
+                    }
+                    ServeEvent::Timeout { req, token } => self.on_timeout(now, req, token),
+                    ServeEvent::Hedge { req, token } => self.on_hedge(now, req, token),
+                    ServeEvent::Fault { instance, kind } => match kind {
+                        FaultKind::Crash => self.on_crash(now, instance),
+                        FaultKind::Recover => self.on_recover(now, instance),
+                        FaultKind::SlowStart(x) => self.instances[instance].slowdown = x,
+                        FaultKind::SlowEnd => self.instances[instance].slowdown = 1.0,
+                    },
                 }
             }
         }
 
-        // Close the queue-depth integrals at the horizon.
+        // Close the queue-depth and downtime integrals at the horizon.
         let horizon = self.horizon();
         for inst in self.instances.iter_mut() {
             inst.note_queue(horizon, horizon);
+            if let Some(since) = inst.down_since.take() {
+                inst.stats.down_cycles += horizon.saturating_sub(since.min(horizon));
+            }
         }
 
+        let in_flight = self
+            .records
+            .iter()
+            .filter(|r| r.outcome == Outcome::InFlight)
+            .count() as u64;
+        let down_cycles = self.instances.iter().map(|i| i.stats.down_cycles).sum();
         ServeOutcome {
             offered: self.offered,
             admitted: self.admitted,
             rejected: self.rejected,
             completed: self.completed,
+            timed_out: self.timed_out,
+            shed: self.shed,
+            in_flight,
+            retries: self.retries,
+            hedges: self.hedges,
+            hedge_wins: self.hedge_wins,
+            rehomed: self.rehomed,
+            faulted: self.faulted,
+            stale_completions: self.stale_completions,
+            crashes: self.crashes,
+            recoveries: self.recoveries,
+            recovery_cycles: self.recovery_cycles,
+            down_cycles,
             events_processed,
             records: self.records,
             instances: self.instances.into_iter().map(|i| i.stats).collect(),
@@ -642,6 +1247,8 @@ mod tests {
             duration_cycles: 50_000_000,
             clock_mhz: 500.0,
             seed: 42,
+            faults: FaultSpec::none(),
+            robust: RobustnessPolicy::none(),
         };
         let prof = ServiceProfile {
             single_cycles: 1_000_000,
@@ -659,16 +1266,28 @@ mod tests {
         }
     }
 
+    /// The five-bucket ledger, checked both by counter and by record.
+    fn assert_conserved(out: &ServeOutcome, tag: &str) {
+        assert_eq!(
+            out.offered,
+            out.completed + out.rejected + out.timed_out + out.shed + out.in_flight,
+            "{tag}: ledger"
+        );
+        assert_eq!(out.offered as usize, out.records.len(), "{tag}: records");
+        let count = |o: Outcome| out.records.iter().filter(|r| r.outcome == o).count() as u64;
+        assert_eq!(count(Outcome::Completed), out.completed, "{tag}: completed");
+        assert_eq!(count(Outcome::Rejected), out.rejected, "{tag}: rejected");
+        assert_eq!(count(Outcome::TimedOut), out.timed_out, "{tag}: timed_out");
+        assert_eq!(count(Outcome::Shed), out.shed, "{tag}: shed");
+        assert_eq!(count(Outcome::InFlight), out.in_flight, "{tag}: in_flight");
+    }
+
     #[test]
     fn conservation_holds_on_toy_fleet() {
         for rps in [50.0, 500.0, 5_000.0, 50_000.0] {
             let (spec, profiles) = toy_spec(DispatchPolicy::LeastLoaded, window(4, 100_000), rps);
             let out = simulate(&spec, &profiles);
-            assert_eq!(
-                out.offered,
-                out.completed + out.rejected + out.in_flight(),
-                "rps {rps}"
-            );
+            assert_conserved(&out, &format!("rps {rps}"));
             // Every offered request was one arrival event; completions
             // and batch timers add more.
             assert!(out.events_processed >= out.offered, "rps {rps}");
@@ -677,6 +1296,36 @@ mod tests {
             let rec_rejected = out.records.iter().filter(|r| r.instance.is_none()).count();
             assert_eq!(rec_rejected as u64, out.rejected);
         }
+    }
+
+    #[test]
+    fn zero_fault_path_has_legacy_counters() {
+        let (spec, profiles) = toy_spec(DispatchPolicy::LeastLoaded, window(4, 100_000), 3_000.0);
+        assert!(!spec.resilience_active());
+        let out = simulate(&spec, &profiles);
+        // No resilience machinery fires, and the legacy in-flight
+        // derivation still holds exactly.
+        assert_eq!(out.in_flight, out.admitted - out.completed);
+        for (v, name) in [
+            (out.timed_out, "timed_out"),
+            (out.shed, "shed"),
+            (out.retries, "retries"),
+            (out.hedges, "hedges"),
+            (out.hedge_wins, "hedge_wins"),
+            (out.rehomed, "rehomed"),
+            (out.faulted, "faulted"),
+            (out.stale_completions, "stale_completions"),
+            (out.crashes, "crashes"),
+            (out.recoveries, "recoveries"),
+            (out.down_cycles, "down_cycles"),
+        ] {
+            assert_eq!(v, 0, "zero-fault run has nonzero {name}");
+        }
+        assert!(out.records.iter().all(|r| r.attempts <= 1 && !r.hedged));
+        assert!(out
+            .records
+            .iter()
+            .all(|r| r.reissue_of.is_none()), "open loop never re-issues");
     }
 
     #[test]
@@ -709,6 +1358,7 @@ mod tests {
         for i in &out.instances {
             assert!(i.utilization(spec.duration_cycles) <= 1.0 + 1e-12);
             assert!(i.mean_queue_depth(spec.duration_cycles) <= spec.queue_cap as f64);
+            assert_eq!(i.availability(spec.duration_cycles), 1.0);
         }
     }
 
@@ -739,7 +1389,15 @@ mod tests {
         // With 3 clients at >= 1M cycles per turn over 50M cycles, the
         // offered load is bounded by the client population.
         assert!(out.offered <= 3 * 50 + 3, "offered {}", out.offered);
-        assert_eq!(out.offered, out.completed + out.rejected + out.in_flight());
+        assert_conserved(&out, "closed loop");
+        // Every non-seed arrival is a re-issue linked to its spawner.
+        let fresh = out.records.iter().filter(|r| r.reissue_of.is_none()).count();
+        assert!(fresh <= 3, "only the 3 seeded clients arrive unlinked");
+        assert!(out
+            .records
+            .iter()
+            .filter_map(|r| r.reissue_of)
+            .all(|p| p < out.records.len()));
     }
 
     #[test]
@@ -752,6 +1410,139 @@ mod tests {
         let rr = mk(DispatchPolicy::RoundRobin);
         let aff = mk(DispatchPolicy::NetworkAffinity);
         assert!(aff < rr, "affinity switches {aff} !< round-robin {rr}");
+    }
+
+    #[test]
+    fn crashes_rehome_work_and_close_the_ledger() {
+        let (mut spec, profiles) =
+            toy_spec(DispatchPolicy::LeastLoaded, window(4, 100_000), 1_200.0);
+        spec.faults = FaultSpec::parse("crash:100,mttr:2").unwrap();
+        let out = simulate(&spec, &profiles);
+        assert_conserved(&out, "crashy");
+        assert!(out.crashes > 0, "crash rate high enough to fire");
+        assert_eq!(
+            out.crashes,
+            out.instances.iter().map(|i| i.crashes).sum::<u64>()
+        );
+        assert!(out.recoveries <= out.crashes);
+        assert!(out.down_cycles > 0);
+        // Some victims found a new home; completions still happened.
+        assert!(out.rehomed > 0, "no work re-homed");
+        assert!(out.completed > 0);
+        for i in &out.instances {
+            assert!(i.availability(spec.duration_cycles) < 1.0);
+            assert!(i.availability(spec.duration_cycles) >= 0.0);
+        }
+        // Replays are bit-identical.
+        let again = simulate(&spec, &profiles);
+        assert_eq!(out.crashes, again.crashes);
+        assert_eq!(out.completed, again.completed);
+        assert_eq!(out.rehomed, again.rehomed);
+    }
+
+    #[test]
+    fn stragglers_stretch_latency() {
+        let (clean_spec, profiles) =
+            toy_spec(DispatchPolicy::LeastLoaded, window(4, 100_000), 1_000.0);
+        let mut slow_spec = clean_spec.clone();
+        slow_spec.faults = FaultSpec::parse("straggler:200,slow:8,slowms:5").unwrap();
+        let mean_lat = |out: &ServeOutcome| {
+            let lats: Vec<u64> = out.records.iter().filter_map(|r| r.latency()).collect();
+            lats.iter().sum::<u64>() as f64 / lats.len().max(1) as f64
+        };
+        let clean = simulate(&clean_spec, &profiles);
+        let slow = simulate(&slow_spec, &profiles);
+        assert_conserved(&slow, "straggler");
+        assert_eq!(slow.crashes, 0);
+        assert!(slow.events_processed > clean.events_processed, "no episodes fired");
+        assert!(
+            mean_lat(&slow) > mean_lat(&clean),
+            "8x straggler episodes did not stretch mean latency"
+        );
+    }
+
+    #[test]
+    fn timeouts_cancel_and_retries_spend_budget() {
+        // Timeout shorter than a single image: nothing can ever complete.
+        let (mut spec, profiles) = toy_spec(DispatchPolicy::LeastLoaded, window(4, 100_000), 500.0);
+        spec.robust.timeout_cycles = 500_000;
+        let out = simulate(&spec, &profiles);
+        assert_conserved(&out, "timeout");
+        assert_eq!(out.completed, 0, "nothing beats a sub-service timeout");
+        assert!(out.timed_out > 0);
+        assert!(out.stale_completions > 0, "launched work finishes stale");
+        assert_eq!(out.retries, 0);
+
+        // With retries the budget is spent, but the outcome is the same.
+        let mut retry_spec = spec.clone();
+        retry_spec.robust.max_retries = 2;
+        retry_spec.robust.backoff_cycles = 10_000;
+        let retried = simulate(&retry_spec, &profiles);
+        assert_conserved(&retried, "timeout+retry");
+        assert!(retried.retries > 0);
+        assert!(retried.records.iter().all(|r| r.attempts <= 3));
+        assert!(
+            retried
+                .records
+                .iter()
+                .any(|r| r.outcome == Outcome::TimedOut && r.attempts == 3),
+            "some request exhausted its full retry budget"
+        );
+    }
+
+    #[test]
+    fn hedges_race_but_never_double_count() {
+        let (mut spec, profiles) = toy_spec(DispatchPolicy::LeastLoaded, window(4, 100_000), 800.0);
+        spec.robust.hedge_cycles = 300_000;
+        let out = simulate(&spec, &profiles);
+        assert_conserved(&out, "hedged");
+        assert!(out.hedges > 0, "hedge delay short enough to fire");
+        assert!(out.hedge_wins <= out.hedges);
+        let hedged_records = out.records.iter().filter(|r| r.hedged).count() as u64;
+        assert_eq!(hedged_records, out.hedges, "one hedge per request");
+        assert_eq!(
+            out.records.iter().filter(|r| r.hedge_won).count() as u64,
+            out.hedge_wins
+        );
+        // A request completes exactly once even when both twins finish.
+        assert_eq!(
+            out.records.iter().filter(|r| r.completion.is_some()).count() as u64,
+            out.completed
+        );
+    }
+
+    #[test]
+    fn exec_faults_fail_requests_without_retries() {
+        let (mut spec, profiles) = toy_spec(DispatchPolicy::LeastLoaded, window(4, 100_000), 500.0);
+        spec.faults.req_fault_prob = 0.5;
+        let out = simulate(&spec, &profiles);
+        assert_conserved(&out, "reqfault");
+        assert!(out.faulted > 0, "p=0.5 faults must fire");
+        assert!(out.rejected >= out.faulted, "faulted requests fail-fast into rejected");
+        assert!(out.completed > 0, "p=0.5 lets half through");
+    }
+
+    #[test]
+    fn shedding_protects_high_priority_tenants() {
+        let (mut spec, profiles) =
+            toy_spec(DispatchPolicy::LeastLoaded, window(4, 100_000), 5_000.0);
+        spec.tenants[1] = Tenant::new("alexnet", 32, 0.5).with_priority(2);
+        spec.robust.shed = true;
+        let out = simulate(&spec, &profiles);
+        assert_conserved(&out, "shedding");
+        assert!(out.shed > 0, "overload must shed");
+        let shed_of = |t: usize| {
+            out.records
+                .iter()
+                .filter(|r| r.tenant == t && r.outcome == Outcome::Shed)
+                .count()
+        };
+        assert!(
+            shed_of(1) > shed_of(0),
+            "low-priority tenant must shed first ({} vs {})",
+            shed_of(1),
+            shed_of(0)
+        );
     }
 
     #[test]

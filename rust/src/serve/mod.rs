@@ -17,28 +17,33 @@
 //! * [`events`] — the deterministic event queue (cycle, FIFO ties).
 //! * [`traffic`] — tenants, request mixes, Poisson/closed-loop arrivals.
 //! * [`dispatch`] — round-robin / least-loaded / network-affinity
-//!   admission.
+//!   admission (failure-aware: never routes to a dead instance).
 //! * [`batcher`] — size-or-deadline dynamic batching windows.
+//! * [`faults`] — seeded fault plans (crash/recover, stragglers,
+//!   execution faults) and client-side robustness knobs (timeouts,
+//!   retries, hedging, load shedding).
 //! * [`fleet`] — service profiles from real engine runs + the simulator.
 //! * [`report`] — [`report::ServeReport`]: percentiles, utilization,
-//!   JSON/text.
+//!   JSON/text (plus a resilience section when faults/robustness are on).
 //!
 //! Entry points: [`fleet::build_profiles`] → [`fleet::simulate`] →
 //! [`report::ServeReport::new`]; the `vscnn serve` CLI subcommand and the
-//! `exp serve` capacity-curve experiment wrap them.
+//! `exp serve` / `exp serve-faults` experiments wrap them.
 
 pub mod batcher;
 pub mod dispatch;
 pub mod events;
+pub mod faults;
 pub mod fleet;
 pub mod report;
 pub mod traffic;
 
 pub use batcher::BatchPolicy;
 pub use dispatch::DispatchPolicy;
+pub use faults::{FaultSpec, Health, RobustnessPolicy};
 pub use fleet::{
-    build_profiles, default_fleet, profile_from_report, simulate, InstanceSpec, ServeOutcome,
-    ServeSpec, ServiceProfile,
+    build_profiles, default_fleet, profile_from_report, simulate, InstanceSpec, Outcome,
+    ServeOutcome, ServeSpec, ServiceProfile,
 };
 pub use report::ServeReport;
 pub use traffic::{default_mix, Tenant, TrafficModel};

@@ -2,8 +2,16 @@
 //! request accounting, per-request latency percentiles, per-tenant and
 //! per-instance breakdowns — as deterministic JSON (bit-identical for a
 //! fixed `(spec, seed)` regardless of host threads) and a text block.
+//!
+//! When the run exercises the resilience layer
+//! ([`ServeSpec::resilience_active`]) the report grows a `resilience`
+//! section (retries, hedge wins, MTTR, availability, the five-bucket
+//! ledger) plus per-tenant goodput/timed-out/shed and per-instance
+//! crash/availability keys. A zero-fault run emits **no** new keys and
+//! no new text lines: its output is bit-identical to the pre-fault
+//! simulator (pinned by `tests/serve.rs`).
 
-use super::fleet::{ServeOutcome, ServeSpec};
+use super::fleet::{Outcome, ServeOutcome, ServeSpec};
 use crate::util::json::Json;
 use crate::util::stats::{mean, percentile};
 
@@ -48,13 +56,18 @@ impl LatencySummary {
     }
 }
 
-/// Per-tenant serving summary.
+/// Per-tenant serving summary. `rejected` counts terminal
+/// [`Outcome::Rejected`] requests uniformly for open- and closed-loop
+/// traffic (the satellite-2 fix — closed-loop re-issues are *new*
+/// offered requests, so nothing vanishes from the ledger).
 #[derive(Debug, Clone)]
 pub struct TenantSummary {
     pub name: String,
     pub offered: u64,
     pub completed: u64,
     pub rejected: u64,
+    pub timed_out: u64,
+    pub shed: u64,
     pub latency: LatencySummary,
 }
 
@@ -69,6 +82,57 @@ pub struct InstanceSummary {
     pub completed: u64,
     pub mean_queue_depth: f64,
     pub max_queue: usize,
+    pub crashes: u64,
+    /// Fraction of the horizon the instance was up.
+    pub availability: f64,
+}
+
+/// Fleet-level resilience summary — present only when the run injected
+/// faults or enabled any robustness mechanism.
+#[derive(Debug, Clone)]
+pub struct ResilienceSummary {
+    /// Injected fault mix label ([`super::faults::FaultSpec::label`]).
+    pub faults: String,
+    pub timeout_cycles: u64,
+    pub max_retries: u32,
+    pub backoff_cycles: u64,
+    pub hedge_cycles: u64,
+    pub shed_enabled: bool,
+    pub retries: u64,
+    pub hedges: u64,
+    pub hedge_wins: u64,
+    pub rehomed: u64,
+    pub faulted: u64,
+    pub stale_completions: u64,
+    pub crashes: u64,
+    pub recoveries: u64,
+    /// Mean time to recover over completed recoveries, in ms.
+    pub mttr_ms: f64,
+    /// Up-time fraction over the whole fleet and horizon.
+    pub availability: f64,
+}
+
+impl ResilienceSummary {
+    fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("faults", self.faults.as_str())
+            .set("timeout_cycles", self.timeout_cycles)
+            .set("max_retries", self.max_retries as u64)
+            .set("backoff_cycles", self.backoff_cycles)
+            .set("hedge_cycles", self.hedge_cycles)
+            .set("shed_enabled", self.shed_enabled)
+            .set("retries", self.retries)
+            .set("hedges", self.hedges)
+            .set("hedge_wins", self.hedge_wins)
+            .set("rehomed", self.rehomed)
+            .set("faulted", self.faulted)
+            .set("stale_completions", self.stale_completions)
+            .set("crashes", self.crashes)
+            .set("recoveries", self.recoveries)
+            .set("mttr_ms", self.mttr_ms)
+            .set("availability", self.availability);
+        o
+    }
 }
 
 /// The full rendered report of one serving run.
@@ -86,10 +150,16 @@ pub struct ServeReport {
     pub admitted: u64,
     pub rejected: u64,
     pub completed: u64,
+    pub timed_out: u64,
+    pub shed: u64,
     pub in_flight: u64,
     pub latency: LatencySummary,
     pub tenants: Vec<TenantSummary>,
     pub instances: Vec<InstanceSummary>,
+    /// `Some` only when the run exercised the resilience layer; gates
+    /// every new JSON key and text line so zero-fault output is
+    /// bit-identical to the pre-fault report.
+    pub resilience: Option<ResilienceSummary>,
 }
 
 impl ServeReport {
@@ -114,15 +184,20 @@ impl ServeReport {
                     .filter_map(|r| r.latency())
                     .map(|l| l as f64)
                     .collect();
+                let count = |o: Outcome| {
+                    outcome
+                        .records
+                        .iter()
+                        .filter(|r| r.tenant == ti && r.outcome == o)
+                        .count() as u64
+                };
                 TenantSummary {
                     name: t.name.clone(),
                     offered: outcome.records.iter().filter(|r| r.tenant == ti).count() as u64,
                     completed: lat.len() as u64,
-                    rejected: outcome
-                        .records
-                        .iter()
-                        .filter(|r| r.tenant == ti && r.instance.is_none())
-                        .count() as u64,
+                    rejected: count(Outcome::Rejected),
+                    timed_out: count(Outcome::TimedOut),
+                    shed: count(Outcome::Shed),
                     latency: LatencySummary::from_cycles(&lat),
                 }
             })
@@ -140,8 +215,33 @@ impl ServeReport {
                 completed: i.completed,
                 mean_queue_depth: i.mean_queue_depth(spec.duration_cycles),
                 max_queue: i.max_queue,
+                crashes: i.crashes,
+                availability: i.availability(spec.duration_cycles),
             })
             .collect();
+
+        let resilience = spec.resilience_active().then(|| {
+            let fleet_cycles = spec.duration_cycles.max(1) * spec.instances.len().max(1) as u64;
+            ResilienceSummary {
+                faults: spec.faults.label(),
+                timeout_cycles: spec.robust.timeout_cycles,
+                max_retries: spec.robust.max_retries,
+                backoff_cycles: spec.robust.backoff_cycles,
+                hedge_cycles: spec.robust.hedge_cycles,
+                shed_enabled: spec.robust.shed,
+                retries: outcome.retries,
+                hedges: outcome.hedges,
+                hedge_wins: outcome.hedge_wins,
+                rehomed: outcome.rehomed,
+                faulted: outcome.faulted,
+                stale_completions: outcome.stale_completions,
+                crashes: outcome.crashes,
+                recoveries: outcome.recoveries,
+                mttr_ms: spec.cycles_to_ms(outcome.recovery_cycles)
+                    / outcome.recoveries.max(1) as f64,
+                availability: 1.0 - outcome.down_cycles as f64 / fleet_cycles as f64,
+            }
+        });
 
         ServeReport {
             policy: spec.policy.label().to_string(),
@@ -156,10 +256,13 @@ impl ServeReport {
             admitted: outcome.admitted,
             rejected: outcome.rejected,
             completed: outcome.completed,
-            in_flight: outcome.in_flight(),
+            timed_out: outcome.timed_out,
+            shed: outcome.shed,
+            in_flight: outcome.in_flight,
             latency: LatencySummary::from_cycles(&all),
             tenants,
             instances,
+            resilience,
         }
     }
 
@@ -168,7 +271,9 @@ impl ServeReport {
         self.duration_cycles as f64 / (self.clock_mhz * 1e6)
     }
 
-    /// Completed requests per second of simulated time.
+    /// Completed requests per second of simulated time — under faults
+    /// this is the fleet's *goodput* (served work only; timed-out, shed,
+    /// and faulted requests don't count).
     pub fn throughput_rps(&self) -> f64 {
         self.completed as f64 / self.duration_secs().max(1e-12)
     }
@@ -185,6 +290,8 @@ impl ServeReport {
 
     pub fn to_json(&self) -> Json {
         let cycles_per_ms = self.clock_mhz * 1e3;
+        let resilient = self.resilience.is_some();
+        let duration_secs = self.duration_secs().max(1e-12);
         let mut o = Json::obj();
         o.set("policy", self.policy.as_str())
             .set("traffic", self.traffic.as_str())
@@ -197,8 +304,11 @@ impl ServeReport {
             .set("offered", self.offered)
             .set("admitted", self.admitted)
             .set("rejected", self.rejected)
-            .set("completed", self.completed)
-            .set("in_flight", self.in_flight)
+            .set("completed", self.completed);
+        if resilient {
+            o.set("timed_out", self.timed_out).set("shed", self.shed);
+        }
+        o.set("in_flight", self.in_flight)
             .set("offered_rps", self.offered_rps())
             .set("throughput_rps", self.throughput_rps())
             .set("latency", self.latency.to_json(cycles_per_ms))
@@ -212,8 +322,13 @@ impl ServeReport {
                             to.set("name", t.name.as_str())
                                 .set("offered", t.offered)
                                 .set("completed", t.completed)
-                                .set("rejected", t.rejected)
-                                .set("latency", t.latency.to_json(cycles_per_ms));
+                                .set("rejected", t.rejected);
+                            if resilient {
+                                to.set("timed_out", t.timed_out)
+                                    .set("shed", t.shed)
+                                    .set("goodput_rps", t.completed as f64 / duration_secs);
+                            }
+                            to.set("latency", t.latency.to_json(cycles_per_ms));
                             to
                         })
                         .collect(),
@@ -234,11 +349,18 @@ impl ServeReport {
                                 .set("completed", i.completed)
                                 .set("mean_queue_depth", i.mean_queue_depth)
                                 .set("max_queue", i.max_queue);
+                            if resilient {
+                                io.set("crashes", i.crashes)
+                                    .set("availability", i.availability);
+                            }
                             io
                         })
                         .collect(),
                 ),
             );
+        if let Some(res) = &self.resilience {
+            o.set("resilience", res.to_json());
+        }
         o
     }
 
@@ -256,15 +378,51 @@ impl ServeReport {
             self.duration_secs() * 1e3,
             self.seed,
         ));
-        s.push_str(&format!(
-            "requests: offered {} ({:.1} rps) = completed {} ({:.1} rps) + rejected {} + in-flight {}\n",
-            self.offered,
-            self.offered_rps(),
-            self.completed,
-            self.throughput_rps(),
-            self.rejected,
-            self.in_flight,
-        ));
+        match &self.resilience {
+            None => s.push_str(&format!(
+                "requests: offered {} ({:.1} rps) = completed {} ({:.1} rps) + rejected {} + in-flight {}\n",
+                self.offered,
+                self.offered_rps(),
+                self.completed,
+                self.throughput_rps(),
+                self.rejected,
+                self.in_flight,
+            )),
+            Some(res) => {
+                s.push_str(&format!(
+                    "requests: offered {} ({:.1} rps) = completed {} ({:.1} rps goodput) + rejected {} + timed-out {} + shed {} + in-flight {}\n",
+                    self.offered,
+                    self.offered_rps(),
+                    self.completed,
+                    self.throughput_rps(),
+                    self.rejected,
+                    self.timed_out,
+                    self.shed,
+                    self.in_flight,
+                ));
+                s.push_str(&format!(
+                    "resilience: faults {} | timeout {} cyc | retries<= {} | hedge {} cyc | shed {}\n",
+                    res.faults,
+                    res.timeout_cycles,
+                    res.max_retries,
+                    res.hedge_cycles,
+                    if res.shed_enabled { "on" } else { "off" },
+                ));
+                s.push_str(&format!(
+                    "recovery: crashes {} recovered {} (mttr {:.2} ms) | availability {:.4} | re-homed {} | retries {} | hedges {} (wins {}) | faulted {} | stale {}\n",
+                    res.crashes,
+                    res.recoveries,
+                    res.mttr_ms,
+                    res.availability,
+                    res.rehomed,
+                    res.retries,
+                    res.hedges,
+                    res.hedge_wins,
+                    res.faulted,
+                    res.stale_completions,
+                ));
+            }
+        }
         let cpm = self.clock_mhz * 1e3;
         s.push_str(&format!(
             "latency: p50 {:.3} ms | p95 {:.3} ms | p99 {:.3} ms | mean {:.3} ms (n={})\n",
@@ -306,11 +464,12 @@ mod tests {
     use super::*;
     use crate::serve::batcher::BatchPolicy;
     use crate::serve::dispatch::DispatchPolicy;
+    use crate::serve::faults::{FaultSpec, RobustnessPolicy};
     use crate::serve::fleet::{simulate, InstanceSpec, ServeSpec, ServiceProfile};
     use crate::serve::traffic::{Tenant, TrafficModel};
     use crate::sim::config::SimConfig;
 
-    fn toy_report() -> ServeReport {
+    fn toy_spec() -> (ServeSpec, Vec<Vec<ServiceProfile>>) {
         let spec = ServeSpec {
             tenants: vec![
                 Tenant::new("vgg16", 32, 0.6),
@@ -334,6 +493,8 @@ mod tests {
             duration_cycles: 100_000_000,
             clock_mhz: 500.0,
             seed: 9,
+            faults: FaultSpec::none(),
+            robust: RobustnessPolicy::none(),
         };
         let prof = ServiceProfile {
             single_cycles: 800_000,
@@ -341,6 +502,21 @@ mod tests {
             switch_cycles: 300_000,
         };
         let profiles = vec![vec![prof; 2]; 2];
+        (spec, profiles)
+    }
+
+    fn toy_report() -> ServeReport {
+        let (spec, profiles) = toy_spec();
+        let out = simulate(&spec, &profiles);
+        ServeReport::new(&spec, &out)
+    }
+
+    fn faulty_report() -> ServeReport {
+        let (mut spec, profiles) = toy_spec();
+        spec.faults = FaultSpec::parse("crash:60,mttr:2").unwrap();
+        spec.robust.timeout_cycles = 5_000_000;
+        spec.robust.max_retries = 2;
+        spec.robust.backoff_cycles = 10_000;
         let out = simulate(&spec, &profiles);
         ServeReport::new(&spec, &out)
     }
@@ -353,10 +529,12 @@ mod tests {
         assert!(r.latency.p99 <= r.latency.max);
         assert!(r.throughput_rps() > 0.0);
         assert!(r.p99_ms() > 0.0);
+        assert!(r.resilience.is_none());
         let text = r.text();
         assert!(text.contains("latency: p50"));
         assert!(text.contains("tenant"));
         assert!(text.contains("inst"));
+        assert!(!text.contains("resilience:"), "no resilience line off-path");
     }
 
     #[test]
@@ -377,6 +555,56 @@ mod tests {
     fn json_is_bit_identical_across_runs() {
         let a = toy_report().to_json().pretty();
         let b = toy_report().to_json().pretty();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn zero_fault_json_emits_no_resilience_keys() {
+        let j = toy_report().to_json();
+        assert!(j.get("resilience").is_none());
+        assert!(j.get("timed_out").is_none());
+        assert!(j.get("shed").is_none());
+        for t in j.get("tenants").unwrap().as_arr().unwrap() {
+            assert!(t.get("timed_out").is_none());
+            assert!(t.get("goodput_rps").is_none());
+        }
+        for i in j.get("instances").unwrap().as_arr().unwrap() {
+            assert!(i.get("crashes").is_none());
+            assert!(i.get("availability").is_none());
+        }
+    }
+
+    #[test]
+    fn faulted_report_grows_the_resilience_section() {
+        let r = faulty_report();
+        assert_eq!(
+            r.offered,
+            r.completed + r.rejected + r.timed_out + r.shed + r.in_flight
+        );
+        let res = r.resilience.as_ref().expect("resilience summary present");
+        assert!(res.crashes > 0);
+        assert!(res.availability < 1.0 && res.availability > 0.0);
+        assert!(res.mttr_ms > 0.0);
+        // Per-tenant buckets sum to the fleet buckets.
+        assert_eq!(r.tenants.iter().map(|t| t.timed_out).sum::<u64>(), r.timed_out);
+        assert_eq!(r.tenants.iter().map(|t| t.shed).sum::<u64>(), r.shed);
+        let j = r.to_json();
+        assert_eq!(Json::parse(&j.pretty()).unwrap(), j);
+        assert!(j.get("resilience").unwrap().get("mttr_ms").is_some());
+        assert!(j.get("timed_out").is_some());
+        for i in j.get("instances").unwrap().as_arr().unwrap() {
+            assert!(i.get("availability").is_some());
+        }
+        let text = r.text();
+        assert!(text.contains("resilience:"));
+        assert!(text.contains("recovery:"));
+        assert!(text.contains("timed-out"));
+    }
+
+    #[test]
+    fn faulted_json_is_bit_identical_across_runs() {
+        let a = faulty_report().to_json().pretty();
+        let b = faulty_report().to_json().pretty();
         assert_eq!(a, b);
     }
 }

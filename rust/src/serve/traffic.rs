@@ -29,6 +29,11 @@ pub struct Tenant {
     pub res: usize,
     /// Relative traffic share (normalized over the mix).
     pub weight: f64,
+    /// Shedding priority: 0 = highest (shed last). Only consulted when
+    /// SLO-aware load shedding is on
+    /// ([`super::faults::RobustnessPolicy::shed`]); admission is
+    /// priority-blind otherwise.
+    pub priority: u8,
 }
 
 impl Tenant {
@@ -38,18 +43,28 @@ impl Tenant {
             net: net.to_string(),
             res,
             weight,
+            priority: 0,
         }
+    }
+
+    /// Builder: set the shedding priority (0 = highest, shed last).
+    pub fn with_priority(mut self, priority: u8) -> Tenant {
+        self.priority = priority;
+        self
     }
 }
 
 /// The default serving mix: the three zoo CNNs at mixed resolutions
 /// (`resnet10` runs at half resolution — its stride-2 trunk serves
 /// smaller inputs in practice). `res` must be a multiple of 32.
+/// Shedding priorities rank the tenants vgg16 > alexnet > resnet10, so
+/// under load shedding the smallest workload is sacrificed first; with
+/// shedding off (the default) priorities are inert.
 pub fn default_mix(res: usize) -> Vec<Tenant> {
     vec![
         Tenant::new("vgg16", res, 0.4),
-        Tenant::new("alexnet", res, 0.3),
-        Tenant::new("resnet10", (res / 2).max(16), 0.3),
+        Tenant::new("alexnet", res, 0.3).with_priority(1),
+        Tenant::new("resnet10", (res / 2).max(16), 0.3).with_priority(2),
     ]
 }
 
@@ -164,6 +179,12 @@ mod tests {
         let _ = RequestMix::new(&mix); // weights normalize
         let tiny = default_mix(32);
         assert!(tiny.iter().all(|t| t.res >= 16));
+        // Shedding priorities: vgg16 is protected longest, resnet10 shed
+        // first; plain construction stays highest priority.
+        assert_eq!(mix[0].priority, 0);
+        assert!(mix[1].priority < mix[2].priority);
+        assert_eq!(Tenant::new("vgg16", 32, 1.0).priority, 0);
+        assert_eq!(Tenant::new("vgg16", 32, 1.0).with_priority(3).priority, 3);
     }
 
     #[test]

@@ -1,13 +1,15 @@
-//! Serving-simulator property tests: conservation, the engine-cycle
-//! latency floor, thread-budget determinism, and the high-load win of
-//! affinity + batching (the ISSUE 4 acceptance criteria).
+//! Serving-simulator property tests: conservation (with and without
+//! injected faults), the engine-cycle latency floor, thread-budget
+//! determinism, same-cycle tie-break pins, and the high-load win of
+//! affinity + batching (the ISSUE 4 + ISSUE 6 acceptance criteria).
 
 use vscnn::engine::{Engine, FunctionalBackend, RunOptions};
 use vscnn::experiments::{self, ExpContext};
 use vscnn::model::init::synthetic_image;
 use vscnn::serve::{
     build_profiles, default_fleet, default_mix, profile_from_report, simulate, BatchPolicy,
-    DispatchPolicy, InstanceSpec, ServeReport, ServeSpec, ServiceProfile, TrafficModel,
+    DispatchPolicy, FaultSpec, InstanceSpec, Outcome, RobustnessPolicy, ServeReport, ServeSpec,
+    ServiceProfile, TrafficModel,
 };
 use vscnn::util::rng::Pcg32;
 
@@ -29,7 +31,38 @@ fn base_spec(traffic: TrafficModel, policy: DispatchPolicy, batch: BatchPolicy) 
         duration_cycles: 80_000_000,
         clock_mhz: 500.0,
         seed: 20190526,
+        faults: FaultSpec::none(),
+        robust: RobustnessPolicy::none(),
     }
+}
+
+/// The five-bucket request ledger must close under every interleaving:
+/// every offered request sits in exactly one terminal (or in-flight)
+/// bucket, and the per-record outcomes agree with the counters.
+fn assert_ledger_closes(out: &vscnn::serve::ServeOutcome, tag: &str) {
+    assert_eq!(
+        out.offered,
+        out.completed + out.rejected + out.timed_out + out.shed + out.in_flight,
+        "{tag}: conservation"
+    );
+    assert_eq!(out.records.len() as u64, out.offered, "{tag}: records");
+    let count = |o: Outcome| out.records.iter().filter(|r| r.outcome == o).count() as u64;
+    assert_eq!(count(Outcome::Completed), out.completed, "{tag}: completed");
+    assert_eq!(count(Outcome::Rejected), out.rejected, "{tag}: rejected");
+    assert_eq!(count(Outcome::TimedOut), out.timed_out, "{tag}: timed_out");
+    assert_eq!(count(Outcome::Shed), out.shed, "{tag}: shed");
+    assert_eq!(count(Outcome::InFlight), out.in_flight, "{tag}: in_flight");
+    // Hedge duplicates are attempts, not requests: a hedged request still
+    // lands in exactly one bucket (checked above), wins are counted at
+    // most once per request, and an instance-completed sum that matched
+    // `completed` proves no double-served request was double-counted.
+    let hedged = out.records.iter().filter(|r| r.hedged).count() as u64;
+    let hedge_won = out.records.iter().filter(|r| r.hedge_won).count() as u64;
+    assert_eq!(hedged, out.hedges, "{tag}: hedged records");
+    assert_eq!(hedge_won, out.hedge_wins, "{tag}: hedge wins");
+    assert!(out.hedge_wins <= out.hedges, "{tag}: wins<=hedges");
+    let done: u64 = out.instances.iter().map(|i| i.completed).sum();
+    assert_eq!(done, out.completed, "{tag}: instance completions");
 }
 
 #[test]
@@ -85,14 +118,14 @@ fn conservation_over_randomized_specs() {
             .collect();
 
         let out = simulate(&spec, &profiles);
+        assert_ledger_closes(&out, &format!("case {case}"));
+        // Without faults or robustness knobs the fault ledger stays empty.
+        assert_eq!(out.timed_out + out.shed, 0, "case {case}: no-fault buckets");
         assert_eq!(
-            out.offered,
-            out.completed + out.rejected + out.in_flight(),
-            "case {case}: conservation"
+            out.retries + out.hedges + out.crashes + out.faulted,
+            0,
+            "case {case}: no-fault counters"
         );
-        assert_eq!(out.records.len() as u64, out.offered, "case {case}");
-        let done: u64 = out.instances.iter().map(|i| i.completed).sum();
-        assert_eq!(done, out.completed, "case {case}");
         for inst in &out.instances {
             assert!(
                 inst.utilization(spec.duration_cycles) <= 1.0 + 1e-12,
@@ -107,6 +140,140 @@ fn conservation_over_randomized_specs() {
             }
         }
     }
+}
+
+#[test]
+fn conservation_over_randomized_fault_specs() {
+    // ISSUE 6 acceptance: the five-bucket ledger closes and hedge
+    // duplicates are never double-counted for 40 random combinations of
+    // crash/straggler/exec-fault injection and timeout/retry/hedge/shed
+    // robustness — and every faulted run replays bit-identically from the
+    // same seed (same ServeReport JSON, byte for byte).
+    let mut rng = Pcg32::seeded(1234);
+    let policies = [
+        DispatchPolicy::RoundRobin,
+        DispatchPolicy::LeastLoaded,
+        DispatchPolicy::NetworkAffinity,
+    ];
+    for case in 0..40 {
+        let policy = policies[rng.below(3) as usize];
+        let batch = BatchPolicy {
+            max_batch: 1 + rng.below(8) as usize,
+            max_wait_cycles: 1 + rng.next_u32() as u64 % 400_000,
+        };
+        let traffic = if rng.bernoulli(0.3) {
+            TrafficModel::ClosedLoop {
+                clients: 1 + rng.below(8) as usize,
+                think_cycles: rng.next_u32() as u64 % 200_000,
+            }
+        } else {
+            TrafficModel::OpenLoop {
+                rps: 100.0 * (1 + rng.below(200)) as f64,
+            }
+        };
+        let mut spec = base_spec(traffic, policy, batch);
+        spec.queue_cap = 1 + rng.below(24) as usize;
+        spec.seed = rng.next_u64();
+        spec.duration_cycles = 10_000_000 + rng.next_u32() as u64 % 40_000_000;
+        spec.faults = FaultSpec {
+            crash_per_sec: [0.0, 50.0, 200.0, 400.0][rng.below(4) as usize],
+            mttr_ms: 0.5 + rng.below(4) as f64,
+            straggler_per_sec: [0.0, 100.0, 300.0][rng.below(3) as usize],
+            slowdown: 2.0 + rng.below(6) as f64,
+            straggler_ms: 0.5 + rng.below(2) as f64,
+            req_fault_prob: [0.0, 0.1, 0.3][rng.below(3) as usize],
+        };
+        spec.robust = RobustnessPolicy {
+            timeout_cycles: [0, 300_000, 1_500_000][rng.below(3) as usize],
+            max_retries: rng.below(3),
+            backoff_cycles: 10_000 + rng.next_u32() as u64 % 90_000,
+            hedge_cycles: [0, 200_000, 800_000][rng.below(3) as usize],
+            shed: rng.bernoulli(0.5),
+        };
+
+        let profiles: Vec<Vec<ServiceProfile>> = (0..spec.tenants.len())
+            .map(|_| {
+                (0..spec.instances.len())
+                    .map(|_| {
+                        let single = 200_000 + rng.next_u32() as u64 % 2_000_000;
+                        ServiceProfile {
+                            single_cycles: single,
+                            marginal_cycles: (single / 2).max(1),
+                            switch_cycles: rng.next_u32() as u64 % 500_000,
+                        }
+                    })
+                    .collect()
+            })
+            .collect();
+
+        let out = simulate(&spec, &profiles);
+        assert_ledger_closes(&out, &format!("fault case {case}"));
+        // Bit-identical replay: the whole report, not just the counters.
+        let again = simulate(&spec, &profiles);
+        assert_eq!(
+            ServeReport::new(&spec, &out).to_json().pretty(),
+            ServeReport::new(&spec, &again).to_json().pretty(),
+            "fault case {case}: replay diverged"
+        );
+    }
+}
+
+#[test]
+fn same_cycle_timeout_beats_completion_by_one_cycle() {
+    // The documented drain_cycle tie-break (ISSUE 6 satellite): a Timeout
+    // is pushed at dispatch, the Complete at launch — so when the timeout
+    // window exactly equals the service time both land on the same cycle
+    // and FIFO push order lets the *timeout* win; the completion arrives
+    // stale. One extra cycle of budget flips every race the other way.
+    let mk = |timeout_cycles: u64| {
+        let mut spec = base_spec(
+            // Single client, short think: a steady chain of solo requests
+            // with an empty queue, so dispatch and launch share a cycle.
+            TrafficModel::ClosedLoop {
+                clients: 1,
+                think_cycles: 10_000,
+            },
+            DispatchPolicy::LeastLoaded,
+            BatchPolicy {
+                max_batch: 1,
+                max_wait_cycles: 1,
+            },
+        );
+        spec.robust = RobustnessPolicy {
+            timeout_cycles,
+            max_retries: 0,
+            backoff_cycles: 1,
+            hedge_cycles: 0,
+            shed: false,
+        };
+        spec
+    };
+    let prof = ServiceProfile {
+        single_cycles: 1000,
+        marginal_cycles: 1000,
+        switch_cycles: 0,
+    };
+    let profiles = vec![vec![prof; 2]; 3];
+
+    // timeout == service: every attempt times out on the very cycle its
+    // batch completes, and the completion is discarded as stale.
+    let out = simulate(&mk(1000), &profiles);
+    assert_ledger_closes(&out, "tie");
+    assert!(out.offered > 0, "no requests arrived");
+    assert_eq!(out.completed, 0, "a completion beat its same-cycle timeout");
+    assert!(out.timed_out > 0);
+    assert_eq!(
+        out.stale_completions, out.timed_out,
+        "every timed-out attempt still completed (stale) on the same cycle"
+    );
+
+    // timeout == service + 1: the completion now precedes the timeout and
+    // every request is served; the late timeout finds a stale token.
+    let out = simulate(&mk(1001), &profiles);
+    assert_ledger_closes(&out, "tie+1");
+    assert!(out.completed > 0);
+    assert_eq!(out.timed_out, 0, "a timeout beat an earlier completion");
+    assert_eq!(out.stale_completions, 0);
 }
 
 #[test]
