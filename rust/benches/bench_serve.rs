@@ -27,6 +27,7 @@ fn spec_at(rps: f64, policy: DispatchPolicy, max_batch: usize) -> ServeSpec {
             max_wait_cycles: 250_000,
         },
         queue_cap: 32,
+        racks: 1,
         duration_cycles: 2_000_000_000, // 4 simulated seconds at 500 MHz
         clock_mhz: 500.0,
         seed: 7,
@@ -114,6 +115,35 @@ fn main() {
     });
     println!("{}", r.line());
     println!("{}", r.throughput(fevents as f64, "event"));
+    results.push(r);
+
+    // Large-fleet arm (ISSUE 7): 4096 instances in 64 racks under MMPP
+    // flash crowds with hierarchical dispatch. Toy profiles give each
+    // instance ~900 rps of capacity, so 2.2M rps offered is ~60% load;
+    // the horizon is trimmed so one iteration stays ~10^5 arrivals.
+    let mut big = spec_at(2_200_000.0, DispatchPolicy::Hierarchical, 8);
+    big.instances = default_fleet(4096);
+    big.racks = 64;
+    big.traffic = TrafficModel::Mmpp {
+        rps: 2_200_000.0,
+        burst_x: 3.0,
+        mean_high_cycles: 500_000, // 1 ms at 500 MHz
+        mean_low_cycles: 5_000_000, // 10 ms
+    };
+    big.duration_cycles = 40_000_000; // 80 simulated ms
+    let big_profiles = vec![vec![toy; 4096]; 3];
+    let mut big_events = 0u64;
+    let r = bench("serve-sim/fleet4096/hier-mmpp", 1, 5, || {
+        let out = simulate(&big, &big_profiles);
+        big_events = out.events_processed;
+        black_box(out.completed);
+    });
+    println!("{}", r.line());
+    println!("{}", r.throughput(big_events as f64, "event"));
+    derived.set(
+        "fleet4096_events_per_sec",
+        big_events as f64 / r.median.as_secs_f64().max(1e-12),
+    );
     results.push(r);
 
     // And one engine-profiled run, end to end.

@@ -1,16 +1,22 @@
 #!/usr/bin/env python3
-"""Diff a freshly generated bench report against the committed baseline.
+"""Diff freshly generated bench reports against their committed baselines.
 
-Usage: check_bench_regression.py NEW.json BASELINE.json [--threshold 0.10]
+Usage: check_bench_regression.py NEW.json BASELINE.json [NEW2.json BASELINE2.json ...]
+                                 [--threshold 0.10] [--strict]
 
-Compares the two `{"results": [...], "derived": {...}}` documents written
-by `cargo bench --bench bench_sim_perf` / `bench_serve`:
+Takes one or more NEW/BASELINE pairs and compares each pair of
+`{"results": [...], "derived": {...}}` documents written by
+`cargo bench --bench bench_sim_perf` / `bench_serve` and by
+`vscnn exp serve-scale` (`BENCH_serve_scale.json`):
 
 * per-series `median_ns` — warns when a series got more than THRESHOLD
   slower than the committed run;
 * throughput-style `derived` keys (anything ending in `_per_sec` plus
   `speedup_vs_scoped` and the `functional_speedup_*` family) — warns when
   one dropped by more than THRESHOLD.
+
+A missing NEW or BASELINE file skips that pair with a note (first-PR
+bootstrap: the baseline does not exist yet).
 
 Warn-only by design: bench hosts differ, so CI prints the table and the
 warnings but never fails the build on them (pass --strict to exit 1 on
@@ -19,6 +25,7 @@ warnings instead, for local gating on one machine).
 
 import argparse
 import json
+import os
 import sys
 
 
@@ -34,7 +41,7 @@ def series_medians(doc):
 def throughput_keys(derived):
     out = {}
     for key, val in derived.items():
-        if not isinstance(val, (int, float)):
+        if not isinstance(val, (int, float)) or isinstance(val, bool):
             continue
         if key.endswith("_per_sec") or key == "speedup_vs_scoped" or key.startswith(
             "functional_speedup_"
@@ -43,19 +50,13 @@ def throughput_keys(derived):
     return out
 
 
-def main():
-    ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("new", help="freshly generated bench JSON")
-    ap.add_argument("baseline", help="committed previous run")
-    ap.add_argument("--threshold", type=float, default=0.10,
-                    help="relative regression that triggers a warning (default 0.10)")
-    ap.add_argument("--strict", action="store_true",
-                    help="exit 1 when any warning fires")
-    args = ap.parse_args()
-
-    new, base = load(args.new), load(args.baseline)
+def compare_pair(new_path, base_path, threshold):
+    """Print the comparison table for one NEW/BASELINE pair; return the
+    list of warning strings."""
+    new, base = load(new_path), load(base_path)
     warnings = []
 
+    print(f"== {new_path} vs {base_path} ==")
     print(f"{'series':44} {'baseline':>12} {'new':>12} {'ratio':>7}")
     new_med, base_med = series_medians(new), series_medians(base)
     for name in sorted(new_med):
@@ -63,9 +64,9 @@ def main():
             continue
         ratio = new_med[name] / base_med[name]
         flag = ""
-        if ratio > 1.0 + args.threshold:
+        if ratio > 1.0 + threshold:
             flag = "  <-- SLOWER"
-            warnings.append(f"{name}: median {ratio:.2f}x the baseline")
+            warnings.append(f"{new_path}: {name}: median {ratio:.2f}x the baseline")
         print(f"{name:44} {base_med[name]:>12} {new_med[name]:>12} {ratio:>6.2f}x{flag}")
 
     new_thr = throughput_keys(new.get("derived", {}))
@@ -75,14 +76,39 @@ def main():
             continue
         ratio = new_thr[key] / base_thr[key]
         flag = ""
-        if ratio < 1.0 - args.threshold:
+        if ratio < 1.0 - threshold:
             flag = "  <-- THROUGHPUT DROP"
-            warnings.append(f"derived.{key}: {ratio:.2f}x the baseline")
+            warnings.append(f"{new_path}: derived.{key}: {ratio:.2f}x the baseline")
         print(f"derived.{key:36} {base_thr[key]:>12.3f} {new_thr[key]:>12.3f} {ratio:>6.2f}x{flag}")
+    return warnings
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("pairs", nargs="+", metavar="NEW.json BASELINE.json",
+                    help="one or more NEW BASELINE file pairs")
+    ap.add_argument("--threshold", type=float, default=0.10,
+                    help="relative regression that triggers a warning (default 0.10)")
+    ap.add_argument("--strict", action="store_true",
+                    help="exit 1 when any warning fires")
+    args = ap.parse_args()
+
+    if len(args.pairs) % 2 != 0:
+        ap.error("expected an even number of files (NEW BASELINE pairs), "
+                 f"got {len(args.pairs)}")
+
+    warnings = []
+    for new_path, base_path in zip(args.pairs[::2], args.pairs[1::2]):
+        missing = [p for p in (new_path, base_path) if not os.path.exists(p)]
+        if missing:
+            print(f"== {new_path} vs {base_path} ==")
+            print(f"skipped: missing {', '.join(missing)} (no baseline yet?)")
+            continue
+        warnings.extend(compare_pair(new_path, base_path, args.threshold))
 
     if warnings:
         print(f"\nWARNING: {len(warnings)} series regressed more than "
-              f"{args.threshold:.0%} vs {args.baseline}:", file=sys.stderr)
+              f"{args.threshold:.0%}:", file=sys.stderr)
         for w in warnings:
             print(f"  - {w}", file=sys.stderr)
         if args.strict:

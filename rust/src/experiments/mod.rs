@@ -13,6 +13,7 @@
 //! | `scnn`    | §IV comparison against the SCNN-like model         |
 //! | `serve`   | fleet serving capacity curve (beyond the paper)    |
 //! | `serve-faults` | resilience degradation curve under injected faults |
+//! | `serve-scale` | simulator events/sec + p99 at fleet sizes 10 → 10k |
 //!
 //! Every experiment returns a [`Json`] document and a human-readable text
 //! block; the CLI writes both under `reports/`.
@@ -20,6 +21,7 @@
 pub mod density;
 pub mod serve;
 pub mod serve_faults;
+pub mod serve_scale;
 pub mod speedup;
 pub mod table1;
 pub mod workload;
@@ -59,6 +61,9 @@ pub struct ExpContext {
     /// `Tiled` (default) charges SRAM-sized tiles max(compute, transfer);
     /// `Ideal` reproduces the pure-compute counts.
     pub mem_model: crate::sim::config::MemModel,
+    /// Cap on the `serve-scale` fleet-size grid (CLI `--max-fleet`;
+    /// `None` = full sweep to 10k instances).
+    pub max_fleet: Option<usize>,
 }
 
 impl Default for ExpContext {
@@ -74,6 +79,7 @@ impl Default for ExpContext {
             threads: crate::util::default_threads(),
             artifacts_dir: None,
             mem_model: crate::sim::config::MemModel::Tiled,
+            max_fleet: None,
         }
     }
 }
@@ -91,6 +97,7 @@ pub fn list() -> &'static [&'static str] {
         "scnn",
         "serve",
         "serve-faults",
+        "serve-scale",
     ]
 }
 
@@ -106,8 +113,9 @@ pub fn run(id: &str, ctx: &ExpContext) -> Result<ExpOutput> {
         "headline" => speedup::run_headline(ctx),
         "scnn" => speedup::run_scnn(ctx),
         "serve" => serve::run_serve(ctx),
-        // Both spellings accepted; the report file is serve_faults.json.
+        // Both spellings accepted; the report files use underscores.
         "serve-faults" | "serve_faults" => serve_faults::run_serve_faults(ctx),
+        "serve-scale" | "serve_scale" => serve_scale::run_serve_scale(ctx),
         _ => bail!("unknown experiment '{id}'; known: {:?}", list()),
     }
 }
@@ -134,9 +142,11 @@ mod tests {
     #[test]
     fn list_covers_every_paper_artifact() {
         // 1 table + 5 figures + 2 derived comparisons + the serving
-        // capacity curve + the resilience degradation curve.
-        assert_eq!(list().len(), 10);
+        // capacity curve + the resilience degradation curve + the
+        // fleet-scalability sweep.
+        assert_eq!(list().len(), 11);
         assert!(list().contains(&"serve"));
         assert!(list().contains(&"serve-faults"));
+        assert!(list().contains(&"serve-scale"));
     }
 }

@@ -100,6 +100,7 @@ pub fn run_serve_faults(ctx: &ExpContext) -> Result<ExpOutput> {
         policy: DispatchPolicy::NetworkAffinity,
         batch: BatchPolicy::none(),
         queue_cap: 32,
+        racks: 1,
         duration_cycles: 1,
         clock_mhz: 500.0,
         seed: ctx.seed,

@@ -1,0 +1,308 @@
+//! `serve-scale`: simulator scalability sweep — the same bursty serving
+//! scenario at fleet sizes 10 → 10k, measuring simulated tail latency
+//! *and* simulator wall-clock rate (events processed per second).
+//!
+//! This is the acceptance experiment for the ISSUE 7 scaling work: the
+//! calendar event queue and hierarchical dispatch exist so that a
+//! 10k-instance fleet simulates at interactive speed. Offered load and
+//! the horizon both scale with the fleet (fixed load fraction, fixed
+//! arrivals per instance), so a scale-free simulator shows a flat
+//! events-per-second curve; an O(n)-per-event one collapses at the top.
+//!
+//! Each point serves the default multi-tenant mix under MMPP flash-crowd
+//! traffic on a racked topology (64 instances per rack) with
+//! hierarchical dispatch. The emitted curve goes to
+//! `reports/serve_scale.json` and the wall-clock rates to
+//! `BENCH_serve_scale.json` for regression tracking.
+
+use super::{ExpContext, ExpOutput};
+use crate::coordinator::report::ascii_table;
+use crate::serve::{
+    build_profiles, default_fleet, default_mix, simulate, BatchPolicy, DispatchPolicy, FaultSpec,
+    RobustnessPolicy, ServeReport, ServeSpec, TrafficModel,
+};
+use crate::util::json::Json;
+use anyhow::Result;
+
+/// Fleet sizes swept (clipped by `--max-fleet`).
+const FLEET_SIZES: [usize; 4] = [10, 100, 1_000, 10_000];
+
+/// Instances per rack; rack count grows with the fleet.
+const RACK_SIZE: usize = 64;
+
+/// Offered load as a fraction of the estimated warm-batch capacity —
+/// busy but stable, so queues exercise dispatch without diverging.
+const LOAD_FRAC: f64 = 0.6;
+
+/// Expected arrivals per instance: fixes work-per-instance, so the
+/// horizon (and ideal wall time) is the same at every fleet size.
+const ARRIVALS_PER_INSTANCE: f64 = 30.0;
+
+struct ScalePoint {
+    fleet: usize,
+    racks: usize,
+    offered_rps: f64,
+    report: ServeReport,
+    offered: u64,
+    events_processed: u64,
+    events_per_sec: f64,
+}
+
+fn point_json(p: &ScalePoint) -> Json {
+    let mut o = Json::obj();
+    o.set("fleet", p.fleet)
+        .set("racks", p.racks)
+        .set("offered_rps", p.offered_rps)
+        .set("offered", p.offered)
+        .set("completed", p.report.completed)
+        .set("rejected", p.report.rejected)
+        .set("throughput_rps", p.report.throughput_rps())
+        .set("p99_ms", p.report.p99_ms())
+        .set("events_processed", p.events_processed)
+        .set("events_per_sec", p.events_per_sec);
+    o
+}
+
+/// Run the `serve-scale` experiment (see module docs).
+pub fn run_serve_scale(ctx: &ExpContext) -> Result<ExpOutput> {
+    let tenants = default_mix(ctx.res);
+    // Profile the four cyclic fleet templates once; `default_fleet(n)`
+    // repeats them, and `ServiceProfile` is `Copy`, so every sweep size
+    // tiles the same profiles instead of re-touching the engine.
+    let probe = ServeSpec {
+        tenants: tenants.clone(),
+        instances: default_fleet(4),
+        traffic: TrafficModel::OpenLoop { rps: 1.0 },
+        policy: DispatchPolicy::Hierarchical,
+        batch: BatchPolicy::none(),
+        queue_cap: 32,
+        racks: 1,
+        duration_cycles: 1,
+        clock_mhz: 500.0,
+        seed: ctx.seed,
+        faults: FaultSpec::none(),
+        robust: RobustnessPolicy::none(),
+    };
+    let base_profiles = build_profiles(&probe, ctx.threads)?;
+
+    // Mix-weighted per-instance capacity, averaged over the cyclic
+    // templates (same arithmetic as the `serve` experiment).
+    let wsum: f64 = tenants.iter().map(|t| t.weight).sum();
+    let mut capacity_per_instance = 0.0;
+    for i in 0..probe.instances.len() {
+        let mean_marginal: f64 = tenants
+            .iter()
+            .enumerate()
+            .map(|(t, ten)| ten.weight / wsum * base_profiles[t][i].marginal_cycles as f64)
+            .sum();
+        capacity_per_instance += probe.clock_hz() / mean_marginal.max(1.0);
+    }
+    capacity_per_instance /= probe.instances.len() as f64;
+    let mut mean_single = 0.0;
+    for (t, ten) in tenants.iter().enumerate() {
+        let avg: f64 = base_profiles[t]
+            .iter()
+            .map(|p| p.single_cycles as f64)
+            .sum::<f64>()
+            / base_profiles[t].len() as f64;
+        mean_single += ten.weight / wsum * avg;
+    }
+    let max_wait_cycles = ((mean_single / 2.0) as u64).max(1);
+
+    let mut sizes: Vec<usize> = FLEET_SIZES
+        .iter()
+        .copied()
+        .filter(|&n| ctx.max_fleet.is_none_or(|m| n <= m))
+        .collect();
+    if sizes.is_empty() {
+        // --max-fleet below the smallest grid point: sweep just that size
+        // so the experiment still emits a (one-point) curve.
+        sizes.push(ctx.max_fleet.unwrap_or(FLEET_SIZES[0]).max(1));
+    }
+
+    let mut curve: Vec<ScalePoint> = Vec::new();
+    for &n in &sizes {
+        let racks = n.div_ceil(RACK_SIZE).min(n).max(1);
+        let rps = capacity_per_instance * n as f64 * LOAD_FRAC;
+        let duration_cycles =
+            ((ARRIVALS_PER_INSTANCE * n as f64 / rps * probe.clock_hz()).ceil() as u64).max(1);
+        // Flash-crowd MMPP: 3x bursts, ~1 ms high dwell / ~10 ms low, so
+        // every point sees several burst episodes inside its horizon.
+        let clock_hz = probe.clock_hz();
+        let spec = ServeSpec {
+            tenants: tenants.clone(),
+            instances: default_fleet(n),
+            traffic: TrafficModel::Mmpp {
+                rps,
+                burst_x: 3.0,
+                mean_high_cycles: (1e-3 * clock_hz) as u64,
+                mean_low_cycles: (10e-3 * clock_hz) as u64,
+            },
+            policy: DispatchPolicy::Hierarchical,
+            batch: BatchPolicy {
+                max_batch: 8,
+                max_wait_cycles,
+            },
+            queue_cap: 32,
+            racks,
+            duration_cycles,
+            clock_mhz: probe.clock_mhz,
+            seed: ctx.seed,
+            faults: FaultSpec::none(),
+            robust: RobustnessPolicy::none(),
+        };
+        let profiles: Vec<Vec<_>> = (0..tenants.len())
+            .map(|t| (0..n).map(|i| base_profiles[t][i % 4]).collect())
+            .collect();
+        let t0 = std::time::Instant::now();
+        let out = simulate(&spec, &profiles);
+        let wall = t0.elapsed().as_secs_f64().max(1e-9);
+        let events_per_sec = out.events_processed as f64 / wall;
+        curve.push(ScalePoint {
+            fleet: n,
+            racks,
+            offered_rps: rps,
+            offered: out.offered,
+            events_processed: out.events_processed,
+            events_per_sec,
+            report: ServeReport::new(&spec, &out),
+        });
+    }
+
+    // Acceptance: the largest fleet must simulate within ~2x of the
+    // smallest fleet's events-per-second rate — the curve is flat-ish,
+    // i.e. per-event cost does not grow with the fleet.
+    let eps_first = curve.first().map(|p| p.events_per_sec).unwrap_or(0.0);
+    let eps_last = curve.last().map(|p| p.events_per_sec).unwrap_or(0.0);
+    let within_2x = eps_last >= eps_first / 2.0;
+
+    let mut json = Json::obj();
+    json.set(
+        "tenants",
+        Json::Arr(
+            tenants
+                .iter()
+                .map(|t| Json::Str(t.name.clone()))
+                .collect(),
+        ),
+    )
+    .set("rack_size", RACK_SIZE)
+    .set("load_frac", LOAD_FRAC)
+    .set("arrivals_per_instance", ARRIVALS_PER_INSTANCE)
+    .set("capacity_rps_per_instance", capacity_per_instance)
+    .set("seed", probe.seed)
+    .set("events_per_sec_small", eps_first)
+    .set("events_per_sec_large", eps_last)
+    .set("within_2x", within_2x)
+    .set(
+        "curve",
+        Json::Arr(curve.iter().map(point_json).collect()),
+    );
+
+    let rows: Vec<(String, Vec<(String, f64)>)> = curve
+        .iter()
+        .map(|p| {
+            (
+                format!("{} x{}", p.fleet, p.racks),
+                vec![
+                    ("offered_rps".to_string(), p.offered_rps),
+                    ("throughput_rps".to_string(), p.report.throughput_rps()),
+                    ("p99_ms".to_string(), p.report.p99_ms()),
+                    ("events".to_string(), p.events_processed as f64),
+                    ("events_per_sec".to_string(), p.events_per_sec),
+                ],
+            )
+        })
+        .collect();
+    let text = format!(
+        "Serving scalability sweep — fleet x racks, MMPP 3x bursts at {:.0}% of capacity\n\
+         hierarchical dispatch, {} instances per rack, {} arrivals per instance\n{}\n\
+         events/sec: {:.0} (smallest fleet) -> {:.0} (largest) — {}\n",
+        LOAD_FRAC * 100.0,
+        RACK_SIZE,
+        ARRIVALS_PER_INSTANCE,
+        ascii_table(&rows),
+        eps_first,
+        eps_last,
+        if within_2x {
+            "within 2x, scale-free"
+        } else {
+            "SLOWER THAN 2x of the small-fleet rate"
+        },
+    );
+
+    // Wall-clock rates are machine-dependent, so they live in the bench
+    // sidecar (compared with a tolerance by check_bench_regression.py),
+    // not in the pinned report body.
+    let mut derived = Json::obj();
+    for p in &curve {
+        derived.set(
+            &format!("fleet{}_events_per_sec", p.fleet),
+            p.events_per_sec,
+        );
+    }
+    derived
+        .set("events_per_sec_large", eps_last)
+        .set("within_2x", within_2x);
+    let bench_path = "BENCH_serve_scale.json";
+    if let Err(e) = crate::util::bench::write_results(bench_path, &[], derived) {
+        crate::log_warn!("could not write {bench_path}: {e}");
+    }
+
+    Ok(ExpOutput {
+        id: "serve_scale".to_string(),
+        json,
+        text,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scale_sweep_respects_max_fleet_and_reports_rates() {
+        let ctx = ExpContext {
+            res: 32,
+            max_fleet: Some(100),
+            ..Default::default()
+        };
+        let out = run_serve_scale(&ctx).unwrap();
+        assert_eq!(out.id, "serve_scale");
+        let curve = out.json.get("curve").unwrap().as_arr().unwrap();
+        // --max-fleet 100 clips the grid to {10, 100}.
+        assert_eq!(curve.len(), 2);
+        for p in curve {
+            let fleet = p.get("fleet").unwrap().as_f64().unwrap() as usize;
+            assert!(fleet == 10 || fleet == 100);
+            assert!(p.get("events_per_sec").unwrap().as_f64().unwrap() > 0.0);
+            let offered = p.get("offered").unwrap().as_f64().unwrap();
+            let completed = p.get("completed").unwrap().as_f64().unwrap();
+            assert!(offered > 0.0, "no arrivals at fleet {fleet}");
+            assert!(
+                completed > 0.6 * offered,
+                "fleet {fleet}: {completed} of {offered} completed at 60% load"
+            );
+        }
+        // Fleet sizes ascend and offered load scales with them.
+        let rps: Vec<f64> = curve
+            .iter()
+            .map(|p| p.get("offered_rps").unwrap().as_f64().unwrap())
+            .collect();
+        assert!(rps[0] < rps[1]);
+        assert!(out.text.contains("events_per_sec"));
+    }
+
+    #[test]
+    fn tiny_max_fleet_still_produces_a_point() {
+        let ctx = ExpContext {
+            res: 32,
+            max_fleet: Some(4),
+            ..Default::default()
+        };
+        let out = run_serve_scale(&ctx).unwrap();
+        let curve = out.json.get("curve").unwrap().as_arr().unwrap();
+        assert_eq!(curve.len(), 1);
+        assert_eq!(curve[0].get("fleet").unwrap().as_f64().unwrap(), 4.0);
+    }
+}

@@ -5,10 +5,12 @@
 //! vscnn exp <id|all> [--net vgg16|alexnet|resnet10|mixed] [--res N]
 //!                    [--images N] [--seed S] [--pjrt DIR] [--out DIR]
 //!                    [--bias-shift X] [--threads N] [--mem-model ideal|tiled]
+//!                    [--max-fleet N]
 //! vscnn simulate     [--config 4,14,3|8,7,3] [--net NAME] [--res N]
 //!                    [--density D] [--mem-model ideal|tiled] ...
 //! vscnn serve        [--rps N] [--duration-ms N] [--seed S] [--res N]
-//!                    [--net NAME] [--instances N] [--policy P]
+//!                    [--net NAME] [--fleet N] [--topology flat|racks:R]
+//!                    [--policy P] [--traffic poisson|diurnal|flash[,k:v..]]
 //!                    [--max-batch N] [--batch-wait-us N] [--queue-cap N]
 //!                    [--clients N] [--think-ms N] [--out FILE]
 //!                    [--faults SPEC] [--timeout-us N] [--retries N]
@@ -75,7 +77,10 @@ fn print_help() {
          \x20 --images N --seed S --bias-shift X --pjrt DIR --out DIR\n\
          \x20 --threads N (host worker threads; 0 = auto, one per core — the default)\n\
          \x20 --mem-model ideal|tiled (tiled = SRAM/DRAM-aware cycle accounting, default)\n\
-         serve flags: --rps N --duration-ms N --instances N --policy round-robin|least-loaded|affinity\n\
+         serve flags: --rps N --duration-ms N --fleet N (alias --instances)\n\
+         \x20 --topology flat|racks:R (racked fleets default to hierarchical dispatch)\n\
+         \x20 --policy round-robin|least-loaded|affinity|hierarchical\n\
+         \x20 --traffic poisson | diurnal[,amp:A,period-ms:P] | flash[,x:X,high-ms:H,low-ms:L]\n\
          \x20 --max-batch N --batch-wait-us N --queue-cap N --clients N --think-ms N --out FILE\n\
          \x20 --faults crash:RATE,mttr:MS,straggler:RATE,slow:X,slowms:MS,reqfault:P (per-instance rates)\n\
          \x20 --timeout-us N (per-attempt timeout) --retries N --backoff-us N --hedge-us N --shed",
@@ -105,12 +110,25 @@ fn ctx_from(cli: &Cli) -> Result<ExpContext> {
         threads,
         artifacts_dir: cli.get_value("pjrt")?.map(|s| s.to_string()),
         mem_model,
+        max_fleet: match cli.get_num::<usize>("max-fleet", 0)? {
+            0 => None,
+            n => Some(n),
+        },
     })
 }
 
 fn cmd_exp(cli: &Cli) -> Result<()> {
     cli.check_known(&[
-        "net", "res", "seed", "images", "bias-shift", "threads", "pjrt", "out", "mem-model",
+        "net",
+        "res",
+        "seed",
+        "images",
+        "bias-shift",
+        "threads",
+        "pjrt",
+        "out",
+        "mem-model",
+        "max-fleet",
     ])?;
     let Some(id) = cli.positional.first() else {
         bail!("usage: vscnn exp <id|all>; ids: {:?}", experiments::list());
@@ -209,6 +227,9 @@ fn cmd_serve(cli: &Cli) -> Result<()> {
         "seed",
         "threads",
         "instances",
+        "fleet",
+        "topology",
+        "traffic",
         "policy",
         "max-batch",
         "batch-wait-us",
@@ -224,8 +245,8 @@ fn cmd_serve(cli: &Cli) -> Result<()> {
         "shed",
     ])?;
     use vscnn::serve::{
-        build_profiles, default_fleet, default_mix, simulate, BatchPolicy, DispatchPolicy,
-        FaultSpec, RobustnessPolicy, ServeReport, ServeSpec, Tenant, TrafficModel,
+        build_profiles, default_fleet, default_mix, parse_topology, simulate, BatchPolicy,
+        DispatchPolicy, FaultSpec, RobustnessPolicy, ServeReport, ServeSpec, Tenant, TrafficModel,
     };
 
     let defaults = ExpContext::default();
@@ -241,7 +262,22 @@ fn cmd_serve(cli: &Cli) -> Result<()> {
     let duration_ms: f64 = cli.get_num("duration-ms", 100.0)?;
     anyhow::ensure!(duration_ms > 0.0, "--duration-ms must be positive");
     let instances: usize = cli.get_num("instances", 4)?;
-    let policy = DispatchPolicy::parse(cli.get_value("policy")?.unwrap_or("affinity"))?;
+    // --fleet is the scale-era spelling of --instances; when both are
+    // given, --fleet wins (it defaults to the --instances value).
+    let fleet_n: usize = cli.get_num("fleet", instances)?;
+    anyhow::ensure!(fleet_n >= 1, "--fleet must be >= 1");
+    let racks = match cli.get_value("topology")? {
+        Some(s) => parse_topology(s, fleet_n)?,
+        None => 1,
+    };
+    // Racked fleets default to hierarchical dispatch; an explicit
+    // --policy always wins. Flat fleets keep the legacy affinity default
+    // so existing runs stay bit-identical.
+    let policy = match cli.get_value("policy")? {
+        Some(s) => DispatchPolicy::parse(s)?,
+        None if racks > 1 => DispatchPolicy::Hierarchical,
+        None => DispatchPolicy::parse("affinity")?,
+    };
     let max_batch: usize = cli.get_num("max-batch", 8)?;
     anyhow::ensure!(max_batch >= 1, "--max-batch must be >= 1");
     let batch_wait_us: f64 = cli.get_num("batch-wait-us", 100.0)?;
@@ -279,16 +315,23 @@ fn cmd_serve(cli: &Cli) -> Result<()> {
         None => default_mix(res),
     };
     let traffic = if clients > 0 {
+        anyhow::ensure!(
+            cli.get_value("traffic")?.is_none(),
+            "--traffic is open-loop only; drop --clients to use it"
+        );
         TrafficModel::ClosedLoop {
             clients,
             think_cycles: (think_ms * clock_mhz * 1e3) as u64,
         }
     } else {
-        TrafficModel::OpenLoop { rps }
+        match cli.get_value("traffic")? {
+            Some(s) => TrafficModel::parse(s, rps, clock_mhz)?,
+            None => TrafficModel::OpenLoop { rps },
+        }
     };
     let spec = ServeSpec {
         tenants,
-        instances: default_fleet(instances),
+        instances: default_fleet(fleet_n),
         traffic,
         policy,
         batch: BatchPolicy {
@@ -296,6 +339,7 @@ fn cmd_serve(cli: &Cli) -> Result<()> {
             max_wait_cycles: ((batch_wait_us * clock_mhz) as u64).max(1),
         },
         queue_cap,
+        racks,
         duration_cycles: ((duration_ms * clock_mhz * 1e3) as u64).max(1),
         clock_mhz,
         seed,

@@ -15,6 +15,27 @@
 //!   Within the home set the least-loaded instance wins; if every home
 //!   queue is full the request spills to the global least-loaded instance
 //!   rather than being rejected outright.
+//! * **Hierarchical** — the 10k-instance policy: cluster → rack →
+//!   instance. Power-of-two-choices over lazily-maintained per-rack load
+//!   summaries picks a rack, power-of-two-choices within the rack picks
+//!   an instance (same comparison key as least-loaded), and a bounded
+//!   spiral over the remaining racks absorbs the full/dead corner cases —
+//!   O(log n) routing instead of the O(n) scan, at the cost of a seeded
+//!   candidate stream (deterministic per `(seed, call sequence)`).
+//!
+//! ## Load snapshots ([`FleetLoads`])
+//!
+//! The legacy loop rebuilt an `InstanceLoad` vector from scratch on
+//! *every* dispatch — O(fleet) per request. [`FleetLoads`] instead caches
+//! one entry per instance holding the **raw** time-independent fields
+//! (queue depth, queued cycles, busy-until, crash/straggler/breaker
+//! state); the event loop updates exactly the entries whose instances
+//! changed (launch, completion, crash, recovery, timeout, cancellation —
+//! the completion/crash-epoch invalidation points), and the policies
+//! evaluate the time-*dependent* key (remaining busy cycles, breaker
+//! expiry) lazily at choose time. The evaluated key is mathematically
+//! identical to the rebuilt snapshot's, so cached dispatch decisions are
+//! byte-identical to the legacy scan's.
 //!
 //! All policies are **failure-aware** (ISSUE 6): a `Down` (crashed)
 //! instance admits nothing — even naive round-robin cannot route to a
@@ -23,20 +44,204 @@
 //! queue space exists, so limping chips only absorb overflow.
 
 use super::faults::Health;
+use crate::util::rng::Pcg32;
 use anyhow::{bail, Result};
+use std::ops::Range;
 
-/// A dispatcher's view of one instance at admission time.
-#[derive(Debug, Clone, Copy)]
+/// PCG32 stream id of the hierarchical policy's candidate draws. Distinct
+/// from the arrival stream (1), the traffic-modulation stream (2), the
+/// per-request fault stream (7) and the per-instance fault-plan streams
+/// (0x0F00+), so the legacy policies — which draw nothing from it — keep
+/// their exact event sequences.
+pub const DISPATCH_STREAM: u64 = 3;
+
+/// A dispatcher's view of one instance: raw load fields cached by the
+/// event loop (see the module docs). Time-dependent quantities are
+/// derived at choose time via [`InstanceLoad::backlog_at`] and
+/// [`InstanceLoad::health`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct InstanceLoad {
     /// Requests waiting in the instance's queues (all tenants).
     pub queued: usize,
-    /// Estimated cycles to drain: queued marginal service + remaining busy.
-    pub backlog_cycles: u64,
-    /// Whether the instance can admit another request (queue cap).
+    /// Estimated marginal service cycles queued but not launched.
+    pub queued_cycles: u64,
+    /// The running batch occupies the chip until this cycle.
+    pub busy_until: u64,
+    /// Whether the queue has room under the cap.
     pub has_space: bool,
-    /// Crash/straggler/breaker state; `Down` never admits, `Degraded` is
-    /// a last resort for the load-aware policies.
-    pub health: Health,
+    /// Crashed (never admits).
+    pub down: bool,
+    /// In a straggler episode (`slowdown > 1`).
+    pub slow: bool,
+    /// Timeout breaker open until this cycle (`Degraded` before it).
+    pub breaker_until: u64,
+}
+
+impl InstanceLoad {
+    /// A fresh, idle, healthy instance.
+    pub fn idle() -> InstanceLoad {
+        InstanceLoad {
+            queued: 0,
+            queued_cycles: 0,
+            busy_until: 0,
+            has_space: true,
+            down: false,
+            slow: false,
+            breaker_until: 0,
+        }
+    }
+
+    /// Crash/straggler/breaker state as dispatch sees it at `now`.
+    pub fn health(&self, now: u64) -> Health {
+        if self.down {
+            Health::Down
+        } else if self.slow || self.breaker_until > now {
+            Health::Degraded
+        } else {
+            Health::Up
+        }
+    }
+
+    /// Estimated cycles to drain at `now`: queued marginal service plus
+    /// remaining busy time.
+    pub fn backlog_at(&self, now: u64) -> u64 {
+        self.queued_cycles + self.busy_until.saturating_sub(now)
+    }
+}
+
+/// Aggregated load of one rack — maintained incrementally by
+/// [`FleetLoads::update`] so rack selection never scans instances.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct RackLoad {
+    /// Total queued requests across the rack.
+    pub queued: usize,
+    /// Instances that are up (not crashed).
+    pub up: usize,
+    /// Up instances with queue space.
+    pub space: usize,
+}
+
+/// Per-instance load cache plus per-rack and fleet-level summaries, all
+/// maintained in O(1) per instance change.
+#[derive(Debug)]
+pub struct FleetLoads {
+    loads: Vec<InstanceLoad>,
+    /// Instances per rack (the last rack may be smaller).
+    rack_len: usize,
+    racks: Vec<RackLoad>,
+    total_queued: usize,
+    alive: usize,
+}
+
+impl FleetLoads {
+    /// A fleet of `instances` idle instances split into `racks` contiguous
+    /// racks (clamped to at least one; more racks than instances degrade
+    /// to one instance per rack).
+    pub fn new(instances: usize, racks: usize) -> FleetLoads {
+        assert!(instances > 0, "empty fleet");
+        let rack_len = instances.div_ceil(racks.max(1)).max(1);
+        let nracks = instances.div_ceil(rack_len);
+        let mut f = FleetLoads {
+            loads: vec![InstanceLoad::idle(); instances],
+            rack_len,
+            racks: vec![RackLoad::default(); nracks],
+            total_queued: 0,
+            alive: instances,
+        };
+        for i in 0..instances {
+            let r = i / rack_len;
+            f.racks[r].up += 1;
+            f.racks[r].space += 1;
+        }
+        f
+    }
+
+    pub fn len(&self) -> usize {
+        self.loads.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.loads.is_empty()
+    }
+
+    /// The cached load of instance `i`.
+    pub fn get(&self, i: usize) -> InstanceLoad {
+        self.loads[i]
+    }
+
+    /// The rack summaries, indexed by rack id.
+    pub fn racks(&self) -> &[RackLoad] {
+        &self.racks
+    }
+
+    /// Instance index range of rack `r`.
+    pub fn rack_range(&self, r: usize) -> Range<usize> {
+        let start = r * self.rack_len;
+        start..(start + self.rack_len).min(self.loads.len())
+    }
+
+    /// Queued requests across instances that are up. Crashed instances
+    /// always cache `queued == 0` (a crash drains the queue and a down
+    /// instance admits nothing), so this equals the alive-only scan.
+    pub fn total_queued(&self) -> usize {
+        self.total_queued
+    }
+
+    /// Instances that are up (not crashed).
+    pub fn alive(&self) -> usize {
+        self.alive
+    }
+
+    /// Replace instance `i`'s cached load, folding the delta into its
+    /// rack's and the fleet's summaries — O(1).
+    pub fn update(&mut self, i: usize, new: InstanceLoad) {
+        let old = self.loads[i];
+        let rack = &mut self.racks[i / self.rack_len];
+        rack.queued = rack.queued + new.queued - old.queued;
+        self.total_queued = self.total_queued + new.queued - old.queued;
+        if old.down != new.down {
+            if new.down {
+                rack.up -= 1;
+                self.alive -= 1;
+            } else {
+                rack.up += 1;
+                self.alive += 1;
+            }
+        }
+        let old_space = !old.down && old.has_space;
+        let new_space = !new.down && new.has_space;
+        if old_space != new_space {
+            if new_space {
+                rack.space += 1;
+            } else {
+                rack.space -= 1;
+            }
+        }
+        self.loads[i] = new;
+    }
+
+    /// Verify every summary against a full recount (debug/test harness
+    /// for the lazy maintenance).
+    pub fn assert_consistent(&self) {
+        let mut total = 0usize;
+        let mut alive = 0usize;
+        for (r, rl) in self.racks.iter().enumerate() {
+            let range = self.rack_range(r);
+            let queued: usize = range.clone().map(|i| self.loads[i].queued).sum();
+            let up = range.clone().filter(|&i| !self.loads[i].down).count();
+            let space = range
+                .clone()
+                .filter(|&i| !self.loads[i].down && self.loads[i].has_space)
+                .count();
+            assert_eq!(rl.queued, queued, "rack {r} queued summary is stale");
+            assert_eq!(rl.up, up, "rack {r} up summary is stale");
+            assert_eq!(rl.space, space, "rack {r} space summary is stale");
+            total += queued;
+            alive += up;
+        }
+        assert_eq!(self.total_queued, total, "fleet queued summary is stale");
+        assert_eq!(self.alive, alive, "fleet alive summary is stale");
+    }
 }
 
 /// Admission policy (see module docs).
@@ -45,6 +250,7 @@ pub enum DispatchPolicy {
     RoundRobin,
     LeastLoaded,
     NetworkAffinity,
+    Hierarchical,
 }
 
 impl DispatchPolicy {
@@ -54,9 +260,10 @@ impl DispatchPolicy {
             "round-robin" | "rr" => DispatchPolicy::RoundRobin,
             "least-loaded" | "ll" => DispatchPolicy::LeastLoaded,
             "affinity" | "network-affinity" => DispatchPolicy::NetworkAffinity,
+            "hier" | "hierarchical" | "p2c" => DispatchPolicy::Hierarchical,
             other => bail!(
                 "unknown dispatch policy '{other}' \
-                 (known: round-robin, least-loaded, affinity)"
+                 (known: round-robin, least-loaded, affinity, hierarchical)"
             ),
         })
     }
@@ -67,6 +274,7 @@ impl DispatchPolicy {
             DispatchPolicy::RoundRobin => "round-robin",
             DispatchPolicy::LeastLoaded => "least-loaded",
             DispatchPolicy::NetworkAffinity => "affinity",
+            DispatchPolicy::Hierarchical => "hierarchical",
         }
     }
 }
@@ -78,6 +286,9 @@ pub struct Dispatcher {
     rr_cursor: usize,
     /// Home instance set per network id (affinity policy only).
     homes: Vec<Vec<usize>>,
+    /// Candidate draws for the hierarchical policy (dedicated stream;
+    /// untouched by the legacy policies).
+    rng: Pcg32,
 }
 
 impl Dispatcher {
@@ -86,7 +297,7 @@ impl Dispatcher {
     /// `i` owns a contiguous run of `ceil(instances / nets)` instances
     /// starting at `i * instances / nets` (wrapping), so every instance
     /// serves at most a couple of networks and every network has a home.
-    pub fn new(policy: DispatchPolicy, nets: usize, instances: usize) -> Dispatcher {
+    pub fn new(policy: DispatchPolicy, nets: usize, instances: usize, seed: u64) -> Dispatcher {
         assert!(instances > 0, "empty fleet");
         let per_net = instances.div_ceil(nets.max(1)).max(1);
         let homes = (0..nets)
@@ -99,6 +310,7 @@ impl Dispatcher {
             policy,
             rr_cursor: 0,
             homes,
+            rng: Pcg32::new(seed, DISPATCH_STREAM),
         }
     }
 
@@ -108,20 +320,86 @@ impl Dispatcher {
     }
 
     /// Pick the instance that admits a request of network `net_id`, or
-    /// `None` to reject. `loads` is indexed by instance.
-    pub fn choose(&mut self, net_id: usize, loads: &[InstanceLoad]) -> Option<usize> {
+    /// `None` to reject. `avoid` lists instances this request must not
+    /// land on (a hedge races on a different chip than its live twin);
+    /// it is empty on every non-hedge dispatch.
+    pub fn choose(
+        &mut self,
+        net_id: usize,
+        fleet: &FleetLoads,
+        now: u64,
+        avoid: &[usize],
+    ) -> Option<usize> {
         match self.policy {
             DispatchPolicy::RoundRobin => {
-                let i = self.rr_cursor % loads.len();
-                self.rr_cursor = (self.rr_cursor + 1) % loads.len();
-                (loads[i].has_space && loads[i].health != Health::Down).then_some(i)
+                let n = fleet.len();
+                let i = self.rr_cursor % n;
+                self.rr_cursor = (self.rr_cursor + 1) % n;
+                let l = fleet.get(i);
+                (l.has_space && !l.down && !avoid.contains(&i)).then_some(i)
             }
-            DispatchPolicy::LeastLoaded => least_loaded(loads, None),
+            DispatchPolicy::LeastLoaded => least_loaded(fleet, None, now, avoid),
             DispatchPolicy::NetworkAffinity => {
-                least_loaded(loads, Some(&self.homes[net_id]))
-                    .or_else(|| least_loaded(loads, None))
+                least_loaded(fleet, Some(&self.homes[net_id]), now, avoid)
+                    .or_else(|| least_loaded(fleet, None, now, avoid))
+            }
+            DispatchPolicy::Hierarchical => self.choose_hierarchical(fleet, now, avoid),
+        }
+    }
+
+    /// Cluster → rack → instance. Two random racks compete on their
+    /// summaries (admitting racks first, then mean queue depth); within
+    /// the winner two random instances compete on the least-loaded key;
+    /// if both candidates are ineligible a rack-local scan decides, and
+    /// if the whole rack is full the search spirals to the next rack.
+    /// Work per dispatch is O(rack) worst case, O(1) typical.
+    fn choose_hierarchical(
+        &mut self,
+        fleet: &FleetLoads,
+        now: u64,
+        avoid: &[usize],
+    ) -> Option<usize> {
+        let nr = fleet.racks().len();
+        let a = self.rng.below(nr as u32) as usize;
+        let b = self.rng.below(nr as u32) as usize;
+        let rack_key = |r: usize| {
+            let rl = fleet.racks()[r];
+            // Racks with no admitting instance lose outright; otherwise
+            // compare mean queue depth (scaled to dodge integer division).
+            (rl.space == 0, rl.queued * 1024 / rl.up.max(1), r)
+        };
+        let start = if rack_key(a) <= rack_key(b) { a } else { b };
+        let eligible = |i: usize| {
+            let l = fleet.get(i);
+            l.has_space && !l.down && !avoid.contains(&i)
+        };
+        let key = |i: usize| {
+            let l = fleet.get(i);
+            (l.health(now) == Health::Degraded, l.backlog_at(now), l.queued, i)
+        };
+        for k in 0..nr {
+            let r = (start + k) % nr;
+            if fleet.racks()[r].space == 0 {
+                continue;
+            }
+            let range = fleet.rack_range(r);
+            let len = range.len() as u32;
+            let c1 = range.start + self.rng.below(len) as usize;
+            let c2 = range.start + self.rng.below(len) as usize;
+            let pick = match (eligible(c1), eligible(c2)) {
+                (true, true) => Some(if key(c1) <= key(c2) { c1 } else { c2 }),
+                (true, false) => Some(c1),
+                (false, true) => Some(c2),
+                // Both candidates full/down/avoided: scan the rack (its
+                // summary says someone in it admits — unless `avoid`
+                // covers them, in which case spiral on).
+                (false, false) => range.filter(|&i| eligible(i)).min_by_key(|&i| key(i)),
+            };
+            if pick.is_some() {
+                return pick;
             }
         }
+        None
     }
 }
 
@@ -131,18 +409,30 @@ impl Dispatcher {
 /// degraded bit), so limping chips only take traffic when every `Up`
 /// queue is full. Ties break on the lowest instance index (candidate
 /// lists are built in ascending order by construction).
-fn least_loaded(loads: &[InstanceLoad], among: Option<&[usize]>) -> Option<usize> {
+fn least_loaded(
+    fleet: &FleetLoads,
+    among: Option<&[usize]>,
+    now: u64,
+    avoid: &[usize],
+) -> Option<usize> {
     let mut best: Option<usize> = None;
-    let key =
-        |l: InstanceLoad, i: usize| (l.health == Health::Degraded, l.backlog_cycles, l.queued, i);
+    let key = |l: InstanceLoad, i: usize| {
+        (
+            l.health(now) == Health::Degraded,
+            l.backlog_at(now),
+            l.queued,
+            i,
+        )
+    };
     let consider = |i: usize, best: &mut Option<usize>| {
-        if !loads[i].has_space || loads[i].health == Health::Down {
+        let l = fleet.get(i);
+        if !l.has_space || l.down || avoid.contains(&i) {
             return;
         }
         match *best {
             None => *best = Some(i),
             Some(b) => {
-                if key(loads[i], i) < key(loads[b], b) {
+                if key(l, i) < key(fleet.get(b), b) {
                     *best = Some(i);
                 }
             }
@@ -155,7 +445,7 @@ fn least_loaded(loads: &[InstanceLoad], among: Option<&[usize]>) -> Option<usize
             }
         }
         None => {
-            for i in 0..loads.len() {
+            for i in 0..fleet.len() {
                 consider(i, &mut best);
             }
         }
@@ -170,10 +460,22 @@ mod tests {
     fn load(backlog: u64, queued: usize, space: bool) -> InstanceLoad {
         InstanceLoad {
             queued,
-            backlog_cycles: backlog,
+            queued_cycles: backlog,
+            busy_until: 0,
             has_space: space,
-            health: Health::Up,
+            down: false,
+            slow: false,
+            breaker_until: 0,
         }
+    }
+
+    fn fleet_of(loads: Vec<InstanceLoad>, racks: usize) -> FleetLoads {
+        let mut f = FleetLoads::new(loads.len(), racks);
+        for (i, l) in loads.into_iter().enumerate() {
+            f.update(i, l);
+        }
+        f.assert_consistent();
+        f
     }
 
     #[test]
@@ -182,6 +484,7 @@ mod tests {
             ("round-robin", DispatchPolicy::RoundRobin),
             ("least-loaded", DispatchPolicy::LeastLoaded),
             ("affinity", DispatchPolicy::NetworkAffinity),
+            ("hier", DispatchPolicy::Hierarchical),
         ] {
             assert_eq!(DispatchPolicy::parse(s).unwrap(), p);
             assert_eq!(DispatchPolicy::parse(p.label()).unwrap(), p);
@@ -191,24 +494,44 @@ mod tests {
 
     #[test]
     fn round_robin_rotates_and_rejects_on_full() {
-        let mut d = Dispatcher::new(DispatchPolicy::RoundRobin, 2, 3);
-        let mut loads = vec![load(0, 0, true); 3];
-        assert_eq!(d.choose(0, &loads), Some(0));
-        assert_eq!(d.choose(1, &loads), Some(1));
-        assert_eq!(d.choose(0, &loads), Some(2));
-        assert_eq!(d.choose(0, &loads), Some(0));
-        loads[1].has_space = false;
+        let mut d = Dispatcher::new(DispatchPolicy::RoundRobin, 2, 3, 0);
+        let f = fleet_of(vec![load(0, 0, true); 3], 1);
+        assert_eq!(d.choose(0, &f, 0, &[]), Some(0));
+        assert_eq!(d.choose(1, &f, 0, &[]), Some(1));
+        assert_eq!(d.choose(0, &f, 0, &[]), Some(2));
+        assert_eq!(d.choose(0, &f, 0, &[]), Some(0));
+        let mut f = f;
+        f.update(1, load(0, 0, false));
         // Naive: lands on the full instance and rejects, no retry.
-        assert_eq!(d.choose(0, &loads), None);
+        assert_eq!(d.choose(0, &f, 0, &[]), None);
     }
 
     #[test]
     fn least_loaded_prefers_smallest_backlog_with_space() {
-        let mut d = Dispatcher::new(DispatchPolicy::LeastLoaded, 2, 3);
-        let loads = vec![load(500, 2, true), load(100, 1, false), load(200, 1, true)];
-        assert_eq!(d.choose(0, &loads), Some(2));
-        let empty = vec![load(0, 0, false); 3];
-        assert_eq!(d.choose(0, &empty), None);
+        let mut d = Dispatcher::new(DispatchPolicy::LeastLoaded, 2, 3, 0);
+        let f = fleet_of(
+            vec![load(500, 2, true), load(100, 1, false), load(200, 1, true)],
+            1,
+        );
+        assert_eq!(d.choose(0, &f, 0, &[]), Some(2));
+        let empty = fleet_of(vec![load(0, 0, false); 3], 1);
+        assert_eq!(d.choose(0, &empty, 0, &[]), None);
+    }
+
+    #[test]
+    fn backlog_decays_with_now_exactly_like_the_rebuilt_snapshot() {
+        // The cached entry stores busy_until raw; the key derives the
+        // remaining busy cycles at choose time, matching what a fresh
+        // per-arrival rebuild would have computed.
+        let mut l = load(100, 1, true);
+        l.busy_until = 1_000;
+        assert_eq!(l.backlog_at(0), 1_100);
+        assert_eq!(l.backlog_at(400), 700);
+        assert_eq!(l.backlog_at(2_000), 100, "busy part saturates at zero");
+        let mut b = load(0, 0, true);
+        b.breaker_until = 500;
+        assert_eq!(b.health(499), Health::Degraded);
+        assert_eq!(b.health(500), Health::Up, "breaker closes on expiry");
     }
 
     #[test]
@@ -217,60 +540,157 @@ mod tests {
             DispatchPolicy::RoundRobin,
             DispatchPolicy::LeastLoaded,
             DispatchPolicy::NetworkAffinity,
+            DispatchPolicy::Hierarchical,
         ] {
-            let mut d = Dispatcher::new(policy, 1, 2);
-            let mut loads = vec![load(0, 0, true); 2];
-            loads[0].health = Health::Down;
+            let mut d = Dispatcher::new(policy, 1, 2, 11);
+            let mut f = fleet_of(vec![load(0, 0, true); 2], 1);
+            let mut dead = load(0, 0, true);
+            dead.down = true;
+            f.update(0, dead);
             for _ in 0..4 {
-                if let Some(i) = d.choose(0, &loads) {
+                if let Some(i) = d.choose(0, &f, 0, &[]) {
                     assert_eq!(i, 1, "{policy:?} routed to a dead instance");
                 }
             }
             // Whole fleet down: every policy rejects.
-            loads[1].health = Health::Down;
+            f.update(1, dead);
             for _ in 0..4 {
-                assert_eq!(d.choose(0, &loads), None, "{policy:?} admits to a dead fleet");
+                assert_eq!(d.choose(0, &f, 0, &[]), None, "{policy:?} admits to a dead fleet");
             }
         }
     }
 
     #[test]
     fn degraded_instance_is_a_last_resort_for_load_aware_policies() {
-        let mut d = Dispatcher::new(DispatchPolicy::LeastLoaded, 1, 3);
+        let mut d = Dispatcher::new(DispatchPolicy::LeastLoaded, 1, 3, 0);
         // The degraded instance has the smallest backlog but loses to any
         // healthy instance with space.
-        let mut loads = vec![load(10, 1, true), load(500, 3, true), load(900, 4, true)];
-        loads[0].health = Health::Degraded;
-        assert_eq!(d.choose(0, &loads), Some(1));
+        let mut limping = load(10, 1, true);
+        limping.slow = true;
+        let mut f = fleet_of(vec![limping, load(500, 3, true), load(900, 4, true)], 1);
+        assert_eq!(d.choose(0, &f, 0, &[]), Some(1));
         // Healthy queues full: the limping instance absorbs the overflow
         // rather than the request being rejected.
-        loads[1].has_space = false;
-        loads[2].has_space = false;
-        assert_eq!(d.choose(0, &loads), Some(0));
+        f.update(1, load(500, 3, false));
+        f.update(2, load(900, 4, false));
+        assert_eq!(d.choose(0, &f, 0, &[]), Some(0));
     }
 
     #[test]
     fn affinity_homes_partition_and_spill() {
-        let mut d = Dispatcher::new(DispatchPolicy::NetworkAffinity, 3, 4);
+        let mut d = Dispatcher::new(DispatchPolicy::NetworkAffinity, 3, 4, 0);
         // Every net has at least one home; homes are within range.
         for net in 0..3 {
             assert!(!d.home_of(net).is_empty());
             assert!(d.home_of(net).iter().all(|&i| i < 4));
         }
         // Different nets prefer different instances when idle.
-        let loads = vec![load(0, 0, true); 4];
-        let picks: Vec<usize> = (0..3).map(|n| d.choose(n, &loads).unwrap()).collect();
+        let f = fleet_of(vec![load(0, 0, true); 4], 1);
+        let picks: Vec<usize> = (0..3).map(|n| d.choose(n, &f, 0, &[]).unwrap()).collect();
         assert!(picks.windows(2).any(|w| w[0] != w[1]), "picks {picks:?}");
         // Home full -> spills to a non-home instance instead of rejecting.
         let home = d.home_of(0).to_vec();
-        let mut loads = vec![load(0, 0, true); 4];
+        let mut f = fleet_of(vec![load(0, 0, true); 4], 1);
         for &h in &home {
-            loads[h].has_space = false;
+            f.update(h, load(0, 0, false));
         }
-        let spill = d.choose(0, &loads).unwrap();
+        let spill = d.choose(0, &f, 0, &[]).unwrap();
         assert!(!home.contains(&spill));
         // Everything full -> reject.
-        let full = vec![load(0, 0, false); 4];
-        assert_eq!(d.choose(0, &full), None);
+        let full = fleet_of(vec![load(0, 0, false); 4], 1);
+        assert_eq!(d.choose(0, &full, 0, &[]), None);
+    }
+
+    #[test]
+    fn avoid_list_excludes_live_hedge_instances() {
+        let mut d = Dispatcher::new(DispatchPolicy::LeastLoaded, 1, 3, 0);
+        let f = fleet_of(
+            vec![load(10, 1, true), load(500, 2, true), load(900, 3, true)],
+            1,
+        );
+        assert_eq!(d.choose(0, &f, 0, &[]), Some(0));
+        assert_eq!(d.choose(0, &f, 0, &[0]), Some(1), "hedge skips the twin");
+        assert_eq!(d.choose(0, &f, 0, &[0, 1]), Some(2));
+        assert_eq!(d.choose(0, &f, 0, &[0, 1, 2]), None);
+    }
+
+    #[test]
+    fn fleet_loads_maintains_rack_and_fleet_summaries() {
+        let mut f = FleetLoads::new(8, 2);
+        assert_eq!(f.racks().len(), 2);
+        assert_eq!(f.rack_range(0), 0..4);
+        assert_eq!(f.rack_range(1), 4..8);
+        assert_eq!(f.alive(), 8);
+        f.update(0, load(100, 3, true));
+        f.update(5, load(50, 2, false));
+        let mut dead = load(0, 0, true);
+        dead.down = true;
+        f.update(6, dead);
+        assert_eq!(f.total_queued(), 5);
+        assert_eq!(f.alive(), 7);
+        assert_eq!(f.racks()[0].queued, 3);
+        assert_eq!(f.racks()[1].queued, 2);
+        assert_eq!(f.racks()[1].up, 3);
+        assert_eq!(f.racks()[1].space, 2, "full and down both leave space");
+        f.assert_consistent();
+        // Recovery restores the summaries.
+        f.update(6, load(0, 0, true));
+        assert_eq!(f.alive(), 8);
+        f.assert_consistent();
+    }
+
+    #[test]
+    fn uneven_last_rack_is_sized_correctly() {
+        let f = FleetLoads::new(10, 3);
+        // ceil(10/3) = 4 per rack -> racks of 4, 4, 2.
+        assert_eq!(f.racks().len(), 3);
+        assert_eq!(f.rack_range(0), 0..4);
+        assert_eq!(f.rack_range(2), 8..10);
+        assert_eq!(f.racks()[2].up, 2);
+        f.assert_consistent();
+    }
+
+    #[test]
+    fn hierarchical_skips_dead_racks_and_is_deterministic() {
+        let mut f = FleetLoads::new(8, 2);
+        let mut dead = load(0, 0, true);
+        dead.down = true;
+        for i in 0..4 {
+            f.update(i, dead); // rack 0 entirely down
+        }
+        let mut d1 = Dispatcher::new(DispatchPolicy::Hierarchical, 1, 8, 42);
+        let mut d2 = Dispatcher::new(DispatchPolicy::Hierarchical, 1, 8, 42);
+        let mut picks = Vec::new();
+        for _ in 0..32 {
+            let p1 = d1.choose(0, &f, 0, &[]);
+            let p2 = d2.choose(0, &f, 0, &[]);
+            assert_eq!(p1, p2, "same seed, same candidate sequence");
+            let i = p1.expect("rack 1 admits");
+            assert!((4..8).contains(&i), "routed into the dead rack");
+            picks.push(i);
+        }
+        assert!(
+            picks.iter().any(|&i| i != picks[0]),
+            "p2c should spread load across the rack"
+        );
+        // Whole fleet full: reject.
+        for i in 4..8 {
+            f.update(i, load(0, 0, false));
+        }
+        assert_eq!(d1.choose(0, &f, 0, &[]), None);
+    }
+
+    #[test]
+    fn hierarchical_prefers_the_emptier_candidate() {
+        // Single rack of two instances. Whenever p2c draws two distinct
+        // candidates the least-loaded key picks the idle one; only the
+        // (0,0) double-draw (~1/4 of calls) can land on the loaded chip,
+        // so the idle instance wins a clear majority.
+        let f = fleet_of(vec![load(10_000, 8, true), load(0, 0, true)], 1);
+        let mut d = Dispatcher::new(DispatchPolicy::Hierarchical, 1, 2, 5);
+        let idle_picks = (0..64)
+            .filter(|_| d.choose(0, &f, 0, &[]) == Some(1))
+            .count();
+        assert!(idle_picks > 40, "idle instance won only {idle_picks}/64");
     }
 }

@@ -1,11 +1,26 @@
 //! Deterministic discrete-event queue and event vocabulary for the
 //! serving simulator.
 //!
-//! A binary min-heap keyed by `(cycle, seq)` where `seq` is a monotone
+//! Events are totally ordered by `(cycle, seq)` where `seq` is a monotone
 //! insertion counter: two events scheduled for the same cycle pop in the
 //! order they were pushed, so the simulation is a pure function of the
 //! spec and seed — no iteration-order or wall-clock nondeterminism can
 //! leak in. Payloads need no ordering of their own.
+//!
+//! ## Implementation: a calendar queue
+//!
+//! [`EventQueue`] is a *calendar queue* (Brown 1988): a power-of-two ring
+//! of unsorted buckets, each spanning `2^width_bits` cycles per wheel
+//! rotation. An event at `cycle` lives in bucket
+//! `(cycle >> width_bits) & mask`; finding the minimum scans bucket-days
+//! forward from a cursor that only ever chases the earliest pending
+//! event. With the bucket width sized to the mean event gap (re-estimated
+//! on resize), push/pop/drain are O(1) amortized — the O(log n) heap
+//! reshuffles that dominated large-fleet runs are gone. The previous
+//! implementation is kept as [`BinaryHeapQueue`] and pinned byte-identical
+//! by a differential storm test (`tests/serve.rs`): both structures
+//! realize the same `(cycle, seq)` total order, so they are observably
+//! interchangeable.
 //!
 //! ## Same-cycle tie-break contract
 //!
@@ -29,6 +44,7 @@
 //!    `drain_matches_pop_order`).
 
 use super::faults::FaultKind;
+use std::cell::Cell;
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
 
@@ -71,7 +87,7 @@ struct Entry<T> {
 }
 
 // Manual impls: order by (cycle, seq) only — reversed so the std max-heap
-// pops the earliest event first.
+// of [`BinaryHeapQueue`] pops the earliest event first.
 impl<T> PartialEq for Entry<T> {
     fn eq(&self, other: &Self) -> bool {
         self.cycle == other.cycle && self.seq == other.seq
@@ -89,18 +105,50 @@ impl<T> Ord for Entry<T> {
     }
 }
 
-/// Min-heap of `(cycle, payload)` events with deterministic FIFO
-/// tie-breaking at equal cycles.
+/// Starting bucket count (power of two; resizes re-estimate from `len`).
+const INITIAL_BUCKETS: usize = 64;
+/// Starting log2 cycles-per-bucket (resizes re-estimate from the span).
+const INITIAL_WIDTH_BITS: u32 = 16;
+/// Bucket-count ceiling: 2^20 buckets ≈ 8 MB of headers, far above any
+/// realistic pending-event population.
+const MAX_BUCKETS: usize = 1 << 20;
+
+/// Calendar queue of `(cycle, payload)` events with deterministic FIFO
+/// tie-breaking at equal cycles — a drop-in replacement for the binary
+/// heap ([`BinaryHeapQueue`]) with O(1) amortized operations.
 pub struct EventQueue<T> {
-    heap: BinaryHeap<Entry<T>>,
+    /// `buckets[(cycle >> width_bits) & mask]` holds the events of every
+    /// *day* `cycle >> width_bits` congruent to that slot (unsorted).
+    buckets: Vec<Vec<Entry<T>>>,
+    /// `buckets.len() - 1`; the bucket count is a power of two.
+    mask: u64,
+    /// log2 of the cycle span of one bucket-day.
+    width_bits: u32,
+    /// Lower bound on the day of the earliest pending event. A `Cell` so
+    /// `peek_cycle(&self)` can advance it past proven-empty days; it only
+    /// moves backward when a push lands on an earlier day.
+    day: Cell<u64>,
+    len: usize,
     seq: u64,
+    /// Empty-day scan work accrued since the last rebuild; when it
+    /// outgrows the queue the widths are re-estimated, so sparse
+    /// far-apart schedules stay cheap too.
+    scan_debt: Cell<u64>,
+    /// Scratch for `drain_cycle` (kept to stay allocation-free per drain).
+    drain_buf: Vec<Entry<T>>,
 }
 
 impl<T> Default for EventQueue<T> {
     fn default() -> Self {
         EventQueue {
-            heap: BinaryHeap::new(),
+            buckets: (0..INITIAL_BUCKETS).map(|_| Vec::new()).collect(),
+            mask: (INITIAL_BUCKETS - 1) as u64,
+            width_bits: INITIAL_WIDTH_BITS,
+            day: Cell::new(0),
+            len: 0,
             seq: 0,
+            scan_debt: Cell::new(0),
+            drain_buf: Vec::new(),
         }
     }
 }
@@ -112,6 +160,210 @@ impl<T> EventQueue<T> {
 
     /// Schedule `payload` at `cycle`. Events at the same cycle pop in push
     /// order.
+    pub fn push(&mut self, cycle: u64, payload: T) {
+        let seq = self.seq;
+        self.seq += 1;
+        let day = cycle >> self.width_bits;
+        if self.len == 0 || day < self.day.get() {
+            self.day.set(day);
+        }
+        let bidx = (day & self.mask) as usize;
+        self.buckets[bidx].push(Entry {
+            cycle,
+            seq,
+            payload,
+        });
+        self.len += 1;
+        self.maybe_rebuild();
+    }
+
+    /// Pop the earliest event as `(cycle, payload)` — the entry with the
+    /// minimal `(cycle, seq)` key.
+    pub fn pop(&mut self) -> Option<(u64, T)> {
+        self.maybe_rebuild();
+        let cycle = self.find_min()?;
+        let bidx = ((cycle >> self.width_bits) & self.mask) as usize;
+        let b = &mut self.buckets[bidx];
+        let mut pos = 0usize;
+        let mut best_seq = u64::MAX;
+        for (j, e) in b.iter().enumerate() {
+            if e.cycle == cycle && e.seq < best_seq {
+                best_seq = e.seq;
+                pos = j;
+            }
+        }
+        debug_assert!(best_seq != u64::MAX, "find_min pointed at an empty day");
+        let e = b.swap_remove(pos);
+        self.len -= 1;
+        Some((e.cycle, e.payload))
+    }
+
+    /// Cycle of the earliest pending event.
+    pub fn peek_cycle(&self) -> Option<u64> {
+        self.find_min()
+    }
+
+    /// Batched drain: append every event scheduled at exactly `cycle` to
+    /// `out`, in FIFO (push) order. The serving loop processes one
+    /// timestamp per drain; events pushed *while* processing the batch —
+    /// even at the same cycle — carry higher `seq`s, so the caller's next
+    /// drain picks them up in exactly the order one-at-a-time popping
+    /// would have (pinned by `drain_matches_pop_order`).
+    pub fn drain_cycle(&mut self, cycle: u64, out: &mut Vec<T>) {
+        if self.len == 0 {
+            return;
+        }
+        let bidx = ((cycle >> self.width_bits) & self.mask) as usize;
+        let bucket = &mut self.buckets[bidx];
+        let batch = &mut self.drain_buf;
+        let mut j = 0;
+        while j < bucket.len() {
+            if bucket[j].cycle == cycle {
+                batch.push(bucket.swap_remove(j));
+            } else {
+                j += 1;
+            }
+        }
+        if batch.is_empty() {
+            return;
+        }
+        self.len -= batch.len();
+        batch.sort_unstable_by_key(|e| e.seq);
+        out.extend(batch.drain(..).map(|e| e.payload));
+        self.maybe_rebuild();
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Cycle of the earliest pending event, advancing the day cursor past
+    /// proven-empty days. A fruitless full rotation (everything pending is
+    /// far in the future) falls back to a content scan and jumps the
+    /// cursor straight to the earliest day.
+    fn find_min(&self) -> Option<u64> {
+        if self.len == 0 {
+            return None;
+        }
+        let nb = self.buckets.len() as u64;
+        let mut day = self.day.get();
+        let mut skipped = 0u64;
+        while skipped < nb {
+            if let Some(cycle) = self.day_min(day) {
+                self.day.set(day);
+                self.scan_debt.set(self.scan_debt.get() + skipped);
+                return Some(cycle);
+            }
+            day += 1;
+            skipped += 1;
+        }
+        self.scan_debt.set(self.scan_debt.get() + skipped);
+        let mut min_day = u64::MAX;
+        for b in &self.buckets {
+            for e in b {
+                min_day = min_day.min(e.cycle >> self.width_bits);
+            }
+        }
+        debug_assert!(min_day != u64::MAX, "non-empty queue with no entries");
+        self.day.set(min_day);
+        self.day_min(min_day)
+    }
+
+    /// Minimal cycle among `day`'s entries (its bucket also holds other
+    /// days congruent modulo the ring size, which are filtered out).
+    fn day_min(&self, day: u64) -> Option<u64> {
+        let b = &self.buckets[(day & self.mask) as usize];
+        let mut best: Option<u64> = None;
+        for e in b {
+            if e.cycle >> self.width_bits == day {
+                let better = match best {
+                    None => true,
+                    Some(c) => e.cycle < c,
+                };
+                if better {
+                    best = Some(e.cycle);
+                }
+            }
+        }
+        best
+    }
+
+    /// Resize/re-width when the population outgrew (or far undershot) the
+    /// bucket count, or when empty-day scan debt says the width is stale.
+    fn maybe_rebuild(&mut self) {
+        let nb = self.buckets.len();
+        let grow = self.len > nb * 2;
+        let shrink = nb > INITIAL_BUCKETS && self.len * 8 < nb;
+        let stale_width = self.scan_debt.get() > 8 * (self.len as u64 + nb as u64);
+        if grow || shrink || stale_width {
+            self.rebuild();
+        }
+    }
+
+    /// Re-hash every entry into a ring sized to the current population,
+    /// with the bucket width re-estimated from the pending cycle span
+    /// (≈ 2× the mean inter-event gap per bucket-day, so one rotation
+    /// covers the whole pending window and days hold O(1) events).
+    fn rebuild(&mut self) {
+        let target = (self.len.max(1) * 2)
+            .next_power_of_two()
+            .clamp(INITIAL_BUCKETS, MAX_BUCKETS);
+        let mut min_c = u64::MAX;
+        let mut max_c = 0u64;
+        for b in &self.buckets {
+            for e in b {
+                min_c = min_c.min(e.cycle);
+                max_c = max_c.max(e.cycle);
+            }
+        }
+        if self.len >= 2 && max_c > min_c {
+            let gap = ((max_c - min_c) / self.len as u64).max(1);
+            let floor_log2 = 63 - gap.leading_zeros();
+            self.width_bits = (floor_log2 + 1).min(40);
+        }
+        let old = std::mem::take(&mut self.buckets);
+        self.buckets = (0..target).map(|_| Vec::new()).collect();
+        self.mask = (target - 1) as u64;
+        for bucket in old {
+            for e in bucket {
+                let bidx = ((e.cycle >> self.width_bits) & self.mask) as usize;
+                self.buckets[bidx].push(e);
+            }
+        }
+        self.day
+            .set(if self.len == 0 { 0 } else { min_c >> self.width_bits });
+        self.scan_debt.set(0);
+    }
+}
+
+/// The original binary-heap event queue, kept as the executable
+/// specification of the `(cycle, seq)` order: `tests/serve.rs` feeds
+/// identical storms to both implementations and asserts byte-identical
+/// pop sequences. Same API as [`EventQueue`].
+pub struct BinaryHeapQueue<T> {
+    heap: BinaryHeap<Entry<T>>,
+    seq: u64,
+}
+
+impl<T> Default for BinaryHeapQueue<T> {
+    fn default() -> Self {
+        BinaryHeapQueue {
+            heap: BinaryHeap::new(),
+            seq: 0,
+        }
+    }
+}
+
+impl<T> BinaryHeapQueue<T> {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Schedule `payload` at `cycle` (FIFO among equal cycles).
     pub fn push(&mut self, cycle: u64, payload: T) {
         let seq = self.seq;
         self.seq += 1;
@@ -132,12 +384,7 @@ impl<T> EventQueue<T> {
         self.heap.peek().map(|e| e.cycle)
     }
 
-    /// Batched drain: append every event scheduled at exactly `cycle` to
-    /// `out`, in FIFO (push) order. The serving loop processes one
-    /// timestamp per drain; events pushed *while* processing the batch —
-    /// even at the same cycle — carry higher `seq`s, so the caller's next
-    /// drain picks them up in exactly the order one-at-a-time popping
-    /// would have (pinned by `drain_matches_pop_order`).
+    /// Batched drain of every event at exactly `cycle`, in push order.
     pub fn drain_cycle(&mut self, cycle: u64, out: &mut Vec<T>) {
         while let Some(e) = self.heap.peek() {
             if e.cycle != cycle {
@@ -159,6 +406,7 @@ impl<T> EventQueue<T> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::rng::Pcg32;
 
     #[test]
     fn pops_in_cycle_order() {
@@ -222,5 +470,98 @@ mod tests {
         assert_eq!(q.pop(), Some((5, 0)));
         assert!(q.is_empty());
         assert_eq!(q.len(), 0);
+    }
+
+    #[test]
+    fn far_future_gaps_rotate_and_jump() {
+        // Events many wheel rotations apart exercise the fruitless-
+        // rotation fallback (content scan + cursor jump).
+        let mut q = EventQueue::new();
+        q.push(0, 0usize);
+        q.push(1 << 30, 1);
+        q.push(1 << 45, 2);
+        q.push(1, 3);
+        assert_eq!(q.pop(), Some((0, 0)));
+        assert_eq!(q.pop(), Some((1, 3)));
+        assert_eq!(q.peek_cycle(), Some(1 << 30));
+        // Pushing below the cursor after it jumped forward still works.
+        q.push(2, 4);
+        assert_eq!(q.pop(), Some((2, 4)));
+        assert_eq!(q.pop(), Some((1 << 30, 1)));
+        assert_eq!(q.pop(), Some((1 << 45, 2)));
+        assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn grow_shrink_stress_keeps_total_order() {
+        // Force several rebuilds (grow past 64*2, then shrink) and check
+        // the full pop sequence is sorted by (cycle, push order).
+        let mut rng = Pcg32::new(2022_05, 1);
+        let mut q = EventQueue::new();
+        let mut pushed: Vec<(u64, usize)> = Vec::new();
+        for i in 0..5_000usize {
+            // Clustered cycles: plenty of exact ties.
+            let cycle = (rng.below(1 << 20) as u64) & !0x3f;
+            q.push(cycle, i);
+            pushed.push((cycle, i));
+        }
+        pushed.sort_by_key(|&(c, i)| (c, i));
+        let mut popped = Vec::new();
+        while let Some(e) = q.pop() {
+            popped.push(e);
+        }
+        assert_eq!(popped, pushed);
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn calendar_matches_heap_reference_on_mixed_ops() {
+        // Same op sequence against both implementations, interleaving
+        // pushes, pops and whole-cycle drains.
+        let mut rng = Pcg32::new(77, 3);
+        let mut cal = EventQueue::new();
+        let mut heap = BinaryHeapQueue::new();
+        let mut id = 0usize;
+        let mut cal_out: Vec<(u64, usize)> = Vec::new();
+        let mut heap_out: Vec<(u64, usize)> = Vec::new();
+        for _round in 0..200 {
+            for _ in 0..rng.below(16) {
+                let cycle = rng.below(1 << 14) as u64 / 3;
+                cal.push(cycle, id);
+                heap.push(cycle, id);
+                id += 1;
+            }
+            match rng.below(3) {
+                0 => {
+                    if let Some(e) = cal.pop() {
+                        cal_out.push(e);
+                    }
+                    if let Some(e) = heap.pop() {
+                        heap_out.push(e);
+                    }
+                }
+                1 => {
+                    assert_eq!(cal.peek_cycle(), heap.peek_cycle());
+                    if let Some(cycle) = cal.peek_cycle() {
+                        let mut a = Vec::new();
+                        let mut b = Vec::new();
+                        cal.drain_cycle(cycle, &mut a);
+                        heap.drain_cycle(cycle, &mut b);
+                        assert_eq!(a, b);
+                        cal_out.extend(a.into_iter().map(|v| (cycle, v)));
+                        heap_out.extend(b.into_iter().map(|v| (cycle, v)));
+                    }
+                }
+                _ => {}
+            }
+            assert_eq!(cal.len(), heap.len());
+        }
+        while let Some(e) = heap.pop() {
+            heap_out.push(e);
+        }
+        while let Some(e) = cal.pop() {
+            cal_out.push(e);
+        }
+        assert_eq!(cal_out, heap_out);
     }
 }

@@ -12,23 +12,36 @@
 //! utilization, queue depths, rejections, and where the capacity knee
 //! sits.
 //!
+//! The simulator scales to 10k-instance fleets (ISSUE 7): the event
+//! queue is a calendar queue with O(1) expected operations, dispatch is
+//! hierarchical (cluster → rack → instance over incrementally-maintained
+//! rack load summaries), and the traffic layer adds non-stationary
+//! arrivals (diurnal envelopes, MMPP flash crowds) on dedicated PCG32
+//! streams so small-fleet runs stay bit-identical.
+//!
 //! Module map:
 //!
-//! * [`events`] — the deterministic event queue (cycle, FIFO ties).
-//! * [`traffic`] — tenants, request mixes, Poisson/closed-loop arrivals.
-//! * [`dispatch`] — round-robin / least-loaded / network-affinity
-//!   admission (failure-aware: never routes to a dead instance).
+//! * [`events`] — the deterministic event queue (cycle, FIFO ties),
+//!   implemented as a calendar queue; the reference `BinaryHeap` is kept
+//!   as `BinaryHeapQueue` for differential tests.
+//! * [`traffic`] — tenants, request mixes; Poisson / closed-loop /
+//!   diurnal / MMPP arrivals.
+//! * [`dispatch`] — round-robin / least-loaded / network-affinity /
+//!   hierarchical admission over cached [`dispatch::FleetLoads`]
+//!   (failure-aware: never routes to a dead instance).
 //! * [`batcher`] — size-or-deadline dynamic batching windows.
 //! * [`faults`] — seeded fault plans (crash/recover, stragglers,
 //!   execution faults) and client-side robustness knobs (timeouts,
 //!   retries, hedging, load shedding).
-//! * [`fleet`] — service profiles from real engine runs + the simulator.
+//! * [`fleet`] — service profiles from real engine runs + the simulator
+//!   (rack topology via [`fleet::parse_topology`]).
 //! * [`report`] — [`report::ServeReport`]: percentiles, utilization,
 //!   JSON/text (plus a resilience section when faults/robustness are on).
 //!
 //! Entry points: [`fleet::build_profiles`] → [`fleet::simulate`] →
 //! [`report::ServeReport::new`]; the `vscnn serve` CLI subcommand and the
-//! `exp serve` / `exp serve-faults` experiments wrap them.
+//! `exp serve` / `exp serve-faults` / `exp serve-scale` experiments wrap
+//! them.
 
 pub mod batcher;
 pub mod dispatch;
@@ -42,8 +55,8 @@ pub use batcher::BatchPolicy;
 pub use dispatch::DispatchPolicy;
 pub use faults::{FaultSpec, Health, RobustnessPolicy};
 pub use fleet::{
-    build_profiles, default_fleet, profile_from_report, simulate, InstanceSpec, Outcome,
-    ServeOutcome, ServeSpec, ServiceProfile,
+    build_profiles, default_fleet, parse_topology, profile_from_report, simulate, InstanceSpec,
+    Outcome, ServeOutcome, ServeSpec, ServiceProfile,
 };
 pub use report::ServeReport;
 pub use traffic::{default_mix, Tenant, TrafficModel};

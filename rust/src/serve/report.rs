@@ -143,6 +143,10 @@ pub struct ServeReport {
     pub max_batch: usize,
     pub max_wait_cycles: u64,
     pub queue_cap: usize,
+    /// Fleet topology (1 = flat). A `racks` JSON key and a topology text
+    /// line appear only for racked fleets, so flat-topology output stays
+    /// bit-identical to the pre-topology report.
+    pub racks: usize,
     pub clock_mhz: f64,
     pub duration_cycles: u64,
     pub seed: u64,
@@ -249,6 +253,7 @@ impl ServeReport {
             max_batch: spec.batch.max_batch,
             max_wait_cycles: spec.batch.max_wait_cycles,
             queue_cap: spec.queue_cap,
+            racks: spec.racks.max(1),
             clock_mhz: spec.clock_mhz,
             duration_cycles: spec.duration_cycles,
             seed: spec.seed,
@@ -297,8 +302,11 @@ impl ServeReport {
             .set("traffic", self.traffic.as_str())
             .set("max_batch", self.max_batch)
             .set("max_wait_cycles", self.max_wait_cycles)
-            .set("queue_cap", self.queue_cap)
-            .set("clock_mhz", self.clock_mhz)
+            .set("queue_cap", self.queue_cap);
+        if self.racks > 1 {
+            o.set("racks", self.racks);
+        }
+        o.set("clock_mhz", self.clock_mhz)
             .set("duration_cycles", self.duration_cycles)
             .set("seed", self.seed)
             .set("offered", self.offered)
@@ -378,6 +386,14 @@ impl ServeReport {
             self.duration_secs() * 1e3,
             self.seed,
         ));
+        if self.racks > 1 {
+            s.push_str(&format!(
+                "topology: {} instances in {} racks ({} per rack)\n",
+                self.instances.len(),
+                self.racks,
+                self.instances.len().div_ceil(self.racks),
+            ));
+        }
         match &self.resilience {
             None => s.push_str(&format!(
                 "requests: offered {} ({:.1} rps) = completed {} ({:.1} rps) + rejected {} + in-flight {}\n",
@@ -490,6 +506,7 @@ mod tests {
                 max_wait_cycles: 100_000,
             },
             queue_cap: 16,
+            racks: 1,
             duration_cycles: 100_000_000,
             clock_mhz: 500.0,
             seed: 9,
@@ -606,5 +623,22 @@ mod tests {
         let a = faulty_report().to_json().pretty();
         let b = faulty_report().to_json().pretty();
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn flat_topology_emits_no_racks_key_but_racked_does() {
+        let flat = toy_report();
+        assert!(flat.to_json().get("racks").is_none());
+        assert!(!flat.text().contains("topology:"));
+
+        let (mut spec, profiles) = toy_spec();
+        spec.policy = DispatchPolicy::Hierarchical;
+        spec.racks = 2;
+        let out = simulate(&spec, &profiles);
+        let racked = ServeReport::new(&spec, &out);
+        let j = racked.to_json();
+        assert_eq!(j.get("racks").unwrap().as_usize().unwrap(), 2);
+        assert_eq!(Json::parse(&j.pretty()).unwrap(), j);
+        assert!(racked.text().contains("topology: 2 instances in 2 racks"));
     }
 }

@@ -1,8 +1,8 @@
 //! Request traffic: the multi-tenant request mix and the arrival models.
 //!
 //! A *tenant* is one served workload — a zoo network at a fixed input
-//! resolution with a share of the traffic. Arrivals come from one of two
-//! classic models:
+//! resolution with a share of the traffic. Arrivals come from one of four
+//! models:
 //!
 //! * **Open loop** (`rps`): a Poisson process — exponential inter-arrival
 //!   times, independent of the fleet's state. What a datacenter sees from
@@ -11,11 +11,34 @@
 //! * **Closed loop** (`clients`, `think_cycles`): each client issues one
 //!   request, waits for its completion plus a think time, then issues the
 //!   next. Self-throttling; overload shows up as lower per-client rates.
+//! * **Diurnal** (`rps`, `amplitude`, `period_cycles`): a Poisson process
+//!   whose rate follows a sinusoidal envelope
+//!   `rps · (1 + amplitude · sin(2πt/period))` — the day/night swing every
+//!   planet-scale service provisions for, compressed to simulation time.
+//!   Sampled exactly by Lewis–Shedler thinning at the peak rate.
+//! * **MMPP / flash crowd** (`rps`, `burst_x`, dwell times): a two-state
+//!   Markov-modulated Poisson process — baseline `rps` punctuated by
+//!   exponentially-dwelling bursts at `burst_x × rps`. The bursty tail
+//!   that breaks dispatch policies which only balance averages. Sampled
+//!   exactly via memorylessness: a gap that crosses the state boundary is
+//!   truncated there and redrawn at the new state's rate.
 //!
-//! All randomness is a seeded [`Pcg32`] stream, so a `(spec, seed)` pair
-//! reproduces the exact arrival sequence.
+//! All randomness is seeded [`Pcg32`] streams: the base arrival gaps stay
+//! on the fleet's legacy stream, while envelope thinning and state dwells
+//! draw from a dedicated modulation stream ([`TRAFFIC_MOD_STREAM`]) — so
+//! plain open-loop runs reproduce the exact pre-topology event sequence,
+//! and a `(spec, seed)` pair reproduces the exact arrival sequence under
+//! every model.
 
 use crate::util::rng::Pcg32;
+use anyhow::{bail, ensure, Result};
+
+/// PCG32 stream id for traffic modulation (diurnal thinning accepts and
+/// MMPP state dwells). Distinct from the arrival stream (1), the dispatch
+/// candidate stream (3), the per-request fault stream (7) and the
+/// per-instance fault-plan streams (0x0F00+); never drawn by the plain
+/// open-loop or closed-loop models.
+pub const TRAFFIC_MOD_STREAM: u64 = 2;
 
 /// One served workload: a zoo network at one input resolution, with a
 /// relative traffic share.
@@ -109,6 +132,21 @@ pub enum TrafficModel {
     /// `clients` closed-loop clients, each re-issuing `think_cycles` after
     /// its previous request completes (or is rejected).
     ClosedLoop { clients: usize, think_cycles: u64 },
+    /// Poisson with a sinusoidal rate envelope: mean rate `rps`, swinging
+    /// by `±amplitude` (0..=1) over `period_cycles`.
+    Diurnal {
+        rps: f64,
+        amplitude: f64,
+        period_cycles: u64,
+    },
+    /// Two-state MMPP: `rps` in the low state, `rps · burst_x` during
+    /// bursts; exponential dwell times with the given means.
+    Mmpp {
+        rps: f64,
+        burst_x: f64,
+        mean_high_cycles: u64,
+        mean_low_cycles: u64,
+    },
 }
 
 impl TrafficModel {
@@ -120,7 +158,99 @@ impl TrafficModel {
                 clients,
                 think_cycles,
             } => format!("closed-loop {clients} clients (think {think_cycles} cyc)"),
+            TrafficModel::Diurnal {
+                rps,
+                amplitude,
+                period_cycles,
+            } => format!("diurnal {rps} rps ±{amplitude} (period {period_cycles} cyc)"),
+            TrafficModel::Mmpp {
+                rps,
+                burst_x,
+                mean_high_cycles,
+                mean_low_cycles,
+            } => format!(
+                "mmpp {rps} rps x{burst_x} bursts (high {mean_high_cycles} cyc / low {mean_low_cycles} cyc)"
+            ),
         }
+    }
+
+    /// Parse a `--traffic` CLI value into an open-loop-family model at the
+    /// given base rate. Grammar: `kind[,key:value,...]` —
+    ///
+    /// * `poisson` (or `open-loop`, or empty): plain Poisson.
+    /// * `diurnal[,amp:A][,period-ms:P]`: sinusoidal envelope, amplitude
+    ///   `A` in 0..=1 (default 0.5), period `P` milliseconds of simulated
+    ///   time (default 20).
+    /// * `flash` (or `mmpp`)`[,x:X][,high-ms:H][,low-ms:L]`: bursts at
+    ///   `X × rps` (default 8) dwelling ~`H` ms (default 1) between calm
+    ///   stretches of ~`L` ms (default 10).
+    pub fn parse(s: &str, rps: f64, clock_mhz: f64) -> Result<TrafficModel> {
+        let ms_to_cycles = |ms: f64| ((ms * clock_mhz * 1e3) as u64).max(1);
+        let mut parts = s.split(',');
+        let kind = parts.next().unwrap_or("").trim();
+        let mut opts: Vec<(&str, f64)> = Vec::new();
+        for p in parts {
+            let p = p.trim();
+            if p.is_empty() {
+                continue;
+            }
+            let Some((k, v)) = p.split_once(':') else {
+                bail!("traffic option '{p}' is not key:value");
+            };
+            let v: f64 = v
+                .trim()
+                .parse()
+                .map_err(|_| anyhow::anyhow!("traffic option '{p}' has a non-numeric value"))?;
+            opts.push((k.trim(), v));
+        }
+        let take = |key: &str, default: f64| -> f64 {
+            opts.iter()
+                .find(|(k, _)| *k == key)
+                .map(|&(_, v)| v)
+                .unwrap_or(default)
+        };
+        let model = match kind {
+            "" | "poisson" | "open-loop" => TrafficModel::OpenLoop { rps },
+            "diurnal" => {
+                let amplitude = take("amp", 0.5);
+                ensure!(
+                    (0.0..=1.0).contains(&amplitude),
+                    "diurnal amp must be in [0, 1], got {amplitude}"
+                );
+                let period_ms = take("period-ms", 20.0);
+                ensure!(period_ms > 0.0, "diurnal period-ms must be > 0");
+                TrafficModel::Diurnal {
+                    rps,
+                    amplitude,
+                    period_cycles: ms_to_cycles(period_ms),
+                }
+            }
+            "flash" | "mmpp" => {
+                let burst_x = take("x", 8.0);
+                ensure!(burst_x >= 1.0, "mmpp burst factor x must be >= 1");
+                let high_ms = take("high-ms", 1.0);
+                let low_ms = take("low-ms", 10.0);
+                ensure!(high_ms > 0.0 && low_ms > 0.0, "mmpp dwell times must be > 0");
+                TrafficModel::Mmpp {
+                    rps,
+                    burst_x,
+                    mean_high_cycles: ms_to_cycles(high_ms),
+                    mean_low_cycles: ms_to_cycles(low_ms),
+                }
+            }
+            other => bail!("unknown traffic model '{other}' (known: poisson, diurnal, flash)"),
+        };
+        // Every provided key must belong to the chosen model.
+        let known: &[&str] = match model {
+            TrafficModel::OpenLoop { .. } => &[],
+            TrafficModel::Diurnal { .. } => &["amp", "period-ms"],
+            TrafficModel::Mmpp { .. } => &["x", "high-ms", "low-ms"],
+            TrafficModel::ClosedLoop { .. } => unreachable!(),
+        };
+        for (k, _) in &opts {
+            ensure!(known.contains(k), "traffic model '{kind}' has no option '{k}'");
+        }
+        Ok(model)
     }
 }
 
@@ -132,6 +262,157 @@ pub fn exp_interarrival(rng: &mut Pcg32, mean_cycles: f64) -> u64 {
     let u = 1.0 - rng.f32() as f64;
     let gap = -u.ln() * mean_cycles;
     (gap.ceil() as u64).max(1)
+}
+
+/// State of one open-loop-family arrival process.
+#[derive(Debug, Clone, Copy)]
+enum Kind {
+    Poisson {
+        mean_cycles: f64,
+    },
+    Diurnal {
+        base_rps: f64,
+        amplitude: f64,
+        period_cycles: f64,
+        clock_hz: f64,
+    },
+    Mmpp {
+        /// Mean gap in the calm state (cycles).
+        mean_low: f64,
+        /// Mean gap during a burst (cycles).
+        mean_high: f64,
+        dwell_low: f64,
+        dwell_high: f64,
+        /// Currently bursting?
+        high: bool,
+        /// Current state holds until this cycle.
+        until: u64,
+    },
+}
+
+/// Stateful arrival sampler for the open-loop traffic family. Base gap
+/// draws come from the caller's legacy arrival stream (so plain Poisson
+/// reproduces the pre-topology sequence exactly); envelope thinning and
+/// dwell draws come from the process's own modulation stream.
+#[derive(Debug)]
+pub struct ArrivalProcess {
+    kind: Kind,
+    mod_rng: Pcg32,
+}
+
+impl ArrivalProcess {
+    /// Build the sampler for a model, or `None` for closed-loop traffic
+    /// (which is driven by per-client completion events instead).
+    pub fn for_model(model: &TrafficModel, clock_hz: f64, seed: u64) -> Option<ArrivalProcess> {
+        let kind = match *model {
+            TrafficModel::ClosedLoop { .. } => return None,
+            TrafficModel::OpenLoop { rps } => Kind::Poisson {
+                mean_cycles: clock_hz / rps.max(1e-9),
+            },
+            TrafficModel::Diurnal {
+                rps,
+                amplitude,
+                period_cycles,
+            } => Kind::Diurnal {
+                base_rps: rps.max(1e-9),
+                amplitude,
+                period_cycles: period_cycles.max(1) as f64,
+                clock_hz,
+            },
+            TrafficModel::Mmpp {
+                rps,
+                burst_x,
+                mean_high_cycles,
+                mean_low_cycles,
+            } => Kind::Mmpp {
+                mean_low: clock_hz / rps.max(1e-9),
+                mean_high: clock_hz / (rps.max(1e-9) * burst_x.max(1.0)),
+                dwell_low: mean_low_cycles.max(1) as f64,
+                dwell_high: mean_high_cycles.max(1) as f64,
+                // Nominally "in a burst" that expired at cycle 0, so the
+                // first transition lands the process in the calm state.
+                high: true,
+                until: 0,
+            },
+        };
+        Some(ArrivalProcess {
+            kind,
+            mod_rng: Pcg32::new(seed, TRAFFIC_MOD_STREAM),
+        })
+    }
+
+    /// The next arrival cycle strictly after `now`. `gap_rng` is the
+    /// fleet's arrival stream.
+    pub fn next_at(&mut self, now: u64, gap_rng: &mut Pcg32) -> u64 {
+        match self.kind {
+            Kind::Poisson { mean_cycles } => now + exp_interarrival(gap_rng, mean_cycles),
+            Kind::Diurnal {
+                base_rps,
+                amplitude,
+                period_cycles,
+                clock_hz,
+            } => {
+                // Lewis–Shedler thinning: propose at the peak rate, accept
+                // proportionally to the instantaneous rate.
+                let peak = base_rps * (1.0 + amplitude);
+                let peak_mean = clock_hz / peak;
+                let mut t = now;
+                loop {
+                    t = t.saturating_add(exp_interarrival(gap_rng, peak_mean));
+                    let phase = t as f64 / period_cycles * std::f64::consts::TAU;
+                    let rate = base_rps * (1.0 + amplitude * phase.sin());
+                    if (self.mod_rng.f32() as f64) * peak <= rate {
+                        return t;
+                    }
+                }
+            }
+            Kind::Mmpp { .. } => self.next_mmpp(now, gap_rng),
+        }
+    }
+
+    /// Exact two-state MMPP sampling. Thanks to memorylessness a gap drawn
+    /// at the current state's rate that crosses the state boundary can be
+    /// truncated at the boundary and redrawn at the new rate without
+    /// biasing the process.
+    fn next_mmpp(&mut self, now: u64, gap_rng: &mut Pcg32) -> u64 {
+        let Kind::Mmpp {
+            mean_low,
+            mean_high,
+            dwell_low,
+            dwell_high,
+            mut high,
+            mut until,
+        } = self.kind
+        else {
+            unreachable!("next_mmpp on a non-MMPP process");
+        };
+        let mut t = now;
+        let at = loop {
+            if t >= until {
+                high = !high;
+                let dwell = if high { dwell_high } else { dwell_low };
+                until = t.saturating_add(exp_interarrival(&mut self.mod_rng, dwell));
+                continue;
+            }
+            let mean = if high { mean_high } else { mean_low };
+            let gap = exp_interarrival(gap_rng, mean);
+            if t.saturating_add(gap) <= until {
+                break t.saturating_add(gap);
+            }
+            // Gap crosses the state flip: advance to the boundary and
+            // redraw at the new state's rate.
+            t = until;
+        };
+        self.kind = Kind::Mmpp {
+            mean_low,
+            mean_high,
+            dwell_low,
+            dwell_high,
+            high,
+            until,
+        };
+        at
+    }
 }
 
 #[cfg(test)]
@@ -196,5 +477,158 @@ mod tests {
         }
         .label()
         .contains("clients"));
+        assert!(TrafficModel::Diurnal {
+            rps: 10.0,
+            amplitude: 0.5,
+            period_cycles: 1000
+        }
+        .label()
+        .contains("diurnal"));
+        assert!(TrafficModel::Mmpp {
+            rps: 10.0,
+            burst_x: 8.0,
+            mean_high_cycles: 10,
+            mean_low_cycles: 100
+        }
+        .label()
+        .contains("mmpp"));
+    }
+
+    #[test]
+    fn parse_covers_the_grammar_and_rejects_junk() {
+        let m = TrafficModel::parse("poisson", 100.0, 500.0).unwrap();
+        assert_eq!(m, TrafficModel::OpenLoop { rps: 100.0 });
+        assert_eq!(
+            TrafficModel::parse("", 50.0, 500.0).unwrap(),
+            TrafficModel::OpenLoop { rps: 50.0 }
+        );
+        let d = TrafficModel::parse("diurnal,amp:0.8,period-ms:40", 100.0, 500.0).unwrap();
+        match d {
+            TrafficModel::Diurnal {
+                rps,
+                amplitude,
+                period_cycles,
+            } => {
+                assert_eq!(rps, 100.0);
+                assert_eq!(amplitude, 0.8);
+                // 40 ms at 500 MHz = 20M cycles.
+                assert_eq!(period_cycles, 20_000_000);
+            }
+            other => panic!("parsed {other:?}"),
+        }
+        let f = TrafficModel::parse("flash,x:4,high-ms:2,low-ms:8", 100.0, 500.0).unwrap();
+        match f {
+            TrafficModel::Mmpp {
+                burst_x,
+                mean_high_cycles,
+                mean_low_cycles,
+                ..
+            } => {
+                assert_eq!(burst_x, 4.0);
+                assert_eq!(mean_high_cycles, 1_000_000);
+                assert_eq!(mean_low_cycles, 4_000_000);
+            }
+            other => panic!("parsed {other:?}"),
+        }
+        // Defaults fill unset keys.
+        assert!(matches!(
+            TrafficModel::parse("flash", 10.0, 500.0).unwrap(),
+            TrafficModel::Mmpp { burst_x, .. } if burst_x == 8.0
+        ));
+        // Junk is rejected.
+        assert!(TrafficModel::parse("stampede", 10.0, 500.0).is_err());
+        assert!(TrafficModel::parse("diurnal,amp:1.5", 10.0, 500.0).is_err());
+        assert!(TrafficModel::parse("diurnal,x:4", 10.0, 500.0).is_err());
+        assert!(TrafficModel::parse("flash,x:abc", 10.0, 500.0).is_err());
+        assert!(TrafficModel::parse("flash,x", 10.0, 500.0).is_err());
+        assert!(TrafficModel::parse("poisson,amp:0.5", 10.0, 500.0).is_err());
+    }
+
+    #[test]
+    fn plain_poisson_process_matches_bare_exp_interarrival() {
+        // The ArrivalProcess wrapper must not perturb the legacy stream:
+        // one gap draw per arrival, nothing from the modulation stream.
+        let model = TrafficModel::OpenLoop { rps: 1000.0 };
+        let clock_hz = 500e6;
+        let mut proc_ = ArrivalProcess::for_model(&model, clock_hz, 9).unwrap();
+        let mut a = Pcg32::new(9, 1);
+        let mut b = Pcg32::new(9, 1);
+        let mut t = 0u64;
+        let mut u = 0u64;
+        for _ in 0..1000 {
+            t = proc_.next_at(t, &mut a);
+            u += exp_interarrival(&mut b, clock_hz / 1000.0);
+            assert_eq!(t, u);
+        }
+    }
+
+    #[test]
+    fn closed_loop_has_no_arrival_process() {
+        let model = TrafficModel::ClosedLoop {
+            clients: 4,
+            think_cycles: 100,
+        };
+        assert!(ArrivalProcess::for_model(&model, 500e6, 1).is_none());
+    }
+
+    #[test]
+    fn mmpp_bursts_raise_the_rate_and_stay_deterministic() {
+        let clock_hz = 500e6;
+        let rps = 1000.0;
+        let model = TrafficModel::Mmpp {
+            rps,
+            burst_x: 10.0,
+            mean_high_cycles: 500_000,
+            mean_low_cycles: 5_000_000,
+        };
+        let run = |seed: u64| {
+            let mut proc_ = ArrivalProcess::for_model(&model, clock_hz, seed).unwrap();
+            let mut rng = Pcg32::new(seed, 1);
+            let mut t = 0u64;
+            let mut arrivals = Vec::new();
+            for _ in 0..20_000 {
+                t = proc_.next_at(t, &mut rng);
+                arrivals.push(t);
+            }
+            arrivals
+        };
+        let a = run(3);
+        assert_eq!(a, run(3), "same seed, same arrival sequence");
+        // Mean rate sits strictly between the calm and burst rates, well
+        // above plain Poisson at `rps`: with ~10% of time bursting at
+        // 10x, the long-run rate is ~1.9x the base.
+        let horizon = *a.last().unwrap();
+        let mean_rate = a.len() as f64 / (horizon as f64 / clock_hz);
+        assert!(
+            mean_rate > rps * 1.3 && mean_rate < rps * 10.0,
+            "long-run mmpp rate {mean_rate} vs base {rps}"
+        );
+        // Gaps are strictly advancing.
+        assert!(a.windows(2).all(|w| w[1] > w[0]));
+    }
+
+    #[test]
+    fn diurnal_keeps_the_base_mean_rate() {
+        let clock_hz = 500e6;
+        let rps = 2000.0;
+        let model = TrafficModel::Diurnal {
+            rps,
+            amplitude: 0.9,
+            // Many full periods over the sampled horizon so the sinusoid
+            // averages out.
+            period_cycles: 2_000_000,
+        };
+        let mut proc_ = ArrivalProcess::for_model(&model, clock_hz, 21).unwrap();
+        let mut rng = Pcg32::new(21, 1);
+        let mut t = 0u64;
+        let n = 30_000;
+        for _ in 0..n {
+            t = proc_.next_at(t, &mut rng);
+        }
+        let mean_rate = n as f64 / (t as f64 / clock_hz);
+        assert!(
+            (mean_rate - rps).abs() < rps * 0.05,
+            "diurnal long-run rate {mean_rate} vs base {rps}"
+        );
     }
 }

@@ -1,7 +1,8 @@
 //! Serving-simulator property tests: conservation (with and without
-//! injected faults), the engine-cycle latency floor, thread-budget
-//! determinism, same-cycle tie-break pins, and the high-load win of
-//! affinity + batching (the ISSUE 4 + ISSUE 6 acceptance criteria).
+//! injected faults, up to 1000-instance racked fleets), the engine-cycle
+//! latency floor, thread-budget determinism, same-cycle tie-break pins,
+//! the calendar-queue/binary-heap equivalence storm, and the high-load
+//! win of affinity + batching (ISSUE 4 + 6 + 7 acceptance criteria).
 
 use vscnn::engine::{Engine, FunctionalBackend, RunOptions};
 use vscnn::experiments::{self, ExpContext};
@@ -28,6 +29,7 @@ fn base_spec(traffic: TrafficModel, policy: DispatchPolicy, batch: BatchPolicy) 
         policy,
         batch,
         queue_cap: 16,
+        racks: 1,
         duration_cycles: 80_000_000,
         clock_mhz: 500.0,
         seed: 20190526,
@@ -214,6 +216,140 @@ fn conservation_over_randomized_fault_specs() {
             ServeReport::new(&spec, &out).to_json().pretty(),
             ServeReport::new(&spec, &again).to_json().pretty(),
             "fault case {case}: replay diverged"
+        );
+    }
+}
+
+#[test]
+fn calendar_queue_is_a_drop_in_for_the_binary_heap() {
+    // ISSUE 7 satellite: the calendar queue must be observationally
+    // identical to the BinaryHeap reference — same (cycle, FIFO-seq)
+    // total order — under randomized storms mixing same-cycle ties,
+    // bucket-spanning jitter, crash-epoch far-future pushes (MTTR-style
+    // jumps that force calendar rebuilds), pops and whole-cycle drains.
+    use vscnn::serve::events::{BinaryHeapQueue, EventQueue};
+    let mut rng = Pcg32::seeded(0xCA1E);
+    for round in 0..8 {
+        let mut cal: EventQueue<u32> = EventQueue::new();
+        let mut heap: BinaryHeapQueue<u32> = BinaryHeapQueue::new();
+        let mut now = 0u64;
+        let mut tag = 0u32;
+        let mut cal_out: Vec<u32> = Vec::new();
+        let mut heap_out: Vec<u32> = Vec::new();
+        for step in 0..3_000 {
+            match rng.below(100) {
+                0..=59 => {
+                    let jitter = match rng.below(10) {
+                        // same-cycle ties: FIFO order is the contract
+                        0..=2 => 0,
+                        3..=6 => rng.below(50) as u64,
+                        // spans several calendar buckets
+                        7..=8 => rng.below(200_000) as u64,
+                        // crash-epoch jump: far past the current day
+                        _ => 1_000_000 + rng.below(4) as u64 * 10_000_000,
+                    };
+                    tag += 1;
+                    cal.push(now + jitter, tag);
+                    heap.push(now + jitter, tag);
+                }
+                60..=84 => {
+                    assert_eq!(cal.peek_cycle(), heap.peek_cycle(), "round {round} step {step}");
+                    let a = cal.pop();
+                    let b = heap.pop();
+                    assert_eq!(a, b, "round {round} step {step}: pop diverged");
+                    if let Some((c, v)) = a {
+                        now = now.max(c);
+                        cal_out.push(v);
+                        heap_out.push(b.unwrap().1);
+                    }
+                }
+                _ => {
+                    // Drain a whole cycle, exactly like the event loop.
+                    assert_eq!(cal.peek_cycle(), heap.peek_cycle(), "round {round} step {step}");
+                    if let Some(c) = heap.peek_cycle() {
+                        let before = cal_out.len();
+                        cal.drain_cycle(c, &mut cal_out);
+                        heap.drain_cycle(c, &mut heap_out);
+                        assert!(cal_out.len() > before, "empty drain at peeked cycle");
+                        now = now.max(c);
+                    }
+                }
+            }
+            assert_eq!(cal.len(), heap.len(), "round {round} step {step}: len");
+        }
+        // Drain both to empty: the full popped sequences must be
+        // byte-identical (order and payloads).
+        while let Some(c) = heap.peek_cycle() {
+            assert_eq!(cal.peek_cycle(), Some(c), "round {round}: final peek");
+            cal.drain_cycle(c, &mut cal_out);
+            heap.drain_cycle(c, &mut heap_out);
+        }
+        assert!(cal.is_empty(), "round {round}: calendar not empty");
+        assert_eq!(cal_out, heap_out, "round {round}: sequences diverged");
+        assert_eq!(cal_out.len(), tag as usize, "round {round}: lost events");
+    }
+}
+
+#[test]
+fn ledger_closes_at_scale_under_bursty_traffic_and_faults() {
+    // ISSUE 7 satellite: the five-bucket conservation ledger must close
+    // at fleet sizes 10 / 100 / 1000 on racked topologies, under MMPP
+    // flash-crowd traffic with crashes, stragglers and request faults,
+    // with timeouts/retries/hedging/shedding all armed — and the counters
+    // must replay bit-identically from the same seed.
+    let toy = ServiceProfile {
+        single_cycles: 400_000,
+        marginal_cycles: 200_000,
+        switch_cycles: 100_000,
+    };
+    for &(n, racks) in &[(10usize, 2usize), (100, 8), (1000, 16)] {
+        // ~2500 rps capacity per instance; base load ~30% with 8x bursts,
+        // so the burst episodes overflow queues and shed/reject.
+        let mut spec = base_spec(
+            TrafficModel::Mmpp {
+                rps: 800.0 * n as f64,
+                burst_x: 8.0,
+                mean_high_cycles: 500_000, // 1 ms at 500 MHz
+                mean_low_cycles: 2_500_000, // 5 ms
+            },
+            DispatchPolicy::Hierarchical,
+            BatchPolicy {
+                max_batch: 8,
+                max_wait_cycles: 100_000,
+            },
+        );
+        spec.instances = default_fleet(n);
+        spec.racks = racks;
+        spec.queue_cap = 8;
+        spec.duration_cycles = 25_000_000; // 50 simulated ms
+        spec.faults = FaultSpec {
+            crash_per_sec: 200.0,
+            mttr_ms: 1.0,
+            straggler_per_sec: 100.0,
+            slowdown: 4.0,
+            straggler_ms: 1.0,
+            req_fault_prob: 0.05,
+        };
+        spec.robust = RobustnessPolicy {
+            timeout_cycles: 2_000_000,
+            max_retries: 1,
+            backoff_cycles: 50_000,
+            hedge_cycles: 400_000,
+            shed: true,
+        };
+        let profiles = vec![vec![toy; n]; spec.tenants.len()];
+
+        let out = simulate(&spec, &profiles);
+        assert_ledger_closes(&out, &format!("fleet {n}"));
+        assert!(out.offered > 0, "fleet {n}: no arrivals");
+        assert!(out.completed > 0, "fleet {n}: nothing completed");
+        assert!(out.crashes > 0, "fleet {n}: no crashes landed");
+
+        let again = simulate(&spec, &profiles);
+        assert_eq!(
+            ServeReport::new(&spec, &out).to_json().pretty(),
+            ServeReport::new(&spec, &again).to_json().pretty(),
+            "fleet {n}: replay diverged"
         );
     }
 }
