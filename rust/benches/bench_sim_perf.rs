@@ -36,7 +36,7 @@ use vscnn::model::init::synthetic_image;
 use vscnn::model::vgg16::vgg16_at;
 use vscnn::pruning::sensitivity::paper_schedule;
 use vscnn::pruning::{prune_vectors, VectorGranularity};
-use vscnn::sim::config::SimConfig;
+use vscnn::sim::config::{Precision, SimConfig};
 use vscnn::sim::scheduler::{simulate_layer, Mode};
 use vscnn::sim::trace::Trace;
 use vscnn::sparse::encode::layer_report;
@@ -217,6 +217,7 @@ fn main() {
                 density_scale: 1.0,
                 threads,
             }),
+            precision: Precision::F32,
         };
         let t0 = std::time::Instant::now();
         let prepared = Arc::new(compile(&net, params, &copts));
@@ -263,6 +264,7 @@ fn main() {
                 density_scale: 1.0,
                 threads,
             }),
+            precision: Precision::F32,
         };
         let engine = Engine::new(Arc::new(compile(&net, params, &copts)));
         let img = synthetic_image(net.input_shape, 7 ^ 0xBEEF);
@@ -303,6 +305,155 @@ fn main() {
         derived.set("speedup_vs_scoped", speedup);
         results.push(r_pool);
         results.push(r_scoped);
+    }
+
+    // 7) ISSUE 8 payload kernels: the dispatching hot loops (SIMD when
+    //    built with `--features simd`, 8-wide unrolled scalar otherwise)
+    //    paired against their plain scalar references. Bit-identical by
+    //    construction (util/simd.rs tests); only the wall clock differs.
+    {
+        use vscnn::util::simd::{
+            add_assign, add_assign_scalar, axpy, axpy_scalar, or_abs_bits, or_abs_bits_scalar,
+        };
+        let n = 1 << 16;
+        let src: Vec<f32> = (0..n).map(|_| rng.f32_range(-1.0, 1.0)).collect();
+        let mut dst = vec![0.0f32; n];
+        let mut bits = vec![0u32; n];
+        // 64 passes per sample keeps each measurement well above timer
+        // resolution; throughput keys land only on the dispatching side
+        // (the scalar references are the comparison series).
+        let mut run_kernel = |name: &str, results: &mut Vec<BenchResult>,
+                              derived: &mut Json, f: &mut dyn FnMut()| {
+            let r = bench(name, 3, 15, || {
+                for _ in 0..64 {
+                    f();
+                }
+            });
+            println!("{}", r.line());
+            if !name.ends_with("-scalar") {
+                let eps = (n as f64) * 64.0 / r.median.as_secs_f64().max(1e-12);
+                derived.set(
+                    &format!("{}_elems_per_sec", &name["kernel/".len()..].replace('-', "_")),
+                    eps,
+                );
+            }
+            results.push(r);
+        };
+        run_kernel("kernel/add-assign", &mut results, &mut derived, &mut || {
+            add_assign(&mut dst, &src)
+        });
+        run_kernel("kernel/axpy", &mut results, &mut derived, &mut || {
+            axpy(&mut dst, 0.5, &src)
+        });
+        run_kernel("kernel/or-abs-bits", &mut results, &mut derived, &mut || {
+            or_abs_bits(&mut bits, &src)
+        });
+        run_kernel("kernel/add-assign-scalar", &mut results, &mut derived, &mut || {
+            add_assign_scalar(&mut dst, &src)
+        });
+        run_kernel("kernel/axpy-scalar", &mut results, &mut derived, &mut || {
+            axpy_scalar(&mut dst, 0.5, &src)
+        });
+        run_kernel("kernel/or-abs-bits-scalar", &mut results, &mut derived, &mut || {
+            or_abs_bits_scalar(&mut bits, &src)
+        });
+        black_box((&dst, &bits));
+        println!();
+    }
+
+    // 8) ISSUE 8 precision axis: VGG-16 @ 32 compiled at each CVF payload
+    //    precision, run under the tiled model. INT16 shares f32's 2-byte
+    //    storage (quantization error only); INT8 halves every payload, so
+    //    both the modeled DRAM bytes and transfer floor shrink.
+    // 9) ISSUE 8 fused strip execution on the f32 engine: conv→conv
+    //    strips stay SRAM-resident where they fit, eliminating the
+    //    consumer's input traffic.
+    {
+        let net = vgg16_at(32);
+        let img = synthetic_image(net.input_shape, 7 ^ 0xBEEF);
+        let prepared_at = |precision: Precision| {
+            let params = vscnn::model::init::synthetic_params(&net, 7, 0.0);
+            let copts = CompileOptions {
+                cols: PAPER_COLS,
+                prune: Some(paper_schedule(&net)),
+                calibration: Some(Calibration {
+                    image: synthetic_image(net.input_shape, 7 ^ 0xCA11),
+                    density_scale: 1.0,
+                    threads,
+                }),
+                precision,
+            };
+            Engine::new(Arc::new(compile(&net, params, &copts)))
+        };
+
+        let mut f32_dram = 0u64;
+        for precision in [Precision::F32, Precision::Int16, Precision::Int8] {
+            let engine = prepared_at(precision);
+            let mut opts = RunOptions::new(SimConfig::paper_8_7_3().with_precision(precision));
+            opts.sim.threads = threads;
+            let label = precision.label();
+            let r = bench(&format!("precision/vgg16-32-{label}"), 1, 5, || {
+                black_box(engine.run_image(&img, &opts).expect("engine run").totals.cycles);
+            });
+            println!("{}", r.line());
+            let ips = 1.0 / r.median.as_secs_f64().max(1e-12);
+            derived.set(&format!("precision_{label}_images_per_sec"), ips);
+            let report = engine.run_image(&img, &opts).expect("engine run");
+            let dram = report.totals.dram.input_read
+                + report.totals.dram.weight_read
+                + report.totals.dram.output_write;
+            if precision == Precision::F32 {
+                f32_dram = dram;
+            } else {
+                derived.set(
+                    &format!("{label}_dram_bytes_vs_f32"),
+                    dram as f64 / f32_dram.max(1) as f64,
+                );
+            }
+            println!(
+                "precision {label}: {ips:.2} images/sec, {dram} modeled DRAM bytes, \
+                 transfer {} cycles",
+                report.totals.transfer_cycles
+            );
+            results.push(r);
+        }
+        println!();
+
+        let engine = prepared_at(Precision::F32);
+        let mut opts = RunOptions::new(SimConfig::paper_8_7_3());
+        opts.sim.threads = threads;
+        let r_plain = bench("fused/vgg16-32-off", 1, 5, || {
+            black_box(engine.run_image(&img, &opts).expect("engine run").totals.cycles);
+        });
+        println!("{}", r_plain.line());
+        let plain = engine.run_image(&img, &opts).expect("engine run");
+        opts.fuse = true;
+        let r_fused = bench("fused/vgg16-32-on", 1, 5, || {
+            black_box(engine.run_image(&img, &opts).expect("engine run").totals.cycles);
+        });
+        println!("{}", r_fused.line());
+        let fused = engine.run_image(&img, &opts).expect("engine run");
+        let ips = 1.0 / r_fused.median.as_secs_f64().max(1e-12);
+        derived.set("fused_images_per_sec", ips);
+        derived.set("fused_layers", fused.fused_layers);
+        derived.set(
+            "fused_transfer_cycles_saved",
+            plain.totals.transfer_cycles.saturating_sub(fused.totals.transfer_cycles),
+        );
+        derived.set(
+            "fused_modeled_cycles_ratio",
+            fused.totals.cycles as f64 / plain.totals.cycles.max(1) as f64,
+        );
+        println!(
+            "fusion (vgg16-32): {} layers fused, transfer {} -> {} cycles, total {} -> {}\n",
+            fused.fused_layers,
+            plain.totals.transfer_cycles,
+            fused.totals.transfer_cycles,
+            plain.totals.cycles,
+            fused.totals.cycles
+        );
+        results.push(r_plain);
+        results.push(r_fused);
     }
 
     let path = "BENCH_sim_perf.json";

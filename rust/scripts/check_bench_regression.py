@@ -2,7 +2,8 @@
 """Diff freshly generated bench reports against their committed baselines.
 
 Usage: check_bench_regression.py NEW.json BASELINE.json [NEW2.json BASELINE2.json ...]
-                                 [--threshold 0.10] [--strict]
+                                 [--threshold 0.10] [--derived-threshold X]
+                                 [--strict] [--strict-derived]
 
 Takes one or more NEW/BASELINE pairs and compares each pair of
 `{"results": [...], "derived": {...}}` documents written by
@@ -10,17 +11,21 @@ Takes one or more NEW/BASELINE pairs and compares each pair of
 `vscnn exp serve-scale` (`BENCH_serve_scale.json`):
 
 * per-series `median_ns` — warns when a series got more than THRESHOLD
-  slower than the committed run;
+  slower than the committed run (and notes the ones that got faster);
 * throughput-style `derived` keys (anything ending in `_per_sec` plus
   `speedup_vs_scoped` and the `functional_speedup_*` family) — warns when
-  one dropped by more than THRESHOLD.
+  one dropped by more than the derived threshold (default: the series
+  threshold), and notes improvements.
 
 A missing NEW or BASELINE file skips that pair with a note (first-PR
 bootstrap: the baseline does not exist yet).
 
 Warn-only by design: bench hosts differ, so CI prints the table and the
-warnings but never fails the build on them (pass --strict to exit 1 on
-warnings instead, for local gating on one machine).
+warnings but never fails the build on them. Two gating modes exist:
+`--strict` exits 1 on any warning (local gating on one machine);
+`--strict-derived` exits 1 only when a *derived throughput key* dropped —
+CI runs that one with `--derived-threshold 0.25`, a band loose enough for
+shared runners while still catching real throughput collapses.
 """
 
 import argparse
@@ -50,11 +55,11 @@ def throughput_keys(derived):
     return out
 
 
-def compare_pair(new_path, base_path, threshold):
-    """Print the comparison table for one NEW/BASELINE pair; return the
-    list of warning strings."""
+def compare_pair(new_path, base_path, threshold, derived_threshold):
+    """Print the comparison table for one NEW/BASELINE pair; return
+    (series_warnings, derived_warnings, improvements)."""
     new, base = load(new_path), load(base_path)
-    warnings = []
+    series_warnings, derived_warnings, improvements = [], [], []
 
     print(f"== {new_path} vs {base_path} ==")
     print(f"{'series':44} {'baseline':>12} {'new':>12} {'ratio':>7}")
@@ -66,7 +71,12 @@ def compare_pair(new_path, base_path, threshold):
         flag = ""
         if ratio > 1.0 + threshold:
             flag = "  <-- SLOWER"
-            warnings.append(f"{new_path}: {name}: median {ratio:.2f}x the baseline")
+            series_warnings.append(
+                f"{new_path}: {name}: median {ratio:.2f}x the baseline")
+        elif ratio < 1.0 - threshold:
+            flag = "  <-- FASTER"
+            improvements.append(
+                f"{new_path}: {name}: median down to {ratio:.2f}x the baseline")
         print(f"{name:44} {base_med[name]:>12} {new_med[name]:>12} {ratio:>6.2f}x{flag}")
 
     new_thr = throughput_keys(new.get("derived", {}))
@@ -76,11 +86,16 @@ def compare_pair(new_path, base_path, threshold):
             continue
         ratio = new_thr[key] / base_thr[key]
         flag = ""
-        if ratio < 1.0 - threshold:
+        if ratio < 1.0 - derived_threshold:
             flag = "  <-- THROUGHPUT DROP"
-            warnings.append(f"{new_path}: derived.{key}: {ratio:.2f}x the baseline")
+            derived_warnings.append(
+                f"{new_path}: derived.{key}: {ratio:.2f}x the baseline")
+        elif ratio > 1.0 + derived_threshold:
+            flag = "  <-- IMPROVED"
+            improvements.append(
+                f"{new_path}: derived.{key}: up to {ratio:.2f}x the baseline")
         print(f"derived.{key:36} {base_thr[key]:>12.3f} {new_thr[key]:>12.3f} {ratio:>6.2f}x{flag}")
-    return warnings
+    return series_warnings, derived_warnings, improvements
 
 
 def main():
@@ -88,33 +103,56 @@ def main():
     ap.add_argument("pairs", nargs="+", metavar="NEW.json BASELINE.json",
                     help="one or more NEW BASELINE file pairs")
     ap.add_argument("--threshold", type=float, default=0.10,
-                    help="relative regression that triggers a warning (default 0.10)")
+                    help="relative series regression that triggers a warning "
+                         "(default 0.10)")
+    ap.add_argument("--derived-threshold", type=float, default=None,
+                    help="relative drop in a derived throughput key that "
+                         "triggers a warning (default: --threshold)")
     ap.add_argument("--strict", action="store_true",
                     help="exit 1 when any warning fires")
+    ap.add_argument("--strict-derived", action="store_true",
+                    help="exit 1 only when a derived throughput key dropped "
+                         "(series stay warn-only)")
     args = ap.parse_args()
+    derived_threshold = (args.threshold if args.derived_threshold is None
+                         else args.derived_threshold)
 
     if len(args.pairs) % 2 != 0:
         ap.error("expected an even number of files (NEW BASELINE pairs), "
                  f"got {len(args.pairs)}")
 
-    warnings = []
+    series_warnings, derived_warnings, improvements = [], [], []
     for new_path, base_path in zip(args.pairs[::2], args.pairs[1::2]):
         missing = [p for p in (new_path, base_path) if not os.path.exists(p)]
         if missing:
             print(f"== {new_path} vs {base_path} ==")
             print(f"skipped: missing {', '.join(missing)} (no baseline yet?)")
             continue
-        warnings.extend(compare_pair(new_path, base_path, args.threshold))
+        s, d, i = compare_pair(new_path, base_path, args.threshold,
+                               derived_threshold)
+        series_warnings.extend(s)
+        derived_warnings.extend(d)
+        improvements.extend(i)
 
+    if improvements:
+        print(f"\nIMPROVED: {len(improvements)} series/keys beat the baseline:")
+        for i in improvements:
+            print(f"  + {i}")
+
+    warnings = series_warnings + derived_warnings
     if warnings:
-        print(f"\nWARNING: {len(warnings)} series regressed more than "
-              f"{args.threshold:.0%}:", file=sys.stderr)
+        print(f"\nWARNING: {len(warnings)} series regressed "
+              f"(series threshold {args.threshold:.0%}, derived threshold "
+              f"{derived_threshold:.0%}):", file=sys.stderr)
         for w in warnings:
             print(f"  - {w}", file=sys.stderr)
         if args.strict:
             return 1
+        if args.strict_derived and derived_warnings:
+            return 1
     else:
-        print(f"\nOK: no series regressed more than {args.threshold:.0%}.")
+        print(f"\nOK: no series regressed more than {args.threshold:.0%} "
+              f"(derived: {derived_threshold:.0%}).")
     return 0
 
 

@@ -62,7 +62,10 @@ pub fn dense_tile_demands(
             let blocks = (c_in * strips.len()) as u64;
             let compute = blocks * (w as u64) * (kw as u64) + blocks * cfg.context_switch_cycles;
             let mut input_bytes = 0u64;
-            if g == 0 || !input_resident {
+            // Fused strip execution leaves the producing layer's output
+            // resident, so the dense machine is granted the same zero
+            // input traffic as the sparse flow (floors stay comparable).
+            if !cfg.fused_input_resident && (g == 0 || !input_resident) {
                 for s in strips {
                     let rows = ((s + 1) * r).min(h).saturating_sub(s * r);
                     input_bytes += (c_in * rows * w * bpe) as u64;

@@ -209,6 +209,47 @@ mod tests {
     }
 
     #[test]
+    fn precision_and_fuse_flags_parse_in_every_shape() {
+        // `--precision` is a value flag, `--fuse` a bare boolean; exercise
+        // the exact shapes `vscnn simulate`/`exp` use.
+        let cli = parse(&["simulate", "--precision", "int8", "--fuse"]);
+        assert_eq!(cli.get_value("precision").unwrap(), Some("int8"));
+        assert!(cli.get_bool("fuse"));
+        let eq = parse(&["exp", "headline", "--precision=int16"]);
+        assert_eq!(eq.get_value("precision").unwrap(), Some("int16"));
+        assert!(!eq.get_bool("fuse"));
+        // Both absent -> f32 exact path, fusion off.
+        let off = parse(&["simulate"]);
+        assert_eq!(off.get_value("precision").unwrap(), None);
+        assert!(!off.get_bool("fuse"));
+        // Trailing `--precision` with no value is a clean error.
+        let bare = parse(&["simulate", "--precision"]);
+        let err = bare.get_value("precision").unwrap_err();
+        assert!(err.to_string().contains("expects a value"));
+    }
+
+    #[test]
+    fn unknown_precision_names_rejected_helpfully() {
+        // The CLI layer hands the string through; Precision::parse is the
+        // gate — unknown spellings yield None so main can name the valid
+        // set in its error instead of silently defaulting.
+        use crate::sim::config::Precision;
+        let cli = parse(&["simulate", "--precision", "bf16"]);
+        let s = cli.get_value("precision").unwrap().unwrap();
+        assert!(Precision::parse(s).is_none());
+        for (ok, p) in [
+            ("f32", Precision::F32),
+            ("fp32", Precision::F32),
+            ("int16", Precision::Int16),
+            ("i16", Precision::Int16),
+            ("int8", Precision::Int8),
+            ("i8", Precision::Int8),
+        ] {
+            assert_eq!(Precision::parse(ok), Some(p), "{ok}");
+        }
+    }
+
+    #[test]
     fn value_flag_before_another_flag_errors_cleanly() {
         let cli = parse(&["simulate", "--res", "--trace"]);
         assert!(cli.get_bool("trace"));

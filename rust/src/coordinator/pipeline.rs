@@ -109,6 +109,7 @@ mod tests {
             sim: cfg,
             backend: FunctionalBackend::Golden,
             verify_dataflow: true,
+            fuse: false,
         }
     }
 

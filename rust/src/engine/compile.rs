@@ -5,7 +5,7 @@
 use crate::model::init::Params;
 use crate::model::{LayerKind, Network};
 use crate::pruning;
-use crate::sim::config::SimConfig;
+use crate::sim::config::{Precision, SimConfig};
 use crate::sim::mapping::{compile_conv, CompiledConv};
 use crate::sim::sram::TilePlan;
 use crate::sparse::encode::{weight_side_stats, WeightSideStats};
@@ -41,6 +41,13 @@ pub struct CompileOptions {
     pub prune: Option<BTreeMap<String, f64>>,
     /// Then calibrate activations against a held-out image.
     pub calibration: Option<Calibration>,
+    /// CVF payload precision: the fixed-point modes fake-quantize each
+    /// layer's (pruned, calibrated) weights against a per-layer
+    /// calibrated scale before encoding, so the compiled CVF payloads
+    /// are exactly what the narrow datapath holds. Biases stay f32
+    /// (accumulators are wide in fixed-point accelerators).
+    /// [`Precision::F32`] is the pinned exact path.
+    pub precision: Precision,
 }
 
 impl CompileOptions {
@@ -50,6 +57,7 @@ impl CompileOptions {
             cols,
             prune: None,
             calibration: None,
+            precision: Precision::F32,
         }
     }
 }
@@ -122,8 +130,12 @@ pub struct PreparedNetwork {
     pub cols: usize,
     /// Compiled conv layers by layer name.
     pub layers: BTreeMap<String, Arc<CompiledLayer>>,
-    /// Overall conv weight density after pruning/calibration.
+    /// Overall conv weight density after pruning/calibration (and, under
+    /// a fixed-point precision, after weight quantization — small values
+    /// rounding to zero count as zeros, like the hardware sees them).
     pub weight_density: f64,
+    /// CVF payload precision the weights were compiled at.
+    pub precision: Precision,
 }
 
 impl PreparedNetwork {
@@ -163,6 +175,7 @@ impl PreparedNetwork {
             cols,
             layers,
             weight_density: self.weight_density,
+            precision: self.precision,
         }
     }
 }
@@ -186,6 +199,22 @@ pub fn compile(net: &Network, mut params: Params, opts: &CompileOptions) -> Prep
             cal.density_scale,
             cal.threads,
         );
+    }
+
+    // Fixed-point payloads: fake-quantize each conv layer's (pruned,
+    // calibrated) weights against its calibrated scale *before* density
+    // stats and CVF encoding — the compiled payloads, the zero pattern
+    // and therefore the timing model all reflect what the narrow
+    // datapath holds. No-op at F32 (the pinned exact path).
+    if opts.precision != Precision::F32 {
+        for lp in params.values_mut() {
+            if lp.weight.ndim() == 4 {
+                crate::sparse::vector_format::fake_quantize_precision(
+                    lp.weight.data_mut(),
+                    opts.precision,
+                );
+            }
+        }
     }
 
     // Overall conv weight density of the artifact that will be executed
@@ -253,6 +282,7 @@ pub fn compile(net: &Network, mut params: Params, opts: &CompileOptions) -> Prep
         cols: opts.cols,
         layers,
         weight_density,
+        precision: opts.precision,
     }
 }
 
@@ -329,6 +359,49 @@ mod tests {
         let plan = cl.tile_plan(&tiny);
         assert_eq!(plan.strips_per_tile, 1);
         assert_eq!(plan.tiles_per_group, 2);
+    }
+
+    #[test]
+    fn quantized_compile_puts_payloads_on_the_grid() {
+        let net = tiny_vgg(8);
+        for precision in [Precision::Int16, Precision::Int8] {
+            let params = synthetic_params(&net, 3, 0.0);
+            let mut opts = CompileOptions::new(PAPER_COLS);
+            opts.prune = Some(flat_schedule(&net, 0.5));
+            opts.precision = precision;
+            let prepared = compile(&net, params, &opts);
+            assert_eq!(prepared.precision, precision);
+            let exact = compile(&net, synthetic_params(&net, 3, 0.0), &{
+                let mut o = CompileOptions::new(PAPER_COLS);
+                o.prune = Some(flat_schedule(&net, 0.5));
+                o
+            });
+            // Rounding can only zero values, never create new nonzeros.
+            assert!(prepared.weight_density <= exact.weight_density + 1e-12);
+            for name in net.conv_layer_names() {
+                let cl = &prepared.layers[name];
+                let qmax = precision.qmax().unwrap();
+                let max_abs = cl
+                    .weight
+                    .data()
+                    .iter()
+                    .fold(0.0f32, |m, &x| m.max(x.abs()));
+                assert!(max_abs > 0.0, "{name}: all-zero after quantization");
+                // Every compiled weight sits on some uniform grid whose
+                // step divides the observed magnitude range into at most
+                // qmax levels (per-layer calibrated scale).
+                let step = max_abs / qmax;
+                for &x in cl.weight.data() {
+                    let q = x / step;
+                    assert!(
+                        (q - q.round()).abs() < 1e-2,
+                        "{name}: {x} off the {step} grid"
+                    );
+                }
+            }
+            // The recompile keeps the precision tag.
+            assert_eq!(prepared.recompiled(4).precision, precision);
+        }
     }
 
     #[test]

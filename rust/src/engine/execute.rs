@@ -6,7 +6,7 @@ use super::compile::{CompiledLayer, PreparedNetwork};
 use crate::baselines::{ideal_speedups, ideal_speedups_mem, SpeedupSeries};
 use crate::model::LayerKind;
 use crate::runtime::Runtime;
-use crate::sim::config::{MemModel, SimConfig};
+use crate::sim::config::{MemModel, Precision, SimConfig};
 use crate::sim::mapping::simulate_compiled;
 use crate::sim::postproc;
 use crate::sim::scheduler::Mode;
@@ -94,6 +94,15 @@ pub struct RunOptions {
     /// Also run the simulator's own functional dataflow per layer and
     /// assert it matches the backend (expensive; tests/small runs only).
     pub verify_dataflow: bool,
+    /// Fused strip execution (CLI `--fuse`): when a conv layer's input is
+    /// the immediately preceding conv's output (no pooling in between)
+    /// and the whole activation fits the input SRAM, the strip stays
+    /// resident across the layer boundary and the consumer is timed with
+    /// zero input DRAM traffic ([`SimConfig::fused_input_resident`]).
+    /// Functional outputs are unchanged — fusion only eliminates modeled
+    /// transfers — and it only applies under [`MemModel::Tiled`] (the
+    /// ideal model has no transfers to eliminate).
+    pub fuse: bool,
 }
 
 impl RunOptions {
@@ -102,6 +111,7 @@ impl RunOptions {
             sim,
             backend: FunctionalBackend::Im2colMt(crate::util::default_threads()),
             verify_dataflow: false,
+            fuse: false,
         }
     }
 }
@@ -116,6 +126,12 @@ pub struct NetworkReport {
     pub layers: Vec<LayerRecord>,
     pub totals: SimStats,
     pub total_dense_cycles: u64,
+    /// CVF payload precision the run was timed and executed at.
+    pub precision: Precision,
+    /// Conv layers that executed fused (input strip resident across the
+    /// layer boundary — zero input DRAM traffic); `0` unless
+    /// [`RunOptions::fuse`] was set under the tiled model.
+    pub fused_layers: usize,
     /// Cycles needed to move the run's *total* DRAM traffic
     /// (`totals.dram.transfer_cycles(bandwidth)`) — the roofline memory
     /// axis. Counted from the raw byte totals (no raw-format escape) and
@@ -215,6 +231,8 @@ impl NetworkReport {
         o.set("network", self.network.as_str())
             .set("config", self.config_label.as_str())
             .set("mem_model", self.mem_model.label())
+            .set("precision", self.precision.label())
+            .set("fused_layers", self.fused_layers)
             .set("overall_speedup", series.ours)
             .set("overall_ideal_vector", series.ideal_vector)
             .set("overall_ideal_fine", series.ideal_fine)
@@ -264,9 +282,22 @@ impl Engine {
         );
         assert_eq!(input.shape(), &net.input_shape, "input shape mismatch");
         let mut act = input.clone();
+        // Fixed-point payloads: activations are fake-quantized at layer
+        // boundaries (here: the network input; below: every conv output)
+        // against per-tensor calibrated scales, mirroring the weight
+        // quantization the compile phase applied. No-op at F32.
+        let precision = opts.sim.precision;
+        if precision != Precision::F32 {
+            crate::sparse::vector_format::fake_quantize_precision(act.data_mut(), precision);
+        }
         let mut layers = Vec::new();
         let mut totals = SimStats::default();
         let mut total_dense = 0u64;
+        let mut fused_layers = 0usize;
+        // Fusion eligibility tracker: true when `act` is the immediately
+        // preceding conv's output, still strip-shaped (pooling re-stages
+        // the activation through the output path, breaking residency).
+        let mut prev_was_conv = false;
 
         for layer in &net.layers {
             match &layer.kind {
@@ -277,13 +308,28 @@ impl Engine {
                         .get(&layer.name)
                         .with_context(|| format!("missing compiled layer {}", layer.name))?;
 
+                    // --- fused strip execution (ISSUE 8) ----------------
+                    // The producing conv's output strip stays resident in
+                    // input SRAM iff the whole (dense) activation fits;
+                    // the consumer is then timed with zero input DRAM
+                    // traffic, on ours *and* on every baseline.
+                    let act_bytes =
+                        act.shape().iter().product::<usize>() * opts.sim.sram.bytes_per_elem;
+                    let fused = opts.fuse
+                        && opts.sim.mem_model == MemModel::Tiled
+                        && prev_was_conv
+                        && act_bytes <= opts.sim.sram.input_bytes;
+                    let mut lsim = opts.sim;
+                    lsim.fused_input_resident = fused;
+                    fused_layers += usize::from(fused);
+
                     // --- timing (vector-sparse flow) --------------------
                     let mut trace = Trace::disabled();
                     let res = simulate_compiled(
                         &act,
                         &cl.conv,
                         Some(cl.bias.as_slice()),
-                        &opts.sim,
+                        &lsim,
                         Mode::VectorSparse,
                         false,
                         &mut trace,
@@ -299,7 +345,7 @@ impl Engine {
                         MemModel::Ideal => ideal_speedups(&density),
                         MemModel::Tiled => ideal_speedups_mem(
                             &density,
-                            &opts.sim,
+                            &lsim,
                             res.dense_cycles,
                             res.stats.transfer_cycles,
                         ),
@@ -313,7 +359,7 @@ impl Engine {
                             &act,
                             &cl.conv,
                             Some(cl.bias.as_slice()),
-                            &opts.sim,
+                            &lsim,
                             Mode::VectorSparse,
                             true,
                             &mut tr,
@@ -328,6 +374,18 @@ impl Engine {
                     }
 
                     // --- post-processing (ReLU + zero detection) --------
+                    // Quantize the layer's output at the boundary first
+                    // (fixed-point modes), so the zero detection, the
+                    // compressed write-back and the next layer all see
+                    // the narrow activations. ReLU and maxpool preserve
+                    // the grid (they only select or zero values).
+                    let mut out = out;
+                    if precision != Precision::F32 {
+                        crate::sparse::vector_format::fake_quantize_precision(
+                            out.data_mut(),
+                            precision,
+                        );
+                    }
                     let post = postproc::postprocess(out, opts.sim.pe.rows);
                     let mut stats = res.stats;
                     if let Some(va) = &post.compressed {
@@ -353,6 +411,7 @@ impl Engine {
                     total_dense += record.dense_cycles;
                     layers.push(record);
                     act = post.output;
+                    prev_was_conv = true;
                 }
                 LayerKind::Relu => {
                     // ReLU already applied by the conv post-processing;
@@ -360,6 +419,9 @@ impl Engine {
                 }
                 LayerKind::MaxPool2 => {
                     act = maxpool2x2(&act);
+                    // Pooling re-stages the activation; the conv→conv
+                    // strip residency is broken.
+                    prev_was_conv = false;
                 }
                 LayerKind::Linear { .. } => {
                     // FC head is out of the accelerator evaluation scope.
@@ -375,6 +437,8 @@ impl Engine {
             layers,
             totals,
             total_dense_cycles: total_dense,
+            precision,
+            fused_layers,
             dram_floor_cycles,
         })
     }
@@ -455,6 +519,7 @@ mod tests {
             sim: cfg,
             backend: FunctionalBackend::Golden,
             verify_dataflow: true,
+            fuse: false,
         }
     }
 
@@ -533,6 +598,95 @@ mod tests {
         assert!(ws > 0);
         // Weight payloads are a strict subset of the total DRAM traffic.
         assert!(ws <= report.totals.dram.transfer_cycles(bw));
+    }
+
+    /// Fused-vs-unfused equivalence pin: fusion eliminates modeled input
+    /// transfers only — every functional field (densities, outputs,
+    /// compute work) is exactly equal, input DRAM traffic drops, and
+    /// cycles never increase.
+    #[test]
+    fn fused_run_pins_functional_outputs_and_drops_input_traffic() {
+        let (p, img) = prepared(26);
+        let engine = Engine::new(p);
+        let mut opts = small_opts();
+        opts.verify_dataflow = false;
+        let plain = engine.run_image(&img, &opts).unwrap();
+        opts.fuse = true;
+        let fused = engine.run_image(&img, &opts).unwrap();
+
+        // tiny_vgg: conv pairs inside each block share residency, so at
+        // least one layer must fuse at these tiny shapes.
+        assert!(fused.fused_layers > 0, "no layer fused");
+        assert_eq!(plain.fused_layers, 0);
+        assert_eq!(fused.layers.len(), plain.layers.len());
+        for (f, u) in fused.layers.iter().zip(&plain.layers) {
+            // Functional pin: exact equality on everything the dataflow
+            // computes.
+            assert_eq!(f.name, u.name);
+            assert_eq!(f.density.input_elem, u.density.input_elem);
+            assert_eq!(f.density.work_vec, u.density.work_vec);
+            assert_eq!(f.output_density_elem, u.output_density_elem);
+            assert_eq!(f.dense_cycles, u.dense_cycles);
+            assert_eq!(f.sparse.compute_cycles, u.sparse.compute_cycles);
+            // Timing: eliminating transfers can only help.
+            assert!(f.sparse.cycles <= u.sparse.cycles, "{}", f.name);
+            assert!(f.sparse.dram.input_read <= u.sparse.dram.input_read);
+        }
+        assert!(fused.totals.dram.input_read < plain.totals.dram.input_read);
+        assert!(fused.totals.cycles <= plain.totals.cycles);
+        // The first conv can never fuse (its input comes from DRAM).
+        assert!(fused.layers[0].sparse.dram.input_read > 0);
+    }
+
+    #[test]
+    fn fuse_is_inert_under_ideal_memory_model() {
+        let (p, img) = prepared(27);
+        let engine = Engine::new(p);
+        let mut opts = small_opts();
+        opts.verify_dataflow = false;
+        opts.sim.mem_model = MemModel::Ideal;
+        let plain = engine.run_image(&img, &opts).unwrap();
+        opts.fuse = true;
+        let fused = engine.run_image(&img, &opts).unwrap();
+        assert_eq!(fused.fused_layers, 0);
+        assert_eq!(fused.totals.cycles, plain.totals.cycles);
+    }
+
+    /// An int8 run executes end to end: the narrower payloads shrink the
+    /// modeled traffic, and the dataflow verification passes against the
+    /// quantized backend (both sides see the same narrow values).
+    #[test]
+    fn int8_run_shrinks_traffic_and_verifies_dataflow() {
+        let net = tiny_vgg(8);
+        let img = synthetic_image(net.input_shape, 31);
+        let build = |precision| {
+            let mut params = synthetic_params(&net, 31, 0.0);
+            pruning::prune_network_vectors(&mut params, &flat_schedule(&net, 0.4));
+            let mut copts = CompileOptions::new(3);
+            copts.precision = precision;
+            Arc::new(compile(&net, params, &copts))
+        };
+        let mut opts = small_opts(); // verify_dataflow = true
+        let f32_report = Engine::new(build(Precision::F32))
+            .run_image(&img, &opts)
+            .unwrap();
+        opts.sim = opts.sim.with_precision(Precision::Int8);
+        let int8_report = Engine::new(build(Precision::Int8))
+            .run_image(&img, &opts)
+            .unwrap();
+        assert_eq!(int8_report.precision, Precision::Int8);
+        assert_eq!(f32_report.precision, Precision::F32);
+        // Half-width payloads: strictly less DRAM traffic than the f32
+        // (16-bit-modeled) run, on the input and weight streams alike.
+        assert!(
+            int8_report.totals.dram.input_read < f32_report.totals.dram.input_read,
+            "int8 {} !< f32 {}",
+            int8_report.totals.dram.input_read,
+            f32_report.totals.dram.input_read
+        );
+        assert!(int8_report.totals.dram.weight_read < f32_report.totals.dram.weight_read);
+        let j = int8_report.to_json();
+        assert_eq!(j.get("precision").unwrap().as_str(), Some("int8"));
     }
 
     #[test]

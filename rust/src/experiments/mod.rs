@@ -64,6 +64,14 @@ pub struct ExpContext {
     /// Cap on the `serve-scale` fleet-size grid (CLI `--max-fleet`;
     /// `None` = full sweep to 10k instances).
     pub max_fleet: Option<usize>,
+    /// CVF payload precision (CLI `--precision`): `F32` (default, the
+    /// pinned exact path), `Int16` or `Int8` fixed point with per-layer
+    /// calibrated scales and precision-scaled memory floors.
+    pub precision: crate::sim::config::Precision,
+    /// Fused strip execution (CLI `--fuse`): keep conv→conv activation
+    /// strips resident in SRAM where they fit, eliminating the
+    /// consumer's input DRAM traffic under the tiled model.
+    pub fuse: bool,
 }
 
 impl Default for ExpContext {
@@ -80,6 +88,8 @@ impl Default for ExpContext {
             artifacts_dir: None,
             mem_model: crate::sim::config::MemModel::Tiled,
             max_fleet: None,
+            precision: crate::sim::config::Precision::F32,
+            fuse: false,
         }
     }
 }

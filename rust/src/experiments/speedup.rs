@@ -151,6 +151,9 @@ pub fn run_headline(ctx: &ExpContext) -> Result<ExpOutput> {
                 })
                 .collect(),
         );
+        // Per-image fusion counts are identical (eligibility is
+        // shape-driven), so image 0 is representative.
+        let fused_layers = reports.first().map(|r| r.fused_layers).unwrap_or(0);
         let mut o = Json::obj();
         o.set("speedup", ours)
             .set("ideal_vector", iv)
@@ -160,6 +163,8 @@ pub fn run_headline(ctx: &ExpContext) -> Result<ExpOutput> {
             .set("memory_bound_layer_frac", mem_frac)
             .set("effective_bw_util", bw_util)
             .set("mem_model", ctx.mem_model.label())
+            .set("precision", ctx.precision.label())
+            .set("fused_layers", fused_layers)
             .set("layers", layers)
             .set("paper_speedup", paper_speedup)
             .set("paper_vector_skip_efficiency", paper_veff)

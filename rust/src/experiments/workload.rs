@@ -37,8 +37,12 @@ pub fn prepared(ctx: &ExpContext) -> Result<Arc<PreparedNetwork>> {
     type Slot = Arc<Mutex<Option<Arc<PreparedNetwork>>>>;
     static CACHE: OnceLock<Mutex<HashMap<String, Slot>>> = OnceLock::new();
     let key = format!(
-        "{} res{} seed{} shift{}",
-        ctx.net, ctx.res, ctx.seed, ctx.bias_shift
+        "{} res{} seed{} shift{} prec:{}",
+        ctx.net,
+        ctx.res,
+        ctx.seed,
+        ctx.bias_shift,
+        ctx.precision.label()
     );
     let slot: Slot = {
         let cache = CACHE.get_or_init(|| Mutex::new(HashMap::new()));
@@ -65,6 +69,7 @@ pub fn prepared(ctx: &ExpContext) -> Result<Arc<PreparedNetwork>> {
             density_scale,
             threads: ctx.threads,
         }),
+        precision: ctx.precision,
     };
     let p = Arc::new(compile(&net, params, &opts));
     *slot = Some(p.clone());
@@ -98,13 +103,18 @@ pub fn options(ctx: &ExpContext, sim: SimConfig) -> Result<RunOptions> {
     // (parallel functional dataflow + group-timing fan-out), and the
     // context's memory model wins over whatever the config carried
     // (the CLI's `--mem-model` flag flows in through the context).
+    // The precision axis rides the same channel: `--precision` retunes the
+    // config's storage width (memory floors scale with the payload bytes)
+    // and `--fuse` turns on conv→conv strip residency in the engine.
     let mut sim = sim;
     sim.threads = ctx.threads;
     sim.mem_model = ctx.mem_model;
+    let sim = sim.with_precision(ctx.precision);
     Ok(RunOptions {
         sim,
         backend,
         verify_dataflow: false,
+        fuse: ctx.fuse,
     })
 }
 
@@ -118,7 +128,7 @@ pub fn run_config(ctx: &ExpContext, sim: SimConfig) -> Result<Vec<NetworkReport>
     static CACHE: OnceLock<Mutex<HashMap<String, Vec<NetworkReport>>>> = OnceLock::new();
 
     let key = format!(
-        "{} res{} seed{} img{} shift{} {} mem:{} pjrt:{}",
+        "{} res{} seed{} img{} shift{} {} mem:{} prec:{} fuse:{} pjrt:{}",
         ctx.net,
         ctx.res,
         ctx.seed,
@@ -126,6 +136,8 @@ pub fn run_config(ctx: &ExpContext, sim: SimConfig) -> Result<Vec<NetworkReport>
         ctx.bias_shift,
         sim.pe.label(),
         ctx.mem_model.label(),
+        ctx.precision.label(),
+        ctx.fuse,
         ctx.artifacts_dir.as_deref().unwrap_or("-"),
     );
     let cache = CACHE.get_or_init(|| Mutex::new(HashMap::new()));

@@ -1,3 +1,9 @@
+// The `simd` feature opts the hot-path kernels (util/simd.rs) into
+// `std::simd` explicit vectors; it requires a nightly toolchain. The
+// default stable build uses the blocked fallback paths, bit-identical by
+// construction.
+#![cfg_attr(feature = "simd", feature(portable_simd))]
+
 //! # vscnn — VSCNN: CNN Accelerator With Vector Sparsity (cs.AR 2022)
 //!
 //! A full-system reproduction of "VSCNN: Convolution Neural Network

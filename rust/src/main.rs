@@ -5,7 +5,7 @@
 //! vscnn exp <id|all> [--net vgg16|alexnet|resnet10|mixed] [--res N]
 //!                    [--images N] [--seed S] [--pjrt DIR] [--out DIR]
 //!                    [--bias-shift X] [--threads N] [--mem-model ideal|tiled]
-//!                    [--max-fleet N]
+//!                    [--max-fleet N] [--precision f32|int16|int8] [--fuse]
 //! vscnn simulate     [--config 4,14,3|8,7,3] [--net NAME] [--res N]
 //!                    [--density D] [--mem-model ideal|tiled] ...
 //! vscnn serve        [--rps N] [--duration-ms N] [--seed S] [--res N]
@@ -77,6 +77,8 @@ fn print_help() {
          \x20 --images N --seed S --bias-shift X --pjrt DIR --out DIR\n\
          \x20 --threads N (host worker threads; 0 = auto, one per core — the default)\n\
          \x20 --mem-model ideal|tiled (tiled = SRAM/DRAM-aware cycle accounting, default)\n\
+         \x20 --precision f32|int16|int8 (CVF payload precision; fixed point halves/quarters traffic)\n\
+         \x20 --fuse (keep conv→conv strips SRAM-resident where they fit; tiled model only)\n\
          serve flags: --rps N --duration-ms N --fleet N (alias --instances)\n\
          \x20 --topology flat|racks:R (racked fleets default to hierarchical dispatch)\n\
          \x20 --policy round-robin|least-loaded|affinity|hierarchical\n\
@@ -97,6 +99,12 @@ fn ctx_from(cli: &Cli) -> Result<ExpContext> {
         Some(s) => vscnn::sim::config::MemModel::parse(s)
             .ok_or_else(|| anyhow::anyhow!("--mem-model must be 'ideal' or 'tiled', got '{s}'"))?,
     };
+    let precision = match cli.get_value("precision")? {
+        None => default.precision,
+        Some(s) => vscnn::sim::config::Precision::parse(s).ok_or_else(|| {
+            anyhow::anyhow!("--precision must be 'f32', 'int16' or 'int8', got '{s}'")
+        })?,
+    };
     // `--threads 0` means auto (one worker per available core), matching
     // `SimConfig::threads == 0` — resolved here so every consumer (the
     // im2col backend included) sees a concrete count.
@@ -114,6 +122,8 @@ fn ctx_from(cli: &Cli) -> Result<ExpContext> {
             0 => None,
             n => Some(n),
         },
+        precision,
+        fuse: cli.get_bool("fuse"),
     })
 }
 
@@ -129,6 +139,8 @@ fn cmd_exp(cli: &Cli) -> Result<()> {
         "out",
         "mem-model",
         "max-fleet",
+        "precision",
+        "fuse",
     ])?;
     let Some(id) = cli.positional.first() else {
         bail!("usage: vscnn exp <id|all>; ids: {:?}", experiments::list());
@@ -156,7 +168,7 @@ fn cmd_exp(cli: &Cli) -> Result<()> {
 fn cmd_simulate(cli: &Cli) -> Result<()> {
     cli.check_known(&[
         "net", "res", "seed", "images", "bias-shift", "threads", "pjrt", "config", "density",
-        "mem-model",
+        "mem-model", "precision", "fuse",
     ])?;
     let ctx = ctx_from(cli)?;
     let cfg = match cli.get_value("config")?.unwrap_or("8,7,3") {

@@ -305,6 +305,7 @@ mod tests {
             // The crucial bit: the mapped dataflow must match the golden
             // conv on every geometry (1x1, 5x5, 7x7, stride-2).
             verify_dataflow: true,
+            fuse: false,
         };
         let report = coord.run(&img, &opts).unwrap();
         assert_eq!(report.layers.len(), 7);

@@ -266,6 +266,7 @@ pub fn service_profile(
         sim,
         backend: FunctionalBackend::Im2colMt(threads.max(1)),
         verify_dataflow: false,
+        fuse: false,
     };
     let report = Engine::new(prepared).run_image(&img, &opts)?;
     let profile = profile_from_report(&report, cfg);

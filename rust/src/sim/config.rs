@@ -99,6 +99,70 @@ impl MemModel {
     }
 }
 
+/// Payload precision for the CVF compressed streams (CLI `--precision`).
+///
+/// The index side of the format is unaffected (2-byte vector indices
+/// either way); precision scales the *payload* words. [`Precision::F32`]
+/// is the exact functional path, pinned bit-identical across PRs; the
+/// fixed-point modes fake-quantize weights at compile time and
+/// activations at layer boundaries against per-layer calibrated scales
+/// (`sparse::vector_format::calibrated_scale`), and narrow
+/// `SramConfig::bytes_per_elem` so the tiled memory model, the DRAM
+/// traffic accounting and every dense/ideal baseline all carry the same
+/// precision-scaled floor.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Precision {
+    /// Exact f32 payloads; modeled at the historical 16-bit storage
+    /// width, so every pre-existing report stays bit-identical.
+    F32,
+    /// 16-bit fixed point (same 2-byte storage as the historical model,
+    /// but functionally quantized).
+    Int16,
+    /// 8-bit fixed point: half the payload traffic of the 16-bit model.
+    Int8,
+}
+
+impl Precision {
+    /// Parse a CLI flag value (`f32` / `int16` / `int8`).
+    pub fn parse(s: &str) -> Option<Precision> {
+        match s {
+            "f32" | "fp32" => Some(Precision::F32),
+            "int16" | "i16" => Some(Precision::Int16),
+            "int8" | "i8" => Some(Precision::Int8),
+            _ => None,
+        }
+    }
+
+    /// Label used in reports and cache keys.
+    pub fn label(&self) -> &'static str {
+        match self {
+            Precision::F32 => "f32",
+            Precision::Int16 => "int16",
+            Precision::Int8 => "int8",
+        }
+    }
+
+    /// Payload bytes per stored element under this precision. `F32`
+    /// keeps the historical 16-bit modeled width (the pinned baseline);
+    /// the fixed-point modes store what they quantize to.
+    pub fn bytes_per_elem(&self) -> usize {
+        match self {
+            Precision::F32 | Precision::Int16 => 2,
+            Precision::Int8 => 1,
+        }
+    }
+
+    /// Largest representable quantized magnitude (`2^(bits-1) - 1`);
+    /// `None` for the exact f32 path.
+    pub fn qmax(&self) -> Option<f32> {
+        match self {
+            Precision::F32 => None,
+            Precision::Int16 => Some(32767.0),
+            Precision::Int8 => Some(127.0),
+        }
+    }
+}
+
 /// Full simulator configuration.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct SimConfig {
@@ -129,6 +193,17 @@ pub struct SimConfig {
     /// by `sim::scheduler` tests and `tests/memory_model.rs` — so this
     /// only trades speed; the benches use it to measure the fast path.
     pub exact_scheduler: bool,
+    /// CVF payload precision (CLI `--precision`); [`Precision::F32`] is
+    /// the pinned exact path. Set via [`SimConfig::with_precision`] so
+    /// [`SramConfig::bytes_per_elem`] stays consistent with it.
+    pub precision: Precision,
+    /// Fused strip execution (per-layer; set by the engine when the
+    /// producing conv's output strip stays resident in input SRAM): the
+    /// layer's input feature map is charged zero DRAM traffic — the
+    /// scheduler's traffic accounting, the tiled demand walk and the
+    /// dense baseline (`baselines::dense::dense_tile_demands`) all see
+    /// the same eliminated transfer so the floors stay comparable.
+    pub fused_input_resident: bool,
 }
 
 impl SimConfig {
@@ -143,6 +218,8 @@ impl SimConfig {
             threads: 0,
             mem_model: MemModel::Tiled,
             exact_scheduler: false,
+            precision: Precision::F32,
+            fused_input_resident: false,
         }
     }
 
@@ -163,6 +240,18 @@ impl SimConfig {
     /// [`crate::util::resolve_threads`] (one worker per available core).
     pub fn effective_threads(&self) -> usize {
         crate::util::resolve_threads(self.threads)
+    }
+
+    /// Select a CVF payload precision, keeping the modeled storage width
+    /// consistent: `sram.bytes_per_elem` follows
+    /// [`Precision::bytes_per_elem`], so the tile planner, the DRAM
+    /// traffic accounting, the psum/output sizing and every baseline
+    /// inherit the narrower payloads automatically. `F32` leaves the
+    /// historical 2-byte width untouched (the pinned exact path).
+    pub fn with_precision(mut self, p: Precision) -> SimConfig {
+        self.precision = p;
+        self.sram.bytes_per_elem = p.bytes_per_elem();
+        self
     }
 }
 
@@ -198,6 +287,37 @@ mod tests {
         assert_eq!(MemModel::Tiled.label(), "tiled");
         // The paper configs default to the tiled (memory-aware) model.
         assert_eq!(SimConfig::paper_4_14_3().mem_model, MemModel::Tiled);
+    }
+
+    #[test]
+    fn precision_parse_label_and_widths() {
+        assert_eq!(Precision::parse("f32"), Some(Precision::F32));
+        assert_eq!(Precision::parse("int16"), Some(Precision::Int16));
+        assert_eq!(Precision::parse("i8"), Some(Precision::Int8));
+        assert_eq!(Precision::parse("fp16"), None);
+        assert_eq!(Precision::Int8.label(), "int8");
+        assert_eq!(Precision::F32.bytes_per_elem(), 2); // historical width
+        assert_eq!(Precision::Int16.bytes_per_elem(), 2);
+        assert_eq!(Precision::Int8.bytes_per_elem(), 1);
+        assert_eq!(Precision::Int8.qmax(), Some(127.0));
+        assert_eq!(Precision::F32.qmax(), None);
+    }
+
+    #[test]
+    fn with_precision_keeps_storage_width_consistent() {
+        let base = SimConfig::paper_4_14_3();
+        // F32 is the identity on the whole config (pinned exact path).
+        assert_eq!(base.with_precision(Precision::F32), base);
+        assert_eq!(
+            base.with_precision(Precision::Int16).sram.bytes_per_elem,
+            2
+        );
+        let int8 = base.with_precision(Precision::Int8);
+        assert_eq!(int8.sram.bytes_per_elem, 1);
+        assert_eq!(int8.precision, Precision::Int8);
+        // Everything else is untouched.
+        assert_eq!(int8.sram.input_bytes, base.sram.input_bytes);
+        assert_eq!(int8.pe, base.pe);
     }
 
     #[test]

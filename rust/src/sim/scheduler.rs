@@ -493,8 +493,12 @@ pub fn simulate_layer_encoded(
         ),
     };
     // Inputs are re-read once per filter group unless the input buffer
-    // holds the layer's (compressed) activations entirely.
-    let input_rounds = if cfg.sram.input_bytes >= in_elems * bpe {
+    // holds the layer's (compressed) activations entirely. Under fused
+    // strip execution the producing layer left them resident in input
+    // SRAM, so they never touch DRAM at all.
+    let input_rounds = if cfg.fused_input_resident {
+        0
+    } else if cfg.sram.input_bytes >= in_elems * bpe {
         1
     } else {
         n_groups
@@ -538,6 +542,12 @@ pub fn simulate_layer_encoded(
                 // the dense machine's.
                 let strip_in_bytes: Vec<u64> = (0..strips)
                     .map(|s| {
+                        if cfg.fused_input_resident {
+                            // Fused strip execution: every strip is
+                            // already resident, so all three demand
+                            // paths below see zero input transfer.
+                            return 0;
+                        }
                         let rows = (((s + 1) * r).min(h) - s * r) as u64;
                         let raw = rows * w as u64 * bpe64;
                         (0..c_in)
@@ -834,12 +844,10 @@ fn functional_forward(
                                     let wv = &wvals[wpos * kh..(wpos + 1) * kh];
                                     diagonal_product_into(&icol, wv, &mut diag);
                                     let dst = oc * h_out + row_lo;
-                                    for (t, &dv) in tplane[dst..dst + (d_hi - d_lo)]
-                                        .iter_mut()
-                                        .zip(&diag[d_lo..d_hi])
-                                    {
-                                        *t += dv;
-                                    }
+                                    crate::util::simd::add_assign(
+                                        &mut tplane[dst..dst + (d_hi - d_lo)],
+                                        &diag[d_lo..d_hi],
+                                    );
                                 }
                             }
                         }
@@ -864,12 +872,10 @@ fn functional_forward(
                                     }
                                     diagonal_product_into(&icol, &wcol, &mut diag);
                                     let dst = oc * h_out + row_lo;
-                                    for (t, &dv) in tplane[dst..dst + (d_hi - d_lo)]
-                                        .iter_mut()
-                                        .zip(&diag[d_lo..d_hi])
-                                    {
-                                        *t += dv;
-                                    }
+                                    crate::util::simd::add_assign(
+                                        &mut tplane[dst..dst + (d_hi - d_lo)],
+                                        &diag[d_lo..d_hi],
+                                    );
                                 }
                             }
                         }

@@ -98,9 +98,7 @@ impl VectorActivations {
                 colbits.fill(0);
                 for row in row_lo..row_hi {
                     let row_vals = &chan[row * w..(row + 1) * w];
-                    for (b, &x) in colbits.iter_mut().zip(row_vals) {
-                        *b |= x.to_bits() & 0x7FFF_FFFF;
-                    }
+                    crate::util::simd::or_abs_bits(&mut colbits, row_vals);
                 }
                 let group_start = nz_flat.len();
                 for (col, &b) in colbits.iter().enumerate() {
@@ -338,6 +336,57 @@ impl VectorWeights {
     }
 }
 
+// --- fixed-point payloads (ISSUE 8 precision axis) ----------------------
+//
+// The CVF payload words can be stored as 16- or 8-bit fixed point
+// (`sim::config::Precision`): a per-layer *calibrated scale* maps the
+// layer's observed magnitude range onto the signed integer grid, and the
+// functional path runs **fake-quantized** — every payload is rounded to
+// a representable grid point and dequantized back to f32, so the rest of
+// the dataflow is unchanged while the numerics match what the narrow
+// datapath would compute. Quantized zero is exactly zero, so occupancy
+// (and therefore the index system and the timing model) is never
+// *densified* by quantization; small values may round to zero, which is
+// the real hardware's behavior too.
+
+/// Per-tensor calibrated quantization scale: `max|x| / qmax` (the
+/// symmetric-range calibration used by inference accelerators), with a
+/// positive fallback for all-zero tensors so division is always safe.
+pub fn calibrated_scale(data: &[f32], qmax: f32) -> f32 {
+    assert!(qmax > 0.0, "qmax must be positive");
+    let max_abs = data.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+    if max_abs > 0.0 {
+        max_abs / qmax
+    } else {
+        1.0 / qmax
+    }
+}
+
+/// Fake-quantize in place against a calibrated scale: round each value
+/// to the nearest grid point `q * scale` with `q` clamped to
+/// `[-qmax, qmax]`, then dequantize back to f32. Exact zeros stay
+/// exactly zero.
+pub fn fake_quantize(data: &mut [f32], scale: f32, qmax: f32) {
+    assert!(scale > 0.0 && qmax > 0.0, "scale and qmax must be positive");
+    for x in data.iter_mut() {
+        let q = (*x / scale).round().clamp(-qmax, qmax);
+        *x = q * scale;
+    }
+}
+
+/// Calibrate-and-quantize against a [`crate::sim::config::Precision`]:
+/// no-op at `F32` (returns `None`), otherwise fake-quantizes in place
+/// and returns the per-tensor scale used (reported per layer).
+pub fn fake_quantize_precision(
+    data: &mut [f32],
+    precision: crate::sim::config::Precision,
+) -> Option<f32> {
+    let qmax = precision.qmax()?;
+    let scale = calibrated_scale(data, qmax);
+    fake_quantize(data, scale, qmax);
+    Some(scale)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -503,6 +552,87 @@ mod tests {
         let t = Tensor::from_vec(&[1, 2, 2], vec![1.0; 4]);
         let va = VectorActivations::index_only(&t, 2);
         let _ = va.nz_group_soa(0, 0);
+    }
+
+    #[test]
+    fn quantize_round_trip_error_bounded_by_half_step() {
+        use crate::sim::config::Precision;
+        use crate::util::rng::Pcg32;
+        let mut rng = Pcg32::seeded(88);
+        for precision in [Precision::Int16, Precision::Int8] {
+            let qmax = precision.qmax().unwrap();
+            for _ in 0..10 {
+                let n = rng.range(1, 200);
+                let amp = rng.f32_range(0.01, 8.0);
+                let mut data: Vec<f32> = (0..n)
+                    .map(|_| {
+                        if rng.bernoulli(0.3) {
+                            0.0
+                        } else {
+                            rng.f32_range(-amp, amp)
+                        }
+                    })
+                    .collect();
+                let original = data.clone();
+                let scale = fake_quantize_precision(&mut data, precision).unwrap();
+                let expect_scale = calibrated_scale(&original, qmax);
+                assert_eq!(scale, expect_scale);
+                for (&q, &x) in data.iter().zip(&original) {
+                    // In-range values round to the nearest grid point:
+                    // error at most half a quantization step. Calibration
+                    // covers max|x|, so nothing is out of range.
+                    assert!(
+                        (q - x).abs() <= scale * 0.5 + 1e-12,
+                        "{precision:?}: |{q} - {x}| > {}/2",
+                        scale
+                    );
+                    // Exact zeros survive exactly (sparsity is never
+                    // densified by quantization).
+                    if x == 0.0 {
+                        assert_eq!(q, 0.0);
+                    }
+                    // Every output sits on the grid.
+                    let steps = q / scale;
+                    assert!((steps - steps.round()).abs() < 1e-3);
+                    assert!(steps.abs() <= qmax + 0.5);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn quantize_f32_is_identity_and_zero_tensor_safe() {
+        use crate::sim::config::Precision;
+        let mut data = vec![0.1f32, -2.5, 0.0];
+        let orig = data.clone();
+        assert_eq!(fake_quantize_precision(&mut data, Precision::F32), None);
+        assert_eq!(data, orig);
+        // All-zero tensor: positive fallback scale, values unchanged.
+        let mut zeros = vec![0.0f32; 5];
+        let s = fake_quantize_precision(&mut zeros, Precision::Int8).unwrap();
+        assert!(s > 0.0);
+        assert!(zeros.iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn int8_coarser_than_int16() {
+        use crate::sim::config::Precision;
+        // Same payload, both precisions: the int8 grid is coarser, so its
+        // worst-case error is at least the int16 one.
+        let data: Vec<f32> = (0..64).map(|i| ((i * 37 % 101) as f32 - 50.0) / 13.0).collect();
+        let err = |p| {
+            let mut q = data.clone();
+            fake_quantize_precision(&mut q, p).unwrap();
+            q.iter()
+                .zip(&data)
+                .map(|(a, b)| (a - b).abs())
+                .fold(0.0f32, f32::max)
+        };
+        let e8 = err(Precision::Int8);
+        let e16 = err(Precision::Int16);
+        assert!(e8 >= e16);
+        assert!(e8 > 0.0); // int8 genuinely rounds at this amplitude
+        assert!(e16 < 1e-3); // int16 is near-exact at this amplitude
     }
 
     #[test]

@@ -35,10 +35,10 @@ pub fn matmul_acc_into(out: &mut [f32], a: &[f32], b: &[f32], m: usize, k: usize
                         if av == 0.0 {
                             continue; // weight sparsity shortcut
                         }
-                        let brow = &b[p * n + jb..p * n + jhi];
-                        for (o, &bv) in orow.iter_mut().zip(brow) {
-                            *o += av * bv;
-                        }
+                        // 8-lane axpy (util::simd): elementwise, so the
+                        // ascending-K accumulation order — and the bit
+                        // pattern — is unchanged.
+                        crate::util::simd::axpy(orow, av, &b[p * n + jb..p * n + jhi]);
                     }
                 }
             }

@@ -12,6 +12,7 @@ pub mod parallel;
 pub mod pool;
 pub mod rng;
 pub mod scratch;
+pub mod simd;
 pub mod stats;
 
 pub use json::Json;

@@ -1,0 +1,214 @@
+//! 8-lane f32 kernels for the compute hot paths (EXPERIMENTS.md §Perf):
+//! the scheduler's clipped diagonal accumulate, the blocked im2col panel
+//! kernel's inner axpy, and the CVF encoder's occupancy bit-OR.
+//!
+//! Every kernel here is strictly elementwise — lane `i` only ever reads
+//! and writes element `i` — so there is no cross-lane float reduction to
+//! reassociate and the scalar, blocked and explicit-SIMD paths are
+//! bit-identical by construction. That is what lets the f32 exact path
+//! stay pinned bit-for-bit (tests/pool_determinism.rs,
+//! `blocked_matmul_bit_identical_to_naive`) while still vectorizing.
+//!
+//! Dispatch: the `simd` cargo feature (nightly, `portable_simd`) selects
+//! explicit `std::simd` vectors; the default stable build runs the same
+//! loop over fixed 8-element blocks, which the autovectorizer handles
+//! reliably because the trip count is a compile-time constant. The
+//! `*_scalar` reference variants are always available so the paired
+//! benches (`bench_sim_perf` kernel series) and the parity tests can
+//! compare the dispatched kernel against plain scalar code in the same
+//! binary, whichever feature set is active.
+
+/// Vector width of the blocked/SIMD paths (f32 lanes in 256 bits).
+pub const LANES: usize = 8;
+
+/// `dst[i] += src[i]` — the clipped diagonal accumulate in
+/// `sim/scheduler.rs::functional_forward` / `diag_clip`.
+#[inline]
+pub fn add_assign(dst: &mut [f32], src: &[f32]) {
+    let n = dst.len().min(src.len());
+    let main = n - n % LANES;
+    #[cfg(feature = "simd")]
+    {
+        use std::simd::f32x8;
+        for (d, s) in dst[..main]
+            .chunks_exact_mut(LANES)
+            .zip(src[..main].chunks_exact(LANES))
+        {
+            (f32x8::from_slice(d) + f32x8::from_slice(s)).copy_to_slice(d);
+        }
+    }
+    #[cfg(not(feature = "simd"))]
+    for (d, s) in dst[..main]
+        .chunks_exact_mut(LANES)
+        .zip(src[..main].chunks_exact(LANES))
+    {
+        for (x, &y) in d.iter_mut().zip(s) {
+            *x += y;
+        }
+    }
+    for (x, &y) in dst[main..n].iter_mut().zip(&src[main..n]) {
+        *x += y;
+    }
+}
+
+/// Scalar reference for [`add_assign`] (paired-bench baseline).
+#[inline]
+pub fn add_assign_scalar(dst: &mut [f32], src: &[f32]) {
+    for (x, &y) in dst.iter_mut().zip(src) {
+        *x += y;
+    }
+}
+
+/// `dst[i] += a * src[i]` — the inner loop of the blocked matmul panel
+/// kernel (`tensor/ops.rs::matmul_acc_into`). Multiply-then-add, never
+/// fused, to match the scalar semantics exactly.
+#[inline]
+pub fn axpy(dst: &mut [f32], a: f32, src: &[f32]) {
+    let n = dst.len().min(src.len());
+    let main = n - n % LANES;
+    #[cfg(feature = "simd")]
+    {
+        use std::simd::f32x8;
+        let av = f32x8::splat(a);
+        for (d, s) in dst[..main]
+            .chunks_exact_mut(LANES)
+            .zip(src[..main].chunks_exact(LANES))
+        {
+            (f32x8::from_slice(d) + av * f32x8::from_slice(s)).copy_to_slice(d);
+        }
+    }
+    #[cfg(not(feature = "simd"))]
+    for (d, s) in dst[..main]
+        .chunks_exact_mut(LANES)
+        .zip(src[..main].chunks_exact(LANES))
+    {
+        for (x, &y) in d.iter_mut().zip(s) {
+            *x += a * y;
+        }
+    }
+    for (x, &y) in dst[main..n].iter_mut().zip(&src[main..n]) {
+        *x += a * y;
+    }
+}
+
+/// Scalar reference for [`axpy`] (paired-bench baseline).
+#[inline]
+pub fn axpy_scalar(dst: &mut [f32], a: f32, src: &[f32]) {
+    for (x, &y) in dst.iter_mut().zip(src) {
+        *x += a * y;
+    }
+}
+
+/// `dst[i] |= src[i].to_bits() & 0x7FFF_FFFF` — the CVF encoder's
+/// branch-free occupancy reduction (`sparse/vector_format.rs`): OR the
+/// sign-stripped bit patterns of a kernel-height row into the per-vector
+/// accumulator, so a vector is occupied iff any accumulated word is
+/// nonzero (`-0.0` counts as zero, matching `x != 0.0`).
+#[inline]
+pub fn or_abs_bits(dst: &mut [u32], src: &[f32]) {
+    let n = dst.len().min(src.len());
+    let main = n - n % LANES;
+    #[cfg(feature = "simd")]
+    {
+        use std::simd::{f32x8, num::SimdFloat, u32x8};
+        let mask = u32x8::splat(0x7FFF_FFFF);
+        for (d, s) in dst[..main]
+            .chunks_exact_mut(LANES)
+            .zip(src[..main].chunks_exact(LANES))
+        {
+            (u32x8::from_slice(d) | (f32x8::from_slice(s).to_bits() & mask)).copy_to_slice(d);
+        }
+    }
+    #[cfg(not(feature = "simd"))]
+    for (d, s) in dst[..main]
+        .chunks_exact_mut(LANES)
+        .zip(src[..main].chunks_exact(LANES))
+    {
+        for (x, &y) in d.iter_mut().zip(s) {
+            *x |= y.to_bits() & 0x7FFF_FFFF;
+        }
+    }
+    for (x, &y) in dst[main..n].iter_mut().zip(&src[main..n]) {
+        *x |= y.to_bits() & 0x7FFF_FFFF;
+    }
+}
+
+/// Scalar reference for [`or_abs_bits`] (paired-bench baseline).
+#[inline]
+pub fn or_abs_bits_scalar(dst: &mut [u32], src: &[f32]) {
+    for (x, &y) in dst.iter_mut().zip(src) {
+        *x |= y.to_bits() & 0x7FFF_FFFF;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    fn random_vec(rng: &mut Pcg32, n: usize) -> Vec<f32> {
+        (0..n)
+            .map(|_| {
+                let x = rng.f32_range(-2.0, 2.0);
+                // Mix in exact zeros and a negative zero so the occupancy
+                // kernel's sign handling is exercised.
+                match rng.next_u32() % 8 {
+                    0 => 0.0,
+                    1 => -0.0,
+                    _ => x,
+                }
+            })
+            .collect()
+    }
+
+    /// The dispatched kernels match the scalar references bit-for-bit on
+    /// every length (covering all remainder cases around the lane width).
+    #[test]
+    fn kernels_bit_identical_to_scalar_references() {
+        let mut rng = Pcg32::new(0x51_3D, 7);
+        for n in [0, 1, 3, 7, 8, 9, 15, 16, 17, 64, 100, 257] {
+            let src = random_vec(&mut rng, n);
+            let base = random_vec(&mut rng, n);
+            let a = rng.f32_range(-1.0, 1.0);
+
+            let mut d0 = base.clone();
+            let mut d1 = base.clone();
+            add_assign(&mut d0, &src);
+            add_assign_scalar(&mut d1, &src);
+            assert_eq!(bits(&d0), bits(&d1), "add_assign n={n}");
+
+            let mut d0 = base.clone();
+            let mut d1 = base.clone();
+            axpy(&mut d0, a, &src);
+            axpy_scalar(&mut d1, a, &src);
+            assert_eq!(bits(&d0), bits(&d1), "axpy n={n}");
+
+            let seed: Vec<u32> = base.iter().map(|x| x.to_bits() >> 3).collect();
+            let mut b0 = seed.clone();
+            let mut b1 = seed;
+            or_abs_bits(&mut b0, &src);
+            or_abs_bits_scalar(&mut b1, &src);
+            assert_eq!(b0, b1, "or_abs_bits n={n}");
+        }
+    }
+
+    /// Occupancy semantics: the OR accumulator is nonzero iff some input
+    /// element is nonzero as a float (`-0.0` does not count).
+    #[test]
+    fn or_abs_bits_matches_nonzero_test() {
+        let vals = [0.0f32, -0.0, 1.5, 0.0, -3.0, 0.0];
+        for w in 1..=vals.len() {
+            for start in 0..=(vals.len() - w) {
+                let window = &vals[start..start + w];
+                let mut acc = vec![0u32; w];
+                or_abs_bits(&mut acc, window);
+                let occupied = acc.iter().any(|&b| b != 0);
+                assert_eq!(occupied, window.iter().any(|&x| x != 0.0));
+            }
+        }
+    }
+
+    fn bits(xs: &[f32]) -> Vec<u32> {
+        xs.iter().map(|x| x.to_bits()).collect()
+    }
+}

@@ -91,6 +91,71 @@ fn conv_paths_equivalent_across_shapes_and_densities() {
     }
 }
 
+/// ISSUE 8: the dispatching payload kernels (std::simd under
+/// `--features simd`, 8-wide unrolled scalar otherwise) are bit-identical
+/// to the plain scalar references on random lengths, and the functional
+/// dataflow that calls them stays bit-identical across worker counts
+/// 1/2/8 on random shapes. Run under both feature settings in CI; the
+/// pinned exact path must not move in either.
+#[test]
+fn simd_kernels_and_functional_path_bit_identical_across_threads() {
+    use vscnn::util::simd::{
+        add_assign, add_assign_scalar, axpy, axpy_scalar, or_abs_bits, or_abs_bits_scalar,
+    };
+    let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<u32>>();
+    let mut rng = Pcg32::seeded(0x51AD);
+    // Kernel-level: random lengths (SIMD tails included), exact u32 bits.
+    for _ in 0..16 {
+        let n = rng.range(1, 600);
+        let src: Vec<f32> = (0..n).map(|_| rng.f32_range(-2.0, 2.0)).collect();
+        let mut a: Vec<f32> = (0..n).map(|_| rng.f32_range(-1.0, 1.0)).collect();
+        let mut b = a.clone();
+        add_assign(&mut a, &src);
+        add_assign_scalar(&mut b, &src);
+        assert_eq!(bits(&a), bits(&b));
+        let s = rng.f32_range(-1.5, 1.5);
+        axpy(&mut a, s, &src);
+        axpy_scalar(&mut b, s, &src);
+        assert_eq!(bits(&a), bits(&b));
+        let mut occ_a = vec![0u32; n];
+        let mut occ_b = vec![0u32; n];
+        or_abs_bits(&mut occ_a, &src);
+        or_abs_bits_scalar(&mut occ_b, &src);
+        assert_eq!(occ_a, occ_b);
+    }
+    // Engine-level: the functional dataflow (its clipped-diagonal
+    // accumulation runs through add_assign) pinned across 1/2/8 workers.
+    let spec = ConvSpec { stride: 1, pad: 1 };
+    for _ in 0..4 {
+        let c_in = rng.range(1, 4);
+        let k_out = rng.range(2, 7);
+        let h = rng.range(5, 18);
+        let w = rng.range(5, 18);
+        let input = random_sparse(&mut rng, &[c_in, h, w], 0.5);
+        let weight = random_sparse(&mut rng, &[k_out, c_in, 3, 3], 0.4);
+        let mut cfg = SimConfig::paper_8_7_3();
+        cfg.pe.arrays = 2;
+        let mut outs: Vec<Tensor> = Vec::new();
+        for threads in [1usize, 2, 8] {
+            cfg.threads = threads;
+            let mut tr = Trace::disabled();
+            let res = simulate_layer(
+                &input,
+                &weight,
+                None,
+                &cfg,
+                spec,
+                Mode::VectorSparse,
+                true,
+                &mut tr,
+            );
+            outs.push(res.output.expect("functional mode"));
+        }
+        assert_eq!(bits(outs[0].data()), bits(outs[1].data()));
+        assert_eq!(bits(outs[0].data()), bits(outs[2].data()));
+    }
+}
+
 /// Compile a pruned zoo network for the engine (paper 3-column mapping).
 fn compiled_zoo_net(name: &str, res: usize, seed: u64) -> Arc<PreparedNetwork> {
     use vscnn::pruning::{self, sensitivity::flat_schedule};
@@ -183,6 +248,7 @@ fn zoo_networks_run_end_to_end_through_engine() {
             sim: cfg,
             backend: vscnn::coordinator::FunctionalBackend::Golden,
             verify_dataflow: true,
+            fuse: false,
         };
         let report = engine.run_image(&img, &opts).unwrap();
         let expect = if name == "alexnet" { 5 } else { 9 };

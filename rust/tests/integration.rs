@@ -91,6 +91,7 @@ fn hardware_aligned_pruning_ablation_beats_row_pruning() {
         sim: cfg,
         backend: FunctionalBackend::Golden,
         verify_dataflow: false,
+        fuse: false,
     };
     let sched = flat_schedule(&net, 0.25);
 

@@ -475,6 +475,7 @@ fn profiles_with_threads(spec: &ServeSpec, threads: usize) -> Vec<Vec<ServicePro
                         sim,
                         backend: FunctionalBackend::Im2colMt(threads),
                         verify_dataflow: false,
+                        fuse: false,
                     };
                     let engine = Engine::new(prepared.clone());
                     let report = engine.run_image(&img, &opts).expect("run");
