@@ -24,6 +24,10 @@
 //!   Reports are bit-identical between the two (tests/pool_determinism.rs)
 //!   — only the wall clock differs. `derived` records `images_per_sec`,
 //!   `scoped_baseline_images_per_sec` and `speedup_vs_scoped`.
+//! * `obs/engine-execute-metrics-{off,on}` — ISSUE 9's observability cost
+//!   pair: the same execute workload with the metrics registry disabled vs
+//!   enabled. `derived` records `metrics_{off,on}_images_per_sec` and
+//!   `metrics_overhead_frac`; check_bench_regression.py warns past 3%.
 //!
 //! Env `VSCNN_BENCH_SCALING=1` additionally sweeps the conv3_1 functional
 //! case over 1/2/4/…/N workers (the thread-scaling curve in
@@ -454,6 +458,56 @@ fn main() {
         );
         results.push(r_plain);
         results.push(r_fused);
+    }
+
+    // 10) ISSUE 9 observability overhead: the same engine-execute workload
+    //     with the metrics registry disabled vs enabled (tracing stays off,
+    //     the production default). The counters on the hot path are relaxed
+    //     atomics behind one branch, so the pair should be near-equal;
+    //     check_bench_regression.py surfaces it and warns past 3%.
+    {
+        let net = vgg16_at(32);
+        let params = vscnn::model::init::synthetic_params(&net, 7, 0.0);
+        let copts = CompileOptions {
+            cols: PAPER_COLS,
+            prune: Some(paper_schedule(&net)),
+            calibration: Some(Calibration {
+                image: synthetic_image(net.input_shape, 7 ^ 0xCA11),
+                density_scale: 1.0,
+                threads,
+            }),
+            precision: Precision::F32,
+        };
+        let engine = Engine::new(Arc::new(compile(&net, params, &copts)));
+        let img = synthetic_image(net.input_shape, 7 ^ 0xBEEF);
+        let mut opts = RunOptions::new(SimConfig::paper_8_7_3());
+        opts.sim.threads = threads;
+
+        vscnn::util::metrics::set_enabled(false);
+        let r_off = bench("obs/engine-execute-metrics-off", 1, 7, || {
+            black_box(engine.run_image(&img, &opts).expect("engine run").totals.cycles);
+        });
+        println!("{}", r_off.line());
+        vscnn::util::metrics::set_enabled(true);
+        let r_on = bench("obs/engine-execute-metrics-on", 1, 7, || {
+            black_box(engine.run_image(&img, &opts).expect("engine run").totals.cycles);
+        });
+        vscnn::util::metrics::set_enabled(false);
+        println!("{}", r_on.line());
+
+        let ips_off = 1.0 / r_off.median.as_secs_f64().max(1e-12);
+        let ips_on = 1.0 / r_on.median.as_secs_f64().max(1e-12);
+        let overhead = r_on.median.as_secs_f64() / r_off.median.as_secs_f64().max(1e-12) - 1.0;
+        println!(
+            "observability (vgg16-32): {ips_off:.2} images/sec metrics off vs {ips_on:.2} on \
+             ({:+.2}% overhead)\n",
+            overhead * 100.0
+        );
+        derived.set("metrics_off_images_per_sec", ips_off);
+        derived.set("metrics_on_images_per_sec", ips_on);
+        derived.set("metrics_overhead_frac", overhead);
+        results.push(r_off);
+        results.push(r_on);
     }
 
     let path = "BENCH_sim_perf.json";

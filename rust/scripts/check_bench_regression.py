@@ -15,7 +15,10 @@ Takes one or more NEW/BASELINE pairs and compares each pair of
 * throughput-style `derived` keys (anything ending in `_per_sec` plus
   `speedup_vs_scoped` and the `functional_speedup_*` family) — warns when
   one dropped by more than the derived threshold (default: the series
-  threshold), and notes improvements.
+  threshold), and notes improvements;
+* the observability cost pair (`metrics_{off,on}_images_per_sec`, when the
+  report carries it) — printed per report, with a warn-only note when the
+  metrics registry costs more than 3%.
 
 A missing NEW or BASELINE file skips that pair with a note (first-PR
 bootstrap: the baseline does not exist yet).
@@ -53,6 +56,27 @@ def throughput_keys(derived):
         ):
             out[key] = float(val)
     return out
+
+
+def report_metrics_overhead(doc, path, limit=0.03):
+    """Surface the observability cost pair measured by bench_sim_perf
+    (`obs/engine-execute-metrics-{off,on}`). Warn-only by design — never
+    gates, even under --strict: the pair measures a sub-percent effect
+    and is the noisiest number in the report."""
+    derived = doc.get("derived", {})
+    off = derived.get("metrics_off_images_per_sec")
+    on = derived.get("metrics_on_images_per_sec")
+    if not isinstance(off, (int, float)) or not isinstance(on, (int, float)):
+        return
+    if off <= 0 or on <= 0:
+        return
+    overhead = off / on - 1.0
+    print(f"observability: {off:.2f} images/sec metrics-off vs {on:.2f} "
+          f"metrics-on ({overhead:+.1%} overhead)")
+    if overhead > limit:
+        print(f"NOTE: {path}: metrics registry overhead {overhead:.1%} exceeds "
+              f"{limit:.0%} (warn-only; the registry should be near-free when "
+              f"idle)", file=sys.stderr)
 
 
 def compare_pair(new_path, base_path, threshold, derived_threshold):
@@ -95,6 +119,7 @@ def compare_pair(new_path, base_path, threshold, derived_threshold):
             improvements.append(
                 f"{new_path}: derived.{key}: up to {ratio:.2f}x the baseline")
         print(f"derived.{key:36} {base_thr[key]:>12.3f} {new_thr[key]:>12.3f} {ratio:>6.2f}x{flag}")
+    report_metrics_overhead(new, new_path)
     return series_warnings, derived_warnings, improvements
 
 

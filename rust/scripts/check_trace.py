@@ -1,0 +1,112 @@
+#!/usr/bin/env python3
+"""Validate a Chrome trace_event JSON file written by `--trace-out`.
+
+Usage: check_trace.py TRACE.json [TRACE2.json ...] [--min-events N]
+
+Checks, per file:
+
+* the document parses and has a `traceEvents` list (plus the
+  `otherData.dropped_events` counter the exporter always writes);
+* every event carries name/cat/ph/pid/tid/ts, with a phase the exporter
+  emits (X, i, C, M) or Perfetto accepts from hand-edits (B, E);
+* complete ("X") events have a non-negative `dur` and instants carry a
+  scope (`"s"`);
+* on every (pid, tid) lane the X intervals are properly nested: sorted
+  by (ts, -dur), each event either fits inside the enclosing one or
+  starts after it ends — overlapping-but-not-nested spans mean a broken
+  emitter and render as garbage in the Perfetto UI.
+
+Exits 1 on the first structural problem; used by the CI observability
+smoke against `vscnn simulate --trace-out` and the faulted serve run.
+"""
+
+import argparse
+import json
+import sys
+
+KNOWN_PHASES = {"X", "B", "E", "i", "C", "M"}
+REQUIRED = ("name", "cat", "ph", "pid", "tid", "ts")
+
+
+def fail(path, msg):
+    print(f"{path}: {msg}", file=sys.stderr)
+    return 1
+
+
+def check_nesting(path, events):
+    """X intervals on one lane must nest like a call stack."""
+    lanes = {}
+    for ev in events:
+        if ev["ph"] == "X":
+            lanes.setdefault((ev["pid"], ev["tid"]), []).append(ev)
+    for (pid, tid), evs in sorted(lanes.items()):
+        evs.sort(key=lambda e: (e["ts"], -e["dur"]))
+        stack = []  # (start, end, name) of enclosing spans
+        for ev in evs:
+            start, end = ev["ts"], ev["ts"] + ev["dur"]
+            while stack and start >= stack[-1][1]:
+                stack.pop()
+            if stack and end > stack[-1][1]:
+                return fail(
+                    path,
+                    f"lane ({pid}, {tid}): span '{ev['name']}' "
+                    f"[{start}, {end}) overlaps enclosing "
+                    f"'{stack[-1][2]}' [{stack[-1][0]}, {stack[-1][1]}) "
+                    f"without nesting inside it")
+            stack.append((start, end, ev["name"]))
+    return 0
+
+
+def check_file(path, min_events):
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        return fail(path, f"cannot load: {e}")
+
+    events = doc.get("traceEvents")
+    if not isinstance(events, list):
+        return fail(path, "no traceEvents list")
+    dropped = doc.get("otherData", {}).get("dropped_events")
+    if not isinstance(dropped, int):
+        return fail(path, "otherData.dropped_events missing")
+
+    counts = {}
+    for n, ev in enumerate(events):
+        if not isinstance(ev, dict):
+            return fail(path, f"event {n} is not an object")
+        for key in REQUIRED:
+            if key not in ev:
+                return fail(path, f"event {n} ({ev.get('name')!r}) lacks '{key}'")
+        ph = ev["ph"]
+        if ph not in KNOWN_PHASES:
+            return fail(path, f"event {n} has unknown phase {ph!r}")
+        if ph == "X":
+            if not isinstance(ev.get("dur"), (int, float)) or ev["dur"] < 0:
+                return fail(path, f"event {n} ('X') needs dur >= 0, got {ev.get('dur')!r}")
+        if ph == "i" and ev.get("s") not in ("t", "p", "g"):
+            return fail(path, f"event {n} ('i') needs a scope s in t/p/g")
+        counts[ph] = counts.get(ph, 0) + 1
+
+    payload = len(events) - counts.get("M", 0)
+    if payload < min_events:
+        return fail(path, f"only {payload} non-metadata events (< {min_events})")
+    if check_nesting(path, events):
+        return 1
+
+    summary = " ".join(f"{ph}:{counts[ph]}" for ph in sorted(counts))
+    print(f"{path}: OK — {len(events)} events ({summary}), {dropped} dropped")
+    return 0
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("traces", nargs="+", help="trace_event JSON files")
+    ap.add_argument("--min-events", type=int, default=1,
+                    help="minimum non-metadata events per file (default 1)")
+    args = ap.parse_args()
+    return max(check_file(p, args.min_events) for p in args.traces)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -250,6 +250,34 @@ mod tests {
     }
 
     #[test]
+    fn observability_flags_parse_in_every_shape() {
+        // `--metrics-out`/`--trace-out` are value flags; `--trace-limit`
+        // and `--pe-trace` numeric with defaults — the exact shapes
+        // `simulate`/`exp`/`serve` use.
+        let cli = parse(&[
+            "simulate",
+            "--metrics-out",
+            "m.json",
+            "--trace-out=t.json",
+            "--trace-limit",
+            "5000",
+        ]);
+        assert_eq!(cli.get_value("metrics-out").unwrap(), Some("m.json"));
+        assert_eq!(cli.get_value("trace-out").unwrap(), Some("t.json"));
+        assert_eq!(cli.get_num::<usize>("trace-limit", 200_000).unwrap(), 5000);
+        assert_eq!(cli.get_num::<u64>("pe-trace", 20_000).unwrap(), 20_000);
+        // All absent -> observability stays off (no files, defaults).
+        let off = parse(&["simulate"]);
+        assert_eq!(off.get_value("metrics-out").unwrap(), None);
+        assert_eq!(off.get_value("trace-out").unwrap(), None);
+        assert_eq!(off.get_num::<usize>("trace-limit", 200_000).unwrap(), 200_000);
+        // Trailing value flag is a clean error, not a file named "true".
+        let bare = parse(&["serve", "--trace-out"]);
+        let err = bare.get_value("trace-out").unwrap_err();
+        assert!(err.to_string().contains("expects a value"));
+    }
+
+    #[test]
     fn value_flag_before_another_flag_errors_cleanly() {
         let cli = parse(&["simulate", "--res", "--trace"]);
         assert!(cli.get_bool("trace"));

@@ -12,8 +12,10 @@ use crate::sparse::encode::{weight_side_stats, WeightSideStats};
 use crate::sparse::VectorWeights;
 use crate::tensor::conv::ConvSpec;
 use crate::tensor::Tensor;
+use crate::util::{metrics, trace_span};
 use std::collections::BTreeMap;
 use std::sync::Arc;
+use std::time::Instant;
 
 /// PE-column count of both paper configurations (`[4,14,3]` / `[8,7,3]`):
 /// the kernel height the array natively serves, and the default mapping
@@ -188,10 +190,16 @@ impl PreparedNetwork {
 /// Panics on geometry mismatches (missing layer params, wrong weight or
 /// bias shapes), like the per-job checks the monolithic pipeline performed.
 pub fn compile(net: &Network, mut params: Params, opts: &CompileOptions) -> PreparedNetwork {
+    let _sp = trace_span::span("engine", "compile");
     if let Some(schedule) = &opts.prune {
+        let _sp = trace_span::span("engine", "compile.prune");
+        let t0 = Instant::now();
         pruning::prune_network_vectors(&mut params, schedule);
+        metrics::observe("engine.compile.prune_us", t0.elapsed().as_micros() as u64);
     }
     if let Some(cal) = &opts.calibration {
+        let _sp = trace_span::span("engine", "compile.calibrate");
+        let t0 = Instant::now();
         crate::model::calibrate::calibrate_activations(
             net,
             &mut params,
@@ -199,6 +207,7 @@ pub fn compile(net: &Network, mut params: Params, opts: &CompileOptions) -> Prep
             cal.density_scale,
             cal.threads,
         );
+        metrics::observe("engine.compile.calibrate_us", t0.elapsed().as_micros() as u64);
     }
 
     // Fixed-point payloads: fake-quantize each conv layer's (pruned,
@@ -207,6 +216,8 @@ pub fn compile(net: &Network, mut params: Params, opts: &CompileOptions) -> Prep
     // and therefore the timing model all reflect what the narrow
     // datapath holds. No-op at F32 (the pinned exact path).
     if opts.precision != Precision::F32 {
+        let _sp = trace_span::span("engine", "compile.quantize");
+        let t0 = Instant::now();
         for lp in params.values_mut() {
             if lp.weight.ndim() == 4 {
                 crate::sparse::vector_format::fake_quantize_precision(
@@ -215,6 +226,7 @@ pub fn compile(net: &Network, mut params: Params, opts: &CompileOptions) -> Prep
                 );
             }
         }
+        metrics::observe("engine.compile.quantize_us", t0.elapsed().as_micros() as u64);
     }
 
     // Overall conv weight density of the artifact that will be executed
@@ -233,6 +245,8 @@ pub fn compile(net: &Network, mut params: Params, opts: &CompileOptions) -> Prep
         kept as f64 / total as f64
     };
 
+    let _sp_enc = trace_span::span("engine", "compile.encode");
+    let t_enc = Instant::now();
     let shapes = net.activation_shapes();
     let mut layers = BTreeMap::new();
     for (li, layer) in net.layers.iter().enumerate() {
@@ -277,6 +291,8 @@ pub fn compile(net: &Network, mut params: Params, opts: &CompileOptions) -> Prep
             }),
         );
     }
+    metrics::observe("engine.compile.encode_us", t_enc.elapsed().as_micros() as u64);
+    metrics::add("engine.compile.networks", 1);
     PreparedNetwork {
         net: net.clone(),
         cols: opts.cols,

@@ -16,8 +16,14 @@ use crate::sparse::encode::{layer_report_cached, DensityReport};
 use crate::tensor::conv::maxpool2x2;
 use crate::tensor::Tensor;
 use crate::util::json::Json;
+use crate::util::{metrics, trace_span};
 use anyhow::{Context, Result};
 use std::sync::Arc;
+
+/// Version of the [`NetworkReport::to_json`] document layout, bumped
+/// whenever a key is added, removed or renamed (pinned by a golden-key
+/// test so observability additions can't silently break parsers).
+pub const NETWORK_REPORT_SCHEMA_VERSION: usize = 1;
 
 /// Everything measured for one conv layer in one run.
 #[derive(Debug, Clone)]
@@ -228,7 +234,8 @@ impl NetworkReport {
             .set("dram_floor_cycles", self.dram_floor_cycles)
             .set("bound", self.totals.bound().label());
         let mut o = Json::obj();
-        o.set("network", self.network.as_str())
+        o.set("schema_version", NETWORK_REPORT_SCHEMA_VERSION)
+            .set("network", self.network.as_str())
             .set("config", self.config_label.as_str())
             .set("mem_model", self.mem_model.label())
             .set("precision", self.precision.label())
@@ -290,6 +297,24 @@ impl Engine {
         if precision != Precision::F32 {
             crate::sparse::vector_format::fake_quantize_precision(act.data_mut(), precision);
         }
+        let _sp = trace_span::span("engine", format!("run_image({})", net.name));
+        // Two virtual-cycle lanes per image: conv layers laid end to end
+        // at accumulated cycle offsets, DRAM transfer on a sibling lane.
+        let cycle_lanes = if trace_span::cycles_enabled() {
+            let base = trace_span::alloc_cycle_tracks(2);
+            let img = base / 2;
+            trace_span::name_track(trace_span::CYCLES_PID, base, format!("img{img:02} layers"));
+            trace_span::name_track(trace_span::CYCLES_PID, base + 1, format!("img{img:02} dram"));
+            if trace_span::pe_budget() > 0 {
+                for a in 0..opts.sim.pe.arrays {
+                    trace_span::name_track(trace_span::PE_PID, a as u64, format!("pe array {a}"));
+                }
+            }
+            Some(base)
+        } else {
+            None
+        };
+        let mut cycle_cursor = 0u64;
         let mut layers = Vec::new();
         let mut totals = SimStats::default();
         let mut total_dense = 0u64;
@@ -324,7 +349,16 @@ impl Engine {
                     fused_layers += usize::from(fused);
 
                     // --- timing (vector-sparse flow) --------------------
-                    let mut trace = Trace::disabled();
+                    // With a PE issue budget set (`simulate --trace-out`),
+                    // capture the per-cycle issue trace for the export.
+                    // This forces the scheduler's sequential functional
+                    // walk, so the budget bounds it to small runs.
+                    let pe_budget = trace_span::pe_budget();
+                    let mut trace = if pe_budget > 0 {
+                        Trace::new(pe_budget as usize)
+                    } else {
+                        Trace::disabled()
+                    };
                     let res = simulate_compiled(
                         &act,
                         &cl.conv,
@@ -393,6 +427,18 @@ impl Engine {
                             postproc::output_dram_bytes(va, opts.sim.sram.bytes_per_elem, 2);
                     }
 
+                    metrics::observe("engine.layer.cycles", stats.cycles);
+                    if let Some(base) = cycle_lanes {
+                        emit_layer_cycle_spans(base, &layer.name, cycle_cursor, &stats);
+                        if !trace.events.is_empty() {
+                            emit_pe_issue_events(&layer.name, cycle_cursor, &trace);
+                        }
+                    }
+                    if trace.enabled() {
+                        trace_span::pe_consume(trace.events.len() as u64 + trace.dropped());
+                    }
+                    cycle_cursor += stats.cycles;
+
                     let record = LayerRecord {
                         name: layer.name.clone(),
                         density,
@@ -429,6 +475,7 @@ impl Engine {
             }
         }
 
+        metrics::add("engine.images", 1);
         let dram_floor_cycles = totals.dram.transfer_cycles(opts.sim.dram_bytes_per_cycle);
         Ok(NetworkReport {
             network: net.name.clone(),
@@ -473,6 +520,90 @@ impl Engine {
             .into_iter()
             .collect();
         Ok(chunks?.into_iter().flatten().collect())
+    }
+}
+
+/// Lay one conv layer's interval onto the image's virtual-cycle lanes:
+/// the layer span with fill/compute children on the layer lane, DRAM
+/// transfer on the sibling lane, every child clamped into the layer
+/// interval so the spans nest cleanly in Perfetto.
+fn emit_layer_cycle_spans(base: u64, name: &str, t0: u64, stats: &SimStats) {
+    use crate::util::trace_span::{complete_cycles, Arg, CYCLES_PID};
+    let cyc = stats.cycles;
+    complete_cycles(
+        CYCLES_PID,
+        base,
+        "layer",
+        name.to_string(),
+        t0,
+        cyc,
+        vec![
+            ("compute_cycles", Arg::U(stats.compute_cycles)),
+            ("transfer_cycles", Arg::U(stats.transfer_cycles)),
+            ("fill_cycles", Arg::U(stats.fill_cycles)),
+            ("tiles", Arg::U(stats.tiles)),
+        ],
+    );
+    let fill = stats.fill_cycles.min(cyc);
+    if fill > 0 {
+        let nm = format!("{name}.fill");
+        complete_cycles(CYCLES_PID, base, "fill", nm, t0, fill, Vec::new());
+    }
+    let compute = stats.compute_cycles.min(cyc - fill);
+    if compute > 0 {
+        complete_cycles(
+            CYCLES_PID,
+            base,
+            "compute",
+            format!("{name}.compute"),
+            t0 + fill,
+            compute,
+            Vec::new(),
+        );
+    }
+    let transfer = stats.transfer_cycles.min(cyc);
+    if transfer > 0 {
+        complete_cycles(
+            CYCLES_PID,
+            base + 1,
+            "dram",
+            format!("{name}.transfer"),
+            t0,
+            transfer,
+            Vec::new(),
+        );
+    }
+}
+
+/// Promote the per-cycle PE issue trace (the Table-I walk) into the
+/// export: one lane per PE array, one 1-cycle slot per issued pair laid
+/// sequentially from the layer's start cycle. `TraceEvent::cycle` is the
+/// position within its strip block, not globally monotonic, so it rides
+/// along as an arg while the slot index provides the timeline position.
+fn emit_pe_issue_events(layer: &str, t0: u64, trace: &Trace) {
+    use crate::util::trace_span::{complete_cycles, Arg, PE_PID};
+    let mut next_slot: std::collections::BTreeMap<usize, u64> = std::collections::BTreeMap::new();
+    for ev in &trace.events {
+        let slot = next_slot.entry(ev.array).or_insert(0);
+        let out = match ev.pair.output_col {
+            Some(o) => o.to_string(),
+            None => "X".to_string(),
+        };
+        complete_cycles(
+            PE_PID,
+            ev.array as u64,
+            "pe-issue",
+            format!("{layer} k{} c{} s{}", ev.filter, ev.channel, ev.strip),
+            t0 + *slot,
+            1,
+            vec![
+                ("input_col", Arg::U(ev.pair.input_col as u64)),
+                ("weight_col", Arg::U(ev.pair.weight_col as u64)),
+                ("output_col", Arg::S(out)),
+                ("block_cycle", Arg::U(ev.cycle)),
+            ],
+        );
+        *slot += 1;
     }
 }
 
@@ -708,5 +839,96 @@ mod tests {
         let report = Engine::new(re).run_image(&img, &opts).unwrap();
         assert_eq!(report.layers.len(), 4);
         assert!(report.overall_speedup() >= 1.0);
+    }
+
+    /// Golden-key pin: the full `NetworkReport` JSON key set, including
+    /// the layer records and their stats. Adding, removing or renaming a
+    /// key must come with a `NETWORK_REPORT_SCHEMA_VERSION` bump and an
+    /// update here — downstream parsers key off this contract.
+    #[test]
+    fn network_report_json_golden_keys() {
+        let (p, img) = prepared(28);
+        let mut opts = small_opts();
+        opts.verify_dataflow = false;
+        let j = Engine::new(p).run_image(&img, &opts).unwrap().to_json();
+        assert_eq!(j.get("schema_version").and_then(Json::as_f64), Some(1.0));
+        let keys = |o: &Json| -> Vec<String> {
+            o.as_obj().expect("object").keys().cloned().collect()
+        };
+        assert_eq!(
+            keys(&j),
+            [
+                "config",
+                "effective_bw_util",
+                "fine_skip_efficiency",
+                "fused_layers",
+                "layers",
+                "mem_model",
+                "memory_bound_layer_frac",
+                "network",
+                "overall_ideal_fine",
+                "overall_ideal_vector",
+                "overall_speedup",
+                "precision",
+                "roofline",
+                "schema_version",
+                "total_cycles",
+                "total_dense_cycles",
+                "vector_skip_efficiency",
+            ]
+        );
+        assert_eq!(
+            keys(j.get("roofline").unwrap()),
+            ["bound", "compute_cycles", "dram_floor_cycles", "transfer_cycles"]
+        );
+        let layer = j.get("layers").unwrap().at(0).unwrap();
+        assert_eq!(
+            keys(layer),
+            [
+                "bound",
+                "bw_utilization",
+                "cycles",
+                "dense_cycles",
+                "input_density_elem",
+                "input_density_vec",
+                "name",
+                "output_density_elem",
+                "speedup",
+                "speedup_ideal_fine",
+                "speedup_ideal_vector",
+                "stats",
+                "utilization",
+                "weight_density_elem",
+                "weight_density_vec",
+                "work_density_elem",
+                "work_density_vec",
+            ]
+        );
+        assert_eq!(
+            keys(layer.get("stats").unwrap()),
+            [
+                "bound",
+                "boundary_pairs",
+                "bw_utilization",
+                "compute_cycles",
+                "cycles",
+                "dram_total_bytes",
+                "fill_cycles",
+                "issued_pairs",
+                "macs",
+                "mem_stall_cycles",
+                "overhead_cycles",
+                "skipped_input",
+                "skipped_weight",
+                "sram_input_peak",
+                "sram_overflows",
+                "sram_psum_peak",
+                "sram_weight_peak",
+                "sync_stall_slots",
+                "tiles",
+                "transfer_cycles",
+                "utilization",
+            ]
+        );
     }
 }

@@ -6,8 +6,11 @@
 //!                    [--images N] [--seed S] [--pjrt DIR] [--out DIR]
 //!                    [--bias-shift X] [--threads N] [--mem-model ideal|tiled]
 //!                    [--max-fleet N] [--precision f32|int16|int8] [--fuse]
+//!                    [--metrics-out FILE] [--trace-out FILE] [--trace-limit N]
 //! vscnn simulate     [--config 4,14,3|8,7,3] [--net NAME] [--res N]
-//!                    [--density D] [--mem-model ideal|tiled] ...
+//!                    [--density D] [--mem-model ideal|tiled]
+//!                    [--metrics-out FILE] [--trace-out FILE] [--trace-limit N]
+//!                    [--pe-trace N] ...
 //! vscnn serve        [--rps N] [--duration-ms N] [--seed S] [--res N]
 //!                    [--net NAME] [--fleet N] [--topology flat|racks:R]
 //!                    [--policy P] [--traffic poisson|diurnal|flash[,k:v..]]
@@ -15,6 +18,7 @@
 //!                    [--clients N] [--think-ms N] [--out FILE]
 //!                    [--faults SPEC] [--timeout-us N] [--retries N]
 //!                    [--backoff-us N] [--hedge-us N] [--shed]
+//!                    [--metrics-out FILE] [--trace-out FILE] [--trace-limit N]
 //! vscnn runtime-info [--artifacts DIR]
 //! vscnn list
 //! ```
@@ -22,7 +26,7 @@
 use anyhow::{bail, Context, Result};
 use vscnn::cli::Cli;
 use vscnn::experiments::{self, ExpContext};
-use vscnn::log_info;
+use vscnn::{log_info, log_warn};
 
 fn main() {
     vscnn::util::logging::init_from_env();
@@ -85,11 +89,51 @@ fn print_help() {
          \x20 --traffic poisson | diurnal[,amp:A,period-ms:P] | flash[,x:X,high-ms:H,low-ms:L]\n\
          \x20 --max-batch N --batch-wait-us N --queue-cap N --clients N --think-ms N --out FILE\n\
          \x20 --faults crash:RATE,mttr:MS,straggler:RATE,slow:X,slowms:MS,reqfault:P (per-instance rates)\n\
-         \x20 --timeout-us N (per-attempt timeout) --retries N --backoff-us N --hedge-us N --shed",
+         \x20 --timeout-us N (per-attempt timeout) --retries N --backoff-us N --hedge-us N --shed\n\
+         observability (exp/simulate/serve):\n\
+         \x20 --metrics-out FILE (process metrics registry snapshot as JSON)\n\
+         \x20 --trace-out FILE (Chrome/Perfetto trace; open in ui.perfetto.dev)\n\
+         \x20 --trace-limit N (trace event cap, default 200000; excess is counted, not stored)\n\
+         \x20 --pe-trace N (simulate only: per-cycle PE issue-event budget, default 20000; 0 = off)",
         vscnn::VERSION,
         experiments::list().join(", "),
         vscnn::model::zoo::names().join("|"),
     );
+}
+
+/// Parse the shared observability flags. Turns the metrics registry on
+/// when `--metrics-out` is given; callers enable span tracing themselves
+/// because the right moment differs per command (`serve` waits until
+/// after profiling so its trace is cycles-only and deterministic).
+/// Returns `(metrics_out, trace_out, trace_limit)`.
+fn obs_flags(cli: &Cli) -> Result<(Option<String>, Option<String>, usize)> {
+    let metrics_out = cli.get_value("metrics-out")?.map(str::to_string);
+    let trace_out = cli.get_value("trace-out")?.map(str::to_string);
+    let limit: usize = cli.get_num("trace-limit", 200_000)?;
+    anyhow::ensure!(limit >= 1, "--trace-limit must be >= 1");
+    if metrics_out.is_some() {
+        vscnn::util::metrics::set_enabled(true);
+    }
+    Ok((metrics_out, trace_out, limit))
+}
+
+/// Write the observability outputs a command collected.
+fn obs_finish(metrics_out: Option<&String>, trace_out: Option<&String>) -> Result<()> {
+    if let Some(path) = metrics_out {
+        std::fs::write(path, vscnn::util::metrics::snapshot().pretty())
+            .with_context(|| format!("writing {path}"))?;
+        log_info!("wrote {path}");
+    }
+    if let Some(path) = trace_out {
+        let dropped = vscnn::util::trace_span::dropped();
+        if dropped > 0 {
+            log_warn!("trace buffer full: {dropped} events dropped (raise --trace-limit)");
+        }
+        vscnn::util::trace_span::write_chrome_trace(path)
+            .with_context(|| format!("writing {path}"))?;
+        log_info!("wrote {path} (open in https://ui.perfetto.dev)");
+    }
+    Ok(())
 }
 
 fn ctx_from(cli: &Cli) -> Result<ExpContext> {
@@ -141,11 +185,18 @@ fn cmd_exp(cli: &Cli) -> Result<()> {
         "max-fleet",
         "precision",
         "fuse",
+        "metrics-out",
+        "trace-out",
+        "trace-limit",
     ])?;
     let Some(id) = cli.positional.first() else {
         bail!("usage: vscnn exp <id|all>; ids: {:?}", experiments::list());
     };
     let ctx = ctx_from(cli)?;
+    let (metrics_out, trace_out, trace_limit) = obs_flags(cli)?;
+    if trace_out.is_some() {
+        vscnn::util::trace_span::enable(trace_limit, true, true);
+    }
     let out_dir = cli.get_value("out")?.unwrap_or("reports");
     std::fs::create_dir_all(out_dir).with_context(|| format!("creating {out_dir}"))?;
 
@@ -162,15 +213,38 @@ fn cmd_exp(cli: &Cli) -> Result<()> {
         println!("== {} ==\n{}", out.id, out.text);
         log_info!("wrote {json_path} and {text_path}");
     }
+    obs_finish(metrics_out.as_ref(), trace_out.as_ref())?;
     Ok(())
 }
 
 fn cmd_simulate(cli: &Cli) -> Result<()> {
     cli.check_known(&[
-        "net", "res", "seed", "images", "bias-shift", "threads", "pjrt", "config", "density",
-        "mem-model", "precision", "fuse",
+        "net",
+        "res",
+        "seed",
+        "images",
+        "bias-shift",
+        "threads",
+        "pjrt",
+        "config",
+        "density",
+        "mem-model",
+        "precision",
+        "fuse",
+        "metrics-out",
+        "trace-out",
+        "trace-limit",
+        "pe-trace",
     ])?;
     let ctx = ctx_from(cli)?;
+    let (metrics_out, trace_out, trace_limit) = obs_flags(cli)?;
+    if trace_out.is_some() {
+        vscnn::util::trace_span::enable(trace_limit, true, true);
+        // Promote the per-cycle PE issue trace (Table I) into the export,
+        // budgeted because it forces the slow sequential dataflow walk.
+        // `--pe-trace 0` keeps the trace but skips the issue events.
+        vscnn::util::trace_span::set_pe_budget(cli.get_num("pe-trace", 20_000u64)?);
+    }
     let cfg = match cli.get_value("config")?.unwrap_or("8,7,3") {
         "4,14,3" => vscnn::sim::config::SimConfig::paper_4_14_3(),
         "8,7,3" => vscnn::sim::config::SimConfig::paper_8_7_3(),
@@ -227,6 +301,7 @@ fn cmd_simulate(cli: &Cli) -> Result<()> {
             t0.elapsed()
         );
     }
+    obs_finish(metrics_out.as_ref(), trace_out.as_ref())?;
     Ok(())
 }
 
@@ -255,6 +330,9 @@ fn cmd_serve(cli: &Cli) -> Result<()> {
         "backoff-us",
         "hedge-us",
         "shed",
+        "metrics-out",
+        "trace-out",
+        "trace-limit",
     ])?;
     use vscnn::serve::{
         build_profiles, default_fleet, default_mix, parse_topology, simulate, BatchPolicy,
@@ -364,7 +442,15 @@ fn cmd_serve(cli: &Cli) -> Result<()> {
         spec.tenants.len(),
         spec.instances.len()
     );
+    let (metrics_out, trace_out, trace_limit) = obs_flags(cli)?;
     let profiles = build_profiles(&spec, threads)?;
+    // Tracing goes live only after profiling, and cycles-only: every
+    // serve event is stamped in deterministic sim cycles with tid ==
+    // instance index, so two same-seed traced runs export byte-identical
+    // timelines (pinned by tests/observability.rs and the CI smoke).
+    if trace_out.is_some() {
+        vscnn::util::trace_span::enable(trace_limit, false, true);
+    }
     let outcome = simulate(&spec, &profiles);
     let report = ServeReport::new(&spec, &outcome);
     print!("{}", report.text());
@@ -373,6 +459,7 @@ fn cmd_serve(cli: &Cli) -> Result<()> {
             .with_context(|| format!("writing {path}"))?;
         log_info!("wrote {path}");
     }
+    obs_finish(metrics_out.as_ref(), trace_out.as_ref())?;
     Ok(())
 }
 

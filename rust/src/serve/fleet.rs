@@ -94,6 +94,8 @@ use crate::experiments::ExpContext;
 use crate::model::init::synthetic_image;
 use crate::sim::config::{MemModel, SimConfig};
 use crate::util::rng::Pcg32;
+use crate::util::trace_span::{self, CYCLES_PID};
+use crate::util::{metrics, trace_span::Arg};
 use anyhow::{bail, ensure, Result};
 use std::collections::BTreeMap;
 use std::sync::{Mutex, OnceLock};
@@ -505,6 +507,16 @@ struct ReqState {
     client: bool,
 }
 
+/// Launch record of the batch currently executing — kept on the instance
+/// (not the completion event) so the timeline can attribute the interval
+/// to `exec` on completion or `killed` when a crash invalidates it.
+struct LaunchInfo {
+    start: u64,
+    tenant: usize,
+    n: usize,
+    switch: u64,
+}
+
 struct Instance {
     batcher: Batcher,
     /// Busy until this cycle; idle when `busy_until <= now`.
@@ -530,6 +542,8 @@ struct Instance {
     breaker_until: u64,
     /// Consecutive attempt timeouts (resets on a served completion).
     timeout_streak: u32,
+    /// Trace attribution for the running batch (`None` when idle).
+    launch: Option<LaunchInfo>,
     stats: InstanceStats,
 }
 
@@ -617,12 +631,24 @@ impl<'a> Sim<'a> {
                 down_since: None,
                 breaker_until: 0,
                 timeout_streak: 0,
+                launch: None,
                 stats: InstanceStats {
                     label: is.label(),
                     ..InstanceStats::default()
                 },
             })
             .collect();
+
+        // Serve timeline: one cycle-domain track per instance, tid ==
+        // instance index (deterministic — same-seed traced runs are
+        // byte-identical; `cmd_serve` enables cycles-only tracing after
+        // profiling, so these are the only cycle tracks).
+        if trace_span::cycles_enabled() {
+            trace_span::reserve_cycle_tracks(0, spec.instances.len() as u64);
+            for (i, is) in spec.instances.iter().enumerate() {
+                trace_span::name_track(CYCLES_PID, i as u64, format!("inst{i:03} {}", is.label()));
+            }
+        }
 
         Sim {
             dispatcher: Dispatcher::new(spec.policy, nets.len(), spec.instances.len(), spec.seed),
@@ -861,6 +887,14 @@ impl<'a> Sim<'a> {
         inst.batcher.push(tenant, req, now);
         inst.backlog_cycles += marginal;
         inst.stats.max_queue = inst.stats.max_queue.max(inst.batcher.queued());
+        metrics::add("serve.dispatched", 1);
+        trace_span::counter_cycles(
+            CYCLES_PID,
+            format!("inst{i:03}.queue"),
+            now,
+            "queued",
+            inst.batcher.queued() as u64,
+        );
         self.sync_load(i);
         self.try_launch(i, now);
         true
@@ -945,6 +979,21 @@ impl<'a> Sim<'a> {
             inst.stats.batches += 1;
             inst.stats.busy_cycles += end.min(horizon) - now.min(horizon);
             inst.backlog_cycles = inst.backlog_cycles.saturating_sub(n * prof.marginal_cycles);
+            inst.launch = Some(LaunchInfo {
+                start: now,
+                tenant,
+                n: reqs.len(),
+                switch,
+            });
+            metrics::add("serve.batches", 1);
+            metrics::observe("serve.batch_size", n);
+            trace_span::counter_cycles(
+                CYCLES_PID,
+                format!("inst{i:03}.queue"),
+                now,
+                "queued",
+                inst.batcher.queued() as u64,
+            );
             let epoch = inst.epoch;
             inst.running.clear();
             for &r in &reqs {
@@ -1065,9 +1114,26 @@ impl<'a> Sim<'a> {
 
     fn on_crash(&mut self, now: u64, i: usize) {
         self.crashes += 1;
+        metrics::add("serve.crashes", 1);
         let horizon = self.horizon();
         let (killed, drained) = {
             let inst = &mut self.instances[i];
+            // Timeline: the in-flight batch dies here — close its
+            // interval as `killed`, mark the crash instant, zero the
+            // queue counter (the queue is drained below for re-homing).
+            if let Some(l) = inst.launch.take() {
+                trace_span::complete_cycles(
+                    CYCLES_PID,
+                    i as u64,
+                    "killed",
+                    format!("killed t{} x{}", l.tenant, l.n),
+                    l.start,
+                    now - l.start,
+                    vec![("batch", Arg::U(l.n as u64))],
+                );
+            }
+            trace_span::instant_cycles(CYCLES_PID, i as u64, "fault", "crash", now);
+            trace_span::counter_cycles(CYCLES_PID, format!("inst{i:03}.queue"), now, "queued", 0);
             inst.note_queue(now, horizon);
             inst.stats.crashes += 1;
             inst.epoch = inst.epoch.wrapping_add(1);
@@ -1118,12 +1184,23 @@ impl<'a> Sim<'a> {
 
     fn on_recover(&mut self, now: u64, i: usize) {
         self.recoveries += 1;
+        metrics::add("serve.recoveries", 1);
         let horizon = self.horizon();
         let inst = &mut self.instances[i];
         if let Some(since) = inst.down_since.take() {
             let d = now.min(horizon).saturating_sub(since.min(horizon));
             inst.stats.down_cycles += d;
             self.recovery_cycles += now - since;
+            trace_span::complete_cycles(
+                CYCLES_PID,
+                i as u64,
+                "down",
+                "down",
+                since,
+                now - since,
+                Vec::new(),
+            );
+            trace_span::instant_cycles(CYCLES_PID, i as u64, "fault", "recover", now);
         }
         // Back cold: empty queue, no resident net; new arrivals route in.
         inst.last_queue_change = now;
@@ -1134,6 +1211,7 @@ impl<'a> Sim<'a> {
         if self.instances[i].epoch != epoch {
             return; // batch was killed by a crash; work already re-homed
         }
+        let launch = self.instances[i].launch.take();
         let running = std::mem::take(&mut self.instances[i].running);
         self.instances[i].timeout_streak = 0;
         let mut done = 0u64;
@@ -1178,6 +1256,21 @@ impl<'a> Sim<'a> {
         }
         self.completed += done;
         self.instances[i].stats.completed += done;
+        if let Some(l) = launch {
+            trace_span::complete_cycles(
+                CYCLES_PID,
+                i as u64,
+                "exec",
+                format!("exec t{} x{}", l.tenant, l.n),
+                l.start,
+                now - l.start,
+                vec![
+                    ("batch", Arg::U(l.n as u64)),
+                    ("switch_cycles", Arg::U(l.switch)),
+                    ("served", Arg::U(done)),
+                ],
+            );
+        }
         // Closed-loop clients re-issue after their think time. Client
         // identity is not tracked through batches — the population size
         // is what matters — so each served completion spawns one
@@ -1285,12 +1378,35 @@ impl<'a> Sim<'a> {
         #[cfg(debug_assertions)]
         self.assert_loads_consistent();
 
-        // Close the queue-depth and downtime integrals at the horizon.
+        // Close the queue-depth and downtime integrals at the horizon,
+        // and close still-open timeline intervals (a batch running past
+        // the horizon, an instance still down) so the export has no
+        // dangling state.
         let horizon = self.horizon();
-        for inst in self.instances.iter_mut() {
+        for (i, inst) in self.instances.iter_mut().enumerate() {
             inst.note_queue(horizon, horizon);
+            if let Some(l) = inst.launch.take() {
+                trace_span::complete_cycles(
+                    CYCLES_PID,
+                    i as u64,
+                    "exec",
+                    format!("exec t{} x{} (past horizon)", l.tenant, l.n),
+                    l.start,
+                    horizon.saturating_sub(l.start),
+                    vec![("batch", Arg::U(l.n as u64))],
+                );
+            }
             if let Some(since) = inst.down_since.take() {
                 inst.stats.down_cycles += horizon.saturating_sub(since.min(horizon));
+                trace_span::complete_cycles(
+                    CYCLES_PID,
+                    i as u64,
+                    "down",
+                    "down (past horizon)",
+                    since.min(horizon),
+                    horizon.saturating_sub(since.min(horizon)),
+                    Vec::new(),
+                );
             }
         }
 

@@ -15,6 +15,11 @@ use super::fleet::{Outcome, ServeOutcome, ServeSpec};
 use crate::util::json::Json;
 use crate::util::stats::{mean, percentile};
 
+/// Version of the [`ServeReport::to_json`] document layout, bumped
+/// whenever a key is added, removed or renamed (pinned by a golden-key
+/// test so observability additions can't silently break parsers).
+pub const SERVE_REPORT_SCHEMA_VERSION: usize = 1;
+
 /// Latency summary in cycles (converted to ms by the clock at render
 /// time).
 #[derive(Debug, Clone, Copy, Default)]
@@ -298,7 +303,8 @@ impl ServeReport {
         let resilient = self.resilience.is_some();
         let duration_secs = self.duration_secs().max(1e-12);
         let mut o = Json::obj();
-        o.set("policy", self.policy.as_str())
+        o.set("schema_version", SERVE_REPORT_SCHEMA_VERSION)
+            .set("policy", self.policy.as_str())
             .set("traffic", self.traffic.as_str())
             .set("max_batch", self.max_batch)
             .set("max_wait_cycles", self.max_wait_cycles)
@@ -623,6 +629,152 @@ mod tests {
         let a = faulty_report().to_json().pretty();
         let b = faulty_report().to_json().pretty();
         assert_eq!(a, b);
+    }
+
+    /// Golden-key pin: the full `ServeReport` JSON key set, zero-fault
+    /// and faulted. Adding, removing or renaming a key must come with a
+    /// `SERVE_REPORT_SCHEMA_VERSION` bump and an update here.
+    #[test]
+    fn serve_report_json_golden_keys() {
+        let keys = |o: &Json| -> Vec<String> {
+            o.as_obj().expect("object").keys().cloned().collect()
+        };
+        let latency_keys = [
+            "count",
+            "max_cycles",
+            "max_ms",
+            "mean_cycles",
+            "mean_ms",
+            "p50_cycles",
+            "p50_ms",
+            "p95_cycles",
+            "p95_ms",
+            "p99_cycles",
+            "p99_ms",
+        ];
+
+        let j = toy_report().to_json();
+        assert_eq!(j.get("schema_version").and_then(Json::as_f64), Some(1.0));
+        assert_eq!(
+            keys(&j),
+            [
+                "admitted",
+                "clock_mhz",
+                "completed",
+                "duration_cycles",
+                "in_flight",
+                "instances",
+                "latency",
+                "max_batch",
+                "max_wait_cycles",
+                "offered",
+                "offered_rps",
+                "policy",
+                "queue_cap",
+                "rejected",
+                "schema_version",
+                "seed",
+                "tenants",
+                "throughput_rps",
+                "traffic",
+            ]
+        );
+        assert_eq!(keys(j.get("latency").unwrap()), latency_keys);
+        assert_eq!(
+            keys(j.get("tenants").unwrap().at(0).unwrap()),
+            ["completed", "latency", "name", "offered", "rejected"]
+        );
+        assert_eq!(
+            keys(j.get("instances").unwrap().at(0).unwrap()),
+            [
+                "avg_batch",
+                "batches",
+                "completed",
+                "label",
+                "max_queue",
+                "mean_queue_depth",
+                "switches",
+                "utilization",
+            ]
+        );
+
+        let f = faulty_report().to_json();
+        assert_eq!(
+            keys(&f),
+            [
+                "admitted",
+                "clock_mhz",
+                "completed",
+                "duration_cycles",
+                "in_flight",
+                "instances",
+                "latency",
+                "max_batch",
+                "max_wait_cycles",
+                "offered",
+                "offered_rps",
+                "policy",
+                "queue_cap",
+                "rejected",
+                "resilience",
+                "schema_version",
+                "seed",
+                "shed",
+                "tenants",
+                "throughput_rps",
+                "timed_out",
+                "traffic",
+            ]
+        );
+        assert_eq!(
+            keys(f.get("resilience").unwrap()),
+            [
+                "availability",
+                "backoff_cycles",
+                "crashes",
+                "faulted",
+                "faults",
+                "hedge_cycles",
+                "hedge_wins",
+                "hedges",
+                "max_retries",
+                "mttr_ms",
+                "recoveries",
+                "rehomed",
+                "retries",
+                "shed_enabled",
+                "stale_completions",
+                "timeout_cycles",
+            ]
+        );
+        assert_eq!(
+            keys(f.get("tenants").unwrap().at(0).unwrap()),
+            [
+                "completed",
+                "goodput_rps",
+                "latency",
+                "name",
+                "offered",
+                "rejected",
+                "shed",
+                "timed_out",
+            ]
+        );
+        assert_eq!(
+            keys(f.get("instances").unwrap().at(0).unwrap()),
+            [
+                "availability",
+                "avg_batch",
+                "batches",
+                "completed",
+                "crashes",
+                "label",
+                "max_queue",
+                "mean_queue_depth",
+                "switches",
+                "utilization",
+            ]
+        );
     }
 
     #[test]

@@ -108,6 +108,13 @@ pub fn simulate_layer_encoded(
     functional: bool,
     trace: &mut Trace,
 ) -> LayerResult {
+    let _sp = crate::util::trace_span::span("sim", "simulate_layer");
+    crate::util::metrics::add("sim.layers_simulated", 1);
+    if trace.enabled() {
+        // Issue tracing forces the slow sequential walk; count it so a
+        // surprisingly slow run is explainable from the metrics dump.
+        crate::util::metrics::add("sim.traced_walks", 1);
+    }
     assert_eq!(spec.stride, 1, "VSCNN dataflow models unit stride only");
     assert_eq!(input.ndim(), 3);
     assert_eq!(weight.ndim(), 4);

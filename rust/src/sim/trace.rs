@@ -151,4 +151,45 @@ mod tests {
         assert!(t.events.is_empty());
         assert_eq!(t.dropped(), 1);
     }
+
+    /// Exact drop accounting past the limit: the first `limit` events are
+    /// kept, every later record increments `dropped` by exactly one, and
+    /// the kept prefix never changes.
+    #[test]
+    fn drop_accounting_is_exact_past_the_limit() {
+        let limit = 5;
+        let extra = 13;
+        let mut t = Trace::new(limit);
+        assert!(t.enabled());
+        for i in 0..(limit + extra) as u64 {
+            t.record(ev(i, i as usize, 0, Some(i as usize)));
+            // dropped = max(0, recorded_so_far - limit), exactly.
+            let recorded = i + 1;
+            assert_eq!(t.dropped(), recorded.saturating_sub(limit as u64));
+            assert_eq!(t.events.len() as u64, recorded.min(limit as u64));
+        }
+        assert_eq!(t.events.len(), limit);
+        assert_eq!(t.dropped(), extra as u64);
+        // The kept prefix is the *first* `limit` records, untouched.
+        for (i, e) in t.events.iter().enumerate() {
+            assert_eq!(e.cycle, i as u64);
+            assert_eq!(e.pair.input_col, i);
+        }
+    }
+
+    /// Events come back in recording order (the export relies on this to
+    /// lay issue slots sequentially per array).
+    #[test]
+    fn event_order_is_recording_order() {
+        let mut t = Trace::new(16);
+        // Deliberately record out-of-cycle-order events: order of record()
+        // calls, not the cycle stamp, defines the sequence.
+        t.record(ev(7, 3, 2, None));
+        t.record(ev(2, 1, 0, Some(4)));
+        t.record(ev(9, 0, 1, Some(0)));
+        let cycles: Vec<u64> = t.events.iter().map(|e| e.cycle).collect();
+        assert_eq!(cycles, vec![7, 2, 9]);
+        let inputs: Vec<usize> = t.events.iter().map(|e| e.pair.input_col).collect();
+        assert_eq!(inputs, vec![3, 1, 0]);
+    }
 }

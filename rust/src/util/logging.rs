@@ -23,11 +23,34 @@ pub fn set_level(level: Level) {
     LEVEL.store(level as u8, Ordering::Relaxed);
 }
 
-/// Initialize from `VSCNN_LOG` if set.
+/// Initialize from `VSCNN_LOG` if set. An unparseable value leaves the
+/// level unchanged but warns once to stderr instead of being silently
+/// ignored.
 pub fn init_from_env() {
     if let Ok(v) = std::env::var("VSCNN_LOG") {
-        if let Some(l) = parse_level(&v) {
+        apply_env_value(&v);
+    }
+}
+
+static WARNED_BAD_ENV: std::sync::atomic::AtomicBool = std::sync::atomic::AtomicBool::new(false);
+
+/// Apply a `VSCNN_LOG` value; returns the parsed level, warning (once per
+/// process) on garbage. Split from [`init_from_env`] so tests can drive
+/// it without mutating the process environment.
+pub fn apply_env_value(v: &str) -> Option<Level> {
+    match parse_level(v) {
+        Some(l) => {
             set_level(l);
+            Some(l)
+        }
+        None => {
+            if !WARNED_BAD_ENV.swap(true, Ordering::Relaxed) {
+                eprintln!(
+                    "[WARN ] VSCNN_LOG={v:?} is not a log level \
+                     (error|warn|info|debug|trace); keeping the current level"
+                );
+            }
+            None
         }
     }
 }
@@ -79,16 +102,48 @@ macro_rules! log_trace { ($($t:tt)*) => { $crate::util::logging::emit($crate::ut
 mod tests {
     use super::*;
 
+    // The level is process-global and tests run in parallel: tests that
+    // mutate it serialize on this gate and restore Info before releasing.
+    fn gate() -> std::sync::MutexGuard<'static, ()> {
+        static GATE: std::sync::Mutex<()> = std::sync::Mutex::new(());
+        GATE.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
     #[test]
     fn level_parse_and_order() {
         assert_eq!(parse_level("warn"), Some(Level::Warn));
+        assert_eq!(parse_level("Warning"), Some(Level::Warn));
         assert_eq!(parse_level("TRACE"), Some(Level::Trace));
+        assert_eq!(parse_level("error"), Some(Level::Error));
+        assert_eq!(parse_level("Info"), Some(Level::Info));
+        assert_eq!(parse_level("DeBuG"), Some(Level::Debug));
         assert_eq!(parse_level("nope"), None);
+        assert_eq!(parse_level(""), None);
+        assert_eq!(parse_level(" info"), None, "no trimming");
         assert!(Level::Error < Level::Trace);
     }
 
     #[test]
+    fn env_init_applies_good_values_and_keeps_level_on_garbage() {
+        // Exercises the split-out value path directly — no process-env
+        // mutation, which would race with parallel tests.
+        let _g = gate();
+        set_level(Level::Info);
+        assert_eq!(apply_env_value("debug"), Some(Level::Debug));
+        assert!(enabled(Level::Debug));
+        // Garbage: warns (once, to stderr) and leaves the level alone.
+        assert_eq!(apply_env_value("chatty"), None);
+        assert!(enabled(Level::Debug));
+        assert!(!enabled(Level::Trace));
+        assert!(WARNED_BAD_ENV.load(Ordering::Relaxed));
+        // A second bad value stays silent but still reports None.
+        assert_eq!(apply_env_value("louder"), None);
+        set_level(Level::Info); // restore default for other tests
+    }
+
+    #[test]
     fn enabled_respects_level() {
+        let _g = gate();
         set_level(Level::Warn);
         assert!(enabled(Level::Error));
         assert!(enabled(Level::Warn));

@@ -1,0 +1,419 @@
+//! Process-global metrics registry: counters, gauges, and log-bucketed
+//! histograms with cheap atomic recording.
+//!
+//! Metric names are hierarchical dotted paths (`engine.compile.prune_us`,
+//! `pool.tasks_stolen`, `serve.batch_size`). Recording is disabled by
+//! default: every convenience recorder (`add`, `gauge_set`, `observe`)
+//! starts with one relaxed atomic load and returns immediately when the
+//! registry is off, so default runs pay a branch per call site and stay
+//! bit-identical — no metric ever feeds back into simulation results.
+//! `--metrics-out` (or `enable()` in tests/benches) turns recording on;
+//! `snapshot()` serializes everything to deterministic sorted JSON.
+//!
+//! The `no-obs` cargo feature compiles the enable flag down to a constant
+//! `false`, letting the optimizer delete every recording path outright for
+//! overhead-audit builds; the default build keeps the runtime flag.
+//!
+//! Histograms use an octave layout (8 sub-buckets per power of two):
+//! values below 16 land in exact buckets, larger values see at most
+//! ~12.5% quantization. `p50/p95/p99` are nearest-rank over bucket lower
+//! bounds — exact for small-integer distributions such as batch sizes,
+//! and deterministic for a given multiset of recorded values.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock};
+
+use crate::util::Json;
+
+#[cfg(not(feature = "no-obs"))]
+static ENABLED: std::sync::atomic::AtomicBool = std::sync::atomic::AtomicBool::new(false);
+
+/// Is recording on? Constant `false` under the `no-obs` feature.
+#[inline]
+pub fn enabled() -> bool {
+    #[cfg(feature = "no-obs")]
+    {
+        false
+    }
+    #[cfg(not(feature = "no-obs"))]
+    {
+        ENABLED.load(Ordering::Relaxed)
+    }
+}
+
+/// Turn recording on or off (CLI `--metrics-out`, benches, tests).
+pub fn set_enabled(on: bool) {
+    #[cfg(feature = "no-obs")]
+    let _ = on;
+    #[cfg(not(feature = "no-obs"))]
+    ENABLED.store(on, Ordering::SeqCst);
+}
+
+// ---------------------------------------------------------------- handles
+
+/// Monotonic counter.
+#[derive(Default)]
+pub struct Counter {
+    v: AtomicU64,
+}
+
+impl Counter {
+    #[inline]
+    pub fn add(&self, n: u64) {
+        self.v.fetch_add(n, Ordering::Relaxed);
+    }
+    pub fn get(&self) -> u64 {
+        self.v.load(Ordering::Relaxed)
+    }
+}
+
+/// Last-write-wins signed gauge.
+#[derive(Default)]
+pub struct Gauge {
+    v: AtomicI64,
+}
+
+impl Gauge {
+    #[inline]
+    pub fn set(&self, v: i64) {
+        self.v.store(v, Ordering::Relaxed);
+    }
+    pub fn get(&self) -> i64 {
+        self.v.load(Ordering::Relaxed)
+    }
+}
+
+const SUB_BITS: u32 = 3;
+const SUB: usize = 1 << SUB_BITS; // 8 sub-buckets per octave
+const BUCKETS: usize = SUB + (64 - SUB_BITS as usize) * SUB; // 496 < 512
+
+/// Log-bucketed histogram of `u64` samples.
+pub struct Histogram {
+    count: AtomicU64,
+    sum: AtomicU64,
+    min: AtomicU64,
+    max: AtomicU64,
+    buckets: Vec<AtomicU64>,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram {
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+            min: AtomicU64::new(u64::MAX),
+            max: AtomicU64::new(0),
+            buckets: (0..BUCKETS).map(|_| AtomicU64::new(0)).collect(),
+        }
+    }
+}
+
+/// Bucket index: exact for `v < 2*SUB`, octave+sub-bucket above.
+fn bucket_index(v: u64) -> usize {
+    if v == 0 {
+        return 0;
+    }
+    let msb = 63 - v.leading_zeros();
+    if msb < SUB_BITS {
+        return v as usize;
+    }
+    let shift = msb - SUB_BITS;
+    let sub = (v >> shift) as usize - SUB;
+    SUB + shift as usize * SUB + sub
+}
+
+/// Lower bound of bucket `i` — the representative used for quantiles.
+fn bucket_floor(i: usize) -> u64 {
+    if i < 2 * SUB {
+        return i as u64;
+    }
+    let k = (i - SUB) / SUB;
+    let sub = (i - SUB) % SUB;
+    ((SUB + sub) as u64) << k
+}
+
+impl Histogram {
+    #[inline]
+    pub fn record(&self, v: u64) {
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+        self.min.fetch_min(v, Ordering::Relaxed);
+        self.max.fetch_max(v, Ordering::Relaxed);
+        self.buckets[bucket_index(v)].fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// Nearest-rank quantile over bucket lower bounds, clamped to the
+    /// exact observed [min, max].
+    pub fn quantile(&self, q: f64) -> u64 {
+        let count = self.count();
+        if count == 0 {
+            return 0;
+        }
+        let rank = ((q * count as f64).ceil() as u64).clamp(1, count);
+        let mut seen = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            seen += b.load(Ordering::Relaxed);
+            if seen >= rank {
+                let min = self.min.load(Ordering::Relaxed);
+                let max = self.max.load(Ordering::Relaxed);
+                return bucket_floor(i).clamp(min, max);
+            }
+        }
+        self.max.load(Ordering::Relaxed)
+    }
+
+    fn to_json(&self) -> Json {
+        let count = self.count();
+        let mut j = Json::obj();
+        j.set("count", count as f64);
+        if count == 0 {
+            return j;
+        }
+        let sum = self.sum.load(Ordering::Relaxed);
+        j.set("sum", sum as f64);
+        j.set("min", self.min.load(Ordering::Relaxed) as f64);
+        j.set("max", self.max.load(Ordering::Relaxed) as f64);
+        j.set("mean", sum as f64 / count as f64);
+        j.set("p50", self.quantile(0.50) as f64);
+        j.set("p95", self.quantile(0.95) as f64);
+        j.set("p99", self.quantile(0.99) as f64);
+        j
+    }
+}
+
+// --------------------------------------------------------------- registry
+
+enum Metric {
+    Counter(&'static Counter),
+    Gauge(&'static Gauge),
+    Histogram(&'static Histogram),
+}
+
+fn registry() -> &'static Mutex<BTreeMap<String, Metric>> {
+    static REG: OnceLock<Mutex<BTreeMap<String, Metric>>> = OnceLock::new();
+    REG.get_or_init(|| Mutex::new(BTreeMap::new()))
+}
+
+/// Look up (or register) the named counter. Handles are `&'static` and
+/// leaked on first registration; cache the handle in genuinely hot loops.
+pub fn counter(name: &str) -> &'static Counter {
+    let mut reg = registry().lock().unwrap();
+    let got = match reg
+        .entry(name.to_string())
+        .or_insert_with(|| Metric::Counter(Box::leak(Box::default())))
+    {
+        Metric::Counter(c) => Some(*c),
+        _ => None,
+    };
+    // Release the lock before panicking on a type clash so a buggy call
+    // site can't poison the whole registry.
+    drop(reg);
+    got.unwrap_or_else(|| panic!("metric `{name}` already registered with another type"))
+}
+
+/// Look up (or register) the named gauge.
+pub fn gauge(name: &str) -> &'static Gauge {
+    let mut reg = registry().lock().unwrap();
+    let got = match reg
+        .entry(name.to_string())
+        .or_insert_with(|| Metric::Gauge(Box::leak(Box::default())))
+    {
+        Metric::Gauge(g) => Some(*g),
+        _ => None,
+    };
+    drop(reg);
+    got.unwrap_or_else(|| panic!("metric `{name}` already registered with another type"))
+}
+
+/// Look up (or register) the named histogram.
+pub fn histogram(name: &str) -> &'static Histogram {
+    let mut reg = registry().lock().unwrap();
+    let got = match reg
+        .entry(name.to_string())
+        .or_insert_with(|| Metric::Histogram(Box::leak(Box::default())))
+    {
+        Metric::Histogram(h) => Some(*h),
+        _ => None,
+    };
+    drop(reg);
+    got.unwrap_or_else(|| panic!("metric `{name}` already registered with another type"))
+}
+
+// ------------------------------------------------- convenience recorders
+//
+// Instrumentation call sites use these: when the registry is disabled the
+// cost is a single relaxed load + branch, with no name lookup.
+
+/// Bump a counter by `n` (no-op while disabled).
+#[inline]
+pub fn add(name: &str, n: u64) {
+    if enabled() {
+        counter(name).add(n);
+    }
+}
+
+/// Set a gauge (no-op while disabled).
+#[inline]
+pub fn gauge_set(name: &str, v: i64) {
+    if enabled() {
+        gauge(name).set(v);
+    }
+}
+
+/// Record a histogram sample (no-op while disabled).
+#[inline]
+pub fn observe(name: &str, v: u64) {
+    if enabled() {
+        histogram(name).record(v);
+    }
+}
+
+/// Serialize every registered metric to deterministic sorted JSON:
+/// `{"counters": {..}, "gauges": {..}, "histograms": {name: {count, sum,
+/// min, max, mean, p50, p95, p99}}}`.
+pub fn snapshot() -> Json {
+    let reg = registry().lock().unwrap();
+    let mut counters = Json::obj();
+    let mut gauges = Json::obj();
+    let mut histograms = Json::obj();
+    for (name, m) in reg.iter() {
+        match m {
+            Metric::Counter(c) => {
+                counters.set(name, c.get() as f64);
+            }
+            Metric::Gauge(g) => {
+                gauges.set(name, g.get() as f64);
+            }
+            Metric::Histogram(h) => {
+                histograms.set(name, h.to_json());
+            }
+        }
+    }
+    let mut j = Json::obj();
+    j.set("counters", counters);
+    j.set("gauges", gauges);
+    j.set("histograms", histograms);
+    j
+}
+
+#[cfg(all(test, not(feature = "no-obs")))]
+mod tests {
+    use super::*;
+
+    // The enable flag is process-global and lib tests run in parallel:
+    // every test that flips it serializes on this gate and restores the
+    // disabled state before releasing it.
+    fn gate() -> std::sync::MutexGuard<'static, ()> {
+        static GATE: Mutex<()> = Mutex::new(());
+        GATE.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    #[test]
+    fn bucket_layout_is_exact_below_sixteen_and_monotone() {
+        for v in 0..(2 * SUB as u64) {
+            assert_eq!(bucket_index(v), v as usize, "exact bucket for {v}");
+            assert_eq!(bucket_floor(v as usize), v);
+        }
+        let mut prev = 0;
+        for v in [
+            1u64,
+            7,
+            8,
+            16,
+            17,
+            100,
+            1000,
+            1 << 20,
+            u64::MAX / 2,
+            u64::MAX,
+        ] {
+            let i = bucket_index(v);
+            assert!(i >= prev, "monotone index for {v}");
+            assert!(i < BUCKETS);
+            let floor = bucket_floor(i);
+            assert!(floor <= v, "floor {floor} > value {v}");
+            // Floor within 12.5% of the value (one sub-bucket of slack).
+            assert!(
+                (v - floor) as f64 <= v as f64 / SUB as f64,
+                "floor {floor} too far below {v}"
+            );
+            prev = i;
+        }
+    }
+
+    #[test]
+    fn disabled_recorders_do_not_touch_registered_metrics() {
+        let _g = gate();
+        set_enabled(false);
+        add("test.disabled_counter", 5);
+        observe("test.disabled_hist", 42);
+        gauge_set("test.disabled_gauge", 7);
+        // The convenience recorders short-circuit before registration, so
+        // the names never appear in the snapshot.
+        let snap = snapshot().to_string();
+        assert!(!snap.contains("test.disabled_counter"));
+        assert!(!snap.contains("test.disabled_hist"));
+        assert!(!snap.contains("test.disabled_gauge"));
+    }
+
+    #[test]
+    fn counters_gauges_histograms_record_and_snapshot() {
+        let _g = gate();
+        set_enabled(true);
+        add("test.snap_counter", 3);
+        add("test.snap_counter", 4);
+        gauge_set("test.snap_gauge", -12);
+        for v in [2u64, 2, 3, 9, 1000] {
+            observe("test.snap_hist", v);
+        }
+        set_enabled(false);
+
+        assert_eq!(counter("test.snap_counter").get(), 7);
+        assert_eq!(gauge("test.snap_gauge").get(), -12);
+        let h = histogram("test.snap_hist");
+        assert_eq!(h.count(), 5);
+        assert_eq!(h.quantile(0.50), 3); // exact: small values hit exact buckets
+
+        let snap = snapshot();
+        fn num(j: &Json, path: &[&str]) -> f64 {
+            let mut cur = j;
+            for k in path {
+                cur = cur.get(k).unwrap_or_else(|| panic!("missing key {k}"));
+            }
+            cur.as_f64().unwrap()
+        }
+        assert_eq!(num(&snap, &["counters", "test.snap_counter"]), 7.0);
+        assert_eq!(num(&snap, &["gauges", "test.snap_gauge"]), -12.0);
+        assert_eq!(num(&snap, &["histograms", "test.snap_hist", "count"]), 5.0);
+        assert_eq!(num(&snap, &["histograms", "test.snap_hist", "min"]), 2.0);
+        assert_eq!(num(&snap, &["histograms", "test.snap_hist", "p50"]), 3.0);
+        // 1000 lands in an approximate bucket: p99 within 12.5% below max.
+        let p99 = num(&snap, &["histograms", "test.snap_hist", "p99"]);
+        assert!((875.0..=1000.0).contains(&p99), "p99 = {p99}");
+    }
+
+    #[test]
+    fn quantiles_are_exact_for_small_integer_samples() {
+        // Direct handle recording bypasses the enable flag, so no gate.
+        let h = histogram("test.exact_quantiles");
+        for v in 1..=10u64 {
+            h.record(v);
+        }
+        assert_eq!(h.quantile(0.50), 5);
+        assert_eq!(h.quantile(0.95), 10);
+        assert_eq!(h.quantile(0.99), 10);
+        assert_eq!(h.quantile(0.10), 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "already registered with another type")]
+    fn type_confusion_panics() {
+        counter("test.type_confused");
+        histogram("test.type_confused");
+    }
+}

@@ -8,12 +8,14 @@
 pub mod bench;
 pub mod json;
 pub mod logging;
+pub mod metrics;
 pub mod parallel;
 pub mod pool;
 pub mod rng;
 pub mod scratch;
 pub mod simd;
 pub mod stats;
+pub mod trace_span;
 
 pub use json::Json;
 pub use parallel::{par_chunk_map, par_chunks_mut};

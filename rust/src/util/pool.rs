@@ -37,6 +37,8 @@ use std::panic::AssertUnwindSafe;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex, OnceLock};
 
+use crate::util::{metrics, trace_span};
+
 /// Type-erased pointer to a job's chunk runner. May dangle once the
 /// submitting frame returns; the completion protocol guarantees it is
 /// never dereferenced after that (see [`WorkerPool::run`]).
@@ -76,12 +78,21 @@ struct Job {
 impl Job {
     /// Claim and run chunks until the cursor is exhausted. Returns after
     /// the *claim* fails; other claimed chunks may still be running.
-    fn run_chunks(&self) {
+    /// `worker` marks pool-thread executions (vs the submitting thread)
+    /// for the `pool.tasks_stolen` metric and the per-worker trace lanes.
+    fn run_chunks(&self, worker: bool) {
         loop {
             let i = self.next.fetch_add(1, Ordering::Relaxed);
             if i >= self.n_chunks {
                 return;
             }
+            metrics::add("pool.chunks_run", 1);
+            if worker {
+                metrics::add("pool.tasks_stolen", 1);
+            }
+            // One wall span per chunk: each OS thread is its own trace
+            // lane, so these render as per-worker occupancy bars.
+            let _sp = trace_span::span("pool", if worker { "chunk(stolen)" } else { "chunk" });
             // SAFETY: `i < n_chunks` was claimed, so the submitter is still
             // blocked in `run` and the pointee is alive.
             let task = unsafe { &*self.task.0 };
@@ -172,7 +183,8 @@ impl WorkerPool {
             q.push(job.clone());
         }
         self.shared.work_cv.notify_all();
-        job.run_chunks();
+        metrics::add("pool.jobs", 1);
+        job.run_chunks(false);
         let mut left = job.left.lock().unwrap();
         while *left > 0 {
             left = job.done_cv.wait(left).unwrap();
@@ -203,7 +215,7 @@ fn worker_loop(shared: &Shared) {
                 q = shared.work_cv.wait(q).unwrap();
             }
         };
-        job.run_chunks();
+        job.run_chunks(true);
     }
 }
 

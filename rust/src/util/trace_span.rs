@@ -1,0 +1,459 @@
+//! Lightweight span tracing with Chrome/Perfetto `trace_event` export.
+//!
+//! Two clock domains share one bounded global sink:
+//!
+//! * **Wall clock** (`pid 1`): scoped RAII [`span`] guards record "X"
+//!   complete events in microseconds since process start, one lane (tid)
+//!   per OS thread — compile phases, per-layer simulate calls, worker-pool
+//!   chunk execution. Wall lanes are real time and therefore not
+//!   replay-deterministic; they exist for profiling.
+//! * **Virtual cycles** (`pid 2`, plus `pid 3` for per-PE issue events):
+//!   explicit emitters stamp events with simulator cycle counts — serve
+//!   fleet timelines, per-layer compute/transfer/fill attribution. These
+//!   are derived purely from simulation state, so two same-seed runs
+//!   export byte-identical traces. One trace tick equals one sim cycle.
+//!
+//! Everything is disabled by default; emitters short-circuit on a relaxed
+//! atomic load so instrumented code costs a branch per site until
+//! `--trace-out` turns a domain on. The event buffer is bounded by
+//! `--trace-limit`; overflow increments a `dropped` counter that the
+//! export records under `otherData.dropped_events`. The `no-obs` cargo
+//! feature compiles both domain checks to constant `false`.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::Instant;
+
+/// Wall-clock process lane.
+pub const WALL_PID: u32 = 1;
+/// Virtual-cycle process lane (engine layers, serve fleet).
+pub const CYCLES_PID: u32 = 2;
+/// Per-PE issue events promoted from `sim::trace` (Table-I style).
+pub const PE_PID: u32 = 3;
+
+/// Argument value attached to an event (`args` in trace_event JSON).
+pub enum Arg {
+    U(u64),
+    F(f64),
+    S(String),
+}
+
+struct Event {
+    ph: char,
+    pid: u32,
+    tid: u64,
+    ts: u64,
+    dur: u64,
+    cat: &'static str,
+    name: String,
+    args: Vec<(&'static str, Arg)>,
+}
+
+struct Sink {
+    wall: AtomicBool,
+    cycles: AtomicBool,
+    limit: AtomicUsize,
+    dropped: AtomicU64,
+    events: Mutex<Vec<Event>>,
+    epoch: Instant,
+    next_wall_tid: AtomicU64,
+    next_cycle_track: AtomicU64,
+    pe_budget: AtomicU64,
+}
+
+fn sink() -> &'static Sink {
+    static SINK: OnceLock<Sink> = OnceLock::new();
+    SINK.get_or_init(|| Sink {
+        wall: AtomicBool::new(false),
+        cycles: AtomicBool::new(false),
+        limit: AtomicUsize::new(0),
+        dropped: AtomicU64::new(0),
+        events: Mutex::new(Vec::new()),
+        epoch: Instant::now(),
+        next_wall_tid: AtomicU64::new(0),
+        next_cycle_track: AtomicU64::new(0),
+        pe_budget: AtomicU64::new(0),
+    })
+}
+
+/// Enable tracing with an event cap. `wall` turns on the RAII wall-clock
+/// spans; `cycles` turns on the virtual-cycle emitters. Serve traces
+/// enable only `cycles` so replay is bit-deterministic.
+pub fn enable(limit: usize, wall: bool, cycles: bool) {
+    #[cfg(feature = "no-obs")]
+    {
+        let _ = (limit, wall, cycles);
+    }
+    #[cfg(not(feature = "no-obs"))]
+    {
+        let s = sink();
+        s.limit.store(limit, Ordering::SeqCst);
+        s.wall.store(wall, Ordering::SeqCst);
+        s.cycles.store(cycles, Ordering::SeqCst);
+    }
+}
+
+/// Turn both domains off (the buffer is kept until [`clear`]).
+pub fn disable() {
+    let s = sink();
+    s.wall.store(false, Ordering::SeqCst);
+    s.cycles.store(false, Ordering::SeqCst);
+}
+
+/// Drop all buffered events and reset the drop counter and PE budget.
+pub fn clear() {
+    let s = sink();
+    s.events.lock().unwrap().clear();
+    s.dropped.store(0, Ordering::SeqCst);
+    s.pe_budget.store(0, Ordering::SeqCst);
+}
+
+#[inline]
+pub fn wall_enabled() -> bool {
+    #[cfg(feature = "no-obs")]
+    {
+        false
+    }
+    #[cfg(not(feature = "no-obs"))]
+    {
+        sink().wall.load(Ordering::Relaxed)
+    }
+}
+
+#[inline]
+pub fn cycles_enabled() -> bool {
+    #[cfg(feature = "no-obs")]
+    {
+        false
+    }
+    #[cfg(not(feature = "no-obs"))]
+    {
+        sink().cycles.load(Ordering::Relaxed)
+    }
+}
+
+fn push(ev: Event) {
+    let s = sink();
+    let mut events = s.events.lock().unwrap();
+    if events.len() < s.limit.load(Ordering::Relaxed) {
+        events.push(ev);
+    } else {
+        s.dropped.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+/// Number of events rejected by the `--trace-limit` cap so far.
+pub fn dropped() -> u64 {
+    sink().dropped.load(Ordering::Relaxed)
+}
+
+// ------------------------------------------------------ wall-clock spans
+
+thread_local! {
+    static WALL_TID: std::cell::OnceCell<u64> = const { std::cell::OnceCell::new() };
+}
+
+/// Stable per-thread wall lane id; registers a `thread_name` metadata
+/// event on first use so Perfetto labels the lane.
+fn wall_tid() -> u64 {
+    WALL_TID.with(|c| {
+        *c.get_or_init(|| {
+            let id = sink().next_wall_tid.fetch_add(1, Ordering::Relaxed);
+            let name = std::thread::current()
+                .name()
+                .map(str::to_string)
+                .unwrap_or_else(|| format!("thread-{id}"));
+            push(Event {
+                ph: 'M',
+                pid: WALL_PID,
+                tid: id,
+                ts: 0,
+                dur: 0,
+                cat: "__metadata",
+                name: "thread_name".to_string(),
+                args: vec![("name", Arg::S(name))],
+            });
+            id
+        })
+    })
+}
+
+/// RAII wall-clock span: records an "X" event on drop.
+pub struct Span {
+    cat: &'static str,
+    name: String,
+    start_us: u64,
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        let end_us = sink().epoch.elapsed().as_micros() as u64;
+        push(Event {
+            ph: 'X',
+            pid: WALL_PID,
+            tid: wall_tid(),
+            ts: self.start_us,
+            dur: end_us.saturating_sub(self.start_us),
+            cat: self.cat,
+            name: std::mem::take(&mut self.name),
+            args: Vec::new(),
+        });
+    }
+}
+
+/// Open a wall-clock span; `None` (zero-cost to hold) while disabled.
+/// Guard callers that build dynamic names with [`wall_enabled`] to avoid
+/// paying the `format!` when tracing is off.
+#[inline]
+pub fn span(cat: &'static str, name: impl Into<String>) -> Option<Span> {
+    if !wall_enabled() {
+        return None;
+    }
+    Some(Span {
+        cat,
+        name: name.into(),
+        start_us: sink().epoch.elapsed().as_micros() as u64,
+    })
+}
+
+// --------------------------------------------------- virtual-cycle events
+
+/// Reserve `n` consecutive cycle-domain track ids (tids under
+/// [`CYCLES_PID`]). Sequential callers get deterministic ids.
+pub fn alloc_cycle_tracks(n: u64) -> u64 {
+    sink().next_cycle_track.fetch_add(n, Ordering::Relaxed)
+}
+
+/// Claim cycle tracks `[base, base+n)` explicitly (serve uses instance
+/// indices as track ids) so later [`alloc_cycle_tracks`] calls don't
+/// collide with them.
+pub fn reserve_cycle_tracks(base: u64, n: u64) {
+    sink().next_cycle_track.fetch_max(base + n, Ordering::Relaxed);
+}
+
+/// Name a cycle-domain track (Perfetto lane label).
+pub fn name_track(pid: u32, track: u64, name: impl Into<String>) {
+    if !cycles_enabled() {
+        return;
+    }
+    push(Event {
+        ph: 'M',
+        pid,
+        tid: track,
+        ts: 0,
+        dur: 0,
+        cat: "__metadata",
+        name: "thread_name".to_string(),
+        args: vec![("name", Arg::S(name.into()))],
+    });
+}
+
+/// Emit a complete ("X") event stamped in sim cycles.
+pub fn complete_cycles(
+    pid: u32,
+    track: u64,
+    cat: &'static str,
+    name: impl Into<String>,
+    ts: u64,
+    dur: u64,
+    args: Vec<(&'static str, Arg)>,
+) {
+    if !cycles_enabled() {
+        return;
+    }
+    push(Event {
+        ph: 'X',
+        pid,
+        tid: track,
+        ts,
+        dur,
+        cat,
+        name: name.into(),
+        args,
+    });
+}
+
+/// Emit an instant ("i") marker stamped in sim cycles.
+pub fn instant_cycles(pid: u32, track: u64, cat: &'static str, name: impl Into<String>, ts: u64) {
+    if !cycles_enabled() {
+        return;
+    }
+    push(Event {
+        ph: 'i',
+        pid,
+        tid: track,
+        ts,
+        dur: 0,
+        cat,
+        name: name.into(),
+        args: Vec::new(),
+    });
+}
+
+/// Emit a counter ("C") sample stamped in sim cycles. Counters are keyed
+/// by (pid, name) in Perfetto, so per-instance counters need distinct
+/// names (e.g. `inst03.queue`).
+pub fn counter_cycles(pid: u32, name: impl Into<String>, ts: u64, key: &'static str, value: u64) {
+    if !cycles_enabled() {
+        return;
+    }
+    push(Event {
+        ph: 'C',
+        pid,
+        tid: 0,
+        ts,
+        dur: 0,
+        cat: "counter",
+        name: name.into(),
+        args: vec![(key, Arg::U(value))],
+    });
+}
+
+// -------------------------------------------------------- PE issue budget
+//
+// `vscnn simulate --trace-out` promotes the per-cycle PE trace
+// (`sim::trace::Trace`) into the export. The sequential functional walk
+// that produces those events is slow, so a run-wide budget bounds how
+// many issue events the engine asks for; once exhausted, later layers
+// fall back to the index-only timing path.
+
+/// Set the run-wide PE issue-event budget (simulate CLI only).
+pub fn set_pe_budget(n: u64) {
+    sink().pe_budget.store(n, Ordering::SeqCst);
+}
+
+/// Remaining PE issue-event budget; 0 when PE tracing is off.
+pub fn pe_budget() -> u64 {
+    if !cycles_enabled() {
+        return 0;
+    }
+    sink().pe_budget.load(Ordering::Relaxed)
+}
+
+/// Consume `n` events from the PE budget after a traced layer.
+pub fn pe_consume(n: u64) {
+    let s = sink();
+    let cur = s.pe_budget.load(Ordering::Relaxed);
+    s.pe_budget.store(cur.saturating_sub(n), Ordering::Relaxed);
+}
+
+// ----------------------------------------------------------------- export
+
+fn escape_into(out: &mut String, s: &str) {
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+}
+
+fn write_event(out: &mut String, ev: &Event) {
+    out.push_str("{\"name\":\"");
+    escape_into(out, &ev.name);
+    out.push_str("\",\"cat\":\"");
+    escape_into(out, ev.cat);
+    out.push_str("\",\"ph\":\"");
+    out.push(ev.ph);
+    out.push_str("\",\"pid\":");
+    out.push_str(&ev.pid.to_string());
+    out.push_str(",\"tid\":");
+    out.push_str(&ev.tid.to_string());
+    out.push_str(",\"ts\":");
+    out.push_str(&ev.ts.to_string());
+    if ev.ph == 'X' {
+        out.push_str(",\"dur\":");
+        out.push_str(&ev.dur.to_string());
+    }
+    if ev.ph == 'i' {
+        out.push_str(",\"s\":\"t\"");
+    }
+    if !ev.args.is_empty() {
+        out.push_str(",\"args\":{");
+        for (i, (k, v)) in ev.args.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push('"');
+            escape_into(out, k);
+            out.push_str("\":");
+            match v {
+                Arg::U(u) => out.push_str(&u.to_string()),
+                Arg::F(f) => out.push_str(&format!("{f}")),
+                Arg::S(s) => {
+                    out.push('"');
+                    escape_into(out, s);
+                    out.push('"');
+                }
+            }
+        }
+        out.push('}');
+    }
+    out.push('}');
+}
+
+/// Serialize the buffer to Chrome `trace_event` JSON. Deterministic for
+/// a deterministic event sequence: fixed key order, process-name
+/// metadata derived from the pids present, no wall-clock stamps unless
+/// wall spans were recorded.
+pub fn export_string() -> String {
+    let s = sink();
+    let events = s.events.lock().unwrap();
+    let mut out = String::with_capacity(events.len() * 96 + 256);
+    out.push_str("{\"traceEvents\":[");
+    let mut first = true;
+    for pid in [WALL_PID, CYCLES_PID, PE_PID] {
+        if events.iter().any(|e| e.pid == pid) {
+            let label = match pid {
+                WALL_PID => "vscnn wall clock (us)",
+                CYCLES_PID => "vscnn sim (cycles)",
+                _ => "vscnn pe issue (cycles)",
+            };
+            if !first {
+                out.push(',');
+            }
+            first = false;
+            write_event(
+                &mut out,
+                &Event {
+                    ph: 'M',
+                    pid,
+                    tid: 0,
+                    ts: 0,
+                    dur: 0,
+                    cat: "__metadata",
+                    name: "process_name".to_string(),
+                    args: vec![("name", Arg::S(label.to_string()))],
+                },
+            );
+        }
+    }
+    for ev in events.iter() {
+        if !first {
+            out.push(',');
+        }
+        first = false;
+        write_event(&mut out, ev);
+    }
+    out.push_str("],\"displayTimeUnit\":\"ms\",\"otherData\":{");
+    out.push_str("\"cycle_domain\":\"pids 2,3: 1 tick = 1 sim cycle\",\"dropped_events\":");
+    out.push_str(&s.dropped.load(Ordering::Relaxed).to_string());
+    out.push_str("}}\n");
+    out
+}
+
+/// Write the trace to `path` (see [`export_string`]).
+pub fn write_chrome_trace(path: &str) -> std::io::Result<()> {
+    std::fs::write(path, export_string())
+}
+
+// Behavioral tests live in tests/observability.rs: the sink is
+// process-global, and the engine/serve/pool unit tests in this lib run
+// concurrently with instrumented code, so exact-count assertions need a
+// dedicated test binary where every tracer-flipping test serializes on
+// one gate.

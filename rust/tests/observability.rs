@@ -1,0 +1,338 @@
+//! Behavioral tests for the observability layer (`util::metrics`,
+//! `util::trace_span`) and its end-to-end guarantees:
+//!
+//! * disabled collectors record nothing and cost nothing observable;
+//! * the Chrome `trace_event` export has a fixed, parseable shape;
+//! * two same-seed traced serve runs export byte-identical timelines;
+//! * reports are byte-identical with observability on and off.
+//!
+//! The metrics registry and the trace sink are process-global, so every
+//! test here — each flips global collector state — serializes on one
+//! gate mutex. They live in their own integration binary because the
+//! library's unit tests run instrumented engine/pool/serve code
+//! concurrently and would race exact-count assertions.
+
+#![cfg(not(feature = "no-obs"))]
+
+use vscnn::engine::{compile, CompileOptions, Engine, RunOptions};
+use vscnn::model::init::{synthetic_image, synthetic_params};
+use vscnn::model::vgg16::tiny_vgg;
+use vscnn::pruning::{self, sensitivity::flat_schedule};
+use vscnn::serve::{
+    simulate, BatchPolicy, DispatchPolicy, FaultSpec, InstanceSpec, RobustnessPolicy, ServeReport,
+    ServeSpec, ServiceProfile, Tenant, TrafficModel,
+};
+use vscnn::sim::config::SimConfig;
+use vscnn::util::json::Json;
+use vscnn::util::{metrics, trace_span};
+
+/// Serialize every test in this binary: they all mutate the global
+/// collector state. Poison-tolerant so one failure doesn't cascade.
+fn gate() -> std::sync::MutexGuard<'static, ()> {
+    static GATE: std::sync::Mutex<()> = std::sync::Mutex::new(());
+    GATE.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Reset collectors to the pristine default (off, empty buffer).
+fn reset() {
+    trace_span::disable();
+    trace_span::clear();
+    metrics::set_enabled(false);
+}
+
+fn parse_export() -> Json {
+    let s = trace_span::export_string();
+    Json::parse(&s).unwrap_or_else(|e| panic!("export is not valid JSON: {e:?}\n{s}"))
+}
+
+fn dropped_events(j: &Json) -> f64 {
+    let other = j.get("otherData").unwrap();
+    other.get("dropped_events").unwrap().as_f64().unwrap()
+}
+
+#[test]
+fn disabled_collectors_record_nothing() {
+    let _g = gate();
+    reset();
+    assert!(trace_span::span("test", "noop").is_none());
+    trace_span::complete_cycles(trace_span::CYCLES_PID, 0, "test", "noop", 0, 10, Vec::new());
+    trace_span::instant_cycles(trace_span::CYCLES_PID, 0, "test", "noop", 5);
+    trace_span::counter_cycles(trace_span::CYCLES_PID, "noop.q", 5, "queued", 1);
+    trace_span::name_track(trace_span::CYCLES_PID, 0, "noop");
+    assert_eq!(trace_span::pe_budget(), 0, "budget reads 0 while disabled");
+    let j = parse_export();
+    assert_eq!(j.get("traceEvents").unwrap().as_arr().unwrap().len(), 0);
+    reset();
+}
+
+#[test]
+fn export_has_fixed_parseable_shape() {
+    let _g = gate();
+    reset();
+    trace_span::enable(1024, false, true);
+    trace_span::name_track(trace_span::CYCLES_PID, 7, "lane seven");
+    trace_span::complete_cycles(
+        trace_span::CYCLES_PID,
+        7,
+        "layer",
+        "conv1_1",
+        100,
+        50,
+        vec![
+            ("compute_cycles", trace_span::Arg::U(40)),
+            ("note", trace_span::Arg::S("a \"quoted\" name".to_string())),
+        ],
+    );
+    trace_span::instant_cycles(trace_span::CYCLES_PID, 7, "fault", "crash", 120);
+    trace_span::counter_cycles(trace_span::CYCLES_PID, "inst007.queue", 120, "queued", 3);
+    let first = trace_span::export_string();
+    assert_eq!(first, trace_span::export_string(), "export is replayable");
+
+    let j = Json::parse(&first).expect("valid JSON");
+    assert!(j.get("displayTimeUnit").is_some());
+    assert_eq!(dropped_events(&j), 0.0);
+    let evs = j.get("traceEvents").unwrap().as_arr().unwrap();
+    // process_name metadata + thread_name + X + i + C.
+    assert_eq!(evs.len(), 5);
+    for ev in evs {
+        for key in ["name", "cat", "ph", "pid", "tid", "ts"] {
+            assert!(ev.get(key).is_some(), "missing {key} in {}", ev.to_string());
+        }
+    }
+    let ph_of = |i: usize| evs[i].get("ph").unwrap().as_str().unwrap().to_string();
+    assert_eq!(ph_of(0), "M", "process_name metadata leads");
+    let x = &evs[2];
+    assert_eq!(x.get("ph").unwrap().as_str(), Some("X"));
+    assert_eq!(x.get("ts").unwrap().as_f64(), Some(100.0));
+    assert_eq!(x.get("dur").unwrap().as_f64(), Some(50.0));
+    let args = x.get("args").unwrap();
+    assert_eq!(args.get("compute_cycles").unwrap().as_f64(), Some(40.0));
+    let i_ev = &evs[3];
+    assert_eq!(i_ev.get("ph").unwrap().as_str(), Some("i"));
+    assert_eq!(i_ev.get("s").unwrap().as_str(), Some("t"), "instant scope");
+    assert!(i_ev.get("dur").is_none(), "instants carry no dur");
+    let c_ev = &evs[4];
+    assert_eq!(c_ev.get("ph").unwrap().as_str(), Some("C"));
+    let cargs = c_ev.get("args").unwrap();
+    assert_eq!(cargs.get("queued").unwrap().as_f64(), Some(3.0));
+    reset();
+}
+
+#[test]
+fn wall_spans_record_on_drop_with_thread_lane() {
+    let _g = gate();
+    reset();
+    trace_span::enable(1024, true, false);
+    {
+        let _outer = trace_span::span("test", "outer");
+        let _inner = trace_span::span("test", "inner");
+    }
+    let j = parse_export();
+    let evs = j.get("traceEvents").unwrap().as_arr().unwrap();
+    let xs: Vec<&Json> = evs
+        .iter()
+        .filter(|e| e.get("ph").unwrap().as_str() == Some("X"))
+        .collect();
+    assert_eq!(xs.len(), 2);
+    // RAII: inner drops (and records) first; both on the same wall lane.
+    assert_eq!(xs[0].get("name").unwrap().as_str(), Some("inner"));
+    assert_eq!(xs[1].get("name").unwrap().as_str(), Some("outer"));
+    assert_eq!(xs[0].get("tid").unwrap().as_f64(), xs[1].get("tid").unwrap().as_f64());
+    for x in &xs {
+        assert_eq!(x.get("pid").unwrap().as_f64(), Some(trace_span::WALL_PID as f64));
+    }
+    // The lane carries a thread_name metadata event.
+    assert!(evs.iter().any(|e| {
+        e.get("ph").unwrap().as_str() == Some("M")
+            && e.get("name").unwrap().as_str() == Some("thread_name")
+    }));
+    reset();
+}
+
+#[test]
+fn trace_limit_drops_and_reports_excess() {
+    let _g = gate();
+    reset();
+    trace_span::enable(3, false, true);
+    for t in 0..10u64 {
+        trace_span::complete_cycles(trace_span::CYCLES_PID, 0, "test", "e", t, 1, Vec::new());
+    }
+    assert_eq!(trace_span::dropped(), 7);
+    let j = parse_export();
+    assert_eq!(j.get("traceEvents").unwrap().as_arr().unwrap().len(), 3 + 1);
+    assert_eq!(dropped_events(&j), 7.0);
+    reset();
+}
+
+#[test]
+fn pe_budget_is_consumed_and_gated_on_cycles() {
+    let _g = gate();
+    reset();
+    trace_span::set_pe_budget(100);
+    assert_eq!(trace_span::pe_budget(), 0, "cycles off -> budget reads 0");
+    trace_span::enable(64, false, true);
+    trace_span::set_pe_budget(100);
+    assert_eq!(trace_span::pe_budget(), 100);
+    trace_span::pe_consume(30);
+    assert_eq!(trace_span::pe_budget(), 70);
+    trace_span::pe_consume(1000);
+    assert_eq!(trace_span::pe_budget(), 0, "saturating consume");
+    reset();
+}
+
+#[test]
+fn metrics_off_then_on_counts_only_while_enabled() {
+    let _g = gate();
+    reset();
+    metrics::add("obs_test.hits", 5);
+    metrics::observe("obs_test.lat", 10);
+    metrics::set_enabled(true);
+    metrics::add("obs_test.hits", 2);
+    metrics::observe("obs_test.lat", 7);
+    metrics::set_enabled(false);
+    metrics::add("obs_test.hits", 100);
+    assert_eq!(metrics::counter("obs_test.hits").get(), 2);
+    assert_eq!(metrics::histogram("obs_test.lat").count(), 1);
+    reset();
+}
+
+// ------------------------------------------------------------ end to end
+
+fn faulted_spec() -> (ServeSpec, Vec<Vec<ServiceProfile>>) {
+    let spec = ServeSpec {
+        tenants: vec![Tenant::new("vgg16", 32, 0.6), Tenant::new("resnet10", 16, 0.4)],
+        instances: vec![
+            InstanceSpec {
+                config: SimConfig::paper_8_7_3(),
+            },
+            InstanceSpec {
+                config: SimConfig::paper_4_14_3(),
+            },
+            InstanceSpec {
+                config: SimConfig::paper_4_14_3(),
+            },
+        ],
+        traffic: TrafficModel::OpenLoop { rps: 2_000.0 },
+        policy: DispatchPolicy::NetworkAffinity,
+        batch: BatchPolicy {
+            max_batch: 4,
+            max_wait_cycles: 100_000,
+        },
+        queue_cap: 16,
+        racks: 1,
+        duration_cycles: 100_000_000,
+        clock_mhz: 500.0,
+        seed: 9,
+        faults: FaultSpec::parse("crash:60,mttr:2").unwrap(),
+        robust: RobustnessPolicy {
+            timeout_cycles: 5_000_000,
+            max_retries: 2,
+            backoff_cycles: 10_000,
+            hedge_cycles: 0,
+            shed: false,
+        },
+    };
+    let prof = ServiceProfile {
+        single_cycles: 800_000,
+        marginal_cycles: 500_000,
+        switch_cycles: 300_000,
+    };
+    let profiles = vec![vec![prof; 3]; 2];
+    (spec, profiles)
+}
+
+/// The headline guarantee: a faulted serve run traced twice with the
+/// same seed exports byte-identical timelines (cycles-only tracing, tid
+/// == instance index), containing exec spans, crash markers, and down
+/// intervals.
+#[test]
+fn traced_faulted_serve_runs_are_byte_identical() {
+    let _g = gate();
+    reset();
+    let (spec, profiles) = faulted_spec();
+
+    trace_span::enable(1 << 20, false, true);
+    let out_a = simulate(&spec, &profiles);
+    let export_a = trace_span::export_string();
+    trace_span::clear();
+    let out_b = simulate(&spec, &profiles);
+    let export_b = trace_span::export_string();
+    assert_eq!(export_a, export_b, "same-seed traced runs must be identical");
+    assert_eq!(
+        ServeReport::new(&spec, &out_a).to_json().pretty(),
+        ServeReport::new(&spec, &out_b).to_json().pretty()
+    );
+
+    let j = Json::parse(&export_a).expect("valid JSON");
+    let evs = j.get("traceEvents").unwrap().as_arr().unwrap();
+    assert!(!evs.is_empty());
+    let has = |ph: &str, cat: &str| {
+        evs.iter().any(|e| {
+            e.get("ph").unwrap().as_str() == Some(ph)
+                && e.get("cat").and_then(|c| c.as_str()) == Some(cat)
+        })
+    };
+    assert!(has("X", "exec"), "batch execution spans");
+    assert!(has("i", "fault"), "crash/recover markers");
+    assert!(has("X", "down"), "downtime intervals");
+    assert!(has("C", "counter"), "queue-depth counters");
+    // Every cycle-domain tid is an instance index.
+    for e in evs {
+        if e.get("ph").unwrap().as_str() == Some("M") {
+            continue;
+        }
+        let tid = e.get("tid").unwrap().as_f64().unwrap();
+        assert!((tid as usize) < spec.instances.len(), "tid {tid} out of fleet range");
+    }
+    reset();
+}
+
+/// Pinning the acceptance gate: with collectors enabled, the *reports*
+/// (serve and network) are byte-identical to an untouched run —
+/// observability reads simulation state, never alters it.
+#[test]
+fn reports_are_byte_identical_with_observability_enabled() {
+    let _g = gate();
+    reset();
+
+    // Serve side.
+    let (spec, profiles) = faulted_spec();
+    let plain = ServeReport::new(&spec, &simulate(&spec, &profiles)).to_json().pretty();
+    metrics::set_enabled(true);
+    trace_span::enable(1 << 20, false, true);
+    let observed = ServeReport::new(&spec, &simulate(&spec, &profiles)).to_json().pretty();
+    assert_eq!(plain, observed, "serve report must not change under tracing");
+    reset();
+
+    // Engine side, PE issue tracing included.
+    let net = tiny_vgg(8);
+    let mut params = synthetic_params(&net, 5, 0.0);
+    pruning::prune_network_vectors(&mut params, &flat_schedule(&net, 0.4));
+    let img = synthetic_image(net.input_shape, 5);
+    let prepared = std::sync::Arc::new(compile(&net, params, &CompileOptions::new(3)));
+    let mut cfg = SimConfig::paper_4_14_3();
+    cfg.pe.arrays = 2;
+    cfg.pe.rows = 4;
+    let mut opts = RunOptions::new(cfg);
+    opts.backend = vscnn::engine::FunctionalBackend::Golden;
+    opts.verify_dataflow = false;
+    let engine = Engine::new(prepared);
+    let plain = engine.run_image(&img, &opts).unwrap().to_json().pretty();
+    metrics::set_enabled(true);
+    trace_span::enable(1 << 20, true, true);
+    trace_span::set_pe_budget(10_000);
+    let observed = engine.run_image(&img, &opts).unwrap().to_json().pretty();
+    assert_eq!(plain, observed, "network report must not change under tracing");
+    // And the trace actually captured the run: layer spans + PE issues.
+    let j = parse_export();
+    let evs = j.get("traceEvents").unwrap().as_arr().unwrap();
+    assert!(evs.iter().any(|e| {
+        e.get("cat").and_then(|c| c.as_str()) == Some("layer")
+            && e.get("pid").unwrap().as_f64() == Some(trace_span::CYCLES_PID as f64)
+    }));
+    assert!(evs.iter().any(|e| {
+        e.get("pid").unwrap().as_f64() == Some(trace_span::PE_PID as f64)
+            && e.get("ph").unwrap().as_str() == Some("X")
+    }));
+    reset();
+}
