@@ -33,6 +33,7 @@ fn spec_at(rps: f64, policy: DispatchPolicy, max_batch: usize) -> ServeSpec {
         seed: 7,
         faults: FaultSpec::none(),
         robust: RobustnessPolicy::none(),
+        sdc: vscnn::sim::sdc::SdcSpec::none(),
     }
 }
 

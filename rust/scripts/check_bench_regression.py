@@ -18,7 +18,11 @@ Takes one or more NEW/BASELINE pairs and compares each pair of
   threshold), and notes improvements;
 * the observability cost pair (`metrics_{off,on}_images_per_sec`, when the
   report carries it) — printed per report, with a warn-only note when the
-  metrics registry costs more than 3%.
+  metrics registry costs more than 3%;
+* the data-integrity cost (`checksum_overhead_frac`, written by
+  `vscnn exp serve-sdc` into `BENCH_serve_sdc.json`) — printed per
+  report, with a warn-only note when ABFT checksums + CVF validation
+  cost more than 5% of clean goodput.
 
 A missing NEW or BASELINE file skips that pair with a note (first-PR
 bootstrap: the baseline does not exist yet).
@@ -79,6 +83,24 @@ def report_metrics_overhead(doc, path, limit=0.03):
               f"idle)", file=sys.stderr)
 
 
+def report_sdc_overhead(doc, path, limit=0.05):
+    """Surface the data-integrity protection cost measured by
+    `vscnn exp serve-sdc` (`derived.checksum_overhead_frac`: goodput
+    lost to ABFT checksums + CVF validation at the lowest injected flip
+    rate). Warn-only by design — never gates, even under --strict: the
+    protection charge is a configured fraction plus queueing effects,
+    and the goodput estimate rides on one seeded run."""
+    derived = doc.get("derived", {})
+    frac = derived.get("checksum_overhead_frac")
+    if not isinstance(frac, (int, float)) or isinstance(frac, bool):
+        return
+    print(f"integrity: checksum-on goodput overhead {frac:+.1%}")
+    if frac > limit:
+        print(f"NOTE: {path}: integrity protection overhead {frac:.1%} exceeds "
+              f"{limit:.0%} (warn-only; ABFT + validation should stay cheap)",
+              file=sys.stderr)
+
+
 def compare_pair(new_path, base_path, threshold, derived_threshold):
     """Print the comparison table for one NEW/BASELINE pair; return
     (series_warnings, derived_warnings, improvements)."""
@@ -120,6 +142,7 @@ def compare_pair(new_path, base_path, threshold, derived_threshold):
                 f"{new_path}: derived.{key}: up to {ratio:.2f}x the baseline")
         print(f"derived.{key:36} {base_thr[key]:>12.3f} {new_thr[key]:>12.3f} {ratio:>6.2f}x{flag}")
     report_metrics_overhead(new, new_path)
+    report_sdc_overhead(new, new_path)
     return series_warnings, derived_warnings, improvements
 
 

@@ -195,6 +195,27 @@ mod tests {
     }
 
     #[test]
+    fn serve_sdc_flag_parses_in_every_shape() {
+        // `--sdc` is a value flag holding the whole injection grammar
+        // (including the bare `protect` token inside the value); the CLI
+        // layer hands the string through untouched and SdcSpec::parse is
+        // the gate.
+        use crate::sim::sdc::SdcSpec;
+        let cli = parse(&["serve", "--sdc", "flip:100,protect,scrub:2"]);
+        let s = cli.get_value("sdc").unwrap().unwrap();
+        assert_eq!(s, "flip:100,protect,scrub:2");
+        assert!(SdcSpec::parse(s).unwrap().protect);
+        let eq = parse(&["serve", "--sdc=flip:50"]);
+        assert_eq!(eq.get_value("sdc").unwrap(), Some("flip:50"));
+        // Absent -> injection stays off; trailing bare flag is a clean
+        // error, not the string "true".
+        let off = parse(&["serve"]);
+        assert_eq!(off.get_value("sdc").unwrap(), None);
+        let bare = parse(&["serve", "--sdc"]);
+        assert!(bare.get_value("sdc").unwrap_err().to_string().contains("expects a value"));
+    }
+
+    #[test]
     fn serve_fault_flags_error_cleanly_when_malformed() {
         // `--faults --shed`: the value flag swallowed nothing, so asking
         // for its value must be a clean error (not the string "true").

@@ -110,6 +110,7 @@ mod tests {
             backend: FunctionalBackend::Golden,
             verify_dataflow: true,
             fuse: false,
+            sdc: None,
         }
     }
 

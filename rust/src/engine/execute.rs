@@ -10,12 +10,15 @@ use crate::sim::config::{MemModel, Precision, SimConfig};
 use crate::sim::mapping::simulate_compiled;
 use crate::sim::postproc;
 use crate::sim::scheduler::Mode;
+use crate::sim::sdc::{abft_unit_round, EngineSdc, IntegrityCounters, SDC_ENGINE_STREAM_BASE};
 use crate::sim::stats::{MemBound, SimStats};
 use crate::sim::trace::Trace;
 use crate::sparse::encode::{layer_report_cached, DensityReport};
+use crate::sparse::vector_format::VectorActivations;
 use crate::tensor::conv::maxpool2x2;
 use crate::tensor::Tensor;
 use crate::util::json::Json;
+use crate::util::rng::Pcg32;
 use crate::util::{metrics, trace_span};
 use anyhow::{Context, Result};
 use std::sync::Arc;
@@ -109,6 +112,12 @@ pub struct RunOptions {
     /// transfers — and it only applies under [`MemModel::Tiled`] (the
     /// ideal model has no transfers to eliminate).
     pub fuse: bool,
+    /// Silent-data-corruption injection (ISSUE 10): real seeded bit
+    /// flips into each conv layer's weight/activation/accumulator state,
+    /// detected by structural CVF validation + ABFT column checksums and
+    /// healed by bounded per-layer re-execution. `None` (the default)
+    /// keeps the engine byte-identical to the pre-SDC path.
+    pub sdc: Option<EngineSdc>,
 }
 
 impl RunOptions {
@@ -118,7 +127,38 @@ impl RunOptions {
             backend: FunctionalBackend::Im2colMt(crate::util::default_threads()),
             verify_dataflow: false,
             fuse: false,
+            sdc: None,
         }
+    }
+}
+
+/// Engine-path integrity ledger, present on a [`NetworkReport`] iff
+/// [`RunOptions::sdc`] was set (the report JSON stays key-identical to
+/// the pre-SDC schema otherwise). Counters cover all conv layers of one
+/// image run.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct EngineIntegrity {
+    /// The injected / masked / detected / corrected / silent ledger.
+    pub counters: IntegrityCounters,
+    /// Cycles charged for bounded per-layer re-execution (already folded
+    /// into the layer records and totals).
+    pub reexec_cycles: u64,
+    /// Detections past the per-layer re-execution budget: the corruption
+    /// persisted and the batch-level retry path must absorb it.
+    pub escalated: u64,
+}
+
+impl EngineIntegrity {
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("injected", self.counters.injected)
+            .set("masked", self.counters.masked)
+            .set("detected", self.counters.detected)
+            .set("corrected", self.counters.corrected)
+            .set("silent", self.counters.silent)
+            .set("reexec_cycles", self.reexec_cycles)
+            .set("escalated", self.escalated);
+        o
     }
 }
 
@@ -145,6 +185,9 @@ pub struct NetworkReport {
     /// the next layer's prologue — so this can legitimately exceed
     /// `totals.cycles`; it is a traffic measure, not a bound on them.
     pub dram_floor_cycles: u64,
+    /// Integrity ledger of the run's SDC injection; `None` whenever
+    /// [`RunOptions::sdc`] was `None` (so the JSON schema is untouched).
+    pub integrity: Option<EngineIntegrity>,
 }
 
 impl NetworkReport {
@@ -254,6 +297,11 @@ impl NetworkReport {
                 "layers",
                 Json::Arr(self.layers.iter().map(|l| l.to_json()).collect()),
             );
+        // Gated, not versioned: the key only exists when injection ran,
+        // so SDC-off reports stay byte-identical (schema_version holds).
+        if let Some(integ) = &self.integrity {
+            o.set("integrity", integ.to_json());
+        }
         o
     }
 }
@@ -319,6 +367,10 @@ impl Engine {
         let mut totals = SimStats::default();
         let mut total_dense = 0u64;
         let mut fused_layers = 0usize;
+        // SDC injection state (ISSUE 10): the ledger exists iff injection
+        // is configured; `conv_idx` keys the per-layer PCG32 streams.
+        let mut integrity: Option<EngineIntegrity> = opts.sdc.map(|_| EngineIntegrity::default());
+        let mut conv_idx = 0u64;
         // Fusion eligibility tracker: true when `act` is the immediately
         // preceding conv's output, still strip-shaped (pooling re-stages
         // the activation through the output path, breaking residency).
@@ -407,13 +459,29 @@ impl Engine {
                         );
                     }
 
+                    // --- silent-data-corruption injection (ISSUE 10) ----
+                    // After the dataflow verification (which pins the
+                    // *clean* forward), before quantization: flips land
+                    // on raw MAC outputs and in-flight CVF streams.
+                    // Detected flips are healed by re-execution while the
+                    // budget lasts (charged below); silent accumulator
+                    // flips stay in `out` and propagate downstream.
+                    let mut out = out;
+                    let mut sdc_extra = 0u64;
+                    if let (Some(sdc), Some(integ)) = (&opts.sdc, integrity.as_mut()) {
+                        let reexecs =
+                            inject_layer_sdc(sdc, conv_idx, cl, &act, &mut out, &opts.sim, integ);
+                        sdc_extra = reexecs as u64 * res.stats.cycles;
+                        integ.reexec_cycles += sdc_extra;
+                    }
+                    conv_idx += 1;
+
                     // --- post-processing (ReLU + zero detection) --------
                     // Quantize the layer's output at the boundary first
                     // (fixed-point modes), so the zero detection, the
                     // compressed write-back and the next layer all see
                     // the narrow activations. ReLU and maxpool preserve
                     // the grid (they only select or zero values).
-                    let mut out = out;
                     if precision != Precision::F32 {
                         crate::sparse::vector_format::fake_quantize_precision(
                             out.data_mut(),
@@ -422,6 +490,8 @@ impl Engine {
                     }
                     let post = postproc::postprocess(out, opts.sim.pe.rows);
                     let mut stats = res.stats;
+                    // Re-execution repairs replay the whole layer.
+                    stats.cycles += sdc_extra;
                     if let Some(va) = &post.compressed {
                         stats.dram.output_write =
                             postproc::output_dram_bytes(va, opts.sim.sram.bytes_per_elem, 2);
@@ -487,6 +557,7 @@ impl Engine {
             precision,
             fused_layers,
             dram_floor_cycles,
+            integrity,
         })
     }
 
@@ -607,6 +678,136 @@ fn emit_pe_issue_events(layer: &str, t0: u64, trace: &Trace) {
     }
 }
 
+/// Inject `sdc.flips_per_layer` seeded bit flips into one conv layer's
+/// live state and run the protection stack over each (ISSUE 10). The
+/// taxonomy site is drawn uniformly per flip on stream
+/// `SDC_ENGINE_STREAM_BASE + conv_idx`:
+///
+/// * **weight** — an index-word bit in a clone of the resident CVF
+///   encode; the structural walk ([`crate::sparse::VectorWeights`]
+///   `::validate`) must notice the bounds/monotonicity/occupancy break.
+/// * **activation** — an index or payload bit of the layer's input CVF
+///   stream; index damage is caught structurally, payload damage by the
+///   stream checksum the scrubber recomputes, and low-mantissa payload
+///   flips escape below the rounding floor (the modeled coverage gap).
+/// * **accumulator** — a bit of one real output word; the ABFT column
+///   checksum ([`crate::tensor::ops::abft_check`]) over the very im2col
+///   operands the forward pass multiplied must flag the column.
+///
+/// Detected flips are healed (accumulator words restored) while the
+/// per-layer re-execution budget lasts; past it the corruption persists
+/// and is escalated. *Silent* accumulator flips stay in `out` and
+/// propagate downstream — a real wrong answer, which is what the
+/// unprotected arm measures. Returns the number of re-executions (the
+/// caller charges the layer's cycles per replay).
+fn inject_layer_sdc(
+    sdc: &EngineSdc,
+    conv_idx: u64,
+    cl: &CompiledLayer,
+    act: &Tensor,
+    out: &mut Tensor,
+    sim: &SimConfig,
+    integ: &mut EngineIntegrity,
+) -> u32 {
+    let mut rng = Pcg32::new(sdc.seed, SDC_ENGINE_STREAM_BASE + conv_idx);
+    let unit_round = abft_unit_round(sim.precision);
+    // The ABFT operands: the same [K, C*KH*KW] weight panel and im2col
+    // patch matrix the functional forward multiplied.
+    let (kh, kw) = (cl.weight.shape()[2], cl.weight.shape()[3]);
+    let patches = crate::tensor::ops::im2col(act, kh, kw, cl.spec.stride, cl.spec.pad);
+    let (kdim, cols) = (patches.shape()[0], patches.shape()[1]);
+    let m = cl.weight.shape()[0];
+    // The layer's input stream and its clean checksum (what a scrubber
+    // would hold), encoded once and cloned per activation-site flip.
+    let clean_va = VectorActivations::from_tensor(act, sim.pe.rows);
+    let (clean_sum, clean_abs) = clean_va.payload_checksum();
+    let mut budget = sdc.reexec_budget;
+    let mut reexecs = 0u32;
+    for _ in 0..sdc.flips_per_layer {
+        integ.counters.injected += 1;
+        metrics::add("integrity.injected", 1);
+        // Accumulator-site bookkeeping so a detected flip can be healed
+        // *after* the budget decision (escalated corruption persists).
+        let mut acc_restore: Option<(usize, f32)> = None;
+        let caught = match rng.below(3) {
+            0 => {
+                let mut w = (*cl.vw).clone();
+                if w.index_words() == 0 {
+                    integ.counters.masked += 1;
+                    metrics::add("integrity.masked", 1);
+                    continue;
+                }
+                let word = rng.below(w.index_words() as u32) as usize;
+                w.flip_index_bit(word, rng.below(8));
+                sdc.protect && w.validate().is_err()
+            }
+            1 => {
+                let payload = rng.bernoulli(0.5);
+                let words = if payload {
+                    clean_va.payload_words()
+                } else {
+                    clean_va.index_words()
+                };
+                if words == 0 {
+                    integ.counters.masked += 1;
+                    metrics::add("integrity.masked", 1);
+                    continue;
+                }
+                let mut va = clean_va.clone();
+                let word = rng.below(words as u32) as usize;
+                if payload {
+                    va.flip_payload_bit(word, rng.below(32));
+                } else {
+                    va.flip_index_bit(word, rng.below(16));
+                }
+                let (sum, _) = va.payload_checksum();
+                let floor = (va.payload_words() as f64 + 2.0) * unit_round * (clean_abs + 1.0);
+                let delta = (sum - clean_sum).abs();
+                sdc.protect && (va.validate().is_err() || delta.is_nan() || delta > floor)
+            }
+            _ => {
+                let od = out.data_mut();
+                let word = rng.below(od.len() as u32) as usize;
+                let clean = od[word];
+                od[word] = f32::from_bits(clean.to_bits() ^ (1u32 << rng.below(32)));
+                acc_restore = Some((word, clean));
+                sdc.protect
+                    && crate::tensor::ops::abft_check(
+                        cl.weight.data(),
+                        patches.data(),
+                        out.data(),
+                        m,
+                        kdim,
+                        cols,
+                        Some(cl.bias.as_slice()),
+                        unit_round,
+                    )
+                    .is_err()
+            }
+        };
+        if caught {
+            integ.counters.detected += 1;
+            metrics::add("integrity.detected", 1);
+            if budget > 0 {
+                budget -= 1;
+                reexecs += 1;
+                integ.counters.corrected += 1;
+                metrics::add("integrity.corrected", 1);
+                if let Some((word, clean)) = acc_restore {
+                    out.data_mut()[word] = clean;
+                }
+            } else {
+                integ.escalated += 1;
+                metrics::add("integrity.escalated", 1);
+            }
+        } else {
+            integ.counters.silent += 1;
+            metrics::add("integrity.silent", 1);
+        }
+    }
+    reexecs
+}
+
 fn forward_conv(cl: &CompiledLayer, input: &Tensor, opts: &RunOptions) -> Result<Tensor> {
     Ok(match &opts.backend {
         FunctionalBackend::Golden => {
@@ -651,6 +852,7 @@ mod tests {
             backend: FunctionalBackend::Golden,
             verify_dataflow: true,
             fuse: false,
+            sdc: None,
         }
     }
 
@@ -928,6 +1130,95 @@ mod tests {
                 "tiles",
                 "transfer_cycles",
                 "utilization",
+            ]
+        );
+    }
+
+    /// SDC injection end to end (ISSUE 10): the protected arm detects
+    /// and heals flips inside the budget (charged as re-executed
+    /// cycles), the unprotected arm serves silent wrong answers, the
+    /// same seed replays bit-identically, and the SDC-off report
+    /// carries no `integrity` section at all.
+    #[test]
+    fn sdc_injection_detects_heals_and_stays_gated_off() {
+        use crate::sim::sdc::EngineSdc;
+        let (p, img) = prepared(29);
+        let engine = Engine::new(p);
+        let mut opts = small_opts();
+        opts.verify_dataflow = false;
+
+        let clean = engine.run_image(&img, &opts).unwrap();
+        assert!(clean.integrity.is_none());
+        assert!(clean.to_json().get("integrity").is_none());
+
+        opts.sdc = Some(EngineSdc {
+            flips_per_layer: 6,
+            seed: 11,
+            protect: true,
+            reexec_budget: 8,
+        });
+        let prot = engine.run_image(&img, &opts).unwrap();
+        let pi = prot.integrity.expect("protected run carries the ledger");
+        assert_eq!(pi.counters.injected, 6 * clean.layers.len() as u64);
+        assert!(pi.counters.consistent(), "{pi:?}");
+        assert!(pi.counters.detected > 0, "nothing detected: {pi:?}");
+        assert!(pi.counters.corrected <= pi.counters.detected);
+        // Repairs replay layers, so corrections and their cycle charge
+        // come together — and a whole-layer replay dwarfs the few-column
+        // density drift a propagated flip can cause downstream.
+        assert_eq!(
+            pi.reexec_cycles > 0,
+            pi.counters.corrected > 0,
+            "repairs and their cycle charge must agree: {pi:?}"
+        );
+        if pi.counters.corrected > 0 {
+            assert!(prot.totals.cycles > clean.totals.cycles);
+        }
+
+        // Unprotected arm: same flips, no detector — every consequential
+        // upset is a silent wrong answer.
+        opts.sdc = Some(EngineSdc {
+            flips_per_layer: 6,
+            seed: 11,
+            protect: false,
+            reexec_budget: 8,
+        });
+        let unprot = engine.run_image(&img, &opts).unwrap();
+        let ui = unprot.integrity.unwrap();
+        assert_eq!(ui.counters.detected, 0);
+        assert_eq!(ui.counters.corrected, 0);
+        assert_eq!(ui.reexec_cycles, 0);
+        assert_eq!(
+            ui.counters.injected,
+            ui.counters.masked + ui.counters.silent
+        );
+        assert!(ui.counters.silent > 0);
+
+        // Seeded determinism: the whole report replays bit-identically.
+        let replay = engine.run_image(&img, &opts).unwrap();
+        assert_eq!(replay.integrity.unwrap(), ui);
+        assert_eq!(replay.to_json().pretty(), unprot.to_json().pretty());
+
+        // The gated JSON section and its pinned keys.
+        let j = prot.to_json();
+        let keys: Vec<String> = j
+            .get("integrity")
+            .unwrap()
+            .as_obj()
+            .unwrap()
+            .keys()
+            .cloned()
+            .collect();
+        assert_eq!(
+            keys,
+            [
+                "corrected",
+                "detected",
+                "escalated",
+                "injected",
+                "masked",
+                "reexec_cycles",
+                "silent",
             ]
         );
     }

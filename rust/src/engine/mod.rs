@@ -36,4 +36,4 @@ pub mod execute;
 pub use compile::{
     compile, Calibration, CompileOptions, CompiledLayer, PreparedNetwork, PAPER_COLS,
 };
-pub use execute::{Engine, FunctionalBackend, LayerRecord, NetworkReport, RunOptions};
+pub use execute::{Engine, EngineIntegrity, FunctionalBackend, LayerRecord, NetworkReport, RunOptions};

@@ -14,6 +14,7 @@
 //! | `serve`   | fleet serving capacity curve (beyond the paper)    |
 //! | `serve-faults` | resilience degradation curve under injected faults |
 //! | `serve-scale` | simulator events/sec + p99 at fleet sizes 10 → 10k |
+//! | `serve-sdc` | detection/escape/goodput curve under injected bit flips |
 //!
 //! Every experiment returns a [`Json`] document and a human-readable text
 //! block; the CLI writes both under `reports/`.
@@ -22,6 +23,7 @@ pub mod density;
 pub mod serve;
 pub mod serve_faults;
 pub mod serve_scale;
+pub mod serve_sdc;
 pub mod speedup;
 pub mod table1;
 pub mod workload;
@@ -108,6 +110,7 @@ pub fn list() -> &'static [&'static str] {
         "serve",
         "serve-faults",
         "serve-scale",
+        "serve-sdc",
     ]
 }
 
@@ -126,6 +129,7 @@ pub fn run(id: &str, ctx: &ExpContext) -> Result<ExpOutput> {
         // Both spellings accepted; the report files use underscores.
         "serve-faults" | "serve_faults" => serve_faults::run_serve_faults(ctx),
         "serve-scale" | "serve_scale" => serve_scale::run_serve_scale(ctx),
+        "serve-sdc" | "serve_sdc" => serve_sdc::run_serve_sdc(ctx),
         _ => bail!("unknown experiment '{id}'; known: {:?}", list()),
     }
 }
@@ -153,10 +157,11 @@ mod tests {
     fn list_covers_every_paper_artifact() {
         // 1 table + 5 figures + 2 derived comparisons + the serving
         // capacity curve + the resilience degradation curve + the
-        // fleet-scalability sweep.
-        assert_eq!(list().len(), 11);
+        // fleet-scalability sweep + the data-integrity curve.
+        assert_eq!(list().len(), 12);
         assert!(list().contains(&"serve"));
         assert!(list().contains(&"serve-faults"));
         assert!(list().contains(&"serve-scale"));
+        assert!(list().contains(&"serve-sdc"));
     }
 }

@@ -81,6 +81,7 @@ pub fn run_serve(ctx: &ExpContext) -> Result<ExpOutput> {
         seed: ctx.seed,
         faults: FaultSpec::none(),
         robust: RobustnessPolicy::none(),
+        sdc: crate::sim::sdc::SdcSpec::none(),
     };
     let profiles = build_profiles(&base, ctx.threads)?;
 

@@ -82,6 +82,7 @@ pub fn run_serve_scale(ctx: &ExpContext) -> Result<ExpOutput> {
         seed: ctx.seed,
         faults: FaultSpec::none(),
         robust: RobustnessPolicy::none(),
+        sdc: crate::sim::sdc::SdcSpec::none(),
     };
     let base_profiles = build_profiles(&probe, ctx.threads)?;
 
@@ -150,6 +151,7 @@ pub fn run_serve_scale(ctx: &ExpContext) -> Result<ExpOutput> {
             seed: ctx.seed,
             faults: FaultSpec::none(),
             robust: RobustnessPolicy::none(),
+            sdc: crate::sim::sdc::SdcSpec::none(),
         };
         let profiles: Vec<Vec<_>> = (0..tenants.len())
             .map(|t| (0..n).map(|i| base_profiles[t][i % 4]).collect())

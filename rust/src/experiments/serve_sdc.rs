@@ -1,0 +1,402 @@
+//! `serve-sdc`: the data-integrity curve — detection rate, escape rate
+//! and goodput as the per-instance bit-flip rate rises (ISSUE 10).
+//!
+//! Two arms sweep the same flip-rate grid over the same profiled fleet:
+//!
+//! * **unprotected** — flips land with no checksums; nothing is detected,
+//!   and corrupted batches ship as `silent_completions` (wrong answers
+//!   delivered as successes).
+//! * **protected** — ABFT checksums + CVF structural validation detect
+//!   the covered fraction, batch re-execution and the periodic weight
+//!   scrubber repair what they catch, and a fractional service-time
+//!   overhead is charged for the protection.
+//!
+//! A clean (zero-flip) run anchors the goodput axis, so the protected
+//! arm's overhead and the unprotected arm's corruption losses are both
+//! measured against the same baseline. The emitted curve
+//! (`reports/serve_sdc.json` + `BENCH_serve_sdc.json`) quantifies the
+//! protection trade: how much goodput the checksums cost vs how many
+//! wrong answers they keep off the wire — see EXPERIMENTS.md §Integrity
+//! for a worked reading.
+
+use super::{ExpContext, ExpOutput};
+use crate::coordinator::report::ascii_table;
+use crate::serve::{
+    build_profiles, default_fleet, default_mix, simulate, BatchPolicy, DispatchPolicy, FaultSpec,
+    IntegritySummary, RobustnessPolicy, ServeReport, ServeSpec, TrafficModel,
+};
+use crate::sim::sdc::SdcSpec;
+use crate::util::json::Json;
+use anyhow::Result;
+
+/// Flip intensity swept, in *expected upsets per instance over the
+/// horizon* (the per-second rate is derived from the horizon so the
+/// curve shape is resolution-invariant). The top point lands hundreds of
+/// flips across the fleet, enough for the detection-rate estimate to
+/// concentrate near the analytic coverage.
+const EXPECTED_FLIPS: [f64; 3] = [4.0, 16.0, 64.0];
+
+/// Expected arrivals per sweep point (sets the horizon from the offered
+/// rate, exactly like the `serve` capacity curve).
+const ARRIVALS_PER_POINT: f64 = 400.0;
+
+/// Offered load as a fraction of the estimated warm-batch capacity:
+/// below the knee so the clean anchor is healthy, high enough that the
+/// protection overhead and re-execution stalls show up in goodput.
+const LOAD_FRAC: f64 = 0.85;
+
+/// One sweep point: the same flip plan with and without protection.
+struct SdcPoint {
+    flip_per_sec: f64,
+    unprot: ServeReport,
+    prot: ServeReport,
+}
+
+fn goodput(r: &ServeReport) -> f64 {
+    r.throughput_rps()
+}
+
+/// Integrity section of one report — every sweep arm runs with SDC
+/// active, so the gated section is always present here.
+fn integ(r: &ServeReport) -> &IntegritySummary {
+    r.integrity.as_ref().expect("sdc arm has integrity section")
+}
+
+fn side_json(r: &ServeReport) -> Json {
+    let ig = integ(r);
+    let mut o = Json::obj();
+    o.set("goodput_rps", goodput(r))
+        .set("p99_ms", r.p99_ms())
+        .set("completed", r.completed)
+        .set("injected", ig.injected)
+        .set("masked", ig.masked)
+        .set("detected", ig.detected)
+        .set("corrected", ig.corrected)
+        .set("silent", ig.silent)
+        .set("detection_rate", ig.detection_rate)
+        .set("escape_rate", ig.escape_rate)
+        .set("silent_completions", ig.silent_completions)
+        .set("scrubs", ig.scrubs)
+        .set("overhead_frac", ig.overhead_frac);
+    o
+}
+
+fn point_json(p: &SdcPoint) -> Json {
+    let mut o = Json::obj();
+    o.set("flip_per_sec", p.flip_per_sec)
+        .set("unprotected", side_json(&p.unprot))
+        .set("protected", side_json(&p.prot));
+    o
+}
+
+/// Run the `serve-sdc` experiment (see module docs).
+pub fn run_serve_sdc(ctx: &ExpContext) -> Result<ExpOutput> {
+    let tenants = default_mix(ctx.res);
+    let instances = default_fleet(4);
+    let base = ServeSpec {
+        tenants: tenants.clone(),
+        instances,
+        traffic: TrafficModel::OpenLoop { rps: 1.0 },
+        policy: DispatchPolicy::NetworkAffinity,
+        batch: BatchPolicy::none(),
+        queue_cap: 32,
+        racks: 1,
+        duration_cycles: 1,
+        clock_mhz: 500.0,
+        seed: ctx.seed,
+        faults: FaultSpec::none(),
+        robust: RobustnessPolicy::none(),
+        sdc: SdcSpec::none(),
+    };
+    let profiles = build_profiles(&base, ctx.threads)?;
+
+    // Mix-weighted service means: capacity estimate (same arithmetic as
+    // the `serve` experiment) and the single-request mean that anchors
+    // the retry timeout.
+    let wsum: f64 = tenants.iter().map(|t| t.weight).sum();
+    let mut capacity_rps = 0.0;
+    for i in 0..base.instances.len() {
+        let mean_marginal: f64 = tenants
+            .iter()
+            .enumerate()
+            .map(|(t, ten)| ten.weight / wsum * profiles[t][i].marginal_cycles as f64)
+            .sum();
+        capacity_rps += base.clock_hz() / mean_marginal.max(1.0);
+    }
+    let mut mean_single = 0.0;
+    for (t, ten) in tenants.iter().enumerate() {
+        let avg: f64 = profiles[t]
+            .iter()
+            .map(|p| p.single_cycles as f64)
+            .sum::<f64>()
+            / profiles[t].len() as f64;
+        mean_single += ten.weight / wsum * avg;
+    }
+
+    let rps = capacity_rps * LOAD_FRAC;
+    let duration_cycles = (ARRIVALS_PER_POINT * base.clock_hz() / rps).ceil() as u64;
+    let duration_secs = duration_cycles as f64 / base.clock_hz();
+
+    // Retries catch the batches that detection fails into the retry path
+    // once the re-execution budget runs dry; shedding keeps overload
+    // degradation orderly. No crash/straggler faults: the curve isolates
+    // the corruption axis.
+    let robust = RobustnessPolicy {
+        timeout_cycles: ((mean_single * 24.0) as u64).max(1),
+        max_retries: 2,
+        backoff_cycles: ((mean_single / 2.0) as u64).max(1),
+        hedge_cycles: 0,
+        shed: true,
+    };
+
+    let mut loaded = base.clone();
+    loaded.traffic = TrafficModel::OpenLoop { rps };
+    loaded.duration_cycles = duration_cycles;
+    loaded.batch = BatchPolicy {
+        max_batch: 8,
+        max_wait_cycles: ((mean_single / 2.0) as u64).max(1),
+    };
+    loaded.robust = robust;
+
+    // Zero-flip anchor: the goodput baseline both arms are judged
+    // against (and the byte-identity reference for the SDC-off claim).
+    let clean = ServeReport::new(&loaded, &simulate(&loaded, &profiles));
+
+    let mut curve: Vec<SdcPoint> = Vec::new();
+    for expected in EXPECTED_FLIPS {
+        let flip_per_sec = expected / duration_secs;
+        let mut unprot_spec = loaded.clone();
+        unprot_spec.sdc = SdcSpec {
+            flip_per_sec,
+            ..SdcSpec::none()
+        };
+        let mut prot_spec = loaded.clone();
+        prot_spec.sdc = SdcSpec {
+            flip_per_sec,
+            protect: true,
+            ..SdcSpec::none()
+        };
+        let unprot = ServeReport::new(&unprot_spec, &simulate(&unprot_spec, &profiles));
+        let prot = ServeReport::new(&prot_spec, &simulate(&prot_spec, &profiles));
+        curve.push(SdcPoint {
+            flip_per_sec,
+            unprot,
+            prot,
+        });
+    }
+
+    // Aggregate rates across the whole sweep: the per-point estimates at
+    // the low-rate end ride on a handful of flips, so acceptance metrics
+    // pool every arm's ledger.
+    let pool = |f: &dyn Fn(&IntegritySummary) -> u64, prot: bool| -> u64 {
+        curve
+            .iter()
+            .map(|p| f(integ(if prot { &p.prot } else { &p.unprot })))
+            .sum()
+    };
+    let prot_detected = pool(&|ig| ig.detected, true);
+    let prot_consequential = pool(&|ig| ig.injected - ig.masked, true).max(1);
+    let unprot_consequential = pool(&|ig| ig.injected - ig.masked, false).max(1);
+    let detection_rate = prot_detected as f64 / prot_consequential as f64;
+    let prot_escape = pool(&|ig| ig.silent, true) as f64 / prot_consequential as f64;
+    let unprot_escape = pool(&|ig| ig.silent, false) as f64 / unprot_consequential as f64;
+    let prot_silent_completions = pool(&|ig| ig.silent_completions, true);
+    let unprot_silent_completions = pool(&|ig| ig.silent_completions, false);
+
+    let worst = curve.last().expect("non-empty sweep");
+    let first = curve.first().expect("non-empty sweep");
+    let clean_goodput = goodput(&clean).max(1e-9);
+    // Protection cost with corruption nearly out of the picture: goodput
+    // lost at the *lowest* flip rate is almost entirely the checksum +
+    // validation overhead charge, not re-execution stalls. The bench
+    // checker warns (never gates) when this crosses 5%.
+    let checksum_overhead_frac = 1.0 - goodput(&first.prot) / clean_goodput;
+    // What protection costs (checksum overhead + re-execution stalls)
+    // and what going without costs (corruption losses), both at the top
+    // flip rate, both against the clean anchor.
+    let prot_goodput_retention = goodput(&worst.prot) / clean_goodput;
+    let unprot_goodput_retention = goodput(&worst.unprot) / clean_goodput;
+    // Analytic coverage of the default taxonomy mixture — the pooled
+    // detection estimate should concentrate near this.
+    let expected_coverage = SdcSpec::none().expected_coverage();
+
+    let mut json = Json::obj();
+    json.set(
+        "tenants",
+        Json::Arr(tenants.iter().map(|t| Json::Str(t.name.clone())).collect()),
+    )
+    .set(
+        "fleet",
+        Json::Arr(
+            base.instances
+                .iter()
+                .map(|i| Json::Str(i.label()))
+                .collect(),
+        ),
+    )
+    .set("capacity_rps_estimate", capacity_rps)
+    .set("offered_rps", rps)
+    .set("duration_secs", duration_secs)
+    .set("seed", base.seed)
+    .set("clean_goodput_rps", goodput(&clean))
+    .set("clean_p99_ms", clean.p99_ms())
+    .set("expected_coverage", expected_coverage)
+    .set("detection_rate", detection_rate)
+    .set("escape_rate_protected", prot_escape)
+    .set("escape_rate_unprotected", unprot_escape)
+    .set("silent_completions_protected", prot_silent_completions)
+    .set("silent_completions_unprotected", unprot_silent_completions)
+    .set("protected_goodput_retention", prot_goodput_retention)
+    .set("unprotected_goodput_retention", unprot_goodput_retention)
+    .set("checksum_overhead_frac", checksum_overhead_frac)
+    .set("curve", Json::Arr(curve.iter().map(point_json).collect()));
+
+    let rows: Vec<(String, Vec<(String, f64)>)> = curve
+        .iter()
+        .map(|p| {
+            (
+                format!("flip {:>6.0}/s", p.flip_per_sec),
+                vec![
+                    ("raw_rps".to_string(), goodput(&p.unprot)),
+                    ("raw_escape".to_string(), integ(&p.unprot).escape_rate),
+                    (
+                        "raw_bad_answers".to_string(),
+                        integ(&p.unprot).silent_completions as f64,
+                    ),
+                    ("abft_rps".to_string(), goodput(&p.prot)),
+                    ("abft_detect".to_string(), integ(&p.prot).detection_rate),
+                    (
+                        "abft_bad_answers".to_string(),
+                        integ(&p.prot).silent_completions as f64,
+                    ),
+                ],
+            )
+        })
+        .collect();
+    let text = format!(
+        "Data-integrity curve — {} tenants on {} instances, offered {:.0} rps ({:.0}% of capacity)\n\
+         clean anchor {:.0} rps; protection = ABFT checksums + CVF validation + weight scrub + {} re-exec/batch\n{}\n\
+         pooled: detection {:.3} (coverage {:.3}), escape protected {:.4} vs raw {:.4}, goodput retention protected {:.3} vs raw {:.3}\n",
+        tenants.len(),
+        base.instances.len(),
+        rps,
+        LOAD_FRAC * 100.0,
+        goodput(&clean),
+        SdcSpec::none().reexec_budget,
+        ascii_table(&rows),
+        detection_rate,
+        expected_coverage,
+        prot_escape,
+        unprot_escape,
+        prot_goodput_retention,
+        unprot_goodput_retention,
+    );
+
+    // Machine-readable trajectory next to the bench outputs.
+    let mut derived = Json::obj();
+    derived
+        .set("offered_rps", rps)
+        .set("clean_goodput_rps", goodput(&clean))
+        .set("detection_rate", detection_rate)
+        .set("escape_rate_protected", prot_escape)
+        .set("escape_rate_unprotected", unprot_escape)
+        .set(
+            "silent_completions_unprotected",
+            unprot_silent_completions,
+        )
+        .set("silent_completions_protected", prot_silent_completions)
+        .set("protected_goodput_retention", prot_goodput_retention)
+        .set("unprotected_goodput_retention", unprot_goodput_retention)
+        .set("checksum_overhead_frac", checksum_overhead_frac);
+    let bench_path = "BENCH_serve_sdc.json";
+    if let Err(e) = crate::util::bench::write_results(bench_path, &[], derived) {
+        crate::log_warn!("could not write {bench_path}: {e}");
+    }
+
+    Ok(ExpOutput {
+        id: "serve_sdc".to_string(),
+        json,
+        text,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn integrity_curve_detects_ninety_percent_and_bounds_escapes() {
+        let ctx = ExpContext {
+            res: 32,
+            ..Default::default()
+        };
+        let out = run_serve_sdc(&ctx).unwrap();
+        assert_eq!(out.id, "serve_sdc");
+        let curve = out.json.get("curve").unwrap().as_arr().unwrap();
+        assert_eq!(curve.len(), EXPECTED_FLIPS.len());
+
+        // Acceptance bar (ISSUE 10): the protected fleet detects >= 90%
+        // of consequential injected flips, pooled across the sweep.
+        let detection = out.json.get("detection_rate").unwrap().as_f64().unwrap();
+        assert!(detection >= 0.9, "detection rate {detection} < 0.9");
+
+        // Checksums narrow the escape channel and keep wrong answers off
+        // the wire relative to the raw arm.
+        let esc_p = out
+            .json
+            .get("escape_rate_protected")
+            .unwrap()
+            .as_f64()
+            .unwrap();
+        let esc_u = out
+            .json
+            .get("escape_rate_unprotected")
+            .unwrap()
+            .as_f64()
+            .unwrap();
+        assert!(esc_p < esc_u, "protected escape {esc_p} !< raw {esc_u}");
+        let bad_p = out
+            .json
+            .get("silent_completions_protected")
+            .unwrap()
+            .as_f64()
+            .unwrap();
+        let bad_u = out
+            .json
+            .get("silent_completions_unprotected")
+            .unwrap()
+            .as_f64()
+            .unwrap();
+        assert!(bad_u > 0.0, "raw arm must ship wrong answers");
+        assert!(bad_p < bad_u, "protected bad {bad_p} !< raw {bad_u}");
+
+        // The fleet still serves under corruption: goodput never hits
+        // zero, on either arm, at any flip rate.
+        for p in curve {
+            for arm in ["unprotected", "protected"] {
+                let g = p
+                    .get(arm)
+                    .unwrap()
+                    .get("goodput_rps")
+                    .unwrap()
+                    .as_f64()
+                    .unwrap();
+                assert!(g > 0.0, "{arm} goodput collapsed at {:?}", p.get("flip_per_sec"));
+            }
+        }
+        // Text renders the table and the pooled summary line.
+        assert!(out.text.contains("abft_detect"));
+        assert!(out.text.contains("pooled: detection"));
+    }
+
+    #[test]
+    fn curve_is_deterministic_for_the_same_seed() {
+        let ctx = ExpContext {
+            res: 32,
+            ..Default::default()
+        };
+        let a = run_serve_sdc(&ctx).unwrap();
+        let b = run_serve_sdc(&ctx).unwrap();
+        assert_eq!(a.json.pretty(), b.json.pretty());
+    }
+}

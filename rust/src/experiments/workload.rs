@@ -115,6 +115,7 @@ pub fn options(ctx: &ExpContext, sim: SimConfig) -> Result<RunOptions> {
         backend,
         verify_dataflow: false,
         fuse: ctx.fuse,
+        sdc: None,
     })
 }
 

@@ -17,7 +17,7 @@
 //!                    [--max-batch N] [--batch-wait-us N] [--queue-cap N]
 //!                    [--clients N] [--think-ms N] [--out FILE]
 //!                    [--faults SPEC] [--timeout-us N] [--retries N]
-//!                    [--backoff-us N] [--hedge-us N] [--shed]
+//!                    [--backoff-us N] [--hedge-us N] [--shed] [--sdc SPEC]
 //!                    [--metrics-out FILE] [--trace-out FILE] [--trace-limit N]
 //! vscnn runtime-info [--artifacts DIR]
 //! vscnn list
@@ -90,6 +90,7 @@ fn print_help() {
          \x20 --max-batch N --batch-wait-us N --queue-cap N --clients N --think-ms N --out FILE\n\
          \x20 --faults crash:RATE,mttr:MS,straggler:RATE,slow:X,slowms:MS,reqfault:P (per-instance rates)\n\
          \x20 --timeout-us N (per-attempt timeout) --retries N --backoff-us N --hedge-us N --shed\n\
+         \x20 --sdc flip:RATE,weight:F,act:F,acc:F,protect,scrub:MS,quarantine:N,ovh:F,budget:N (bit-flip injection)\n\
          observability (exp/simulate/serve):\n\
          \x20 --metrics-out FILE (process metrics registry snapshot as JSON)\n\
          \x20 --trace-out FILE (Chrome/Perfetto trace; open in ui.perfetto.dev)\n\
@@ -330,6 +331,7 @@ fn cmd_serve(cli: &Cli) -> Result<()> {
         "backoff-us",
         "hedge-us",
         "shed",
+        "sdc",
         "metrics-out",
         "trace-out",
         "trace-limit",
@@ -381,6 +383,13 @@ fn cmd_serve(cli: &Cli) -> Result<()> {
     let faults = match cli.get_value("faults")? {
         Some(s) => FaultSpec::parse(s)?,
         None => FaultSpec::none(),
+    };
+    // Silent-data-corruption injection (ISSUE 10): same off-by-default
+    // discipline as --faults — no --sdc means zero injected flips and a
+    // byte-identical report.
+    let sdc = match cli.get_value("sdc")? {
+        Some(s) => vscnn::sim::sdc::SdcSpec::parse(s)?,
+        None => vscnn::sim::sdc::SdcSpec::none(),
     };
     let timeout_us: f64 = cli.get_num("timeout-us", 0.0)?;
     anyhow::ensure!(timeout_us >= 0.0, "--timeout-us must be >= 0");
@@ -435,6 +444,7 @@ fn cmd_serve(cli: &Cli) -> Result<()> {
         seed,
         faults,
         robust,
+        sdc,
     };
 
     log_info!(

@@ -306,6 +306,7 @@ mod tests {
             // conv on every geometry (1x1, 5x5, 7x7, stride-2).
             verify_dataflow: true,
             fuse: false,
+            sdc: None,
         };
         let report = coord.run(&img, &opts).unwrap();
         assert_eq!(report.layers.len(), 7);

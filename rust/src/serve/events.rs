@@ -44,6 +44,7 @@
 //!    `drain_matches_pop_order`).
 
 use super::faults::FaultKind;
+use crate::sim::sdc::SdcSite;
 use std::cell::Cell;
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
@@ -78,6 +79,19 @@ pub enum ServeEvent {
     Hedge { req: usize, token: u32 },
     /// A fault-plan event hits `instance`.
     Fault { instance: usize, kind: FaultKind },
+    /// A planned silent-data-corruption flip lands on `instance`
+    /// (ISSUE 10). `site` is the taxonomy site; `roll` is the pre-drawn
+    /// detection uniform compared against the coverage model when the
+    /// flip is consequential.
+    Sdc {
+        instance: usize,
+        site: SdcSite,
+        roll: f32,
+    },
+    /// Periodic resident-weight scrub fires on `instance` (protected
+    /// runs only): latent weight corruption is detected here and cleared
+    /// by re-verifying/reloading the weight image.
+    Scrub { instance: usize },
 }
 
 struct Entry<T> {

@@ -93,6 +93,7 @@ use crate::engine::{Engine, FunctionalBackend, NetworkReport, RunOptions};
 use crate::experiments::ExpContext;
 use crate::model::init::synthetic_image;
 use crate::sim::config::{MemModel, SimConfig};
+use crate::sim::sdc::{coverage, generate_sdc_plan, protected_cycles, SdcSite, SdcSpec};
 use crate::util::rng::Pcg32;
 use crate::util::trace_span::{self, CYCLES_PID};
 use crate::util::{metrics, trace_span::Arg};
@@ -164,6 +165,9 @@ pub struct ServeSpec {
     /// Client-side robustness knobs ([`RobustnessPolicy::none`] = legacy
     /// fail-fast behavior).
     pub robust: RobustnessPolicy,
+    /// Injected silent-data-corruption mix + protection knobs
+    /// ([`SdcSpec::none`] = the pre-SDC simulator, bit-identical).
+    pub sdc: SdcSpec,
 }
 
 impl ServeSpec {
@@ -183,6 +187,18 @@ impl ServeSpec {
     /// pre-fault simulator.
     pub fn resilience_active(&self) -> bool {
         !self.faults.is_none() || self.robust.active()
+    }
+
+    /// True when SDC injection fires at all. Gates the integrity report
+    /// section, the scrub schedule, and the protection overhead, so
+    /// zero-SDC runs stay bit-identical to the pre-SDC simulator.
+    pub fn sdc_active(&self) -> bool {
+        !self.sdc.is_none()
+    }
+
+    /// Weight-scrub period in cycles under the serving clock.
+    pub fn scrub_period_cycles(&self) -> u64 {
+        ((self.sdc.scrub_ms * self.clock_mhz * 1e3) as u64).max(1)
     }
 }
 
@@ -269,6 +285,7 @@ pub fn service_profile(
         backend: FunctionalBackend::Im2colMt(threads.max(1)),
         verify_dataflow: false,
         fuse: false,
+        sdc: None,
     };
     let report = Engine::new(prepared).run_image(&img, &opts)?;
     let profile = profile_from_report(&report, cfg);
@@ -467,6 +484,27 @@ pub struct ServeOutcome {
     pub recovery_cycles: u64,
     /// Total instance-down cycles within the horizon, all instances.
     pub down_cycles: u64,
+    /// SDC flips injected by the plan (ISSUE 10).
+    pub sdc_injected: u64,
+    /// Flips that landed in dead state (down chip, no resident weights,
+    /// idle activation/accumulator path) — architecturally masked,
+    /// excluded from the detection-rate denominator.
+    pub sdc_masked: u64,
+    /// Consequential flips the protection stack caught.
+    pub sdc_detected: u64,
+    /// Detected flips repaired (batch re-execution or weight scrub);
+    /// `detected - corrected` escalated into the retry path instead.
+    pub sdc_corrected: u64,
+    /// Consequential flips that escaped every detector.
+    pub sdc_silent: u64,
+    /// Requests served from corrupted state — wrong answers delivered as
+    /// successes (the quantity protection exists to drive to zero).
+    pub silent_completions: u64,
+    /// Weight-scrub passes executed.
+    pub scrubs: u64,
+    /// Instances permanently removed after crossing the
+    /// detected-corruption threshold.
+    pub quarantined: u64,
     /// Discrete events executed by the loop (arrivals + timers +
     /// completions + fault/robustness events) — the denominator of the
     /// bench's events/s metric.
@@ -515,6 +553,10 @@ struct LaunchInfo {
     tenant: usize,
     n: usize,
     switch: u64,
+    /// Service duration charged at launch — what one bounded
+    /// re-execution of the batch costs again (conservative: the switch
+    /// and any straggler stretch are re-paid).
+    duration: u64,
 }
 
 struct Instance {
@@ -544,6 +586,25 @@ struct Instance {
     timeout_streak: u32,
     /// Trace attribution for the running batch (`None` when idle).
     launch: Option<LaunchInfo>,
+    /// Latent flips in the resident weights that escaped detection (or
+    /// run unprotected): every batch served reads corrupted weights
+    /// until a cold reload (switch, crash) clears them.
+    weight_corrupt: u32,
+    /// Detected weight flips awaiting the next scrub pass, which repairs
+    /// them by forcing a weight re-stream.
+    weight_pending: u32,
+    /// Detected in-batch (activation/accumulator) flips on the running
+    /// batch — triggers bounded re-execution at completion.
+    batch_detected: u32,
+    /// The running batch absorbed an undetected in-batch flip: its
+    /// completions are silently wrong.
+    batch_corrupt: bool,
+    /// Re-executions already spent on the running batch.
+    reexec_used: u32,
+    /// Lifetime detected-corruption count (the quarantine trigger).
+    sdc_detected_count: u32,
+    /// Permanently removed by the integrity quarantine.
+    quarantined: bool,
     stats: InstanceStats,
 }
 
@@ -594,6 +655,14 @@ struct Sim<'a> {
     crashes: u64,
     recoveries: u64,
     recovery_cycles: u64,
+    sdc_injected: u64,
+    sdc_masked: u64,
+    sdc_detected: u64,
+    sdc_corrected: u64,
+    sdc_silent: u64,
+    silent_completions: u64,
+    scrubs: u64,
+    quarantined: u64,
 }
 
 impl<'a> Sim<'a> {
@@ -632,6 +701,13 @@ impl<'a> Sim<'a> {
                 breaker_until: 0,
                 timeout_streak: 0,
                 launch: None,
+                weight_corrupt: 0,
+                weight_pending: 0,
+                batch_detected: 0,
+                batch_corrupt: false,
+                reexec_used: 0,
+                sdc_detected_count: 0,
+                quarantined: false,
                 stats: InstanceStats {
                     label: is.label(),
                     ..InstanceStats::default()
@@ -679,6 +755,14 @@ impl<'a> Sim<'a> {
             crashes: 0,
             recoveries: 0,
             recovery_cycles: 0,
+            sdc_injected: 0,
+            sdc_masked: 0,
+            sdc_detected: 0,
+            sdc_corrected: 0,
+            sdc_silent: 0,
+            silent_completions: 0,
+            scrubs: 0,
+            quarantined: 0,
         }
     }
 
@@ -966,6 +1050,10 @@ impl<'a> Sim<'a> {
             };
             if switch > 0 {
                 inst.stats.switches += 1;
+                // The re-streamed weight image replaces the resident
+                // one: latent or pending-scrub corruption goes with it.
+                inst.weight_corrupt = 0;
+                inst.weight_pending = 0;
             }
             inst.resident_net = Some(net);
             let n = reqs.len() as u64;
@@ -974,16 +1062,26 @@ impl<'a> Sim<'a> {
                 // Straggler episode: everything on the chip runs slow.
                 duration = ((duration as f64) * inst.slowdown).ceil() as u64;
             }
+            if self.spec.sdc_active() && self.spec.sdc.protect {
+                // The integrity stack's honest price: checksum rows,
+                // validation walks, and scrub interference.
+                duration = protected_cycles(duration, self.spec.sdc.overhead_frac);
+            }
             let end = now + duration;
             inst.busy_until = end;
             inst.stats.batches += 1;
             inst.stats.busy_cycles += end.min(horizon) - now.min(horizon);
             inst.backlog_cycles = inst.backlog_cycles.saturating_sub(n * prof.marginal_cycles);
+            // Per-batch integrity state starts clean (no-ops without SDC).
+            inst.batch_detected = 0;
+            inst.batch_corrupt = false;
+            inst.reexec_used = 0;
             inst.launch = Some(LaunchInfo {
                 start: now,
                 tenant,
                 n: reqs.len(),
                 switch,
+                duration,
             });
             metrics::add("serve.batches", 1);
             metrics::observe("serve.batch_size", n);
@@ -1113,13 +1211,25 @@ impl<'a> Sim<'a> {
     }
 
     fn on_crash(&mut self, now: u64, i: usize) {
+        if self.instances[i].quarantined {
+            return; // already permanently out; nothing left to kill
+        }
         self.crashes += 1;
         metrics::add("serve.crashes", 1);
+        self.instances[i].stats.crashes += 1;
+        self.take_down(now, i, "crash");
+    }
+
+    /// Take instance `i` out of service: kill and re-home its running
+    /// batch and queue, mark it down, reset its integrity state (a cold
+    /// reload clears resident-weight corruption). Shared by crashes
+    /// (which recover) and integrity quarantine (which never does).
+    fn take_down(&mut self, now: u64, i: usize, label: &'static str) {
         let horizon = self.horizon();
         let (killed, drained) = {
             let inst = &mut self.instances[i];
             // Timeline: the in-flight batch dies here — close its
-            // interval as `killed`, mark the crash instant, zero the
+            // interval as `killed`, mark the instant, zero the
             // queue counter (the queue is drained below for re-homing).
             if let Some(l) = inst.launch.take() {
                 trace_span::complete_cycles(
@@ -1132,16 +1242,23 @@ impl<'a> Sim<'a> {
                     vec![("batch", Arg::U(l.n as u64))],
                 );
             }
-            trace_span::instant_cycles(CYCLES_PID, i as u64, "fault", "crash", now);
+            trace_span::instant_cycles(CYCLES_PID, i as u64, "fault", label, now);
             trace_span::counter_cycles(CYCLES_PID, format!("inst{i:03}.queue"), now, "queued", 0);
             inst.note_queue(now, horizon);
-            inst.stats.crashes += 1;
             inst.epoch = inst.epoch.wrapping_add(1);
             inst.down_since = Some(now);
             inst.resident_net = None;
             inst.timer_token += 1; // orphan any pending batch timer
             inst.timeout_streak = 0;
             inst.breaker_until = 0;
+            // Cold reload: resident-weight corruption (latent or pending
+            // scrub) is gone with the weights; the running batch's
+            // in-flight flips died with the batch.
+            inst.weight_corrupt = 0;
+            inst.weight_pending = 0;
+            inst.batch_detected = 0;
+            inst.batch_corrupt = false;
+            inst.reexec_used = 0;
             // Un-count the busy cycles the chip will never serve.
             let unserved = inst.busy_until.min(horizon).saturating_sub(now.min(horizon));
             inst.stats.busy_cycles = inst.stats.busy_cycles.saturating_sub(unserved);
@@ -1149,8 +1266,8 @@ impl<'a> Sim<'a> {
             inst.backlog_cycles = 0;
             (std::mem::take(&mut inst.running), inst.batcher.drain_all())
         };
-        // The crash is visible to dispatch *before* re-homing starts, so
-        // no victim can be re-homed onto the chip that just died.
+        // The takedown is visible to dispatch *before* re-homing starts,
+        // so no victim can be re-homed onto the chip that just died.
         self.sync_load(i);
         // Re-home, killed batch first (dispatched earliest), then the
         // queue in tenant-FIFO order — a pinned, deterministic order.
@@ -1183,6 +1300,9 @@ impl<'a> Sim<'a> {
     }
 
     fn on_recover(&mut self, now: u64, i: usize) {
+        if self.instances[i].quarantined {
+            return; // quarantine is permanent: fault-plan recovery ignored
+        }
         self.recoveries += 1;
         metrics::add("serve.recoveries", 1);
         let horizon = self.horizon();
@@ -1207,9 +1327,155 @@ impl<'a> Sim<'a> {
         self.sync_load(i);
     }
 
+    /// A planned SDC flip lands (ISSUE 10). The ledger is settled here —
+    /// every flip becomes exactly one of masked / detected / silent, so
+    /// `injected = masked + detected + silent` holds at any horizon —
+    /// while the *consequences* (re-execution, scrub repair, corrupted
+    /// completions) play out through the flags this sets.
+    fn on_sdc(&mut self, now: u64, i: usize, site: SdcSite, roll: f32) {
+        self.sdc_injected += 1;
+        metrics::add("integrity.injected", 1);
+        if self.instances[i].down_since.is_some() {
+            // A dead chip holds no live state to corrupt.
+            self.sdc_masked += 1;
+            metrics::add("integrity.masked", 1);
+            return;
+        }
+        let consequential = match site {
+            // Weight flips need a resident weight image.
+            SdcSite::Weight => self.instances[i].resident_net.is_some(),
+            // Transient sites need a batch in flight.
+            SdcSite::Activation | SdcSite::Accumulator => {
+                !self.instances[i].running.is_empty()
+            }
+        };
+        if !consequential {
+            self.sdc_masked += 1;
+            metrics::add("integrity.masked", 1);
+            return;
+        }
+        trace_span::instant_cycles(CYCLES_PID, i as u64, "integrity", site.label(), now);
+        let caught = self.spec.sdc.protect && roll < coverage(site) as f32;
+        if caught {
+            self.sdc_detected += 1;
+            metrics::add("integrity.detected", 1);
+            self.instances[i].sdc_detected_count += 1;
+            match site {
+                // Latent until the scrubber walks the weights.
+                SdcSite::Weight => self.instances[i].weight_pending += 1,
+                // Caught by ABFT / structural validation at completion.
+                SdcSite::Activation | SdcSite::Accumulator => {
+                    self.instances[i].batch_detected += 1
+                }
+            }
+            self.quarantine_check(now, i);
+        } else {
+            self.sdc_silent += 1;
+            metrics::add("integrity.silent", 1);
+            match site {
+                SdcSite::Weight => self.instances[i].weight_corrupt += 1,
+                SdcSite::Activation | SdcSite::Accumulator => {
+                    self.instances[i].batch_corrupt = true
+                }
+            }
+        }
+    }
+
+    /// Periodic weight scrub (protected runs): re-verifies the resident
+    /// weight image, repairing detected latent flips by forcing a weight
+    /// re-stream (the next batch pays the switch cost again).
+    fn on_scrub(&mut self, now: u64, i: usize) {
+        // Re-arm first so the cadence is stable regardless of findings.
+        let next = now + self.spec.scrub_period_cycles();
+        if next <= self.horizon() {
+            self.events.push(next, ServeEvent::Scrub { instance: i });
+        }
+        if self.instances[i].down_since.is_some() {
+            return; // nothing resident to verify
+        }
+        self.scrubs += 1;
+        metrics::add("integrity.scrubs", 1);
+        let pending = self.instances[i].weight_pending;
+        if pending > 0 {
+            self.instances[i].weight_pending = 0;
+            self.sdc_corrected += pending as u64;
+            metrics::add("integrity.corrected", pending as u64);
+            // Repair = reload: drop residency so the weights re-stream.
+            self.instances[i].resident_net = None;
+            trace_span::instant_cycles(CYCLES_PID, i as u64, "integrity", "scrub-fix", now);
+        }
+    }
+
+    /// Quarantine: a chip whose lifetime detected-corruption count
+    /// crosses the threshold is permanently removed (its SRAM is
+    /// presumed failing — detected flips are the observable symptom).
+    fn quarantine_check(&mut self, now: u64, i: usize) {
+        let threshold = self.spec.sdc.quarantine;
+        if threshold == 0 || self.instances[i].quarantined {
+            return;
+        }
+        if self.instances[i].sdc_detected_count >= threshold {
+            self.instances[i].quarantined = true;
+            self.quarantined += 1;
+            metrics::add("integrity.quarantined", 1);
+            trace_span::instant_cycles(CYCLES_PID, i as u64, "integrity", "quarantine", now);
+            self.take_down(now, i, "quarantine");
+        }
+    }
+
     fn on_complete(&mut self, now: u64, i: usize, epoch: u32) {
         if self.instances[i].epoch != epoch {
             return; // batch was killed by a crash; work already re-homed
+        }
+        // ISSUE 10: the integrity stack flagged this batch mid-flight.
+        // Re-execute from the retained inputs while budget remains; past
+        // the budget the batch cannot produce a trusted answer and its
+        // requests fail into the `RobustnessPolicy` retry path.
+        if self.instances[i].batch_detected > 0 {
+            if self.instances[i].reexec_used < self.spec.sdc.reexec_budget {
+                let redo = self.instances[i].launch.as_ref().map_or(1, |l| l.duration.max(1));
+                let horizon = self.horizon();
+                let inst = &mut self.instances[i];
+                inst.reexec_used += 1;
+                let fixed = inst.batch_detected as u64;
+                inst.batch_detected = 0;
+                // The re-run starts from clean inputs: any silent
+                // corruption this batch absorbed is re-done too.
+                inst.batch_corrupt = false;
+                let end = now + redo;
+                inst.stats.busy_cycles += end.min(horizon) - now.min(horizon);
+                inst.busy_until = end;
+                self.sdc_corrected += fixed;
+                metrics::add("integrity.corrected", fixed);
+                trace_span::instant_cycles(CYCLES_PID, i as u64, "integrity", "reexec", now);
+                self.events.push(end, ServeEvent::Complete { instance: i, epoch });
+                self.sync_load(i);
+                return;
+            }
+            let launch = self.instances[i].launch.take();
+            let running = std::mem::take(&mut self.instances[i].running);
+            self.instances[i].batch_detected = 0;
+            self.instances[i].batch_corrupt = false;
+            for (req, token) in running {
+                if self.remove_live_token(req, token) {
+                    self.fail_attempt(req, now, FailCause::ExecFault);
+                } else {
+                    self.stale_completions += 1;
+                }
+            }
+            if let Some(l) = launch {
+                trace_span::complete_cycles(
+                    CYCLES_PID,
+                    i as u64,
+                    "exec",
+                    format!("sdc-fail t{} x{}", l.tenant, l.n),
+                    l.start,
+                    now - l.start,
+                    vec![("batch", Arg::U(l.n as u64))],
+                );
+            }
+            self.try_launch(i, now);
+            return;
         }
         let launch = self.instances[i].launch.take();
         let running = std::mem::take(&mut self.instances[i].running);
@@ -1256,6 +1522,18 @@ impl<'a> Sim<'a> {
         }
         self.completed += done;
         self.instances[i].stats.completed += done;
+        // Responses served from corrupted state (an undetected in-batch
+        // flip, or latent weight corruption — escaped or still awaiting
+        // its scrub) are wrong answers delivered as successes.
+        if done > 0
+            && (self.instances[i].batch_corrupt
+                || self.instances[i].weight_corrupt > 0
+                || self.instances[i].weight_pending > 0)
+        {
+            self.silent_completions += done;
+            metrics::add("integrity.silent_served", done);
+        }
+        self.instances[i].batch_corrupt = false;
         if let Some(l) = launch {
             trace_span::complete_cycles(
                 CYCLES_PID,
@@ -1304,6 +1582,40 @@ impl<'a> Sim<'a> {
                     kind: e.kind,
                 },
             );
+        }
+        // The SDC flip plan rides its own dedicated streams and goes in
+        // right after the fault plan — still ahead of every arrival, so
+        // a flip at cycle `c` lands before that cycle's completions
+        // (pessimistic: a flip racing a completion corrupts it). Empty
+        // when SDC is off: the pre-SDC event sequence is untouched.
+        if self.spec.sdc_active() {
+            let sdc_plan = generate_sdc_plan(
+                &self.spec.sdc,
+                self.spec.instances.len(),
+                self.horizon(),
+                self.spec.clock_hz(),
+                self.spec.seed,
+            );
+            for e in sdc_plan {
+                self.events.push(
+                    e.cycle,
+                    ServeEvent::Sdc {
+                        instance: e.instance,
+                        site: e.site,
+                        roll: e.roll,
+                    },
+                );
+            }
+            // Protected runs scrub resident weights on a fixed cadence;
+            // each pass re-arms the next.
+            if self.spec.sdc.protect {
+                let period = self.spec.scrub_period_cycles();
+                if period <= self.horizon() {
+                    for i in 0..self.spec.instances.len() {
+                        self.events.push(period, ServeEvent::Scrub { instance: i });
+                    }
+                }
+            }
         }
 
         // Seed the load caches (handles degenerate specs like
@@ -1368,6 +1680,12 @@ impl<'a> Sim<'a> {
                             self.sync_load(instance);
                         }
                     },
+                    ServeEvent::Sdc {
+                        instance,
+                        site,
+                        roll,
+                    } => self.on_sdc(now, instance, site, roll),
+                    ServeEvent::Scrub { instance } => self.on_scrub(now, instance),
                 }
             }
         }
@@ -1434,6 +1752,14 @@ impl<'a> Sim<'a> {
             recoveries: self.recoveries,
             recovery_cycles: self.recovery_cycles,
             down_cycles,
+            sdc_injected: self.sdc_injected,
+            sdc_masked: self.sdc_masked,
+            sdc_detected: self.sdc_detected,
+            sdc_corrected: self.sdc_corrected,
+            sdc_silent: self.sdc_silent,
+            silent_completions: self.silent_completions,
+            scrubs: self.scrubs,
+            quarantined: self.quarantined,
             events_processed,
             records: self.records,
             instances: self.instances.into_iter().map(|i| i.stats).collect(),
@@ -1484,6 +1810,7 @@ mod tests {
             seed: 42,
             faults: FaultSpec::none(),
             robust: RobustnessPolicy::none(),
+            sdc: SdcSpec::none(),
         };
         let prof = ServiceProfile {
             single_cycles: 1_000_000,
@@ -1553,6 +1880,14 @@ mod tests {
             (out.crashes, "crashes"),
             (out.recoveries, "recoveries"),
             (out.down_cycles, "down_cycles"),
+            (out.sdc_injected, "sdc_injected"),
+            (out.sdc_masked, "sdc_masked"),
+            (out.sdc_detected, "sdc_detected"),
+            (out.sdc_corrected, "sdc_corrected"),
+            (out.sdc_silent, "sdc_silent"),
+            (out.silent_completions, "silent_completions"),
+            (out.scrubs, "scrubs"),
+            (out.quarantined, "quarantined"),
         ] {
             assert_eq!(v, 0, "zero-fault run has nonzero {name}");
         }
@@ -1895,5 +2230,83 @@ mod tests {
         // Replication wraps.
         assert_eq!(default_fleet(6).len(), 6);
         assert_eq!(default_fleet(0).len(), 1);
+    }
+
+    #[test]
+    fn sdc_unprotected_flips_serve_silent_wrong_answers() {
+        let (mut spec, profiles) =
+            toy_spec(DispatchPolicy::LeastLoaded, window(4, 100_000), 3_000.0);
+        spec.sdc = SdcSpec::parse("flip:2000").unwrap();
+        let out = simulate(&spec, &profiles);
+        assert_conserved(&out, "sdc unprotected");
+        assert!(out.sdc_injected > 100, "rate must fire: {}", out.sdc_injected);
+        assert_eq!(out.sdc_detected, 0, "nothing detects without protection");
+        assert_eq!(out.sdc_corrected, 0);
+        assert_eq!(out.scrubs, 0);
+        assert_eq!(
+            out.sdc_masked + out.sdc_silent,
+            out.sdc_injected,
+            "every flip is masked or silent"
+        );
+        assert!(out.silent_completions > 0, "corrupted answers ship as successes");
+        assert!(out.completed >= out.silent_completions);
+        // Replays are bit-identical.
+        let again = simulate(&spec, &profiles);
+        assert_eq!(out.sdc_injected, again.sdc_injected);
+        assert_eq!(out.silent_completions, again.silent_completions);
+        assert_eq!(out.completed, again.completed);
+    }
+
+    #[test]
+    fn sdc_protected_detects_ninety_percent_and_repairs() {
+        let (mut spec, profiles) =
+            toy_spec(DispatchPolicy::LeastLoaded, window(4, 100_000), 3_000.0);
+        spec.sdc = SdcSpec::parse("flip:2000,protect,scrub:2,budget:2").unwrap();
+        let out = simulate(&spec, &profiles);
+        assert_conserved(&out, "sdc protected");
+        assert!(out.sdc_injected > 100);
+        assert_eq!(
+            out.sdc_masked + out.sdc_detected + out.sdc_silent,
+            out.sdc_injected,
+            "flip ledger: masked + detected + silent = injected"
+        );
+        let consequential = out.sdc_injected - out.sdc_masked;
+        assert!(consequential > 50, "fleet busy enough: {consequential}");
+        let rate = out.sdc_detected as f64 / consequential as f64;
+        assert!(
+            rate >= 0.9,
+            "detection rate {rate:.3} < 0.9 ({} / {consequential})",
+            out.sdc_detected
+        );
+        assert!(out.sdc_corrected > 0, "re-execution and scrubbing repair");
+        assert!(out.sdc_corrected <= out.sdc_detected);
+        assert!(out.scrubs > 0, "the scrubber runs");
+        // Protection shrinks the silent-wrong-answer surface.
+        let mut unprot_spec = spec.clone();
+        unprot_spec.sdc = SdcSpec::parse("flip:2000").unwrap();
+        let unprot = simulate(&unprot_spec, &profiles);
+        assert!(
+            out.silent_completions < unprot.silent_completions,
+            "protected {} !< unprotected {}",
+            out.silent_completions,
+            unprot.silent_completions
+        );
+    }
+
+    #[test]
+    fn sdc_quarantine_removes_flaky_chips_permanently() {
+        let (mut spec, profiles) =
+            toy_spec(DispatchPolicy::LeastLoaded, window(4, 100_000), 3_000.0);
+        spec.sdc = SdcSpec::parse("flip:5000,protect,quarantine:10").unwrap();
+        let out = simulate(&spec, &profiles);
+        assert_conserved(&out, "sdc quarantine");
+        assert!(out.quarantined > 0, "500 flips/chip must cross 10 detections");
+        assert!(out.quarantined <= spec.instances.len() as u64);
+        assert!(out.down_cycles > 0, "quarantined chips accrue downtime");
+        assert_eq!(out.recoveries, 0, "quarantine never recovers");
+        // Replays are bit-identical.
+        let again = simulate(&spec, &profiles);
+        assert_eq!(out.quarantined, again.quarantined);
+        assert_eq!(out.completed, again.completed);
     }
 }

@@ -33,6 +33,10 @@
 //! * [`faults`] — seeded fault plans (crash/recover, stragglers,
 //!   execution faults) and client-side robustness knobs (timeouts,
 //!   retries, hedging, load shedding).
+//! * silent-data-corruption injection (ISSUE 10) threads through
+//!   [`fleet`]: seeded bit-flip plans ([`crate::sim::sdc`]), periodic
+//!   weight scrubbing, detected-vs-silent accounting, and quarantine of
+//!   chips whose detected-corruption count crosses a threshold.
 //! * [`fleet`] — service profiles from real engine runs + the simulator
 //!   (rack topology via [`fleet::parse_topology`]).
 //! * [`report`] — [`report::ServeReport`]: percentiles, utilization,
@@ -58,5 +62,5 @@ pub use fleet::{
     build_profiles, default_fleet, parse_topology, profile_from_report, simulate, InstanceSpec,
     Outcome, ServeOutcome, ServeSpec, ServiceProfile,
 };
-pub use report::ServeReport;
+pub use report::{IntegritySummary, ServeReport};
 pub use traffic::{default_mix, Tenant, TrafficModel};

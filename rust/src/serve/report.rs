@@ -9,7 +9,10 @@
 //! ledger) plus per-tenant goodput/timed-out/shed and per-instance
 //! crash/availability keys. A zero-fault run emits **no** new keys and
 //! no new text lines: its output is bit-identical to the pre-fault
-//! simulator (pinned by `tests/serve.rs`).
+//! simulator (pinned by `tests/serve.rs`). An SDC run
+//! ([`ServeSpec::sdc_active`], ISSUE 10) likewise grows a gated
+//! `integrity` section (flip ledger, detection/escape rates, scrub and
+//! quarantine counts) under the same zero-impact discipline.
 
 use super::fleet::{Outcome, ServeOutcome, ServeSpec};
 use crate::util::json::Json;
@@ -140,6 +143,51 @@ impl ResilienceSummary {
     }
 }
 
+/// Fleet-level data-integrity summary (ISSUE 10) — present only when
+/// the run injected SDC flips ([`ServeSpec::sdc_active`]), so zero-SDC
+/// output stays bit-identical to the pre-SDC report.
+#[derive(Debug, Clone)]
+pub struct IntegritySummary {
+    /// Injected SDC mix label ([`crate::sim::sdc::SdcSpec::label`]).
+    pub sdc: String,
+    pub protected: bool,
+    pub injected: u64,
+    pub masked: u64,
+    pub detected: u64,
+    pub corrected: u64,
+    pub silent: u64,
+    /// Detected fraction of consequential (non-masked) flips.
+    pub detection_rate: f64,
+    /// Silent fraction of consequential flips — the escape rate.
+    pub escape_rate: f64,
+    /// Wrong answers delivered as successes.
+    pub silent_completions: u64,
+    pub scrubs: u64,
+    pub quarantined: u64,
+    /// Fractional service-time overhead charged for protection.
+    pub overhead_frac: f64,
+}
+
+impl IntegritySummary {
+    fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("sdc", self.sdc.as_str())
+            .set("protected", self.protected)
+            .set("injected", self.injected)
+            .set("masked", self.masked)
+            .set("detected", self.detected)
+            .set("corrected", self.corrected)
+            .set("silent", self.silent)
+            .set("detection_rate", self.detection_rate)
+            .set("escape_rate", self.escape_rate)
+            .set("silent_completions", self.silent_completions)
+            .set("scrubs", self.scrubs)
+            .set("quarantined", self.quarantined)
+            .set("overhead_frac", self.overhead_frac);
+        o
+    }
+}
+
 /// The full rendered report of one serving run.
 #[derive(Debug, Clone)]
 pub struct ServeReport {
@@ -169,6 +217,9 @@ pub struct ServeReport {
     /// every new JSON key and text line so zero-fault output is
     /// bit-identical to the pre-fault report.
     pub resilience: Option<ResilienceSummary>,
+    /// `Some` only when the run injected SDC flips; gated the same way
+    /// so zero-SDC output is bit-identical to the pre-SDC report.
+    pub integrity: Option<IntegritySummary>,
 }
 
 impl ServeReport {
@@ -252,6 +303,29 @@ impl ServeReport {
             }
         });
 
+        let integrity = spec.sdc_active().then(|| {
+            let consequential = outcome.sdc_injected.saturating_sub(outcome.sdc_masked).max(1);
+            IntegritySummary {
+                sdc: spec.sdc.label(),
+                protected: spec.sdc.protect,
+                injected: outcome.sdc_injected,
+                masked: outcome.sdc_masked,
+                detected: outcome.sdc_detected,
+                corrected: outcome.sdc_corrected,
+                silent: outcome.sdc_silent,
+                detection_rate: outcome.sdc_detected as f64 / consequential as f64,
+                escape_rate: outcome.sdc_silent as f64 / consequential as f64,
+                silent_completions: outcome.silent_completions,
+                scrubs: outcome.scrubs,
+                quarantined: outcome.quarantined,
+                overhead_frac: if spec.sdc.protect {
+                    spec.sdc.overhead_frac
+                } else {
+                    0.0
+                },
+            }
+        });
+
         ServeReport {
             policy: spec.policy.label().to_string(),
             traffic: spec.traffic.label(),
@@ -273,6 +347,7 @@ impl ServeReport {
             tenants,
             instances,
             resilience,
+            integrity,
         }
     }
 
@@ -375,6 +450,9 @@ impl ServeReport {
         if let Some(res) = &self.resilience {
             o.set("resilience", res.to_json());
         }
+        if let Some(integ) = &self.integrity {
+            o.set("integrity", integ.to_json());
+        }
         o
     }
 
@@ -445,6 +523,26 @@ impl ServeReport {
                 ));
             }
         }
+        if let Some(integ) = &self.integrity {
+            s.push_str(&format!(
+                "integrity: sdc {} | injected {} = masked {} + detected {} + silent {} | corrected {}\n",
+                integ.sdc,
+                integ.injected,
+                integ.masked,
+                integ.detected,
+                integ.silent,
+                integ.corrected,
+            ));
+            s.push_str(&format!(
+                "integrity: detection {:.4} | escape {:.4} | silent completions {} | scrubs {} | quarantined {} | overhead {:.1}%\n",
+                integ.detection_rate,
+                integ.escape_rate,
+                integ.silent_completions,
+                integ.scrubs,
+                integ.quarantined,
+                100.0 * integ.overhead_frac,
+            ));
+        }
         let cpm = self.clock_mhz * 1e3;
         s.push_str(&format!(
             "latency: p50 {:.3} ms | p95 {:.3} ms | p99 {:.3} ms | mean {:.3} ms (n={})\n",
@@ -490,6 +588,7 @@ mod tests {
     use crate::serve::fleet::{simulate, InstanceSpec, ServeSpec, ServiceProfile};
     use crate::serve::traffic::{Tenant, TrafficModel};
     use crate::sim::config::SimConfig;
+    use crate::sim::sdc::SdcSpec;
 
     fn toy_spec() -> (ServeSpec, Vec<Vec<ServiceProfile>>) {
         let spec = ServeSpec {
@@ -518,6 +617,7 @@ mod tests {
             seed: 9,
             faults: FaultSpec::none(),
             robust: RobustnessPolicy::none(),
+            sdc: SdcSpec::none(),
         };
         let prof = ServiceProfile {
             single_cycles: 800_000,
@@ -585,6 +685,7 @@ mod tests {
     fn zero_fault_json_emits_no_resilience_keys() {
         let j = toy_report().to_json();
         assert!(j.get("resilience").is_none());
+        assert!(j.get("integrity").is_none());
         assert!(j.get("timed_out").is_none());
         assert!(j.get("shed").is_none());
         for t in j.get("tenants").unwrap().as_arr().unwrap() {
@@ -775,6 +876,63 @@ mod tests {
                 "utilization",
             ]
         );
+    }
+
+    /// SDC-on report: the gated `integrity` section, its golden key set,
+    /// and the text lines. Zero-SDC output (every other test here) emits
+    /// none of this.
+    #[test]
+    fn sdc_report_grows_the_integrity_section() {
+        let (mut spec, profiles) = toy_spec();
+        spec.sdc = SdcSpec::parse("flip:2000,protect,scrub:2").unwrap();
+        let out = simulate(&spec, &profiles);
+        let r = ServeReport::new(&spec, &out);
+        let integ = r.integrity.as_ref().expect("integrity summary present");
+        assert!(integ.protected);
+        assert!(integ.injected > 0);
+        assert_eq!(
+            integ.masked + integ.detected + integ.silent,
+            integ.injected,
+            "flip ledger closes"
+        );
+        assert!(integ.detection_rate >= 0.9, "rate {}", integ.detection_rate);
+        assert!((integ.detection_rate + integ.escape_rate - 1.0).abs() < 1e-9);
+        let j = r.to_json();
+        assert_eq!(Json::parse(&j.pretty()).unwrap(), j);
+        let keys: Vec<String> = j
+            .get("integrity")
+            .unwrap()
+            .as_obj()
+            .unwrap()
+            .keys()
+            .cloned()
+            .collect();
+        assert_eq!(
+            keys,
+            [
+                "corrected",
+                "detected",
+                "detection_rate",
+                "escape_rate",
+                "injected",
+                "masked",
+                "overhead_frac",
+                "protected",
+                "quarantined",
+                "scrubs",
+                "sdc",
+                "silent",
+                "silent_completions",
+            ]
+        );
+        // No resilience section: SDC alone does not fabricate one.
+        assert!(j.get("resilience").is_none());
+        let text = r.text();
+        assert!(text.contains("integrity: sdc"));
+        assert!(text.contains("detection"));
+        // Bit-identical replays.
+        let again = ServeReport::new(&spec, &simulate(&spec, &profiles));
+        assert_eq!(j.pretty(), again.to_json().pretty());
     }
 
     #[test]

@@ -17,6 +17,8 @@
 //!   including multi-array synchronization (the source of the paper's
 //!   92%/85%-of-ideal efficiency).
 //! * [`postproc`] — ReLU + zero detection + output vector compression.
+//! * [`sdc`] — seeded silent-data-corruption injection, the detection
+//!   coverage model, and the protection-cost knobs (ISSUE 10).
 //! * [`stats`] — cycle/work/traffic counters behind every figure.
 //! * [`trace`] — per-cycle issue trace (regenerates Table I / Fig 8).
 //!
@@ -39,6 +41,7 @@ pub mod pe;
 pub mod pe_array;
 pub mod postproc;
 pub mod scheduler;
+pub mod sdc;
 pub mod sram;
 pub mod stats;
 pub mod trace;

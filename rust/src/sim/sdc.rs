@@ -1,0 +1,520 @@
+//! Silent-data-corruption (SDC) model (ISSUE 10): seeded bit-flip
+//! injection, the detection-stack coverage model, and the knobs that
+//! price protection into the cycle model.
+//!
+//! CVF compression amplifies upsets: one flipped index word redirects an
+//! entire vector's partial sums, one flipped payload exponent poisons an
+//! output plane. This module supplies the *deterministic* ingredients
+//! the engine ([`crate::engine`]) and the serving fleet
+//! ([`crate::serve::fleet`]) thread through:
+//!
+//! * [`SdcSpec`] — the injected upset mix, parsed from the CLI `--sdc`
+//!   grammar (`flip:RATE,weight:F,act:F,acc:F,protect,scrub:MS,
+//!   quarantine:N,ovh:F,budget:N`).
+//! * [`generate_sdc_plan`] — a seeded, pre-materialized timeline of
+//!   per-instance flips on dedicated [`Pcg32`] streams
+//!   ([`SDC_STREAM_BASE`], disjoint from the arrival stream and the PR 6
+//!   fault streams), each event carrying its taxonomy site and a
+//!   pre-drawn detection roll — the event loop itself draws nothing, so
+//!   zero-SDC runs stay byte-identical and flip replays are
+//!   bit-reproducible.
+//! * [`coverage`] — what fraction of consequential flips per
+//!   [`SdcSite`] the protection stack (structural CVF validation +
+//!   ABFT column checksums + periodic weight scrubbing) catches.
+//! * [`IntegrityCounters`] — the injected / masked / detected /
+//!   corrected / silent ledger both layers report.
+//! * [`EngineSdc`] — the engine-path injection knobs: real bit flips
+//!   into tensors and CVF words per layer, detected by
+//!   [`crate::tensor::ops::abft_check`] + [`CvfError`]-typed validation
+//!   and recovered by bounded per-layer re-execution.
+//!
+//! [`CvfError`]: crate::sparse::vector_format::CvfError
+
+use crate::util::rng::Pcg32;
+use anyhow::{bail, Context, Result};
+
+/// Base PCG32 stream id for per-instance SDC flip plans: instance `i`
+/// draws from stream `BASE + i`. Disjoint from the arrival stream (1),
+/// the dispatch stream (3), the traffic streams (2), the PR 6 fault
+/// streams (`0x0F00 + 2i`, `REQ_FAULT_STREAM = 7`), and the engine SDC
+/// streams below, so turning flips on never perturbs any other draw.
+pub const SDC_STREAM_BASE: u64 = 0x5DC0;
+
+/// Base PCG32 stream id for the engine path's per-layer injection
+/// draws: layer `l` uses `ENGINE_BASE + l`. Offset far past any
+/// realistic fleet size so serve-side and engine-side plans never share
+/// a stream even under one seed.
+pub const SDC_ENGINE_STREAM_BASE: u64 = SDC_STREAM_BASE + 0x4000;
+
+/// Where an upset lands, the ISSUE 10 fault taxonomy. The site decides
+/// which detector can see it and therefore its [`coverage`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SdcSite {
+    /// SRAM-resident weight CVF words, flipped once and then read by
+    /// every batch until a scrub or a cold reload notices.
+    Weight,
+    /// Activation CVF index/payload words in flight for one layer.
+    Activation,
+    /// A MAC-group partial sum — corrupts the output of the batch
+    /// currently executing.
+    Accumulator,
+}
+
+impl SdcSite {
+    /// Short label for reports and trace markers.
+    pub fn label(&self) -> &'static str {
+        match self {
+            SdcSite::Weight => "weight",
+            SdcSite::Activation => "act",
+            SdcSite::Accumulator => "acc",
+        }
+    }
+}
+
+/// Detection coverage of the protection stack per site: the fraction of
+/// *consequential* flips (those that land in live state) it catches.
+///
+/// * Weight — structural CVF validation over the resident encode plus
+///   the scrub's checksum recompute; only payload flips that stay
+///   in-grid and sub-tolerance escape.
+/// * Activation — index-word flips are fully caught structurally
+///   (bounds / monotonicity / occupancy cross-check, see
+///   `vector_format::validate`), but payload flips enter the matmul on
+///   both sides of the ABFT identity and escape it — the weakest site.
+/// * Accumulator — lands after the checksum row was formed, exactly
+///   what ABFT column sums see; only sub-tolerance mantissa flips hide.
+pub fn coverage(site: SdcSite) -> f64 {
+    match site {
+        SdcSite::Weight => 0.98,
+        SdcSite::Activation => 0.94,
+        SdcSite::Accumulator => 0.97,
+    }
+}
+
+/// Injected SDC mix and protection knobs for one serving run. Rates are
+/// per instance; fractions weight the taxonomy draw.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SdcSpec {
+    /// Upset arrivals per instance-second (Poisson). 0 = never.
+    pub flip_per_sec: f64,
+    /// Taxonomy mixture weight for [`SdcSite::Weight`].
+    pub weight_frac: f64,
+    /// Taxonomy mixture weight for [`SdcSite::Activation`].
+    pub act_frac: f64,
+    /// Taxonomy mixture weight for [`SdcSite::Accumulator`].
+    pub acc_frac: f64,
+    /// Protection stack on: structural validation + ABFT checksums +
+    /// weight scrubbing + bounded re-execution, all charged in cycles.
+    pub protect: bool,
+    /// Weight-scrub period in milliseconds (protected runs re-verify
+    /// resident weights on this cadence).
+    pub scrub_ms: f64,
+    /// Quarantine threshold: a chip whose detected-corruption count
+    /// reaches this is taken out of rotation for good. 0 = never.
+    pub quarantine: u32,
+    /// Fractional service-time overhead charged while protected (the
+    /// checksum rows, validation walks, and scrub interference).
+    pub overhead_frac: f64,
+    /// Per-batch re-execution budget on detection before the batch's
+    /// requests are failed into the `RobustnessPolicy` retry path.
+    pub reexec_budget: u32,
+}
+
+impl SdcSpec {
+    /// No injected upsets: fully inert, the zero-SDC configuration is
+    /// byte-identical to the pre-SDC simulator.
+    pub fn none() -> SdcSpec {
+        SdcSpec {
+            flip_per_sec: 0.0,
+            weight_frac: 0.3,
+            act_frac: 0.5,
+            acc_frac: 0.2,
+            protect: false,
+            scrub_ms: 2.0,
+            quarantine: 0,
+            overhead_frac: 0.02,
+            reexec_budget: 2,
+        }
+    }
+
+    /// True when flips never fire — the plan is empty, no scrub events
+    /// are scheduled, no overhead is charged, nothing is reported.
+    pub fn is_none(&self) -> bool {
+        self.flip_per_sec == 0.0
+    }
+
+    /// Parse the CLI `--sdc` grammar: comma-separated `key:value` pairs
+    /// plus the bare `protect` word. Keys: `flip` (upsets per
+    /// instance-second), `weight`/`act`/`acc` (taxonomy mixture
+    /// weights, >= 0, not all zero), `scrub` (ms), `quarantine`
+    /// (detected-flip threshold, 0 = off), `ovh` (fractional overhead
+    /// in [0, 1)), `budget` (re-executions per batch). Unspecified keys
+    /// keep the [`SdcSpec::none`] defaults.
+    pub fn parse(s: &str) -> Result<SdcSpec> {
+        let mut spec = SdcSpec::none();
+        if s.trim().is_empty() {
+            bail!("--sdc spec is empty (example: flip:100,protect,scrub:2)");
+        }
+        for part in s.split(',') {
+            if part == "protect" {
+                spec.protect = true;
+                continue;
+            }
+            let Some((key, val)) = part.split_once(':') else {
+                bail!("--sdc: '{part}' is not key:value or 'protect' (example: flip:100)");
+            };
+            let num: f64 = val
+                .parse()
+                .with_context(|| format!("--sdc {key}: cannot parse '{val}'"))?;
+            if !num.is_finite() {
+                bail!("--sdc {key}: '{val}' is not finite");
+            }
+            match key {
+                "flip" => {
+                    anyhow::ensure!(num >= 0.0, "--sdc flip: rate must be >= 0, got {num}");
+                    spec.flip_per_sec = num;
+                }
+                "weight" => {
+                    anyhow::ensure!(num >= 0.0, "--sdc weight: fraction must be >= 0");
+                    spec.weight_frac = num;
+                }
+                "act" => {
+                    anyhow::ensure!(num >= 0.0, "--sdc act: fraction must be >= 0");
+                    spec.act_frac = num;
+                }
+                "acc" => {
+                    anyhow::ensure!(num >= 0.0, "--sdc acc: fraction must be >= 0");
+                    spec.acc_frac = num;
+                }
+                "scrub" => {
+                    anyhow::ensure!(num > 0.0, "--sdc scrub: must be > 0 ms, got {num}");
+                    spec.scrub_ms = num;
+                }
+                "quarantine" => {
+                    anyhow::ensure!(
+                        num >= 0.0 && num.fract() == 0.0,
+                        "--sdc quarantine: must be a whole count >= 0, got {num}"
+                    );
+                    spec.quarantine = num as u32;
+                }
+                "ovh" => {
+                    anyhow::ensure!(
+                        (0.0..1.0).contains(&num),
+                        "--sdc ovh: overhead fraction must be in [0, 1), got {num}"
+                    );
+                    spec.overhead_frac = num;
+                }
+                "budget" => {
+                    anyhow::ensure!(
+                        num >= 0.0 && num.fract() == 0.0,
+                        "--sdc budget: must be a whole count >= 0, got {num}"
+                    );
+                    spec.reexec_budget = num as u32;
+                }
+                other => bail!(
+                    "--sdc: unknown key '{other}' \
+                     (known: flip, weight, act, acc, protect, scrub, quarantine, ovh, budget)"
+                ),
+            }
+        }
+        anyhow::ensure!(
+            spec.weight_frac + spec.act_frac + spec.acc_frac > 0.0,
+            "--sdc: taxonomy fractions must not all be zero"
+        );
+        Ok(spec)
+    }
+
+    /// Short label for reports.
+    pub fn label(&self) -> String {
+        if self.is_none() {
+            return "none".to_string();
+        }
+        let mut s = format!(
+            "flip {}/s (w:{} a:{} c:{})",
+            self.flip_per_sec, self.weight_frac, self.act_frac, self.acc_frac
+        );
+        if self.protect {
+            s.push_str(&format!(
+                " | protected scrub {}ms ovh {} budget {}",
+                self.scrub_ms, self.overhead_frac, self.reexec_budget
+            ));
+            if self.quarantine > 0 {
+                s.push_str(&format!(" quarantine {}", self.quarantine));
+            }
+        } else {
+            s.push_str(" | unprotected");
+        }
+        s
+    }
+
+    /// Expected composite detection coverage over the taxonomy mix —
+    /// what a protected run should converge to.
+    pub fn expected_coverage(&self) -> f64 {
+        let total = self.weight_frac + self.act_frac + self.acc_frac;
+        if total <= 0.0 {
+            return 0.0;
+        }
+        (self.weight_frac * coverage(SdcSite::Weight)
+            + self.act_frac * coverage(SdcSite::Activation)
+            + self.acc_frac * coverage(SdcSite::Accumulator))
+            / total
+    }
+}
+
+/// One planned upset: `site` on `instance` at `cycle`; `roll` is the
+/// pre-drawn uniform compared against [`coverage`] at handling time so
+/// the event loop never consults an RNG.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SdcEvent {
+    pub cycle: u64,
+    pub instance: usize,
+    pub site: SdcSite,
+    pub roll: f32,
+}
+
+/// Exponential gap draw, semantics identical to
+/// `serve::traffic::exp_interarrival` (kept local so the accelerator
+/// model never depends on the serving layer).
+fn exp_gap(rng: &mut Pcg32, mean_cycles: f64) -> u64 {
+    let u = 1.0 - rng.f32() as f64;
+    ((-u.ln() * mean_cycles).ceil() as u64).max(1)
+}
+
+/// Materialize the seeded flip timeline for a fleet of `instances` over
+/// `horizon` cycles at `clock_hz` cycles/sec: per-instance Poisson
+/// arrivals on stream `SDC_STREAM_BASE + i`, each event carrying its
+/// taxonomy site and detection roll. Returned sorted by `(cycle,
+/// instance)`, ready to enqueue ahead of the arrival process.
+/// Deterministic per `(spec, seed)`; empty when `spec.is_none()`.
+pub fn generate_sdc_plan(
+    spec: &SdcSpec,
+    instances: usize,
+    horizon: u64,
+    clock_hz: f64,
+    seed: u64,
+) -> Vec<SdcEvent> {
+    let mut plan: Vec<SdcEvent> = Vec::new();
+    if spec.is_none() {
+        return plan;
+    }
+    let total = spec.weight_frac + spec.act_frac + spec.acc_frac;
+    let (w_cut, a_cut) = (
+        (spec.weight_frac / total) as f32,
+        ((spec.weight_frac + spec.act_frac) / total) as f32,
+    );
+    let mean_gap = clock_hz / spec.flip_per_sec;
+    for i in 0..instances {
+        let mut rng = Pcg32::new(seed, SDC_STREAM_BASE + i as u64);
+        let mut t = 0u64;
+        loop {
+            t += exp_gap(&mut rng, mean_gap);
+            if t > horizon {
+                break;
+            }
+            let u = rng.f32();
+            let site = if u < w_cut {
+                SdcSite::Weight
+            } else if u < a_cut {
+                SdcSite::Activation
+            } else {
+                SdcSite::Accumulator
+            };
+            plan.push(SdcEvent {
+                cycle: t,
+                instance: i,
+                site,
+                roll: rng.f32(),
+            });
+        }
+    }
+    plan.sort_by_key(|e| (e.cycle, e.instance));
+    plan
+}
+
+/// Protection's price in the cycle model: the checksum rows, validation
+/// walks, and scrub interference inflate a base service time by
+/// `overhead_frac` (ceil so protection is never free).
+pub fn protected_cycles(base: u64, overhead_frac: f64) -> u64 {
+    base + (base as f64 * overhead_frac).ceil() as u64
+}
+
+/// Precision-aware ABFT noise floor for
+/// [`crate::tensor::ops::abft_check`]: fake-quantized payloads still
+/// accumulate in f32, so the floor is f32's unit roundoff with modest
+/// headroom at the coarser grids (their dequantized magnitudes cluster
+/// on fewer, larger steps).
+pub fn abft_unit_round(precision: crate::sim::config::Precision) -> f64 {
+    use crate::sim::config::Precision;
+    let scale = match precision {
+        Precision::F32 => 1.0,
+        Precision::Int16 => 2.0,
+        Precision::Int8 => 4.0,
+    };
+    scale * f32::EPSILON as f64
+}
+
+/// The injected / masked / detected / corrected / silent ledger both
+/// the engine and the fleet report. `masked` counts flips that landed
+/// in dead state (an idle chip's transient activation/accumulator
+/// words) — the architecturally-masked population standard SDC
+/// accounting excludes from detection rates.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct IntegrityCounters {
+    pub injected: u64,
+    pub masked: u64,
+    pub detected: u64,
+    pub corrected: u64,
+    pub silent: u64,
+}
+
+impl IntegrityCounters {
+    /// Detected fraction of consequential (non-masked) flips.
+    pub fn detection_rate(&self) -> f64 {
+        let consequential = self.injected.saturating_sub(self.masked);
+        if consequential == 0 {
+            return 1.0;
+        }
+        self.detected as f64 / consequential as f64
+    }
+
+    /// Conservation check: every consequential flip is detected or
+    /// silent.
+    pub fn consistent(&self) -> bool {
+        self.injected >= self.masked
+            && self.detected + self.silent == self.injected - self.masked
+            && self.corrected <= self.detected
+    }
+}
+
+/// Engine-path injection knobs ([`crate::engine::execute::RunOptions`]):
+/// real bit flips into the layer tensors and CVF words, detected by
+/// ABFT + structural validation, recovered by bounded per-layer
+/// re-execution. `None` on the options struct keeps the engine
+/// byte-identical to the pre-SDC path.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct EngineSdc {
+    /// Bit flips injected per conv layer (exact count, not a rate —
+    /// keeps small-network tests deterministic and meaningful).
+    pub flips_per_layer: u32,
+    /// Seed for the per-layer injection streams
+    /// (`SDC_ENGINE_STREAM_BASE + layer`).
+    pub seed: u64,
+    /// Run the detection stack and bounded re-execution; off = inject
+    /// only (the unprotected arm).
+    pub protect: bool,
+    /// Re-execution budget per layer on detection.
+    pub reexec_budget: u32,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_full_grammar() {
+        let s = SdcSpec::parse(
+            "flip:120,weight:0.2,act:0.6,acc:0.2,protect,scrub:3,quarantine:5,ovh:0.03,budget:1",
+        )
+        .unwrap();
+        assert_eq!(s.flip_per_sec, 120.0);
+        assert_eq!(s.weight_frac, 0.2);
+        assert_eq!(s.act_frac, 0.6);
+        assert_eq!(s.acc_frac, 0.2);
+        assert!(s.protect);
+        assert_eq!(s.scrub_ms, 3.0);
+        assert_eq!(s.quarantine, 5);
+        assert_eq!(s.overhead_frac, 0.03);
+        assert_eq!(s.reexec_budget, 1);
+        assert!(!s.is_none());
+        assert!(s.label().contains("protected"));
+    }
+
+    #[test]
+    fn parse_partial_keeps_defaults_and_errors_are_specific() {
+        let s = SdcSpec::parse("flip:50").unwrap();
+        assert_eq!(s.flip_per_sec, 50.0);
+        assert!(!s.protect);
+        assert_eq!(s.scrub_ms, SdcSpec::none().scrub_ms);
+        assert!(s.label().contains("unprotected"));
+        for (input, needle) in [
+            ("", "empty"),
+            ("flip", "key:value"),
+            ("flip:abc", "cannot parse"),
+            ("flip:-1", ">= 0"),
+            ("ovh:1.5", "[0, 1)"),
+            ("scrub:0", "> 0"),
+            ("quarantine:1.5", "whole count"),
+            ("bogus:1", "unknown key"),
+            ("flip:1,weight:0,act:0,acc:0", "not all be zero"),
+        ] {
+            let err = SdcSpec::parse(input).unwrap_err();
+            assert!(
+                format!("{err:#}").contains(needle),
+                "input '{input}': expected '{needle}' in '{err:#}'"
+            );
+        }
+    }
+
+    #[test]
+    fn none_spec_is_inert() {
+        assert!(SdcSpec::none().is_none());
+        assert_eq!(SdcSpec::none().label(), "none");
+        let plan = generate_sdc_plan(&SdcSpec::none(), 8, 1_000_000_000, 5e8, 42);
+        assert!(plan.is_empty());
+    }
+
+    #[test]
+    fn plan_is_deterministic_sorted_and_site_mixed() {
+        let spec = SdcSpec::parse("flip:400,protect").unwrap();
+        let a = generate_sdc_plan(&spec, 4, 500_000_000, 5e8, 9);
+        let b = generate_sdc_plan(&spec, 4, 500_000_000, 5e8, 9);
+        assert_eq!(a, b, "same (spec, seed) must replay bit-identically");
+        assert!(a.len() > 100, "rate high enough to fire: {}", a.len());
+        assert!(a.windows(2).all(|w| (w[0].cycle, w[0].instance) <= (w[1].cycle, w[1].instance)));
+        let c = generate_sdc_plan(&spec, 4, 500_000_000, 5e8, 10);
+        assert_ne!(a, c, "different seeds produce different timelines");
+        // All three sites appear under the default mixture, and the
+        // rolls are genuine uniforms.
+        for site in [SdcSite::Weight, SdcSite::Activation, SdcSite::Accumulator] {
+            assert!(a.iter().any(|e| e.site == site), "{site:?} never drawn");
+        }
+        assert!(a.iter().all(|e| (0.0..1.0).contains(&e.roll)));
+    }
+
+    #[test]
+    fn expected_coverage_clears_the_acceptance_bar() {
+        let spec = SdcSpec::parse("flip:100,protect").unwrap();
+        assert!(
+            spec.expected_coverage() >= 0.9,
+            "default taxonomy coverage {} < 0.9",
+            spec.expected_coverage()
+        );
+        for site in [SdcSite::Weight, SdcSite::Activation, SdcSite::Accumulator] {
+            assert!((0.9..1.0).contains(&coverage(site)), "{site:?}");
+        }
+    }
+
+    #[test]
+    fn counters_conserve_and_rate_is_sane() {
+        let c = IntegrityCounters {
+            injected: 100,
+            masked: 20,
+            detected: 75,
+            corrected: 70,
+            silent: 5,
+        };
+        assert!(c.consistent());
+        assert!((c.detection_rate() - 0.9375).abs() < 1e-12);
+        assert_eq!(IntegrityCounters::default().detection_rate(), 1.0);
+        assert!(IntegrityCounters::default().consistent());
+    }
+
+    #[test]
+    fn protection_overhead_is_charged_and_bounded() {
+        assert_eq!(protected_cycles(1000, 0.02), 1020);
+        assert_eq!(protected_cycles(0, 0.02), 0);
+        assert_eq!(protected_cycles(1, 0.02), 2, "ceil: protection is never free");
+        use crate::sim::config::Precision;
+        assert!(abft_unit_round(Precision::F32) < abft_unit_round(Precision::Int8));
+    }
+}

@@ -22,6 +22,120 @@
 
 use crate::sparse::bitset::Bitset;
 use crate::tensor::Tensor;
+use std::fmt;
+
+/// Typed structural defect found in a CVF encoding (ISSUE 10): the
+/// decode-side contract check for data that crossed an unreliable
+/// SRAM/DRAM boundary. Every variant names the first offending site so
+/// detection counters and blast-radius reasoning stay precise; malformed
+/// data becomes an `Err`, never a panic or an out-of-bounds read.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CvfError {
+    /// The CSR offset table is the wrong length, decreasing, or points
+    /// past the index list — decoding would read out of bounds.
+    OffsetCorrupt { group: usize },
+    /// An index word names a column at or past the group's width.
+    IndexOutOfBounds { group: usize, pos: usize, col: usize, limit: usize },
+    /// Index words within a group are not strictly increasing (the
+    /// scheduler's merge walk requires sorted, duplicate-free lists).
+    IndexNotMonotone { group: usize, pos: usize },
+    /// Occupancy bitmap and index list disagree: a listed column's bit
+    /// is clear, or the group's popcount exceeds its list length
+    /// (`col == limit` marks the popcount case).
+    OccupancyMismatch { group: usize, col: usize },
+    /// Payload plane length disagrees with `index words * vector len`.
+    PayloadSizeMismatch { expected: usize, got: usize },
+    /// A payload word decodes to NaN/inf — an upset in the exponent
+    /// bits of a stored value.
+    PayloadNotFinite { word: usize },
+}
+
+impl fmt::Display for CvfError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match *self {
+            CvfError::OffsetCorrupt { group } => {
+                write!(f, "CVF offset table corrupt at group {group}")
+            }
+            CvfError::IndexOutOfBounds { group, pos, col, limit } => write!(
+                f,
+                "CVF index out of bounds: group {group} pos {pos} col {col} >= {limit}"
+            ),
+            CvfError::IndexNotMonotone { group, pos } => {
+                write!(f, "CVF index list not strictly increasing: group {group} pos {pos}")
+            }
+            CvfError::OccupancyMismatch { group, col } => {
+                write!(f, "CVF occupancy/index mismatch at group {group} col {col}")
+            }
+            CvfError::PayloadSizeMismatch { expected, got } => {
+                write!(f, "CVF payload size mismatch: expected {expected} words, got {got}")
+            }
+            CvfError::PayloadNotFinite { word } => {
+                write!(f, "CVF payload word {word} is not finite")
+            }
+        }
+    }
+}
+
+impl std::error::Error for CvfError {}
+
+/// Shared CSR validation walk over one encode's raw planes: offsets
+/// first (so the index slicing below can never go out of bounds), then
+/// per-group index bounds + strict monotonicity + occupancy
+/// cross-check, then payload shape and finiteness. `groups * width`
+/// must equal `occ.len()`.
+fn validate_csr(
+    occ: &Bitset,
+    nz_offsets: &[u32],
+    index_cols: &dyn Fn(usize) -> usize,
+    index_len: usize,
+    groups: usize,
+    width: usize,
+    payload: &[f32],
+    payload_per_index: usize,
+    has_vals: bool,
+) -> Result<(), CvfError> {
+    if nz_offsets.len() != groups + 1 || nz_offsets[0] != 0 {
+        return Err(CvfError::OffsetCorrupt { group: 0 });
+    }
+    if nz_offsets[groups] as usize != index_len {
+        return Err(CvfError::OffsetCorrupt { group: groups });
+    }
+    for g in 0..groups {
+        let (lo, hi) = (nz_offsets[g] as usize, nz_offsets[g + 1] as usize);
+        if lo > hi || hi > index_len {
+            return Err(CvfError::OffsetCorrupt { group: g });
+        }
+        let mut prev: Option<usize> = None;
+        for pos in lo..hi {
+            let col = index_cols(pos);
+            if col >= width {
+                return Err(CvfError::IndexOutOfBounds { group: g, pos: pos - lo, col, limit: width });
+            }
+            if prev.is_some_and(|p| col <= p) {
+                return Err(CvfError::IndexNotMonotone { group: g, pos: pos - lo });
+            }
+            prev = Some(col);
+            if !occ.get(g * width + col) {
+                return Err(CvfError::OccupancyMismatch { group: g, col });
+            }
+        }
+        // Every listed column's bit is set; equal counts rule out extra
+        // bits with no matching index word.
+        if occ.count_ones_in(g * width, (g + 1) * width) != hi - lo {
+            return Err(CvfError::OccupancyMismatch { group: g, col: width });
+        }
+    }
+    if has_vals {
+        let expected = index_len * payload_per_index;
+        if payload.len() != expected {
+            return Err(CvfError::PayloadSizeMismatch { expected, got: payload.len() });
+        }
+        if let Some(word) = payload.iter().position(|v| !v.is_finite()) {
+            return Err(CvfError::PayloadNotFinite { word });
+        }
+    }
+    Ok(())
+}
 
 /// Vector-sparse view of an activation tensor `[C, H, W]`.
 ///
@@ -215,6 +329,78 @@ impl VectorActivations {
     pub fn index_entries(&self) -> usize {
         self.nonzero_vectors()
     }
+
+    /// Structural decode validation (ISSUE 10): offset-table sanity,
+    /// per-group index bounds + strict monotonicity, occupancy
+    /// cross-check, payload shape and finiteness. `Ok` guarantees every
+    /// accessor above stays in bounds; run this before walking an
+    /// encode that crossed an unreliable transfer.
+    pub fn validate(&self) -> Result<(), CvfError> {
+        validate_csr(
+            &self.occ,
+            &self.nz_offsets,
+            &|pos| self.nz_flat[pos] as usize,
+            self.nz_flat.len(),
+            self.c * self.strips,
+            self.w,
+            &self.vals_flat,
+            self.r,
+            self.has_vals,
+        )
+    }
+
+    /// Fault-injection site counts: 16-bit index words and 32-bit
+    /// payload words resident in SRAM (what a bit flip can hit).
+    pub fn index_words(&self) -> usize {
+        self.nz_flat.len()
+    }
+
+    /// See [`Self::index_words`].
+    pub fn payload_words(&self) -> usize {
+        self.vals_flat.len()
+    }
+
+    /// Flip one bit of an index word — the injection hook for SDC
+    /// experiments and the fuzz property tests. `bit` wraps at the
+    /// 16-bit word width.
+    pub fn flip_index_bit(&mut self, word: usize, bit: u32) {
+        self.nz_flat[word] ^= 1u16 << (bit % 16);
+    }
+
+    /// Flip one bit of an IEEE-754 payload word (see
+    /// [`Self::flip_index_bit`]). `bit` wraps at 32.
+    pub fn flip_payload_bit(&mut self, word: usize, bit: u32) {
+        let bits = self.vals_flat[word].to_bits() ^ (1u32 << (bit % 32));
+        self.vals_flat[word] = f32::from_bits(bits);
+    }
+
+    /// Flip one bit of a CSR offset word — models corruption of the
+    /// transfer stream's header, the nastiest site because it redirects
+    /// whole group slices. `bit` wraps at 32.
+    pub fn flip_offset_bit(&mut self, word: usize, bit: u32) {
+        self.nz_offsets[word] ^= 1u32 << (bit % 32);
+    }
+
+    /// Stream checksum over the packed payload words, f64-accumulated:
+    /// `(sum, abs_sum)`. The integrity scrubber recomputes this against
+    /// the stored value to catch payload flips that structural
+    /// validation cannot see; `abs_sum` scales the comparison's rounding
+    /// floor. `(0, 0)` for index-only encodes.
+    pub fn payload_checksum(&self) -> (f64, f64) {
+        payload_checksum(&self.vals_flat)
+    }
+}
+
+/// Shared payload-checksum kernel (see
+/// [`VectorActivations::payload_checksum`]).
+fn payload_checksum(vals: &[f32]) -> (f64, f64) {
+    let mut sum = 0.0f64;
+    let mut abs = 0.0f64;
+    for &v in vals {
+        sum += v as f64;
+        abs += v.abs() as f64;
+    }
+    (sum, abs)
 }
 
 /// Vector-sparse view of a weight tensor `[K, C, KH, KW]`.
@@ -333,6 +519,59 @@ impl VectorWeights {
     /// Elements resident in the weight SRAM (nonzero vectors × KH).
     pub fn sram_elems(&self) -> usize {
         self.nonzero_vectors() * self.kh
+    }
+
+    /// Structural decode validation — see
+    /// [`VectorActivations::validate`]. Weight groups are `(k, c)`
+    /// filter slices of width `kw`.
+    pub fn validate(&self) -> Result<(), CvfError> {
+        validate_csr(
+            &self.occ,
+            &self.nz_offsets,
+            &|pos| self.nz_flat[pos] as usize,
+            self.nz_flat.len(),
+            self.k * self.c,
+            self.kw,
+            &self.vals_flat,
+            self.kh,
+            self.has_vals,
+        )
+    }
+
+    /// Fault-injection site counts — see
+    /// [`VectorActivations::index_words`]. Weight index words are 8-bit.
+    pub fn index_words(&self) -> usize {
+        self.nz_flat.len()
+    }
+
+    /// See [`Self::index_words`].
+    pub fn payload_words(&self) -> usize {
+        self.vals_flat.len()
+    }
+
+    /// Flip one bit of an 8-bit weight index word (`bit` wraps at 8) —
+    /// see [`VectorActivations::flip_index_bit`].
+    pub fn flip_index_bit(&mut self, word: usize, bit: u32) {
+        self.nz_flat[word] ^= 1u8 << (bit % 8);
+    }
+
+    /// Flip one bit of a payload word — see
+    /// [`VectorActivations::flip_payload_bit`].
+    pub fn flip_payload_bit(&mut self, word: usize, bit: u32) {
+        let bits = self.vals_flat[word].to_bits() ^ (1u32 << (bit % 32));
+        self.vals_flat[word] = f32::from_bits(bits);
+    }
+
+    /// Flip one bit of a CSR offset word — see
+    /// [`VectorActivations::flip_offset_bit`].
+    pub fn flip_offset_bit(&mut self, word: usize, bit: u32) {
+        self.nz_offsets[word] ^= 1u32 << (bit % 32);
+    }
+
+    /// Stream checksum over the packed payload words — see
+    /// [`VectorActivations::payload_checksum`].
+    pub fn payload_checksum(&self) -> (f64, f64) {
+        payload_checksum(&self.vals_flat)
     }
 }
 
@@ -657,5 +896,99 @@ mod tests {
                 t.density()
             );
         }
+    }
+
+    #[test]
+    fn clean_encodes_validate_ok() {
+        use crate::util::rng::Pcg32;
+        let mut rng = Pcg32::seeded(777);
+        for _ in 0..10 {
+            let c = rng.range(1, 4);
+            let h = rng.range(2, 16);
+            let w = rng.range(1, 10);
+            let r = rng.range(1, 6);
+            let data: Vec<f32> = (0..c * h * w)
+                .map(|_| if rng.bernoulli(0.4) { rng.normal() } else { 0.0 })
+                .collect();
+            let t = Tensor::from_vec(&[c, h, w], data);
+            assert_eq!(VectorActivations::from_tensor(&t, r).validate(), Ok(()));
+            assert_eq!(VectorActivations::index_only(&t, r).validate(), Ok(()));
+        }
+        let w = Tensor::from_vec(&[2, 2, 3, 3], vec![1.0; 36]);
+        assert_eq!(VectorWeights::from_tensor(&w).validate(), Ok(()));
+    }
+
+    #[test]
+    fn index_bit_flips_are_always_structurally_detected() {
+        // Any single index-word flip lands in one of the validate arms:
+        // out of bounds (high bits), occupancy mismatch (bit for the new
+        // column is clear), or monotonicity (collision with a listed
+        // column). None escape.
+        use crate::util::rng::Pcg32;
+        let mut rng = Pcg32::seeded(778);
+        let data: Vec<f32> =
+            (0..3 * 12 * 9).map(|_| if rng.bernoulli(0.5) { rng.normal() } else { 0.0 }).collect();
+        let t = Tensor::from_vec(&[3, 12, 9], data);
+        let clean = VectorActivations::from_tensor(&t, 4);
+        assert!(clean.index_words() > 0);
+        for _ in 0..30 {
+            let mut va = clean.clone();
+            let word = rng.below(va.index_words() as u32) as usize;
+            va.flip_index_bit(word, rng.below(16));
+            assert!(va.validate().is_err(), "index flip at word {word} escaped validation");
+        }
+    }
+
+    #[test]
+    fn payload_flip_blast_radius_is_one_word() {
+        let mut t = Tensor::zeros(&[1, 4, 3]);
+        *t.at3_mut(0, 0, 1) = 2.0;
+        *t.at3_mut(0, 1, 1) = 3.0;
+        let clean = VectorActivations::from_tensor(&t, 2);
+        let mut va = clean.clone();
+        va.flip_payload_bit(0, 21); // a mantissa bit: stays finite
+        assert_eq!(va.validate(), Ok(()));
+        let (dirty, n) = va.nz_group_soa(0, 0);
+        let (orig, _) = clean.nz_group_soa(0, 0);
+        assert_eq!(n, 1);
+        let diffs = dirty.iter().zip(orig).filter(|(a, b)| a != b).count();
+        assert_eq!(diffs, 1, "payload flip must corrupt exactly one word");
+        // Drive word 0 (the 2.0) to an all-ones exponent: +inf, caught.
+        let mut bad = clean.clone();
+        for bit in 23..30 {
+            bad.flip_payload_bit(0, bit);
+        }
+        assert!(!bad.nz_group_soa(0, 0).0[0].is_finite());
+        assert!(matches!(bad.validate(), Err(CvfError::PayloadNotFinite { .. })));
+    }
+
+    #[test]
+    fn offset_corruption_is_detected_before_any_decode() {
+        let t = Tensor::from_vec(&[2, 6, 4], vec![1.0; 48]);
+        let clean = VectorActivations::from_tensor(&t, 3);
+        for (word, bit) in [(1usize, 0u32), (2, 5), (3, 31), (4, 16)] {
+            let mut va = clean.clone();
+            va.flip_offset_bit(word, bit);
+            assert!(va.validate().is_err(), "offset flip ({word},{bit}) escaped");
+        }
+    }
+
+    #[test]
+    fn weight_flips_detected_like_activations() {
+        use crate::util::rng::Pcg32;
+        let mut rng = Pcg32::seeded(779);
+        let data: Vec<f32> =
+            (0..4 * 3 * 3 * 3).map(|_| if rng.bernoulli(0.5) { rng.normal() } else { 0.0 }).collect();
+        let t = Tensor::from_vec(&[4, 3, 3, 3], data);
+        let clean = VectorWeights::from_tensor(&t);
+        assert!(clean.index_words() > 0 && clean.payload_words() > 0);
+        for _ in 0..20 {
+            let mut vw = clean.clone();
+            vw.flip_index_bit(rng.below(vw.index_words() as u32) as usize, rng.below(8));
+            assert!(vw.validate().is_err());
+        }
+        let mut vw = clean.clone();
+        vw.flip_offset_bit(1, 3);
+        assert!(vw.validate().is_err());
     }
 }

@@ -196,6 +196,83 @@ pub fn conv2d_im2col_mt(
     Tensor::from_vec(&[k_out, h_out, w_out], out)
 }
 
+/// One ABFT column-checksum violation: output column `col` disagrees
+/// with the checksum row by `delta`, beyond the rounding `budget` the
+/// clean kernel could produce.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct AbftFault {
+    pub col: usize,
+    pub delta: f64,
+    pub budget: f64,
+}
+
+/// ABFT column checksums over `out = A·B (+ per-row bias)` (ISSUE 10):
+/// the checksum row `s = colsum(A)` is carried through the same blocked
+/// panel kernel as the payload matmul, and `s·B` must match the column
+/// sums of `out` within a rounding budget — any arithmetic or storage
+/// upset that lands *after* the checksum row was formed (a MAC-group
+/// accumulator flip, a corrupted output word) breaks the identity and is
+/// reported with its column. Corruption that predates the checksum (a
+/// weight word flipped before `colsum(A)`) is self-consistent here and
+/// needs the structural CVF validation / weight scrubbing layers
+/// instead.
+///
+/// `unit_round` is the relative noise floor of one accumulation step
+/// (`f32::EPSILON` for the f32 path; precision-coarsened payloads still
+/// accumulate in f32, so callers widen it only for headroom). The
+/// per-column budget scales with `Σ_p colsum(|A|)_p·|B[p,j]|` — the
+/// magnitude actually summed — so dynamic range never produces false
+/// positives, while exponent-scale upsets sit orders of magnitude above
+/// it. Flips in the lowest mantissa bits hide below the floor; that
+/// escape fraction is the coverage the SDC model charges.
+pub fn abft_check(
+    a: &[f32],
+    b: &[f32],
+    out: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    bias: Option<&[f32]>,
+    unit_round: f64,
+) -> Result<(), AbftFault> {
+    assert_eq!(a.len(), m * k, "A is not [M,K]");
+    assert_eq!(b.len(), k * n, "B is not [K,N]");
+    assert_eq!(out.len(), m * n, "out is not [M,N]");
+    let mut s = vec![0.0f32; k];
+    let mut sabs = vec![0.0f64; k];
+    for row in a.chunks_exact(k) {
+        for ((sp, ap), &av) in s.iter_mut().zip(sabs.iter_mut()).zip(row) {
+            *sp += av;
+            *ap += av.abs() as f64;
+        }
+    }
+    // The checksum row rides the exact kernel the payload used.
+    let mut want = vec![0.0f32; n];
+    matmul_acc_into(&mut want, &s, b, 1, k, n);
+    let bias_total: f64 = bias.map_or(0.0, |bv| bv.iter().map(|&x| x as f64).sum());
+    let bias_abs: f64 = bias.map_or(0.0, |bv| bv.iter().map(|&x| x.abs() as f64).sum());
+    let steps = (k + m + 2) as f64 * unit_round;
+    for j in 0..n {
+        let mut got = 0.0f64;
+        for i in 0..m {
+            got += out[i * n + j] as f64;
+        }
+        let mut scale = bias_abs;
+        for (p, &ap) in sabs.iter().enumerate() {
+            scale += ap * b[p * n + j].abs() as f64;
+        }
+        let delta = (got - bias_total - want[j] as f64).abs();
+        let budget = steps * (scale + 1.0);
+        // A NaN column sum (an exponent flip that overflowed to inf - inf)
+        // makes `delta` NaN; that must read as a violation, not slip
+        // through a false `>` comparison.
+        if delta.is_nan() || delta > budget {
+            return Err(AbftFault { col: j, delta, budget });
+        }
+    }
+    Ok(())
+}
+
 /// Sum of all elements.
 pub fn sum(t: &Tensor) -> f32 {
     t.data().iter().sum()
@@ -322,6 +399,67 @@ mod tests {
         let a = conv2d_im2col(&input, &weight, None, ConvSpec::default());
         let b = conv2d_im2col_mt(&input, &weight, None, ConvSpec::default(), 16);
         assert!(a.allclose(&b, 1e-6, 1e-6));
+    }
+
+    #[test]
+    fn abft_passes_clean_matmuls() {
+        let mut rng = Pcg32::seeded(44);
+        for _ in 0..10 {
+            let m = rng.range(1, 60);
+            let k = rng.range(1, 120);
+            let n = rng.range(1, 90);
+            let a = random_tensor(&mut rng, &[m, k], 0.5);
+            let b = random_tensor(&mut rng, &[k, n], 0.9);
+            let bias: Vec<f32> = (0..m).map(|_| rng.normal()).collect();
+            let mut out = matmul(&a, &b);
+            for (i, &bv) in bias.iter().enumerate() {
+                for x in &mut out.data_mut()[i * n..(i + 1) * n] {
+                    *x += bv;
+                }
+            }
+            abft_check(
+                a.data(),
+                b.data(),
+                out.data(),
+                m,
+                k,
+                n,
+                Some(&bias),
+                f32::EPSILON as f64,
+            )
+            .unwrap_or_else(|f| panic!("false positive: m={m} k={k} n={n} {f:?}"));
+        }
+    }
+
+    #[test]
+    fn abft_detects_exponent_scale_upsets() {
+        let mut rng = Pcg32::seeded(45);
+        let (m, k, n) = (24, 48, 36);
+        let a = random_tensor(&mut rng, &[m, k], 0.6);
+        let b = random_tensor(&mut rng, &[k, n], 0.9);
+        let clean = matmul(&a, &b);
+        for _ in 0..20 {
+            let mut out = clean.clone();
+            let word = rng.range(0, m * n);
+            let od = out.data_mut();
+            // Flip a high exponent bit — the canonical SRAM upset. Skip
+            // near-zero words: nothing of magnitude stored to corrupt.
+            if od[word].abs() < 1e-2 {
+                continue;
+            }
+            od[word] = f32::from_bits(od[word].to_bits() ^ (1 << 28));
+            let fault = abft_check(a.data(), b.data(), od, m, k, n, None, f32::EPSILON as f64)
+                .expect_err("exponent flip must trip the checksum");
+            assert_eq!(fault.col, word % n, "fault localized to the flipped column");
+            assert!(fault.delta > fault.budget);
+        }
+        // Sign flip of a nonzero word is also detected.
+        let mut out = clean.clone();
+        let word = (0..m * n).find(|&i| clean.data()[i].abs() > 0.1).unwrap();
+        let v = out.data()[word];
+        out.data_mut()[word] = -v;
+        assert!(abft_check(a.data(), b.data(), out.data(), m, k, n, None, f32::EPSILON as f64)
+            .is_err());
     }
 
     #[test]

@@ -249,6 +249,7 @@ fn zoo_networks_run_end_to_end_through_engine() {
             backend: vscnn::coordinator::FunctionalBackend::Golden,
             verify_dataflow: true,
             fuse: false,
+            sdc: None,
         };
         let report = engine.run_image(&img, &opts).unwrap();
         let expect = if name == "alexnet" { 5 } else { 9 };

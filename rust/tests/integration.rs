@@ -92,6 +92,7 @@ fn hardware_aligned_pruning_ablation_beats_row_pruning() {
         backend: FunctionalBackend::Golden,
         verify_dataflow: false,
         fuse: false,
+        sdc: None,
     };
     let sched = flat_schedule(&net, 0.25);
 

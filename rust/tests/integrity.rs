@@ -1,0 +1,272 @@
+//! Data-integrity property fuzz (ISSUE 10): encode → mutate → decode
+//! must *detect* the corruption or leave only a bounded payload error —
+//! and must never panic. Exercises the typed [`CvfError`] validation
+//! walk, the payload stream checksum, and the ABFT column checksums on
+//! the matmul panel kernel, all with seeded [`Pcg32`] streams so every
+//! "random" case is reproducible.
+
+use vscnn::sim::config::Precision;
+use vscnn::sim::sdc::abft_unit_round;
+use vscnn::sparse::vector_format::{VectorActivations, VectorWeights};
+use vscnn::tensor::ops::{abft_check, matmul};
+use vscnn::tensor::Tensor;
+use vscnn::util::rng::Pcg32;
+
+/// Random `[C,H,W]` activation tensor at roughly the given density.
+fn rand_act(rng: &mut Pcg32, c: usize, h: usize, w: usize, density: f64) -> Tensor {
+    let n = c * h * w;
+    let data = (0..n)
+        .map(|_| {
+            if rng.bernoulli(density) {
+                rng.normal()
+            } else {
+                0.0
+            }
+        })
+        .collect();
+    Tensor::from_vec(&[c, h, w], data)
+}
+
+/// Random `[K,C,Kh,Kw]` weight tensor at roughly the given density.
+fn rand_weight(rng: &mut Pcg32, k: usize, c: usize, ks: usize, density: f64) -> Tensor {
+    let n = k * c * ks * ks;
+    let data = (0..n)
+        .map(|_| {
+            if rng.bernoulli(density) {
+                rng.normal()
+            } else {
+                0.0
+            }
+        })
+        .collect();
+    Tensor::from_vec(&[k, c, ks, ks], data)
+}
+
+/// Precision-aware stream-checksum floor, the same shape the engine
+/// charges: `(words + 2) * unit_round * (abs_sum + 1)`.
+fn checksum_floor(words: usize, clean_abs: f64) -> f64 {
+    (words as f64 + 2.0) * abft_unit_round(Precision::F32) * (clean_abs + 1.0)
+}
+
+#[test]
+fn activation_index_and_offset_flips_are_always_detected() {
+    // Index words are cross-checked against the occupancy bitset
+    // (bounds, strict monotonicity, popcount equality), so *every*
+    // single-bit index or offset upset must surface as a CvfError.
+    let mut rng = Pcg32::seeded(0x1D10);
+    let mut cases = 0;
+    while cases < 30 {
+        let c = 1 + rng.below(3) as usize;
+        let h = 4 + rng.below(9) as usize;
+        let w = 4 + rng.below(9) as usize;
+        let r = [4usize, 7][rng.below(2) as usize];
+        let t = rand_act(&mut rng, c, h, w, 0.4);
+        let clean = VectorActivations::from_tensor(&t, r);
+        clean.validate().expect("clean encode validates");
+        if clean.index_words() == 0 {
+            continue;
+        }
+        cases += 1;
+
+        let mut va = clean.clone();
+        va.flip_index_bit(rng.below(va.index_words() as u32) as usize, rng.below(16));
+        assert!(
+            va.validate().is_err(),
+            "index flip slipped past validation (case {cases})"
+        );
+
+        // Offsets: any bit of any offset word, including the sentinel.
+        let mut vo = clean.clone();
+        let groups = c * clean.strips + 1;
+        vo.flip_offset_bit(rng.below(groups as u32) as usize, rng.below(32));
+        assert!(
+            vo.validate().is_err(),
+            "offset flip slipped past validation (case {cases})"
+        );
+    }
+}
+
+#[test]
+fn activation_payload_flips_detected_or_bounded_never_panic() {
+    // A payload upset has no structural witness: detection is the
+    // non-finite walk plus the stream checksum. Whatever a flip does, it
+    // must either trip one of those or perturb the stream by less than
+    // the precision floor — and the accessors must stay walkable.
+    let mut rng = Pcg32::seeded(0x1D11);
+    let (mut detected, mut bounded) = (0u32, 0u32);
+    let mut cases = 0;
+    while cases < 40 {
+        let c = 1 + rng.below(3) as usize;
+        let h = 4 + rng.below(9) as usize;
+        let w = 4 + rng.below(9) as usize;
+        let r = [4usize, 7][rng.below(2) as usize];
+        let t = rand_act(&mut rng, c, h, w, 0.4);
+        let clean = VectorActivations::from_tensor(&t, r);
+        if clean.payload_words() == 0 {
+            continue;
+        }
+        cases += 1;
+        let (clean_sum, clean_abs) = clean.payload_checksum();
+
+        let mut va = clean.clone();
+        va.flip_payload_bit(rng.below(va.payload_words() as u32) as usize, rng.below(32));
+        let (sum, _) = va.payload_checksum();
+        let delta = (sum - clean_sum).abs();
+        let floor = checksum_floor(va.payload_words(), clean_abs);
+        let caught = va.validate().is_err() || delta.is_nan() || delta > floor;
+        if caught {
+            detected += 1;
+        } else {
+            // Undetected ⇒ the corruption is smaller than one rounding
+            // unit of the whole stream: bounded blast radius.
+            assert!(delta <= floor, "case {cases}: unbounded escape {delta}");
+            bounded += 1;
+        }
+        // Structurally valid or not, the group walks must never panic.
+        for ch in 0..c {
+            for s in 0..va.strips {
+                let _ = va.nz_cols(ch, s);
+            }
+        }
+    }
+    assert_eq!(detected + bounded, 40);
+    // A uniform 32-bit flip often lands in low mantissa bits (or on a
+    // zero-padded lane) where the perturbation is sub-floor by
+    // construction; both verdicts must occur across 40 cases, and
+    // neither side may be empty.
+    assert!(detected >= 1, "no payload flip was ever detected");
+    assert!(bounded >= 1, "no payload flip ever stayed sub-floor");
+}
+
+#[test]
+fn weight_cvf_flips_detected_or_bounded_never_panic() {
+    let mut rng = Pcg32::seeded(0x1D12);
+    let mut cases = 0;
+    while cases < 30 {
+        let k = 2 + rng.below(4) as usize;
+        let c = 1 + rng.below(3) as usize;
+        let t = rand_weight(&mut rng, k, c, 3, 0.5);
+        let clean = VectorWeights::from_tensor(&t);
+        clean.validate().expect("clean weight encode validates");
+        if clean.index_words() == 0 || clean.payload_words() == 0 {
+            continue;
+        }
+        cases += 1;
+
+        let mut wi = clean.clone();
+        wi.flip_index_bit(rng.below(wi.index_words() as u32) as usize, rng.below(8));
+        assert!(wi.validate().is_err(), "weight index flip undetected");
+
+        let (clean_sum, clean_abs) = clean.payload_checksum();
+        let mut wp = clean.clone();
+        wp.flip_payload_bit(rng.below(wp.payload_words() as u32) as usize, rng.below(32));
+        let (sum, _) = wp.payload_checksum();
+        let delta = (sum - clean_sum).abs();
+        let floor = checksum_floor(wp.payload_words(), clean_abs);
+        if wp.validate().is_ok() && !delta.is_nan() && delta <= floor {
+            // Escaped the checksum: must be sub-rounding-unit noise, and
+            // the payload accessors must still walk cleanly.
+            for kk in 0..k {
+                for cc in 0..c {
+                    let _ = wp.nz_vals(kk, cc);
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn multi_flip_storms_never_panic_and_rarely_escape() {
+    // Three simultaneous upsets of random kinds on one encode: harder to
+    // mask than a single flip, and the validator must stay total.
+    let mut rng = Pcg32::seeded(0x1D13);
+    let mut detected = 0u32;
+    for case in 0..20 {
+        let t = rand_act(&mut rng, 2, 10, 10, 0.4);
+        let clean = VectorActivations::from_tensor(&t, 4);
+        if clean.index_words() == 0 || clean.payload_words() == 0 {
+            continue;
+        }
+        let (clean_sum, clean_abs) = clean.payload_checksum();
+        let mut va = clean.clone();
+        for _ in 0..3 {
+            match rng.below(3) {
+                0 => va.flip_index_bit(
+                    rng.below(va.index_words() as u32) as usize,
+                    rng.below(16),
+                ),
+                1 => va.flip_payload_bit(
+                    rng.below(va.payload_words() as u32) as usize,
+                    rng.below(32),
+                ),
+                _ => {
+                    let groups = va.c * va.strips + 1;
+                    va.flip_offset_bit(rng.below(groups as u32) as usize, rng.below(32));
+                }
+            }
+        }
+        let (sum, _) = va.payload_checksum();
+        let delta = (sum - clean_sum).abs();
+        let floor = checksum_floor(clean.payload_words(), clean_abs);
+        if va.validate().is_err() || delta.is_nan() || delta > floor {
+            detected += 1;
+        } else {
+            assert!(delta <= floor, "storm case {case}: unbounded escape");
+        }
+    }
+    // At least one of the three flips lands on structure in almost every
+    // storm; demand a strong majority without betting on every tail.
+    assert!(detected >= 15, "only {detected}/20 storms detected");
+}
+
+#[test]
+fn abft_checksums_catch_gross_corruption_and_pass_rounding_noise() {
+    let mut rng = Pcg32::seeded(0x1D14);
+    let unit = abft_unit_round(Precision::F32);
+    for case in 0..10 {
+        let (m, k, n) = (
+            2 + rng.below(6) as usize,
+            3 + rng.below(10) as usize,
+            2 + rng.below(8) as usize,
+        );
+        let a = Tensor::from_vec(&[m, k], (0..m * k).map(|_| rng.normal()).collect());
+        let b = Tensor::from_vec(&[k, n], (0..k * n).map(|_| rng.normal()).collect());
+        let out = matmul(&a, &b);
+
+        // Clean product passes within the precision budget.
+        abft_check(a.data(), b.data(), out.data(), m, k, n, None, unit)
+            .unwrap_or_else(|f| panic!("case {case}: clean product flagged: {f:?}"));
+
+        // A gross single-element upset (far above any rounding budget)
+        // must be flagged, and on the right column.
+        let mut bad = out.clone();
+        let word = rng.below((m * n) as u32) as usize;
+        bad.data_mut()[word] += 64.0;
+        let fault = abft_check(a.data(), b.data(), bad.data(), m, k, n, None, unit)
+            .expect_err("gross corruption slipped past ABFT");
+        assert_eq!(fault.col, word % n, "case {case}: wrong column blamed");
+        assert!(fault.delta > fault.budget);
+
+        // A NaN anywhere in the product is a violation, not a false pass.
+        let mut nan = out.clone();
+        nan.data_mut()[word] = f32::NAN;
+        abft_check(a.data(), b.data(), nan.data(), m, k, n, None, unit)
+            .expect_err("NaN output slipped past ABFT");
+    }
+}
+
+#[test]
+fn index_only_encodes_validate_without_payload_rules() {
+    // index_only encodes carry no payload stream; validation must apply
+    // the structural rules and skip the payload ones (not reject the
+    // empty payload as a size mismatch).
+    let mut rng = Pcg32::seeded(0x1D15);
+    for _ in 0..5 {
+        let t = rand_act(&mut rng, 2, 8, 8, 0.4);
+        let va = VectorActivations::index_only(&t, 4);
+        assert_eq!(va.payload_words(), 0);
+        va.validate().expect("index-only encode validates");
+        let vw = VectorWeights::index_only(&rand_weight(&mut rng, 3, 2, 3, 0.5));
+        vw.validate().expect("index-only weights validate");
+    }
+}

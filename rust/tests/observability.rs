@@ -231,6 +231,7 @@ fn faulted_spec() -> (ServeSpec, Vec<Vec<ServiceProfile>>) {
             hedge_cycles: 0,
             shed: false,
         },
+        sdc: vscnn::sim::sdc::SdcSpec::none(),
     };
     let prof = ServiceProfile {
         single_cycles: 800_000,

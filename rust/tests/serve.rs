@@ -35,6 +35,7 @@ fn base_spec(traffic: TrafficModel, policy: DispatchPolicy, batch: BatchPolicy) 
         seed: 20190526,
         faults: FaultSpec::none(),
         robust: RobustnessPolicy::none(),
+        sdc: vscnn::sim::sdc::SdcSpec::none(),
     }
 }
 
@@ -476,6 +477,7 @@ fn profiles_with_threads(spec: &ServeSpec, threads: usize) -> Vec<Vec<ServicePro
                         backend: FunctionalBackend::Im2colMt(threads),
                         verify_dataflow: false,
                         fuse: false,
+                        sdc: None,
                     };
                     let engine = Engine::new(prepared.clone());
                     let report = engine.run_image(&img, &opts).expect("run");
